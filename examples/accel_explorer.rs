@@ -1,0 +1,102 @@
+//! Accelerator design-space explorer: interactive-style sweeps over the
+//! ApHMM model — PEs, memory ports, chunk sizes, cores, optimization
+//! toggles — printing the trade-off tables a hardware architect would
+//! look at (the §4.4 methodology).
+//!
+//! Run: `cargo run --release --example accel_explorer`
+
+use aphmm::accel::{
+    area_power, cycles, energy, multicore_runtime, AccelConfig, AppSplit, OptToggles, StepKind,
+    Workload,
+};
+
+fn main() {
+    let wl = Workload::ec_canonical();
+    println!("=== ApHMM design-space explorer (EC training workload) ===\n");
+
+    // ---- PE scaling at fixed 8 ports (Fig. 8a methodology) ----
+    println!("PE scaling (8 ports x 16 B/cycle):");
+    println!("{:>6} {:>12} {:>10} {:>10} {:>12}", "PEs", "cycles", "speedup", "mem-bound", "area mm^2");
+    let base = cycles(&AccelConfig::default().with_pes(8), &wl).total();
+    for pes in [8, 16, 32, 64, 128, 256, 512] {
+        let cfg = AccelConfig::default().with_pes(pes);
+        let bd = cycles(&cfg, &wl);
+        let ap = area_power(&cfg);
+        println!(
+            "{:>6} {:>12.0} {:>9.2}x {:>9.0}% {:>12.2}",
+            pes,
+            bd.total(),
+            base / bd.total(),
+            bd.mem_bound_fraction * 100.0,
+            ap.core_area_mm2()
+        );
+    }
+
+    // ---- Port scaling at 64 PEs ----
+    println!("\nMemory-port scaling (64 PEs):");
+    println!("{:>6} {:>12} {:>10}", "ports", "cycles", "mem-bound");
+    for ports in [2, 4, 8, 16, 32] {
+        let mut cfg = AccelConfig::default();
+        cfg.mem_ports = ports;
+        let bd = cycles(&cfg, &wl);
+        println!("{:>6} {:>12.0} {:>9.0}%", ports, bd.total(), bd.mem_bound_fraction * 100.0);
+    }
+
+    // ---- Optimization toggles ----
+    println!("\nOptimization ablation (cycles relative to all-on):");
+    let all_on = cycles(&AccelConfig::default(), &wl).total();
+    let show = |name: &str, opt: OptToggles| {
+        let mut cfg = AccelConfig::default();
+        cfg.opt = opt;
+        let c = cycles(&cfg, &wl).total();
+        println!("  without {:<22} {:>6.2}x slower", name, c / all_on);
+    };
+    show("LUTs", OptToggles { luts: false, ..OptToggles::all() });
+    show("broadcast+partial", OptToggles { broadcast_partial: false, ..OptToggles::all() });
+    show("memoization", OptToggles { memoization: false, ..OptToggles::all() });
+    show("everything (naive HW)", OptToggles::none());
+
+    // ---- Chunk-size pressure (Fig. 8c methodology) ----
+    println!("\nChunk-size pressure (cycles per base, 128 KB L1):");
+    println!("{:>7} {:>14} {:>10}", "chunk", "cycles/base", "vs 150");
+    let per_base = |chunk: usize| {
+        let w = Workload::synthetic(chunk as u64, 500.0, 7.0, 4, chunk, StepKind::Training);
+        cycles(&AccelConfig::default(), &w).total() / chunk as f64
+    };
+    let b150 = per_base(150);
+    for chunk in [150, 300, 500, 650, 800, 1000, 1500] {
+        let pb = per_base(chunk);
+        println!("{:>7} {:>14.1} {:>9.2}x", chunk, pb, pb / b150);
+    }
+
+    // ---- Multi-core end-to-end (Fig. 9 methodology) ----
+    println!("\nMulti-core end-to-end (error-correction split, normalized to 1 core):");
+    let cfg = AccelConfig::default();
+    let single = cycles(&cfg, &wl).seconds(&cfg);
+    let split = AppSplit { cpu_other_s: single * 40.0 * 0.0145, cpu_bw_s: single * 40.0 };
+    let t1 = multicore_runtime(&cfg, &wl, &split, 1).total();
+    println!("{:>7} {:>10} {:>10} {:>10} {:>10}", "cores", "total", "accel", "movement", "norm");
+    for cores in [1, 2, 4, 8] {
+        let r = multicore_runtime(&cfg, &wl, &split, cores);
+        println!(
+            "{:>7} {:>9.2}ms {:>9.2}ms {:>9.2}ms {:>10.3}",
+            cores,
+            r.total() * 1e3,
+            r.accel_s * 1e3,
+            r.movement_s * 1e3,
+            r.total() / t1
+        );
+    }
+
+    // ---- Energy ----
+    println!("\nEnergy at the Table 1 design point:");
+    let e = energy(&AccelConfig::default(), &wl, &Default::default());
+    println!(
+        "  total {:.3} mJ = compute {:.3} + sram {:.3} + dram {:.3} + static {:.3}",
+        e.total() * 1e3,
+        e.compute_j * 1e3,
+        e.sram_j * 1e3,
+        e.dram_j * 1e3,
+        e.static_j * 1e3
+    );
+}

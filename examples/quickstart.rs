@@ -1,0 +1,71 @@
+//! Quickstart: the core ApHMM workflow in ~60 lines.
+//!
+//! 1. Build an error-correction pHMM for a reference sequence.
+//! 2. Train it with noisy reads (Baum-Welch + histogram filter).
+//! 3. Decode the Viterbi consensus.
+//! 4. If `artifacts/` exists, score the same model through the
+//!    AOT-compiled XLA path and check it agrees with the native engine.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use aphmm::baumwelch::{score_sparse, train, BandedEngine, FilterConfig, ForwardOptions, TrainConfig};
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
+use aphmm::sim::{generate_genome, simulate_read, ErrorProfile, XorShift};
+use aphmm::viterbi::consensus;
+
+fn main() -> aphmm::Result<()> {
+    let mut rng = XorShift::new(2024);
+
+    // 1. A 100-base reference and its pHMM (Apollo's modified design).
+    let reference = generate_genome(&mut rng, 100);
+    let mut graph = Phmm::error_correction(&reference, &EcDesignParams::default())?;
+    println!(
+        "pHMM: {} states, {} transitions, band width {}",
+        graph.n_states(),
+        graph.n_transitions(),
+        graph.band_width()
+    );
+
+    // 2. Train with 8 noisy reads of the same region.
+    let reads: Vec<_> = (0..8)
+        .map(|i| simulate_read(&mut rng, &reference, 0, 100, &ErrorProfile::pacbio(), i).seq)
+        .collect();
+    let cfg = TrainConfig { max_iters: 3, tol: 1e-4, filter: FilterConfig::histogram_default() };
+    let result = train(&mut graph, &reads, &cfg)?;
+    println!("trained {} iterations, mean loglik history: {:?}", result.iters, result.loglik_history);
+
+    // 3. Decode the consensus.
+    let decoded = consensus(&graph)?;
+    let same = reference
+        .data
+        .iter()
+        .zip(decoded.consensus.data.iter())
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "consensus: {} bases, {}/{} identical to the reference",
+        decoded.consensus.len(),
+        same,
+        reference.len()
+    );
+
+    // 4. Score a read through both engines: native banded vs PJRT/XLA.
+    let banded = graph.to_banded()?;
+    let native = BandedEngine::score(&banded, &reads[0])?;
+    let sparse = score_sparse(&graph, &reads[0], &ForwardOptions::default())?;
+    println!("log P(read | model): sparse {sparse:.4}, banded {native:.4}");
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.txt").exists() {
+        let store = ArtifactStore::load(artifacts)?;
+        let engine =
+            XlaBandedEngine::for_shape(&store, banded.n, banded.w, banded.sigma, reads[0].len())?;
+        let xla = engine.score(&banded, &reads[0])?;
+        println!("log P(read | model): XLA    {xla:.4}  (|Δ| = {:.2e})", (xla - native).abs());
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` to exercise the XLA path)");
+    }
+    Ok(())
+}

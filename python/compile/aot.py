@@ -1,0 +1,95 @@
+"""AOT pipeline: lower the L2 Baum-Welch entry points to HLO *text* for
+the Rust PJRT runtime (``rust/src/runtime``).
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_proto().serialize()`` —
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Each artifact is a fixed-shape executable.  A ``manifest.txt`` describes
+every artifact (name, entry, shapes, argument order) so the Rust side can
+validate buffers before execution.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (artifact name, entry point, N states, W band, sigma alphabet, T chunk)
+# ec_*  : error-correction design (DNA, Sigma=4).  The default EC design
+#         has W = (1+max_del)*(1+max_ins)+1 = 25; W=32 leaves headroom.
+# pro_* : traditional design folded to an emitting band (protein,
+#         Sigma=20).  Fold depth d gives W = 2*(1+d)+1 = 9 at d=3.
+ARTIFACTS = [
+    ("ec_bw_n512_w32_t128", "baum_welch_sums", 512, 32, 4, 128),
+    ("ec_fwd_n512_w32_t128", "forward_scores", 512, 32, 4, 128),
+    ("pro_fwd_n384_w12_t128", "forward_scores", 384, 12, 20, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(entry: str, n: int, w: int, sigma: int, t: int):
+    fn = getattr(model, entry)
+    a_spec = jax.ShapeDtypeStruct((n, w), jnp.float32)
+    e_spec = jax.ShapeDtypeStruct((n, sigma), jnp.float32)
+    s_spec = jax.ShapeDtypeStruct((t,), jnp.int32)
+    f0_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn.lower(a_spec, e_spec, s_spec, f0_spec, len_spec, use_pallas=True)
+
+
+def result_arity(entry: str) -> int:
+    return {"forward_scores": 1, "baum_welch_sums": 5, "baum_welch_step": 3}[entry]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names to build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest_lines = []
+    for name, entry, n, w, sigma, t in ARTIFACTS:
+        if only is not None and name not in only:
+            continue
+        lowered = lower_artifact(entry, n, w, sigma, t)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"{name} entry={entry} n={n} w={w} sigma={sigma} t={t} "
+            f"args=a_band:f32[{n},{w}],emit:f32[{n},{sigma}],seq:i32[{t}],"
+            f"f_init:f32[{n}],length:i32[] results={result_arity(entry)}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

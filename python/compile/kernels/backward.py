@@ -1,0 +1,72 @@
+"""Pallas kernel for the fused backward + transition-update step (L1).
+
+Implements ApHMM's *broadcast + partial compute* optimization (§4.3): the
+backward values B̂_{t+1} are consumed directly into the transition-update
+numerators (xi) in the same pass that produces B̂_t, so the full backward
+matrix never exists in memory.  The shared factor
+
+    m[j, w] = a_band[j, w] * e_next[j+w] * b_next[j+w]
+
+is computed once per (j, w) and used for both outputs — the kernel-level
+analogue of the paper's UT units consuming the PE broadcast bus.
+
+Tiles read a *trailing* halo (states j+w up to j+W-1), mirroring the
+forward kernel's leading halo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _backward_xi_kernel(
+    w_max, block, f_ref, eb_pad_ref, a_ref, cinv_ref, b_ref, xi_ref
+):
+    pid = pl.program_id(0)
+    base = pid * block
+    # eb tile with trailing halo: states [base, base + block + W - 1).
+    eb_loc = pl.load(eb_pad_ref, (pl.dslice(base, block + w_max - 1),))
+    cinv = cinv_ref[0]
+    f_tile = pl.load(f_ref, (pl.dslice(base, block),))
+    acc = jnp.zeros((block,), dtype=eb_loc.dtype)
+    for w in range(w_max):
+        a_col = pl.load(a_ref, (pl.dslice(base, block), pl.dslice(w, 1)))[:, 0]
+        eb_shift = jax.lax.dynamic_slice(eb_loc, (w,), (block,))
+        m = a_col * eb_shift
+        acc = acc + m
+        pl.store(
+            xi_ref,
+            (pl.dslice(base, block), pl.dslice(w, 1)),
+            (f_tile * m * cinv)[:, None],
+        )
+    pl.store(b_ref, (pl.dslice(base, block),), acc * cinv)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def backward_xi_step(f_t, b_next, a_band, e_col_next, c_next, block=DEFAULT_BLOCK):
+    """Fused backward + xi step; matches :func:`ref.backward_xi_step_ref`.
+
+    Returns ``(b_t[N], xi[N, W])``.
+    """
+    n, w_max = a_band.shape
+    n_pad = -(-n // block) * block
+    halo = w_max - 1
+    eb = e_col_next * b_next
+    eb_pad = jnp.zeros((n_pad + halo,), eb.dtype).at[:n].set(eb)
+    a_pad = jnp.zeros((n_pad, w_max), a_band.dtype).at[:n].set(a_band)
+    f_pad = jnp.zeros((n_pad,), f_t.dtype).at[:n].set(f_t)
+    cinv = jnp.reshape(1.0 / c_next, (1,)).astype(f_t.dtype)
+    b_out, xi_out = pl.pallas_call(
+        functools.partial(_backward_xi_kernel, w_max, block),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_pad,), f_t.dtype),
+            jax.ShapeDtypeStruct((n_pad, w_max), f_t.dtype),
+        ),
+        grid=(n_pad // block,),
+        interpret=True,
+    )(f_pad, eb_pad, a_pad, cinv)
+    return b_out[:n], xi_out[:n]

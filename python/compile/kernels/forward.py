@@ -1,0 +1,74 @@
+"""Pallas kernel for the banded forward recurrence step (L1 hot spot).
+
+This is ApHMM's PE-array computation re-thought for a TPU-style target
+(DESIGN.md §Hardware-Adaptation): instead of per-state dot products over
+incoming transitions (the paper's 4-lane PE design), the banded encoding
+turns one timestep into W shifted elementwise FMAs over the state vector —
+no gathers, fully vectorizable on the VPU.
+
+The kernel tiles the state dimension; each tile reads its F_{t-1} slice
+plus a (W-1)-element *halo* before it (the analogue of the paper's
+PE-group partitioning with broadcasted boundary values).  Inputs are
+pre-padded by the wrapper so tile 0 needs no branch.
+
+Lowered with ``interpret=True``: real-TPU Mosaic custom-calls cannot run
+on the CPU PJRT plugin; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default state-tile size.  VMEM estimate per grid step at f32:
+#   f halo tile   (BT+W-1)        ~0.5 KB
+#   a_band tile   (BT+W-1) * W    ~8 KB at BT=128, W=16
+#   e tile + out  2 * BT          ~1 KB
+# comfortably under a 64 KB VMEM budget per the DESIGN.md §Perf note.
+DEFAULT_BLOCK = 128
+
+
+def _forward_step_kernel(w_max, block, f_pad_ref, a_pad_ref, e_ref, o_ref):
+    pid = pl.program_id(0)
+    base = pid * block
+    # Tile of F_{t-1} with leading halo: rows [base, base + block + W - 1)
+    # of the padded array == states [base - (W-1), base + block) unpadded.
+    f_loc = pl.load(f_pad_ref, (pl.dslice(base, block + w_max - 1),))
+    acc = jnp.zeros((block,), dtype=f_loc.dtype)
+    for w in range(w_max):
+        # Source states j = i - w for targets i in this tile live at local
+        # offset (W-1-w) .. (W-1-w)+block of the halo tile.
+        lo = w_max - 1 - w
+        f_src = jax.lax.dynamic_slice(f_loc, (lo,), (block,))
+        a_src = pl.load(
+            a_pad_ref, (pl.dslice(base + lo, block), pl.dslice(w, 1))
+        )[:, 0]
+        acc = acc + f_src * a_src
+    e_tile = pl.load(e_ref, (pl.dslice(base, block),))
+    pl.store(o_ref, (pl.dslice(base, block),), acc * e_tile)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def forward_step(f_prev, a_band, e_col, block=DEFAULT_BLOCK):
+    """One banded forward step: ``out[i] = e[i] * sum_w f[i-w] a[i-w, w]``.
+
+    Matches :func:`ref.forward_step_ref`.  N is padded up to a multiple of
+    ``block``; the band is padded with W-1 leading zero rows so the first
+    tile's halo reads are in-bounds.
+    """
+    n, w_max = a_band.shape
+    n_pad = -(-n // block) * block
+    halo = w_max - 1
+    f_pad = jnp.zeros((halo + n_pad,), f_prev.dtype).at[halo : halo + n].set(f_prev)
+    a_pad = jnp.zeros((halo + n_pad, w_max), a_band.dtype).at[halo : halo + n].set(
+        a_band
+    )
+    e_pad = jnp.zeros((n_pad,), e_col.dtype).at[:n].set(e_col)
+    out = pl.pallas_call(
+        functools.partial(_forward_step_kernel, w_max, block),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), f_prev.dtype),
+        grid=(n_pad // block,),
+        interpret=True,
+    )(f_pad, a_pad, e_pad)
+    return out[:n]

@@ -1,0 +1,76 @@
+"""Pure-jnp correctness oracles for the banded Baum-Welch kernels.
+
+The pHMM graph is encoded as a *forward band*: states are topologically
+ordered (position-major), and every transition goes from state ``j`` to
+state ``j + w`` with ``0 <= w < W``.  ``a_band[j, w]`` is the transition
+probability ``P(j -> j+w)``; ``w == 0`` encodes self-loops (insertion
+states of the traditional design).  Emissions are dense: ``emit[i, c]``.
+
+These references define the semantics that both the Pallas kernels
+(``forward.py``/``backward.py``) and the Rust native engine
+(``rust/src/phmm/banded.rs`` + ``rust/src/baumwelch``) must match.
+"""
+
+import jax.numpy as jnp
+
+
+def forward_step_ref(f_prev, a_band, e_col):
+    """One banded forward step (Eq. 1 of the paper).
+
+    ``out[i] = e_col[i] * sum_w f_prev[i-w] * a_band[i-w, w]``
+
+    Args:
+      f_prev: f32[N] scaled forward values at timestep t-1.
+      a_band: f32[N, W] banded transition matrix.
+      e_col:  f32[N] emission probabilities of the observed character.
+
+    Returns:
+      f32[N] unnormalized forward values at timestep t.
+    """
+    n, w_max = a_band.shape
+    acc = f_prev * a_band[:, 0]
+    for w in range(1, w_max):
+        acc = acc.at[w:].add(f_prev[: n - w] * a_band[: n - w, w])
+    return acc * e_col
+
+
+def backward_step_ref(b_next, a_band, e_col_next):
+    """One banded backward step (Eq. 2 of the paper).
+
+    ``out[j] = sum_w a_band[j, w] * e_col_next[j+w] * b_next[j+w]``
+
+    Returns unnormalized backward values at timestep t (caller divides by
+    the forward scale c_{t+1}).
+    """
+    n, w_max = a_band.shape
+    eb = e_col_next * b_next
+    acc = a_band[:, 0] * eb
+    for w in range(1, w_max):
+        acc = acc.at[: n - w].add(a_band[: n - w, w] * eb[w:])
+    return acc
+
+
+def backward_xi_step_ref(f_t, b_next, a_band, e_col_next, c_next):
+    """Fused backward + transition-numerator step.
+
+    This is the software analogue of ApHMM's broadcast + partial-compute
+    path: B_{t+1} values are consumed directly into the parameter-update
+    numerators while the backward recurrence runs, so the full B matrix is
+    never materialized.
+
+    Returns:
+      b_t:  f32[N]    scaled backward values at t.
+      xi:   f32[N, W] with
+            ``xi[j, w] = f_t[j] a[j,w] e_next[j+w] b_next[j+w] / c_next``
+    """
+    n, w_max = a_band.shape
+    eb = e_col_next * b_next  # [N]
+    cols = []
+    for w in range(w_max):
+        col = jnp.zeros((n,), dtype=a_band.dtype)
+        col = col.at[: n - w].set(a_band[: n - w, w] * eb[w:])
+        cols.append(col)
+    m = jnp.stack(cols, axis=1)  # [N, W]
+    b_t = jnp.sum(m, axis=1) / c_next
+    xi = f_t[:, None] * m / c_next
+    return b_t, xi

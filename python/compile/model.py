@@ -1,0 +1,183 @@
+"""L2: the Baum-Welch computation over banded pHMMs, built on the L1
+Pallas kernels, AOT-lowered once by ``aot.py`` and executed from Rust.
+
+Three entry points (all shapes static at lowering time):
+
+  * :func:`forward_scores` — scaled forward pass, returns the
+    log-likelihood only (inference path: protein family search, MSA
+    scoring).
+  * :func:`baum_welch_sums` — one full Baum-Welch expectation pass,
+    returning the *raw* update sums (xi, gamma denominators, emission
+    numerators) so the Rust coordinator can accumulate across many reads
+    before the maximization division (batch EM, exactly what Apollo does
+    per chunk).
+  * :func:`baum_welch_step` — expectation + maximization fused: returns
+    the updated ``(a_band, emit)`` plus log-likelihood, for single-read
+    training.
+
+Numerics: per-timestep scaling (DESIGN.md §Numerics).  Sequences are
+padded to the static length T; ``length`` masks padded timesteps so a
+lowered executable serves any chunk ≤ T.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.forward import forward_step
+from .kernels.backward import backward_xi_step
+from .kernels import ref
+
+EPS = 1e-30
+
+
+def _emission_column(emit, s_t):
+    """e_col[i] = emit[i, s_t] (gather of one emission column)."""
+    return jnp.take(emit, s_t, axis=1)
+
+
+def _forward_scan(a_band, emit, seq, f_init, length, use_pallas):
+    """Scaled forward pass.
+
+    Returns (f_hat[T, N], scales[T], loglik).  Masked timesteps carry
+    f_hat through unchanged with scale 1 (log contribution 0).
+    """
+    step_fn = forward_step if use_pallas else ref.forward_step_ref
+
+    e0 = _emission_column(emit, seq[0])
+    f0_un = f_init * e0
+    c0 = jnp.sum(f0_un) + EPS
+    f0 = f0_un / c0
+
+    def step(f_prev, t):
+        e_col = _emission_column(emit, seq[t])
+        f_un = step_fn(f_prev, a_band, e_col)
+        c_t = jnp.sum(f_un) + EPS
+        f_hat = f_un / c_t
+        live = t < length
+        f_out = jnp.where(live, f_hat, f_prev)
+        c_out = jnp.where(live, c_t, 1.0)
+        return f_out, (f_out, c_out)
+
+    t_range = jnp.arange(1, seq.shape[0])
+    _, (f_rest, c_rest) = jax.lax.scan(step, f0, t_range)
+    f_all = jnp.concatenate([f0[None, :], f_rest], axis=0)
+    scales = jnp.concatenate([jnp.reshape(c0, (1,)), c_rest], axis=0)
+    loglik = jnp.sum(jnp.where(jnp.arange(seq.shape[0]) < length, jnp.log(scales), 0.0))
+    return f_all, scales, loglik
+
+
+def _backward_update_scan(a_band, emit, seq, f_all, scales, length, use_pallas):
+    """Backward pass fused with update-sum accumulation.
+
+    Walks t = T-1 .. 0.  At the effective last timestep (length-1) the
+    scaled backward vector is all-ones; beyond it everything is masked.
+    Accumulates:
+      xi_sum[N, W]   transition numerators (Eq. 3 numerator)
+      trans_den[N]   sum of gamma over t < length-1 (Eq. 3 denominator)
+      e_num[N, S]    emission numerators (Eq. 4 numerator)
+      gamma_den[N]   sum of gamma over t < length (Eq. 4 denominator)
+
+    IMPLEMENTATION NOTE (AOT portability): everything per-timestep —
+    emission columns of s_{t+1}, scales c_{t+1}, one-hot rows, and the
+    0/1 masks derived from `length` — is pre-gathered *outside* the scan
+    and fed through the scan's xs inputs, and the masking is arithmetic
+    (multiply by 0/1) rather than scalar-predicated `where`.  Clamped
+    dynamic gathers (`seq[min(t, T-2)+1]`) and scalar-threshold selects
+    inside the loop body mis-execute after the HLO-text round-trip on
+    xla_extension 0.5.1 (see DESIGN.md §Numerics and the parity test);
+    the xs-based form lowers to the same constructs as the forward scan,
+    which round-trips correctly.
+    """
+    t_len, n = f_all.shape
+    n_sigma = emit.shape[1]
+    step_fn = backward_xi_step if use_pallas else ref.backward_xi_step_ref
+    last = length - 1
+    w_max = a_band.shape[1]
+    dtype = f_all.dtype
+
+    ts = jnp.arange(t_len)
+    # Per-t pre-gathered data (aligned to t), reversed so the scan walks
+    # t = T-1 .. 0 by consuming xs in natural order.
+    seq_next = jnp.roll(seq, -1)  # seq[t+1]; the t = T-1 row is masked out
+    e_next = jnp.take(emit, seq_next, axis=1).T  # [T, N] emission cols at t+1
+    c_next = jnp.roll(scales, -1)  # scales[t+1]; t = T-1 row masked
+    onehot = jax.nn.one_hot(seq, n_sigma, dtype=dtype)  # [T, Σ]
+    live = (ts <= last).astype(dtype)  # gamma mask
+    live_xi = (ts < last).astype(dtype)  # xi mask
+    is_last = (ts == last).astype(dtype)
+
+    xs = (
+        f_all[::-1],
+        e_next[::-1],
+        c_next[::-1],
+        onehot[::-1],
+        live[::-1],
+        live_xi[::-1],
+        is_last[::-1],
+    )
+
+    init = (
+        jnp.ones((n,), dtype),
+        jnp.zeros((n, w_max), dtype),
+        jnp.zeros((n,), dtype),
+        jnp.zeros((n, n_sigma), dtype),
+        jnp.zeros((n,), dtype),
+    )
+
+    def step(carry, x):
+        b_next, xi_sum, trans_den, e_num, gamma_den = carry
+        f_t, e_col_next, c_n, oh, lv, lvx, isl = x
+        c_safe = jnp.where(c_n == 0.0, jnp.asarray(1.0, dtype), c_n)
+        b_rec, xi_t = step_fn(f_t, b_next, a_band, e_col_next, c_safe)
+        # b_t = ones at t == last, recurrence below, carried above:
+        # coefficients isl / (lv - isl) / (1 - lv) are disjoint 0/1.
+        b_t = isl + (lv - isl) * b_rec + (1.0 - lv) * b_next
+        xi_sum = xi_sum + lvx * xi_t
+        gamma_t = f_t * b_t
+        gamma_m = lv * gamma_t
+        trans_den = trans_den + lvx * gamma_t
+        gamma_den = gamma_den + gamma_m
+        e_num = e_num + gamma_m[:, None] * oh[None, :]
+        return (b_t, xi_sum, trans_den, e_num, gamma_den), None
+
+    (_, xi_sum, trans_den, e_num, gamma_den), _ = jax.lax.scan(step, init, xs)
+    return xi_sum, trans_den, e_num, gamma_den
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def forward_scores(a_band, emit, seq, f_init, length, use_pallas=True):
+    """Inference scoring: log P(seq | pHMM) via the scaled forward pass."""
+    _, _, loglik = _forward_scan(a_band, emit, seq, f_init, length, use_pallas)
+    return (loglik,)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def baum_welch_sums(a_band, emit, seq, f_init, length, use_pallas=True):
+    """One expectation pass; returns raw update sums + loglik.
+
+    Returns (xi_sum[N,W], trans_den[N], e_num[N,S], gamma_den[N], loglik).
+    """
+    f_all, scales, loglik = _forward_scan(a_band, emit, seq, f_init, length, use_pallas)
+    xi_sum, trans_den, e_num, gamma_den = _backward_update_scan(
+        a_band, emit, seq, f_all, scales, length, use_pallas
+    )
+    return xi_sum, trans_den, e_num, gamma_den, loglik
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def baum_welch_step(a_band, emit, seq, f_init, length, use_pallas=True):
+    """Expectation + maximization for a single sequence.
+
+    States never reached (zero denominators) keep their old parameters.
+    Returns (a_new[N,W], e_new[N,S], loglik).
+    """
+    xi_sum, trans_den, e_num, gamma_den, loglik = baum_welch_sums(
+        a_band, emit, seq, f_init, length, use_pallas
+    )
+    a_new = jnp.where(trans_den[:, None] > EPS, xi_sum / (trans_den[:, None] + EPS), a_band)
+    # Only redistribute where the state had outgoing mass to begin with.
+    a_new = jnp.where(a_band > 0.0, a_new, a_band)
+    e_new = jnp.where(gamma_den[:, None] > EPS, e_num / (gamma_den[:, None] + EPS), emit)
+    return a_new, e_new, loglik

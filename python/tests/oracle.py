@@ -1,0 +1,102 @@
+"""Independent float64 numpy oracle for the banded Baum-Welch.
+
+Deliberately written in plain probability space (no scaling, no fusion,
+no banded shift tricks beyond the definition) so it shares no code or
+structure with the implementations under test.  Only valid for short
+sequences (no underflow protection) — tests keep T small.
+"""
+
+import numpy as np
+
+
+def band_to_dense(a_band):
+    n, w_max = a_band.shape
+    dense = np.zeros((n, n), dtype=np.float64)
+    for j in range(n):
+        for w in range(w_max):
+            if j + w < n:
+                dense[j, j + w] = a_band[j, w]
+    return dense
+
+
+def forward_matrix(a_dense, emit, seq, f_init):
+    """F[t, i] in probability space (Eq. 1)."""
+    t_len = len(seq)
+    n = a_dense.shape[0]
+    f = np.zeros((t_len, n), dtype=np.float64)
+    f[0] = f_init * emit[:, seq[0]]
+    for t in range(1, t_len):
+        f[t] = (f[t - 1] @ a_dense) * emit[:, seq[t]]
+    return f
+
+
+def backward_matrix(a_dense, emit, seq):
+    """B[t, i] in probability space (Eq. 2), B[T-1] = 1."""
+    t_len = len(seq)
+    n = a_dense.shape[0]
+    b = np.zeros((t_len, n), dtype=np.float64)
+    b[t_len - 1] = 1.0
+    for t in range(t_len - 2, -1, -1):
+        b[t] = a_dense @ (emit[:, seq[t + 1]] * b[t + 1])
+    return b
+
+
+def baum_welch_sums_oracle(a_band, emit, seq, f_init):
+    """Raw update sums exactly as model.baum_welch_sums defines them,
+    normalized to the scaled convention (gamma_t sums to... actually the
+    scaled outputs are xi_t = Xi_t / P and gamma_t = Gamma_t / P)."""
+    a_band = np.asarray(a_band, dtype=np.float64)
+    emit = np.asarray(emit, dtype=np.float64)
+    f_init = np.asarray(f_init, dtype=np.float64)
+    n, w_max = a_band.shape
+    n_sigma = emit.shape[1]
+    t_len = len(seq)
+    a_dense = band_to_dense(a_band)
+    f = forward_matrix(a_dense, emit, seq, f_init)
+    b = backward_matrix(a_dense, emit, seq)
+    p = f[t_len - 1].sum()
+
+    xi_sum = np.zeros((n, w_max), dtype=np.float64)
+    for t in range(t_len - 1):
+        for j in range(n):
+            for w in range(w_max):
+                i = j + w
+                if i < n and a_band[j, w] > 0:
+                    xi_sum[j, w] += (
+                        f[t, j] * a_band[j, w] * emit[i, seq[t + 1]] * b[t + 1, i]
+                    )
+    xi_sum /= p
+
+    gamma = f * b / p  # [T, N]
+    trans_den = gamma[: t_len - 1].sum(axis=0)
+    gamma_den = gamma.sum(axis=0)
+    e_num = np.zeros((n, n_sigma), dtype=np.float64)
+    for t in range(t_len):
+        e_num[:, seq[t]] += gamma[t]
+    loglik = np.log(p)
+    return xi_sum, trans_den, e_num, gamma_den, loglik
+
+
+def random_banded_phmm(rng, n, w_max, n_sigma, terminal_tail=1):
+    """Random normalized banded pHMM.  The last `terminal_tail` states have
+    no outgoing transitions (terminal), mirroring real chunk graphs."""
+    a_band = rng.uniform(0.05, 1.0, size=(n, w_max)).astype(np.float64)
+    # Zero out entries that would leave the state space.
+    for j in range(n):
+        for w in range(w_max):
+            if j + w >= n:
+                a_band[j, w] = 0.0
+    a_band[n - terminal_tail :, :] = 0.0
+    # Sparsify a little so zero-transitions are exercised.
+    mask = rng.uniform(size=a_band.shape) < 0.25
+    a_band[mask] = 0.0
+    row = a_band.sum(axis=1, keepdims=True)
+    nz = row[:, 0] > 0
+    a_band[nz] /= row[nz]
+    emit = rng.uniform(0.05, 1.0, size=(n, n_sigma))
+    emit /= emit.sum(axis=1, keepdims=True)
+    f_init = np.zeros(n)
+    k = max(1, n // 8)
+    f_init[:k] = rng.uniform(0.1, 1.0, size=k)
+    f_init /= f_init.sum()
+    return a_band, emit, f_init

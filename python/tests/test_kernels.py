@@ -1,0 +1,178 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp ref vs numpy oracle.
+
+Hypothesis sweeps shapes/dtypes; this is the CORE correctness signal for
+the kernels that end up inside the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.forward import forward_step
+from compile.kernels.backward import backward_xi_step
+
+from . import oracle
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _case(seed, n, w_max, n_sigma=4):
+    rng = _rng(seed)
+    a_band, emit, f_init = oracle.random_banded_phmm(rng, n, w_max, n_sigma)
+    f_prev = rng.uniform(0.0, 1.0, size=n)
+    f_prev /= f_prev.sum()
+    e_col = emit[:, rng.integers(n_sigma)]
+    return a_band, f_prev, e_col
+
+
+shape_strategy = st.tuples(
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+    st.integers(min_value=4, max_value=200),  # n
+    st.integers(min_value=1, max_value=12),  # w_max
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_forward_step_pallas_matches_oracle(params):
+    seed, n, w_max = params
+    a_band, f_prev, e_col = _case(seed, n, w_max)
+    got = forward_step(
+        jnp.asarray(f_prev, jnp.float32),
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(e_col, jnp.float32),
+    )
+    dense = oracle.band_to_dense(a_band)
+    want = (f_prev @ dense) * e_col
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_forward_step_pallas_matches_jnp_ref(params):
+    seed, n, w_max = params
+    a_band, f_prev, e_col = _case(seed, n, w_max)
+    args = (
+        jnp.asarray(f_prev, jnp.float32),
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(e_col, jnp.float32),
+    )
+    got = forward_step(*args)
+    want = ref.forward_step_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_backward_xi_pallas_matches_oracle(params):
+    seed, n, w_max = params
+    rng = _rng(seed)
+    a_band, emit, _ = oracle.random_banded_phmm(rng, n, w_max, 4)
+    b_next = rng.uniform(0.1, 1.0, size=n)
+    f_t = rng.uniform(0.0, 1.0, size=n)
+    f_t /= f_t.sum()
+    e_col = emit[:, rng.integers(4)]
+    c_next = float(rng.uniform(0.2, 1.5))
+
+    b_got, xi_got = backward_xi_step(
+        jnp.asarray(f_t, jnp.float32),
+        jnp.asarray(b_next, jnp.float32),
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(e_col, jnp.float32),
+        jnp.float32(c_next),
+    )
+    # Oracle: dense backward step + elementwise xi definition.
+    dense = oracle.band_to_dense(a_band)
+    b_want = (dense @ (e_col * b_next)) / c_next
+    xi_want = np.zeros_like(a_band)
+    for j in range(n):
+        for w in range(w_max):
+            i = j + w
+            if i < n:
+                xi_want[j, w] = f_t[j] * a_band[j, w] * e_col[i] * b_next[i] / c_next
+    np.testing.assert_allclose(np.asarray(b_got), b_want, rtol=2e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(xi_got), xi_want, rtol=2e-5, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_backward_xi_row_sum_equals_b(params):
+    """Invariant: sum_w xi[j, w] == f_t[j] * b_t[j] (gamma consistency)."""
+    seed, n, w_max = params
+    rng = _rng(seed)
+    a_band, emit, _ = oracle.random_banded_phmm(rng, n, w_max, 4)
+    b_next = rng.uniform(0.1, 1.0, size=n)
+    f_t = rng.uniform(0.01, 1.0, size=n)
+    e_col = emit[:, 0]
+    b_got, xi_got = backward_xi_step(
+        jnp.asarray(f_t, jnp.float32),
+        jnp.asarray(b_next, jnp.float32),
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(e_col, jnp.float32),
+        jnp.float32(1.0),
+    )
+    np.testing.assert_allclose(
+        np.asarray(xi_got).sum(axis=1),
+        np.asarray(b_got) * f_t,
+        rtol=5e-5,
+        atol=1e-7,
+    )
+
+
+@pytest.mark.parametrize("block", [8, 32, 128, 256])
+def test_forward_step_block_sizes(block):
+    """Tiling must not change results (halo handling across tile edges)."""
+    a_band, f_prev, e_col = _case(7, 100, 9)
+    args = (
+        jnp.asarray(f_prev, jnp.float32),
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(e_col, jnp.float32),
+    )
+    want = np.asarray(ref.forward_step_ref(*args))
+    got = np.asarray(forward_step(*args, block=block))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("block", [8, 32, 128])
+def test_backward_xi_block_sizes(block):
+    a_band, f_prev, e_col = _case(11, 77, 6)
+    rng = _rng(11)
+    b_next = rng.uniform(0.1, 1.0, size=77)
+    args = (
+        jnp.asarray(f_prev, jnp.float32),
+        jnp.asarray(b_next, jnp.float32),
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(e_col, jnp.float32),
+        jnp.float32(0.7),
+    )
+    b_want, xi_want = ref.backward_xi_step_ref(*args)
+    b_got, xi_got = backward_xi_step(*args, block=block)
+    np.testing.assert_allclose(np.asarray(b_got), np.asarray(b_want), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(xi_got), np.asarray(xi_want), rtol=1e-6)
+
+
+def test_forward_step_w1_degenerates_to_elementwise():
+    """W=1 band is a pure diagonal: out = f * a0 * e."""
+    rng = _rng(3)
+    n = 33
+    f = rng.uniform(size=n)
+    a = rng.uniform(size=(n, 1))
+    e = rng.uniform(size=n)
+    got = forward_step(
+        jnp.asarray(f, jnp.float32), jnp.asarray(a, jnp.float32), jnp.asarray(e, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(got), f * a[:, 0] * e, rtol=1e-6)
+
+
+def test_forward_step_zero_band_is_zero():
+    n = 16
+    got = forward_step(
+        jnp.ones((n,), jnp.float32),
+        jnp.zeros((n, 4), jnp.float32),
+        jnp.ones((n,), jnp.float32),
+    )
+    assert np.all(np.asarray(got) == 0.0)

@@ -1,0 +1,157 @@
+"""L2 model correctness: scaled/fused scans vs the float64 numpy oracle.
+
+Covers: log-likelihood, Baum-Welch raw sums, masking (padding invariance),
+the fused maximization step, and scaled-vs-probability-space consistency.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+from . import oracle
+
+
+def _mk(seed, n, w_max, n_sigma, t_len):
+    rng = np.random.default_rng(seed)
+    a_band, emit, f_init = oracle.random_banded_phmm(rng, n, w_max, n_sigma)
+    seq = rng.integers(0, n_sigma, size=t_len).astype(np.int32)
+    return a_band, emit, f_init, seq
+
+
+def _jx(a_band, emit, f_init, seq, t_pad=None):
+    t_pad = t_pad if t_pad is not None else len(seq)
+    seq_p = np.zeros(t_pad, dtype=np.int32)
+    seq_p[: len(seq)] = seq
+    return (
+        jnp.asarray(a_band, jnp.float32),
+        jnp.asarray(emit, jnp.float32),
+        jnp.asarray(seq_p),
+        jnp.asarray(f_init, jnp.float32),
+        jnp.int32(len(seq)),
+    )
+
+
+case_strategy = st.tuples(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=8, max_value=64),  # n
+    st.integers(min_value=2, max_value=8),  # w_max
+    st.sampled_from([4, 20]),  # sigma
+    st.integers(min_value=3, max_value=16),  # t
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(case_strategy)
+def test_forward_scores_loglik_matches_oracle(params):
+    seed, n, w_max, n_sigma, t_len = params
+    a_band, emit, f_init, seq = _mk(seed, n, w_max, n_sigma, t_len)
+    dense = oracle.band_to_dense(a_band)
+    f = oracle.forward_matrix(dense, emit, seq, f_init)
+    p = f[-1].sum()
+    if p <= 1e-12:  # unreachable sequence under this random graph
+        return
+    (got,) = model.forward_scores(*_jx(a_band, emit, f_init, seq))
+    np.testing.assert_allclose(float(got), np.log(p), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(case_strategy)
+def test_baum_welch_sums_match_oracle(params):
+    seed, n, w_max, n_sigma, t_len = params
+    a_band, emit, f_init, seq = _mk(seed, n, w_max, n_sigma, t_len)
+    dense = oracle.band_to_dense(a_band)
+    p = oracle.forward_matrix(dense, emit, seq, f_init)[-1].sum()
+    if p <= 1e-12:
+        return
+    want = oracle.baum_welch_sums_oracle(a_band, emit, seq, f_init)
+    got = model.baum_welch_sums(*_jx(a_band, emit, f_init, seq))
+    names = ["xi_sum", "trans_den", "e_num", "gamma_den", "loglik"]
+    for name, g, w in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=5e-4, atol=1e-5, err_msg=name
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(case_strategy)
+def test_padding_invariance(params):
+    """Masked executables must give identical results for padded input —
+    this is what lets one AOT artifact serve any chunk <= T."""
+    seed, n, w_max, n_sigma, t_len = params
+    a_band, emit, f_init, seq = _mk(seed, n, w_max, n_sigma, t_len)
+    dense = oracle.band_to_dense(a_band)
+    if oracle.forward_matrix(dense, emit, seq, f_init)[-1].sum() <= 1e-12:
+        return
+    exact = model.baum_welch_sums(*_jx(a_band, emit, f_init, seq))
+    padded = model.baum_welch_sums(*_jx(a_band, emit, f_init, seq, t_pad=t_len + 7))
+    for g, w in zip(exact, padded):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-7)
+
+
+def test_gamma_is_normalized_per_timestep():
+    """Posterior state occupancies sum to 1 at every live timestep, so
+    gamma_den must sum to `length` over all states."""
+    a_band, emit, f_init, seq = _mk(5, 48, 5, 4, 12)
+    _, _, _, gamma_den, _ = model.baum_welch_sums(*_jx(a_band, emit, f_init, seq))
+    np.testing.assert_allclose(float(np.asarray(gamma_den).sum()), len(seq), rtol=1e-4)
+
+
+def test_baum_welch_step_rows_are_stochastic():
+    """After maximization, reached states have normalized transition rows
+    and emission rows; untouched states keep their old parameters."""
+    a_band, emit, f_init, seq = _mk(9, 64, 6, 4, 14)
+    a_new, e_new, _ = model.baum_welch_step(*_jx(a_band, emit, f_init, seq))
+    a_new = np.asarray(a_new, dtype=np.float64)
+    e_new = np.asarray(e_new, dtype=np.float64)
+    _, trans_den, _, gamma_den, _ = (
+        np.asarray(x, np.float64) for x in model.baum_welch_sums(*_jx(a_band, emit, f_init, seq))
+    )
+    reached = trans_den > 1e-6
+    rows = a_new[reached].sum(axis=1)
+    np.testing.assert_allclose(rows, np.ones_like(rows), rtol=1e-3)
+    untouched = gamma_den <= 1e-30
+    np.testing.assert_allclose(e_new[untouched], emit[untouched], rtol=1e-6)
+
+
+def test_training_increases_likelihood():
+    """One EM step must not decrease the likelihood of the training
+    sequence (the defining property of Baum-Welch)."""
+    a_band, emit, f_init, seq = _mk(21, 40, 4, 4, 10)
+    args = _jx(a_band, emit, f_init, seq)
+    a_new, e_new, ll0 = model.baum_welch_step(*args)
+    (ll1,) = model.forward_scores(a_new, e_new, args[2], args[3], args[4])
+    assert float(ll1) >= float(ll0) - 1e-4, (float(ll0), float(ll1))
+
+
+def test_em_monotonicity_multi_step():
+    a_band, emit, f_init, seq = _mk(33, 32, 4, 4, 12)
+    args = list(_jx(a_band, emit, f_init, seq))
+    lls = []
+    for _ in range(5):
+        a_new, e_new, ll = model.baum_welch_step(*args)
+        lls.append(float(ll))
+        args[0], args[1] = a_new, e_new
+    assert all(b >= a - 1e-4 for a, b in zip(lls, lls[1:])), lls
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_pallas_and_ref_paths_agree(use_pallas):
+    a_band, emit, f_init, seq = _mk(2, 56, 7, 4, 11)
+    got = model.baum_welch_sums(*_jx(a_band, emit, f_init, seq), use_pallas=use_pallas)
+    want = model.baum_welch_sums(*_jx(a_band, emit, f_init, seq), use_pallas=not use_pallas)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-7)
+
+
+def test_length_one_sequence():
+    """Degenerate chunk: no transitions, only emission statistics."""
+    a_band, emit, f_init, seq = _mk(4, 24, 4, 4, 1)
+    xi, trans_den, e_num, gamma_den, ll = model.baum_welch_sums(
+        *_jx(a_band, emit, f_init, seq, t_pad=8)
+    )
+    assert float(np.abs(np.asarray(xi)).sum()) == 0.0
+    assert float(np.asarray(trans_den).sum()) == 0.0
+    np.testing.assert_allclose(float(np.asarray(gamma_den).sum()), 1.0, rtol=1e-5)

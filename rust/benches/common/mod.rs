@@ -1,0 +1,85 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Criterion is not in the offline registry, so every bench is a
+//! `harness = false` binary built on this tiny timing kit.  Each bench
+//! prints the rows/series of the paper table or figure it regenerates
+//! (see DESIGN.md per-experiment index) — machine-portable *shapes*, not
+//! absolute numbers.
+
+use std::time::Instant;
+
+use aphmm::seq::Sequence;
+use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
+
+/// Time one closure, returning (result, seconds).
+#[allow(dead_code)]
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Median-of-n timing for short closures.
+#[allow(dead_code)]
+pub fn time_median(n: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..n.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// A reproducible EC-training scenario: reference + mapped noisy reads.
+#[allow(dead_code)] // benches use different subsets of the fields
+pub struct EcScenario {
+    pub reference: Sequence,
+    pub reads: Vec<Sequence>,
+}
+
+/// Build a training scenario of `ref_len` bases with `n_reads` reads.
+#[allow(dead_code)]
+pub fn ec_scenario(seed: u64, ref_len: usize, n_reads: usize) -> EcScenario {
+    let mut rng = XorShift::new(seed);
+    let data: Vec<u8> = (0..ref_len).map(|_| rng.below(4) as u8).collect();
+    let reference = Sequence::from_symbols("ref", data);
+    let reads = (0..n_reads)
+        .map(|i| simulate_read(&mut rng, &reference, 0, ref_len, &ErrorProfile::pacbio(), i).seq)
+        .collect();
+    EcScenario { reference, reads }
+}
+
+/// Banded edit distance (accuracy metric shared by fig3/fig11).
+#[allow(dead_code)]
+pub fn edit_distance(a: &[u8], b: &[u8], band: usize) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 {
+        return m;
+    }
+    let inf = usize::MAX / 2;
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![inf; m + 1];
+    for i in 1..=n {
+        cur.iter_mut().for_each(|x| *x = inf);
+        let lo = i.saturating_sub(band).max(1);
+        let hi = (i + band).min(m);
+        if lo == 1 {
+            cur[0] = i;
+        }
+        for j in lo..=hi {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j - 1] + cost).min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// Section banner.
+#[allow(dead_code)]
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

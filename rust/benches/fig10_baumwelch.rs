@@ -1,0 +1,89 @@
+//! Fig. 10 — (a) speedups of each Baum-Welch step over the
+//! single-threaded CPU baseline (CPU-1), for ApHMM / GPU / FPGA;
+//! (b) energy reductions.  Paper: ApHMM 15.55–260× vs CPU, 1.83–5.34×
+//! vs GPU, 27.97× vs FPGA; energy 2474× (CPU) / 896.7–2622.94× (GPU).
+//!
+//! CPU-1 is genuinely measured: the sparse engine's step timings on a
+//! canonical EC training workload.  GPU/FPGA points are paper-calibrated
+//! models (DESIGN.md substitution table).
+
+mod common;
+
+use aphmm::accel::{cycles, AccelConfig, Baselines, CpuMeasurement, StepKind, Workload};
+use aphmm::baumwelch::{train, FilterConfig, TrainConfig};
+use aphmm::phmm::{EcDesignParams, Phmm};
+
+fn main() {
+    common::banner("Fig. 10a: Baum-Welch step speedups over CPU-1");
+    // Measured CPU-1 workload: one EC chunk trained with 10 reads.
+    let scenario = common::ec_scenario(21, 650, 10);
+    let mut graph =
+        Phmm::error_correction(&scenario.reference, &EcDesignParams::default()).unwrap();
+    let cfg = TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::Sort { size: 500 } };
+    let res = train(&mut graph, &scenario.reads, &cfg).unwrap();
+
+    let wl_all = Workload::from_train_result(&graph, &res, scenario.reads.len() as u64);
+    let acfg = AccelConfig::default();
+
+    // Per-step CPU-1 seconds (measured) and ApHMM cycles (modeled).
+    let cpu_fwd = res.forward_ns as f64 / 1e9;
+    let cpu_bwd_upd = res.backward_update_ns as f64 / 1e9;
+    let cpu_max = res.maximize_ns as f64 / 1e9;
+    let bd = cycles(&acfg, &wl_all);
+    let ap_fwd = acfg.cycles_to_seconds(bd.forward);
+    let ap_bwd_upd = acfg.cycles_to_seconds(bd.backward + bd.update);
+
+    println!("{:<22} {:>12} {:>12} {:>10}", "step", "CPU-1 (s)", "ApHMM (s)", "speedup");
+    println!("{:<22} {:>12.4} {:>12.6} {:>9.1}x", "Forward", cpu_fwd, ap_fwd, cpu_fwd / ap_fwd);
+    println!(
+        "{:<22} {:>12.4} {:>12.6} {:>9.1}x",
+        "Backward+Updates",
+        cpu_bwd_upd + cpu_max,
+        ap_bwd_upd,
+        (cpu_bwd_upd + cpu_max) / ap_bwd_upd
+    );
+    let cpu_total = cpu_fwd + cpu_bwd_upd + cpu_max;
+    let ap_total = bd.seconds(&acfg);
+    println!(
+        "{:<22} {:>12.4} {:>12.6} {:>9.1}x",
+        "complete Baum-Welch", cpu_total, ap_total, cpu_total / ap_total
+    );
+
+    common::banner("Fig. 10a (platforms): complete Baum-Welch");
+    let base = Baselines::from_cpu_measurement(
+        &acfg,
+        &wl_all,
+        &CpuMeasurement { seconds: cpu_total, filter_fraction: 0.085 },
+    );
+    let (s_cpu, s_gpu, s_fpga) = base.speedups();
+    println!("{:<14} {:>12} {:>10}", "platform", "time (s)", "vs ApHMM");
+    println!("{:<14} {:>12.4} {:>9.1}x", "CPU-1", base.cpu_s, s_cpu);
+    println!("{:<14} {:>12.6} {:>9.2}x", "GPU (model)", base.gpu_s, s_gpu);
+    println!("{:<14} {:>12.6} {:>9.2}x", "FPGA (model)", base.fpga_s, s_fpga);
+    println!("{:<14} {:>12.6} {:>9.2}x", "ApHMM", base.aphmm_s, 1.0);
+    println!("paper: 15.55-260x (CPU), 1.83-5.34x (GPU), 27.97x (FPGA)");
+
+    common::banner("Fig. 10b: energy reductions");
+    let (e_cpu, e_gpu) = base.energy_reductions();
+    println!("{:<14} {:>12} {:>12}", "platform", "energy (J)", "vs ApHMM");
+    println!("{:<14} {:>12.3} {:>11.0}x", "CPU-1", base.cpu_j, e_cpu);
+    println!("{:<14} {:>12.4} {:>11.0}x", "GPU (model)", base.gpu_j, e_gpu);
+    println!("{:<14} {:>12.6} {:>11.1}x", "ApHMM", base.aphmm_j, 1.0);
+    println!("paper: 2474x (CPU), 896.7-2622.94x (GPU)");
+
+    // Forward-only contrast (paper's fifth observation: GPUs win there).
+    common::banner("Forward-only contrast");
+    let mut wl_fwd = wl_all;
+    wl_fwd.steps = StepKind::Forward;
+    let fo = Baselines::from_cpu_measurement(
+        &acfg,
+        &wl_fwd,
+        &CpuMeasurement { seconds: cpu_fwd, filter_fraction: 0.0 },
+    );
+    println!(
+        "forward-only: GPU(model) {:.6}s vs ApHMM {:.6}s -> GPU {}",
+        fo.gpu_s,
+        fo.aphmm_s,
+        if fo.gpu_s < fo.aphmm_s { "wins (matches paper obs. 5)" } else { "loses" }
+    );
+}

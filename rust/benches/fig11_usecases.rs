@@ -1,0 +1,128 @@
+//! Fig. 11 — end-to-end application speedups over the single-threaded
+//! CPU implementations (paper: EC 2.66–59.94×, protein search
+//! 1.61–1.75×, MSA 1.95×).
+//!
+//! Each application is *run and measured* on CPU; the accelerated time
+//! is Amdahl-combined: unaccelerated part (measured) + Baum-Welch part
+//! divided by the modeled 4-core ApHMM speedup for that workload.
+
+mod common;
+
+use aphmm::accel::{cycles, multicore_runtime, AccelConfig, AppSplit, StepKind, Workload};
+use aphmm::apps::{align_all, correct_assembly, CorrectionConfig, FamilyDb, MsaConfig, SearchConfig};
+use aphmm::phmm::{Phmm, Profile, TraditionalParams};
+use aphmm::seq::{Sequence, PROTEIN};
+use aphmm::sim::{
+    generate_families, generate_genome, simulate_reads, ErrorProfile, ProteinSimParams, XorShift,
+};
+
+fn report(name: &str, split: AppSplit, wl: &Workload, paper: &str, paper_bw_frac: f64) {
+    let acfg = AccelConfig::default();
+    let cpu_total = split.cpu_other_s + split.cpu_bw_s;
+    let r = multicore_runtime(&acfg, wl, &split, acfg.n_cores);
+    let accel_total = r.total();
+    println!(
+        "{:<22} {:>11.3}s {:>12.3}s {:>9.2}x   (paper {paper})",
+        name,
+        cpu_total,
+        accel_total,
+        cpu_total / accel_total
+    );
+    // Second row: project onto the PAPER's Fig. 2 split.  Our
+    // reimplementations lack HMMER's heavy non-BW pipeline stages, so
+    // the measured non-BW share is smaller than the paper's; holding
+    // our modeled BW acceleration fixed and substituting the paper's
+    // split shows how the end-to-end number depends on that share.
+    let paper_split = AppSplit {
+        cpu_bw_s: cpu_total * paper_bw_frac,
+        cpu_other_s: cpu_total * (1.0 - paper_bw_frac),
+    };
+    let rp = multicore_runtime(&acfg, wl, &paper_split, acfg.n_cores);
+    println!(
+        "{:<22} {:>11} {:>13} {:>9.2}x   (with the paper's {:.1}% BW share)",
+        "  └ paper-split proj.",
+        "",
+        "",
+        cpu_total / rp.total(),
+        paper_bw_frac * 100.0
+    );
+}
+
+fn main() {
+    common::banner("Fig. 11: end-to-end speedups over CPU-1 (4-core ApHMM)");
+    println!("{:<22} {:>12} {:>13} {:>10}", "application", "CPU-1", "ApHMM-accel", "speedup");
+
+    // --- Error correction ---
+    let mut rng = XorShift::new(31);
+    let truth = generate_genome(&mut rng, 25_000);
+    let reads: Vec<Sequence> = simulate_reads(&mut rng, &truth, 8.0, 2500, &ErrorProfile::pacbio())
+        .into_iter()
+        .map(|r| r.seq)
+        .collect();
+    let rep = correct_assembly(&truth, &reads, &CorrectionConfig::default()).unwrap();
+    let (bw_s, other_s) = rep.timings.split_seconds();
+    let wl = Workload {
+        total_steps: rep.timesteps,
+        avg_active_states: rep.states_processed as f64 / rep.timesteps.max(1) as f64,
+        avg_degree: rep.edges_processed as f64 / rep.states_processed.max(1) as f64,
+        sigma: 4,
+        n_states: 2600,
+        chunk_len: 650,
+        steps: StepKind::Training,
+        n_sequences: rep.reads_mapped as u64,
+        n_iterations: 2,
+    };
+    report(
+        "error correction",
+        AppSplit { cpu_other_s: other_s, cpu_bw_s: bw_s },
+        &wl,
+        "2.66-59.94x",
+        0.9857,
+    );
+
+    // --- Protein family search ---
+    let mut rng = XorShift::new(32);
+    let families =
+        generate_families(&mut rng, &ProteinSimParams { n_families: 48, ..Default::default() });
+    let cfg = SearchConfig::default();
+    let db = FamilyDb::build(&families, PROTEIN, &cfg).unwrap();
+    let mut t = aphmm::apps::AppTimings::default();
+    for q in 0..32 {
+        let fam = &families[q % families.len()];
+        let r = db.search(&fam.members[q % fam.members.len()], &cfg).unwrap();
+        t.merge(&r.timings);
+    }
+    let (bw_s, other_s) = t.split_seconds();
+    report(
+        "protein family search",
+        AppSplit { cpu_other_s: other_s, cpu_bw_s: bw_s },
+        &Workload::protein_canonical(),
+        "1.61-1.75x",
+        0.4576,
+    );
+
+    // --- MSA ---
+    let mut rng = XorShift::new(33);
+    let fam = generate_families(
+        &mut rng,
+        &ProteinSimParams { n_families: 1, members_per_family: 64, ..Default::default() },
+    )
+    .remove(0);
+    let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
+    let phmm = Phmm::traditional(&profile, &TraditionalParams::default())
+        .unwrap()
+        .fold_silent(4)
+        .unwrap();
+    let rep = align_all(&phmm, &fam.members, &MsaConfig::default()).unwrap();
+    let (bw_s, other_s) = rep.timings.split_seconds();
+    report(
+        "MSA",
+        AppSplit { cpu_other_s: other_s, cpu_bw_s: bw_s },
+        &Workload::protein_canonical(),
+        "1.95x",
+        0.5144,
+    );
+
+    let _ = cycles(&AccelConfig::default(), &Workload::ec_canonical());
+    println!("\npaper shape: EC >> search/MSA (Amdahl: EC is ~99% Baum-Welch)");
+}

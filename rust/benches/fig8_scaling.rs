@@ -1,0 +1,51 @@
+//! Fig. 8 — accelerator scaling: (a) speedup vs number of PEs (knee at
+//! 64 with 8 memory ports), (b) transition-step compute scaling,
+//! (c) execution time vs chunk size (linear to ~650, super-linear
+//! beyond).
+
+mod common;
+
+use aphmm::accel::{cycles, AccelConfig, StepKind, Workload};
+
+fn main() {
+    let wl = Workload::ec_canonical();
+
+    common::banner("Fig. 8a: acceleration scaling with the number of PEs");
+    println!("{:>6} {:>12} {:>10} {:>11}", "PEs", "cycles", "speedup", "mem-bound");
+    let base = cycles(&AccelConfig::default().with_pes(8), &wl).total();
+    for pes in [8usize, 16, 32, 64, 128, 256, 512] {
+        let bd = cycles(&AccelConfig::default().with_pes(pes), &wl);
+        println!(
+            "{:>6} {:>12.0} {:>9.2}x {:>10.0}%",
+            pes,
+            bd.total(),
+            base / bd.total(),
+            bd.mem_bound_fraction * 100.0
+        );
+    }
+    println!("paper shape: ~linear to 64 PEs, then flattening (8-port limit)");
+
+    common::banner("Fig. 8b: transition-update step scaling with PEs");
+    println!("{:>6} {:>14} {:>10}", "PEs", "upd cycles", "speedup");
+    let upd_base = cycles(&AccelConfig::default().with_pes(8), &wl).update;
+    for pes in [8usize, 16, 32, 64, 128, 256, 512] {
+        let bd = cycles(&AccelConfig::default().with_pes(pes), &wl);
+        println!("{:>6} {:>14.0} {:>9.2}x", pes, bd.update, upd_base / bd.update);
+    }
+    println!("paper shape: transition step saturates first (memory-port bound)");
+
+    common::banner("Fig. 8c: execution time vs chunk size");
+    println!("{:>7} {:>12} {:>14} {:>12}", "chunk", "cycles", "linear proj", "real/linear");
+    let c150 = cycles(
+        &AccelConfig::default(),
+        &Workload::synthetic(150, 500.0, 7.0, 4, 150, StepKind::Training),
+    )
+    .total();
+    for chunk in [150usize, 350, 650, 800, 1000, 1300] {
+        let w = Workload::synthetic(chunk as u64, 500.0, 7.0, 4, chunk, StepKind::Training);
+        let real = cycles(&AccelConfig::default(), &w).total();
+        let linear = c150 * chunk as f64 / 150.0;
+        println!("{:>7} {:>12.0} {:>14.0} {:>11.2}x", chunk, real, linear, real / linear);
+    }
+    println!("paper shape: linear to ~650 bases, super-linear beyond (L1 capacity)");
+}

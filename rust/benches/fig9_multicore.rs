@@ -1,0 +1,92 @@
+//! Fig. 9 — normalized end-to-end runtimes of multi-core ApHMM (1/2/4/8
+//! cores) for the three applications; 4 cores is the paper's optimum.
+//!
+//! Application splits (CPU-other vs Baum-Welch) are *measured* from the
+//! real Rust apps (the same runs as fig2), then projected through the
+//! multi-core model.
+
+mod common;
+
+use aphmm::accel::{
+    best_core_count, cycles, multicore_runtime, AccelConfig, AppSplit, Workload,
+};
+use aphmm::apps::{align_all, correct_assembly, CorrectionConfig, FamilyDb, MsaConfig, SearchConfig};
+use aphmm::phmm::{Phmm, Profile, TraditionalParams};
+use aphmm::seq::{Sequence, PROTEIN};
+use aphmm::sim::{
+    generate_families, generate_genome, simulate_reads, ErrorProfile, ProteinSimParams, XorShift,
+};
+
+fn project(name: &str, split: AppSplit, wl: &Workload) {
+    let cfg = AccelConfig::default();
+    let t1 = multicore_runtime(&cfg, wl, &split, 1).total();
+    print!("{name:<22}");
+    for cores in [1usize, 2, 4, 8] {
+        let r = multicore_runtime(&cfg, wl, &split, cores);
+        print!(" {:>8.3}", r.total() / t1);
+    }
+    let best = best_core_count(&cfg, wl, &split, 8);
+    println!("   best: {best} cores");
+}
+
+fn main() {
+    common::banner("Fig. 9: multi-core ApHMM normalized end-to-end runtime");
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "application", "1", "2", "4", "8");
+
+    // --- Error correction split (measured) ---
+    let mut rng = XorShift::new(11);
+    let truth = generate_genome(&mut rng, 20_000);
+    let reads: Vec<Sequence> = simulate_reads(&mut rng, &truth, 8.0, 2500, &ErrorProfile::pacbio())
+        .into_iter()
+        .map(|r| r.seq)
+        .collect();
+    let report = correct_assembly(&truth, &reads, &CorrectionConfig::default()).unwrap();
+    let (bw_s, other_s) = report.timings.split_seconds();
+    let wl_ec = Workload {
+        total_steps: report.timesteps,
+        avg_active_states: report.states_processed as f64 / report.timesteps.max(1) as f64,
+        avg_degree: report.edges_processed as f64 / report.states_processed.max(1) as f64,
+        sigma: 4,
+        n_states: 2600,
+        chunk_len: 650,
+        steps: aphmm::accel::StepKind::Training,
+        n_sequences: report.reads_mapped as u64,
+        n_iterations: 2,
+    };
+    project("error correction", AppSplit { cpu_other_s: other_s, cpu_bw_s: bw_s }, &wl_ec);
+
+    // --- Protein search split (measured) ---
+    let mut rng = XorShift::new(12);
+    let families =
+        generate_families(&mut rng, &ProteinSimParams { n_families: 32, ..Default::default() });
+    let cfg = SearchConfig::default();
+    let db = FamilyDb::build(&families, PROTEIN, &cfg).unwrap();
+    let mut t = aphmm::apps::AppTimings::default();
+    for q in 0..24 {
+        let fam = &families[q % families.len()];
+        let r = db.search(&fam.members[q % fam.members.len()], &cfg).unwrap();
+        t.merge(&r.timings);
+    }
+    let (bw_s, other_s) = t.split_seconds();
+    let wl_pro = Workload::protein_canonical();
+    project("protein family search", AppSplit { cpu_other_s: other_s, cpu_bw_s: bw_s }, &wl_pro);
+
+    // --- MSA split (measured) ---
+    let mut rng = XorShift::new(13);
+    let fam = generate_families(
+        &mut rng,
+        &ProteinSimParams { n_families: 1, members_per_family: 48, ..Default::default() },
+    )
+    .remove(0);
+    let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
+    let phmm = Phmm::traditional(&profile, &TraditionalParams::default())
+        .unwrap()
+        .fold_silent(4)
+        .unwrap();
+    let rep = align_all(&phmm, &fam.members, &MsaConfig::default()).unwrap();
+    let (bw_s, other_s) = rep.timings.split_seconds();
+    project("MSA", AppSplit { cpu_other_s: other_s, cpu_bw_s: bw_s }, &wl_pro);
+
+    let _ = cycles(&AccelConfig::default(), &wl_ec);
+    println!("\npaper shape: 4 cores optimal; beyond that data movement dominates");
+}

@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks (the §Perf instrumentation): per-edge and
+//! per-state throughput of the forward pass, the fused
+//! backward+update pass, both filters, the banded engine, and (when
+//! artifacts exist) the XLA runtime path.  Used to drive and record the
+//! optimization iterations in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::path::Path;
+
+use aphmm::baumwelch::{
+    forward_sparse, BandedEngine, BwAccumulators, FilterConfig, ForwardOptions,
+};
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
+
+fn main() {
+    common::banner("hot paths (median of 5)");
+    let scenario = common::ec_scenario(3, 650, 1);
+    let graph =
+        Phmm::error_correction(&scenario.reference, &EcDesignParams::default()).unwrap();
+    let read = &scenario.reads[0];
+
+    // --- sparse forward, unfiltered ---
+    let opts = ForwardOptions::default();
+    let fwd = forward_sparse(&graph, read, &opts).unwrap();
+    let edges = fwd.edges_processed as f64;
+    let t = common::time_median(5, || {
+        forward_sparse(&graph, read, &opts).unwrap();
+    });
+    println!(
+        "forward_sparse (no filter):     {:>9.3} ms  {:>7.2} ns/edge  ({} edges)",
+        t * 1e3,
+        t * 1e9 / edges,
+        edges as u64
+    );
+
+    // --- sparse forward, histogram filter ---
+    let opts_h = ForwardOptions { filter: FilterConfig::histogram_default() };
+    let fwd_h = forward_sparse(&graph, read, &opts_h).unwrap();
+    let t = common::time_median(5, || {
+        forward_sparse(&graph, read, &opts_h).unwrap();
+    });
+    println!(
+        "forward_sparse (histogram):     {:>9.3} ms  {:>7.2} ns/edge  ({} edges)",
+        t * 1e3,
+        t * 1e9 / fwd_h.edges_processed as f64,
+        fwd_h.edges_processed
+    );
+
+    // --- sparse forward, sort filter ---
+    let opts_s = ForwardOptions { filter: FilterConfig::Sort { size: 500 } };
+    let fwd_s = forward_sparse(&graph, read, &opts_s).unwrap();
+    let t = common::time_median(5, || {
+        forward_sparse(&graph, read, &opts_s).unwrap();
+    });
+    println!(
+        "forward_sparse (sort):          {:>9.3} ms  {:>7.2} ns/edge  ({} edges)",
+        t * 1e3,
+        t * 1e9 / fwd_s.edges_processed as f64,
+        fwd_s.edges_processed
+    );
+
+    // --- fused backward + update ---
+    let t = common::time_median(5, || {
+        let mut acc = BwAccumulators::new(&graph);
+        acc.accumulate(&graph, read, &fwd).unwrap();
+    });
+    println!(
+        "backward+update (fused):        {:>9.3} ms  {:>7.2} ns/edge",
+        t * 1e3,
+        t * 1e9 / edges
+    );
+
+    // --- banded dense engine ---
+    let banded = graph.to_banded().unwrap();
+    let dense_ops = (banded.n * banded.w * read.len()) as f64;
+    let t = common::time_median(5, || {
+        BandedEngine::bw_sums(&banded, read).unwrap();
+    });
+    println!(
+        "banded bw_sums (dense):         {:>9.3} ms  {:>7.2} ns/band-op ({} ops)",
+        t * 1e3,
+        t * 1e9 / dense_ops,
+        dense_ops as u64
+    );
+
+    // --- XLA runtime path (T=128 artifacts -> short read) ---
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let store = ArtifactStore::load(dir).unwrap();
+        let short = common::ec_scenario(4, 100, 1);
+        let g2 = Phmm::error_correction(&short.reference, &EcDesignParams::default()).unwrap();
+        let b2 = g2.to_banded().unwrap();
+        let r2 = &short.reads[0];
+        let engine = XlaBandedEngine::for_shape(&store, b2.n, b2.w, b2.sigma, r2.len()).unwrap();
+        engine.bw_sums(&b2, r2).unwrap(); // warm up
+        let t = common::time_median(5, || {
+            engine.bw_sums(&b2, r2).unwrap();
+        });
+        let t_native = common::time_median(5, || {
+            BandedEngine::bw_sums(&b2, r2).unwrap();
+        });
+        println!(
+            "xla bw_sums (N=512 artifact):   {:>9.3} ms  (native banded same shape: {:.3} ms)",
+            t * 1e3,
+            t_native * 1e3
+        );
+    } else {
+        println!("xla bw_sums: skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,28 @@
+//! Table 2 — area and power breakdown of the ApHMM core
+//! (paper: overall 6.536 mm², 509.8 mW at 28 nm / 1 GHz; UTs dominate
+//! area at 77.98 %; Control+PEs dominate power).
+
+mod common;
+
+use aphmm::accel::{area_power, AccelConfig};
+
+fn main() {
+    common::banner("Table 2: area and power breakdown (28 nm, 1 GHz)");
+    let ap = area_power(&AccelConfig::default());
+    println!("{:<30} {:>12} {:>12}", "module", "area (mm^2)", "power (mW)");
+    println!("{:<30} {:>12.3} {:>12.1}", "Control Block", ap.control_area_mm2, ap.control_power_mw);
+    println!("{:<30} {:>12.3} {:>12.1}", "64 Processing Engines (PEs)", ap.pe_area_mm2, ap.pe_power_mw);
+    println!("{:<30} {:>12.3} {:>12.1}", "64 Update Transitions (UTs)", ap.ut_area_mm2, ap.ut_power_mw);
+    println!("{:<30} {:>12.3} {:>12.1}", "4 Update Emissions (UEs)", ap.ue_area_mm2, ap.ue_power_mw);
+    println!("{:<30} {:>12.3} {:>12.1}", "Overall (core)", ap.core_area_mm2(), ap.core_power_mw());
+    println!("{:<30} {:>12.3} {:>12.1}", "128KB L1-Memory", ap.l1_area_mm2, ap.l1_power_mw);
+    println!(
+        "\nUT share of core area: {:.2}% (paper: 77.98%)",
+        ap.ut_area_mm2 / ap.core_area_mm2() * 100.0
+    );
+    println!(
+        "Control+PE share of power: {:.1}% (paper: ~86% incl. memory activity)",
+        (ap.control_power_mw + ap.pe_power_mw + ap.l1_power_mw) / ap.core_power_mw() * 100.0
+    );
+    println!("\nScale-up (4 cores): {:.2} mm^2, {:.2} W", ap.chip_area_mm2(4), ap.chip_power_w(4));
+}

@@ -1,0 +1,142 @@
+//! Area and power model (Table 2).
+//!
+//! Per-module densities are taken directly from the paper's synthesis
+//! results (Synopsys DC, 28 nm, 1 GHz) and scaled linearly with unit
+//! counts, so non-default configurations (Fig. 8 sweeps) get consistent
+//! area/power estimates.
+
+use super::config::AccelConfig;
+
+/// Table 2 synthesis constants (one ApHMM core, Table 1 configuration).
+mod table2 {
+    /// 64 PEs: 1.333 mm².
+    pub const PE_AREA_MM2: f64 = 1.333 / 64.0;
+    /// 64 PEs: 304.2 mW (includes their L1 access activity).
+    pub const PE_POWER_MW: f64 = 304.2 / 64.0;
+    /// 64 UTs: 5.097 mm² (mux + division pipeline + local memory).
+    pub const UT_AREA_MM2: f64 = 5.097 / 64.0;
+    /// 64 UTs: 0.8 mW.
+    pub const UT_POWER_MW: f64 = 0.8 / 64.0;
+    /// 4 UEs: 0.094 mm².
+    pub const UE_AREA_MM2: f64 = 0.094 / 4.0;
+    /// 4 UEs: 70.4 mW.
+    pub const UE_POWER_MW: f64 = 70.4 / 4.0;
+    /// 128 KB L1: 0.632 mm².
+    pub const L1_AREA_MM2_PER_KB: f64 = 0.632 / 128.0;
+    /// 128 KB L1: 100 mW.
+    pub const L1_POWER_MW_PER_KB: f64 = 100.0 / 128.0;
+    /// Control Block power (Table 2 attributes ~86 % of power to Control
+    /// Block + PEs; the control share is the remainder of the 509.8 mW
+    /// core total): 509.8 - 304.2 - 0.8 - 70.4 - 100 = 34.4 mW.
+    pub const CONTROL_POWER_MW: f64 = 34.4;
+    /// Control Block area: Table 2 total 6.536 - listed modules.
+    pub const CONTROL_AREA_MM2: f64 = 6.536 - 1.333 - 5.097 - 0.094 - 0.632 * 0.0;
+}
+
+/// Area/power estimate of one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaPower {
+    /// PE array area (mm²).
+    pub pe_area_mm2: f64,
+    /// UT array area (mm²).
+    pub ut_area_mm2: f64,
+    /// UE array area (mm²).
+    pub ue_area_mm2: f64,
+    /// L1 memory area (mm²).
+    pub l1_area_mm2: f64,
+    /// Control block area (mm²).
+    pub control_area_mm2: f64,
+    /// PE array power (mW).
+    pub pe_power_mw: f64,
+    /// UT array power (mW).
+    pub ut_power_mw: f64,
+    /// UE array power (mW).
+    pub ue_power_mw: f64,
+    /// L1 power (mW).
+    pub l1_power_mw: f64,
+    /// Control block power (mW).
+    pub control_power_mw: f64,
+}
+
+impl AreaPower {
+    /// Total logic area of one core (mm², excluding L1 as in Table 2's
+    /// "Overall" row).
+    pub fn core_area_mm2(&self) -> f64 {
+        self.pe_area_mm2 + self.ut_area_mm2 + self.ue_area_mm2 + self.control_area_mm2
+    }
+
+    /// Total core power (mW) including L1.
+    pub fn core_power_mw(&self) -> f64 {
+        self.pe_power_mw
+            + self.ut_power_mw
+            + self.ue_power_mw
+            + self.l1_power_mw
+            + self.control_power_mw
+    }
+
+    /// Full-chip area for `n_cores` (mm², L1 included per core).
+    pub fn chip_area_mm2(&self, n_cores: usize) -> f64 {
+        (self.core_area_mm2() + self.l1_area_mm2) * n_cores as f64
+    }
+
+    /// Full-chip power for `n_cores` (W).
+    pub fn chip_power_w(&self, n_cores: usize) -> f64 {
+        self.core_power_mw() * n_cores as f64 / 1000.0
+    }
+}
+
+/// Scale Table 2 to an arbitrary configuration.
+pub fn area_power(cfg: &AccelConfig) -> AreaPower {
+    AreaPower {
+        pe_area_mm2: table2::PE_AREA_MM2 * cfg.n_pes as f64,
+        ut_area_mm2: table2::UT_AREA_MM2 * cfg.n_uts as f64,
+        ue_area_mm2: table2::UE_AREA_MM2 * cfg.n_ues as f64,
+        l1_area_mm2: table2::L1_AREA_MM2_PER_KB * cfg.l1_kb as f64,
+        control_area_mm2: table2::CONTROL_AREA_MM2,
+        pe_power_mw: table2::PE_POWER_MW * cfg.n_pes as f64,
+        ut_power_mw: table2::UT_POWER_MW * cfg.n_uts as f64,
+        ue_power_mw: table2::UE_POWER_MW * cfg.n_ues as f64,
+        l1_power_mw: table2::L1_POWER_MW_PER_KB * cfg.l1_kb as f64,
+        control_power_mw: table2::CONTROL_POWER_MW,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_reproduces_table2_totals() {
+        let ap = area_power(&AccelConfig::default());
+        // Table 2: overall 6.536 mm², 509.8 mW; 128KB L1 0.632 mm², 100 mW.
+        assert!((ap.core_area_mm2() - 6.536).abs() < 0.02, "area {}", ap.core_area_mm2());
+        assert!((ap.core_power_mw() - 509.8).abs() < 1.0, "power {}", ap.core_power_mw());
+        assert!((ap.l1_area_mm2 - 0.632).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ut_dominates_area_pe_dominates_power() {
+        // Table 2's headline observations (§5.2): UTs are 77.98 % of
+        // area; Control+PE dominate power.
+        let ap = area_power(&AccelConfig::default());
+        assert!(ap.ut_area_mm2 / ap.core_area_mm2() > 0.7);
+        assert!((ap.pe_power_mw + ap.control_power_mw) / ap.core_power_mw() > 0.6);
+    }
+
+    #[test]
+    fn scaling_is_linear_in_units() {
+        let small = area_power(&AccelConfig::default().with_pes(32));
+        let big = area_power(&AccelConfig::default().with_pes(128));
+        assert!((big.pe_area_mm2 / small.pe_area_mm2 - 4.0).abs() < 1e-9);
+        assert!((big.ut_power_mw / small.ut_power_mw - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn four_core_chip() {
+        let ap = area_power(&AccelConfig::default());
+        let area = ap.chip_area_mm2(4);
+        let power = ap.chip_power_w(4);
+        assert!((area - 4.0 * (6.536 + 0.632)).abs() < 0.1);
+        assert!((power - 4.0 * 0.5098).abs() < 0.01);
+    }
+}

@@ -1,0 +1,147 @@
+//! Baseline platforms for the Fig. 10/11 comparisons.
+//!
+//! * **CPU** — genuinely measured: the caller times the Rust sparse
+//!   engine (our reimplementation of the Apollo/HMMER compute) and wraps
+//!   the measurement in [`CpuMeasurement`].  Energy = time × package
+//!   power.
+//! * **GPU / FPGA** — no such hardware exists here, so these are
+//!   calibrated from the paper's *reported relative throughputs*
+//!   (DESIGN.md substitution table): ApHMM is 1.83–5.34× faster than the
+//!   GPU implementations (GPUs win on Forward-only) and 27.97× faster
+//!   than the FPGA D&C accelerator.  They reproduce the *shape* of the
+//!   comparison by construction and are clearly labelled as modeled.
+
+use super::config::AccelConfig;
+use super::energy::{energy, EnergyConstants};
+use super::perf::cycles;
+use super::workload::{StepKind, Workload};
+
+/// Active package power of the measured CPU baseline (W).  A single
+/// active core of a server-class part (the paper uses an AMD EPYC 7742);
+/// 80 W keeps the paper's energy ratios consistent (see DESIGN.md).
+pub const CPU_ACTIVE_POWER_W: f64 = 80.0;
+
+/// Active board power of the modeled GPU baseline (W) — A100 class.
+pub const GPU_ACTIVE_POWER_W: f64 = 250.0;
+
+/// A wall-clock measurement of the CPU engine.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuMeasurement {
+    /// Measured seconds for the workload.
+    pub seconds: f64,
+    /// Share of that time spent in sort-based filtering (Obs. 4: ≈8.5 %
+    /// during training when filtering is enabled).
+    pub filter_fraction: f64,
+}
+
+impl CpuMeasurement {
+    /// Energy of the measurement (J).
+    pub fn joules(&self) -> f64 {
+        self.seconds * CPU_ACTIVE_POWER_W
+    }
+}
+
+/// All comparison points for one workload.
+#[derive(Clone, Copy, Debug)]
+pub struct Baselines {
+    /// Measured CPU single-thread seconds.
+    pub cpu_s: f64,
+    /// Modeled GPU seconds (paper-calibrated).
+    pub gpu_s: f64,
+    /// Modeled FPGA D&C seconds (paper-calibrated).
+    pub fpga_s: f64,
+    /// Modeled ApHMM seconds (single core).
+    pub aphmm_s: f64,
+    /// CPU energy (J).
+    pub cpu_j: f64,
+    /// GPU energy (J).
+    pub gpu_j: f64,
+    /// ApHMM energy (J).
+    pub aphmm_j: f64,
+}
+
+impl Baselines {
+    /// Build the comparison set from a real CPU measurement.
+    ///
+    /// GPU calibration: the paper reports ApHMM 1.83–5.34× faster than
+    /// GPU overall but GPUs *faster* than ApHMM on the Forward-only
+    /// kernel (§5.3, observation five) — we encode a 3.5× average for
+    /// full Baum-Welch and 0.8× for Forward-heavy scoring workloads.
+    pub fn from_cpu_measurement(cfg: &AccelConfig, wl: &Workload, cpu: &CpuMeasurement) -> Baselines {
+        let aphmm_s = cycles(cfg, wl).seconds(cfg);
+        let gpu_factor = match wl.steps {
+            StepKind::Forward => 0.8,
+            StepKind::ForwardBackward => 2.5,
+            StepKind::Training => 3.5,
+        };
+        let gpu_s = aphmm_s * gpu_factor;
+        let fpga_s = aphmm_s * 27.97;
+        let aphmm_j = energy(cfg, wl, &EnergyConstants::default()).total();
+        Baselines {
+            cpu_s: cpu.seconds,
+            gpu_s,
+            fpga_s,
+            aphmm_s,
+            cpu_j: cpu.joules(),
+            gpu_j: gpu_s * GPU_ACTIVE_POWER_W,
+            aphmm_j,
+        }
+    }
+
+    /// Speedup of ApHMM over each platform.
+    pub fn speedups(&self) -> (f64, f64, f64) {
+        (self.cpu_s / self.aphmm_s, self.gpu_s / self.aphmm_s, self.fpga_s / self.aphmm_s)
+    }
+
+    /// Energy reduction of ApHMM vs CPU and GPU.
+    pub fn energy_reductions(&self) -> (f64, f64) {
+        (self.cpu_j / self.aphmm_j, self.gpu_j / self.aphmm_j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_paper() {
+        // CPU slowest, GPU in between, ApHMM fastest, FPGA slower than
+        // GPU (the paper's 27.97x vs 1.83-5.34x).
+        let cfg = AccelConfig::default();
+        let wl = Workload::ec_canonical();
+        let aphmm_s = cycles(&cfg, &wl).seconds(&cfg);
+        let cpu = CpuMeasurement { seconds: aphmm_s * 50.0, filter_fraction: 0.085 };
+        let b = Baselines::from_cpu_measurement(&cfg, &wl, &cpu);
+        assert!(b.cpu_s > b.gpu_s);
+        assert!(b.gpu_s > b.aphmm_s);
+        assert!(b.fpga_s > b.gpu_s);
+        let (s_cpu, s_gpu, s_fpga) = b.speedups();
+        assert!(s_cpu > s_gpu && s_gpu > 1.0);
+        assert!((s_fpga - 27.97).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gpu_wins_forward_only() {
+        // §5.3: "GPU implementations are a better candidate for
+        // applications that execute only the Forward calculations".
+        let cfg = AccelConfig::default();
+        let mut wl = Workload::ec_canonical();
+        wl.steps = StepKind::Forward;
+        let aphmm_s = cycles(&cfg, &wl).seconds(&cfg);
+        let cpu = CpuMeasurement { seconds: 1.0, filter_fraction: 0.0 };
+        let b = Baselines::from_cpu_measurement(&cfg, &wl, &cpu);
+        assert!(b.gpu_s < aphmm_s * 1.01);
+    }
+
+    #[test]
+    fn energy_reductions_positive() {
+        let cfg = AccelConfig::default();
+        let wl = Workload::ec_canonical();
+        let aphmm_s = cycles(&cfg, &wl).seconds(&cfg);
+        let cpu = CpuMeasurement { seconds: aphmm_s * 100.0, filter_fraction: 0.085 };
+        let b = Baselines::from_cpu_measurement(&cfg, &wl, &cpu);
+        let (e_cpu, e_gpu) = b.energy_reductions();
+        assert!(e_cpu > 10.0, "cpu energy reduction {e_cpu}");
+        assert!(e_gpu > 1.0, "gpu energy reduction {e_gpu}");
+    }
+}

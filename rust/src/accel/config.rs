@@ -1,0 +1,166 @@
+//! Microarchitecture configuration (Table 1) and optimization toggles.
+
+/// The four ApHMM optimizations (each individually disable-able, which is
+/// how the Table 3 ablation is produced).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptToggles {
+    /// LUTs holding common transition×emission products (§4.3).
+    pub luts: bool,
+    /// Broadcasting + partial compute of Backward values (§4.3).
+    pub broadcast_partial: bool,
+    /// Transition-numerator memoization in the UT scratchpad (§4.3).
+    pub memoization: bool,
+    /// Histogram filter instead of software sorting (§4.2).
+    pub histogram_filter: bool,
+}
+
+impl OptToggles {
+    /// All optimizations enabled (the evaluated design).
+    pub fn all() -> Self {
+        OptToggles { luts: true, broadcast_partial: true, memoization: true, histogram_filter: true }
+    }
+
+    /// All optimizations disabled (the naive hardware datapath).
+    pub fn none() -> Self {
+        OptToggles {
+            luts: false,
+            broadcast_partial: false,
+            memoization: false,
+            histogram_filter: false,
+        }
+    }
+}
+
+/// ApHMM core configuration (defaults = Table 1).
+#[derive(Clone, Copy, Debug)]
+pub struct AccelConfig {
+    /// Processing engines per core (Table 1: 64).
+    pub n_pes: usize,
+    /// Multiply-accumulate lanes per PE (Table 1: 4 multipliers + 4 adders).
+    pub lanes_per_pe: usize,
+    /// Memory ports (Table 1: 8).
+    pub mem_ports: usize,
+    /// Bandwidth per port in bytes/cycle (Table 1: 16).
+    pub port_bytes_per_cycle: usize,
+    /// L1 cache size in KiB (Table 1: 128).
+    pub l1_kb: usize,
+    /// Update Transition units (Table 1: 64, scales with PEs).
+    pub n_uts: usize,
+    /// Update Emission units (Table 1: 4).
+    pub n_ues: usize,
+    /// States processed per UE per cycle.
+    pub ue_throughput: usize,
+    /// Clock frequency in GHz (§5.1: 1 GHz).
+    pub freq_ghz: f64,
+    /// Number of ApHMM cores (§4.4: 4).
+    pub n_cores: usize,
+    /// LUT entries per PE (§4.3: 36 = 4 emissions × 9 transitions).
+    pub lut_entries: usize,
+    /// Histogram filter size (Fig. 3 operating point: 500).
+    pub filter_size: usize,
+    /// Histogram filter bins (§4.2: 16).
+    pub filter_bins: usize,
+    /// UT memoization scratchpad in KiB (§4.3: 8).
+    pub scratchpad_kb: usize,
+    /// Optimization toggles.
+    pub opt: OptToggles,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            n_pes: 64,
+            lanes_per_pe: 4,
+            mem_ports: 8,
+            port_bytes_per_cycle: 16,
+            l1_kb: 128,
+            n_uts: 64,
+            n_ues: 4,
+            ue_throughput: 4,
+            freq_ghz: 1.0,
+            n_cores: 4,
+            lut_entries: 36,
+            filter_size: 500,
+            filter_bins: 16,
+            scratchpad_kb: 8,
+            opt: OptToggles::all(),
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Peak MACs/cycle of the PE array.
+    pub fn mac_per_cycle(&self) -> f64 {
+        (self.n_pes * self.lanes_per_pe) as f64
+    }
+
+    /// Aggregate memory bandwidth in bytes/cycle.
+    pub fn mem_bytes_per_cycle(&self) -> f64 {
+        (self.mem_ports * self.port_bytes_per_cycle) as f64
+    }
+
+    /// Convert core cycles to seconds at the configured clock.
+    pub fn cycles_to_seconds(&self, cycles: f64) -> f64 {
+        cycles / (self.freq_ghz * 1e9)
+    }
+
+    /// LUT hit rate for alphabet size `sigma` and mean out-degree `d`:
+    /// the LUT holds `lut_entries` products; a state needs `sigma × d`
+    /// distinct products (§4.3: 4 × 7 = 28 ≤ 36 for DNA ⇒ full hit; the
+    /// 20-letter protein alphabet overflows the LUT ⇒ partial).
+    pub fn lut_hit_rate(&self, sigma: usize, degree: f64) -> f64 {
+        if !self.opt.luts {
+            return 0.0;
+        }
+        let needed = sigma as f64 * degree;
+        (self.lut_entries as f64 / needed).min(1.0)
+    }
+
+    /// Scale the per-PE resources (UTs track PEs as in Table 1).
+    pub fn with_pes(mut self, n_pes: usize) -> Self {
+        self.n_pes = n_pes;
+        self.n_uts = n_pes;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let c = AccelConfig::default();
+        assert_eq!(c.n_pes, 64);
+        assert_eq!(c.mac_per_cycle() as usize, 256);
+        assert_eq!(c.mem_bytes_per_cycle() as usize, 128);
+        assert_eq!(c.l1_kb, 128);
+        assert_eq!(c.n_cores, 4);
+    }
+
+    #[test]
+    fn lut_hit_rates_match_paper_argument() {
+        let c = AccelConfig::default();
+        // DNA: 4 × 7 = 28 products fit in 36 entries.
+        assert_eq!(c.lut_hit_rate(4, 7.0), 1.0);
+        // Protein: 20 × 7 = 140 products overflow.
+        let r = c.lut_hit_rate(20, 7.0);
+        assert!(r < 0.3 && r > 0.2, "r={r}");
+        // Disabled LUTs never hit.
+        let mut c2 = c;
+        c2.opt.luts = false;
+        assert_eq!(c2.lut_hit_rate(4, 7.0), 0.0);
+    }
+
+    #[test]
+    fn with_pes_scales_uts() {
+        let c = AccelConfig::default().with_pes(128);
+        assert_eq!(c.n_uts, 128);
+    }
+
+    #[test]
+    fn cycle_time_conversion() {
+        let c = AccelConfig::default();
+        assert!((c.cycles_to_seconds(1e9) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,42 @@
+//! The ApHMM accelerator model.
+//!
+//! The paper's evaluation numbers come from a synthesized 28 nm core plus
+//! an analytical scale-up model (§5.1: "We develop an analytical model to
+//! extract performance and area numbers for a scale-up configuration").
+//! This module re-derives that analytical model from the microarchitecture
+//! description (§4.3–4.4, Table 1, Table 2):
+//!
+//! * [`config`] — Table 1 microarchitecture configuration + the four
+//!   optimization toggles (LUTs, broadcast/partial-compute, memoization,
+//!   histogram filter);
+//! * [`workload`] — workload descriptors extracted from *real* runs of
+//!   the Rust Baum-Welch engine (active-state and edge counts), so the
+//!   model is driven by measured workloads, not synthetic guesses;
+//! * [`perf`] — the cycle model (compute vs memory-port roofline, 5 %
+//!   arbitration, L1-capacity chunk pressure of Fig. 8c);
+//! * [`energy`] — per-op/per-byte energy + static power (Fig. 10b);
+//! * [`area`] — the Table 2 area/power breakdown, scaled by unit counts;
+//! * [`baseline`] — CPU (measured), GPU and FPGA (paper-calibrated)
+//!   comparison points;
+//! * [`multicore`] — the Fig. 9 end-to-end multi-core scaling model.
+//!
+//! Calibration philosophy (DESIGN.md): constants with a physical source
+//! are cited inline; constants the paper leaves unspecified are tuned so
+//! the single design point of Table 1 balances compute and memory at 64
+//! PEs (the knee of Fig. 8a) — the paper's own design argument.
+
+mod area;
+mod baseline;
+mod config;
+mod energy;
+mod multicore;
+mod perf;
+mod workload;
+
+pub use area::{area_power, AreaPower};
+pub use baseline::{Baselines, CpuMeasurement};
+pub use config::{AccelConfig, OptToggles};
+pub use energy::{energy, EnergyBreakdown, EnergyConstants};
+pub use multicore::{best_core_count, multicore_runtime, AppSplit, MulticoreResult};
+pub use perf::{cycles, CycleBreakdown};
+pub use workload::{StepKind, Workload};

@@ -1,0 +1,183 @@
+//! Workload descriptors driving the cycle/energy models.
+//!
+//! A workload summarizes what the Baum-Welch algorithm actually had to do
+//! for a batch of sequences on a given pHMM: how many timesteps ran, how
+//! many states were active per timestep (post-filter), their mean
+//! in/out-degree, and which steps of the algorithm executed.  Descriptors
+//! are extracted from real engine runs ([`Workload::from_train_result`],
+//! [`Workload::from_forward`]) or synthesized for design-space sweeps
+//! ([`Workload::synthetic`]).
+
+use crate::baumwelch::{ForwardResult, TrainResult};
+use crate::phmm::Phmm;
+
+/// Which Baum-Welch steps a workload executes (§4.1: Backward and
+/// Parameter Updates can be disabled per application).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// Forward only (pattern matching, some scoring paths).
+    Forward,
+    /// Forward + Backward (inference scoring: hmmsearch, hmmalign).
+    ForwardBackward,
+    /// Full training: Forward + Backward + Parameter Updates (Apollo).
+    Training,
+}
+
+/// A measured or synthesized Baum-Welch workload.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    /// Total timesteps executed (Σ over sequences of their lengths).
+    pub total_steps: u64,
+    /// Mean active states per timestep (post-filter).
+    pub avg_active_states: f64,
+    /// Mean transitions per active state.
+    pub avg_degree: f64,
+    /// Alphabet size Σ.
+    pub sigma: usize,
+    /// Total states in the pHMM graph (for maximization cost).
+    pub n_states: u64,
+    /// Chunk length the graph was built for (Fig. 8c pressure model).
+    pub chunk_len: usize,
+    /// Steps executed.
+    pub steps: StepKind,
+    /// Number of observation sequences.
+    pub n_sequences: u64,
+    /// EM iterations (training only).
+    pub n_iterations: u64,
+}
+
+impl Workload {
+    /// Extract from a training run (measured counters).
+    pub fn from_train_result(phmm: &Phmm, res: &TrainResult, n_sequences: u64) -> Workload {
+        let total_steps = res.timesteps.max(1);
+        let avg_active_states = res.states_processed as f64 / total_steps as f64;
+        let avg_degree = if res.states_processed > 0 {
+            res.edges_processed as f64 / res.states_processed as f64
+        } else {
+            phmm.mean_out_degree()
+        };
+        Workload {
+            total_steps,
+            avg_active_states,
+            avg_degree,
+            sigma: phmm.sigma(),
+            n_states: phmm.n_states() as u64,
+            chunk_len: phmm.position.last().map(|&p| p as usize + 1).unwrap_or(0),
+            steps: StepKind::Training,
+            n_sequences,
+            n_iterations: res.iters.max(1) as u64,
+        }
+    }
+
+    /// Extract from a single forward pass (scoring workloads).
+    pub fn from_forward(phmm: &Phmm, res: &ForwardResult, steps: StepKind) -> Workload {
+        let t = res.rows.len() as u64;
+        Workload {
+            total_steps: t,
+            avg_active_states: res.states_processed as f64 / t.max(1) as f64,
+            avg_degree: if res.states_processed > 0 {
+                res.edges_processed as f64 / res.states_processed as f64
+            } else {
+                phmm.mean_out_degree()
+            },
+            sigma: phmm.sigma(),
+            n_states: phmm.n_states() as u64,
+            chunk_len: phmm.position.last().map(|&p| p as usize + 1).unwrap_or(0),
+            steps,
+            n_sequences: 1,
+            n_iterations: 1,
+        }
+    }
+
+    /// Synthesize a workload for design-space sweeps (Fig. 8).
+    pub fn synthetic(
+        total_steps: u64,
+        avg_active_states: f64,
+        avg_degree: f64,
+        sigma: usize,
+        chunk_len: usize,
+        steps: StepKind,
+    ) -> Workload {
+        Workload {
+            total_steps,
+            avg_active_states,
+            avg_degree,
+            sigma,
+            n_states: (chunk_len * 4) as u64,
+            chunk_len,
+            steps,
+            n_sequences: 1,
+            n_iterations: 1,
+        }
+    }
+
+    /// The paper's canonical error-correction operating point: chunked
+    /// DNA training at filter size 500 with the EC design's ~7 degree.
+    pub fn ec_canonical() -> Workload {
+        Workload::synthetic(1000, 500.0, 7.0, 4, 650, StepKind::Training)
+    }
+
+    /// Protein-search operating point: ~94-residue profiles, Σ=20,
+    /// Forward+Backward only.
+    pub fn protein_canonical() -> Workload {
+        let mut w = Workload::synthetic(94, 280.0, 3.0, 20, 94, StepKind::ForwardBackward);
+        w.n_states = 282;
+        w
+    }
+
+    /// Total edge traversals per Baum-Welch pass.
+    pub fn total_edges(&self) -> f64 {
+        self.total_steps as f64 * self.avg_active_states * self.avg_degree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baumwelch::{forward_sparse, train, FilterConfig, ForwardOptions, TrainConfig};
+    use crate::phmm::EcDesignParams;
+    use crate::seq::Sequence;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    #[test]
+    fn from_forward_extracts_counts() {
+        let mut rng = XorShift::new(1);
+        let reference = Sequence::from_symbols("r", testutil::random_seq(&mut rng, 100, 4));
+        let g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 50, 4));
+        let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+        let wl = Workload::from_forward(&g, &fwd, StepKind::ForwardBackward);
+        assert_eq!(wl.total_steps, 50);
+        assert!(wl.avg_active_states > 1.0);
+        assert!(wl.avg_degree > 1.0 && wl.avg_degree < 12.0);
+        assert_eq!(wl.sigma, 4);
+    }
+
+    #[test]
+    fn from_train_result_with_filter() {
+        let mut rng = XorShift::new(2);
+        let reference = Sequence::from_symbols("r", testutil::random_seq(&mut rng, 200, 4));
+        let mut g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let reads: Vec<Sequence> = (0..3)
+            .map(|_| Sequence::from_symbols("o", testutil::random_seq(&mut rng, 100, 4)))
+            .collect();
+        let res = train(
+            &mut g,
+            &reads,
+            &TrainConfig { max_iters: 1, tol: 0.0, filter: FilterConfig::Sort { size: 64 } },
+        )
+        .unwrap();
+        let wl = Workload::from_train_result(&g, &res, 3);
+        assert!(wl.avg_active_states <= 64.0 + 1e-9);
+        assert_eq!(wl.steps, StepKind::Training);
+        assert!(wl.total_steps >= 300);
+    }
+
+    #[test]
+    fn total_edges_consistent() {
+        let wl = Workload::ec_canonical();
+        let expect = 1000.0 * 500.0 * 7.0;
+        assert!((wl.total_edges() - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,304 @@
+//! Use case 1 — error correction (Apollo, §2.3 / §5.4).
+//!
+//! Pipeline: chunk the assembly (§Supplemental S2: 150–1000 base
+//! chunks), map reads to chunks with the minimizer mapper, build one
+//! EC-design pHMM per chunk, train it with the mapped read segments
+//! (Baum-Welch + state filter), decode the Viterbi consensus, and
+//! concatenate the corrected chunks.
+
+use std::time::Instant;
+
+use crate::baumwelch::{train, FilterConfig, TrainConfig};
+use crate::error::Result;
+use crate::mapper::{MapperConfig, MinimizerIndex};
+use crate::phmm::{EcDesignParams, Phmm};
+use crate::seq::Sequence;
+use crate::viterbi::consensus;
+
+use super::timing::AppTimings;
+
+/// Error-correction configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CorrectionConfig {
+    /// Chunk length in bases (the paper's sweet spot: 650).
+    pub chunk_len: usize,
+    /// EC pHMM design parameters.
+    pub design: EcDesignParams,
+    /// EM iterations per chunk.
+    pub max_iters: usize,
+    /// State filter (Apollo uses best-500; histogram is ApHMM's mode).
+    pub filter: FilterConfig,
+    /// Minimum mapped reads to attempt correction of a chunk.
+    pub min_reads: usize,
+    /// Extra read bases taken past the lifted chunk end when slicing.
+    /// Keep at 0 with anchor-lifted mapping: every surplus base piles up
+    /// in the insertion chain of the final positions and trains phantom
+    /// insertions into the consensus (measured: +9 bases of bloat per
+    /// chunk at margin 12).
+    pub margin: usize,
+    /// Mapper settings.
+    pub mapper: MapperConfig,
+}
+
+impl Default for CorrectionConfig {
+    fn default() -> Self {
+        CorrectionConfig {
+            chunk_len: 650,
+            design: EcDesignParams::default(),
+            max_iters: 2,
+            filter: FilterConfig::histogram_default(),
+            min_reads: 3,
+            margin: 0,
+            mapper: MapperConfig::default(),
+        }
+    }
+}
+
+/// Output of a correction run.
+#[derive(Clone, Debug)]
+pub struct CorrectionReport {
+    /// The corrected assembly.
+    pub corrected: Sequence,
+    /// Chunks processed / chunks actually trained.
+    pub chunks_total: usize,
+    /// Chunks with enough coverage to train.
+    pub chunks_trained: usize,
+    /// Reads that mapped to the assembly.
+    pub reads_mapped: usize,
+    /// Step-level timings (Fig. 2).
+    pub timings: AppTimings,
+    /// Accelerator workload counters aggregated over chunks.
+    pub states_processed: u64,
+    /// Edge traversals aggregated over chunks.
+    pub edges_processed: u64,
+    /// Total Baum-Welch timesteps.
+    pub timesteps: u64,
+}
+
+/// Run Apollo-style error correction of `assembly` using `reads`.
+pub fn correct_assembly(
+    assembly: &Sequence,
+    reads: &[Sequence],
+    cfg: &CorrectionConfig,
+) -> Result<CorrectionReport> {
+    let mut timings = AppTimings::default();
+
+    // ---- Mapping (non-BW time) ----
+    let t0 = Instant::now();
+    let index = MinimizerIndex::build(assembly, cfg.mapper);
+    let mut placements: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
+    for (ri, read) in reads.iter().enumerate() {
+        if let Some(m) = index.map(read) {
+            placements.push((ri, m));
+        }
+    }
+    timings.other_ns += t0.elapsed().as_nanos();
+    let reads_mapped = placements.len();
+
+    let n_chunks = assembly.len().div_ceil(cfg.chunk_len.max(1));
+    let mut corrected_parts: Vec<Sequence> = Vec::with_capacity(n_chunks);
+    let mut chunks_trained = 0usize;
+    let mut states_processed = 0u64;
+    let mut edges_processed = 0u64;
+    let mut timesteps = 0u64;
+
+    for c in 0..n_chunks {
+        let lo = c * cfg.chunk_len;
+        let hi = ((c + 1) * cfg.chunk_len).min(assembly.len());
+
+        // ---- Gather read segments overlapping this chunk (non-BW) ----
+        let t1 = Instant::now();
+        let chunk_ref = assembly.slice(lo, hi);
+        let mut segments: Vec<Sequence> = Vec::new();
+        for (ri, m) in &placements {
+            // Only reads that cover the chunk *start* can anchor at the
+            // graph's initial states (Apollo anchors each read at its
+            // aligned position; our chunk graphs anchor at position 0).
+            // Reads ending inside the chunk are fine — the forward pass
+            // may end anywhere in the graph.
+            if m.ref_start <= lo && m.ref_end > lo {
+                let read = &reads[*ri];
+                // Lift the chunk bounds through the mapping anchors
+                // (indel drift makes linear offsets wrong on long
+                // noisy reads); small trailing margin for residual
+                // drift — longer tails would train as phantom
+                // insertions near the chunk end.
+                let seg_start = m.lift_to_read(lo).min(read.len());
+                let seg_end = (m.lift_to_read(hi) + cfg.margin).min(read.len());
+                if seg_end > seg_start + 16 {
+                    segments.push(read.slice(seg_start, seg_end));
+                }
+            }
+        }
+        timings.other_ns += t1.elapsed().as_nanos();
+
+        if segments.len() < cfg.min_reads || chunk_ref.len() < 8 {
+            corrected_parts.push(chunk_ref);
+            continue;
+        }
+
+        // ---- Build + train + decode ----
+        let t2 = Instant::now();
+        let mut graph = Phmm::error_correction(&chunk_ref, &cfg.design)?;
+        timings.other_ns += t2.elapsed().as_nanos();
+
+        let train_cfg = TrainConfig { max_iters: cfg.max_iters, tol: 1e-3, filter: cfg.filter };
+        let res = train(&mut graph, &segments, &train_cfg)?;
+        timings.forward_ns += res.forward_ns;
+        timings.backward_update_ns += res.backward_update_ns;
+        timings.maximize_ns += res.maximize_ns;
+        states_processed += res.states_processed;
+        edges_processed += res.edges_processed;
+        timesteps += res.timesteps;
+
+        let t3 = Instant::now();
+        let decoded = consensus(&graph)?;
+        corrected_parts.push(decoded.consensus);
+        timings.other_ns += t3.elapsed().as_nanos();
+        chunks_trained += 1;
+    }
+
+    let mut data = Vec::with_capacity(assembly.len() + 64);
+    for part in &corrected_parts {
+        data.extend_from_slice(&part.data);
+    }
+    Ok(CorrectionReport {
+        corrected: Sequence::from_symbols(format!("{}_corrected", assembly.id), data),
+        chunks_total: n_chunks,
+        chunks_trained,
+        reads_mapped,
+        timings,
+        states_processed,
+        edges_processed,
+        timesteps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{generate_genome, simulate_reads, ErrorProfile, XorShift};
+
+    /// Edit-distance (banded Levenshtein) for accuracy checks.
+    pub(crate) fn edit_distance(a: &[u8], b: &[u8], band: usize) -> usize {
+        let n = a.len();
+        let m = b.len();
+        if n == 0 {
+            return m;
+        }
+        let inf = usize::MAX / 2;
+        let mut prev = vec![inf; m + 1];
+        let mut cur = vec![inf; m + 1];
+        for (j, p) in prev.iter_mut().enumerate().take(m + 1) {
+            *p = j;
+        }
+        for i in 1..=n {
+            cur.iter_mut().for_each(|x| *x = inf);
+            let lo = i.saturating_sub(band).max(1);
+            let hi = (i + band).min(m);
+            if lo == 1 {
+                cur[0] = i;
+            }
+            for j in lo..=hi {
+                let cost = usize::from(a[i - 1] != b[j - 1]);
+                cur[j] = (prev[j - 1] + cost).min(prev[j] + 1).min(cur[j - 1] + 1);
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        prev[m]
+    }
+
+    fn corrupt(rng: &mut XorShift, seq: &Sequence, rate: f64) -> Sequence {
+        let mut data = Vec::with_capacity(seq.len());
+        for &b in &seq.data {
+            if rng.chance(rate) {
+                match rng.below(3) {
+                    0 => data.push((b + 1 + rng.below(3) as u8) % 4), // sub
+                    1 => {
+                        data.push(b);
+                        data.push(rng.below(4) as u8); // ins
+                    }
+                    _ => {} // del
+                }
+            } else {
+                data.push(b);
+            }
+        }
+        Sequence::from_symbols("noisy_assembly", data)
+    }
+
+    #[test]
+    fn end_to_end_correction_improves_assembly() {
+        let mut rng = XorShift::new(99);
+        let truth = generate_genome(&mut rng, 1500);
+        let assembly = corrupt(&mut rng, &truth, 0.05);
+        let reads = simulate_reads(
+            &mut rng,
+            &truth,
+            12.0,
+            700,
+            &ErrorProfile { sub: 0.02, ins: 0.02, del: 0.02, ins_ext: 0.2 },
+        );
+        let read_seqs: Vec<Sequence> = reads.into_iter().map(|r| r.seq).collect();
+        let cfg = CorrectionConfig { chunk_len: 300, max_iters: 2, ..Default::default() };
+        let report = correct_assembly(&assembly, &read_seqs, &cfg).unwrap();
+
+        let before = edit_distance(&assembly.data, &truth.data, 200);
+        let after = edit_distance(&report.corrected.data, &truth.data, 200);
+        assert!(report.chunks_trained > 0, "no chunk trained");
+        assert!(
+            after < before,
+            "correction failed: before={before} after={after} (trained {}/{} chunks)",
+            report.chunks_trained,
+            report.chunks_total
+        );
+    }
+
+    #[test]
+    fn bw_dominates_runtime_like_fig2() {
+        // Fig. 2: error correction spends ~98 % in Baum-Welch; our
+        // reimplementation must be clearly BW-dominated too.
+        let mut rng = XorShift::new(7);
+        let truth = generate_genome(&mut rng, 1200);
+        let assembly = corrupt(&mut rng, &truth, 0.03);
+        let reads = simulate_reads(&mut rng, &truth, 10.0, 600, &ErrorProfile::pacbio());
+        let read_seqs: Vec<Sequence> = reads.into_iter().map(|r| r.seq).collect();
+        let cfg = CorrectionConfig { chunk_len: 400, ..Default::default() };
+        let report = correct_assembly(&assembly, &read_seqs, &cfg).unwrap();
+        assert!(
+            report.timings.bw_fraction() > 0.6,
+            "bw fraction {}",
+            report.timings.bw_fraction()
+        );
+    }
+
+    #[test]
+    fn uncovered_chunks_pass_through() {
+        let mut rng = XorShift::new(8);
+        let assembly = generate_genome(&mut rng, 900);
+        let report = correct_assembly(&assembly, &[], &Default::default()).unwrap();
+        assert_eq!(report.chunks_trained, 0);
+        assert_eq!(report.corrected.data, assembly.data);
+    }
+
+    #[test]
+    fn workload_counters_populated() {
+        let mut rng = XorShift::new(9);
+        let truth = generate_genome(&mut rng, 800);
+        let reads = simulate_reads(&mut rng, &truth, 8.0, 400, &ErrorProfile::pacbio());
+        let read_seqs: Vec<Sequence> = reads.into_iter().map(|r| r.seq).collect();
+        let cfg = CorrectionConfig { chunk_len: 400, ..Default::default() };
+        let report = correct_assembly(&truth, &read_seqs, &cfg).unwrap();
+        assert!(report.states_processed > 0);
+        assert!(report.edges_processed > report.states_processed);
+        assert!(report.timesteps > 0);
+    }
+
+    #[test]
+    fn edit_distance_sanity() {
+        assert_eq!(edit_distance(b"ACGT", b"ACGT", 8), 0);
+        assert_eq!(edit_distance(b"ACGT", b"AGGT", 8), 1);
+        assert_eq!(edit_distance(b"ACGT", b"ACT", 8), 1);
+        assert_eq!(edit_distance(b"", b"ACT", 8), 3);
+    }
+}

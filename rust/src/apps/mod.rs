@@ -1,0 +1,13 @@
+//! The paper's three end-to-end use cases (§2.3, §5.4–5.6), each
+//! instrumented with step-level timing so the Fig. 2 breakdown and the
+//! Fig. 9/11 application splits come from real measurements.
+
+mod error_correction;
+mod msa;
+mod protein_search;
+mod timing;
+
+pub use error_correction::{correct_assembly, CorrectionConfig, CorrectionReport};
+pub use msa::{align_all, msa_identity, AlignedRow, MsaConfig, MsaReport};
+pub use protein_search::{FamilyDb, SearchConfig, SearchHit, SearchReport};
+pub use timing::AppTimings;

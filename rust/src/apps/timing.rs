@@ -1,0 +1,70 @@
+//! Step-level timing shared by the three applications.
+
+/// Wall-time breakdown of an application run, split the way Fig. 2
+/// splits it: the three Baum-Welch steps vs everything else.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AppTimings {
+    /// Forward-calculation nanoseconds.
+    pub forward_ns: u128,
+    /// Backward + parameter-update nanoseconds (fused pass).
+    pub backward_update_ns: u128,
+    /// Maximization nanoseconds.
+    pub maximize_ns: u128,
+    /// Non-Baum-Welch nanoseconds (graph construction, I/O, decode,
+    /// mapping, pre-filters...).
+    pub other_ns: u128,
+}
+
+impl AppTimings {
+    /// Total nanoseconds.
+    pub fn total_ns(&self) -> u128 {
+        self.forward_ns + self.backward_update_ns + self.maximize_ns + self.other_ns
+    }
+
+    /// Fraction of time inside the Baum-Welch algorithm (Fig. 2's
+    /// headline statistic: 45.76 % – 98.57 %).
+    pub fn bw_fraction(&self) -> f64 {
+        let total = self.total_ns();
+        if total == 0 {
+            return 0.0;
+        }
+        (self.forward_ns + self.backward_update_ns + self.maximize_ns) as f64 / total as f64
+    }
+
+    /// Merge another timing block.
+    pub fn merge(&mut self, other: &AppTimings) {
+        self.forward_ns += other.forward_ns;
+        self.backward_update_ns += other.backward_update_ns;
+        self.maximize_ns += other.maximize_ns;
+        self.other_ns += other.other_ns;
+    }
+
+    /// Seconds split `(bw, other)` — the Fig. 9 [`crate::accel::AppSplit`]
+    /// inputs.
+    pub fn split_seconds(&self) -> (f64, f64) {
+        (
+            (self.forward_ns + self.backward_update_ns + self.maximize_ns) as f64 / 1e9,
+            self.other_ns as f64 / 1e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_and_merge() {
+        let mut a = AppTimings { forward_ns: 50, backward_update_ns: 30, maximize_ns: 10, other_ns: 10 };
+        assert!((a.bw_fraction() - 0.9).abs() < 1e-12);
+        let b = AppTimings { other_ns: 100, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.total_ns(), 200);
+        assert!((a.bw_fraction() - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_timings_are_zero() {
+        assert_eq!(AppTimings::default().bw_fraction(), 0.0);
+    }
+}

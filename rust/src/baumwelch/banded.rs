@@ -1,0 +1,341 @@
+//! Dense banded Baum-Welch engine.
+//!
+//! Rust mirror of the L2 JAX model (`python/compile/model.py`): the same
+//! scaled forward scan and fused backward+update scan over the banded
+//! encoding, in f32 like the AOT artifacts.  The PJRT runtime
+//! (`crate::runtime`) is a drop-in replacement for [`BandedEngine`]
+//! (same inputs, same outputs), which is exactly what the parity
+//! integration test asserts.
+
+use super::EPS;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::BandedPhmm;
+use crate::seq::Sequence;
+
+/// Raw update sums in banded layout (mirrors `model.baum_welch_sums`).
+#[derive(Clone, Debug)]
+pub struct BandedBwSums {
+    /// ξ sums `[N × W]`.
+    pub xi_band: Vec<f32>,
+    /// Eq. 3 denominators `[N]`.
+    pub trans_den: Vec<f32>,
+    /// Emission numerators `[N × Σ]`.
+    pub e_num: Vec<f32>,
+    /// Eq. 4 denominators `[N]`.
+    pub gamma_den: Vec<f32>,
+    /// log P(S | G).
+    pub loglik: f32,
+}
+
+impl BandedBwSums {
+    /// Zeroed sums for accumulating across observations.
+    pub fn zeros(n: usize, w: usize, sigma: usize) -> Self {
+        BandedBwSums {
+            xi_band: vec![0.0; n * w],
+            trans_den: vec![0.0; n],
+            e_num: vec![0.0; n * sigma],
+            gamma_den: vec![0.0; n],
+            loglik: 0.0,
+        }
+    }
+
+    /// Elementwise accumulate (batch EM over many reads).
+    pub fn add(&mut self, other: &BandedBwSums) {
+        for (a, b) in self.xi_band.iter_mut().zip(&other.xi_band) {
+            *a += b;
+        }
+        for (a, b) in self.trans_den.iter_mut().zip(&other.trans_den) {
+            *a += b;
+        }
+        for (a, b) in self.e_num.iter_mut().zip(&other.e_num) {
+            *a += b;
+        }
+        for (a, b) in self.gamma_den.iter_mut().zip(&other.gamma_den) {
+            *a += b;
+        }
+        self.loglik += other.loglik;
+    }
+
+    /// Maximization into a banded parameter set (rows renormalized;
+    /// untouched states keep their old parameters).
+    pub fn apply(&self, banded: &mut BandedPhmm) {
+        let (n, w, sigma) = (banded.n, banded.w, banded.sigma);
+        for j in 0..n {
+            if self.trans_den[j] <= EPS {
+                continue;
+            }
+            let row = &self.xi_band[j * w..(j + 1) * w];
+            let row_sum: f32 = row.iter().sum();
+            if row_sum <= EPS {
+                continue;
+            }
+            for x in 0..w {
+                // Keep structural zeros: never create new transitions.
+                if banded.a_band[j * w + x] > 0.0 {
+                    banded.a_band[j * w + x] = row[x] / row_sum;
+                }
+            }
+        }
+        for i in 0..n {
+            if self.gamma_den[i] <= EPS {
+                continue;
+            }
+            let row = &self.e_num[i * sigma..(i + 1) * sigma];
+            let row_sum: f32 = row.iter().sum();
+            if row_sum <= EPS {
+                continue;
+            }
+            for c in 0..sigma {
+                banded.emit[i * sigma + c] = row[c] / row_sum;
+            }
+        }
+    }
+}
+
+/// The dense banded compute engine.
+pub struct BandedEngine;
+
+impl BandedEngine {
+    /// Scaled forward pass; returns `(f_rows [T×N], scales [T], loglik)`.
+    pub fn forward(b: &BandedPhmm, seq: &Sequence) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+        let (n, w) = (b.n, b.w);
+        let t_len = seq.len();
+        if t_len == 0 {
+            return Err(ApHmmError::Numerical("empty observation sequence".into()));
+        }
+        let mut f_rows = vec![0.0f32; t_len * n];
+        let mut scales = vec![0.0f32; t_len];
+        let mut loglik = 0.0f64;
+        // t = 0.
+        {
+            let s0 = seq.data[0] as usize;
+            let mut c = 0.0f32;
+            for i in 0..n {
+                let v = b.f_init[i] * b.e(i, s0);
+                f_rows[i] = v;
+                c += v;
+            }
+            if c <= EPS {
+                return Err(ApHmmError::Numerical("dead start in banded forward".into()));
+            }
+            for i in 0..n {
+                f_rows[i] /= c;
+            }
+            scales[0] = c;
+            loglik += (c as f64).ln();
+        }
+        for t in 1..t_len {
+            let s_t = seq.data[t] as usize;
+            let (prev_rows, cur_rows) = f_rows.split_at_mut(t * n);
+            let prev = &prev_rows[(t - 1) * n..];
+            let cur = &mut cur_rows[..n];
+            // Banded scatter: cur[j + x] += prev[j] * a[j, x].
+            for j in 0..n {
+                let fj = prev[j];
+                if fj == 0.0 {
+                    continue;
+                }
+                let row = &b.a_band[j * w..(j + 1) * w];
+                let hi = w.min(n - j);
+                for x in 0..hi {
+                    cur[j + x] += fj * row[x];
+                }
+            }
+            let mut c = 0.0f32;
+            for i in 0..n {
+                cur[i] *= b.e(i, s_t);
+                c += cur[i];
+            }
+            if c <= EPS {
+                return Err(ApHmmError::Numerical(format!("banded forward died at t={t}")));
+            }
+            let inv = 1.0 / c;
+            for i in 0..n {
+                cur[i] *= inv;
+            }
+            scales[t] = c;
+            loglik += (c as f64).ln();
+        }
+        Ok((f_rows, scales, loglik))
+    }
+
+    /// Forward-only score.
+    pub fn score(b: &BandedPhmm, seq: &Sequence) -> Result<f64> {
+        Ok(Self::forward(b, seq)?.2)
+    }
+
+    /// Full expectation pass (mirrors `model.baum_welch_sums`).
+    pub fn bw_sums(b: &BandedPhmm, seq: &Sequence) -> Result<BandedBwSums> {
+        let (n, w, sigma) = (b.n, b.w, b.sigma);
+        let t_len = seq.len();
+        let (f_rows, scales, loglik) = Self::forward(b, seq)?;
+        let mut sums = BandedBwSums::zeros(n, w, sigma);
+        sums.loglik = loglik as f32;
+
+        let mut b_next = vec![1.0f32; n]; // B̂_{T-1} = 1
+        let mut b_cur = vec![0.0f32; n];
+        // γ at t = T-1.
+        {
+            let f_last = &f_rows[(t_len - 1) * n..];
+            let s_t = seq.data[t_len - 1] as usize;
+            for i in 0..n {
+                let g = f_last[i];
+                sums.gamma_den[i] += g;
+                sums.e_num[i * sigma + s_t] += g;
+            }
+        }
+        for t in (0..t_len.saturating_sub(1)).rev() {
+            let s_next = seq.data[t + 1] as usize;
+            let s_t = seq.data[t] as usize;
+            let inv_c = 1.0 / scales[t + 1];
+            let f_t = &f_rows[t * n..(t + 1) * n];
+            // eb[i] = e(i, s_{t+1}) * B̂_{t+1}(i)
+            // fused: m = a[j,x] * eb[j+x]; b_cur[j] = Σ m / c;
+            //        xi[j,x] += f_t[j] * m / c.
+            for j in 0..n {
+                let row = &b.a_band[j * w..(j + 1) * w];
+                let hi = w.min(n - j);
+                let mut acc = 0.0f32;
+                let fj = f_t[j];
+                for x in 0..hi {
+                    let a = row[x];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let to = j + x;
+                    let m = a * b.e(to, s_next) * b_next[to] * inv_c;
+                    acc += m;
+                    sums.xi_band[j * w + x] += fj * m;
+                }
+                b_cur[j] = acc;
+                let g = fj * acc;
+                sums.trans_den[j] += g;
+                sums.gamma_den[j] += g;
+                sums.e_num[j * sigma + s_t] += g;
+            }
+            std::mem::swap(&mut b_next, &mut b_cur);
+        }
+        Ok(sums)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baumwelch::sparse::{forward_sparse, ForwardOptions};
+    use crate::baumwelch::update::BwAccumulators;
+    use crate::phmm::Phmm;
+    use crate::testutil;
+
+    fn setup(rng: &mut crate::sim::XorShift, rl: usize, ol: usize) -> (Phmm, Sequence) {
+        let data = testutil::random_seq(rng, rl, 4);
+        let g = Phmm::error_correction(&Sequence::from_symbols("r", data), &Default::default())
+            .unwrap();
+        let obs = Sequence::from_symbols("o", testutil::random_seq(rng, ol, 4));
+        (g, obs)
+    }
+
+    #[test]
+    fn banded_forward_matches_sparse_unfiltered() {
+        testutil::check(15, |rng| {
+            let __h0 = rng.range(4, 40);
+            let __h1 = rng.range(2, 25);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let banded = g.to_banded().unwrap();
+            let sparse_ll = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap().loglik;
+            let banded_ll = BandedEngine::score(&banded, &obs).unwrap();
+            testutil::assert_close(banded_ll, sparse_ll, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn banded_sums_match_sparse_accumulators() {
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(4, 25);
+            let __h1 = rng.range(3, 15);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let banded = g.to_banded().unwrap();
+            let sums = BandedEngine::bw_sums(&banded, &obs).unwrap();
+
+            let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            let mut acc = BwAccumulators::new(&g);
+            acc.accumulate(&g, &obs, &fwd).unwrap();
+
+            // Compare xi through the CSR <-> band mapping.
+            for j in 0..g.n_states() {
+                for e in g.out_ptr[j] as usize..g.out_ptr[j + 1] as usize {
+                    let x = g.out_to[e] as usize - j;
+                    testutil::assert_close(
+                        sums.xi_band[j * banded.w + x] as f64,
+                        acc.xi[e],
+                        5e-3,
+                        1e-5,
+                    );
+                }
+            }
+            let gd: Vec<f64> = sums.gamma_den.iter().map(|&x| x as f64).collect();
+            testutil::assert_all_close(&gd, &acc.gamma_den, 5e-3, 1e-5);
+        });
+    }
+
+    #[test]
+    fn padding_does_not_change_results() {
+        let mut rng = crate::sim::XorShift::new(42);
+        let (g, obs) = setup(&mut rng, 20, 12);
+        let banded = g.to_banded().unwrap();
+        let padded = banded.pad_to(banded.n + 37, banded.w + 5).unwrap();
+        let a = BandedEngine::bw_sums(&banded, &obs).unwrap();
+        let b = BandedEngine::bw_sums(&padded, &obs).unwrap();
+        testutil::assert_close(a.loglik as f64, b.loglik as f64, 1e-5, 1e-6);
+        for j in 0..banded.n {
+            for x in 0..banded.w {
+                testutil::assert_close(
+                    a.xi_band[j * banded.w + x] as f64,
+                    b.xi_band[j * padded.w + x] as f64,
+                    1e-4,
+                    1e-6,
+                );
+            }
+        }
+        // Padded region stays exactly zero.
+        assert!(b.gamma_den[banded.n..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn apply_then_score_does_not_decrease() {
+        testutil::check(8, |rng| {
+            let __h0 = rng.range(5, 20);
+            let __h1 = rng.range(4, 12);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let mut banded = g.to_banded().unwrap();
+            let ll0 = BandedEngine::score(&banded, &obs).unwrap();
+            let sums = BandedEngine::bw_sums(&banded, &obs).unwrap();
+            sums.apply(&mut banded);
+            let ll1 = BandedEngine::score(&banded, &obs).unwrap();
+            assert!(ll1 >= ll0 - 1e-3, "EM decreased loglik {ll0} -> {ll1}");
+        });
+    }
+
+    #[test]
+    fn accumulated_sums_equal_per_read_sums() {
+        let mut rng = crate::sim::XorShift::new(5);
+        let (g, obs1) = setup(&mut rng, 15, 8);
+        let obs2 = Sequence::from_symbols("o2", testutil::random_seq(&mut rng, 6, 4));
+        let banded = g.to_banded().unwrap();
+        let mut total = BandedBwSums::zeros(banded.n, banded.w, banded.sigma);
+        let s1 = BandedEngine::bw_sums(&banded, &obs1).unwrap();
+        let s2 = BandedEngine::bw_sums(&banded, &obs2).unwrap();
+        total.add(&s1);
+        total.add(&s2);
+        testutil::assert_close(
+            total.loglik as f64,
+            (s1.loglik + s2.loglik) as f64,
+            1e-6,
+            1e-9,
+        );
+        let g1: f64 = s1.gamma_den.iter().map(|&x| x as f64).sum();
+        let g2: f64 = s2.gamma_den.iter().map(|&x| x as f64).sum();
+        let gt: f64 = total.gamma_den.iter().map(|&x| x as f64).sum();
+        testutil::assert_close(gt, g1 + g2, 1e-6, 1e-9);
+    }
+}

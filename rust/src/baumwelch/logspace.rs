@@ -1,0 +1,155 @@
+//! Log-space forward/backward — the correctness oracle.
+//!
+//! Dense, f64, no scaling tricks: numerically robust by construction and
+//! structurally independent of the scaled engines it validates.
+
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+#[inline]
+fn logadd(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+#[inline]
+fn ln(p: f32) -> f64 {
+    if p <= 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        (p as f64).ln()
+    }
+}
+
+/// Full log-forward matrix `[T × N]` (Eq. 1 in log space).
+pub fn log_forward(phmm: &Phmm, seq: &Sequence) -> Vec<f64> {
+    let n = phmm.n_states();
+    let t_len = seq.len();
+    let mut lf = vec![f64::NEG_INFINITY; t_len * n];
+    for i in 0..n {
+        lf[i] = ln(phmm.f_init[i]) + ln(phmm.emission(i, seq.data[0]));
+    }
+    for t in 1..t_len {
+        let (prev, cur) = lf.split_at_mut(t * n);
+        let prev = &prev[(t - 1) * n..];
+        let cur = &mut cur[..n];
+        for j in 0..n {
+            if prev[j] == f64::NEG_INFINITY {
+                continue;
+            }
+            for e in phmm.out_ptr[j] as usize..phmm.out_ptr[j + 1] as usize {
+                let to = phmm.out_to[e] as usize;
+                cur[to] = logadd(cur[to], prev[j] + ln(phmm.out_prob[e]));
+            }
+        }
+        for i in 0..n {
+            if cur[i] != f64::NEG_INFINITY {
+                cur[i] += ln(phmm.emission(i, seq.data[t]));
+            }
+        }
+    }
+    lf
+}
+
+/// Full log-backward matrix `[T × N]` (Eq. 2 in log space).
+pub fn log_backward(phmm: &Phmm, seq: &Sequence) -> Vec<f64> {
+    let n = phmm.n_states();
+    let t_len = seq.len();
+    let mut lb = vec![f64::NEG_INFINITY; t_len * n];
+    for i in 0..n {
+        lb[(t_len - 1) * n + i] = 0.0;
+    }
+    for t in (0..t_len - 1).rev() {
+        for j in 0..n {
+            let mut acc = f64::NEG_INFINITY;
+            for e in phmm.out_ptr[j] as usize..phmm.out_ptr[j + 1] as usize {
+                let to = phmm.out_to[e] as usize;
+                acc = logadd(
+                    acc,
+                    ln(phmm.out_prob[e])
+                        + ln(phmm.emission(to, seq.data[t + 1]))
+                        + lb[(t + 1) * n + to],
+                );
+            }
+            lb[t * n + j] = acc;
+        }
+    }
+    lb
+}
+
+/// `log P(S | G)` from the log-forward matrix.
+pub fn log_likelihood(phmm: &Phmm, seq: &Sequence) -> f64 {
+    let n = phmm.n_states();
+    let lf = log_forward(phmm, seq);
+    let last = &lf[(seq.len() - 1) * n..];
+    last.iter().copied().fold(f64::NEG_INFINITY, logadd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::testutil;
+
+    #[test]
+    fn forward_backward_consistency() {
+        // Σ_i F_t(i) B_t(i) = P(S) for every t — the classic identity.
+        testutil::check(15, |rng| {
+            let __h0 = rng.range(4, 20);
+            let data = testutil::random_seq(rng, __h0, 4);
+            let g = Phmm::error_correction(
+                &crate::seq::Sequence::from_symbols("r", data),
+                &EcDesignParams::default(),
+            )
+            .unwrap();
+            let obs_len = rng.range(2, 12);
+            let obs = crate::seq::Sequence::from_symbols(
+                "o",
+                testutil::random_seq(rng, obs_len, 4),
+            );
+            let lf = log_forward(&g, &obs);
+            let lb = log_backward(&g, &obs);
+            let n = g.n_states();
+            let lp = log_likelihood(&g, &obs);
+            for t in 0..obs.len() {
+                let mut acc = f64::NEG_INFINITY;
+                for i in 0..n {
+                    let v = lf[t * n + i] + lb[t * n + i];
+                    if v != f64::NEG_INFINITY {
+                        acc = super::logadd(acc, v);
+                    }
+                }
+                testutil::assert_close(acc, lp, 1e-9, 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn single_path_likelihood_is_product() {
+        // A 2-state chain with deterministic transitions: P(S) is the
+        // product of f_init, transition and emissions along the path.
+        use crate::phmm::{Phmm, PhmmDesign, StateKind};
+        use crate::seq::DNA;
+        let g = Phmm {
+            design: PhmmDesign::ErrorCorrection,
+            alphabet: DNA,
+            kinds: vec![StateKind::Match; 2],
+            position: vec![0, 1],
+            out_ptr: vec![0, 1, 1],
+            out_to: vec![1],
+            out_prob: vec![1.0],
+            emissions: vec![0.7, 0.1, 0.1, 0.1, 0.1, 0.7, 0.1, 0.1],
+            f_init: vec![1.0, 0.0],
+        };
+        g.validate().unwrap();
+        let obs = crate::seq::Sequence::from_symbols("o", vec![0, 1]);
+        let lp = log_likelihood(&g, &obs);
+        testutil::assert_close(lp, (0.7f64 * 0.7).ln(), 1e-6, 1e-9);
+    }
+}

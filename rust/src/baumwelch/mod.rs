@@ -1,0 +1,34 @@
+//! The Baum-Welch algorithm over pHMM graphs (§2.2).
+//!
+//! Two engines with identical semantics:
+//!
+//! * [`sparse`] — CSR-based engine with per-timestep *state filtering*
+//!   (sort-based, the software baseline; or histogram-based, ApHMM's
+//!   hardware mechanism in software form).  This is the faithful
+//!   reimplementation of what Apollo/HMMER do on CPU and the workload
+//!   the accelerator model is driven by.
+//! * [`banded`] — dense banded engine mirroring the L2 JAX model
+//!   bit-for-bit (same scaled recurrences, same raw update sums); the
+//!   PJRT runtime slots in as a drop-in replacement for it.
+//!
+//! Shared numerics: per-timestep scaling (DESIGN.md §Numerics); raw
+//! expectation sums accumulated across observation sequences and divided
+//! once per EM iteration ([`BwAccumulators`]).  [`logspace`] provides an
+//! independent log-space oracle used by the test suite.
+
+pub mod banded;
+mod filter;
+mod logspace;
+mod sparse;
+mod train;
+mod update;
+
+pub use banded::{BandedBwSums, BandedEngine};
+pub use filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
+pub use logspace::{log_backward, log_forward, log_likelihood};
+pub use sparse::{forward_sparse, score_sparse, ForwardOptions, ForwardResult, SparseRow};
+pub use train::{train, TrainConfig, TrainResult};
+pub use update::BwAccumulators;
+
+/// Numerical floor guarding divisions.
+pub const EPS: f32 = 1e-30;

@@ -1,0 +1,321 @@
+//! Sparse (CSR) scaled forward pass with state filtering.
+//!
+//! This is the faithful CPU implementation of Eq. 1: per timestep the
+//! active-state set scatters probability mass along outgoing edges, the
+//! row is scaled to sum 1, and the filter truncates the active set.  It
+//! is both the "CPU-1" measured baseline of Figs. 10/11 and the workload
+//! description the accelerator model consumes.
+
+use super::filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
+use super::EPS;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+/// One scaled forward row: active states and their F̂ values.
+#[derive(Clone, Debug, Default)]
+pub struct SparseRow {
+    /// Active state indices (ascending).
+    pub idx: Vec<u32>,
+    /// Scaled forward values (aligned with `idx`).
+    pub val: Vec<f32>,
+}
+
+impl SparseRow {
+    /// Number of active states.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// True when the row is empty.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+}
+
+/// Options of the forward pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ForwardOptions {
+    /// State filter policy.
+    pub filter: FilterConfig,
+}
+
+impl Default for ForwardOptions {
+    fn default() -> Self {
+        ForwardOptions { filter: FilterConfig::None }
+    }
+}
+
+/// Output of the forward pass.
+#[derive(Clone, Debug)]
+pub struct ForwardResult {
+    /// Scaled forward rows, one per timestep.
+    pub rows: Vec<SparseRow>,
+    /// Per-timestep scale factors `c_t`.
+    pub scales: Vec<f32>,
+    /// `log P(S | G) = Σ log c_t`.
+    pub loglik: f64,
+    /// Filtering instrumentation.
+    pub filter_stats: FilterStats,
+    /// Total states processed (Σ_t active states) — the workload metric
+    /// consumed by the accelerator model.
+    pub states_processed: u64,
+    /// Total edges traversed (Σ_t Σ_active out-degree).
+    pub edges_processed: u64,
+}
+
+/// Scratch buffers reused across timesteps (no allocation in the loop).
+struct Scratch {
+    dense: Vec<f32>,
+    /// Incoming CSR (gather-form forward): row pointers per target.
+    in_ptr: Vec<u32>,
+    /// Source state of each incoming edge.
+    in_from: Vec<u32>,
+    /// Transition probability of each incoming edge.
+    in_prob: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(phmm: &Phmm) -> Self {
+        let (in_ptr, in_from, in_eidx) = phmm.incoming_csr();
+        let in_prob = in_eidx.iter().map(|&e| phmm.out_prob[e as usize]).collect();
+        Scratch { dense: vec![0.0; phmm.n_states()], in_ptr, in_from, in_prob }
+    }
+}
+
+/// Run the scaled, filtered forward pass of `seq` over `phmm`.
+pub fn forward_sparse(phmm: &Phmm, seq: &Sequence, opts: &ForwardOptions) -> Result<ForwardResult> {
+    if phmm.has_silent_states() {
+        return Err(ApHmmError::InvalidGraph("forward_sparse requires an emitting graph".into()));
+    }
+    if seq.is_empty() {
+        return Err(ApHmmError::Numerical("empty observation sequence".into()));
+    }
+    let n = phmm.n_states();
+    let t_len = seq.len();
+    let mut scratch = Scratch::new(phmm);
+    let mut hist = match opts.filter {
+        FilterConfig::Histogram { bins, .. } => Some(HistogramFilter::new(bins)),
+        _ => None,
+    };
+    let mut stats = FilterStats::default();
+    let mut rows: Vec<SparseRow> = Vec::with_capacity(t_len);
+    let mut scales: Vec<f32> = Vec::with_capacity(t_len);
+    let mut loglik = 0.0f64;
+    let mut states_processed = 0u64;
+    let mut edges_processed = 0u64;
+
+    // t = 0: initial distribution times emission.
+    {
+        let s0 = seq.data[0];
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &p) in phmm.f_init.iter().enumerate() {
+            if p > 0.0 {
+                let v = p * phmm.emission(i, s0);
+                if v > 0.0 {
+                    idx.push(i as u32);
+                    val.push(v);
+                }
+            }
+        }
+        let c: f32 = val.iter().sum();
+        if c <= 0.0 {
+            return Err(ApHmmError::Numerical("dead start: no state emits first char".into()));
+        }
+        val.iter_mut().for_each(|v| *v /= c);
+        apply_filter(&opts.filter, &mut hist, &mut idx, &mut val, &mut stats);
+        states_processed += idx.len() as u64;
+        scales.push(c);
+        loglik += (c as f64).ln();
+        rows.push(SparseRow { idx, val });
+    }
+
+    // Gather-form forward (§Perf in EXPERIMENTS.md): pHMM topology
+    // bounds every timestep's successors to the window
+    // [first_active, last_active + band_width), so instead of
+    // scattering along outgoing edges (random read-modify-writes) each
+    // window target gathers its incoming contributions — sequential
+    // reads of the incoming CSR, independent accumulators (better ILP),
+    // and no touched-list/sort bookkeeping.
+    let band = phmm.band_width();
+    let sigma = phmm.sigma();
+    for t in 1..t_len {
+        let s_t = seq.data[t] as usize;
+        let prev = rows.last().unwrap();
+        // Write the previous row into the dense buffer.
+        for (&i, &v) in prev.idx.iter().zip(prev.val.iter()) {
+            scratch.dense[i as usize] = v;
+        }
+        let win_lo = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
+        let win_hi = prev.idx.last().map(|&i| i as usize + band).unwrap_or(0).min(n);
+        let mut idx = Vec::with_capacity(win_hi - win_lo);
+        let mut val = Vec::with_capacity(win_hi - win_lo);
+        let mut c = 0.0f32;
+        // SAFETY: incoming-CSR invariants mirror the outgoing CSR
+        // (built by incoming_csr from a validated graph); window bounds
+        // are clamped to n.
+        unsafe {
+            for to in win_lo..win_hi {
+                let lo = *scratch.in_ptr.get_unchecked(to) as usize;
+                let hi = *scratch.in_ptr.get_unchecked(to + 1) as usize;
+                let mut acc = 0.0f32;
+                for e in lo..hi {
+                    let from = *scratch.in_from.get_unchecked(e) as usize;
+                    acc += scratch.dense.get_unchecked(from) * scratch.in_prob.get_unchecked(e);
+                }
+                edges_processed += (hi - lo) as u64;
+                if acc > 0.0 {
+                    let v = acc * phmm.emissions.get_unchecked(to * sigma + s_t);
+                    if v > 0.0 {
+                        idx.push(to as u32);
+                        val.push(v);
+                        c += v;
+                    }
+                }
+            }
+        }
+        // Clear the dense buffer at the previous row's entries.
+        for &i in prev.idx.iter() {
+            scratch.dense[i as usize] = 0.0;
+        }
+        if c <= EPS {
+            return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
+        }
+        let inv = 1.0 / c;
+        val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut hist, &mut idx, &mut val, &mut stats);
+        states_processed += idx.len() as u64;
+        scales.push(c);
+        loglik += (c as f64).ln();
+        rows.push(SparseRow { idx, val });
+    }
+
+    Ok(ForwardResult { rows, scales, loglik, filter_stats: stats, states_processed, edges_processed })
+}
+
+fn apply_filter(
+    cfg: &FilterConfig,
+    hist: &mut Option<HistogramFilter>,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+    stats: &mut FilterStats,
+) {
+    match cfg {
+        FilterConfig::None => {}
+        FilterConfig::Sort { size } => SortFilter::select(idx, val, *size, stats),
+        FilterConfig::Histogram { size, .. } => {
+            hist.as_mut().unwrap().select(idx, val, *size, stats)
+        }
+    }
+}
+
+/// Forward-only similarity score `log P(S | G)` (the inference path of
+/// protein family search / MSA).
+pub fn score_sparse(phmm: &Phmm, seq: &Sequence, opts: &ForwardOptions) -> Result<f64> {
+    Ok(forward_sparse(phmm, seq, opts)?.loglik)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baumwelch::logspace::log_likelihood;
+    use crate::phmm::EcDesignParams;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn ec_graph(rng: &mut XorShift, len: usize) -> Phmm {
+        let data = testutil::random_seq(rng, len, 4);
+        let seq = Sequence::from_symbols("ref", data);
+        Phmm::error_correction(&seq, &EcDesignParams::default()).unwrap()
+    }
+
+    #[test]
+    fn forward_rows_are_normalized() {
+        testutil::check(20, |rng| {
+            let __h0 = rng.range(5, 60);
+            let g = ec_graph(rng, __h0);
+            let __h0 = rng.range(2, 30);
+            let obs = Sequence::from_symbols("o", testutil::random_seq(rng, __h0, 4));
+            let r = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            for row in &r.rows {
+                let s: f32 = row.val.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+            }
+            assert_eq!(r.rows.len(), obs.len());
+            assert_eq!(r.scales.len(), obs.len());
+        });
+    }
+
+    #[test]
+    fn loglik_matches_logspace_oracle() {
+        testutil::check(20, |rng| {
+            let __h0 = rng.range(5, 40);
+            let g = ec_graph(rng, __h0);
+            let __h0 = rng.range(2, 20);
+            let obs = Sequence::from_symbols("o", testutil::random_seq(rng, __h0, 4));
+            let got = score_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            let want = log_likelihood(&g, &obs);
+            testutil::assert_close(got, want, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn identical_sequence_scores_higher_than_random() {
+        let mut rng = XorShift::new(77);
+        let data = testutil::random_seq(&mut rng, 50, 4);
+        let refseq = Sequence::from_symbols("ref", data.clone());
+        let g = Phmm::error_correction(&refseq, &EcDesignParams::default()).unwrap();
+        let same = score_sparse(&g, &refseq, &ForwardOptions::default()).unwrap();
+        let other =
+            Sequence::from_symbols("rnd", testutil::random_seq(&mut rng, 50, 4));
+        let diff = score_sparse(&g, &other, &ForwardOptions::default()).unwrap();
+        assert!(same > diff + 5.0, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn filter_bounds_active_states() {
+        let mut rng = XorShift::new(3);
+        let g = ec_graph(&mut rng, 300);
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 100, 4));
+        let opts = ForwardOptions { filter: FilterConfig::Sort { size: 50 } };
+        let r = forward_sparse(&g, &obs, &opts).unwrap();
+        for row in &r.rows {
+            assert!(row.len() <= 50);
+        }
+        assert!(r.filter_stats.calls > 0);
+    }
+
+    #[test]
+    fn histogram_filter_close_to_unfiltered_loglik() {
+        let mut rng = XorShift::new(5);
+        let data = testutil::random_seq(&mut rng, 200, 4);
+        let refseq = Sequence::from_symbols("ref", data);
+        let g = Phmm::error_correction(&refseq, &EcDesignParams::default()).unwrap();
+        // Observation close to the reference so mass is concentrated.
+        let exact = score_sparse(&g, &refseq, &ForwardOptions::default()).unwrap();
+        let opts = ForwardOptions { filter: FilterConfig::Histogram { size: 500, bins: 16 } };
+        let filt = score_sparse(&g, &refseq, &opts).unwrap();
+        assert!((exact - filt).abs() / exact.abs() < 0.02, "{exact} vs {filt}");
+    }
+
+    #[test]
+    fn empty_sequence_rejected() {
+        let mut rng = XorShift::new(9);
+        let g = ec_graph(&mut rng, 10);
+        let obs = Sequence::from_symbols("o", vec![]);
+        assert!(forward_sparse(&g, &obs, &ForwardOptions::default()).is_err());
+    }
+
+    #[test]
+    fn workload_counters_grow_with_sequence() {
+        let mut rng = XorShift::new(11);
+        let g = ec_graph(&mut rng, 100);
+        let short = Sequence::from_symbols("s", testutil::random_seq(&mut rng, 10, 4));
+        let long = Sequence::from_symbols("l", testutil::random_seq(&mut rng, 60, 4));
+        let r_s = forward_sparse(&g, &short, &ForwardOptions::default()).unwrap();
+        let r_l = forward_sparse(&g, &long, &ForwardOptions::default()).unwrap();
+        assert!(r_l.states_processed > r_s.states_processed);
+        assert!(r_l.edges_processed > r_s.edges_processed);
+    }
+}

@@ -1,0 +1,216 @@
+//! The EM training loop (expectation over many reads + one maximization
+//! per iteration), with step-level timing instrumentation that feeds
+//! Fig. 2 (execution-time breakdown) and the accelerator model.
+
+use std::time::Instant;
+
+use super::filter::{FilterConfig, FilterStats};
+use super::sparse::{forward_sparse, ForwardOptions};
+use super::update::BwAccumulators;
+use crate::error::Result;
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+/// Training configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    /// Maximum EM iterations.
+    pub max_iters: usize,
+    /// Stop when the mean per-read log-likelihood improves less than
+    /// this between iterations.
+    pub tol: f64,
+    /// State filter used during the forward pass.
+    pub filter: FilterConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { max_iters: 3, tol: 1e-3, filter: FilterConfig::None }
+    }
+}
+
+/// Training outcome and instrumentation.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    /// Mean per-read log-likelihood after each iteration's E step.
+    pub loglik_history: Vec<f64>,
+    /// Iterations actually run.
+    pub iters: usize,
+    /// Time in the forward calculation (Fig. 2's "Forward").
+    pub forward_ns: u128,
+    /// Time in the fused backward + update pass ("Backward" + "Updates").
+    pub backward_update_ns: u128,
+    /// Time in the maximization division.
+    pub maximize_ns: u128,
+    /// Filter instrumentation (subset of `forward_ns`).
+    pub filter_stats: FilterStats,
+    /// Σ over reads/timesteps of active states (accelerator workload).
+    pub states_processed: u64,
+    /// Σ over reads/timesteps of traversed edges.
+    pub edges_processed: u64,
+    /// Total timesteps executed (Σ over reads/iterations of read length).
+    pub timesteps: u64,
+}
+
+/// Train `phmm` on `reads` with batch EM.
+///
+/// Reads that become numerically dead under the current parameters (e.g.
+/// mis-mapped reads whose path probability underflows the filter) are
+/// skipped, matching Apollo's behaviour.
+pub fn train(phmm: &mut Phmm, reads: &[Sequence], cfg: &TrainConfig) -> Result<TrainResult> {
+    let opts = ForwardOptions { filter: cfg.filter };
+    let mut result = TrainResult {
+        loglik_history: Vec::new(),
+        iters: 0,
+        forward_ns: 0,
+        backward_update_ns: 0,
+        maximize_ns: 0,
+        filter_stats: FilterStats::default(),
+        states_processed: 0,
+        edges_processed: 0,
+        timesteps: 0,
+    };
+    let mut acc = BwAccumulators::new(phmm);
+    let mut prev_mean = f64::NEG_INFINITY;
+    for _iter in 0..cfg.max_iters {
+        acc.reset();
+        for read in reads {
+            if read.is_empty() {
+                continue;
+            }
+            let t0 = Instant::now();
+            let fwd = match forward_sparse(phmm, read, &opts) {
+                Ok(f) => f,
+                Err(_) => continue, // dead read under current parameters
+            };
+            result.forward_ns += t0.elapsed().as_nanos();
+            result.filter_stats.merge(&fwd.filter_stats);
+            result.states_processed += fwd.states_processed;
+            result.edges_processed += fwd.edges_processed;
+            result.timesteps += fwd.rows.len() as u64;
+
+            let t1 = Instant::now();
+            acc.accumulate(phmm, read, &fwd)?;
+            result.backward_update_ns += t1.elapsed().as_nanos();
+        }
+        if acc.n_observations == 0 {
+            break;
+        }
+        let mean_ll = acc.total_loglik / acc.n_observations as f64;
+        result.loglik_history.push(mean_ll);
+        result.iters += 1;
+
+        let t2 = Instant::now();
+        acc.apply(phmm)?;
+        result.maximize_ns += t2.elapsed().as_nanos();
+
+        if (mean_ll - prev_mean).abs() < cfg.tol {
+            break;
+        }
+        prev_mean = mean_ll;
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::sim::{simulate_read, ErrorProfile, XorShift};
+    use crate::testutil;
+
+    fn noisy_reads(
+        rng: &mut XorShift,
+        reference: &Sequence,
+        n: usize,
+    ) -> Vec<Sequence> {
+        (0..n)
+            .map(|i| {
+                simulate_read(rng, reference, 0, reference.len(), &ErrorProfile::pacbio(), i).seq
+            })
+            .collect()
+    }
+
+    #[test]
+    fn training_improves_mean_loglik() {
+        let mut rng = XorShift::new(31);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 80, 4));
+        let mut g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let reads = noisy_reads(&mut rng, &reference, 6);
+        let cfg = TrainConfig { max_iters: 4, tol: 1e-9, ..Default::default() };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        assert!(res.iters >= 2);
+        let h = &res.loglik_history;
+        assert!(
+            h.last().unwrap() >= h.first().unwrap(),
+            "loglik did not improve: {h:?}"
+        );
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn em_monotone_between_iterations() {
+        let mut rng = XorShift::new(37);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 50, 4));
+        let mut g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let reads = noisy_reads(&mut rng, &reference, 4);
+        let cfg = TrainConfig { max_iters: 5, tol: 0.0, ..Default::default() };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        for pair in res.loglik_history.windows(2) {
+            assert!(pair[1] >= pair[0] - 1e-3, "history {:?}", res.loglik_history);
+        }
+    }
+
+    #[test]
+    fn filtered_training_tracks_unfiltered() {
+        let mut rng = XorShift::new(41);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 120, 4));
+        let reads = noisy_reads(&mut rng, &reference, 5);
+
+        let mut g_exact = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let mut g_filt = g_exact.clone();
+        let exact = train(
+            &mut g_exact,
+            &reads,
+            &TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::None },
+        )
+        .unwrap();
+        let filt = train(
+            &mut g_filt,
+            &reads,
+            &TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::histogram_default() },
+        )
+        .unwrap();
+        let a = exact.loglik_history.last().unwrap();
+        let b = filt.loglik_history.last().unwrap();
+        assert!((a - b).abs() / a.abs() < 0.05, "exact {a} vs filtered {b}");
+        assert!(filt.filter_stats.calls > 0);
+    }
+
+    #[test]
+    fn timing_counters_populated() {
+        let mut rng = XorShift::new(43);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 60, 4));
+        let mut g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let reads = noisy_reads(&mut rng, &reference, 3);
+        let res = train(&mut g, &reads, &TrainConfig::default()).unwrap();
+        assert!(res.forward_ns > 0);
+        assert!(res.backward_update_ns > 0);
+        assert!(res.states_processed > 0);
+    }
+
+    #[test]
+    fn empty_read_set_is_noop() {
+        let mut rng = XorShift::new(47);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 30, 4));
+        let mut g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let res = train(&mut g, &[], &TrainConfig::default()).unwrap();
+        assert_eq!(res.iters, 0);
+        assert!(res.loglik_history.is_empty());
+    }
+}

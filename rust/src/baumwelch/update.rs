@@ -1,0 +1,369 @@
+//! Parameter-update accumulators (Eq. 3 and Eq. 4) and the fused
+//! backward + update pass.
+//!
+//! Mirrors ApHMM's *partial compute* optimization (§4.3): backward
+//! values are consumed into the transition/emission numerators as they
+//! are produced (per timestep), so the full backward matrix is never
+//! stored.  Expectation sums accumulate across observation sequences;
+//! [`BwAccumulators::apply`] performs the maximization division once.
+
+use super::sparse::ForwardResult;
+use super::EPS;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+/// Raw Baum-Welch expectation sums for one pHMM graph.
+#[derive(Clone, Debug)]
+pub struct BwAccumulators {
+    /// ξ sums per CSR edge (aligned with `phmm.out_prob`).
+    pub xi: Vec<f64>,
+    /// Σ_t<last γ_t(i) per state (Eq. 3 denominator).
+    pub trans_den: Vec<f64>,
+    /// Emission numerators `[n_states × Σ]` (Eq. 4 numerator).
+    pub e_num: Vec<f64>,
+    /// Σ_t γ_t(i) per state (Eq. 4 denominator).
+    pub gamma_den: Vec<f64>,
+    /// Observation sequences accumulated.
+    pub n_observations: u64,
+    /// Σ log-likelihood of accumulated observations.
+    pub total_loglik: f64,
+    sigma: usize,
+}
+
+impl BwAccumulators {
+    /// Zeroed accumulators shaped for `phmm`.
+    pub fn new(phmm: &Phmm) -> Self {
+        BwAccumulators {
+            xi: vec![0.0; phmm.n_transitions()],
+            trans_den: vec![0.0; phmm.n_states()],
+            e_num: vec![0.0; phmm.n_states() * phmm.sigma()],
+            gamma_den: vec![0.0; phmm.n_states()],
+            n_observations: 0,
+            total_loglik: 0.0,
+            sigma: phmm.sigma(),
+        }
+    }
+
+    /// Reset to zero (reused across EM iterations).
+    pub fn reset(&mut self) {
+        self.xi.iter_mut().for_each(|x| *x = 0.0);
+        self.trans_den.iter_mut().for_each(|x| *x = 0.0);
+        self.e_num.iter_mut().for_each(|x| *x = 0.0);
+        self.gamma_den.iter_mut().for_each(|x| *x = 0.0);
+        self.n_observations = 0;
+        self.total_loglik = 0.0;
+    }
+
+    /// Merge accumulators from another worker (batch EM across threads).
+    pub fn merge(&mut self, other: &BwAccumulators) {
+        debug_assert_eq!(self.xi.len(), other.xi.len());
+        for (a, b) in self.xi.iter_mut().zip(&other.xi) {
+            *a += b;
+        }
+        for (a, b) in self.trans_den.iter_mut().zip(&other.trans_den) {
+            *a += b;
+        }
+        for (a, b) in self.e_num.iter_mut().zip(&other.e_num) {
+            *a += b;
+        }
+        for (a, b) in self.gamma_den.iter_mut().zip(&other.gamma_den) {
+            *a += b;
+        }
+        self.n_observations += other.n_observations;
+        self.total_loglik += other.total_loglik;
+    }
+
+    /// Maximization: write updated probabilities into `phmm`.
+    ///
+    /// States with no accumulated mass keep their prior parameters;
+    /// updated rows are renormalized (filtering truncates small amounts
+    /// of probability mass, cf. DESIGN.md §Numerics).
+    pub fn apply(&self, phmm: &mut Phmm) -> Result<()> {
+        if self.n_observations == 0 {
+            return Err(ApHmmError::Numerical("apply() with no accumulated observations".into()));
+        }
+        let n = phmm.n_states();
+        // Transitions (Eq. 3).
+        for j in 0..n {
+            let lo = phmm.out_ptr[j] as usize;
+            let hi = phmm.out_ptr[j + 1] as usize;
+            if lo == hi || self.trans_den[j] <= EPS as f64 {
+                continue;
+            }
+            let mut row_sum = 0.0f64;
+            for e in lo..hi {
+                row_sum += self.xi[e];
+            }
+            if row_sum <= EPS as f64 || !row_sum.is_finite() {
+                continue;
+            }
+            for e in lo..hi {
+                phmm.out_prob[e] = (self.xi[e] / row_sum) as f32;
+            }
+        }
+        // Emissions (Eq. 4).
+        let sigma = self.sigma;
+        for i in 0..n {
+            if self.gamma_den[i] <= EPS as f64 {
+                continue;
+            }
+            let row = &self.e_num[i * sigma..(i + 1) * sigma];
+            let row_sum: f64 = row.iter().sum();
+            if row_sum <= EPS as f64 || !row_sum.is_finite() {
+                continue;
+            }
+            for c in 0..sigma {
+                phmm.emissions[i * sigma + c] = (row[c] / row_sum) as f32;
+            }
+        }
+        phmm.validate()
+    }
+
+    /// Fused backward + accumulate pass for one observation (Eq. 2 + the
+    /// numerator/denominator sums of Eq. 3/4), restricted to the states
+    /// the (possibly filtered) forward pass kept active.
+    pub fn accumulate(
+        &mut self,
+        phmm: &Phmm,
+        seq: &Sequence,
+        fwd: &ForwardResult,
+    ) -> Result<()> {
+        let n = phmm.n_states();
+        let t_len = seq.len();
+        debug_assert_eq!(fwd.rows.len(), t_len);
+        let sigma = self.sigma;
+        // Dense backward buffers; only active entries are ever nonzero.
+        // f64: scaled backward values on low-forward-probability states
+        // reach 1/F̂ magnitudes and overflow f32 on badly matching
+        // prefixes (mapping slop); f64 keeps the fused pass robust.
+        let mut b_next = vec![0.0f64; n];
+        let mut b_cur = vec![0.0f64; n];
+
+        // t = T-1: B̂ = 1 on active states; emission-only γ terms.
+        {
+            let row = &fwd.rows[t_len - 1];
+            let s_t = seq.data[t_len - 1] as usize;
+            for (&i, &f) in row.idx.iter().zip(row.val.iter()) {
+                b_next[i as usize] = 1.0;
+                let gamma = f as f64;
+                self.gamma_den[i as usize] += gamma;
+                self.e_num[i as usize * sigma + s_t] += gamma;
+            }
+        }
+
+        for t in (0..t_len - 1).rev() {
+            let row = &fwd.rows[t];
+            let s_next = seq.data[t + 1];
+            let s_t = seq.data[t] as usize;
+            let c_next = fwd.scales[t + 1] as f64;
+            let inv_c = 1.0 / c_next;
+            for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
+                let j = j as usize;
+                let fj = fj as f64;
+                let lo = phmm.out_ptr[j] as usize;
+                let hi = phmm.out_ptr[j + 1] as usize;
+                let mut bsum = 0.0f64;
+                for e in lo..hi {
+                    let to = phmm.out_to[e] as usize;
+                    let bn = b_next[to];
+                    if bn == 0.0 {
+                        continue;
+                    }
+                    // Shared product: α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
+                    let m = phmm.out_prob[e] as f64 * phmm.emission(to, s_next) as f64 * bn * inv_c;
+                    bsum += m;
+                    self.xi[e] += fj * m;
+                }
+                b_cur[j] = bsum;
+                let gamma = fj * bsum;
+                self.trans_den[j] += gamma;
+                self.gamma_den[j] += gamma;
+                self.e_num[j * sigma + s_t] += gamma;
+            }
+            // Swap buffers; clear what we wrote at t+1.
+            if t + 1 < t_len {
+                for &i in &fwd.rows[t + 1].idx {
+                    b_next[i as usize] = 0.0;
+                }
+            }
+            std::mem::swap(&mut b_next, &mut b_cur);
+        }
+        self.n_observations += 1;
+        self.total_loglik += fwd.loglik;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baumwelch::sparse::{forward_sparse, ForwardOptions};
+    use crate::baumwelch::logspace::{log_backward, log_forward};
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn setup(rng: &mut XorShift, ref_len: usize, obs_len: usize) -> (Phmm, Sequence) {
+        let data = testutil::random_seq(rng, ref_len, 4);
+        let g = Phmm::error_correction(&Sequence::from_symbols("r", data), &Default::default())
+            .unwrap();
+        let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+        (g, obs)
+    }
+
+    /// Independent oracle: compute ξ and γ sums from full log-space
+    /// forward/backward matrices.
+    fn oracle_sums(phmm: &Phmm, seq: &Sequence) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let lf = log_forward(phmm, seq);
+        let lb = log_backward(phmm, seq);
+        let n = phmm.n_states();
+        let t_len = seq.len();
+        // log P = logsumexp over last row of lf.
+        let mut lp = f64::NEG_INFINITY;
+        for i in 0..n {
+            lp = logadd(lp, lf[(t_len - 1) * n + i]);
+        }
+        let mut xi = vec![0.0f64; phmm.n_transitions()];
+        let mut trans_den = vec![0.0f64; n];
+        let mut e_num = vec![0.0f64; n * phmm.sigma()];
+        let mut gamma_den = vec![0.0f64; n];
+        for t in 0..t_len {
+            for i in 0..n {
+                let lg = lf[t * n + i] + lb[t * n + i] - lp;
+                if lg > -700.0 {
+                    let g = lg.exp();
+                    gamma_den[i] += g;
+                    e_num[i * phmm.sigma() + seq.data[t] as usize] += g;
+                    if t + 1 < t_len {
+                        trans_den[i] += g;
+                    }
+                }
+            }
+            if t + 1 < t_len {
+                for j in 0..n {
+                    for e in phmm.out_ptr[j] as usize..phmm.out_ptr[j + 1] as usize {
+                        let to = phmm.out_to[e] as usize;
+                        let le = lf[t * n + j]
+                            + (phmm.out_prob[e] as f64).ln()
+                            + (phmm.emission(to, seq.data[t + 1]) as f64).ln()
+                            + lb[(t + 1) * n + to]
+                            - lp;
+                        if le > -700.0 {
+                            xi[e] += le.exp();
+                        }
+                    }
+                }
+            }
+        }
+        (xi, trans_den, e_num, gamma_den)
+    }
+
+    fn logadd(a: f64, b: f64) -> f64 {
+        if a == f64::NEG_INFINITY {
+            return b;
+        }
+        if b == f64::NEG_INFINITY {
+            return a;
+        }
+        let m = a.max(b);
+        m + ((a - m).exp() + (b - m).exp()).ln()
+    }
+
+    #[test]
+    fn sums_match_logspace_oracle() {
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(4, 20);
+            let __h1 = rng.range(3, 12);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            let mut acc = BwAccumulators::new(&g);
+            acc.accumulate(&g, &obs, &fwd).unwrap();
+            let (xi_o, td_o, en_o, gd_o) = oracle_sums(&g, &obs);
+            testutil::assert_all_close(&acc.xi, &xi_o, 2e-3, 1e-6);
+            testutil::assert_all_close(&acc.trans_den, &td_o, 2e-3, 1e-6);
+            testutil::assert_all_close(&acc.e_num, &en_o, 2e-3, 1e-6);
+            testutil::assert_all_close(&acc.gamma_den, &gd_o, 2e-3, 1e-6);
+        });
+    }
+
+    #[test]
+    fn gamma_rows_sum_to_t() {
+        // Σ_i γ_t(i) = 1 per live timestep, so Σ gamma_den = T.
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(5, 30);
+            let __h1 = rng.range(2, 15);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            let mut acc = BwAccumulators::new(&g);
+            acc.accumulate(&g, &obs, &fwd).unwrap();
+            let total: f64 = acc.gamma_den.iter().sum();
+            testutil::assert_close(total, obs.len() as f64, 1e-3, 1e-6);
+        });
+    }
+
+    #[test]
+    fn xi_row_sums_equal_trans_den() {
+        // Σ_j ξ(i, j) = Σ_{t<T-1} γ_t(i) (Eq. 3 denominator identity).
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(5, 25);
+            let __h1 = rng.range(3, 12);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            let mut acc = BwAccumulators::new(&g);
+            acc.accumulate(&g, &obs, &fwd).unwrap();
+            for j in 0..g.n_states() {
+                let row: f64 = (g.out_ptr[j] as usize..g.out_ptr[j + 1] as usize)
+                    .map(|e| acc.xi[e])
+                    .sum();
+                testutil::assert_close(row, acc.trans_den[j], 1e-3, 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn apply_produces_valid_graph_and_improves_likelihood() {
+        testutil::check(8, |rng| {
+            let __h0 = rng.range(6, 25);
+            let __h1 = rng.range(4, 15);
+            let (mut g, obs) = setup(rng, __h0, __h1);
+            let before = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap().loglik;
+            let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+            let mut acc = BwAccumulators::new(&g);
+            acc.accumulate(&g, &obs, &fwd).unwrap();
+            acc.apply(&mut g).unwrap();
+            let after = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap().loglik;
+            assert!(after >= before - 1e-3, "EM decreased loglik: {before} -> {after}");
+        });
+    }
+
+    #[test]
+    fn merge_equals_sequential_accumulation() {
+        let mut rng = XorShift::new(123);
+        let (g, obs1) = setup(&mut rng, 20, 10);
+        let obs2 = Sequence::from_symbols("o2", testutil::random_seq(&mut rng, 8, 4));
+        let f1 = forward_sparse(&g, &obs1, &ForwardOptions::default()).unwrap();
+        let f2 = forward_sparse(&g, &obs2, &ForwardOptions::default()).unwrap();
+
+        let mut seq_acc = BwAccumulators::new(&g);
+        seq_acc.accumulate(&g, &obs1, &f1).unwrap();
+        seq_acc.accumulate(&g, &obs2, &f2).unwrap();
+
+        let mut a = BwAccumulators::new(&g);
+        a.accumulate(&g, &obs1, &f1).unwrap();
+        let mut b = BwAccumulators::new(&g);
+        b.accumulate(&g, &obs2, &f2).unwrap();
+        a.merge(&b);
+
+        testutil::assert_all_close(&a.xi, &seq_acc.xi, 1e-12, 1e-12);
+        testutil::assert_all_close(&a.gamma_den, &seq_acc.gamma_den, 1e-12, 1e-12);
+        assert_eq!(a.n_observations, 2);
+    }
+
+    #[test]
+    fn apply_without_observations_fails() {
+        let mut rng = XorShift::new(7);
+        let (mut g, _) = setup(&mut rng, 10, 5);
+        let acc = BwAccumulators::new(&g);
+        assert!(acc.apply(&mut g).is_err());
+    }
+}

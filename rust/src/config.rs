@@ -1,0 +1,151 @@
+//! Configuration files (a TOML subset: `key = value` lines with
+//! `[section]` headers, `#` comments) and typed accessors.
+//!
+//! Used by the CLI so experiments are reproducible from checked-in
+//! config files rather than long flag strings; every example ships one.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{ApHmmError, Result};
+
+/// A parsed configuration: `section.key -> value` strings with typed
+/// getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse configuration text.
+    pub fn parse(text: &str, origin: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ApHmmError::Parse {
+                path: origin.into(),
+                msg: format!("line {}: expected key = value", lineno + 1),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Config::parse(&text, &path.display().to_string())
+    }
+
+    /// Overlay `key=value` CLI overrides on top of the file values.
+    pub fn override_with(&mut self, pairs: &[(String, String)]) {
+        for (k, v) in pairs {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ApHmmError::Config(format!("{key}: expected integer, got {v:?}"))
+            }),
+        }
+    }
+
+    /// Float with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| ApHmmError::Config(format!("{key}: expected float, got {v:?}")))
+            }
+        }
+    }
+
+    /// Bool with default (`true/false/1/0/yes/no`).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(ApHmmError::Config(format!("{key}: expected bool, got {v:?}"))),
+        }
+    }
+
+    /// All keys (diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# top comment
+seed = 42
+[correction]
+chunk_len = 650
+filter = \"histogram\"
+tol = 1e-3
+multithread = yes
+";
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE, "mem").unwrap();
+        assert_eq!(c.usize_or("seed", 0).unwrap(), 42);
+        assert_eq!(c.usize_or("correction.chunk_len", 0).unwrap(), 650);
+        assert_eq!(c.str_or("correction.filter", ""), "histogram");
+        assert!((c.f64_or("correction.tol", 0.0).unwrap() - 1e-3).abs() < 1e-12);
+        assert!(c.bool_or("correction.multithread", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("", "mem").unwrap();
+        assert_eq!(c.usize_or("nope", 7).unwrap(), 7);
+        assert!(!c.bool_or("nope", false).unwrap());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE, "mem").unwrap();
+        c.override_with(&[("correction.chunk_len".into(), "150".into())]);
+        assert_eq!(c.usize_or("correction.chunk_len", 0).unwrap(), 150);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Config::parse("no equals sign", "mem").is_err());
+        let c = Config::parse("x = abc", "mem").unwrap();
+        assert!(c.usize_or("x", 0).is_err());
+        assert!(c.bool_or("x", false).is_err());
+    }
+}

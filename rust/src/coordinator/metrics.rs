@@ -1,0 +1,90 @@
+//! Coordinator metrics: throughput, latency distribution, queue stats.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared (lock-free) counters updated by workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs completed.
+    pub jobs_done: AtomicU64,
+    /// Jobs that failed (numerically dead chunks etc.).
+    pub jobs_failed: AtomicU64,
+    /// Total Baum-Welch timesteps processed.
+    pub timesteps: AtomicU64,
+    /// Total states processed.
+    pub states: AtomicU64,
+    /// Sum of per-job latencies (ns).
+    pub latency_sum_ns: AtomicU64,
+    /// Max per-job latency (ns).
+    pub latency_max_ns: AtomicU64,
+}
+
+impl Metrics {
+    /// Record one finished job.
+    pub fn record(&self, latency_ns: u64, timesteps: u64, states: u64) {
+        self.jobs_done.fetch_add(1, Ordering::Relaxed);
+        self.timesteps.fetch_add(timesteps, Ordering::Relaxed);
+        self.states.fetch_add(states, Ordering::Relaxed);
+        self.latency_sum_ns.fetch_add(latency_ns, Ordering::Relaxed);
+        self.latency_max_ns.fetch_max(latency_ns, Ordering::Relaxed);
+    }
+
+    /// Record a failed job.
+    pub fn record_failure(&self) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot as a display-friendly summary.
+    pub fn summary(&self, wall_seconds: f64) -> MetricsSummary {
+        let done = self.jobs_done.load(Ordering::Relaxed);
+        let sum = self.latency_sum_ns.load(Ordering::Relaxed);
+        MetricsSummary {
+            jobs_done: done,
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            timesteps: self.timesteps.load(Ordering::Relaxed),
+            states: self.states.load(Ordering::Relaxed),
+            mean_latency_ms: if done > 0 { sum as f64 / done as f64 / 1e6 } else { 0.0 },
+            max_latency_ms: self.latency_max_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            jobs_per_second: if wall_seconds > 0.0 { done as f64 / wall_seconds } else { 0.0 },
+        }
+    }
+}
+
+/// Snapshot of the metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSummary {
+    /// Jobs completed.
+    pub jobs_done: u64,
+    /// Jobs failed.
+    pub jobs_failed: u64,
+    /// Baum-Welch timesteps processed.
+    pub timesteps: u64,
+    /// States processed.
+    pub states: u64,
+    /// Mean job latency (ms).
+    pub mean_latency_ms: f64,
+    /// Max job latency (ms).
+    pub max_latency_ms: f64,
+    /// Throughput (jobs/s).
+    pub jobs_per_second: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let m = Metrics::default();
+        m.record(1_000_000, 100, 5000);
+        m.record(3_000_000, 200, 9000);
+        m.record_failure();
+        let s = m.summary(2.0);
+        assert_eq!(s.jobs_done, 2);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.timesteps, 300);
+        assert!((s.mean_latency_ms - 2.0).abs() < 1e-9);
+        assert!((s.max_latency_ms - 3.0).abs() < 1e-9);
+        assert!((s.jobs_per_second - 1.0).abs() < 1e-9);
+    }
+}

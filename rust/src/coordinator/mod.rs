@@ -1,0 +1,286 @@
+//! The L3 coordinator: multi-worker chunk-training orchestration.
+//!
+//! This is the deployment shape of the system: a leader thread feeds
+//! chunk-training jobs through a bounded queue (backpressure), worker
+//! threads run the Baum-Welch training + Viterbi decode per chunk, and
+//! an optional shared **XLA device thread** plays the accelerator's
+//! role — workers ship banded expectation requests to it over a channel
+//! exactly the way ApHMM cores receive work from the host (Supplemental
+//! S3's execution flow).  `tokio` is not in the offline registry, so the
+//! runtime is std threads + `mpsc::sync_channel`, which models the same
+//! structure.
+
+mod metrics;
+mod xla_device;
+
+pub use metrics::{Metrics, MetricsSummary};
+pub use xla_device::{XlaDevice, XlaHandle};
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::baumwelch::{train, TrainConfig};
+use crate::error::{ApHmmError, Result};
+use crate::phmm::{EcDesignParams, Phmm};
+use crate::seq::Sequence;
+use crate::viterbi::consensus;
+
+/// Compute backend for chunk training.
+#[derive(Clone, Debug)]
+pub enum BackendKind {
+    /// Native sparse Rust engine on each worker.
+    Native,
+    /// Expectation passes shipped to the shared XLA device thread
+    /// (AOT artifacts via PJRT); reads must fit the artifact's T.
+    Xla {
+        /// Directory holding `manifest.txt` + `*.hlo.txt`.
+        artifacts_dir: std::path::PathBuf,
+    },
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads (the paper's 4-core sweet spot).
+    pub n_workers: usize,
+    /// Bounded queue depth (backpressure).
+    pub queue_depth: usize,
+    /// Training parameters.
+    pub train: TrainConfig,
+    /// EC design parameters.
+    pub design: EcDesignParams,
+    /// Compute backend.
+    pub backend: BackendKind,
+    /// EM iterations on the XLA path.
+    pub xla_iters: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_workers: 4,
+            queue_depth: 16,
+            train: TrainConfig::default(),
+            design: EcDesignParams::default(),
+            backend: BackendKind::Native,
+            xla_iters: 2,
+        }
+    }
+}
+
+/// One chunk-training job.
+#[derive(Clone, Debug)]
+pub struct ChunkJob {
+    /// Job identifier (chunk index).
+    pub id: usize,
+    /// Chunk reference sequence.
+    pub reference: Sequence,
+    /// Read segments mapped to the chunk.
+    pub reads: Vec<Sequence>,
+}
+
+/// Result of one chunk job.
+#[derive(Clone, Debug)]
+pub struct ChunkOutcome {
+    /// Job identifier.
+    pub id: usize,
+    /// Decoded consensus of the trained graph.
+    pub consensus: Sequence,
+    /// Mean per-read log-likelihood after training.
+    pub mean_loglik: f64,
+    /// Wall latency of the job (ns).
+    pub latency_ns: u64,
+    /// Worker that executed the job.
+    pub worker: usize,
+}
+
+/// Run all jobs across the configured workers; outcomes are returned
+/// sorted by job id.  Failed jobs are counted in the metrics and
+/// omitted from the output.
+pub fn run_jobs(
+    jobs: Vec<ChunkJob>,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+) -> Result<Vec<ChunkOutcome>> {
+    let n_workers = cfg.n_workers.max(1);
+    let xla = match &cfg.backend {
+        BackendKind::Native => None,
+        BackendKind::Xla { artifacts_dir } => Some(XlaDevice::spawn(artifacts_dir.clone())?),
+    };
+
+    let (job_tx, job_rx) = mpsc::sync_channel::<ChunkJob>(cfg.queue_depth.max(1));
+    let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
+    let (out_tx, out_rx) = mpsc::channel::<ChunkOutcome>();
+
+    let worker_err: Arc<std::sync::Mutex<Option<ApHmmError>>> =
+        Arc::new(std::sync::Mutex::new(None));
+
+    std::thread::scope(|scope| -> Result<()> {
+        for worker_id in 0..n_workers {
+            let job_rx = Arc::clone(&job_rx);
+            let out_tx = out_tx.clone();
+            let cfg = cfg.clone();
+            let xla_handle = xla.as_ref().map(|d| d.handle());
+            let worker_err = Arc::clone(&worker_err);
+            scope.spawn(move || {
+                loop {
+                    let job = {
+                        let rx = job_rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let t0 = Instant::now();
+                    let result = run_one(&job, &cfg, xla_handle.as_ref(), worker_id);
+                    match result {
+                        Ok((outcome, timesteps, states)) => {
+                            metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
+                            let _ = out_tx.send(outcome);
+                        }
+                        Err(e) => {
+                            metrics.record_failure();
+                            if matches!(e, ApHmmError::Runtime(_)) {
+                                // Runtime (device) errors are fatal;
+                                // numeric chunk failures are skipped.
+                                *worker_err.lock().unwrap() = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        drop(out_tx);
+        // Leader: feed jobs (blocks when the queue is full: backpressure).
+        for job in jobs {
+            job_tx.send(job).map_err(|_| {
+                ApHmmError::Coordinator("all workers exited while jobs remain".into())
+            })?;
+        }
+        drop(job_tx);
+        Ok(())
+    })?;
+
+    if let Some(e) = worker_err.lock().unwrap().take() {
+        return Err(e);
+    }
+    let mut outcomes: Vec<ChunkOutcome> = out_rx.try_iter().collect();
+    outcomes.sort_by_key(|o| o.id);
+    Ok(outcomes)
+}
+
+/// Execute one job on this worker.
+fn run_one(
+    job: &ChunkJob,
+    cfg: &CoordinatorConfig,
+    xla: Option<&XlaHandle>,
+    worker: usize,
+) -> Result<(ChunkOutcome, u64, u64)> {
+    let mut graph = Phmm::error_correction(&job.reference, &cfg.design)?;
+    let (mean_loglik, timesteps, states) = match xla {
+        None => {
+            let res = train(&mut graph, &job.reads, &cfg.train)?;
+            (
+                res.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY),
+                res.timesteps,
+                res.states_processed,
+            )
+        }
+        Some(handle) => {
+            let stats = xla_device::train_via_xla(handle, &mut graph, &job.reads, cfg.xla_iters)?;
+            (stats.mean_loglik, stats.timesteps, stats.states)
+        }
+    };
+    let decoded = consensus(&graph)?;
+    Ok((
+        ChunkOutcome {
+            id: job.id,
+            consensus: decoded.consensus,
+            mean_loglik,
+            latency_ns: 0,
+            worker,
+        },
+        timesteps,
+        states,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_read, ErrorProfile, XorShift};
+    use crate::testutil;
+
+    fn make_jobs(rng: &mut XorShift, n_jobs: usize, ref_len: usize) -> Vec<ChunkJob> {
+        (0..n_jobs)
+            .map(|id| {
+                let reference =
+                    Sequence::from_symbols(format!("c{id}"), testutil::random_seq(rng, ref_len, 4));
+                let reads = (0..4)
+                    .map(|i| {
+                        simulate_read(rng, &reference, 0, ref_len, &ErrorProfile::pacbio(), i).seq
+                    })
+                    .collect();
+                ChunkJob { id, reference, reads }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_jobs_complete_in_order() {
+        let mut rng = XorShift::new(51);
+        let jobs = make_jobs(&mut rng, 12, 60);
+        let metrics = Metrics::default();
+        let outcomes = run_jobs(jobs, &CoordinatorConfig::default(), &metrics).unwrap();
+        assert_eq!(outcomes.len(), 12);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.id, i);
+            assert!(!o.consensus.is_empty());
+        }
+        let s = metrics.summary(1.0);
+        assert_eq!(s.jobs_done, 12);
+        assert_eq!(s.jobs_failed, 0);
+        assert!(s.timesteps > 0);
+    }
+
+    #[test]
+    fn single_worker_matches_multi_worker_consensus() {
+        let mut rng = XorShift::new(52);
+        let jobs = make_jobs(&mut rng, 6, 50);
+        let m1 = Metrics::default();
+        let m4 = Metrics::default();
+        let one = run_jobs(
+            jobs.clone(),
+            &CoordinatorConfig { n_workers: 1, ..Default::default() },
+            &m1,
+        )
+        .unwrap();
+        let four = run_jobs(
+            jobs,
+            &CoordinatorConfig { n_workers: 4, ..Default::default() },
+            &m4,
+        )
+        .unwrap();
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(four.iter()) {
+            assert_eq!(a.consensus.data, b.consensus.data, "job {}", a.id);
+        }
+    }
+
+    #[test]
+    fn tiny_queue_applies_backpressure_without_deadlock() {
+        let mut rng = XorShift::new(53);
+        let jobs = make_jobs(&mut rng, 20, 40);
+        let metrics = Metrics::default();
+        let cfg = CoordinatorConfig { n_workers: 2, queue_depth: 1, ..Default::default() };
+        let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
+        assert_eq!(outcomes.len(), 20);
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let metrics = Metrics::default();
+        let outcomes = run_jobs(Vec::new(), &CoordinatorConfig::default(), &metrics).unwrap();
+        assert!(outcomes.is_empty());
+    }
+}

@@ -1,0 +1,152 @@
+//! Shared XLA "device" thread.
+//!
+//! PJRT client handles are not `Send`-safe across arbitrary threads, and
+//! an accelerator is a shared resource anyway — so one device thread
+//! owns the [`ArtifactStore`] and serves banded expectation requests
+//! over a channel, exactly the host↔accelerator split of the paper's
+//! Supplemental S3 execution flow.  Workers hold a cloneable
+//! [`XlaHandle`].
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::baumwelch::BandedBwSums;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::{BandedPhmm, Phmm};
+use crate::runtime::{ArtifactStore, XlaBandedEngine};
+use crate::seq::Sequence;
+
+enum Request {
+    BwSums { banded: BandedPhmm, seq: Sequence, reply: mpsc::Sender<Result<BandedBwSums>> },
+    Shutdown,
+}
+
+/// Cloneable handle for submitting work to the device thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl XlaHandle {
+    /// One expectation pass on the device.
+    pub fn bw_sums(&self, banded: &BandedPhmm, seq: &Sequence) -> Result<BandedBwSums> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::BwSums { banded: banded.clone(), seq: seq.clone(), reply: reply_tx })
+            .map_err(|_| ApHmmError::Coordinator("XLA device thread is gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| ApHmmError::Coordinator("XLA device dropped the reply".into()))?
+    }
+}
+
+/// The device thread plus its shutdown plumbing.
+pub struct XlaDevice {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl XlaDevice {
+    /// Spawn the device thread; fails fast if the artifacts are missing
+    /// or do not compile.
+    pub fn spawn(artifacts_dir: std::path::PathBuf) -> Result<XlaDevice> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::spawn(move || {
+            let store = match ArtifactStore::load(&artifacts_dir) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Shutdown => break,
+                    Request::BwSums { banded, seq, reply } => {
+                        let result = XlaBandedEngine::for_shape(
+                            &store,
+                            banded.n,
+                            banded.w,
+                            banded.sigma,
+                            seq.len(),
+                        )
+                        .and_then(|engine| engine.bw_sums(&banded, &seq));
+                        let _ = reply.send(result);
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| ApHmmError::Coordinator("XLA device thread died during init".into()))??;
+        Ok(XlaDevice { tx, join: Some(join) })
+    }
+
+    /// A handle for workers.
+    pub fn handle(&self) -> XlaHandle {
+        XlaHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for XlaDevice {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Training statistics of the XLA path.
+#[derive(Clone, Copy, Debug)]
+pub struct XlaTrainStats {
+    /// Mean per-read log-likelihood of the final iteration.
+    pub mean_loglik: f64,
+    /// Total timesteps processed.
+    pub timesteps: u64,
+    /// Total state-steps (N × timesteps; the dense engine touches all).
+    pub states: u64,
+}
+
+/// Batch-EM training through the device: accumulate banded sums across
+/// reads, apply, repeat.  Writes the final parameters back into `graph`.
+pub fn train_via_xla(
+    handle: &XlaHandle,
+    graph: &mut Phmm,
+    reads: &[Sequence],
+    iters: usize,
+) -> Result<XlaTrainStats> {
+    let mut banded = graph.to_banded()?;
+    let mut stats =
+        XlaTrainStats { mean_loglik: f64::NEG_INFINITY, timesteps: 0, states: 0 };
+    for _ in 0..iters.max(1) {
+        let mut total = BandedBwSums::zeros(banded.n, banded.w, banded.sigma);
+        let mut n_reads = 0u64;
+        for read in reads {
+            if read.is_empty() {
+                continue;
+            }
+            match handle.bw_sums(&banded, read) {
+                Ok(sums) => {
+                    total.add(&sums);
+                    n_reads += 1;
+                    stats.timesteps += read.len() as u64;
+                    stats.states += (read.len() * banded.n) as u64;
+                }
+                Err(e @ ApHmmError::Runtime(_)) => return Err(e),
+                Err(_) => continue, // numerically dead read
+            }
+        }
+        if n_reads == 0 {
+            return Err(ApHmmError::Numerical("no read survived XLA training".into()));
+        }
+        stats.mean_loglik = total.loglik as f64 / n_reads as f64;
+        total.apply(&mut banded);
+    }
+    graph.update_from_banded(&banded)?;
+    Ok(stats)
+}

@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the ApHMM library.
+#[derive(Error, Debug)]
+pub enum ApHmmError {
+    /// Input sequence contains a character outside the active alphabet.
+    #[error("invalid character {ch:?} for alphabet {alphabet}")]
+    InvalidCharacter { ch: char, alphabet: &'static str },
+
+    /// A pHMM graph failed a structural invariant.
+    #[error("invalid pHMM graph: {0}")]
+    InvalidGraph(String),
+
+    /// Banded encoding constraint violated (e.g. backward transition).
+    #[error("banded encoding error: {0}")]
+    Banded(String),
+
+    /// Numerical failure (all-zero forward row, likelihood underflow...).
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+
+    /// Configuration file / CLI parameter problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed input file (FASTA/FASTQ/profile/manifest).
+    #[error("parse error in {path}: {msg}")]
+    Parse { path: String, msg: String },
+
+    /// PJRT runtime failure (artifact loading, compilation, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator scheduling / channel failure.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for ApHmmError {
+    fn from(e: xla::Error) -> Self {
+        ApHmmError::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, ApHmmError>;

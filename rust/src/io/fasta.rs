@@ -1,0 +1,121 @@
+//! FASTA reading and writing.
+
+use std::io::{BufReader, Write};
+use std::path::Path;
+
+use crate::error::{ApHmmError, Result};
+use crate::seq::{Alphabet, Sequence};
+
+/// Parse FASTA text into encoded sequences.
+pub fn read_fasta_str(text: &str, alphabet: Alphabet, origin: &str) -> Result<Vec<Sequence>> {
+    let mut out = Vec::new();
+    let mut id: Option<String> = None;
+    let mut data: Vec<u8> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('>') {
+            if let Some(prev) = id.take() {
+                out.push(Sequence::from_symbols(prev, std::mem::take(&mut data)));
+            }
+            let token = header.split_whitespace().next().unwrap_or("");
+            if token.is_empty() {
+                return Err(ApHmmError::Parse {
+                    path: origin.into(),
+                    msg: format!("empty FASTA header at line {}", lineno + 1),
+                });
+            }
+            id = Some(token.to_string());
+        } else {
+            if id.is_none() {
+                return Err(ApHmmError::Parse {
+                    path: origin.into(),
+                    msg: format!("sequence data before first header at line {}", lineno + 1),
+                });
+            }
+            for b in line.bytes() {
+                data.push(alphabet.encode(b).map_err(|e| ApHmmError::Parse {
+                    path: origin.into(),
+                    msg: format!("line {}: {e}", lineno + 1),
+                })?);
+            }
+        }
+    }
+    if let Some(prev) = id.take() {
+        out.push(Sequence::from_symbols(prev, data));
+    }
+    Ok(out)
+}
+
+/// Read a FASTA file.
+pub fn read_fasta(path: &Path, alphabet: Alphabet) -> Result<Vec<Sequence>> {
+    let mut text = String::new();
+    BufReader::new(std::fs::File::open(path)?).read_to_string(&mut text)?;
+    read_fasta_str(&text, alphabet, &path.display().to_string())
+}
+
+use std::io::Read;
+
+/// Write sequences as FASTA (60-column wrapped).
+pub fn write_fasta<W: Write>(w: &mut W, seqs: &[Sequence], alphabet: Alphabet) -> Result<()> {
+    for s in seqs {
+        writeln!(w, ">{}", s.id)?;
+        let ascii = s.to_ascii(alphabet);
+        for chunk in ascii.as_bytes().chunks(60) {
+            w.write_all(chunk)?;
+            writeln!(w)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::DNA;
+
+    #[test]
+    fn roundtrip() {
+        let seqs = vec![
+            Sequence::from_str("a", "ACGTACGT", DNA).unwrap(),
+            Sequence::from_str("b", "TTTT", DNA).unwrap(),
+        ];
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &seqs, DNA).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let back = read_fasta_str(&text, DNA, "mem").unwrap();
+        assert_eq!(back, seqs);
+    }
+
+    #[test]
+    fn multiline_and_description_handled() {
+        let text = ">read1 some description\nACGT\nACGT\n\n>read2\nTT\n";
+        let seqs = read_fasta_str(text, DNA, "mem").unwrap();
+        assert_eq!(seqs.len(), 2);
+        assert_eq!(seqs[0].id, "read1");
+        assert_eq!(seqs[0].to_ascii(DNA), "ACGTACGT");
+        assert_eq!(seqs[1].to_ascii(DNA), "TT");
+    }
+
+    #[test]
+    fn rejects_data_before_header() {
+        assert!(read_fasta_str("ACGT\n>x\nACGT\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_characters() {
+        assert!(read_fasta_str(">x\nACGN\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn wraps_long_lines() {
+        let long = Sequence::from_symbols("l", vec![0u8; 150]);
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &[long], DNA).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let max = text.lines().skip(1).map(|l| l.len()).max().unwrap();
+        assert!(max <= 60);
+    }
+}

@@ -1,0 +1,110 @@
+//! FASTQ reading and writing (qualities preserved but unused by the
+//! pHMM pipeline, as in Apollo).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{ApHmmError, Result};
+use crate::seq::{Alphabet, Sequence};
+
+/// Parse FASTQ text; returns `(sequence, quality-string)` pairs.
+pub fn read_fastq_str(
+    text: &str,
+    alphabet: Alphabet,
+    origin: &str,
+) -> Result<Vec<(Sequence, String)>> {
+    let mut out = Vec::new();
+    let mut lines = text.lines().enumerate().peekable();
+    while let Some((lineno, header)) = lines.next() {
+        if header.trim().is_empty() {
+            continue;
+        }
+        let parse_err = |msg: String| ApHmmError::Parse { path: origin.into(), msg };
+        let id = header
+            .strip_prefix('@')
+            .ok_or_else(|| parse_err(format!("line {}: expected '@'", lineno + 1)))?
+            .split_whitespace()
+            .next()
+            .unwrap_or("")
+            .to_string();
+        let (_, seq_line) =
+            lines.next().ok_or_else(|| parse_err("truncated record (no sequence)".into()))?;
+        let (_, plus) =
+            lines.next().ok_or_else(|| parse_err("truncated record (no '+')".into()))?;
+        if !plus.starts_with('+') {
+            return Err(parse_err(format!("line {}: expected '+'", lineno + 3)));
+        }
+        let (_, qual) =
+            lines.next().ok_or_else(|| parse_err("truncated record (no quality)".into()))?;
+        if qual.len() != seq_line.len() {
+            return Err(parse_err(format!("record {id}: quality length mismatch")));
+        }
+        let data = alphabet
+            .encode_str(seq_line.trim_end())
+            .map_err(|e| parse_err(format!("record {id}: {e}")))?;
+        out.push((Sequence::from_symbols(id, data), qual.to_string()));
+    }
+    Ok(out)
+}
+
+/// Read a FASTQ file.
+pub fn read_fastq(path: &Path, alphabet: Alphabet) -> Result<Vec<(Sequence, String)>> {
+    let mut text = String::new();
+    std::fs::File::open(path)?.read_to_string(&mut text)?;
+    read_fastq_str(&text, alphabet, &path.display().to_string())
+}
+
+/// Write FASTQ records; `quals` may be shorter (missing → 'I' = Q40).
+pub fn write_fastq<W: Write>(
+    w: &mut W,
+    seqs: &[Sequence],
+    quals: &[String],
+    alphabet: Alphabet,
+) -> Result<()> {
+    for (i, s) in seqs.iter().enumerate() {
+        let ascii = s.to_ascii(alphabet);
+        let q = quals.get(i).cloned().unwrap_or_else(|| "I".repeat(ascii.len()));
+        writeln!(w, "@{}", s.id)?;
+        writeln!(w, "{ascii}")?;
+        writeln!(w, "+")?;
+        writeln!(w, "{q}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::DNA;
+
+    #[test]
+    fn roundtrip() {
+        let seqs = vec![Sequence::from_str("r1", "ACGT", DNA).unwrap()];
+        let quals = vec!["IIII".to_string()];
+        let mut buf = Vec::new();
+        write_fastq(&mut buf, &seqs, &quals, DNA).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let back = read_fastq_str(&text, DNA, "mem").unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].0, seqs[0]);
+        assert_eq!(back[0].1, "IIII");
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        assert!(read_fastq_str("@x\nACGT\n+\nII\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_plus() {
+        assert!(read_fastq_str("@x\nACGT\nII\nIIII\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn default_quality_fill() {
+        let seqs = vec![Sequence::from_str("r", "ACG", DNA).unwrap()];
+        let mut buf = Vec::new();
+        write_fastq(&mut buf, &seqs, &[], DNA).unwrap();
+        assert!(String::from_utf8(buf).unwrap().contains("III"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Sequence and profile I/O.
+//!
+//! FASTA/FASTQ readers and writers (the formats of the paper's input
+//! data) plus the `.aphmm` text profile format used to persist trained
+//! pHMM graphs and family databases.
+
+mod fasta;
+mod fastq;
+mod profile_fmt;
+
+pub use fasta::{read_fasta, read_fasta_str, write_fasta};
+pub use fastq::{read_fastq, read_fastq_str, write_fastq};
+pub use profile_fmt::{read_phmm, read_phmm_str, write_phmm, write_phmm_string};

@@ -1,0 +1,267 @@
+//! `.aphmm` — a line-oriented text format persisting pHMM graphs
+//! (trained models, family databases).  Plays the role HMMER's `.hmm`
+//! format plays for hmmsearch.
+//!
+//! ```text
+//! APHMM 1
+//! design <traditional|traditional_folded|error_correction>
+//! alphabet <dna|protein>
+//! states <n>
+//! state <idx> <M|I|D> <position> <emission probs ...>
+//! trans <from> <to> <prob>
+//! init <idx> <prob>
+//! END
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{ApHmmError, Result};
+use crate::phmm::{Phmm, PhmmDesign, StateKind};
+use crate::seq::Alphabet;
+
+fn design_name(d: PhmmDesign) -> &'static str {
+    match d {
+        PhmmDesign::Traditional => "traditional",
+        PhmmDesign::TraditionalFolded => "traditional_folded",
+        PhmmDesign::ErrorCorrection => "error_correction",
+    }
+}
+
+fn design_from(name: &str) -> Option<PhmmDesign> {
+    match name {
+        "traditional" => Some(PhmmDesign::Traditional),
+        "traditional_folded" => Some(PhmmDesign::TraditionalFolded),
+        "error_correction" => Some(PhmmDesign::ErrorCorrection),
+        _ => None,
+    }
+}
+
+/// Serialize a pHMM to the `.aphmm` text format.
+pub fn write_phmm_string(phmm: &Phmm) -> String {
+    let mut out = String::new();
+    out.push_str("APHMM 1\n");
+    out.push_str(&format!("design {}\n", design_name(phmm.design)));
+    out.push_str(&format!("alphabet {}\n", phmm.alphabet.name()));
+    out.push_str(&format!("states {}\n", phmm.n_states()));
+    for i in 0..phmm.n_states() {
+        let kind = match phmm.kinds[i] {
+            StateKind::Match => "M",
+            StateKind::Insertion => "I",
+            StateKind::Deletion => "D",
+        };
+        out.push_str(&format!("state {i} {kind} {}", phmm.position[i]));
+        for &e in phmm.emission_row(i) {
+            out.push_str(&format!(" {e:.7}"));
+        }
+        out.push('\n');
+    }
+    for i in 0..phmm.n_states() {
+        for (to, p) in phmm.outgoing(i) {
+            out.push_str(&format!("trans {i} {to} {p:.7}\n"));
+        }
+    }
+    for (i, &p) in phmm.f_init.iter().enumerate() {
+        if p > 0.0 {
+            out.push_str(&format!("init {i} {p:.7}\n"));
+        }
+    }
+    out.push_str("END\n");
+    out
+}
+
+/// Write a pHMM to a file.
+pub fn write_phmm(path: &Path, phmm: &Phmm) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(write_phmm_string(phmm).as_bytes())?;
+    Ok(())
+}
+
+/// Parse a pHMM from `.aphmm` text.
+pub fn read_phmm_str(text: &str, origin: &str) -> Result<Phmm> {
+    let err = |msg: String| ApHmmError::Parse { path: origin.into(), msg };
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| err("empty file".into()))?;
+    if header.trim() != "APHMM 1" {
+        return Err(err(format!("bad magic {header:?}")));
+    }
+    let mut design = None;
+    let mut alphabet: Option<Alphabet> = None;
+    let mut n_states = 0usize;
+    let mut kinds: Vec<StateKind> = Vec::new();
+    let mut position: Vec<u32> = Vec::new();
+    let mut emissions: Vec<f32> = Vec::new();
+    let mut edges: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut f_init: Vec<f32> = Vec::new();
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let tag = it.next().unwrap();
+        let ctx = |m: &str| err(format!("line {}: {m}", lineno + 2));
+        match tag {
+            "design" => {
+                let name = it.next().ok_or_else(|| ctx("missing design"))?;
+                design = Some(design_from(name).ok_or_else(|| ctx("unknown design"))?);
+            }
+            "alphabet" => {
+                let name = it.next().ok_or_else(|| ctx("missing alphabet"))?;
+                alphabet = Some(Alphabet::by_name(name).map_err(|e| ctx(&e.to_string()))?);
+            }
+            "states" => {
+                n_states = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| ctx("bad state count"))?;
+                edges = vec![Vec::new(); n_states];
+                f_init = vec![0.0; n_states];
+            }
+            "state" => {
+                let sigma = alphabet.ok_or_else(|| ctx("state before alphabet"))?.size();
+                let idx: usize =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad index"))?;
+                if idx != kinds.len() {
+                    return Err(ctx("states out of order"));
+                }
+                let kind = match it.next() {
+                    Some("M") => StateKind::Match,
+                    Some("I") => StateKind::Insertion,
+                    Some("D") => StateKind::Deletion,
+                    _ => return Err(ctx("bad state kind")),
+                };
+                let pos: u32 =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad position"))?;
+                kinds.push(kind);
+                position.push(pos);
+                for _ in 0..sigma {
+                    let e: f32 = it
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| ctx("missing emission"))?;
+                    emissions.push(e);
+                }
+            }
+            "trans" => {
+                let from: usize =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad from"))?;
+                let to: u32 =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad to"))?;
+                let p: f32 =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad prob"))?;
+                if from >= n_states {
+                    return Err(ctx("from out of range"));
+                }
+                edges[from].push((to, p));
+            }
+            "init" => {
+                let idx: usize =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad index"))?;
+                let p: f32 =
+                    it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad prob"))?;
+                if idx >= n_states {
+                    return Err(ctx("init out of range"));
+                }
+                f_init[idx] = p;
+            }
+            "END" => break,
+            other => return Err(ctx(&format!("unknown tag {other:?}"))),
+        }
+    }
+    if kinds.len() != n_states {
+        return Err(err(format!("expected {n_states} states, found {}", kinds.len())));
+    }
+    let mut out_ptr = Vec::with_capacity(n_states + 1);
+    let mut out_to = Vec::new();
+    let mut out_prob = Vec::new();
+    out_ptr.push(0u32);
+    for row in &mut edges {
+        row.sort_by_key(|&(to, _)| to);
+        for &(to, p) in row.iter() {
+            out_to.push(to);
+            out_prob.push(p);
+        }
+        out_ptr.push(out_to.len() as u32);
+    }
+    let phmm = Phmm {
+        design: design.ok_or_else(|| err("missing design".into()))?,
+        alphabet: alphabet.ok_or_else(|| err("missing alphabet".into()))?,
+        kinds,
+        position,
+        out_ptr,
+        out_to,
+        out_prob,
+        emissions,
+        f_init,
+    };
+    phmm.validate()?;
+    Ok(phmm)
+}
+
+/// Read a pHMM file.
+pub fn read_phmm(path: &Path) -> Result<Phmm> {
+    let mut text = String::new();
+    std::fs::File::open(path)?.read_to_string(&mut text)?;
+    read_phmm_str(&text, &path.display().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::seq::Sequence;
+    use crate::testutil;
+
+    #[test]
+    fn roundtrip_preserves_graph() {
+        testutil::check(5, |rng| {
+            let len = rng.range(3, 30);
+            let data = testutil::random_seq(rng, len, 4);
+            let g = Phmm::error_correction(
+                &Sequence::from_symbols("r", data),
+                &EcDesignParams::default(),
+            )
+            .unwrap();
+            let text = write_phmm_string(&g);
+            let back = read_phmm_str(&text, "mem").unwrap();
+            assert_eq!(back.n_states(), g.n_states());
+            assert_eq!(back.out_to, g.out_to);
+            assert_eq!(back.kinds, g.kinds);
+            for (a, b) in back.out_prob.iter().zip(&g.out_prob) {
+                assert!((a - b).abs() < 1e-5);
+            }
+            for (a, b) in back.emissions.iter().zip(&g.emissions) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_phmm_str("NOPE\n", "mem").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_states() {
+        let text = "APHMM 1\ndesign error_correction\nalphabet dna\nstates 2\nstate 0 M 0 0.25 0.25 0.25 0.25\nEND\n";
+        assert!(read_phmm_str(text, "mem").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let g = Phmm::error_correction(
+            &Sequence::from_str("r", "ACGTAC", crate::seq::DNA).unwrap(),
+            &EcDesignParams::default(),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("aphmm_test_profile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.aphmm");
+        write_phmm(&path, &g).unwrap();
+        let back = read_phmm(&path).unwrap();
+        assert_eq!(back.n_states(), g.n_states());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

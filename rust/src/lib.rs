@@ -1,0 +1,40 @@
+//! # ApHMM — Accelerating Profile Hidden Markov Models
+//!
+//! Full-system reproduction of *ApHMM: Accelerating Profile Hidden Markov
+//! Models for Fast and Energy-Efficient Genome Analysis* (Firtina et al.,
+//! 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the deployable system: pHMM construction for
+//!   the traditional and error-correction designs, a complete sparse
+//!   Baum-Welch engine with sort-based and histogram state filters,
+//!   Viterbi consensus decoding, the three end-to-end applications
+//!   (error correction, protein family search, multiple sequence
+//!   alignment), simulation substrates (genomes, long reads, protein
+//!   families), a minimizer read mapper, a multi-threaded training
+//!   coordinator, and the ApHMM accelerator performance/energy/area
+//!   model that regenerates every table and figure of the paper.
+//! * **L2/L1 (python/, build time only)** — the banded Baum-Welch
+//!   computation in JAX with Pallas kernels, AOT-lowered to HLO text.
+//! * **Runtime** — [`runtime`] loads those artifacts through the PJRT C
+//!   API (`xla` crate) and executes them from the Rust hot path; Python
+//!   never runs at request time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod accel;
+pub mod apps;
+pub mod baumwelch;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod io;
+pub mod mapper;
+pub mod phmm;
+pub mod runtime;
+pub mod seq;
+pub mod sim;
+pub mod testutil;
+pub mod viterbi;
+
+pub use error::{ApHmmError, Result};

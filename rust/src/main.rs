@@ -1,0 +1,292 @@
+//! `aphmm` — command-line launcher for the ApHMM reproduction.
+//!
+//! Subcommands:
+//!   simulate   generate a synthetic genome + PacBio-like reads (FASTA)
+//!   correct    Apollo-style assembly error correction
+//!   search     protein family search over a generated family database
+//!   align      hmmalign-style MSA against a family profile
+//!   accel      query the accelerator model (cycles/energy/area)
+//!   runtime    list and smoke-run the AOT artifacts via PJRT
+//!
+//! Every subcommand accepts `--config <file>` (see `examples/*.toml`)
+//! plus `--set key=value` overrides.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use aphmm::accel::{self, AccelConfig, Workload};
+use aphmm::apps::{self, CorrectionConfig, MsaConfig, SearchConfig};
+use aphmm::baumwelch::FilterConfig;
+use aphmm::config::Config;
+use aphmm::error::Result;
+use aphmm::io;
+use aphmm::phmm::{Phmm, Profile, TraditionalParams};
+use aphmm::seq::{DNA, PROTEIN};
+use aphmm::sim::{self, XorShift};
+
+fn usage() -> &'static str {
+    "usage: aphmm <simulate|correct|search|align|accel|runtime> [--config FILE] [--set k=v ...]
+  simulate --out-dir DIR [--set sim.genome_len=N --set sim.coverage=X]
+  correct  --assembly A.fasta --reads R.fasta --out C.fasta
+  search   [--set search.n_families=N --set search.queries=N]
+  align    [--set msa.n_seqs=N]
+  accel    [--set accel.pes=N --set accel.chunk=N]
+  runtime  --artifacts DIR"
+}
+
+/// Minimal argument parser: positional subcommand + `--flag value` pairs.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Option<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next()?;
+        let mut flags = Vec::new();
+        let mut key: Option<String> = None;
+        for tok in it {
+            if let Some(k) = tok.strip_prefix("--") {
+                if let Some(prev) = key.take() {
+                    flags.push((prev, String::new()));
+                }
+                key = Some(k.to_string());
+            } else if let Some(k) = key.take() {
+                flags.push((k, tok));
+            } else {
+                return None;
+            }
+        }
+        if let Some(prev) = key.take() {
+            flags.push((prev, String::new()));
+        }
+        Some(Args { cmd, flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn config(&self) -> Result<Config> {
+        let mut cfg = match self.get("config") {
+            Some(path) => Config::load(Path::new(path))?,
+            None => Config::default(),
+        };
+        let overrides: Vec<(String, String)> = self
+            .flags
+            .iter()
+            .filter(|(k, _)| k == "set")
+            .filter_map(|(_, v)| v.split_once('=').map(|(a, b)| (a.to_string(), b.to_string())))
+            .collect();
+        cfg.override_with(&overrides);
+        Ok(cfg)
+    }
+}
+
+fn filter_from(cfg: &Config, section: &str) -> Result<FilterConfig> {
+    let kind = cfg.str_or(&format!("{section}.filter"), "histogram");
+    let size = cfg.usize_or(&format!("{section}.filter_size"), 500)?;
+    let bins = cfg.usize_or(&format!("{section}.filter_bins"), 16)?;
+    Ok(match kind.as_str() {
+        "none" => FilterConfig::None,
+        "sort" => FilterConfig::Sort { size },
+        _ => FilterConfig::Histogram { size, bins },
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("simdata"));
+    std::fs::create_dir_all(&out_dir)?;
+    let seed = cfg.usize_or("sim.seed", 42)? as u64;
+    let genome_len = cfg.usize_or("sim.genome_len", 100_000)?;
+    let coverage = cfg.f64_or("sim.coverage", 10.0)?;
+    let mean_len = cfg.usize_or("sim.read_len", 5128)?;
+    let mut rng = XorShift::new(seed);
+    let genome = sim::generate_genome(&mut rng, genome_len);
+    let reads = sim::simulate_reads(&mut rng, &genome, coverage, mean_len, &sim::ErrorProfile::pacbio());
+    let mut gf = std::fs::File::create(out_dir.join("genome.fasta"))?;
+    io::write_fasta(&mut gf, &[genome], DNA)?;
+    let seqs: Vec<_> = reads.iter().map(|r| r.seq.clone()).collect();
+    let mut rf = std::fs::File::create(out_dir.join("reads.fasta"))?;
+    io::write_fasta(&mut rf, &seqs, DNA)?;
+    println!(
+        "wrote {}/genome.fasta ({genome_len} bases) and {}/reads.fasta ({} reads)",
+        out_dir.display(),
+        out_dir.display(),
+        seqs.len()
+    );
+    Ok(())
+}
+
+fn cmd_correct(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let assembly_path = args.get("assembly").unwrap_or("simdata/genome.fasta").to_string();
+    let reads_path = args.get("reads").unwrap_or("simdata/reads.fasta").to_string();
+    let out_path = args.get("out").unwrap_or("corrected.fasta").to_string();
+    let assemblies = io::read_fasta(Path::new(&assembly_path), DNA)?;
+    let reads = io::read_fasta(Path::new(&reads_path), DNA)?;
+    let correction = CorrectionConfig {
+        chunk_len: cfg.usize_or("correction.chunk_len", 650)?,
+        max_iters: cfg.usize_or("correction.max_iters", 2)?,
+        filter: filter_from(&cfg, "correction")?,
+        ..Default::default()
+    };
+    let mut corrected = Vec::new();
+    for assembly in &assemblies {
+        let report = apps::correct_assembly(assembly, &reads, &correction)?;
+        println!(
+            "{}: {} chunks ({} trained), {} reads mapped, BW fraction {:.1}%",
+            assembly.id,
+            report.chunks_total,
+            report.chunks_trained,
+            report.reads_mapped,
+            report.timings.bw_fraction() * 100.0
+        );
+        corrected.push(report.corrected);
+    }
+    let mut out = std::fs::File::create(Path::new(&out_path))?;
+    io::write_fasta(&mut out, &corrected, DNA)?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let seed = cfg.usize_or("search.seed", 7)? as u64;
+    let n_families = cfg.usize_or("search.n_families", 64)?;
+    let n_queries = cfg.usize_or("search.queries", 16)?;
+    let mut rng = XorShift::new(seed);
+    let params = sim::ProteinSimParams { n_families, ..Default::default() };
+    let families = sim::generate_families(&mut rng, &params);
+    let search_cfg = SearchConfig::default();
+    let db = apps::FamilyDb::build(&families, PROTEIN, &search_cfg)?;
+    let mut correct = 0usize;
+    for q in 0..n_queries {
+        let fam = &families[q % families.len()];
+        let query = &fam.members[q % fam.members.len()];
+        let report = db.search(query, &search_cfg)?;
+        let top = report.hits.first().map(|h| h.family.clone()).unwrap_or_default();
+        if top == fam.id {
+            correct += 1;
+        }
+        println!(
+            "query {:<16} -> {:<10} (scored {}/{} families)",
+            query.id, top, report.scored, db.len()
+        );
+    }
+    println!("top-1 accuracy: {correct}/{n_queries}");
+    Ok(())
+}
+
+fn cmd_align(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let seed = cfg.usize_or("msa.seed", 11)? as u64;
+    let n_seqs = cfg.usize_or("msa.n_seqs", 24)?;
+    let mut rng = XorShift::new(seed);
+    let params = sim::ProteinSimParams {
+        n_families: 1,
+        members_per_family: n_seqs,
+        ..Default::default()
+    };
+    let fam = sim::generate_families(&mut rng, &params).remove(0);
+    let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
+    let phmm = Phmm::traditional(&profile, &TraditionalParams::default())?.fold_silent(4)?;
+    let report = apps::align_all(&phmm, &fam.members, &MsaConfig::default())?;
+    println!(
+        "aligned {}/{} sequences to {} columns; identity {:.1}%; BW fraction {:.1}%",
+        report.rows.len(),
+        n_seqs,
+        report.n_columns,
+        apps::msa_identity(&report) * 100.0,
+        report.timings.bw_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_accel(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let mut acfg = AccelConfig::default();
+    acfg = acfg.with_pes(cfg.usize_or("accel.pes", 64)?);
+    acfg.n_cores = cfg.usize_or("accel.cores", 4)?;
+    let chunk = cfg.usize_or("accel.chunk", 650)?;
+    let wl = Workload::synthetic(
+        chunk as u64,
+        cfg.f64_or("accel.active_states", 500.0)?,
+        cfg.f64_or("accel.degree", 7.0)?,
+        cfg.usize_or("accel.sigma", 4)?,
+        chunk,
+        accel::StepKind::Training,
+    );
+    let bd = accel::cycles(&acfg, &wl);
+    let e = accel::energy(&acfg, &wl, &Default::default());
+    let ap = accel::area_power(&acfg);
+    println!("ApHMM model @ {} PEs, {} ports, chunk {}:", acfg.n_pes, acfg.mem_ports, chunk);
+    println!(
+        "  cycles: fwd {:.0}  bwd {:.0}  upd {:.0}  total {:.0} ({:.3} ms @1GHz, mem-bound {:.0}%)",
+        bd.forward,
+        bd.backward,
+        bd.update,
+        bd.total(),
+        bd.seconds(&acfg) * 1e3,
+        bd.mem_bound_fraction * 100.0
+    );
+    println!(
+        "  energy: {:.3} mJ (compute {:.3}, sram {:.3}, dram {:.3}, static {:.3})",
+        e.total() * 1e3,
+        e.compute_j * 1e3,
+        e.sram_j * 1e3,
+        e.dram_j * 1e3,
+        e.static_j * 1e3
+    );
+    println!(
+        "  core: {:.3} mm^2, {:.1} mW; {}-core chip: {:.2} mm^2, {:.2} W",
+        ap.core_area_mm2(),
+        ap.core_power_mw(),
+        acfg.n_cores,
+        ap.chip_area_mm2(acfg.n_cores),
+        ap.chip_power_w(acfg.n_cores)
+    );
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let store = aphmm::runtime::ArtifactStore::load(&dir)?;
+    println!("platform: {}", store.platform());
+    for name in store.names() {
+        let s = store.spec(name).unwrap();
+        println!(
+            "  {name}: entry={} N={} W={} sigma={} T={} results={}",
+            s.entry, s.n, s.w, s.sigma, s.t, s.results
+        );
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let Some(args) = Args::parse() else {
+        eprintln!("{}", usage());
+        return ExitCode::from(2);
+    };
+    let result = match args.cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "correct" => cmd_correct(&args),
+        "search" => cmd_search(&args),
+        "align" => cmd_align(&args),
+        "accel" => cmd_accel(&args),
+        "runtime" => cmd_runtime(&args),
+        _ => {
+            eprintln!("{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Minimizer-based read mapper (minimap2 substitute).
+//!
+//! Apollo's pipeline needs read-to-assembly mappings (the paper uses
+//! minimap2).  This is a compact reimplementation of the same idea:
+//! index the (w, k)-minimizers of the reference, look up each read's
+//! minimizers, and vote on the alignment diagonal (ref_pos − read_pos).
+//! The winning diagonal places the read; chaining/extension is
+//! unnecessary because the pHMM training step absorbs local indels.
+
+use std::collections::HashMap;
+
+use crate::seq::Sequence;
+
+/// Mapper configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MapperConfig {
+    /// k-mer size (DNA default 11 → 4^11 ≈ 4M keys).
+    pub k: usize,
+    /// Minimizer window (take the minimum hash of every `w` k-mers).
+    pub w: usize,
+    /// Minimum minimizer hits to accept a mapping.
+    pub min_hits: usize,
+    /// Diagonal bucket width (tolerates indel drift).
+    pub band: usize,
+}
+
+impl Default for MapperConfig {
+    fn default() -> Self {
+        MapperConfig { k: 11, w: 5, min_hits: 4, band: 64 }
+    }
+}
+
+/// A read placement on the reference.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    /// Inferred start of the read on the reference.
+    pub ref_start: usize,
+    /// Inferred end (exclusive).
+    pub ref_end: usize,
+    /// Number of supporting minimizer hits.
+    pub hits: usize,
+    /// Supporting anchors `(read_pos, ref_pos)`, ascending in `ref_pos`.
+    /// Long noisy reads drift (indels change the read/reference pacing),
+    /// so consumers lift reference coordinates into read coordinates
+    /// through the nearest anchor instead of assuming linearity.
+    pub anchors: Vec<(u32, u32)>,
+}
+
+impl Mapping {
+    /// Read coordinate corresponding to reference position `ref_pos`,
+    /// lifted through the nearest anchor at or before it (falls back to
+    /// the first anchor, then to the global diagonal).
+    pub fn lift_to_read(&self, ref_pos: usize) -> usize {
+        let mut best: Option<(u32, u32)> = None;
+        for &(rp, gp) in &self.anchors {
+            if gp as usize <= ref_pos {
+                best = Some((rp, gp));
+            } else {
+                break;
+            }
+        }
+        let (rp, gp) = best.or_else(|| self.anchors.first().copied()).unwrap_or((0, 0));
+        (rp as i64 + ref_pos as i64 - gp as i64).max(0) as usize
+    }
+}
+
+/// Minimizer index over one reference sequence.
+pub struct MinimizerIndex {
+    cfg: MapperConfig,
+    ref_len: usize,
+    /// minimizer hash → reference positions.
+    table: HashMap<u64, Vec<u32>>,
+}
+
+/// 64-bit mix (splitmix64 finalizer) — k-mer hash.
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Longest subsequence of `(read_pos, ref_pos)` anchors (already sorted
+/// by `ref_pos`) with strictly increasing `read_pos` — O(n log n)
+/// patience chaining.
+fn longest_increasing_chain(anchors: &[(u32, u32)]) -> Vec<(u32, u32)> {
+    if anchors.is_empty() {
+        return Vec::new();
+    }
+    // tails[k] = index of the smallest read_pos ending a chain of len k+1.
+    let mut tails: Vec<usize> = Vec::new();
+    let mut back: Vec<isize> = vec![-1; anchors.len()];
+    for (i, &(rp, _)) in anchors.iter().enumerate() {
+        let pos = tails.partition_point(|&j| anchors[j].0 < rp);
+        if pos > 0 {
+            back[i] = tails[pos - 1] as isize;
+        }
+        if pos == tails.len() {
+            tails.push(i);
+        } else {
+            tails[pos] = i;
+        }
+    }
+    let mut chain = Vec::with_capacity(tails.len());
+    let mut cur = *tails.last().unwrap() as isize;
+    while cur >= 0 {
+        chain.push(anchors[cur as usize]);
+        cur = back[cur as usize];
+    }
+    chain.reverse();
+    chain
+}
+
+/// Rolling 2-bit pack of DNA k-mers; returns (position, hash) minimizers.
+fn minimizers(seq: &[u8], k: usize, w: usize) -> Vec<(u32, u64)> {
+    if seq.len() < k {
+        return Vec::new();
+    }
+    let n_kmers = seq.len() - k + 1;
+    let mut hashes = Vec::with_capacity(n_kmers);
+    let mask = if 2 * k >= 64 { u64::MAX } else { (1u64 << (2 * k)) - 1 };
+    let mut acc = 0u64;
+    for (i, &b) in seq.iter().enumerate() {
+        acc = ((acc << 2) | b as u64) & mask;
+        if i + 1 >= k {
+            hashes.push(mix(acc));
+        }
+    }
+    // Window minima with deduplication of consecutive repeats.
+    let mut out: Vec<(u32, u64)> = Vec::new();
+    for win_start in 0..n_kmers.saturating_sub(w - 1) {
+        let mut best = (win_start, hashes[win_start]);
+        for j in win_start + 1..win_start + w {
+            if hashes[j] < best.1 {
+                best = (j, hashes[j]);
+            }
+        }
+        if out.last().map(|&(p, _)| p as usize) != Some(best.0) {
+            out.push((best.0 as u32, best.1));
+        }
+    }
+    out
+}
+
+impl MinimizerIndex {
+    /// Build the index of a reference sequence.
+    pub fn build(reference: &Sequence, cfg: MapperConfig) -> Self {
+        let mut table: HashMap<u64, Vec<u32>> = HashMap::new();
+        for (pos, h) in minimizers(&reference.data, cfg.k, cfg.w) {
+            table.entry(h).or_default().push(pos);
+        }
+        // Mask over-represented minimizers (repeats) like minimap2 -f.
+        let cap = 64;
+        table.retain(|_, v| v.len() <= cap);
+        MinimizerIndex { cfg, ref_len: reference.len(), table }
+    }
+
+    /// Number of indexed minimizers.
+    pub fn n_minimizers(&self) -> usize {
+        self.table.values().map(|v| v.len()).sum()
+    }
+
+    /// Map one read by diagonal voting; the placement is refined to the
+    /// median raw diagonal of the winning bucket (bucket quantization
+    /// alone would misplace reads by up to `band-1` bases, which would
+    /// poison the downstream pHMM training).
+    pub fn map(&self, read: &Sequence) -> Option<Mapping> {
+        let mut votes: HashMap<i64, usize> = HashMap::new();
+        let mut hits: Vec<(u32, u32, i64)> = Vec::new(); // (read, ref, diff)
+        let band = self.cfg.band as i64;
+        for (rpos, h) in minimizers(&read.data, self.cfg.k, self.cfg.w) {
+            if let Some(ref_positions) = self.table.get(&h) {
+                for &gpos in ref_positions {
+                    let diff = gpos as i64 - rpos as i64;
+                    hits.push((rpos, gpos, diff));
+                    *votes.entry(diff.div_euclid(band)).or_insert(0) += 1;
+                }
+            }
+        }
+        // Merge adjacent diagonal buckets (indel drift across the edge).
+        // Long reads drift beyond one band, so widen the acceptance
+        // window proportionally to the read length (~10% indel drift).
+        let drift_bands = 1 + (read.len() as i64 / 10) / band;
+        let (&best_diag, _) = votes.iter().max_by_key(|&(_, &c)| c)?;
+        let mut anchors: Vec<(u32, u32)> = hits
+            .into_iter()
+            .filter(|&(_, _, d)| (d.div_euclid(band) - best_diag).abs() <= drift_bands)
+            .map(|(rp, gp, _)| (rp, gp))
+            .collect();
+        if anchors.len() < self.cfg.min_hits {
+            return None;
+        }
+        anchors.sort_unstable_by_key(|&(_, gp)| gp);
+        // Chain: keep the longest read-order-monotone subsequence (LIS
+        // over read positions).  Spurious hits — k-mer collisions or
+        // repeat copies inside the widened diagonal window — violate
+        // monotonicity and fall out; a greedy scan would instead let one
+        // false anchor shadow a run of true ones.
+        let anchors = longest_increasing_chain(&anchors);
+        if anchors.len() < self.cfg.min_hits {
+            return None;
+        }
+        let (rp0, gp0) = anchors[0];
+        let start = (gp0 as i64 - rp0 as i64).max(0) as usize;
+        let end = (start + read.len()).min(self.ref_len);
+        if start >= end {
+            return None;
+        }
+        Some(Mapping {
+            ref_start: start.min(self.ref_len - 1),
+            ref_end: end,
+            hits: anchors.len(),
+            anchors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{generate_genome, simulate_read, ErrorProfile, XorShift};
+
+    #[test]
+    fn maps_exact_reads_precisely() {
+        let mut rng = XorShift::new(1);
+        let genome = generate_genome(&mut rng, 20_000);
+        let index = MinimizerIndex::build(&genome, MapperConfig::default());
+        for i in 0..20 {
+            let start = 500 + i * 700;
+            let read = simulate_read(&mut rng, &genome, start, 800, &ErrorProfile::perfect(), i);
+            let m = index.map(&read.seq).expect("exact read must map");
+            assert!(
+                (m.ref_start as i64 - start as i64).abs() <= 64,
+                "start {start} mapped to {}",
+                m.ref_start
+            );
+        }
+    }
+
+    #[test]
+    fn maps_noisy_pacbio_reads() {
+        let mut rng = XorShift::new(2);
+        let genome = generate_genome(&mut rng, 50_000);
+        let index = MinimizerIndex::build(&genome, MapperConfig::default());
+        let mut mapped = 0;
+        let mut correct = 0;
+        for i in 0..50 {
+            let start = rng.below(45_000);
+            let read = simulate_read(&mut rng, &genome, start, 2000, &ErrorProfile::pacbio(), i);
+            if let Some(m) = index.map(&read.seq) {
+                mapped += 1;
+                if (m.ref_start as i64 - start as i64).abs() <= 256 {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(mapped >= 40, "only {mapped}/50 mapped");
+        assert!(correct as f64 >= mapped as f64 * 0.9, "{correct}/{mapped} correct");
+    }
+
+    #[test]
+    fn random_reads_do_not_map() {
+        let mut rng = XorShift::new(3);
+        let genome = generate_genome(&mut rng, 20_000);
+        let index = MinimizerIndex::build(&genome, MapperConfig::default());
+        let mut false_hits = 0;
+        for _ in 0..20 {
+            let junk = Sequence::from_symbols(
+                "junk",
+                crate::testutil::random_seq(&mut rng, 1000, 4),
+            );
+            if index.map(&junk).is_some() {
+                false_hits += 1;
+            }
+        }
+        assert!(false_hits <= 2, "false hits: {false_hits}");
+    }
+
+    #[test]
+    fn short_reads_rejected() {
+        let mut rng = XorShift::new(4);
+        let genome = generate_genome(&mut rng, 5000);
+        let index = MinimizerIndex::build(&genome, MapperConfig::default());
+        let tiny = Sequence::from_symbols("t", vec![0, 1, 2]);
+        assert!(index.map(&tiny).is_none());
+    }
+
+    #[test]
+    fn minimizer_positions_are_sorted_and_dense() {
+        let mut rng = XorShift::new(5);
+        let genome = generate_genome(&mut rng, 10_000);
+        let mins = minimizers(&genome.data, 11, 5);
+        assert!(mins.len() > 1000);
+        for w in mins.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+    }
+}

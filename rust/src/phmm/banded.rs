@@ -1,0 +1,245 @@
+//! Banded dense encoding of emitting pHMM graphs.
+//!
+//! The interchange format between the Rust engine and the AOT-compiled
+//! L2/L1 kernels (DESIGN.md §Hardware-Adaptation): states in topological
+//! order, `a_band[j, w] = P(j -> j+w)` for `0 <= w < W`.  Both designs
+//! produce narrow bands (traditional-folded: W ≈ 2·(max_del+1); EC
+//! design: W ≈ (1+max_del)·(1+max_ins)), which is exactly the spatial
+//! locality ApHMM's Observation 5 exploits over generic HMMs.
+
+use super::graph::Phmm;
+use crate::error::{ApHmmError, Result};
+
+/// Dense banded view of an emitting pHMM.
+#[derive(Clone, Debug)]
+pub struct BandedPhmm {
+    /// Number of states N.
+    pub n: usize,
+    /// Band width W (max forward hop + 1; self-loop = offset 0).
+    pub w: usize,
+    /// Alphabet size Σ.
+    pub sigma: usize,
+    /// Row-major `[N × W]` transition band.
+    pub a_band: Vec<f32>,
+    /// Row-major `[N × Σ]` emissions.
+    pub emit: Vec<f32>,
+    /// Initial distribution `[N]`.
+    pub f_init: Vec<f32>,
+}
+
+impl BandedPhmm {
+    /// Band entry `a[j, w]`.
+    #[inline]
+    pub fn a(&self, j: usize, w: usize) -> f32 {
+        self.a_band[j * self.w + w]
+    }
+
+    /// Emission entry `e[i, c]`.
+    #[inline]
+    pub fn e(&self, i: usize, c: usize) -> f32 {
+        self.emit[i * self.sigma + c]
+    }
+
+    /// Band occupancy: fraction of in-band entries that are nonzero.
+    /// This is the Fig. 4 locality statistic — pHMMs concentrate their
+    /// dependencies in a narrow neighbourhood while generic HMMs spread
+    /// over the full N×N matrix.
+    pub fn occupancy(&self) -> f64 {
+        let nz = self.a_band.iter().filter(|&&p| p > 0.0).count();
+        nz as f64 / self.a_band.len() as f64
+    }
+
+    /// Pad to fixed `(n_pad, w_pad)` for a fixed-shape AOT artifact.
+    /// Extra rows/offsets are zero; extra `f_init` is zero.
+    pub fn pad_to(&self, n_pad: usize, w_pad: usize) -> Result<BandedPhmm> {
+        if n_pad < self.n || w_pad < self.w {
+            return Err(ApHmmError::Banded(format!(
+                "cannot pad ({}, {}) to smaller ({n_pad}, {w_pad})",
+                self.n, self.w
+            )));
+        }
+        let mut a_band = vec![0.0f32; n_pad * w_pad];
+        for j in 0..self.n {
+            a_band[j * w_pad..j * w_pad + self.w]
+                .copy_from_slice(&self.a_band[j * self.w..(j + 1) * self.w]);
+        }
+        let mut emit = vec![0.0f32; n_pad * self.sigma];
+        emit[..self.n * self.sigma].copy_from_slice(&self.emit);
+        // Padded states must still have valid (normalized) emission rows
+        // so the artifact's division guards never see 0/0 on them; they
+        // are unreachable (zero band rows, zero f_init), so any
+        // distribution works.
+        for i in self.n..n_pad {
+            let row = &mut emit[i * self.sigma..(i + 1) * self.sigma];
+            row.iter_mut().for_each(|x| *x = 1.0 / self.sigma as f32);
+        }
+        let mut f_init = vec![0.0f32; n_pad];
+        f_init[..self.n].copy_from_slice(&self.f_init);
+        Ok(BandedPhmm { n: n_pad, w: w_pad, sigma: self.sigma, a_band, emit, f_init })
+    }
+}
+
+impl Phmm {
+    /// Compute the band width W of this graph (1 + max forward hop).
+    pub fn band_width(&self) -> usize {
+        let mut w = 1usize;
+        for i in 0..self.n_states() {
+            for (to, _) in self.outgoing(i) {
+                w = w.max(to as usize - i + 1);
+            }
+        }
+        w
+    }
+
+    /// Lower to the banded dense encoding.  Fails on silent states
+    /// (fold first) — backward edges are impossible by construction
+    /// ([`Phmm::validate`] enforces topological order).
+    pub fn to_banded(&self) -> Result<BandedPhmm> {
+        if self.has_silent_states() {
+            return Err(ApHmmError::Banded(
+                "graph has silent states; call fold_silent() first".into(),
+            ));
+        }
+        let n = self.n_states();
+        let w = self.band_width();
+        let mut a_band = vec![0.0f32; n * w];
+        for j in 0..n {
+            for (to, p) in self.outgoing(j) {
+                a_band[j * w + (to as usize - j)] = p;
+            }
+        }
+        Ok(BandedPhmm {
+            n,
+            w,
+            sigma: self.sigma(),
+            a_band,
+            emit: self.emissions.clone(),
+            f_init: self.f_init.clone(),
+        })
+    }
+
+    /// Write banded parameters back into this graph's CSR arrays
+    /// (the maximization step of batch EM runs on banded accumulators).
+    pub fn update_from_banded(&mut self, banded: &BandedPhmm) -> Result<()> {
+        if banded.n < self.n_states() || banded.sigma != self.sigma() {
+            return Err(ApHmmError::Banded("shape mismatch in update_from_banded".into()));
+        }
+        for j in 0..self.n_states() {
+            let lo = self.out_ptr[j] as usize;
+            let hi = self.out_ptr[j + 1] as usize;
+            for e in lo..hi {
+                let off = self.out_to[e] as usize - j;
+                if off >= banded.w {
+                    return Err(ApHmmError::Banded(format!("edge offset {off} exceeds band")));
+                }
+                self.out_prob[e] = banded.a(j, off);
+            }
+        }
+        let len = self.n_states() * self.sigma();
+        self.emissions[..len].copy_from_slice(&banded.emit[..len]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::{EcDesignParams, Profile, TraditionalParams};
+    use crate::seq::{Sequence, DNA};
+
+    fn ec(len: usize) -> Phmm {
+        let seq = Sequence::from_symbols("r", (0..len).map(|i| (i % 4) as u8).collect());
+        Phmm::error_correction(&seq, &EcDesignParams::default()).unwrap()
+    }
+
+    #[test]
+    fn banded_roundtrips_all_edges() {
+        let g = ec(40);
+        let b = g.to_banded().unwrap();
+        for j in 0..g.n_states() {
+            for (to, p) in g.outgoing(j) {
+                assert_eq!(b.a(j, to as usize - j), p);
+            }
+        }
+        // Every nonzero band entry corresponds to an edge.
+        let n_edges = b.a_band.iter().filter(|&&p| p > 0.0).count();
+        assert_eq!(n_edges, g.n_transitions());
+    }
+
+    #[test]
+    fn ec_band_width_formula() {
+        let params = EcDesignParams::default();
+        let g = ec(60);
+        // Longest hop: M_t -> M_{t + 1 + max_deletions}.
+        let expect = (1 + params.max_deletions) * (1 + params.max_insertions) + 1;
+        assert_eq!(g.band_width(), expect);
+    }
+
+    #[test]
+    fn traditional_folded_band_is_narrow() {
+        let seq = Sequence::from_str("r", "ACGTACGTACGTACGT", DNA).unwrap();
+        let profile = Profile::from_sequence(&seq, DNA, 0.9);
+        let g = Phmm::traditional(&profile, &TraditionalParams::default())
+            .unwrap()
+            .fold_silent(4)
+            .unwrap();
+        let b = g.to_banded().unwrap();
+        assert!(b.w <= 2 * (4 + 2), "W={}", b.w);
+        assert!(b.occupancy() > 0.05);
+    }
+
+    #[test]
+    fn to_banded_rejects_silent_graphs() {
+        let seq = Sequence::from_str("r", "ACGT", DNA).unwrap();
+        let profile = Profile::from_sequence(&seq, DNA, 0.9);
+        let g = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
+        assert!(g.to_banded().is_err());
+    }
+
+    #[test]
+    fn pad_to_keeps_prefix_and_zeroes_rest() {
+        let g = ec(10);
+        let b = g.to_banded().unwrap();
+        let p = b.pad_to(128, 32).unwrap();
+        assert_eq!(p.n, 128);
+        assert_eq!(p.w, 32);
+        for j in 0..b.n {
+            for w in 0..b.w {
+                assert_eq!(p.a(j, w), b.a(j, w));
+            }
+        }
+        assert!(p.a_band[b.n * 32..].iter().all(|&x| x == 0.0));
+        assert_eq!(&p.f_init[..b.n], &b.f_init[..]);
+        assert!(p.f_init[b.n..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pad_to_rejects_shrinking() {
+        let b = ec(20).to_banded().unwrap();
+        assert!(b.pad_to(4, b.w).is_err());
+        assert!(b.pad_to(b.n, 1).is_err());
+    }
+
+    #[test]
+    fn update_from_banded_roundtrip() {
+        let mut g = ec(15);
+        let mut b = g.to_banded().unwrap();
+        // Perturb and renormalize one row in band space.
+        for w in 0..b.w {
+            let v = b.a(0, w);
+            if v > 0.0 {
+                b.a_band[w] = v * 0.5;
+            }
+        }
+        let s: f32 = (0..b.w).map(|w| b.a(0, w)).sum();
+        for w in 0..b.w {
+            b.a_band[w] /= s;
+        }
+        g.update_from_banded(&b).unwrap();
+        let b2 = g.to_banded().unwrap();
+        for w in 0..b.w {
+            assert!((b2.a(0, w) - b.a(0, w)).abs() < 1e-6);
+        }
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,321 @@
+//! Builders for the two pHMM designs.
+
+use super::graph::{GraphBuilder, Phmm, PhmmDesign, StateKind};
+use super::profile::Profile;
+use crate::error::Result;
+use crate::seq::{Alphabet, Sequence};
+
+/// Parameters of the Apollo-style error-correction design (§2.3).
+///
+/// The modified design "avoids loops in the insertion states and uses
+/// transitions to account for deletions instead of deletion states".
+/// Defaults reproduce the paper's topology statistics: each match state
+/// has `1 (match) + 1 (insertion) + max_deletions (skips)` ≈ 7 outgoing
+/// transitions, within the reported 3–12 range.
+#[derive(Clone, Copy, Debug)]
+pub struct EcDesignParams {
+    /// Maximum chained insertion states per position (no loops).
+    pub max_insertions: usize,
+    /// Maximum deletion length representable as skip transitions.
+    pub max_deletions: usize,
+    /// P(match transition M_t -> M_{t+1}).
+    pub t_match: f32,
+    /// P(opening an insertion M_t -> I_t^1).
+    pub t_ins: f32,
+    /// Total deletion probability, split geometrically over skip lengths.
+    pub t_del_total: f32,
+    /// Geometric decay factor of deletion lengths (del_j ∝ decay^-j).
+    pub del_decay: f32,
+    /// P(extending an insertion chain I^x -> I^{x+1}).
+    pub t_ins_ext: f32,
+    /// Emission probability of the represented character in match states.
+    pub match_emit: f32,
+    /// Initial-state spread: f_init mass decays geometrically over the
+    /// first few match states to tolerate fuzzy read anchoring.
+    pub init_spread: usize,
+}
+
+impl Default for EcDesignParams {
+    fn default() -> Self {
+        EcDesignParams {
+            max_insertions: 3,
+            max_deletions: 5,
+            t_match: 0.85,
+            t_ins: 0.10,
+            t_del_total: 0.05,
+            del_decay: 2.5,
+            t_ins_ext: 0.30,
+            match_emit: 0.97,
+            init_spread: 3,
+        }
+    }
+}
+
+/// Global transition parameters of the traditional design.
+#[derive(Clone, Copy, Debug)]
+pub struct TraditionalParams {
+    /// M -> M.
+    pub a_mm: f32,
+    /// M -> I (insertion open).
+    pub a_mi: f32,
+    /// M -> D (deletion open).
+    pub a_md: f32,
+    /// I -> M (insertion close).
+    pub a_im: f32,
+    /// I -> I (self-loop).
+    pub a_ii: f32,
+    /// D -> M (deletion close).
+    pub a_dm: f32,
+    /// D -> D (deletion extend).
+    pub a_dd: f32,
+}
+
+impl Default for TraditionalParams {
+    fn default() -> Self {
+        TraditionalParams {
+            a_mm: 0.90,
+            a_mi: 0.05,
+            a_md: 0.05,
+            a_im: 0.70,
+            a_ii: 0.30,
+            a_dm: 0.70,
+            a_dd: 0.30,
+        }
+    }
+}
+
+/// Emission row concentrated on `target` with probability `peak`.
+fn peaked_emission(sigma: usize, target: u8, peak: f32) -> Vec<f32> {
+    let rest = (1.0 - peak) / (sigma - 1) as f32;
+    let mut row = vec![rest; sigma];
+    row[target as usize] = peak;
+    row
+}
+
+/// Geometrically decaying f_init over the first `spread` match states.
+fn spread_init(n_states: usize, match_indices: &[u32], spread: usize) -> Vec<f32> {
+    let mut f_init = vec![0.0f32; n_states];
+    let k = spread.min(match_indices.len()).max(1);
+    let mut mass = 1.0f32;
+    for (rank, &mi) in match_indices.iter().take(k).enumerate() {
+        let p = if rank + 1 == k { mass } else { mass * 0.75 };
+        f_init[mi as usize] = p;
+        mass -= p;
+    }
+    let s: f32 = f_init.iter().sum();
+    f_init.iter_mut().for_each(|x| *x /= s);
+    f_init
+}
+
+impl Phmm {
+    /// Build the Apollo-style error-correction pHMM for `reference`.
+    ///
+    /// State layout per reference position `t`:
+    /// `M_t, I_t^1, .., I_t^k` at indices `(k+1)*t ..`, which makes the
+    /// graph banded with `W = (1 + max_deletions) * (k+1)` (DESIGN.md).
+    pub fn error_correction(reference: &Sequence, params: &EcDesignParams) -> Result<Phmm> {
+        let alphabet = crate::seq::DNA;
+        Phmm::error_correction_for(reference, params, alphabet)
+    }
+
+    /// [`Phmm::error_correction`] generalized over the alphabet.
+    pub fn error_correction_for(
+        reference: &Sequence,
+        params: &EcDesignParams,
+        alphabet: Alphabet,
+    ) -> Result<Phmm> {
+        let l = reference.len();
+        let k = params.max_insertions;
+        let sigma = alphabet.size();
+        let mut b = GraphBuilder::new(PhmmDesign::ErrorCorrection, alphabet);
+        let uniform = vec![1.0 / sigma as f32; sigma];
+
+        // States: position-major, match first then its insertion chain.
+        let midx = |t: usize| ((k + 1) * t) as u32;
+        let iidx = |t: usize, x: usize| ((k + 1) * t + x) as u32; // x in 1..=k
+        let mut match_indices = Vec::with_capacity(l);
+        for t in 0..l {
+            let m = b.add_state(
+                StateKind::Match,
+                t as u32,
+                peaked_emission(sigma, reference.data[t], params.match_emit),
+            );
+            match_indices.push(m);
+            for _x in 1..=k {
+                b.add_state(StateKind::Insertion, t as u32, uniform.clone());
+            }
+        }
+
+        // Deletion skip weights del_j ∝ decay^-j, j = 1..=max_deletions.
+        let mut del_w: Vec<f32> =
+            (1..=params.max_deletions).map(|j| params.del_decay.powi(-(j as i32))).collect();
+        let dw_sum: f32 = del_w.iter().sum();
+        del_w.iter_mut().for_each(|w| *w *= params.t_del_total / dw_sum);
+
+        for t in 0..l {
+            // The last position is terminal: no insertion chain either,
+            // since its insertions could never rejoin a match state and
+            // would otherwise pollute the Viterbi consensus.
+            if t + 1 >= l {
+                break;
+            }
+            // Match-state row: insertion open, match, deletion skips.
+            // Rows are renormalized by the builder after end clamping.
+            if k > 0 {
+                b.add_edge(midx(t), iidx(t, 1), params.t_ins);
+            }
+            b.add_edge(midx(t), midx(t + 1), params.t_match);
+            for (j, &w) in del_w.iter().enumerate() {
+                let target = t + 2 + j; // skip j+1 characters
+                if target < l {
+                    b.add_edge(midx(t), midx(target), w);
+                }
+            }
+            // Insertion chain: extend or return to the next match.
+            for x in 1..=k {
+                b.add_edge(iidx(t, x), midx(t + 1), 1.0 - params.t_ins_ext);
+                if x < k {
+                    b.add_edge(iidx(t, x), iidx(t, x + 1), params.t_ins_ext);
+                }
+            }
+        }
+
+        let n = b.kinds.len();
+        let f_init = spread_init(n, &match_indices, params.init_spread);
+        b.build(f_init)
+    }
+
+    /// Build the traditional M/I/D pHMM from a per-position [`Profile`].
+    ///
+    /// The returned graph contains silent deletion states; call
+    /// [`Phmm::fold_silent`] before running the compute engines.
+    pub fn traditional(profile: &Profile, params: &TraditionalParams) -> Result<Phmm> {
+        let l = profile.len();
+        let alphabet = profile.alphabet;
+        let sigma = alphabet.size();
+        let mut b = GraphBuilder::new(PhmmDesign::Traditional, alphabet);
+        let uniform = vec![1.0 / sigma as f32; sigma];
+
+        // Layout per position: M = 3t, I = 3t+1, D = 3t+2.
+        let midx = |t: usize| (3 * t) as u32;
+        let iidx = |t: usize| (3 * t + 1) as u32;
+        let didx = |t: usize| (3 * t + 2) as u32;
+        let mut match_indices = Vec::with_capacity(l);
+        for t in 0..l {
+            let m = b.add_state(StateKind::Match, t as u32, profile.match_row(t).to_vec());
+            match_indices.push(m);
+            b.add_state(StateKind::Insertion, t as u32, uniform.clone());
+            b.add_state(StateKind::Deletion, t as u32, vec![0.0; sigma]);
+        }
+
+        for t in 0..l {
+            b.add_edge(midx(t), iidx(t), params.a_mi);
+            if t + 1 < l {
+                b.add_edge(midx(t), midx(t + 1), params.a_mm);
+                b.add_edge(midx(t), didx(t + 1), params.a_md);
+                b.add_edge(iidx(t), midx(t + 1), params.a_im);
+                b.add_edge(didx(t), midx(t + 1), params.a_dm);
+            }
+            b.add_edge(iidx(t), iidx(t), params.a_ii);
+            if t + 2 < l {
+                b.add_edge(didx(t), didx(t + 1), params.a_dd);
+            }
+        }
+
+        let n = b.kinds.len();
+        let f_init = spread_init(n, &match_indices, 1);
+        b.build(f_init)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::{DNA, PROTEIN};
+
+    fn ec_graph(len: usize) -> Phmm {
+        let seq = Sequence::from_symbols("ref", (0..len).map(|i| (i % 4) as u8).collect());
+        Phmm::error_correction(&seq, &EcDesignParams::default()).unwrap()
+    }
+
+    #[test]
+    fn ec_design_shape() {
+        let params = EcDesignParams::default();
+        let g = ec_graph(50);
+        assert_eq!(g.n_states(), 50 * (params.max_insertions + 1));
+        assert!(!g.has_silent_states());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn ec_mean_out_degree_in_paper_range() {
+        let g = ec_graph(200);
+        let d = g.mean_out_degree();
+        // Paper: 3-12 distinct transitions per state, ~7 for match states.
+        assert!((1.5..12.0).contains(&d), "degree={d}");
+    }
+
+    #[test]
+    fn ec_match_state_degree() {
+        let g = ec_graph(100);
+        let params = EcDesignParams::default();
+        // An interior match state: ins open + match + max_deletions skips.
+        let m10 = (params.max_insertions + 1) * 10;
+        let deg = g.outgoing(m10).count();
+        assert_eq!(deg, 2 + params.max_deletions);
+    }
+
+    #[test]
+    fn ec_no_insertion_loops() {
+        let g = ec_graph(30);
+        for i in 0..g.n_states() {
+            for (to, _) in g.outgoing(i) {
+                assert_ne!(to as usize, i, "self loop at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn ec_emission_peaked_on_reference() {
+        let seq = Sequence::from_str("r", "ACGT", DNA).unwrap();
+        let g = Phmm::error_correction(&seq, &EcDesignParams::default()).unwrap();
+        let k1 = EcDesignParams::default().max_insertions + 1;
+        for (t, &ch) in seq.data.iter().enumerate() {
+            let m = t * k1;
+            assert!(g.emission(m, ch) > 0.9);
+        }
+    }
+
+    #[test]
+    fn traditional_design_has_silent_states() {
+        let profile = Profile::from_sequence(
+            &Sequence::from_str("p", "ACDEFGHIKL", PROTEIN).unwrap(),
+            PROTEIN,
+            0.9,
+        );
+        let g = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
+        assert!(g.has_silent_states());
+        assert_eq!(g.n_states(), 30);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn traditional_insertion_self_loop_present() {
+        let profile = Profile::from_sequence(
+            &Sequence::from_str("p", "ACGTAC", DNA).unwrap(),
+            DNA,
+            0.9,
+        );
+        let g = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
+        let i0 = 1usize;
+        assert!(g.outgoing(i0).any(|(to, _)| to as usize == i0));
+    }
+
+    #[test]
+    fn tiny_references_build() {
+        for len in 1..6 {
+            let g = ec_graph(len);
+            g.validate().unwrap();
+        }
+    }
+}

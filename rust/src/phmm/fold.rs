@@ -1,0 +1,204 @@
+//! Silent-state elimination (deletion folding).
+//!
+//! The compute engines — sparse, banded, and the AOT kernels — require
+//! *emitting-only* graphs so every timestep consumes exactly one
+//! character (the uniform recurrence of Eq. 1/2 and of the banded
+//! kernels).  The traditional design's deletion states are silent, so
+//! before compute we fold them away: every path
+//! `i -> D -> D -> ... -> j` through silent states becomes a direct edge
+//! `i -> j` carrying the product of the path probabilities.  This is the
+//! standard silent-state elimination (Durbin et al. §3.4) and is exact up
+//! to the configured maximum chain length (long deletion chains carry
+//! geometrically vanishing mass; dropped remainders are renormalized
+//! away, and `max_chain` bounds the band width of the folded graph).
+
+use super::graph::{GraphBuilder, Phmm, PhmmDesign};
+use crate::error::{ApHmmError, Result};
+
+impl Phmm {
+    /// Fold silent (deletion) states into direct transitions, returning
+    /// an emitting-only graph.  `max_chain` caps the folded deletion
+    /// length (the paper's EC design default of 5 is a good choice).
+    ///
+    /// State indices are remapped (silent states removed); the mapping
+    /// preserves topological order, so the folded graph remains banded.
+    pub fn fold_silent(&self, max_chain: usize) -> Result<Phmm> {
+        if !self.has_silent_states() {
+            return Ok(self.clone());
+        }
+        let n = self.n_states();
+        // Remap emitting states to dense indices.
+        let mut new_index = vec![u32::MAX; n];
+        let mut n_new = 0u32;
+        for i in 0..n {
+            if !self.kinds[i].is_silent() {
+                new_index[i] = n_new;
+                n_new += 1;
+            }
+        }
+
+        let mut b = GraphBuilder::new(PhmmDesign::TraditionalFolded, self.alphabet);
+        for i in 0..n {
+            if !self.kinds[i].is_silent() {
+                b.add_state(self.kinds[i], self.position[i], self.emission_row(i).to_vec());
+            }
+        }
+
+        // For each emitting source, accumulate direct edges and walk
+        // silent chains depth-first with probability products.
+        let mut new_init = vec![0.0f32; n_new as usize];
+        for i in 0..n {
+            if self.kinds[i].is_silent() {
+                continue;
+            }
+            let src = new_index[i];
+            let mut acc: Vec<(u32, f32)> = Vec::new();
+            self.collect_folded(i, 1.0, 0, max_chain, &mut acc)?;
+            for (to, p) in acc {
+                b.add_edge(src, new_index[to as usize], p);
+            }
+        }
+        // Fold f_init mass sitting on silent states (possible for graphs
+        // built by external formats) through the same chains.
+        for i in 0..n {
+            let mass = self.f_init[i];
+            if mass == 0.0 {
+                continue;
+            }
+            if !self.kinds[i].is_silent() {
+                new_init[new_index[i] as usize] += mass;
+            } else {
+                let mut acc: Vec<(u32, f32)> = Vec::new();
+                self.collect_folded_from_silent(i, mass, 0, max_chain, &mut acc)?;
+                for (to, p) in acc {
+                    new_init[new_index[to as usize] as usize] += p;
+                }
+            }
+        }
+        let s: f32 = new_init.iter().sum();
+        if s <= 0.0 {
+            return Err(ApHmmError::InvalidGraph("f_init vanished during folding".into()));
+        }
+        new_init.iter_mut().for_each(|x| *x /= s);
+        b.build(new_init)
+    }
+
+    /// Accumulate folded edges out of emitting state `i`.
+    fn collect_folded(
+        &self,
+        i: usize,
+        weight: f32,
+        depth: usize,
+        max_chain: usize,
+        acc: &mut Vec<(u32, f32)>,
+    ) -> Result<()> {
+        for (to, p) in self.outgoing(i) {
+            let w = weight * p;
+            if !self.kinds[to as usize].is_silent() {
+                acc.push((to, w));
+            } else if depth < max_chain {
+                self.collect_folded_from_silent(to as usize, w, depth + 1, max_chain, acc)?;
+            }
+            // else: drop the vanishing tail; builder renormalizes.
+        }
+        Ok(())
+    }
+
+    /// Walk outward from a silent state, multiplying probabilities.
+    fn collect_folded_from_silent(
+        &self,
+        silent: usize,
+        weight: f32,
+        depth: usize,
+        max_chain: usize,
+        acc: &mut Vec<(u32, f32)>,
+    ) -> Result<()> {
+        for (to, p) in self.outgoing(silent) {
+            let w = weight * p;
+            if !self.kinds[to as usize].is_silent() {
+                acc.push((to, w));
+            } else if depth < max_chain {
+                self.collect_folded_from_silent(to as usize, w, depth + 1, max_chain, acc)?;
+            } else {
+                // Chain longer than max_chain: truncate at this depth by
+                // dropping the remainder (renormalized by the builder).
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::{Profile, StateKind, TraditionalParams};
+    use crate::seq::{Sequence, DNA};
+
+    fn folded(len: usize) -> (Phmm, Phmm) {
+        let seq = Sequence::from_symbols("r", (0..len).map(|i| (i % 4) as u8).collect());
+        let profile = Profile::from_sequence(&seq, DNA, 0.9);
+        let g = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
+        let f = g.fold_silent(5).unwrap();
+        (g, f)
+    }
+
+    #[test]
+    fn folding_removes_all_silent_states() {
+        let (g, f) = folded(20);
+        assert!(g.has_silent_states());
+        assert!(!f.has_silent_states());
+        assert_eq!(f.n_states(), 40); // M + I per position
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn folding_preserves_topological_order() {
+        let (_, f) = folded(15);
+        for i in 0..f.n_states() {
+            for (to, _) in f.outgoing(i) {
+                assert!(to as usize >= i);
+            }
+        }
+    }
+
+    #[test]
+    fn folded_deletion_paths_have_product_probability() {
+        // M_0 -> D_1 -> M_2 should appear with prob a_md * a_dm
+        // (renormalized only by the negligible truncated tail).
+        let (g, f) = folded(10);
+        let params = TraditionalParams::default();
+        // In the folded graph positions keep order: M_t = 2t, I_t = 2t+1.
+        let m0 = 0usize;
+        let m2 = 4usize;
+        let p: f32 = f
+            .outgoing(m0)
+            .find(|&(to, _)| to as usize == m2)
+            .map(|(_, p)| p)
+            .expect("folded skip edge missing");
+        let want = params.a_md * params.a_dm;
+        assert!((p - want).abs() / want < 0.05, "p={p} want~{want}");
+        drop(g);
+    }
+
+    #[test]
+    fn folding_is_idempotent_on_emitting_graphs() {
+        let (_, f) = folded(8);
+        let f2 = f.fold_silent(5).unwrap();
+        assert_eq!(f.n_states(), f2.n_states());
+        assert_eq!(f.out_to, f2.out_to);
+    }
+
+    #[test]
+    fn ec_design_unchanged_by_folding() {
+        let seq = Sequence::from_str("r", "ACGTACGTAC", DNA).unwrap();
+        let g = Phmm::error_correction(&seq, &Default::default()).unwrap();
+        let f = g.fold_silent(5).unwrap();
+        assert_eq!(g.n_states(), f.n_states());
+    }
+
+    #[test]
+    fn folded_kinds_are_match_and_insertion_only() {
+        let (_, f) = folded(12);
+        assert!(f.kinds.iter().all(|k| !matches!(k, StateKind::Deletion)));
+    }
+}

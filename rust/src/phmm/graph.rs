@@ -1,0 +1,386 @@
+//! Core pHMM graph structure (CSR sparse encoding).
+
+use crate::error::{ApHmmError, Result};
+use crate::seq::Alphabet;
+
+/// Role of a state in the pHMM design.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum StateKind {
+    /// Match/mismatch state for one represented character.
+    Match,
+    /// Insertion state (traditional: self-looping; EC design: chained).
+    Insertion,
+    /// Silent deletion state (traditional design only).
+    Deletion,
+}
+
+impl StateKind {
+    /// Silent states emit no character and must be folded before compute.
+    #[inline]
+    pub fn is_silent(&self) -> bool {
+        matches!(self, StateKind::Deletion)
+    }
+}
+
+/// Which design produced the graph.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PhmmDesign {
+    /// Traditional M/I/D design (Fig. 1).
+    Traditional,
+    /// Traditional design after silent-state folding (emitting only).
+    TraditionalFolded,
+    /// Apollo-style error-correction design (§2.3).
+    ErrorCorrection,
+}
+
+/// A pHMM graph `G(V, A)` in CSR form.
+///
+/// Invariants (checked by [`Phmm::validate`]):
+/// * transitions only go forward or self (`to >= from`), so states are
+///   in topological order;
+/// * outgoing probability rows of non-terminal states sum to 1;
+/// * emission rows of emitting states sum to 1; silent rows are zero;
+/// * `f_init` is a distribution over emitting states.
+#[derive(Clone, Debug)]
+pub struct Phmm {
+    /// Design that produced this graph.
+    pub design: PhmmDesign,
+    /// Symbol alphabet (Σ).
+    pub alphabet: Alphabet,
+    /// Per-state kind.
+    pub kinds: Vec<StateKind>,
+    /// Represented-sequence position of each state.
+    pub position: Vec<u32>,
+    /// CSR row pointers: outgoing edges of state `i` are
+    /// `out_ptr[i]..out_ptr[i+1]` into `out_to` / `out_prob`.
+    pub out_ptr: Vec<u32>,
+    /// CSR target state of each edge.
+    pub out_to: Vec<u32>,
+    /// CSR transition probability of each edge (`α_ij`).
+    pub out_prob: Vec<f32>,
+    /// Dense emission matrix, row-major `[n_states × Σ]` (`e_c(v_i)`).
+    pub emissions: Vec<f32>,
+    /// Initial state distribution.
+    pub f_init: Vec<f32>,
+}
+
+impl Phmm {
+    /// Number of states `|V|`.
+    #[inline]
+    pub fn n_states(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Number of transitions `|A|`.
+    #[inline]
+    pub fn n_transitions(&self) -> usize {
+        self.out_to.len()
+    }
+
+    /// Alphabet size Σ.
+    #[inline]
+    pub fn sigma(&self) -> usize {
+        self.alphabet.size()
+    }
+
+    /// Outgoing edges of state `i` as `(target, probability)` pairs.
+    #[inline]
+    pub fn outgoing(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.out_ptr[i] as usize;
+        let hi = self.out_ptr[i + 1] as usize;
+        self.out_to[lo..hi].iter().copied().zip(self.out_prob[lo..hi].iter().copied())
+    }
+
+    /// Emission probability `e_c(v_i)`.
+    #[inline]
+    pub fn emission(&self, i: usize, c: u8) -> f32 {
+        self.emissions[i * self.sigma() + c as usize]
+    }
+
+    /// Emission row of state `i`.
+    #[inline]
+    pub fn emission_row(&self, i: usize) -> &[f32] {
+        let s = self.sigma();
+        &self.emissions[i * s..(i + 1) * s]
+    }
+
+    /// True if the graph contains silent (deletion) states.
+    pub fn has_silent_states(&self) -> bool {
+        self.kinds.iter().any(|k| k.is_silent())
+    }
+
+    /// Mean number of outgoing transitions per non-terminal state
+    /// (the paper reports 3–12, average ≈7 for the EC design).
+    pub fn mean_out_degree(&self) -> f64 {
+        let non_terminal =
+            (0..self.n_states()).filter(|&i| self.out_ptr[i + 1] > self.out_ptr[i]).count();
+        if non_terminal == 0 {
+            return 0.0;
+        }
+        self.n_transitions() as f64 / non_terminal as f64
+    }
+
+    /// Build the reverse (incoming) CSR: for each state, the list of
+    /// `(source, edge_index)` pairs.  Used by the in-degree analysis in
+    /// the accelerator model and by Fig. 4-style locality statistics.
+    pub fn incoming_csr(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let n = self.n_states();
+        let mut counts = vec![0u32; n + 1];
+        for &to in &self.out_to {
+            counts[to as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let in_ptr = counts.clone();
+        let mut fill = in_ptr.clone();
+        let mut in_from = vec![0u32; self.out_to.len()];
+        let mut in_eidx = vec![0u32; self.out_to.len()];
+        for from in 0..n {
+            for e in self.out_ptr[from] as usize..self.out_ptr[from + 1] as usize {
+                let to = self.out_to[e] as usize;
+                let slot = fill[to] as usize;
+                in_from[slot] = from as u32;
+                in_eidx[slot] = e as u32;
+                fill[to] += 1;
+            }
+        }
+        (in_ptr, in_from, in_eidx)
+    }
+
+    /// Check all structural invariants; returns a descriptive error on
+    /// the first violation.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_states();
+        let s = self.sigma();
+        if self.out_ptr.len() != n + 1 {
+            return Err(ApHmmError::InvalidGraph("out_ptr length".into()));
+        }
+        if self.emissions.len() != n * s {
+            return Err(ApHmmError::InvalidGraph("emissions length".into()));
+        }
+        if self.f_init.len() != n {
+            return Err(ApHmmError::InvalidGraph("f_init length".into()));
+        }
+        for i in 0..n {
+            let lo = self.out_ptr[i] as usize;
+            let hi = self.out_ptr[i + 1] as usize;
+            if lo > hi || hi > self.out_to.len() {
+                return Err(ApHmmError::InvalidGraph(format!("bad CSR row {i}")));
+            }
+            let row_sum: f32 = self.out_prob[lo..hi].iter().sum();
+            if hi > lo && (row_sum - 1.0).abs() > 1e-3 {
+                return Err(ApHmmError::InvalidGraph(format!(
+                    "transition row {i} sums to {row_sum}"
+                )));
+            }
+            for e in lo..hi {
+                let to = self.out_to[e] as usize;
+                if to >= n {
+                    return Err(ApHmmError::InvalidGraph(format!("edge {i}->{to} out of range")));
+                }
+                if to < i {
+                    return Err(ApHmmError::InvalidGraph(format!(
+                        "backward edge {i}->{to} violates topological order"
+                    )));
+                }
+                if !(0.0..=1.0 + 1e-6).contains(&self.out_prob[e]) {
+                    return Err(ApHmmError::InvalidGraph(format!(
+                        "edge {i}->{to} probability {}",
+                        self.out_prob[e]
+                    )));
+                }
+            }
+            let erow = &self.emissions[i * s..(i + 1) * s];
+            let esum: f32 = erow.iter().sum();
+            if self.kinds[i].is_silent() {
+                if esum != 0.0 {
+                    return Err(ApHmmError::InvalidGraph(format!("silent state {i} emits")));
+                }
+            } else if (esum - 1.0).abs() > 1e-3 {
+                return Err(ApHmmError::InvalidGraph(format!("emission row {i} sums to {esum}")));
+            }
+        }
+        let init_sum: f32 = self.f_init.iter().sum();
+        if (init_sum - 1.0).abs() > 1e-3 {
+            return Err(ApHmmError::InvalidGraph(format!("f_init sums to {init_sum}")));
+        }
+        for (i, &p) in self.f_init.iter().enumerate() {
+            if p > 0.0 && self.kinds[i].is_silent() {
+                return Err(ApHmmError::InvalidGraph(format!("f_init mass on silent state {i}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder used by the design constructors.
+pub(crate) struct GraphBuilder {
+    pub design: PhmmDesign,
+    pub alphabet: Alphabet,
+    pub kinds: Vec<StateKind>,
+    pub position: Vec<u32>,
+    pub edges: Vec<Vec<(u32, f32)>>,
+    pub emissions: Vec<Vec<f32>>,
+}
+
+impl GraphBuilder {
+    pub fn new(design: PhmmDesign, alphabet: Alphabet) -> Self {
+        GraphBuilder {
+            design,
+            alphabet,
+            kinds: Vec::new(),
+            position: Vec::new(),
+            edges: Vec::new(),
+            emissions: Vec::new(),
+        }
+    }
+
+    /// Add a state; returns its index.
+    pub fn add_state(&mut self, kind: StateKind, position: u32, emission: Vec<f32>) -> u32 {
+        debug_assert_eq!(emission.len(), self.alphabet.size());
+        self.kinds.push(kind);
+        self.position.push(position);
+        self.edges.push(Vec::new());
+        self.emissions.push(emission);
+        (self.kinds.len() - 1) as u32
+    }
+
+    /// Add a transition edge.
+    pub fn add_edge(&mut self, from: u32, to: u32, prob: f32) {
+        if prob > 0.0 {
+            self.edges[from as usize].push((to, prob));
+        }
+    }
+
+    /// Normalize every non-empty outgoing row to sum to 1.
+    pub fn normalize_rows(&mut self) {
+        for row in &mut self.edges {
+            let s: f32 = row.iter().map(|&(_, p)| p).sum();
+            if s > 0.0 {
+                row.iter_mut().for_each(|e| e.1 /= s);
+            }
+        }
+    }
+
+    /// Finish into a validated [`Phmm`].
+    pub fn build(mut self, f_init: Vec<f32>) -> Result<Phmm> {
+        self.normalize_rows();
+        let n = self.kinds.len();
+        let mut out_ptr = Vec::with_capacity(n + 1);
+        let mut out_to = Vec::new();
+        let mut out_prob = Vec::new();
+        out_ptr.push(0u32);
+        for row in &mut self.edges {
+            row.sort_by_key(|&(to, _)| to);
+            for &(to, p) in row.iter() {
+                out_to.push(to);
+                out_prob.push(p);
+            }
+            out_ptr.push(out_to.len() as u32);
+        }
+        let sigma = self.alphabet.size();
+        let mut emissions = Vec::with_capacity(n * sigma);
+        for row in &self.emissions {
+            emissions.extend_from_slice(row);
+        }
+        let phmm = Phmm {
+            design: self.design,
+            alphabet: self.alphabet,
+            kinds: self.kinds,
+            position: self.position,
+            out_ptr,
+            out_to,
+            out_prob,
+            emissions,
+            f_init,
+        };
+        phmm.validate()?;
+        Ok(phmm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::DNA;
+
+    fn tiny() -> Phmm {
+        // 3-state chain: 0 -> 1 -> 2, uniform emissions.
+        let mut b = GraphBuilder::new(PhmmDesign::ErrorCorrection, DNA);
+        for p in 0..3 {
+            b.add_state(StateKind::Match, p, vec![0.25; 4]);
+        }
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.build(vec![1.0, 0.0, 0.0]).unwrap()
+    }
+
+    #[test]
+    fn csr_shape_and_access() {
+        let g = tiny();
+        assert_eq!(g.n_states(), 3);
+        assert_eq!(g.n_transitions(), 2);
+        let out0: Vec<_> = g.outgoing(0).collect();
+        assert_eq!(out0, vec![(1, 1.0)]);
+        assert!(g.outgoing(2).next().is_none());
+        assert_eq!(g.emission(1, 2), 0.25);
+    }
+
+    #[test]
+    fn incoming_csr_inverts_outgoing() {
+        let g = tiny();
+        let (in_ptr, in_from, in_eidx) = g.incoming_csr();
+        assert_eq!(in_ptr, vec![0, 0, 1, 2]);
+        assert_eq!(in_from, vec![0, 1]);
+        // edge indexes round-trip to the right targets
+        for (slot, &e) in in_eidx.iter().enumerate() {
+            assert_eq!(g.out_to[e as usize] as usize, if slot == 0 { 1 } else { 2 });
+        }
+    }
+
+    #[test]
+    fn validate_rejects_backward_edge() {
+        let mut b = GraphBuilder::new(PhmmDesign::ErrorCorrection, DNA);
+        b.add_state(StateKind::Match, 0, vec![0.25; 4]);
+        b.add_state(StateKind::Match, 1, vec![0.25; 4]);
+        b.add_edge(1, 0, 1.0);
+        assert!(b.build(vec![1.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_emission() {
+        let mut b = GraphBuilder::new(PhmmDesign::ErrorCorrection, DNA);
+        b.add_state(StateKind::Match, 0, vec![0.9, 0.0, 0.0, 0.0]);
+        assert!(b.build(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_init_on_silent() {
+        let mut b = GraphBuilder::new(PhmmDesign::Traditional, DNA);
+        b.add_state(StateKind::Deletion, 0, vec![0.0; 4]);
+        b.add_state(StateKind::Match, 0, vec![0.25; 4]);
+        b.add_edge(0, 1, 1.0);
+        assert!(b.build(vec![1.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn builder_normalizes_rows() {
+        let mut b = GraphBuilder::new(PhmmDesign::ErrorCorrection, DNA);
+        b.add_state(StateKind::Match, 0, vec![0.25; 4]);
+        b.add_state(StateKind::Match, 1, vec![0.25; 4]);
+        b.add_state(StateKind::Match, 2, vec![0.25; 4]);
+        b.add_edge(0, 1, 3.0);
+        b.add_edge(0, 2, 1.0);
+        let g = b.build(vec![1.0, 0.0, 0.0]).unwrap();
+        let probs: Vec<f32> = g.outgoing(0).map(|(_, p)| p).collect();
+        assert!((probs[0] - 0.75).abs() < 1e-6);
+        assert!((probs[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_out_degree_ignores_terminals() {
+        let g = tiny();
+        assert!((g.mean_out_degree() - 1.0).abs() < 1e-9);
+    }
+}

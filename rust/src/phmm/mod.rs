@@ -1,0 +1,32 @@
+//! Profile Hidden Markov Model graphs.
+//!
+//! Two designs, matching the paper's flexibility requirement (§4, key
+//! mechanism 1):
+//!
+//! * **Traditional** (Fig. 1 / Supplemental S1): match, insertion and
+//!   *silent* deletion states per represented character, insertion
+//!   self-loops.  Built by [`Phmm::traditional`] from a [`Profile`];
+//!   silent states are eliminated by [`Phmm::fold_silent`] before the
+//!   compute engines run (DESIGN.md §Numerics).
+//! * **Error correction** (Apollo/Hercules, §2.3): no deletion states
+//!   (deletions become skip transitions) and bounded insertion chains
+//!   instead of loops.  Built by [`Phmm::error_correction`].
+//!
+//! Both lower to the same two compute encodings:
+//!
+//! * a CSR sparse graph ([`Phmm`]) driving the sparse Baum-Welch engine
+//!   with state filtering (the CPU/accelerator-modeled path), and
+//! * a banded dense encoding ([`BandedPhmm`]) — states topologically
+//!   ordered, every transition a forward hop of `< W` — shared bit-for-
+//!   bit with the L2/L1 JAX kernels and the PJRT runtime.
+
+mod banded;
+mod design;
+mod fold;
+mod graph;
+mod profile;
+
+pub use banded::BandedPhmm;
+pub use design::{EcDesignParams, TraditionalParams};
+pub use graph::{Phmm, PhmmDesign, StateKind};
+pub use profile::Profile;

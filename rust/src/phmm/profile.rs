@@ -1,0 +1,113 @@
+//! Per-position emission profiles (the input of the traditional design).
+//!
+//! Stands in for `hmmbuild`: a profile is a length-L matrix of match
+//! emissions.  It can be built from a single consensus/ancestor sequence
+//! with smoothing, or from per-column symbol counts of a set of member
+//! sequences anchored at their alignment spine (a simplified column
+//! counting, since we build families from a known ancestor).
+
+use crate::seq::{Alphabet, Sequence};
+
+/// A match-emission profile of length L over alphabet Σ.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// Alphabet the profile is defined over.
+    pub alphabet: Alphabet,
+    /// Row-major `[L × Σ]` match emission probabilities.
+    pub match_emit: Vec<f32>,
+}
+
+impl Profile {
+    /// Profile length L (number of match columns).
+    pub fn len(&self) -> usize {
+        self.match_emit.len() / self.alphabet.size()
+    }
+
+    /// True if the profile has no columns.
+    pub fn is_empty(&self) -> bool {
+        self.match_emit.is_empty()
+    }
+
+    /// Emission row of column `t`.
+    pub fn match_row(&self, t: usize) -> &[f32] {
+        let s = self.alphabet.size();
+        &self.match_emit[t * s..(t + 1) * s]
+    }
+
+    /// Build from a single sequence: each column emits the sequence
+    /// character with probability `peak`, the rest uniformly.
+    pub fn from_sequence(seq: &Sequence, alphabet: Alphabet, peak: f32) -> Profile {
+        let sigma = alphabet.size();
+        let rest = (1.0 - peak) / (sigma - 1) as f32;
+        let mut match_emit = Vec::with_capacity(seq.len() * sigma);
+        for &c in &seq.data {
+            for s in 0..sigma {
+                match_emit.push(if s == c as usize { peak } else { rest });
+            }
+        }
+        Profile { alphabet, match_emit }
+    }
+
+    /// Build from member sequences column-counted against a spine of
+    /// length `len` (member position i contributes to column i while it
+    /// exists), with `pseudo` Laplace smoothing.  This approximates what
+    /// `hmmbuild` derives from an MSA when members are near-full-length
+    /// copies of a common ancestor — exactly our simulated families.
+    pub fn from_members(members: &[Sequence], len: usize, alphabet: Alphabet, pseudo: f32) -> Profile {
+        let sigma = alphabet.size();
+        let mut counts = vec![pseudo; len * sigma];
+        for m in members {
+            for (i, &c) in m.data.iter().take(len).enumerate() {
+                counts[i * sigma + c as usize] += 1.0;
+            }
+        }
+        for t in 0..len {
+            let row = &mut counts[t * sigma..(t + 1) * sigma];
+            let s: f32 = row.iter().sum();
+            row.iter_mut().for_each(|x| *x /= s);
+        }
+        Profile { alphabet, match_emit: counts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::{DNA, PROTEIN};
+
+    #[test]
+    fn from_sequence_rows_normalized_and_peaked() {
+        let seq = Sequence::from_str("s", "ACGT", DNA).unwrap();
+        let p = Profile::from_sequence(&seq, DNA, 0.85);
+        assert_eq!(p.len(), 4);
+        for t in 0..4 {
+            let row = p.match_row(t);
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!((row[seq.data[t] as usize] - 0.85).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn from_members_counts_dominant_symbol() {
+        let members: Vec<Sequence> = (0..5)
+            .map(|i| Sequence::from_str(format!("m{i}"), "AAAA", DNA).unwrap())
+            .collect();
+        let p = Profile::from_members(&members, 4, DNA, 0.5);
+        for t in 0..4 {
+            assert!(p.match_row(t)[0] > 0.6, "col {t}: {:?}", p.match_row(t));
+        }
+    }
+
+    #[test]
+    fn from_members_handles_short_members() {
+        let members =
+            vec![Sequence::from_str("m", "AC", PROTEIN).unwrap()];
+        let p = Profile::from_members(&members, 5, PROTEIN, 1.0);
+        assert_eq!(p.len(), 5);
+        // Columns beyond member length are uniform (pure pseudocounts).
+        let row = p.match_row(4);
+        let first = row[0];
+        assert!(row.iter().all(|&x| (x - first).abs() < 1e-6));
+    }
+}

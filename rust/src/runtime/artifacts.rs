@@ -1,0 +1,162 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` (written by `python/compile/aot.py`) lists
+//! every lowered executable with its entry point and static shapes:
+//!
+//! ```text
+//! ec_bw_n512_w32_t128 entry=baum_welch_sums n=512 w=16 sigma=4 t=128 args=... results=5
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{ApHmmError, Result};
+
+/// One artifact's static description.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Artifact name (file stem of the `.hlo.txt`).
+    pub name: String,
+    /// L2 entry point (`forward_scores` or `baum_welch_sums`).
+    pub entry: String,
+    /// States N.
+    pub n: usize,
+    /// Band width W.
+    pub w: usize,
+    /// Alphabet size Σ.
+    pub sigma: usize,
+    /// Static chunk length T.
+    pub t: usize,
+    /// Number of results in the output tuple.
+    pub results: usize,
+    /// Path of the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    specs: HashMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Parse `manifest.txt` in `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text, dir, &path.display().to_string())
+    }
+
+    /// Parse manifest text (tests).
+    pub fn parse(text: &str, dir: &Path, origin: &str) -> Result<ArtifactManifest> {
+        let mut specs = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err =
+                |m: String| ApHmmError::Parse { path: origin.into(), msg: format!("line {}: {m}", lineno + 1) };
+            let mut it = line.split_whitespace();
+            let name = it.next().ok_or_else(|| err("missing name".into()))?.to_string();
+            let mut fields: HashMap<&str, &str> = HashMap::new();
+            for tok in it {
+                if let Some((k, v)) = tok.split_once('=') {
+                    fields.insert(k, v);
+                }
+            }
+            let get_usize = |k: &str| -> Result<usize> {
+                fields
+                    .get(k)
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| err(format!("missing/bad field {k}")))
+            };
+            let spec = ArtifactSpec {
+                path: dir.join(format!("{name}.hlo.txt")),
+                entry: fields
+                    .get("entry")
+                    .ok_or_else(|| err("missing entry".into()))?
+                    .to_string(),
+                n: get_usize("n")?,
+                w: get_usize("w")?,
+                sigma: get_usize("sigma")?,
+                t: get_usize("t")?,
+                results: get_usize("results")?,
+                name,
+            };
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(ArtifactManifest { specs })
+    }
+
+    /// Look up a spec by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// All specs, name-sorted.
+    pub fn specs(&self) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self.specs.values().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Find the smallest artifact with `entry` that fits the given
+    /// problem shape (used by the coordinator's backend selection).
+    pub fn find_fitting(
+        &self,
+        entry: &str,
+        n: usize,
+        w: usize,
+        sigma: usize,
+        t: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.specs
+            .values()
+            .filter(|s| s.entry == entry && s.n >= n && s.w >= w && s.sigma == sigma && s.t >= t)
+            .min_by_key(|s| s.n * s.w * s.t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+ec_bw_n512_w32_t128 entry=baum_welch_sums n=512 w=16 sigma=4 t=128 args=x results=5
+pro_fwd_n384_w8_t128 entry=forward_scores n=384 w=8 sigma=20 t=128 args=x results=1
+";
+
+    #[test]
+    fn parses_fields() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a"), "mem").unwrap();
+        let s = m.get("ec_bw_n512_w32_t128").unwrap();
+        assert_eq!(s.entry, "baum_welch_sums");
+        assert_eq!((s.n, s.w, s.sigma, s.t, s.results), (512, 16, 4, 128, 5));
+        assert_eq!(s.path, Path::new("/tmp/a/ec_bw_n512_w32_t128.hlo.txt"));
+    }
+
+    #[test]
+    fn find_fitting_respects_shape() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp"), "mem").unwrap();
+        assert!(m.find_fitting("baum_welch_sums", 300, 12, 4, 100).is_some());
+        assert!(m.find_fitting("baum_welch_sums", 600, 12, 4, 100).is_none());
+        assert!(m.find_fitting("baum_welch_sums", 300, 20, 4, 100).is_none());
+        assert!(m.find_fitting("forward_scores", 300, 8, 20, 128).is_some());
+        assert!(m.find_fitting("forward_scores", 300, 8, 20, 200).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ArtifactManifest::parse("name entry=e n=bad", Path::new("/"), "mem").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.get("ec_bw_n512_w32_t128").is_some());
+        }
+    }
+}

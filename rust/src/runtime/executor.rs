@@ -1,0 +1,202 @@
+//! PJRT execution of the AOT artifacts.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::baumwelch::BandedBwSums;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::BandedPhmm;
+use crate::seq::Sequence;
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+
+/// A compiled artifact.
+struct Compiled {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Loads and compiles every artifact in a directory; executions are
+/// dispatched by artifact name.  Compilation happens once at startup
+/// (`make artifacts` is the only place Python runs).
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+}
+
+impl ArtifactStore {
+    /// Open the PJRT CPU client and compile all artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = HashMap::new();
+        for spec in manifest.specs() {
+            let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            compiled.insert(spec.name.clone(), Compiled { spec: spec.clone(), exe });
+        }
+        Ok(ArtifactStore { client, compiled })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of the compiled artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.compiled.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Spec of a compiled artifact.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.compiled.get(name).map(|c| &c.spec)
+    }
+
+    /// Execute `name` on a banded pHMM and a (padded) sequence.
+    ///
+    /// The graph is padded to the artifact's static `(N, W)`; the
+    /// sequence is padded to `T` with the true length passed in the
+    /// `length` scalar (the L2 model masks padded timesteps).
+    fn execute(
+        &self,
+        name: &str,
+        banded: &BandedPhmm,
+        seq: &Sequence,
+    ) -> Result<(Vec<xla::Literal>, usize, usize)> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| ApHmmError::Runtime(format!("unknown artifact {name:?}")))?;
+        let spec = &c.spec;
+        if seq.len() > spec.t {
+            return Err(ApHmmError::Runtime(format!(
+                "sequence length {} exceeds artifact T={}",
+                seq.len(),
+                spec.t
+            )));
+        }
+        if banded.sigma != spec.sigma {
+            return Err(ApHmmError::Runtime(format!(
+                "alphabet {} != artifact sigma {}",
+                banded.sigma, spec.sigma
+            )));
+        }
+        let padded;
+        let b = if banded.n == spec.n && banded.w == spec.w {
+            banded
+        } else {
+            padded = banded.pad_to(spec.n, spec.w)?;
+            &padded
+        };
+        let a_band = xla::Literal::vec1(&b.a_band).reshape(&[spec.n as i64, spec.w as i64])?;
+        let emit = xla::Literal::vec1(&b.emit).reshape(&[spec.n as i64, spec.sigma as i64])?;
+        let mut seq_pad = vec![0i32; spec.t];
+        for (i, &s) in seq.data.iter().enumerate() {
+            seq_pad[i] = s as i32;
+        }
+        let seq_lit = xla::Literal::vec1(&seq_pad);
+        let f_init = xla::Literal::vec1(&b.f_init);
+        let length = xla::Literal::scalar(seq.len() as i32);
+
+        let result = c.exe.execute::<xla::Literal>(&[a_band, emit, seq_lit, f_init, length])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != spec.results {
+            return Err(ApHmmError::Runtime(format!(
+                "artifact {name} returned {} results, manifest says {}",
+                parts.len(),
+                spec.results
+            )));
+        }
+        Ok((parts, spec.n, spec.w))
+    }
+}
+
+/// Drop-in XLA replacement for [`crate::baumwelch::BandedEngine`].
+///
+/// Holds the store plus the artifact names to dispatch to; results are
+/// truncated back from the artifact's padded static shape to the
+/// caller's `(N, W)`.
+pub struct XlaBandedEngine<'a> {
+    store: &'a ArtifactStore,
+    /// Artifact with entry `baum_welch_sums` (None = scoring only).
+    pub bw_artifact: Option<String>,
+    /// Artifact with entry `forward_scores`.
+    pub fwd_artifact: Option<String>,
+}
+
+impl<'a> XlaBandedEngine<'a> {
+    /// Pick artifacts that fit the given problem shape.
+    pub fn for_shape(
+        store: &'a ArtifactStore,
+        n: usize,
+        w: usize,
+        sigma: usize,
+        t: usize,
+    ) -> Result<XlaBandedEngine<'a>> {
+        let manifest_fit = |entry: &str| {
+            let mut best: Option<&ArtifactSpec> = None;
+            for name in store.names() {
+                let s = store.spec(name).unwrap();
+                if s.entry == entry && s.n >= n && s.w >= w && s.sigma == sigma && s.t >= t {
+                    best = match best {
+                        Some(b) if b.n * b.w * b.t <= s.n * s.w * s.t => Some(b),
+                        _ => Some(s),
+                    };
+                }
+            }
+            best.map(|s| s.name.clone())
+        };
+        let bw = manifest_fit("baum_welch_sums");
+        let fwd = manifest_fit("forward_scores");
+        if bw.is_none() && fwd.is_none() {
+            return Err(ApHmmError::Runtime(format!(
+                "no artifact fits shape n={n} w={w} sigma={sigma} t={t}"
+            )));
+        }
+        Ok(XlaBandedEngine { store, bw_artifact: bw, fwd_artifact: fwd })
+    }
+
+    /// Forward-only log-likelihood (mirrors `BandedEngine::score`).
+    pub fn score(&self, banded: &BandedPhmm, seq: &Sequence) -> Result<f64> {
+        let name = self
+            .fwd_artifact
+            .as_ref()
+            .ok_or_else(|| ApHmmError::Runtime("no forward artifact".into()))?;
+        let (parts, _, _) = self.store.execute(name, banded, seq)?;
+        Ok(parts[0].to_vec::<f32>()?[0] as f64)
+    }
+
+    /// Full expectation pass (mirrors `BandedEngine::bw_sums`).
+    pub fn bw_sums(&self, banded: &BandedPhmm, seq: &Sequence) -> Result<BandedBwSums> {
+        let name = self
+            .bw_artifact
+            .as_ref()
+            .ok_or_else(|| ApHmmError::Runtime("no baum_welch artifact".into()))?;
+        let (parts, n_pad, w_pad) = self.store.execute(name, banded, seq)?;
+        let xi_flat = parts[0].to_vec::<f32>()?;
+        let trans_den_p = parts[1].to_vec::<f32>()?;
+        let e_num_p = parts[2].to_vec::<f32>()?;
+        let gamma_den_p = parts[3].to_vec::<f32>()?;
+        let loglik = parts[4].to_vec::<f32>()?[0];
+
+        // Truncate from the artifact's padded (n_pad, w_pad) back to the
+        // caller's (n, w).
+        let (n, w, sigma) = (banded.n, banded.w, banded.sigma);
+        let mut sums = BandedBwSums::zeros(n, w, sigma);
+        for j in 0..n {
+            sums.xi_band[j * w..(j + 1) * w]
+                .copy_from_slice(&xi_flat[j * w_pad..j * w_pad + w]);
+        }
+        sums.trans_den.copy_from_slice(&trans_den_p[..n]);
+        sums.e_num.copy_from_slice(&e_num_p[..n * sigma]);
+        sums.gamma_den.copy_from_slice(&gamma_den_p[..n]);
+        sums.loglik = loglik;
+        let _ = n_pad;
+        Ok(sums)
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime — executes the AOT-compiled L2/L1 artifacts from Rust.
+//!
+//! `make artifacts` lowers the JAX Baum-Welch model to HLO *text* (see
+//! `python/compile/aot.py` for why text, not serialized protos); this
+//! module loads those files through the `xla` crate (PJRT C API, CPU
+//! plugin), compiles each once, and exposes a [`XlaBandedEngine`] that
+//! is a drop-in replacement for the native
+//! [`crate::baumwelch::BandedEngine`] — same banded inputs, same raw
+//! update sums out.  Python never runs at request time.
+
+mod artifacts;
+mod executor;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use executor::{ArtifactStore, XlaBandedEngine};

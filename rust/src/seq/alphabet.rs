@@ -1,0 +1,110 @@
+//! Alphabets for biological sequences (DNA: Σ=4, protein: Σ=20).
+//!
+//! ApHMM's microarchitecture is parameterized by the alphabet size `nΣ`
+//! (§4.3: "Our microarchitecture design is flexible such that it allows
+//! defining nΣ as a parameter"); everything downstream of this module
+//! treats Σ as a runtime value.
+
+use crate::error::{ApHmmError, Result};
+
+/// An immutable symbol alphabet with O(1) encode/decode.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Alphabet {
+    name: &'static str,
+    chars: &'static [u8],
+}
+
+/// The DNA alphabet (A, C, G, T).
+pub const DNA: Alphabet = Alphabet { name: "dna", chars: b"ACGT" };
+
+/// The 20-letter amino-acid alphabet.
+pub const PROTEIN: Alphabet = Alphabet { name: "protein", chars: b"ACDEFGHIKLMNPQRSTVWY" };
+
+impl Alphabet {
+    /// Number of symbols (`nΣ`): 4 for DNA, 20 for protein.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.chars.len()
+    }
+
+    /// Human-readable name, used in config files and profile headers.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Look up an alphabet by its `name()`.
+    pub fn by_name(name: &str) -> Result<Alphabet> {
+        match name {
+            "dna" => Ok(DNA),
+            "protein" => Ok(PROTEIN),
+            other => Err(ApHmmError::Config(format!("unknown alphabet {other:?}"))),
+        }
+    }
+
+    /// Encode one ASCII character to its symbol index (case-insensitive).
+    #[inline]
+    pub fn encode(&self, ch: u8) -> Result<u8> {
+        let up = ch.to_ascii_uppercase();
+        self.chars
+            .iter()
+            .position(|&c| c == up)
+            .map(|i| i as u8)
+            .ok_or(ApHmmError::InvalidCharacter { ch: ch as char, alphabet: self.name })
+    }
+
+    /// Decode a symbol index back to its ASCII character.
+    #[inline]
+    pub fn decode(&self, sym: u8) -> u8 {
+        self.chars[sym as usize]
+    }
+
+    /// Encode a full ASCII string.
+    pub fn encode_str(&self, s: &str) -> Result<Vec<u8>> {
+        s.bytes().map(|b| self.encode(b)).collect()
+    }
+
+    /// Decode a symbol slice into an ASCII string.
+    pub fn decode_all(&self, syms: &[u8]) -> String {
+        syms.iter().map(|&s| self.decode(s) as char).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dna_roundtrip() {
+        let enc = DNA.encode_str("ACGTacgt").unwrap();
+        assert_eq!(enc, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        assert_eq!(DNA.decode_all(&enc), "ACGTACGT");
+    }
+
+    #[test]
+    fn protein_size() {
+        assert_eq!(PROTEIN.size(), 20);
+        assert_eq!(DNA.size(), 4);
+    }
+
+    #[test]
+    fn protein_roundtrip_all() {
+        let all = "ACDEFGHIKLMNPQRSTVWY";
+        let enc = PROTEIN.encode_str(all).unwrap();
+        assert_eq!(enc.len(), 20);
+        assert_eq!(PROTEIN.decode_all(&enc), all);
+    }
+
+    #[test]
+    fn invalid_char_rejected() {
+        assert!(DNA.encode(b'N').is_err());
+        assert!(PROTEIN.encode(b'B').is_err());
+        assert!(DNA.encode_str("ACGN").is_err());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(Alphabet::by_name("dna").unwrap(), DNA);
+        assert_eq!(Alphabet::by_name("protein").unwrap(), PROTEIN);
+        assert!(Alphabet::by_name("rna").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Biological sequences and alphabets.
+
+mod alphabet;
+mod sequence;
+
+pub use alphabet::{Alphabet, DNA, PROTEIN};
+pub use sequence::Sequence;

@@ -1,0 +1,72 @@
+//! Encoded biological sequences.
+
+use super::Alphabet;
+use crate::error::Result;
+
+/// A named, alphabet-encoded sequence (symbols, not ASCII).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sequence {
+    /// Record identifier (FASTA/FASTQ header token).
+    pub id: String,
+    /// Encoded symbols, each `< alphabet.size()`.
+    pub data: Vec<u8>,
+}
+
+impl Sequence {
+    /// Build from an ASCII string, encoding through `alphabet`.
+    pub fn from_str(id: impl Into<String>, s: &str, alphabet: Alphabet) -> Result<Self> {
+        Ok(Sequence { id: id.into(), data: alphabet.encode_str(s)? })
+    }
+
+    /// Build directly from encoded symbols.
+    pub fn from_symbols(id: impl Into<String>, data: Vec<u8>) -> Self {
+        Sequence { id: id.into(), data }
+    }
+
+    /// Sequence length in symbols.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the sequence has no symbols.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Decode back to ASCII.
+    pub fn to_ascii(&self, alphabet: Alphabet) -> String {
+        alphabet.decode_all(&self.data)
+    }
+
+    /// Borrow a subrange as a new sequence (used by the chunker).
+    pub fn slice(&self, start: usize, end: usize) -> Sequence {
+        Sequence {
+            id: format!("{}:{}-{}", self.id, start, end),
+            data: self.data[start..end.min(self.data.len())].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::DNA;
+
+    #[test]
+    fn roundtrip_and_slice() {
+        let s = Sequence::from_str("r1", "ACGTACGT", DNA).unwrap();
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.to_ascii(DNA), "ACGTACGT");
+        let sub = s.slice(2, 6);
+        assert_eq!(sub.to_ascii(DNA), "GTAC");
+        assert_eq!(sub.id, "r1:2-6");
+    }
+
+    #[test]
+    fn slice_clamps_end() {
+        let s = Sequence::from_str("r", "ACGT", DNA).unwrap();
+        assert_eq!(s.slice(1, 100).to_ascii(DNA), "CGT");
+    }
+}

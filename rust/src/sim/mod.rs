@@ -1,0 +1,20 @@
+//! Simulation substrates.
+//!
+//! The paper evaluates on proprietary-scale real data (PacBio E. coli
+//! reads SAMN06173305 assembled with minimap2+miniasm; the Pfam
+//! database).  Neither the data nor the tools are available here, so this
+//! module provides the synthetic equivalents documented in DESIGN.md:
+//! a reference-genome generator, a PacBio-like long-read simulator with
+//! realistic substitution/insertion/deletion rates, and a protein-family
+//! generator that mimics Pfam-style families (ancestral sequence +
+//! per-member mutations).
+
+mod genome;
+mod protein;
+mod reads;
+mod rng;
+
+pub use genome::generate_genome;
+pub use protein::{generate_families, ProteinFamily, ProteinSimParams};
+pub use reads::{simulate_read, simulate_reads, ErrorProfile, SimulatedRead};
+pub use rng::XorShift;

@@ -1,0 +1,180 @@
+//! PacBio-like long-read simulator.
+//!
+//! Substitutes for the paper's real sample (SAMN06173305: 163,482 PacBio
+//! reads, mean length 5,128, ~10x coverage of E. coli).  The default
+//! error profile follows published PacBio CLR statistics: ~15% total
+//! error dominated by insertions (sub ≈ 1.5%, ins ≈ 9%, del ≈ 4.5%).
+//! Because reads are simulated, their true origin is known exactly —
+//! the mapper (`crate::mapper`) is still exercised end-to-end and its
+//! output validated against this ground truth in integration tests.
+
+use super::XorShift;
+use crate::seq::Sequence;
+
+/// Per-base error rates of the simulated sequencer.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorProfile {
+    /// Substitution probability per base.
+    pub sub: f64,
+    /// Insertion-open probability per base.
+    pub ins: f64,
+    /// Deletion probability per base.
+    pub del: f64,
+    /// Probability of extending an open insertion.
+    pub ins_ext: f64,
+}
+
+impl ErrorProfile {
+    /// PacBio CLR-like profile (the paper's error-correction input).
+    pub fn pacbio() -> Self {
+        ErrorProfile { sub: 0.015, ins: 0.09, del: 0.045, ins_ext: 0.3 }
+    }
+
+    /// Error-free reads (for accuracy-oracle tests).
+    pub fn perfect() -> Self {
+        ErrorProfile { sub: 0.0, ins: 0.0, del: 0.0, ins_ext: 0.0 }
+    }
+
+    /// Total per-base error rate (approximate, ignoring extension).
+    pub fn total(&self) -> f64 {
+        self.sub + self.ins + self.del
+    }
+}
+
+/// A simulated read together with its ground-truth origin.
+#[derive(Clone, Debug)]
+pub struct SimulatedRead {
+    /// The (noisy) read sequence.
+    pub seq: Sequence,
+    /// True start position on the reference.
+    pub ref_start: usize,
+    /// True end position (exclusive) on the reference.
+    pub ref_end: usize,
+    /// Number of injected errors.
+    pub n_errors: usize,
+}
+
+/// Simulate one read of roughly `len` reference bases starting at `start`.
+pub fn simulate_read(
+    rng: &mut XorShift,
+    reference: &Sequence,
+    start: usize,
+    len: usize,
+    profile: &ErrorProfile,
+    id: usize,
+) -> SimulatedRead {
+    let end = (start + len).min(reference.len());
+    let mut data = Vec::with_capacity(len + len / 4);
+    let mut n_errors = 0usize;
+    for pos in start..end {
+        let base = reference.data[pos];
+        // Deletion: skip the base entirely.
+        if rng.chance(profile.del) {
+            n_errors += 1;
+            continue;
+        }
+        // Substitution: emit one of the other three bases.
+        if rng.chance(profile.sub) {
+            let mut b = rng.below(4) as u8;
+            if b == base {
+                b = (b + 1) % 4;
+            }
+            data.push(b);
+            n_errors += 1;
+        } else {
+            data.push(base);
+        }
+        // Insertion burst after the base.
+        if rng.chance(profile.ins) {
+            loop {
+                data.push(rng.below(4) as u8);
+                n_errors += 1;
+                if !rng.chance(profile.ins_ext) {
+                    break;
+                }
+            }
+        }
+    }
+    SimulatedRead {
+        seq: Sequence::from_symbols(format!("read{id}"), data),
+        ref_start: start,
+        ref_end: end,
+        n_errors,
+    }
+}
+
+/// Simulate reads to a target depth of coverage.
+///
+/// Read lengths are drawn from a clipped normal-ish distribution around
+/// `mean_len` (the paper's sample: mean 5,128) and starts are uniform.
+pub fn simulate_reads(
+    rng: &mut XorShift,
+    reference: &Sequence,
+    coverage: f64,
+    mean_len: usize,
+    profile: &ErrorProfile,
+) -> Vec<SimulatedRead> {
+    let genome_len = reference.len();
+    let target_bases = (genome_len as f64 * coverage) as usize;
+    let mut reads = Vec::new();
+    let mut emitted = 0usize;
+    let mut id = 0usize;
+    while emitted < target_bases {
+        // Sum of three uniforms ~ triangular-ish around mean_len.
+        let jitter: f64 = (0..3).map(|_| rng.next_f64()).sum::<f64>() / 3.0;
+        let len = ((mean_len as f64) * (0.5 + jitter)).max(50.0) as usize;
+        let start = if genome_len > len { rng.below(genome_len - len) } else { 0 };
+        let read = simulate_read(rng, reference, start, len, profile, id);
+        emitted += read.seq.len();
+        reads.push(read);
+        id += 1;
+    }
+    reads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::generate_genome;
+
+    #[test]
+    fn perfect_profile_reproduces_reference() {
+        let mut rng = XorShift::new(4);
+        let genome = generate_genome(&mut rng, 2000);
+        let read = simulate_read(&mut rng, &genome, 100, 500, &ErrorProfile::perfect(), 0);
+        assert_eq!(read.seq.data, &genome.data[100..600]);
+        assert_eq!(read.n_errors, 0);
+    }
+
+    #[test]
+    fn pacbio_profile_error_rate_in_band() {
+        let mut rng = XorShift::new(5);
+        let genome = generate_genome(&mut rng, 20_000);
+        let read = simulate_read(&mut rng, &genome, 0, 20_000, &ErrorProfile::pacbio(), 0);
+        let rate = read.n_errors as f64 / 20_000.0;
+        // sub + del + ins/(1-ext) ≈ 0.015 + 0.045 + 0.1286 ≈ 0.19
+        assert!((0.12..0.27).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn coverage_target_met() {
+        let mut rng = XorShift::new(6);
+        let genome = generate_genome(&mut rng, 10_000);
+        let reads = simulate_reads(&mut rng, &genome, 8.0, 1000, &ErrorProfile::pacbio());
+        let total: usize = reads.iter().map(|r| r.seq.len()).sum();
+        assert!(total >= 80_000, "total={total}");
+        for r in &reads {
+            assert!(r.ref_end <= genome.len());
+            assert!(r.ref_start < r.ref_end);
+        }
+    }
+
+    #[test]
+    fn read_clipped_at_genome_end() {
+        let mut rng = XorShift::new(7);
+        let genome = generate_genome(&mut rng, 300);
+        let read = simulate_read(&mut rng, &genome, 250, 500, &ErrorProfile::perfect(), 0);
+        assert_eq!(read.ref_end, 300);
+        assert_eq!(read.seq.len(), 50);
+    }
+}

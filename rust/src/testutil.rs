@@ -1,0 +1,93 @@
+//! Property-testing helpers.
+//!
+//! `proptest` is not in the offline registry, so this module provides a
+//! small deterministic property harness over [`crate::sim::XorShift`]:
+//! run a closure across many seeded random cases and report the failing
+//! seed on panic, which is all the shrinking we need for numeric code
+//! (re-run the single seed to reproduce).
+
+use crate::sim::XorShift;
+
+/// Run `body` for `cases` deterministic seeds.  On failure, the panic
+/// message names the seed so the case can be replayed in isolation.
+pub fn check(cases: usize, mut body: impl FnMut(&mut XorShift)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShift::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats agree within relative tolerance `rtol` plus absolute
+/// floor `atol`.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * a.abs().max(b.abs());
+    assert!(diff <= bound, "assert_close failed: {a} vs {b} (diff {diff} > {bound})");
+}
+
+/// Assert two slices agree elementwise within tolerance.
+#[track_caller]
+pub fn assert_all_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let diff = (x - y).abs();
+        let bound = atol + rtol * x.abs().max(y.abs());
+        assert!(diff <= bound, "assert_all_close failed at [{i}]: {x} vs {y} (diff {diff} > {bound})");
+    }
+}
+
+/// Random probability vector of length `n` (sums to 1, all > 0).
+pub fn random_dist(rng: &mut XorShift, n: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.next_f64() + 1e-3).collect();
+    let s: f64 = v.iter().sum();
+    v.iter_mut().for_each(|x| *x /= s);
+    v
+}
+
+/// Random encoded sequence over an alphabet of size `sigma`.
+pub fn random_seq(rng: &mut XorShift, len: usize, sigma: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(sigma) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case 0")]
+    fn check_reports_seed() {
+        check(5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn random_dist_normalized() {
+        check(10, |rng| {
+            let d = random_dist(rng, 17);
+            assert_close(d.iter().sum::<f64>(), 1.0, 1e-12, 1e-12);
+            assert!(d.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "assert_close failed")]
+    fn assert_close_detects_mismatch() {
+        assert_close(1.0, 1.1, 1e-6, 1e-9);
+    }
+}

@@ -1,0 +1,251 @@
+//! Viterbi decoding (§2.3): consensus-sequence inference from a trained
+//! error-correction pHMM.
+//!
+//! Apollo's inference step: after Baum-Welch training, the most likely
+//! state path through the graph is decoded and translated back into a
+//! corrected sequence — match states emit their argmax character,
+//! insertion states insert theirs, skipped positions are deletions.
+//!
+//! Decoding is over the *graph* (length-free), not an observation: we
+//! search the highest-probability path from an initial state to any
+//! terminal state, where each emitting state contributes its best
+//! emission probability.  This is the consensus-string extraction the
+//! paper attributes to Viterbi [104] as used by Apollo [43].
+
+use crate::error::{ApHmmError, Result};
+use crate::phmm::{Phmm, StateKind};
+use crate::seq::Sequence;
+
+/// A decoded consensus path.
+#[derive(Clone, Debug)]
+pub struct ConsensusPath {
+    /// State indices along the best path.
+    pub states: Vec<u32>,
+    /// Log-probability of the path (transitions + best emissions).
+    pub log_prob: f64,
+    /// The decoded consensus sequence.
+    pub consensus: Sequence,
+}
+
+#[inline]
+fn ln(p: f32) -> f64 {
+    if p <= 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        (p as f64).ln()
+    }
+}
+
+/// Best emission (log-prob, symbol) of a state.
+fn best_emission(phmm: &Phmm, i: usize) -> (f64, u8) {
+    let row = phmm.emission_row(i);
+    let mut best = (f64::NEG_INFINITY, 0u8);
+    for (c, &p) in row.iter().enumerate() {
+        let lp = ln(p);
+        if lp > best.0 {
+            best = (lp, c as u8);
+        }
+    }
+    best
+}
+
+/// Decode the consensus path of a trained (emitting-only) pHMM.
+///
+/// Dynamic program over the DAG in topological (index) order:
+/// `score[i] = best over (f_init[i], max_j score[j] + ln α_{ji}) + ln e*_i`
+/// with backpointers; the best-scoring terminal state wins.  Self-loops
+/// (traditional insertion states) are excluded from the max — a loop
+/// can only decrease a log-probability path score, so this is exact.
+pub fn consensus(phmm: &Phmm) -> Result<ConsensusPath> {
+    if phmm.has_silent_states() {
+        return Err(ApHmmError::InvalidGraph("consensus requires an emitting graph".into()));
+    }
+    let n = phmm.n_states();
+    if n == 0 {
+        return Err(ApHmmError::InvalidGraph("empty graph".into()));
+    }
+    let mut score = vec![f64::NEG_INFINITY; n];
+    let mut back = vec![u32::MAX; n];
+    let mut best_sym = vec![0u8; n];
+    for i in 0..n {
+        let (le, sym) = best_emission(phmm, i);
+        best_sym[i] = sym;
+        if phmm.f_init[i] > 0.0 {
+            score[i] = ln(phmm.f_init[i]) + le;
+        }
+    }
+    // Relax edges in topological (index) order.
+    for j in 0..n {
+        if score[j] == f64::NEG_INFINITY {
+            continue;
+        }
+        for (to, p) in phmm.outgoing(j) {
+            let to_us = to as usize;
+            if to_us == j {
+                continue; // self-loop: never improves a path
+            }
+            let (le, _) = best_emission(phmm, to_us);
+            let cand = score[j] + ln(p) + le;
+            if cand > score[to_us] {
+                score[to_us] = cand;
+                back[to_us] = j as u32;
+            }
+        }
+    }
+    // Best terminal state = state with no outgoing edges (or globally
+    // best if the graph has none, which only happens in degenerate
+    // tests).
+    let mut best_end = usize::MAX;
+    let mut best_score = f64::NEG_INFINITY;
+    for i in 0..n {
+        let terminal = phmm.out_ptr[i + 1] == phmm.out_ptr[i];
+        if terminal && score[i] > best_score {
+            best_score = score[i];
+            best_end = i;
+        }
+    }
+    if best_end == usize::MAX {
+        // No terminal state reachable; fall back to the global best.
+        for i in 0..n {
+            if score[i] > best_score {
+                best_score = score[i];
+                best_end = i;
+            }
+        }
+    }
+    if best_end == usize::MAX || best_score == f64::NEG_INFINITY {
+        return Err(ApHmmError::Numerical("no consensus path found".into()));
+    }
+    // Trace back.
+    let mut states = Vec::new();
+    let mut cur = best_end as u32;
+    loop {
+        states.push(cur);
+        if back[cur as usize] == u32::MAX {
+            break;
+        }
+        cur = back[cur as usize];
+    }
+    states.reverse();
+    let data: Vec<u8> = states.iter().map(|&s| best_sym[s as usize]).collect();
+    Ok(ConsensusPath {
+        log_prob: best_score,
+        consensus: Sequence::from_symbols("consensus", data),
+        states,
+    })
+}
+
+/// Count states of each kind along a path (diagnostics).
+pub fn path_composition(phmm: &Phmm, path: &[u32]) -> (usize, usize) {
+    let mut matches = 0;
+    let mut insertions = 0;
+    for &s in path {
+        match phmm.kinds[s as usize] {
+            StateKind::Match => matches += 1,
+            StateKind::Insertion => insertions += 1,
+            StateKind::Deletion => {}
+        }
+    }
+    (matches, insertions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baumwelch::{train, FilterConfig, TrainConfig};
+    use crate::phmm::EcDesignParams;
+    use crate::sim::{simulate_read, ErrorProfile, XorShift};
+    use crate::testutil;
+
+    #[test]
+    fn untrained_graph_decodes_reference() {
+        // With peaked match emissions and dominant match transitions the
+        // consensus of an untrained EC graph is the reference itself.
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(5, 60);
+            let data = testutil::random_seq(rng, __h0, 4);
+            let reference = Sequence::from_symbols("r", data.clone());
+            let g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+            let path = consensus(&g).unwrap();
+            assert_eq!(path.consensus.data, data);
+            let (m, i) = path_composition(&g, &path.states);
+            assert_eq!(m, data.len());
+            assert_eq!(i, 0);
+        });
+    }
+
+    #[test]
+    fn path_states_are_increasing() {
+        let mut rng = XorShift::new(3);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 40, 4));
+        let g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let path = consensus(&g).unwrap();
+        for w in path.states.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn trained_graph_corrects_substitution_errors() {
+        // End-to-end miniature of Apollo: an erroneous "assembly" is
+        // trained with accurate reads; the consensus must move toward
+        // the true sequence.
+        let mut rng = XorShift::new(17);
+        let true_seq =
+            Sequence::from_symbols("true", testutil::random_seq(&mut rng, 60, 4));
+        // Erroneous assembly: 10% substitutions.
+        let mut assembly = true_seq.data.clone();
+        let mut n_err = 0;
+        for i in 0..assembly.len() {
+            if rng.chance(0.10) {
+                assembly[i] = (assembly[i] + 1 + rng.below(3) as u8) % 4;
+                n_err += 1;
+            }
+        }
+        assert!(n_err > 0);
+        let assembly = Sequence::from_symbols("asm", assembly);
+        let mut g = Phmm::error_correction(&assembly, &EcDesignParams::default()).unwrap();
+        // Accurate reads drawn from the true sequence.
+        let reads: Vec<Sequence> = (0..20)
+            .map(|i| {
+                simulate_read(
+                    &mut rng,
+                    &true_seq,
+                    0,
+                    true_seq.len(),
+                    &ErrorProfile { sub: 0.01, ins: 0.01, del: 0.01, ins_ext: 0.1 },
+                    i,
+                )
+                .seq
+            })
+            .collect();
+        train(
+            &mut g,
+            &reads,
+            &TrainConfig { max_iters: 3, tol: 0.0, filter: FilterConfig::None },
+        )
+        .unwrap();
+        let decoded = consensus(&g).unwrap().consensus;
+        // Hamming-ish distance over the aligned prefix.
+        let dist = |a: &[u8], b: &[u8]| -> usize {
+            let n = a.len().min(b.len());
+            (0..n).filter(|&i| a[i] != b[i]).count() + a.len().abs_diff(b.len())
+        };
+        let before = dist(&assembly.data, &true_seq.data);
+        let after = dist(&decoded.data, &true_seq.data);
+        assert!(
+            after < before,
+            "correction failed: before={before} after={after}"
+        );
+    }
+
+    #[test]
+    fn rejects_silent_graphs() {
+        use crate::phmm::{Profile, TraditionalParams};
+        let seq = Sequence::from_str("r", "ACGT", crate::seq::DNA).unwrap();
+        let profile = Profile::from_sequence(&seq, crate::seq::DNA, 0.9);
+        let g = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
+        assert!(consensus(&g).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration: the multi-worker coordinator with both backends,
+//! including the XLA device thread serving AOT artifacts.
+
+use std::path::Path;
+
+use aphmm::coordinator::{run_jobs, BackendKind, ChunkJob, CoordinatorConfig, Metrics};
+use aphmm::seq::Sequence;
+use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
+use aphmm::testutil;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn make_jobs(rng: &mut XorShift, n_jobs: usize, ref_len: usize, n_reads: usize) -> Vec<ChunkJob> {
+    (0..n_jobs)
+        .map(|id| {
+            let reference =
+                Sequence::from_symbols(format!("c{id}"), testutil::random_seq(rng, ref_len, 4));
+            let reads = (0..n_reads)
+                .map(|i| {
+                    simulate_read(
+                        rng,
+                        &reference,
+                        0,
+                        ref_len,
+                        &ErrorProfile { sub: 0.03, ins: 0.03, del: 0.03, ins_ext: 0.2 },
+                        i,
+                    )
+                    .seq
+                })
+                .collect();
+            ChunkJob { id, reference, reads }
+        })
+        .collect()
+}
+
+#[test]
+fn native_coordinator_corrects_chunks() {
+    let mut rng = XorShift::new(61);
+    let jobs = make_jobs(&mut rng, 8, 80, 6);
+    let references: Vec<Vec<u8>> = jobs.iter().map(|j| j.reference.data.clone()).collect();
+    let metrics = Metrics::default();
+    let outcomes = run_jobs(jobs, &CoordinatorConfig::default(), &metrics).unwrap();
+    assert_eq!(outcomes.len(), 8);
+    // Consensus of a graph trained with low-noise reads stays close to
+    // the reference it was built from.
+    for (o, r) in outcomes.iter().zip(&references) {
+        let n = o.consensus.len().min(r.len());
+        let same = (0..n).filter(|&i| o.consensus.data[i] == r[i]).count();
+        assert!(same as f64 / n as f64 > 0.8, "job {} diverged", o.id);
+    }
+}
+
+#[test]
+fn xla_backend_runs_and_agrees_with_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rng = XorShift::new(62);
+    // Artifact limits: N=512 states => ref_len <= 128 positions at
+    // (k+1)=4 states/position; T=128 => reads <= 128 bases.
+    let jobs = make_jobs(&mut rng, 4, 100, 5);
+    let m_native = Metrics::default();
+    let m_xla = Metrics::default();
+
+    let native = run_jobs(
+        jobs.clone(),
+        &CoordinatorConfig { n_workers: 2, ..Default::default() },
+        &m_native,
+    )
+    .unwrap();
+
+    let cfg = CoordinatorConfig {
+        n_workers: 2,
+        backend: BackendKind::Xla { artifacts_dir: dir },
+        xla_iters: 2,
+        ..Default::default()
+    };
+    let xla = run_jobs(jobs, &cfg, &m_xla).unwrap();
+
+    assert_eq!(native.len(), xla.len());
+    for (a, b) in native.iter().zip(xla.iter()) {
+        // Engines differ (filtering vs dense, f64 vs f32), so exact
+        // consensus equality is not guaranteed — but both must stay
+        // close to each other.
+        let n = a.consensus.len().min(b.consensus.len());
+        let same = (0..n).filter(|&i| a.consensus.data[i] == b.consensus.data[i]).count();
+        assert!(
+            same as f64 / n as f64 > 0.9,
+            "job {}: native and XLA consensus diverge ({}%)",
+            a.id,
+            100 * same / n.max(1)
+        );
+    }
+    assert_eq!(m_xla.summary(1.0).jobs_done, 4);
+}
+
+#[test]
+fn xla_backend_rejects_oversized_reads() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rng = XorShift::new(63);
+    // 200-base reads exceed the T=128 artifact: the device must refuse
+    // (Runtime error) and the coordinator must surface it.
+    let jobs = make_jobs(&mut rng, 1, 200, 2);
+    let cfg = CoordinatorConfig {
+        n_workers: 1,
+        backend: BackendKind::Xla { artifacts_dir: dir },
+        ..Default::default()
+    };
+    let metrics = Metrics::default();
+    let result = run_jobs(jobs, &cfg, &metrics);
+    assert!(result.is_err() || metrics.summary(1.0).jobs_failed > 0);
+}

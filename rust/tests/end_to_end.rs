@@ -1,0 +1,125 @@
+//! Full-pipeline integration tests over the public API: the three
+//! applications run end-to-end on simulated workloads, including file
+//! I/O round-trips — what a downstream user's first session looks like.
+
+use aphmm::apps::{
+    align_all, correct_assembly, msa_identity, CorrectionConfig, FamilyDb, MsaConfig, SearchConfig,
+};
+use aphmm::io::{read_fasta_str, write_fasta, write_phmm_string, read_phmm_str};
+use aphmm::phmm::{Phmm, Profile, TraditionalParams};
+use aphmm::seq::{Sequence, DNA, PROTEIN};
+use aphmm::sim::{
+    generate_families, generate_genome, simulate_reads, ErrorProfile, ProteinSimParams, XorShift,
+};
+
+fn edit_distance(a: &[u8], b: &[u8], band: usize) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 {
+        return m;
+    }
+    let inf = usize::MAX / 2;
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![inf; m + 1];
+    for i in 1..=n {
+        cur.iter_mut().for_each(|x| *x = inf);
+        let lo = i.saturating_sub(band).max(1);
+        let hi = (i + band).min(m);
+        if lo == 1 {
+            cur[0] = i;
+        }
+        for j in lo..=hi {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j - 1] + cost).min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+#[test]
+fn error_correction_pipeline_with_fasta_roundtrip() {
+    let mut rng = XorShift::new(71);
+    let truth = generate_genome(&mut rng, 8_000);
+    // Corrupt with substitutions only (keeps edit-distance banding cheap).
+    let mut noisy = truth.data.clone();
+    for b in noisy.iter_mut() {
+        if rng.chance(0.04) {
+            *b = (*b + 1 + rng.below(3) as u8) % 4;
+        }
+    }
+    let assembly = Sequence::from_symbols("asm", noisy);
+    let reads: Vec<Sequence> =
+        simulate_reads(&mut rng, &truth, 10.0, 1500, &ErrorProfile::pacbio())
+            .into_iter()
+            .map(|r| r.seq)
+            .collect();
+
+    // Round-trip the inputs through FASTA (as the CLI would).
+    let mut buf = Vec::new();
+    write_fasta(&mut buf, &reads, DNA).unwrap();
+    let reads2 = read_fasta_str(&String::from_utf8(buf).unwrap(), DNA, "mem").unwrap();
+    assert_eq!(reads2.len(), reads.len());
+
+    let cfg = CorrectionConfig { chunk_len: 500, ..Default::default() };
+    let report = correct_assembly(&assembly, &reads2, &cfg).unwrap();
+    let before = edit_distance(&assembly.data, &truth.data, 256);
+    let after = edit_distance(&report.corrected.data, &truth.data, 256);
+    assert!(
+        (after as f64) < before as f64 * 0.6,
+        "expected >40% error reduction: before={before} after={after}"
+    );
+    assert!(report.timings.bw_fraction() > 0.5);
+}
+
+#[test]
+fn protein_search_pipeline_with_profile_roundtrip() {
+    let mut rng = XorShift::new(72);
+    let families = generate_families(
+        &mut rng,
+        &ProteinSimParams { n_families: 20, ..Default::default() },
+    );
+    let cfg = SearchConfig::default();
+    let db = FamilyDb::build(&families, PROTEIN, &cfg).unwrap();
+
+    // Round-trip one profile through the .aphmm format and verify the
+    // score is unchanged.
+    let entry = &db.entries[0];
+    let text = write_phmm_string(&entry.phmm);
+    let back = read_phmm_str(&text, "mem").unwrap();
+    let query = &families[0].members[0];
+    let opts = aphmm::baumwelch::ForwardOptions::default();
+    let a = aphmm::baumwelch::score_sparse(&entry.phmm, query, &opts).unwrap();
+    let b = aphmm::baumwelch::score_sparse(&back, query, &opts).unwrap();
+    assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+
+    // Classification quality across several queries.
+    let mut correct = 0;
+    for q in 0..10 {
+        let fam = &families[q % families.len()];
+        let report = db.search(&fam.members[q % fam.members.len()], &cfg).unwrap();
+        if report.hits.first().map(|h| h.family.as_str()) == Some(fam.id.as_str()) {
+            correct += 1;
+        }
+        // Posterior stage must have produced Backward time (Fig. 2).
+        assert!(report.timings.backward_update_ns > 0);
+    }
+    assert!(correct >= 8, "top-1 accuracy {correct}/10");
+}
+
+#[test]
+fn msa_pipeline_quality() {
+    let mut rng = XorShift::new(73);
+    let fam = generate_families(
+        &mut rng,
+        &ProteinSimParams { n_families: 1, members_per_family: 16, ..Default::default() },
+    )
+    .remove(0);
+    let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
+    let phmm = Phmm::traditional(&profile, &TraditionalParams::default())
+        .unwrap()
+        .fold_silent(4)
+        .unwrap();
+    let report = align_all(&phmm, &fam.members, &MsaConfig::default()).unwrap();
+    assert_eq!(report.rows.len(), 16);
+    assert!(msa_identity(&report) > 0.5);
+}

@@ -1,0 +1,129 @@
+//! Integration: the PJRT-executed AOT artifacts must match the native
+//! Rust banded engine (which itself is oracle-tested against log-space
+//! references) — the end-to-end proof that L1/L2/L3 compose.
+//!
+//! Requires `make artifacts` to have produced `artifacts/`.
+
+use std::path::Path;
+
+use aphmm::baumwelch::BandedEngine;
+use aphmm::phmm::{EcDesignParams, Phmm, Profile, TraditionalParams};
+use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
+use aphmm::seq::Sequence;
+use aphmm::sim::XorShift;
+use aphmm::testutil;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn ec_case(rng: &mut XorShift, ref_len: usize, obs_len: usize) -> (Phmm, Sequence) {
+    let data = testutil::random_seq(rng, ref_len, 4);
+    let g = Phmm::error_correction(&Sequence::from_symbols("r", data), &EcDesignParams::default())
+        .unwrap();
+    let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+    (g, obs)
+}
+
+#[test]
+fn artifacts_compile_on_pjrt_cpu() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = ArtifactStore::load(&dir).unwrap();
+    assert!(!store.names().is_empty());
+    assert!(store.platform().to_lowercase().contains("cpu") || !store.platform().is_empty());
+}
+
+#[test]
+fn xla_forward_score_matches_native_banded() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = ArtifactStore::load(&dir).unwrap();
+    let mut rng = XorShift::new(101);
+    for case in 0..5 {
+        let ref_len = 20 + case * 20; // up to 100 positions = 400 states
+        let (g, obs) = ec_case(&mut rng, ref_len, 30 + case * 15);
+        let banded = g.to_banded().unwrap();
+        let engine =
+            XlaBandedEngine::for_shape(&store, banded.n, banded.w, banded.sigma, obs.len())
+                .unwrap();
+        let native = BandedEngine::score(&banded, &obs).unwrap();
+        let xla = engine.score(&banded, &obs).unwrap();
+        testutil::assert_close(xla, native, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn xla_bw_sums_match_native_banded() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = ArtifactStore::load(&dir).unwrap();
+    let mut rng = XorShift::new(202);
+    for case in 0..3 {
+        let (g, obs) = ec_case(&mut rng, 25 + case * 25, 20 + case * 30);
+        let banded = g.to_banded().unwrap();
+        let engine =
+            XlaBandedEngine::for_shape(&store, banded.n, banded.w, banded.sigma, obs.len())
+                .unwrap();
+        let native = BandedEngine::bw_sums(&banded, &obs).unwrap();
+        let xla = engine.bw_sums(&banded, &obs).unwrap();
+
+        testutil::assert_close(xla.loglik as f64, native.loglik as f64, 1e-3, 1e-3);
+        let to64 = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+        testutil::assert_all_close(&to64(&xla.xi_band), &to64(&native.xi_band), 5e-3, 1e-4);
+        testutil::assert_all_close(&to64(&xla.trans_den), &to64(&native.trans_den), 5e-3, 1e-4);
+        testutil::assert_all_close(&to64(&xla.e_num), &to64(&native.e_num), 5e-3, 1e-4);
+        testutil::assert_all_close(&to64(&xla.gamma_den), &to64(&native.gamma_den), 5e-3, 1e-4);
+    }
+}
+
+#[test]
+fn xla_em_step_improves_likelihood() {
+    // Run one full EM step entirely through the XLA path and check the
+    // Baum-Welch guarantee end-to-end.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = ArtifactStore::load(&dir).unwrap();
+    let mut rng = XorShift::new(303);
+    let (g, obs) = ec_case(&mut rng, 40, 50);
+    let mut banded = g.to_banded().unwrap();
+    let engine =
+        XlaBandedEngine::for_shape(&store, banded.n, banded.w, banded.sigma, obs.len()).unwrap();
+    let ll0 = engine.score(&banded, &obs).unwrap();
+    let sums = engine.bw_sums(&banded, &obs).unwrap();
+    sums.apply(&mut banded);
+    let ll1 = engine.score(&banded, &obs).unwrap();
+    assert!(ll1 >= ll0 - 1e-3, "EM via XLA decreased loglik: {ll0} -> {ll1}");
+}
+
+#[test]
+fn xla_protein_scoring_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let store = ArtifactStore::load(&dir).unwrap();
+    let mut rng = XorShift::new(404);
+    let anc = Sequence::from_symbols("anc", testutil::random_seq(&mut rng, 90, 20));
+    let profile = Profile::from_sequence(&anc, aphmm::seq::PROTEIN, 0.8);
+    let g = Phmm::traditional(&profile, &TraditionalParams::default())
+        .unwrap()
+        .fold_silent(3)
+        .unwrap();
+    let banded = g.to_banded().unwrap();
+    let query = Sequence::from_symbols("q", testutil::random_seq(&mut rng, 80, 20));
+    let engine =
+        XlaBandedEngine::for_shape(&store, banded.n, banded.w, banded.sigma, query.len()).unwrap();
+    let native = BandedEngine::score(&banded, &query).unwrap();
+    let xla = engine.score(&banded, &query).unwrap();
+    testutil::assert_close(xla, native, 1e-3, 1e-3);
+}
