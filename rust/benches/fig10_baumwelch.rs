@@ -19,7 +19,12 @@ fn main() {
     let scenario = common::ec_scenario(21, 650, 10);
     let mut graph =
         Phmm::error_correction(&scenario.reference, &EcDesignParams::default()).unwrap();
-    let cfg = TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::Sort { size: 500 } };
+    let cfg = TrainConfig {
+        max_iters: 2,
+        tol: 0.0,
+        filter: FilterConfig::Sort { size: 500 },
+        ..Default::default()
+    };
     let res = train(&mut graph, &scenario.reads, &cfg).unwrap();
 
     let wl_all = Workload::from_train_result(&graph, &res, scenario.reads.len() as u64);

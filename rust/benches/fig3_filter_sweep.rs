@@ -34,6 +34,7 @@ fn main() {
                 Some(size) => FilterConfig::Sort { size },
                 None => FilterConfig::None,
             },
+            ..Default::default()
         };
         let mut graph = Phmm::error_correction(&scenario.reference, &EcDesignParams::default())
             .unwrap();

@@ -9,7 +9,8 @@ mod common;
 use std::path::Path;
 
 use aphmm::baumwelch::{
-    forward_sparse, BandedEngine, BwAccumulators, FilterConfig, ForwardOptions,
+    forward_sparse, forward_sparse_with, reference, score_sparse_with, BandedEngine,
+    BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
@@ -20,6 +21,60 @@ fn main() {
     let graph =
         Phmm::error_correction(&scenario.reference, &EcDesignParams::default()).unwrap();
     let read = &scenario.reads[0];
+
+    // === memoized fused-coefficient kernels vs the pre-memoization
+    // === reference (paper §4.2–4.3; the acceptance metric of the
+    // === optimization — see EXPERIMENTS.md §Perf / ROADMAP open items)
+    common::banner("memoized kernels vs pre-memoization reference (EC workload)");
+    let coeffs = FusedCoeffs::new(&graph);
+    let mut scratch = ForwardScratch::new(&graph);
+    let opts_m = ForwardOptions::default();
+
+    let t_ref_f = common::time_median(7, || {
+        reference::forward_sparse_reference(&graph, read, &opts_m).unwrap();
+    });
+    let t_new_f = common::time_median(7, || {
+        let fwd = forward_sparse_with(&graph, &coeffs, read, &opts_m, &mut scratch).unwrap();
+        scratch.recycle(fwd);
+    });
+    println!(
+        "forward:          reference {:>9.3} ms -> memoized {:>9.3} ms  ({:.2}x)",
+        t_ref_f * 1e3,
+        t_new_f * 1e3,
+        t_ref_f / t_new_f
+    );
+
+    let fwd_m = forward_sparse_with(&graph, &coeffs, read, &opts_m, &mut scratch).unwrap();
+    let t_ref_b = common::time_median(7, || {
+        let mut acc = BwAccumulators::new(&graph);
+        reference::accumulate_reference(&mut acc, &graph, read, &fwd_m).unwrap();
+    });
+    let t_new_b = common::time_median(7, || {
+        let mut acc = BwAccumulators::new(&graph);
+        acc.accumulate_with(&graph, &coeffs, read, &fwd_m, &mut scratch).unwrap();
+    });
+    println!(
+        "backward+update:  reference {:>9.3} ms -> memoized {:>9.3} ms  ({:.2}x)",
+        t_ref_b * 1e3,
+        t_new_b * 1e3,
+        t_ref_b / t_new_b
+    );
+    println!(
+        "combined fwd+bwd: {:.2}x speedup vs pre-memoization kernels",
+        (t_ref_f + t_ref_b) / (t_new_f + t_new_b)
+    );
+
+    // Fresh scratch so the row counter reflects the score kernel alone.
+    let mut score_scratch = ForwardScratch::new(&graph);
+    let t_score = common::time_median(7, || {
+        score_sparse_with(&graph, &coeffs, read, &opts_m, &mut score_scratch).unwrap();
+    });
+    println!(
+        "score-only path:  {:>9.3} ms (O(active states) memory, {} fresh rows ever)",
+        t_score * 1e3,
+        score_scratch.fresh_rows_allocated()
+    );
+    scratch.recycle(fwd_m);
 
     // --- sparse forward, unfiltered ---
     let opts = ForwardOptions::default();

@@ -42,7 +42,12 @@ fn main() {
         train(
             &mut g,
             &scenario.reads,
-            &TrainConfig { max_iters: 1, tol: 0.0, filter: FilterConfig::Sort { size: 500 } },
+            &TrainConfig {
+                max_iters: 1,
+                tol: 0.0,
+                filter: FilterConfig::Sort { size: 500 },
+                ..Default::default()
+            },
         )
         .unwrap();
     });
@@ -51,7 +56,12 @@ fn main() {
         train(
             &mut g,
             &scenario.reads,
-            &TrainConfig { max_iters: 1, tol: 0.0, filter: FilterConfig::histogram_default() },
+            &TrainConfig {
+                max_iters: 1,
+                tol: 0.0,
+                filter: FilterConfig::histogram_default(),
+                ..Default::default()
+            },
         )
         .unwrap();
     });
@@ -84,7 +94,12 @@ fn main() {
 
     // Overall: measured CPU-1 vs modeled single-core ApHMM.
     let mut g = Phmm::error_correction(&scenario.reference, &EcDesignParams::default()).unwrap();
-    let cfg = TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::Sort { size: 500 } };
+    let cfg = TrainConfig {
+        max_iters: 2,
+        tol: 0.0,
+        filter: FilterConfig::Sort { size: 500 },
+        ..Default::default()
+    };
     let res = train(&mut g, &scenario.reads, &cfg).unwrap();
     let cpu_s =
         (res.forward_ns + res.backward_update_ns + res.maximize_ns) as f64 / 1e9;

@@ -33,9 +33,17 @@ fn main() -> aphmm::Result<()> {
     let reads: Vec<_> = (0..8)
         .map(|i| simulate_read(&mut rng, &reference, 0, 100, &ErrorProfile::pacbio(), i).seq)
         .collect();
-    let cfg = TrainConfig { max_iters: 3, tol: 1e-4, filter: FilterConfig::histogram_default() };
+    let cfg = TrainConfig {
+        max_iters: 3,
+        tol: 1e-4,
+        filter: FilterConfig::histogram_default(),
+        ..Default::default()
+    };
     let result = train(&mut graph, &reads, &cfg)?;
     println!("trained {} iterations, mean loglik history: {:?}", result.iters, result.loglik_history);
+    if result.reads_skipped > 0 {
+        println!("({} reads were skipped as numerically dead)", result.reads_skipped);
+    }
 
     // 3. Decode the consensus.
     let decoded = consensus(&graph)?;

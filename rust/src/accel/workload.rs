@@ -165,7 +165,12 @@ mod tests {
         let res = train(
             &mut g,
             &reads,
-            &TrainConfig { max_iters: 1, tol: 0.0, filter: FilterConfig::Sort { size: 64 } },
+            &TrainConfig {
+                max_iters: 1,
+                tol: 0.0,
+                filter: FilterConfig::Sort { size: 64 },
+                n_workers: 1,
+            },
         )
         .unwrap();
         let wl = Workload::from_train_result(&g, &res, 3);

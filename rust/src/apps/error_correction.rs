@@ -38,6 +38,11 @@ pub struct CorrectionConfig {
     pub margin: usize,
     /// Mapper settings.
     pub mapper: MapperConfig,
+    /// E-step worker threads per chunk (1 = single-threaded).  Results
+    /// are bit-identical for any value; raise it when correcting few
+    /// large chunks rather than many small ones (which parallelize
+    /// better at the chunk/coordinator level).
+    pub estep_workers: usize,
 }
 
 impl Default for CorrectionConfig {
@@ -50,6 +55,7 @@ impl Default for CorrectionConfig {
             min_reads: 3,
             margin: 0,
             mapper: MapperConfig::default(),
+            estep_workers: 1,
         }
     }
 }
@@ -73,6 +79,9 @@ pub struct CorrectionReport {
     pub edges_processed: u64,
     /// Total Baum-Welch timesteps.
     pub timesteps: u64,
+    /// Read segments skipped during training (numerically dead),
+    /// aggregated over chunks and EM iterations.
+    pub reads_skipped: u64,
 }
 
 /// Run Apollo-style error correction of `assembly` using `reads`.
@@ -101,6 +110,7 @@ pub fn correct_assembly(
     let mut states_processed = 0u64;
     let mut edges_processed = 0u64;
     let mut timesteps = 0u64;
+    let mut reads_skipped = 0u64;
 
     for c in 0..n_chunks {
         let lo = c * cfg.chunk_len;
@@ -142,7 +152,12 @@ pub fn correct_assembly(
         let mut graph = Phmm::error_correction(&chunk_ref, &cfg.design)?;
         timings.other_ns += t2.elapsed().as_nanos();
 
-        let train_cfg = TrainConfig { max_iters: cfg.max_iters, tol: 1e-3, filter: cfg.filter };
+        let train_cfg = TrainConfig {
+            max_iters: cfg.max_iters,
+            tol: 1e-3,
+            filter: cfg.filter,
+            n_workers: cfg.estep_workers,
+        };
         let res = train(&mut graph, &segments, &train_cfg)?;
         timings.forward_ns += res.forward_ns;
         timings.backward_update_ns += res.backward_update_ns;
@@ -150,6 +165,7 @@ pub fn correct_assembly(
         states_processed += res.states_processed;
         edges_processed += res.edges_processed;
         timesteps += res.timesteps;
+        reads_skipped += res.reads_skipped;
 
         let t3 = Instant::now();
         let decoded = consensus(&graph)?;
@@ -171,6 +187,7 @@ pub fn correct_assembly(
         states_processed,
         edges_processed,
         timesteps,
+        reads_skipped,
     })
 }
 
@@ -270,6 +287,27 @@ mod tests {
             "bw fraction {}",
             report.timings.bw_fraction()
         );
+    }
+
+    #[test]
+    fn estep_workers_do_not_change_output() {
+        // Per-chunk E-step threading uses the deterministic block
+        // reduction: the corrected assembly must be byte-identical.
+        let mut rng = XorShift::new(10);
+        let truth = generate_genome(&mut rng, 900);
+        let assembly = corrupt(&mut rng, &truth, 0.03);
+        let reads = simulate_reads(&mut rng, &truth, 8.0, 450, &ErrorProfile::pacbio());
+        let read_seqs: Vec<Sequence> = reads.into_iter().map(|r| r.seq).collect();
+        let base = CorrectionConfig { chunk_len: 300, ..Default::default() };
+        let one = correct_assembly(&assembly, &read_seqs, &base).unwrap();
+        let four = correct_assembly(
+            &assembly,
+            &read_seqs,
+            &CorrectionConfig { estep_workers: 4, ..base },
+        )
+        .unwrap();
+        assert_eq!(one.corrected.data, four.corrected.data);
+        assert_eq!(one.reads_skipped, four.reads_skipped);
     }
 
     #[test]

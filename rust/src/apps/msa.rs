@@ -9,18 +9,25 @@
 
 use std::time::Instant;
 
-use crate::baumwelch::BandedEngine;
+use crate::baumwelch::{score_sparse_with, BandedEngine, ForwardOptions, ForwardScratch, FusedCoeffs};
 use crate::error::Result;
 use crate::phmm::{Phmm, StateKind};
 use crate::seq::Sequence;
 
 use super::timing::AppTimings;
 
+/// Thresholds above this activate the score-only pre-screen: junk is
+/// rejected by the two-row sparse forward fast path *before* the full
+/// banded posterior decode is paid for it.
+const PRESCREEN_ACTIVE: f64 = -1e8;
+
 /// MSA configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct MsaConfig {
     /// Skip sequences whose length-normalized log-likelihood falls below
-    /// this (junk rejection).
+    /// this (junk rejection).  The default (-1e9) accepts everything;
+    /// any threshold above -1e8 is additionally enforced by a cheap
+    /// score-only pre-screen ahead of posterior decoding.
     pub min_avg_loglik: f64,
 }
 
@@ -156,12 +163,32 @@ pub fn align_all(phmm: &Phmm, seqs: &[Sequence], cfg: &MsaConfig) -> Result<MsaR
         .unwrap_or(0);
     timings.other_ns += t0.elapsed().as_nanos();
 
+    // Score-only pre-screen state (built only when the threshold is
+    // active): the fused tables are shared across sequences and the
+    // fast path keeps two rows regardless of sequence length.
+    let prescreen = cfg.min_avg_loglik > PRESCREEN_ACTIVE;
+    let coeffs = if prescreen { Some(FusedCoeffs::new(phmm)) } else { None };
+    let mut scratch = ForwardScratch::default();
+
     let mut rows = Vec::with_capacity(seqs.len());
     let mut skipped = 0usize;
     for seq in seqs {
         if seq.is_empty() {
             skipped += 1;
             continue;
+        }
+        if let Some(coeffs) = &coeffs {
+            let t = Instant::now();
+            let verdict =
+                score_sparse_with(phmm, coeffs, seq, &ForwardOptions::default(), &mut scratch);
+            timings.forward_ns += t.elapsed().as_nanos();
+            match verdict {
+                Ok(score) if score.loglik / seq.len() as f64 >= cfg.min_avg_loglik => {}
+                _ => {
+                    skipped += 1;
+                    continue;
+                }
+            }
         }
         match align_one(phmm, &banded, n_columns, seq, &mut timings) {
             Ok(row) => {
@@ -261,6 +288,40 @@ mod tests {
         let (fam, phmm) = family_profile(&mut rng);
         let report = align_all(&phmm, &fam.members, &MsaConfig::default()).unwrap();
         assert!(report.timings.bw_fraction() > 0.4, "{}", report.timings.bw_fraction());
+    }
+
+    #[test]
+    fn prescreen_rejects_junk_before_posterior_decode() {
+        use crate::sim::XorShift as Rng;
+        let mut rng = Rng::new(25);
+        let (fam, phmm) = family_profile(&mut rng);
+        // Random residues score far below real members per residue.
+        let junk = Sequence::from_symbols(
+            "junk",
+            crate::testutil::random_seq(&mut rng, 80, 20),
+        );
+        let mut seqs = fam.members[..4].to_vec();
+        seqs.push(junk.clone());
+        // Pick a threshold strictly between the worst member and the
+        // junk (machine-independent: derived from the scores themselves).
+        let avg = |s: &Sequence| {
+            crate::baumwelch::score_sparse(&phmm, s, &ForwardOptions::default()).unwrap()
+                / s.len() as f64
+        };
+        let mut worst_member = f64::INFINITY;
+        for s in &seqs[..4] {
+            worst_member = worst_member.min(avg(s));
+        }
+        let junk_score = avg(&junk);
+        assert!(
+            worst_member > junk_score,
+            "profile cannot separate members ({worst_member}) from junk ({junk_score})"
+        );
+        let cfg = MsaConfig { min_avg_loglik: (worst_member + junk_score) / 2.0 };
+        let report = align_all(&phmm, &seqs, &cfg).unwrap();
+        assert_eq!(report.rows.len(), 4, "members must survive the pre-screen");
+        assert_eq!(report.skipped, 1, "junk must be rejected");
+        assert!(report.rows.iter().all(|r| r.id != "junk"));
     }
 
     #[test]

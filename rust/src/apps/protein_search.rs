@@ -10,7 +10,10 @@
 use std::collections::HashSet;
 use std::time::Instant;
 
-use crate::baumwelch::{score_sparse, FilterConfig, ForwardOptions};
+use crate::baumwelch::{
+    forward_sparse_with, score_sparse_with, BwAccumulators, FilterConfig, ForwardOptions,
+    ForwardScratch, FusedCoeffs,
+};
 use crate::error::Result;
 use crate::phmm::{Phmm, Profile, TraditionalParams};
 use crate::seq::{Alphabet, Sequence};
@@ -62,6 +65,10 @@ pub struct FamilyEntry {
     pub phmm: Phmm,
     /// k-mer set of the family consensus (pre-filter).
     kmers: HashSet<u64>,
+    /// Memoized per-symbol fused coefficients — database profiles are
+    /// frozen, so the tables are built once per family at load time and
+    /// every query scores through them (paper §4.2 applied to search).
+    coeffs: FusedCoeffs,
 }
 
 /// A database of family pHMMs (the Pfam stand-in).
@@ -118,7 +125,8 @@ impl FamilyDb {
                 Profile::from_members(&fam.members, fam.ancestor.len(), alphabet, 0.5);
             let phmm = Phmm::traditional(&profile, &cfg.params)?.fold_silent(cfg.fold_depth)?;
             let kmers = kmer_set(&fam.ancestor.data, cfg.prefilter_k, alphabet.size());
-            entries.push(FamilyEntry { id: fam.id.clone(), phmm, kmers });
+            let coeffs = FusedCoeffs::new(&phmm);
+            entries.push(FamilyEntry { id: fam.id.clone(), phmm, kmers, coeffs });
         }
         Ok(FamilyDb { entries, alphabet, k: cfg.prefilter_k })
     }
@@ -159,13 +167,19 @@ impl FamilyDb {
         report.timings.other_ns += t0.elapsed().as_nanos();
 
         // ---- Forward scoring (BW) ----
+        // Score-only fast path: two live rows per family (memory
+        // independent of query length), one scratch reused across the
+        // whole candidate list, and each family's precomputed fused
+        // coefficient tables.
         let opts = ForwardOptions { filter: cfg.filter };
+        let mut scratch = ForwardScratch::default();
         let mut hits: Vec<SearchHit> = Vec::new();
         for &i in &candidates {
             let entry = &self.entries[i];
             let t1 = Instant::now();
-            let ll = match score_sparse(&entry.phmm, query, &opts) {
-                Ok(ll) => ll,
+            let ll = match score_sparse_with(&entry.phmm, &entry.coeffs, query, &opts, &mut scratch)
+            {
+                Ok(res) => res.loglik,
                 Err(_) => {
                     report.timings.forward_ns += t1.elapsed().as_nanos();
                     continue;
@@ -188,14 +202,19 @@ impl FamilyDb {
         for hit in hits.iter().take(cfg.posterior_hits) {
             if let Some(entry) = self.entries.iter().find(|e| e.id == hit.family) {
                 let t3 = Instant::now();
-                if let Ok(fwd) = crate::baumwelch::forward_sparse(&entry.phmm, query, &opts) {
-                    report.timings.forward_ns += t3.elapsed().as_nanos();
-                    let t4 = Instant::now();
-                    let mut acc = crate::baumwelch::BwAccumulators::new(&entry.phmm);
-                    let _ = acc.accumulate(&entry.phmm, query, &fwd);
-                    report.timings.backward_update_ns += t4.elapsed().as_nanos();
-                } else {
-                    report.timings.forward_ns += t3.elapsed().as_nanos();
+                match forward_sparse_with(&entry.phmm, &entry.coeffs, query, &opts, &mut scratch) {
+                    Ok(fwd) => {
+                        report.timings.forward_ns += t3.elapsed().as_nanos();
+                        let t4 = Instant::now();
+                        let mut acc = BwAccumulators::new(&entry.phmm);
+                        let _ =
+                            acc.accumulate_with(&entry.phmm, &entry.coeffs, query, &fwd, &mut scratch);
+                        report.timings.backward_update_ns += t4.elapsed().as_nanos();
+                        scratch.recycle(fwd);
+                    }
+                    Err(_) => {
+                        report.timings.forward_ns += t3.elapsed().as_nanos();
+                    }
                 }
             }
         }

@@ -1,0 +1,308 @@
+//! Memoized per-symbol fused-coefficient tables and reusable scratch
+//! pools — the software analogue of ApHMM's on-chip coefficient
+//! memoization (paper §4.2–4.3).
+//!
+//! Both Baum-Welch recurrences multiply every traversed edge by the same
+//! two parameters: the transition probability `α_ij` and the emission
+//! probability `e_s(v_j)` of the edge target for the current symbol.
+//! Those parameters are frozen for the whole E-step of an EM iteration,
+//! so the products can be computed **once per iteration per symbol**
+//! instead of once per edge per timestep per read:
+//!
+//! * [`FusedCoeffs::in_coef_for`]`(s)[e] = α(e) · e_s(to(e))` over the
+//!   *incoming* CSR — the forward pass becomes a pure per-symbol sparse
+//!   matrix-vector product (one multiply-accumulate per edge, no
+//!   emission gather, no post-hoc emission scale per state).
+//! * [`FusedCoeffs::out_coef_for`]`(s)[e]` is the same product over the
+//!   *outgoing* CSR, pre-widened to `f64` — the fused backward + ξ
+//!   update touches one table entry per edge instead of performing two
+//!   `f32→f64` converts, an emission gather and an extra multiply.
+//!
+//! [`ForwardScratch`] complements the tables with reusable buffers: the
+//! dense gather buffer, the backward row pair, the histogram-filter
+//! state, and a pool of [`SparseRow`]s so the per-timestep
+//! `Vec::with_capacity` churn of the original engine disappears
+//! (recycle results with [`ForwardScratch::recycle`]).  One scratch per
+//! worker thread; the coefficient tables are immutable and shared.
+
+use super::filter::{FilterConfig, HistogramFilter};
+use super::sparse::{ForwardResult, SparseRow};
+use crate::phmm::Phmm;
+
+/// Per-symbol fused coefficient tables for one parameter freeze.
+///
+/// Built from a [`Phmm`] by [`FusedCoeffs::new`]; the tables *copy* the
+/// parameters, so the graph may be mutably borrowed again (e.g. by the
+/// maximization step) while the tables are alive — but they must be
+/// rebuilt after any parameter update.
+pub struct FusedCoeffs {
+    pub(super) sigma: usize,
+    pub(super) n_edges: usize,
+    /// Band width W of the graph (1 + max forward hop).
+    pub(super) band: usize,
+    /// Incoming-CSR row pointers (per target state).
+    pub(super) in_ptr: Vec<u32>,
+    /// Source state of each incoming edge.
+    pub(super) in_from: Vec<u32>,
+    /// `α · e_s(to)` per incoming edge, symbol-major `[Σ × |A|]`.
+    pub(super) in_coef: Vec<f32>,
+    /// `α · e_s(to)` per outgoing edge in `f64`, symbol-major `[Σ × |A|]`.
+    pub(super) out_coef: Vec<f64>,
+    /// Snapshot of the nonzero initial distribution.
+    pub(super) init: Vec<(u32, f32)>,
+}
+
+impl FusedCoeffs {
+    /// Precompute the fused tables for the current parameters of `phmm`.
+    ///
+    /// Cost: `O(Σ · |A|)` multiplies — negligible next to the
+    /// `O(T · |A|)` edge traversals of a single observation, and paid
+    /// once per EM iteration (or once per database profile for
+    /// inference-only scoring).
+    pub fn new(phmm: &Phmm) -> FusedCoeffs {
+        let sigma = phmm.sigma();
+        let n = phmm.n_states();
+        let n_edges = phmm.n_transitions();
+        let (in_ptr, in_from, in_eidx) = phmm.incoming_csr();
+
+        let mut in_coef = vec![0.0f32; sigma * n_edges];
+        for to in 0..n {
+            let lo = in_ptr[to] as usize;
+            let hi = in_ptr[to + 1] as usize;
+            let emit = &phmm.emissions[to * sigma..(to + 1) * sigma];
+            for slot in lo..hi {
+                let p = phmm.out_prob[in_eidx[slot] as usize];
+                for (s, &e_s) in emit.iter().enumerate() {
+                    in_coef[s * n_edges + slot] = p * e_s;
+                }
+            }
+        }
+
+        let mut out_coef = vec![0.0f64; sigma * n_edges];
+        for e in 0..n_edges {
+            let to = phmm.out_to[e] as usize;
+            let p = phmm.out_prob[e] as f64;
+            let emit = &phmm.emissions[to * sigma..(to + 1) * sigma];
+            for (s, &e_s) in emit.iter().enumerate() {
+                out_coef[s * n_edges + e] = p * e_s as f64;
+            }
+        }
+
+        FusedCoeffs {
+            sigma,
+            n_edges,
+            band: phmm.band_width(),
+            in_ptr,
+            in_from,
+            in_coef,
+            out_coef,
+            init: phmm.init_states().collect(),
+        }
+    }
+
+    /// Number of edges the tables cover (sanity checks against a graph).
+    #[inline]
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    /// Alphabet size the tables cover.
+    #[inline]
+    pub fn sigma(&self) -> usize {
+        self.sigma
+    }
+
+    /// Incoming fused coefficients of symbol `s` (incoming-slot order).
+    #[inline]
+    pub(super) fn in_coef_for(&self, s: usize) -> &[f32] {
+        &self.in_coef[s * self.n_edges..(s + 1) * self.n_edges]
+    }
+
+    /// Outgoing fused coefficients of symbol `s` (outgoing-edge order).
+    #[inline]
+    pub(super) fn out_coef_for(&self, s: usize) -> &[f64] {
+        &self.out_coef[s * self.n_edges..(s + 1) * self.n_edges]
+    }
+}
+
+/// Reusable per-worker buffers for the sparse kernels.
+///
+/// Sized lazily by [`ForwardScratch::ensure`], so one scratch can be
+/// reused across graphs of different sizes (e.g. scoring a whole family
+/// database).  All buffers are maintained zeroed/empty between calls.
+#[derive(Default)]
+pub struct ForwardScratch {
+    /// Dense gather buffer (≥ n_states, zero outside the active row).
+    pub(super) dense: Vec<f32>,
+    /// Backward value buffer for timestep t+1 (≥ n_states, zeroed).
+    pub(super) b_next: Vec<f64>,
+    /// Backward value buffer for timestep t (≥ n_states, zeroed).
+    pub(super) b_cur: Vec<f64>,
+    /// Histogram-filter state (rebuilt when the bin count changes).
+    pub(super) hist: Option<HistogramFilter>,
+    hist_bins: usize,
+    row_pool: Vec<SparseRow>,
+    rows_vec_pool: Vec<Vec<SparseRow>>,
+    scales_pool: Vec<Vec<f32>>,
+    fresh_rows: u64,
+}
+
+impl ForwardScratch {
+    /// Scratch pre-sized for `phmm`.
+    pub fn new(phmm: &Phmm) -> ForwardScratch {
+        let mut s = ForwardScratch::default();
+        s.ensure(phmm.n_states());
+        s
+    }
+
+    /// Grow the dense/backward buffers to cover `n` states.
+    pub(super) fn ensure(&mut self, n: usize) {
+        if self.dense.len() < n {
+            self.dense.resize(n, 0.0);
+            self.b_next.resize(n, 0.0);
+            self.b_cur.resize(n, 0.0);
+        }
+    }
+
+    /// The zeroed backward row pair (call [`ForwardScratch::ensure`]
+    /// first; the borrower must restore the all-zero invariant).
+    pub(super) fn backward_bufs(&mut self) -> (&mut [f64], &mut [f64]) {
+        (&mut self.b_next, &mut self.b_cur)
+    }
+
+    /// Make the histogram-filter state match `filter`.
+    pub(super) fn ensure_hist(&mut self, filter: &FilterConfig) {
+        if let FilterConfig::Histogram { bins, .. } = *filter {
+            if self.hist.is_none() || self.hist_bins != bins {
+                self.hist = Some(HistogramFilter::new(bins));
+                self.hist_bins = bins;
+            }
+        }
+    }
+
+    /// Pop a cleared row from the pool (allocating only when empty).
+    pub(super) fn take_row(&mut self) -> SparseRow {
+        match self.row_pool.pop() {
+            Some(mut row) => {
+                row.idx.clear();
+                row.val.clear();
+                row
+            }
+            None => {
+                self.fresh_rows += 1;
+                SparseRow::default()
+            }
+        }
+    }
+
+    /// Return a row to the pool.
+    pub(super) fn put_row(&mut self, row: SparseRow) {
+        self.row_pool.push(row);
+    }
+
+    /// Pop a cleared outer rows vector from the pool.
+    pub(super) fn take_rows_vec(&mut self) -> Vec<SparseRow> {
+        self.rows_vec_pool.pop().unwrap_or_default()
+    }
+
+    /// Pop a cleared scales vector from the pool.
+    pub(super) fn take_scales_vec(&mut self) -> Vec<f32> {
+        self.scales_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a finished [`ForwardResult`]'s buffers to the pools so the
+    /// next observation reuses them instead of reallocating.
+    pub fn recycle(&mut self, mut result: ForwardResult) {
+        self.row_pool.append(&mut result.rows);
+        self.rows_vec_pool.push(result.rows);
+        result.scales.clear();
+        self.scales_pool.push(result.scales);
+    }
+
+    /// Number of [`SparseRow`]s ever allocated (pool misses).  Used by
+    /// the memory-profile tests: the score-only fast path acquires a
+    /// constant number of rows regardless of sequence length.
+    pub fn fresh_rows_allocated(&self) -> u64 {
+        self.fresh_rows
+    }
+
+    /// Length of the dense state buffer (memory-profile tests).
+    pub fn dense_len(&self) -> usize {
+        self.dense.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::seq::Sequence;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn ec_graph(rng: &mut XorShift, len: usize) -> Phmm {
+        let data = testutil::random_seq(rng, len, 4);
+        Phmm::error_correction(&Sequence::from_symbols("r", data), &EcDesignParams::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn fused_tables_match_direct_products() {
+        testutil::check(10, |rng| {
+            let len = rng.range(4, 30);
+            let g = ec_graph(rng, len);
+            let c = FusedCoeffs::new(&g);
+            assert_eq!(c.n_edges(), g.n_transitions());
+            assert_eq!(c.sigma(), g.sigma());
+            // Outgoing table: direct check against α · e_s(to).
+            for s in 0..g.sigma() {
+                let oc = c.out_coef_for(s);
+                for e in 0..g.n_transitions() {
+                    let to = g.out_to[e] as usize;
+                    let want = g.out_prob[e] as f64 * g.emission(to, s as u8) as f64;
+                    assert!((oc[e] - want).abs() <= 1e-12, "edge {e} symbol {s}");
+                }
+            }
+            // Incoming table: every incoming slot carries the fused
+            // product of its source edge.
+            let (in_ptr, _, in_eidx) = g.incoming_csr();
+            for to in 0..g.n_states() {
+                for slot in in_ptr[to] as usize..in_ptr[to + 1] as usize {
+                    let e = in_eidx[slot] as usize;
+                    for s in 0..g.sigma() {
+                        let want = g.out_prob[e] * g.emission(to, s as u8);
+                        let got = c.in_coef_for(s)[slot];
+                        assert!((got - want).abs() <= 1e-12, "slot {slot} symbol {s}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_pools_reuse_rows() {
+        let mut rng = XorShift::new(5);
+        let g = ec_graph(&mut rng, 20);
+        let mut scratch = ForwardScratch::new(&g);
+        assert_eq!(scratch.fresh_rows_allocated(), 0);
+        let r1 = scratch.take_row();
+        let r2 = scratch.take_row();
+        assert_eq!(scratch.fresh_rows_allocated(), 2);
+        scratch.put_row(r1);
+        scratch.put_row(r2);
+        let _r = scratch.take_row();
+        assert_eq!(scratch.fresh_rows_allocated(), 2, "pool hit must not allocate");
+    }
+
+    #[test]
+    fn scratch_grows_to_largest_graph() {
+        let mut rng = XorShift::new(6);
+        let small = ec_graph(&mut rng, 5);
+        let large = ec_graph(&mut rng, 40);
+        let mut scratch = ForwardScratch::new(&small);
+        let n_small = scratch.dense_len();
+        scratch.ensure(large.n_states());
+        assert!(scratch.dense_len() >= large.n_states());
+        assert!(scratch.dense_len() >= n_small);
+    }
+}

@@ -15,18 +15,33 @@
 //! expectation sums accumulated across observation sequences and divided
 //! once per EM iteration ([`BwAccumulators`]).  [`logspace`] provides an
 //! independent log-space oracle used by the test suite.
+//!
+//! The sparse hot path is built on the memoized per-symbol
+//! fused-coefficient tables of [`kernels`] (paper §4.2–4.3): transition ×
+//! emission products are computed once per parameter freeze, the forward
+//! inner loop is a pure per-symbol CSR SpMV, and the fused backward + ξ
+//! update performs a single table gather per live edge.  [`reference`]
+//! preserves the pre-memoization kernels for parity tests and speedup
+//! measurement, and the training loop fans the batch E-step out across
+//! worker threads with a deterministic block reduction.
 
 pub mod banded;
 mod filter;
+mod kernels;
 mod logspace;
+pub mod reference;
 mod sparse;
 mod train;
 mod update;
 
 pub use banded::{BandedBwSums, BandedEngine};
 pub use filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
+pub use kernels::{ForwardScratch, FusedCoeffs};
 pub use logspace::{log_backward, log_forward, log_likelihood};
-pub use sparse::{forward_sparse, score_sparse, ForwardOptions, ForwardResult, SparseRow};
+pub use sparse::{
+    forward_sparse, forward_sparse_with, score_sparse, score_sparse_with, ForwardOptions,
+    ForwardResult, ScoreResult, SparseRow,
+};
 pub use train::{train, TrainConfig, TrainResult};
 pub use update::BwAccumulators;
 

@@ -1,0 +1,237 @@
+//! Pre-memoization reference kernels.
+//!
+//! Byte-for-byte the engine as it existed *before* the per-symbol
+//! fused-coefficient memoization of [`super::kernels`]: the forward
+//! pass rebuilds the incoming CSR per call and multiplies the target
+//! emission per state per timestep; the fused backward pass re-gathers
+//! `α_ij · e_s(to)` on every edge of every timestep.
+//!
+//! Kept for two purposes:
+//! * the parity property tests (`tests/kernel_parity.rs`) pin the
+//!   memoized kernels to this baseline within tight tolerances;
+//! * the `hotpath` bench measures the memoization speedup against it
+//!   (the acceptance metric of the optimization).
+//!
+//! Not used by any production path.
+
+use super::filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
+use super::sparse::{ForwardOptions, ForwardResult, SparseRow};
+use super::update::BwAccumulators;
+use super::EPS;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+/// Per-call scratch of the reference forward (rebuilt every call, as the
+/// pre-memoization engine did).
+struct RefScratch {
+    dense: Vec<f32>,
+    in_ptr: Vec<u32>,
+    in_from: Vec<u32>,
+    in_prob: Vec<f32>,
+}
+
+impl RefScratch {
+    fn new(phmm: &Phmm) -> Self {
+        let (in_ptr, in_from, in_eidx) = phmm.incoming_csr();
+        let in_prob = in_eidx.iter().map(|&e| phmm.out_prob[e as usize]).collect();
+        RefScratch { dense: vec![0.0; phmm.n_states()], in_ptr, in_from, in_prob }
+    }
+}
+
+fn apply_filter(
+    cfg: &FilterConfig,
+    hist: &mut Option<HistogramFilter>,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+    stats: &mut FilterStats,
+) {
+    match cfg {
+        FilterConfig::None => {}
+        FilterConfig::Sort { size } => SortFilter::select(idx, val, *size, stats),
+        FilterConfig::Histogram { size, .. } => {
+            hist.as_mut().unwrap().select(idx, val, *size, stats)
+        }
+    }
+}
+
+/// The pre-memoization scaled, filtered forward pass.
+pub fn forward_sparse_reference(
+    phmm: &Phmm,
+    seq: &Sequence,
+    opts: &ForwardOptions,
+) -> Result<ForwardResult> {
+    if phmm.has_silent_states() {
+        return Err(ApHmmError::InvalidGraph("forward_sparse requires an emitting graph".into()));
+    }
+    if seq.is_empty() {
+        return Err(ApHmmError::Numerical("empty observation sequence".into()));
+    }
+    // Guard the unchecked emission read below (the one behavioral
+    // addition over the historical kernel: out-of-alphabet symbols were
+    // UB, now an error — the memoized path rejects them identically).
+    if seq.data.iter().any(|&s| s as usize >= phmm.sigma()) {
+        return Err(ApHmmError::Numerical(format!(
+            "sequence {:?} contains a symbol outside the {}-letter alphabet",
+            seq.id,
+            phmm.sigma()
+        )));
+    }
+    let n = phmm.n_states();
+    let t_len = seq.len();
+    let mut scratch = RefScratch::new(phmm);
+    let mut hist = match opts.filter {
+        FilterConfig::Histogram { bins, .. } => Some(HistogramFilter::new(bins)),
+        _ => None,
+    };
+    let mut stats = FilterStats::default();
+    let mut rows: Vec<SparseRow> = Vec::with_capacity(t_len);
+    let mut scales: Vec<f32> = Vec::with_capacity(t_len);
+    let mut loglik = 0.0f64;
+    let mut states_processed = 0u64;
+    let mut edges_processed = 0u64;
+
+    // t = 0: initial distribution times emission.
+    {
+        let s0 = seq.data[0];
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &p) in phmm.f_init.iter().enumerate() {
+            if p > 0.0 {
+                let v = p * phmm.emission(i, s0);
+                if v > 0.0 {
+                    idx.push(i as u32);
+                    val.push(v);
+                }
+            }
+        }
+        let c: f32 = val.iter().sum();
+        if c <= 0.0 {
+            return Err(ApHmmError::Numerical("dead start: no state emits first char".into()));
+        }
+        val.iter_mut().for_each(|v| *v /= c);
+        apply_filter(&opts.filter, &mut hist, &mut idx, &mut val, &mut stats);
+        states_processed += idx.len() as u64;
+        scales.push(c);
+        loglik += (c as f64).ln();
+        rows.push(SparseRow { idx, val });
+    }
+
+    let band = phmm.band_width();
+    let sigma = phmm.sigma();
+    for t in 1..t_len {
+        let s_t = seq.data[t] as usize;
+        let prev = rows.last().unwrap();
+        for (&i, &v) in prev.idx.iter().zip(prev.val.iter()) {
+            scratch.dense[i as usize] = v;
+        }
+        let win_lo = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
+        let win_hi = prev.idx.last().map(|&i| i as usize + band).unwrap_or(0).min(n);
+        let mut idx = Vec::with_capacity(win_hi - win_lo);
+        let mut val = Vec::with_capacity(win_hi - win_lo);
+        let mut c = 0.0f32;
+        // SAFETY: incoming-CSR invariants mirror the outgoing CSR
+        // (built by incoming_csr from a validated graph); window bounds
+        // are clamped to n.
+        unsafe {
+            for to in win_lo..win_hi {
+                let lo = *scratch.in_ptr.get_unchecked(to) as usize;
+                let hi = *scratch.in_ptr.get_unchecked(to + 1) as usize;
+                let mut acc = 0.0f32;
+                for e in lo..hi {
+                    let from = *scratch.in_from.get_unchecked(e) as usize;
+                    acc += scratch.dense.get_unchecked(from) * scratch.in_prob.get_unchecked(e);
+                }
+                edges_processed += (hi - lo) as u64;
+                if acc > 0.0 {
+                    let v = acc * phmm.emissions.get_unchecked(to * sigma + s_t);
+                    if v > 0.0 {
+                        idx.push(to as u32);
+                        val.push(v);
+                        c += v;
+                    }
+                }
+            }
+        }
+        for &i in prev.idx.iter() {
+            scratch.dense[i as usize] = 0.0;
+        }
+        if c <= EPS {
+            return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
+        }
+        let inv = 1.0 / c;
+        val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut hist, &mut idx, &mut val, &mut stats);
+        states_processed += idx.len() as u64;
+        scales.push(c);
+        loglik += (c as f64).ln();
+        rows.push(SparseRow { idx, val });
+    }
+
+    Ok(ForwardResult { rows, scales, loglik, filter_stats: stats, states_processed, edges_processed })
+}
+
+/// The pre-memoization fused backward + accumulate pass (per-edge
+/// `α · e · B̂ / c` recomputed from the parameter arrays every timestep).
+pub fn accumulate_reference(
+    acc: &mut BwAccumulators,
+    phmm: &Phmm,
+    seq: &Sequence,
+    fwd: &ForwardResult,
+) -> Result<()> {
+    let n = phmm.n_states();
+    let t_len = seq.len();
+    debug_assert_eq!(fwd.rows.len(), t_len);
+    let sigma = phmm.sigma();
+    let mut b_next = vec![0.0f64; n];
+    let mut b_cur = vec![0.0f64; n];
+
+    {
+        let row = &fwd.rows[t_len - 1];
+        let s_t = seq.data[t_len - 1] as usize;
+        for (&i, &f) in row.idx.iter().zip(row.val.iter()) {
+            b_next[i as usize] = 1.0;
+            let gamma = f as f64;
+            acc.gamma_den[i as usize] += gamma;
+            acc.e_num[i as usize * sigma + s_t] += gamma;
+        }
+    }
+
+    for t in (0..t_len - 1).rev() {
+        let row = &fwd.rows[t];
+        let s_next = seq.data[t + 1];
+        let s_t = seq.data[t] as usize;
+        let c_next = fwd.scales[t + 1] as f64;
+        let inv_c = 1.0 / c_next;
+        for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
+            let j = j as usize;
+            let fj = fj as f64;
+            let lo = phmm.out_ptr[j] as usize;
+            let hi = phmm.out_ptr[j + 1] as usize;
+            let mut bsum = 0.0f64;
+            for e in lo..hi {
+                let to = phmm.out_to[e] as usize;
+                let bn = b_next[to];
+                if bn == 0.0 {
+                    continue;
+                }
+                let m = phmm.out_prob[e] as f64 * phmm.emission(to, s_next) as f64 * bn * inv_c;
+                bsum += m;
+                acc.xi[e] += fj * m;
+            }
+            b_cur[j] = bsum;
+            let gamma = fj * bsum;
+            acc.trans_den[j] += gamma;
+            acc.gamma_den[j] += gamma;
+            acc.e_num[j * sigma + s_t] += gamma;
+        }
+        if t + 1 < t_len {
+            for &i in &fwd.rows[t + 1].idx {
+                b_next[i as usize] = 0.0;
+            }
+        }
+        std::mem::swap(&mut b_next, &mut b_cur);
+    }
+    acc.note_observation(fwd.loglik);
+    Ok(())
+}

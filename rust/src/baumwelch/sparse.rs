@@ -5,8 +5,26 @@
 //! row is scaled to sum 1, and the filter truncates the active set.  It
 //! is both the "CPU-1" measured baseline of Figs. 10/11 and the workload
 //! description the accelerator model consumes.
+//!
+//! Two kernels share one inner loop, both driven by the memoized
+//! per-symbol fused-coefficient tables of [`super::kernels`] (paper
+//! §4.2–4.3 — the transition×emission products are computed once per
+//! parameter freeze, turning the timestep recurrence into a pure
+//! per-symbol CSR SpMV):
+//!
+//! * [`forward_sparse_with`] materializes every scaled row (training —
+//!   the fused backward pass needs them);
+//! * [`score_sparse_with`] keeps only two rows — `O(active states)`
+//!   memory independent of sequence length (the inference path of
+//!   protein family search / MSA, after Miklós & Meyer's linear-memory
+//!   formulation).
+//!
+//! The parameterless [`forward_sparse`] / [`score_sparse`] wrappers
+//! build throwaway tables and scratch; hot paths build
+//! [`FusedCoeffs`]/[`ForwardScratch`] once and call the `_with` forms.
 
 use super::filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
+use super::kernels::{ForwardScratch, FusedCoeffs};
 use super::EPS;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -64,134 +82,251 @@ pub struct ForwardResult {
     pub edges_processed: u64,
 }
 
-/// Scratch buffers reused across timesteps (no allocation in the loop).
-struct Scratch {
-    dense: Vec<f32>,
-    /// Incoming CSR (gather-form forward): row pointers per target.
-    in_ptr: Vec<u32>,
-    /// Source state of each incoming edge.
-    in_from: Vec<u32>,
-    /// Transition probability of each incoming edge.
-    in_prob: Vec<f32>,
+/// Output of the score-only fast path: the likelihood plus the workload
+/// counters, but no rows (memory stays `O(active states)`).
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreResult {
+    /// `log P(S | G)`.
+    pub loglik: f64,
+    /// Filtering instrumentation.
+    pub filter_stats: FilterStats,
+    /// Total states processed.
+    pub states_processed: u64,
+    /// Total edges traversed.
+    pub edges_processed: u64,
 }
 
-impl Scratch {
-    fn new(phmm: &Phmm) -> Self {
-        let (in_ptr, in_from, in_eidx) = phmm.incoming_csr();
-        let in_prob = in_eidx.iter().map(|&e| phmm.out_prob[e as usize]).collect();
-        Scratch { dense: vec![0.0; phmm.n_states()], in_ptr, in_from, in_prob }
-    }
-}
-
-/// Run the scaled, filtered forward pass of `seq` over `phmm`.
-pub fn forward_sparse(phmm: &Phmm, seq: &Sequence, opts: &ForwardOptions) -> Result<ForwardResult> {
+/// Validate inputs shared by both kernels.
+fn precheck(phmm: &Phmm, coeffs: &FusedCoeffs, seq: &Sequence) -> Result<()> {
     if phmm.has_silent_states() {
         return Err(ApHmmError::InvalidGraph("forward_sparse requires an emitting graph".into()));
     }
     if seq.is_empty() {
         return Err(ApHmmError::Numerical("empty observation sequence".into()));
     }
+    if coeffs.n_edges() != phmm.n_transitions()
+        || coeffs.sigma() != phmm.sigma()
+        || coeffs.in_ptr.len() != phmm.n_states() + 1
+    {
+        return Err(ApHmmError::InvalidGraph(
+            "fused coefficient tables do not match the graph (stale FusedCoeffs?)".into(),
+        ));
+    }
+    let sigma = phmm.sigma() as u32;
+    if seq.data.iter().any(|&s| s as u32 >= sigma) {
+        return Err(ApHmmError::Numerical(format!(
+            "sequence {:?} contains a symbol outside the {}-letter alphabet",
+            seq.id, sigma
+        )));
+    }
+    Ok(())
+}
+
+/// t = 0 row: initial distribution times emission (unscaled).
+fn init_row(phmm: &Phmm, coeffs: &FusedCoeffs, s0: u8, row: &mut SparseRow) -> Result<f32> {
+    row.idx.clear();
+    row.val.clear();
+    for &(i, p) in &coeffs.init {
+        let v = p * phmm.emission(i as usize, s0);
+        if v > 0.0 {
+            row.idx.push(i);
+            row.val.push(v);
+        }
+    }
+    let c: f32 = row.val.iter().sum();
+    if c <= 0.0 {
+        return Err(ApHmmError::Numerical("dead start: no state emits first char".into()));
+    }
+    Ok(c)
+}
+
+/// Gather one timestep: scatter `prev` into the dense buffer, run the
+/// per-symbol fused SpMV over the topology window, clear the buffer.
+///
+/// Returns the unscaled row sum `c` and the number of edges traversed.
+/// `out` receives the unscaled row.  The dense buffer is restored to
+/// all-zero before returning (also on dead rows), so scratch reuse is
+/// safe even on error paths.
+#[inline]
+fn gather_row(
+    coeffs: &FusedCoeffs,
+    dense: &mut [f32],
+    prev: &SparseRow,
+    s_t: usize,
+    n: usize,
+    out: &mut SparseRow,
+) -> (f32, u64) {
+    out.idx.clear();
+    out.val.clear();
+    for (&i, &v) in prev.idx.iter().zip(prev.val.iter()) {
+        dense[i as usize] = v;
+    }
+    // Gather-form forward (§Perf in EXPERIMENTS.md): pHMM topology
+    // bounds every timestep's successors to the window
+    // [first_active, last_active + band), so each window target gathers
+    // its incoming contributions — sequential reads of the incoming
+    // CSR, independent accumulators, no scatter bookkeeping.  The fused
+    // coefficient already carries the target's emission, so the row
+    // value is the raw accumulator.
+    let win_lo = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
+    let win_hi = prev.idx.last().map(|&i| i as usize + coeffs.band).unwrap_or(0).min(n);
+    out.idx.reserve(win_hi.saturating_sub(win_lo));
+    out.val.reserve(win_hi.saturating_sub(win_lo));
+    let coef = coeffs.in_coef_for(s_t);
+    let mut c = 0.0f32;
+    let mut edges = 0u64;
+    // SAFETY: incoming-CSR invariants mirror the outgoing CSR (built by
+    // incoming_csr from a validated graph), the window bounds are
+    // clamped to n ≤ dense.len(), and `precheck` guarantees s_t < Σ so
+    // `coef` covers every edge index.
+    unsafe {
+        for to in win_lo..win_hi {
+            let lo = *coeffs.in_ptr.get_unchecked(to) as usize;
+            let hi = *coeffs.in_ptr.get_unchecked(to + 1) as usize;
+            let mut acc = 0.0f32;
+            for e in lo..hi {
+                let from = *coeffs.in_from.get_unchecked(e) as usize;
+                acc += *dense.get_unchecked(from) * *coef.get_unchecked(e);
+            }
+            edges += (hi - lo) as u64;
+            if acc > 0.0 {
+                out.idx.push(to as u32);
+                out.val.push(acc);
+                c += acc;
+            }
+        }
+    }
+    for &i in prev.idx.iter() {
+        dense[i as usize] = 0.0;
+    }
+    (c, edges)
+}
+
+/// Run the scaled, filtered forward pass of `seq` over `phmm`, reusing
+/// the caller's fused tables and scratch (the training hot path).
+pub fn forward_sparse_with(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    seq: &Sequence,
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+) -> Result<ForwardResult> {
+    precheck(phmm, coeffs, seq)?;
     let n = phmm.n_states();
+    scratch.ensure(n);
+    scratch.ensure_hist(&opts.filter);
     let t_len = seq.len();
-    let mut scratch = Scratch::new(phmm);
-    let mut hist = match opts.filter {
-        FilterConfig::Histogram { bins, .. } => Some(HistogramFilter::new(bins)),
-        _ => None,
-    };
     let mut stats = FilterStats::default();
-    let mut rows: Vec<SparseRow> = Vec::with_capacity(t_len);
-    let mut scales: Vec<f32> = Vec::with_capacity(t_len);
+    let mut rows = scratch.take_rows_vec();
+    let mut scales = scratch.take_scales_vec();
+    rows.reserve(t_len);
+    scales.reserve(t_len);
     let mut loglik = 0.0f64;
     let mut states_processed = 0u64;
     let mut edges_processed = 0u64;
 
-    // t = 0: initial distribution times emission.
     {
-        let s0 = seq.data[0];
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
-        for (i, &p) in phmm.f_init.iter().enumerate() {
-            if p > 0.0 {
-                let v = p * phmm.emission(i, s0);
-                if v > 0.0 {
-                    idx.push(i as u32);
-                    val.push(v);
-                }
-            }
-        }
-        let c: f32 = val.iter().sum();
-        if c <= 0.0 {
-            return Err(ApHmmError::Numerical("dead start: no state emits first char".into()));
-        }
-        val.iter_mut().for_each(|v| *v /= c);
-        apply_filter(&opts.filter, &mut hist, &mut idx, &mut val, &mut stats);
-        states_processed += idx.len() as u64;
+        let mut row = scratch.take_row();
+        let c = init_row(phmm, coeffs, seq.data[0], &mut row)?;
+        let inv = 1.0 / c;
+        row.val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut scratch.hist, &mut row.idx, &mut row.val, &mut stats);
+        states_processed += row.len() as u64;
         scales.push(c);
         loglik += (c as f64).ln();
-        rows.push(SparseRow { idx, val });
+        rows.push(row);
     }
 
-    // Gather-form forward (§Perf in EXPERIMENTS.md): pHMM topology
-    // bounds every timestep's successors to the window
-    // [first_active, last_active + band_width), so instead of
-    // scattering along outgoing edges (random read-modify-writes) each
-    // window target gathers its incoming contributions — sequential
-    // reads of the incoming CSR, independent accumulators (better ILP),
-    // and no touched-list/sort bookkeeping.
-    let band = phmm.band_width();
-    let sigma = phmm.sigma();
     for t in 1..t_len {
         let s_t = seq.data[t] as usize;
+        let mut row = scratch.take_row();
         let prev = rows.last().unwrap();
-        // Write the previous row into the dense buffer.
-        for (&i, &v) in prev.idx.iter().zip(prev.val.iter()) {
-            scratch.dense[i as usize] = v;
-        }
-        let win_lo = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
-        let win_hi = prev.idx.last().map(|&i| i as usize + band).unwrap_or(0).min(n);
-        let mut idx = Vec::with_capacity(win_hi - win_lo);
-        let mut val = Vec::with_capacity(win_hi - win_lo);
-        let mut c = 0.0f32;
-        // SAFETY: incoming-CSR invariants mirror the outgoing CSR
-        // (built by incoming_csr from a validated graph); window bounds
-        // are clamped to n.
-        unsafe {
-            for to in win_lo..win_hi {
-                let lo = *scratch.in_ptr.get_unchecked(to) as usize;
-                let hi = *scratch.in_ptr.get_unchecked(to + 1) as usize;
-                let mut acc = 0.0f32;
-                for e in lo..hi {
-                    let from = *scratch.in_from.get_unchecked(e) as usize;
-                    acc += scratch.dense.get_unchecked(from) * scratch.in_prob.get_unchecked(e);
-                }
-                edges_processed += (hi - lo) as u64;
-                if acc > 0.0 {
-                    let v = acc * phmm.emissions.get_unchecked(to * sigma + s_t);
-                    if v > 0.0 {
-                        idx.push(to as u32);
-                        val.push(v);
-                        c += v;
-                    }
-                }
-            }
-        }
-        // Clear the dense buffer at the previous row's entries.
-        for &i in prev.idx.iter() {
-            scratch.dense[i as usize] = 0.0;
-        }
+        let (c, edges) = gather_row(coeffs, &mut scratch.dense, prev, s_t, n, &mut row);
+        edges_processed += edges;
         if c <= EPS {
             return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
         }
         let inv = 1.0 / c;
-        val.iter_mut().for_each(|v| *v *= inv);
-        apply_filter(&opts.filter, &mut hist, &mut idx, &mut val, &mut stats);
-        states_processed += idx.len() as u64;
+        row.val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut scratch.hist, &mut row.idx, &mut row.val, &mut stats);
+        states_processed += row.len() as u64;
         scales.push(c);
         loglik += (c as f64).ln();
-        rows.push(SparseRow { idx, val });
+        rows.push(row);
     }
 
     Ok(ForwardResult { rows, scales, loglik, filter_stats: stats, states_processed, edges_processed })
+}
+
+/// Run the scaled, filtered forward pass of `seq` over `phmm`.
+///
+/// Convenience wrapper that builds throwaway tables and scratch; hot
+/// paths should use [`forward_sparse_with`].
+pub fn forward_sparse(phmm: &Phmm, seq: &Sequence, opts: &ForwardOptions) -> Result<ForwardResult> {
+    let coeffs = FusedCoeffs::new(phmm);
+    let mut scratch = ForwardScratch::new(phmm);
+    forward_sparse_with(phmm, &coeffs, seq, opts, &mut scratch)
+}
+
+/// Score-only forward fast path: identical arithmetic to
+/// [`forward_sparse_with`] (bit-identical log-likelihood), but only two
+/// rows are ever live — memory is `O(active states)` regardless of
+/// sequence length.
+pub fn score_sparse_with(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    seq: &Sequence,
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+) -> Result<ScoreResult> {
+    precheck(phmm, coeffs, seq)?;
+    let n = phmm.n_states();
+    scratch.ensure(n);
+    scratch.ensure_hist(&opts.filter);
+    let t_len = seq.len();
+    let mut stats = FilterStats::default();
+    let mut prev = scratch.take_row();
+    let mut cur = scratch.take_row();
+    let mut loglik = 0.0f64;
+    let mut states_processed = 0u64;
+    let mut edges_processed = 0u64;
+
+    let finish = |scratch: &mut ForwardScratch, prev: SparseRow, cur: SparseRow| {
+        scratch.put_row(prev);
+        scratch.put_row(cur);
+    };
+
+    let c0 = match init_row(phmm, coeffs, seq.data[0], &mut prev) {
+        Ok(c) => c,
+        Err(e) => {
+            finish(scratch, prev, cur);
+            return Err(e);
+        }
+    };
+    let inv = 1.0 / c0;
+    prev.val.iter_mut().for_each(|v| *v *= inv);
+    apply_filter(&opts.filter, &mut scratch.hist, &mut prev.idx, &mut prev.val, &mut stats);
+    states_processed += prev.len() as u64;
+    loglik += (c0 as f64).ln();
+
+    for t in 1..t_len {
+        let s_t = seq.data[t] as usize;
+        let (c, edges) = gather_row(coeffs, &mut scratch.dense, &prev, s_t, n, &mut cur);
+        edges_processed += edges;
+        if c <= EPS {
+            finish(scratch, prev, cur);
+            return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
+        }
+        let inv = 1.0 / c;
+        cur.val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut scratch.hist, &mut cur.idx, &mut cur.val, &mut stats);
+        states_processed += cur.len() as u64;
+        loglik += (c as f64).ln();
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    finish(scratch, prev, cur);
+    Ok(ScoreResult { loglik, filter_stats: stats, states_processed, edges_processed })
 }
 
 fn apply_filter(
@@ -212,8 +347,13 @@ fn apply_filter(
 
 /// Forward-only similarity score `log P(S | G)` (the inference path of
 /// protein family search / MSA).
+///
+/// Convenience wrapper over [`score_sparse_with`]; uses the two-row
+/// fast path, so memory stays independent of sequence length.
 pub fn score_sparse(phmm: &Phmm, seq: &Sequence, opts: &ForwardOptions) -> Result<f64> {
-    Ok(forward_sparse(phmm, seq, opts)?.loglik)
+    let coeffs = FusedCoeffs::new(phmm);
+    let mut scratch = ForwardScratch::new(phmm);
+    Ok(score_sparse_with(phmm, &coeffs, seq, opts, &mut scratch)?.loglik)
 }
 
 #[cfg(test)]
@@ -261,6 +401,57 @@ mod tests {
     }
 
     #[test]
+    fn score_fast_path_matches_full_forward_bitwise() {
+        // Same arithmetic, different row lifetime: the two kernels must
+        // agree to the last bit, filters on and off.
+        testutil::check(15, |rng| {
+            let ref_len = rng.range(5, 50);
+            let g = ec_graph(rng, ref_len);
+            let obs_len = rng.range(2, 40);
+            let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+            for opts in [
+                ForwardOptions::default(),
+                ForwardOptions { filter: FilterConfig::Sort { size: 30 } },
+                ForwardOptions { filter: FilterConfig::Histogram { size: 30, bins: 64 } },
+            ] {
+                let full = forward_sparse(&g, &obs, &opts).unwrap();
+                let fast = score_sparse(&g, &obs, &opts).unwrap();
+                assert_eq!(full.loglik.to_bits(), fast.to_bits(), "filter {:?}", opts.filter);
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_transparent() {
+        // One coeffs/scratch pair across many reads gives the same
+        // results as throwaway buffers, and stops allocating rows once
+        // the pool is warm.
+        let mut rng = XorShift::new(71);
+        let g = ec_graph(&mut rng, 60);
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        let opts = ForwardOptions::default();
+        let mut allocated_after_first = 0;
+        for i in 0..5 {
+            let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 25, 4));
+            let fresh = forward_sparse(&g, &obs, &opts).unwrap();
+            let reused = forward_sparse_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+            assert_eq!(fresh.loglik.to_bits(), reused.loglik.to_bits());
+            assert_eq!(fresh.states_processed, reused.states_processed);
+            assert_eq!(fresh.edges_processed, reused.edges_processed);
+            scratch.recycle(reused);
+            if i == 0 {
+                allocated_after_first = scratch.fresh_rows_allocated();
+            }
+        }
+        assert_eq!(
+            scratch.fresh_rows_allocated(),
+            allocated_after_first,
+            "row pool must absorb equal-length reads without new allocations"
+        );
+    }
+
+    #[test]
     fn identical_sequence_scores_higher_than_random() {
         let mut rng = XorShift::new(77);
         let data = testutil::random_seq(&mut rng, 50, 4);
@@ -305,6 +496,15 @@ mod tests {
         let g = ec_graph(&mut rng, 10);
         let obs = Sequence::from_symbols("o", vec![]);
         assert!(forward_sparse(&g, &obs, &ForwardOptions::default()).is_err());
+    }
+
+    #[test]
+    fn out_of_alphabet_symbol_rejected() {
+        let mut rng = XorShift::new(13);
+        let g = ec_graph(&mut rng, 10);
+        let obs = Sequence::from_symbols("o", vec![0, 1, 200]);
+        assert!(forward_sparse(&g, &obs, &ForwardOptions::default()).is_err());
+        assert!(score_sparse(&g, &obs, &ForwardOptions::default()).is_err());
     }
 
     #[test]

@@ -1,15 +1,32 @@
 //! The EM training loop (expectation over many reads + one maximization
 //! per iteration), with step-level timing instrumentation that feeds
 //! Fig. 2 (execution-time breakdown) and the accelerator model.
+//!
+//! The E-step is a **parallel batch reduction**: reads are cut into
+//! fixed-size blocks, worker threads (`TrainConfig::n_workers`) pull
+//! blocks from a shared counter, each block accumulates into its own
+//! [`BwAccumulators`] (with a per-worker [`ForwardScratch`] and the
+//! iteration's shared [`FusedCoeffs`] tables), and block accumulators
+//! are merged **in block order**.  Because the block structure and the
+//! merge order are independent of the worker count, results are
+//! bit-identical for any `n_workers` — `n_workers = 1` is literally the
+//! same computation on one thread.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 use std::time::Instant;
 
 use super::filter::{FilterConfig, FilterStats};
-use super::sparse::{forward_sparse, ForwardOptions};
+use super::kernels::{ForwardScratch, FusedCoeffs};
+use super::sparse::{forward_sparse_with, ForwardOptions};
 use super::update::BwAccumulators;
 use crate::error::Result;
 use crate::phmm::Phmm;
 use crate::seq::Sequence;
+
+/// Reads per E-step block.  The unit of the deterministic reduction:
+/// results depend on this constant but never on the worker count.
+const ESTEP_BLOCK: usize = 8;
 
 /// Training configuration.
 #[derive(Clone, Copy, Debug)]
@@ -21,11 +38,14 @@ pub struct TrainConfig {
     pub tol: f64,
     /// State filter used during the forward pass.
     pub filter: FilterConfig,
+    /// E-step worker threads (1 = single-threaded).  Any value yields
+    /// bit-identical results; see the module docs.
+    pub n_workers: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { max_iters: 3, tol: 1e-3, filter: FilterConfig::None }
+        TrainConfig { max_iters: 3, tol: 1e-3, filter: FilterConfig::None, n_workers: 1 }
     }
 }
 
@@ -36,9 +56,11 @@ pub struct TrainResult {
     pub loglik_history: Vec<f64>,
     /// Iterations actually run.
     pub iters: usize,
-    /// Time in the forward calculation (Fig. 2's "Forward").
+    /// Time in the forward calculation (Fig. 2's "Forward").  Summed
+    /// across E-step workers: CPU time, not wall time.
     pub forward_ns: u128,
     /// Time in the fused backward + update pass ("Backward" + "Updates").
+    /// Summed across E-step workers.
     pub backward_update_ns: u128,
     /// Time in the maximization division.
     pub maximize_ns: u128,
@@ -50,13 +72,133 @@ pub struct TrainResult {
     pub edges_processed: u64,
     /// Total timesteps executed (Σ over reads/iterations of read length).
     pub timesteps: u64,
+    /// Reads skipped (empty, or numerically dead under the current
+    /// parameters), summed over iterations.  Previously these were
+    /// dropped silently; the coordinator surfaces them in its metrics.
+    pub reads_skipped: u64,
+}
+
+/// Per-block E-step output: one accumulator plus its instrumentation,
+/// merged into the iteration totals in block order.
+struct BlockOut {
+    acc: BwAccumulators,
+    forward_ns: u128,
+    backward_update_ns: u128,
+    filter_stats: FilterStats,
+    states_processed: u64,
+    edges_processed: u64,
+    timesteps: u64,
+    reads_skipped: u64,
+}
+
+/// Run one block of reads through forward + fused backward/update.
+fn process_block(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    reads: &[Sequence],
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+) -> Result<BlockOut> {
+    let mut out = BlockOut {
+        acc: BwAccumulators::new(phmm),
+        forward_ns: 0,
+        backward_update_ns: 0,
+        filter_stats: FilterStats::default(),
+        states_processed: 0,
+        edges_processed: 0,
+        timesteps: 0,
+        reads_skipped: 0,
+    };
+    for read in reads {
+        if read.is_empty() {
+            out.reads_skipped += 1;
+            continue;
+        }
+        let t0 = Instant::now();
+        let fwd = match forward_sparse_with(phmm, coeffs, read, opts, scratch) {
+            Ok(f) => f,
+            Err(_) => {
+                // Dead read under the current parameters (e.g. a
+                // mis-mapped read whose path probability underflows the
+                // filter) — counted, then skipped, matching Apollo.
+                out.reads_skipped += 1;
+                continue;
+            }
+        };
+        out.forward_ns += t0.elapsed().as_nanos();
+        out.filter_stats.merge(&fwd.filter_stats);
+        out.states_processed += fwd.states_processed;
+        out.edges_processed += fwd.edges_processed;
+        out.timesteps += fwd.rows.len() as u64;
+
+        let t1 = Instant::now();
+        out.acc.accumulate_with(phmm, coeffs, read, &fwd, scratch)?;
+        out.backward_update_ns += t1.elapsed().as_nanos();
+        scratch.recycle(fwd);
+    }
+    Ok(out)
+}
+
+/// One E-step over all reads: block-parallel, deterministically reduced.
+fn run_estep(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    reads: &[Sequence],
+    opts: &ForwardOptions,
+    n_workers: usize,
+) -> Result<Vec<BlockOut>> {
+    let blocks: Vec<&[Sequence]> = reads.chunks(ESTEP_BLOCK).collect();
+    if blocks.is_empty() {
+        return Ok(Vec::new());
+    }
+    let workers = n_workers.max(1).min(blocks.len());
+    if workers == 1 {
+        let mut scratch = ForwardScratch::new(phmm);
+        return blocks
+            .iter()
+            .map(|&block| process_block(phmm, coeffs, block, opts, &mut scratch))
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<BlockOut>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let blocks = &blocks;
+            scope.spawn(move || {
+                let mut scratch = ForwardScratch::new(phmm);
+                loop {
+                    let bi = next.fetch_add(1, Ordering::Relaxed);
+                    if bi >= blocks.len() {
+                        break;
+                    }
+                    let out = process_block(phmm, coeffs, blocks[bi], opts, &mut scratch);
+                    if tx.send((bi, out)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut slots: Vec<Option<Result<BlockOut>>> = Vec::with_capacity(blocks.len());
+    slots.resize_with(blocks.len(), || None);
+    for (bi, out) in rx {
+        slots[bi] = Some(out);
+    }
+    // Propagate the first error in *block* order (determinism).
+    slots.into_iter().map(|s| s.expect("E-step worker dropped a block")).collect()
 }
 
 /// Train `phmm` on `reads` with batch EM.
 ///
 /// Reads that become numerically dead under the current parameters (e.g.
 /// mis-mapped reads whose path probability underflows the filter) are
-/// skipped, matching Apollo's behaviour.
+/// skipped and counted in [`TrainResult::reads_skipped`], matching
+/// Apollo's behaviour.  With `cfg.n_workers > 1` the E-step fans out
+/// across scoped threads; results are bit-identical to `n_workers = 1`.
 pub fn train(phmm: &mut Phmm, reads: &[Sequence], cfg: &TrainConfig) -> Result<TrainResult> {
     let opts = ForwardOptions { filter: cfg.filter };
     let mut result = TrainResult {
@@ -69,29 +211,28 @@ pub fn train(phmm: &mut Phmm, reads: &[Sequence], cfg: &TrainConfig) -> Result<T
         states_processed: 0,
         edges_processed: 0,
         timesteps: 0,
+        reads_skipped: 0,
     };
     let mut acc = BwAccumulators::new(phmm);
     let mut prev_mean = f64::NEG_INFINITY;
     for _iter in 0..cfg.max_iters {
         acc.reset();
-        for read in reads {
-            if read.is_empty() {
-                continue;
-            }
-            let t0 = Instant::now();
-            let fwd = match forward_sparse(phmm, read, &opts) {
-                Ok(f) => f,
-                Err(_) => continue, // dead read under current parameters
-            };
-            result.forward_ns += t0.elapsed().as_nanos();
-            result.filter_stats.merge(&fwd.filter_stats);
-            result.states_processed += fwd.states_processed;
-            result.edges_processed += fwd.edges_processed;
-            result.timesteps += fwd.rows.len() as u64;
-
-            let t1 = Instant::now();
-            acc.accumulate(phmm, read, &fwd)?;
-            result.backward_update_ns += t1.elapsed().as_nanos();
+        // Parameters are frozen for the whole E-step: memoize the fused
+        // per-symbol coefficient tables once per iteration (§4.2–4.3).
+        // The build is charged to the forward phase it accelerates.
+        let t0 = Instant::now();
+        let coeffs = FusedCoeffs::new(phmm);
+        result.forward_ns += t0.elapsed().as_nanos();
+        let outs = run_estep(phmm, &coeffs, reads, &opts, cfg.n_workers)?;
+        for out in &outs {
+            acc.merge(&out.acc);
+            result.forward_ns += out.forward_ns;
+            result.backward_update_ns += out.backward_update_ns;
+            result.filter_stats.merge(&out.filter_stats);
+            result.states_processed += out.states_processed;
+            result.edges_processed += out.edges_processed;
+            result.timesteps += out.timesteps;
+            result.reads_skipped += out.reads_skipped;
         }
         if acc.n_observations == 0 {
             break;
@@ -164,6 +305,46 @@ mod tests {
     }
 
     #[test]
+    fn parallel_estep_is_bit_identical_to_sequential() {
+        // The deterministic block reduction makes the worker count
+        // unobservable: histories and trained parameters match exactly.
+        let mut rng = XorShift::new(53);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 100, 4));
+        let reads = noisy_reads(&mut rng, &reference, 21); // 3 blocks of 8
+        for filter in [FilterConfig::None, FilterConfig::histogram_default()] {
+            let mut g1 = Phmm::error_correction(&reference, &Default::default()).unwrap();
+            let mut g4 = g1.clone();
+            let base = TrainConfig { max_iters: 3, tol: 0.0, filter, n_workers: 1 };
+            let res1 = train(&mut g1, &reads, &base).unwrap();
+            let res4 =
+                train(&mut g4, &reads, &TrainConfig { n_workers: 4, ..base }).unwrap();
+            assert_eq!(res1.loglik_history, res4.loglik_history, "filter {filter:?}");
+            assert_eq!(g1.out_prob, g4.out_prob, "filter {filter:?}");
+            assert_eq!(g1.emissions, g4.emissions, "filter {filter:?}");
+            assert_eq!(res1.states_processed, res4.states_processed);
+            assert_eq!(res1.edges_processed, res4.edges_processed);
+            assert_eq!(res1.reads_skipped, res4.reads_skipped);
+        }
+    }
+
+    #[test]
+    fn skipped_reads_are_counted() {
+        let mut rng = XorShift::new(59);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 40, 4));
+        let mut g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let mut reads = noisy_reads(&mut rng, &reference, 3);
+        reads.push(Sequence::from_symbols("empty", vec![]));
+        reads.push(Sequence::from_symbols("bad", vec![0, 1, 99])); // dead: symbol outside Σ
+        let cfg = TrainConfig { max_iters: 2, tol: 0.0, ..Default::default() };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        // Two skip events per iteration, two iterations.
+        assert_eq!(res.reads_skipped, 2 * res.iters as u64);
+        assert_eq!(res.loglik_history.len(), res.iters);
+    }
+
+    #[test]
     fn filtered_training_tracks_unfiltered() {
         let mut rng = XorShift::new(41);
         let reference =
@@ -175,13 +356,18 @@ mod tests {
         let exact = train(
             &mut g_exact,
             &reads,
-            &TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::None },
+            &TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::None, n_workers: 1 },
         )
         .unwrap();
         let filt = train(
             &mut g_filt,
             &reads,
-            &TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::histogram_default() },
+            &TrainConfig {
+                max_iters: 2,
+                tol: 0.0,
+                filter: FilterConfig::histogram_default(),
+                n_workers: 1,
+            },
         )
         .unwrap();
         let a = exact.loglik_history.last().unwrap();
@@ -201,6 +387,7 @@ mod tests {
         assert!(res.forward_ns > 0);
         assert!(res.backward_update_ns > 0);
         assert!(res.states_processed > 0);
+        assert_eq!(res.reads_skipped, 0);
     }
 
     #[test]

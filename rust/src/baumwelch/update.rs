@@ -7,6 +7,7 @@
 //! stored.  Expectation sums accumulate across observation sequences;
 //! [`BwAccumulators::apply`] performs the maximization division once.
 
+use super::kernels::{ForwardScratch, FusedCoeffs};
 use super::sparse::ForwardResult;
 use super::EPS;
 use crate::error::{ApHmmError, Result};
@@ -120,25 +121,69 @@ impl BwAccumulators {
         phmm.validate()
     }
 
+    /// Bookkeeping shared by every accumulate path: one more observation
+    /// with log-likelihood `loglik` folded into the running sums.
+    pub(super) fn note_observation(&mut self, loglik: f64) {
+        self.n_observations += 1;
+        self.total_loglik += loglik;
+    }
+
     /// Fused backward + accumulate pass for one observation (Eq. 2 + the
     /// numerator/denominator sums of Eq. 3/4), restricted to the states
     /// the (possibly filtered) forward pass kept active.
+    ///
+    /// Convenience wrapper that builds throwaway coefficient tables and
+    /// scratch; hot paths should use [`BwAccumulators::accumulate_with`].
     pub fn accumulate(
         &mut self,
         phmm: &Phmm,
         seq: &Sequence,
         fwd: &ForwardResult,
     ) -> Result<()> {
+        let coeffs = FusedCoeffs::new(phmm);
+        let mut scratch = ForwardScratch::new(phmm);
+        self.accumulate_with(phmm, &coeffs, seq, fwd, &mut scratch)
+    }
+
+    /// Memoized fused backward + accumulate pass (paper §4.2–4.3).
+    ///
+    /// Identical arithmetic to the pre-memoization kernel (the per-edge
+    /// product `α_ij · e_{s_{t+1}}(to)` is precomputed in `f64` per
+    /// symbol by [`FusedCoeffs`], so the inner loop is a single table
+    /// gather and two multiplies per live edge).  The backward row pair
+    /// lives in `scratch` and is left zeroed for the next observation.
+    pub fn accumulate_with(
+        &mut self,
+        phmm: &Phmm,
+        coeffs: &FusedCoeffs,
+        seq: &Sequence,
+        fwd: &ForwardResult,
+        scratch: &mut ForwardScratch,
+    ) -> Result<()> {
         let n = phmm.n_states();
         let t_len = seq.len();
         debug_assert_eq!(fwd.rows.len(), t_len);
+        // Shape guards: the unchecked inner loop below relies on the
+        // accumulator and the tables being built for this exact graph.
+        if self.xi.len() != phmm.n_transitions()
+            || self.gamma_den.len() != n
+            || self.sigma != phmm.sigma()
+            || coeffs.n_edges() != phmm.n_transitions()
+            || coeffs.sigma() != phmm.sigma()
+        {
+            return Err(ApHmmError::InvalidGraph(
+                "accumulator/coefficient shapes do not match the graph".into(),
+            ));
+        }
         let sigma = self.sigma;
         // Dense backward buffers; only active entries are ever nonzero.
         // f64: scaled backward values on low-forward-probability states
         // reach 1/F̂ magnitudes and overflow f32 on badly matching
         // prefixes (mapping slop); f64 keeps the fused pass robust.
-        let mut b_next = vec![0.0f64; n];
-        let mut b_cur = vec![0.0f64; n];
+        scratch.ensure(n);
+        let (b_next, b_cur) = scratch.backward_bufs();
+        let mut b_next: &mut [f64] = b_next;
+        let mut b_cur: &mut [f64] = b_cur;
 
         // t = T-1: B̂ = 1 on active states; emission-only γ terms.
         {
@@ -154,8 +199,8 @@ impl BwAccumulators {
 
         for t in (0..t_len - 1).rev() {
             let row = &fwd.rows[t];
-            let s_next = seq.data[t + 1];
             let s_t = seq.data[t] as usize;
+            let oc = coeffs.out_coef_for(seq.data[t + 1] as usize);
             let c_next = fwd.scales[t + 1] as f64;
             let inv_c = 1.0 / c_next;
             for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
@@ -164,16 +209,23 @@ impl BwAccumulators {
                 let lo = phmm.out_ptr[j] as usize;
                 let hi = phmm.out_ptr[j + 1] as usize;
                 let mut bsum = 0.0f64;
-                for e in lo..hi {
-                    let to = phmm.out_to[e] as usize;
-                    let bn = b_next[to];
-                    if bn == 0.0 {
-                        continue;
+                // SAFETY: CSR invariants are checked by Phmm::validate;
+                // `oc`, `xi` and the backward buffers all cover every
+                // edge/state index of the validated graph, and the
+                // accumulator shapes are pinned to the graph in `new`.
+                unsafe {
+                    for e in lo..hi {
+                        let to = *phmm.out_to.get_unchecked(e) as usize;
+                        let bn = *b_next.get_unchecked(to);
+                        if bn == 0.0 {
+                            continue;
+                        }
+                        // Shared product (memoized):
+                        // α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
+                        let m = *oc.get_unchecked(e) * bn * inv_c;
+                        bsum += m;
+                        *self.xi.get_unchecked_mut(e) += fj * m;
                     }
-                    // Shared product: α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
-                    let m = phmm.out_prob[e] as f64 * phmm.emission(to, s_next) as f64 * bn * inv_c;
-                    bsum += m;
-                    self.xi[e] += fj * m;
                 }
                 b_cur[j] = bsum;
                 let gamma = fj * bsum;
@@ -182,15 +234,18 @@ impl BwAccumulators {
                 self.e_num[j * sigma + s_t] += gamma;
             }
             // Swap buffers; clear what we wrote at t+1.
-            if t + 1 < t_len {
-                for &i in &fwd.rows[t + 1].idx {
-                    b_next[i as usize] = 0.0;
-                }
+            for &i in &fwd.rows[t + 1].idx {
+                b_next[i as usize] = 0.0;
             }
             std::mem::swap(&mut b_next, &mut b_cur);
         }
-        self.n_observations += 1;
-        self.total_loglik += fwd.loglik;
+        // Restore the all-zero scratch invariant: after the loop (or for
+        // T = 1 directly after the init block) `b_next` holds the t = 0
+        // values.
+        for &i in &fwd.rows[0].idx {
+            b_next[i as usize] = 0.0;
+        }
+        self.note_observation(fwd.loglik);
         Ok(())
     }
 }

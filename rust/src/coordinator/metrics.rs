@@ -17,6 +17,9 @@ pub struct Metrics {
     pub latency_sum_ns: AtomicU64,
     /// Max per-job latency (ns).
     pub latency_max_ns: AtomicU64,
+    /// Reads skipped during training (empty or numerically dead) —
+    /// surfaced so dropped coverage is visible instead of silent.
+    pub reads_skipped: AtomicU64,
 }
 
 impl Metrics {
@@ -34,6 +37,11 @@ impl Metrics {
         self.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record reads skipped while training a job.
+    pub fn record_skipped_reads(&self, n: u64) {
+        self.reads_skipped.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Snapshot as a display-friendly summary.
     pub fn summary(&self, wall_seconds: f64) -> MetricsSummary {
         let done = self.jobs_done.load(Ordering::Relaxed);
@@ -43,6 +51,7 @@ impl Metrics {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             timesteps: self.timesteps.load(Ordering::Relaxed),
             states: self.states.load(Ordering::Relaxed),
+            reads_skipped: self.reads_skipped.load(Ordering::Relaxed),
             mean_latency_ms: if done > 0 { sum as f64 / done as f64 / 1e6 } else { 0.0 },
             max_latency_ms: self.latency_max_ns.load(Ordering::Relaxed) as f64 / 1e6,
             jobs_per_second: if wall_seconds > 0.0 { done as f64 / wall_seconds } else { 0.0 },
@@ -61,6 +70,8 @@ pub struct MetricsSummary {
     pub timesteps: u64,
     /// States processed.
     pub states: u64,
+    /// Reads skipped during training across all jobs.
+    pub reads_skipped: u64,
     /// Mean job latency (ms).
     pub mean_latency_ms: f64,
     /// Max job latency (ms).
@@ -79,10 +90,12 @@ mod tests {
         m.record(1_000_000, 100, 5000);
         m.record(3_000_000, 200, 9000);
         m.record_failure();
+        m.record_skipped_reads(3);
         let s = m.summary(2.0);
         assert_eq!(s.jobs_done, 2);
         assert_eq!(s.jobs_failed, 1);
         assert_eq!(s.timesteps, 300);
+        assert_eq!(s.reads_skipped, 3);
         assert!((s.mean_latency_ms - 2.0).abs() < 1e-9);
         assert!((s.max_latency_ms - 3.0).abs() < 1e-9);
         assert!((s.jobs_per_second - 1.0).abs() < 1e-9);

@@ -40,6 +40,12 @@ pub enum BackendKind {
 }
 
 /// Coordinator configuration.
+///
+/// Two levels of parallelism compose: `n_workers` chunk-training
+/// threads, each of which may fan its per-chunk E-step out across
+/// `train.n_workers` threads (total peak threads ≈ the product).  For
+/// many small chunks, keep `train.n_workers = 1` and scale `n_workers`;
+/// reserve the E-step workers for few/large chunks.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Worker threads (the paper's 4-core sweet spot).
@@ -133,8 +139,11 @@ pub fn run_jobs(
                     let t0 = Instant::now();
                     let result = run_one(&job, &cfg, xla_handle.as_ref(), worker_id);
                     match result {
-                        Ok((outcome, timesteps, states)) => {
+                        Ok((outcome, timesteps, states, reads_skipped)) => {
                             metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
+                            if reads_skipped > 0 {
+                                metrics.record_skipped_reads(reads_skipped);
+                            }
                             let _ = out_tx.send(outcome);
                         }
                         Err(e) => {
@@ -169,26 +178,28 @@ pub fn run_jobs(
     Ok(outcomes)
 }
 
-/// Execute one job on this worker.
+/// Execute one job on this worker.  Returns the outcome plus the
+/// timestep/state workload counters and the number of skipped reads.
 fn run_one(
     job: &ChunkJob,
     cfg: &CoordinatorConfig,
     xla: Option<&XlaHandle>,
     worker: usize,
-) -> Result<(ChunkOutcome, u64, u64)> {
+) -> Result<(ChunkOutcome, u64, u64, u64)> {
     let mut graph = Phmm::error_correction(&job.reference, &cfg.design)?;
-    let (mean_loglik, timesteps, states) = match xla {
+    let (mean_loglik, timesteps, states, reads_skipped) = match xla {
         None => {
             let res = train(&mut graph, &job.reads, &cfg.train)?;
             (
                 res.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY),
                 res.timesteps,
                 res.states_processed,
+                res.reads_skipped,
             )
         }
         Some(handle) => {
             let stats = xla_device::train_via_xla(handle, &mut graph, &job.reads, cfg.xla_iters)?;
-            (stats.mean_loglik, stats.timesteps, stats.states)
+            (stats.mean_loglik, stats.timesteps, stats.states, stats.reads_skipped)
         }
     };
     let decoded = consensus(&graph)?;
@@ -202,6 +213,7 @@ fn run_one(
         },
         timesteps,
         states,
+        reads_skipped,
     ))
 }
 
@@ -275,6 +287,44 @@ mod tests {
         let cfg = CoordinatorConfig { n_workers: 2, queue_depth: 1, ..Default::default() };
         let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
         assert_eq!(outcomes.len(), 20);
+    }
+
+    #[test]
+    fn skipped_reads_surface_in_metrics() {
+        let mut rng = XorShift::new(54);
+        let mut jobs = make_jobs(&mut rng, 3, 50);
+        // An empty read and an out-of-alphabet read are silently useless
+        // to training; the coordinator must count them.
+        jobs[0].reads.push(Sequence::from_symbols("empty", vec![]));
+        jobs[1].reads.push(Sequence::from_symbols("bad", vec![0, 1, 200]));
+        let metrics = Metrics::default();
+        let outcomes = run_jobs(jobs, &CoordinatorConfig::default(), &metrics).unwrap();
+        assert_eq!(outcomes.len(), 3);
+        let s = metrics.summary(1.0);
+        // Two skip events per EM iteration of their jobs — at least two.
+        assert!(s.reads_skipped >= 2, "reads_skipped {}", s.reads_skipped);
+    }
+
+    #[test]
+    fn estep_workers_compose_with_chunk_workers() {
+        let mut rng = XorShift::new(55);
+        let jobs = make_jobs(&mut rng, 4, 60);
+        let m1 = Metrics::default();
+        let m2 = Metrics::default();
+        let sequential = run_jobs(
+            jobs.clone(),
+            &CoordinatorConfig { n_workers: 2, ..Default::default() },
+            &m1,
+        )
+        .unwrap();
+        let mut cfg = CoordinatorConfig { n_workers: 2, ..Default::default() };
+        cfg.train.n_workers = 2;
+        let threaded = run_jobs(jobs, &cfg, &m2).unwrap();
+        assert_eq!(sequential.len(), threaded.len());
+        for (a, b) in sequential.iter().zip(threaded.iter()) {
+            assert_eq!(a.consensus.data, b.consensus.data, "job {}", a.id);
+            assert_eq!(a.mean_loglik.to_bits(), b.mean_loglik.to_bits(), "job {}", a.id);
+        }
     }
 
     #[test]

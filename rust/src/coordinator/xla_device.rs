@@ -110,6 +110,9 @@ pub struct XlaTrainStats {
     pub timesteps: u64,
     /// Total state-steps (N × timesteps; the dense engine touches all).
     pub states: u64,
+    /// Reads skipped (empty or numerically dead), summed over
+    /// iterations — surfaced in the coordinator metrics.
+    pub reads_skipped: u64,
 }
 
 /// Batch-EM training through the device: accumulate banded sums across
@@ -121,13 +124,18 @@ pub fn train_via_xla(
     iters: usize,
 ) -> Result<XlaTrainStats> {
     let mut banded = graph.to_banded()?;
-    let mut stats =
-        XlaTrainStats { mean_loglik: f64::NEG_INFINITY, timesteps: 0, states: 0 };
+    let mut stats = XlaTrainStats {
+        mean_loglik: f64::NEG_INFINITY,
+        timesteps: 0,
+        states: 0,
+        reads_skipped: 0,
+    };
     for _ in 0..iters.max(1) {
         let mut total = BandedBwSums::zeros(banded.n, banded.w, banded.sigma);
         let mut n_reads = 0u64;
         for read in reads {
             if read.is_empty() {
+                stats.reads_skipped += 1;
                 continue;
             }
             match handle.bw_sums(&banded, read) {
@@ -138,7 +146,11 @@ pub fn train_via_xla(
                     stats.states += (read.len() * banded.n) as u64;
                 }
                 Err(e @ ApHmmError::Runtime(_)) => return Err(e),
-                Err(_) => continue, // numerically dead read
+                Err(_) => {
+                    // Numerically dead read — counted, then skipped.
+                    stats.reads_skipped += 1;
+                    continue;
+                }
             }
         }
         if n_reads == 0 {

@@ -1,46 +1,85 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls (no `thiserror`): the crate
+//! builds offline with zero dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the ApHMM library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum ApHmmError {
     /// Input sequence contains a character outside the active alphabet.
-    #[error("invalid character {ch:?} for alphabet {alphabet}")]
-    InvalidCharacter { ch: char, alphabet: &'static str },
+    InvalidCharacter {
+        /// Offending character.
+        ch: char,
+        /// Alphabet name.
+        alphabet: &'static str,
+    },
 
     /// A pHMM graph failed a structural invariant.
-    #[error("invalid pHMM graph: {0}")]
     InvalidGraph(String),
 
     /// Banded encoding constraint violated (e.g. backward transition).
-    #[error("banded encoding error: {0}")]
     Banded(String),
 
     /// Numerical failure (all-zero forward row, likelihood underflow...).
-    #[error("numerical failure: {0}")]
     Numerical(String),
 
     /// Configuration file / CLI parameter problem.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed input file (FASTA/FASTQ/profile/manifest).
-    #[error("parse error in {path}: {msg}")]
-    Parse { path: String, msg: String },
+    Parse {
+        /// File that failed to parse.
+        path: String,
+        /// What went wrong.
+        msg: String,
+    },
 
     /// PJRT runtime failure (artifact loading, compilation, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator scheduling / channel failure.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
+impl fmt::Display for ApHmmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApHmmError::InvalidCharacter { ch, alphabet } => {
+                write!(f, "invalid character {ch:?} for alphabet {alphabet}")
+            }
+            ApHmmError::InvalidGraph(m) => write!(f, "invalid pHMM graph: {m}"),
+            ApHmmError::Banded(m) => write!(f, "banded encoding error: {m}"),
+            ApHmmError::Numerical(m) => write!(f, "numerical failure: {m}"),
+            ApHmmError::Config(m) => write!(f, "config error: {m}"),
+            ApHmmError::Parse { path, msg } => write!(f, "parse error in {path}: {msg}"),
+            ApHmmError::Runtime(m) => write!(f, "runtime error: {m}"),
+            ApHmmError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            ApHmmError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ApHmmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ApHmmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ApHmmError {
+    fn from(e: std::io::Error) -> Self {
+        ApHmmError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for ApHmmError {
     fn from(e: xla::Error) -> Self {
         ApHmmError::Runtime(e.to_string())
@@ -49,3 +88,24 @@ impl From<xla::Error> for ApHmmError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, ApHmmError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_descriptive() {
+        let e = ApHmmError::InvalidGraph("bad row".into());
+        assert_eq!(e.to_string(), "invalid pHMM graph: bad row");
+        let e = ApHmmError::Parse { path: "x.fa".into(), msg: "line 3".into() };
+        assert_eq!(e.to_string(), "parse error in x.fa: line 3");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: ApHmmError = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -6,18 +6,25 @@
 //!
 //! * **L3 (this crate)** — the deployable system: pHMM construction for
 //!   the traditional and error-correction designs, a complete sparse
-//!   Baum-Welch engine with sort-based and histogram state filters,
-//!   Viterbi consensus decoding, the three end-to-end applications
-//!   (error correction, protein family search, multiple sequence
-//!   alignment), simulation substrates (genomes, long reads, protein
-//!   families), a minimizer read mapper, a multi-threaded training
-//!   coordinator, and the ApHMM accelerator performance/energy/area
-//!   model that regenerates every table and figure of the paper.
+//!   Baum-Welch engine with sort-based and histogram state filters —
+//!   its hot path built on memoized per-symbol fused-coefficient
+//!   tables (the software analogue of the paper's §4.2–4.3 on-chip
+//!   memoization; see `baumwelch/README.md`), a score-only
+//!   constant-memory forward for inference, and a deterministic
+//!   block-parallel batch E-step — Viterbi consensus decoding, the
+//!   three end-to-end applications (error correction, protein family
+//!   search, multiple sequence alignment), simulation substrates
+//!   (genomes, long reads, protein families), a minimizer read mapper,
+//!   a multi-threaded training coordinator, and the ApHMM accelerator
+//!   performance/energy/area model that regenerates every table and
+//!   figure of the paper.
 //! * **L2/L1 (python/, build time only)** — the banded Baum-Welch
 //!   computation in JAX with Pallas kernels, AOT-lowered to HLO text.
 //! * **Runtime** — [`runtime`] loads those artifacts through the PJRT C
 //!   API (`xla` crate) and executes them from the Rust hot path; Python
-//!   never runs at request time.
+//!   never runs at request time.  The PJRT backend is gated behind the
+//!   `xla` cargo feature; the default (dependency-free) build ships
+//!   API-compatible stubs that fail gracefully at runtime.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.

@@ -104,6 +104,19 @@ impl Phmm {
         &self.emissions[i * s..(i + 1) * s]
     }
 
+    /// States carrying initial probability mass, as `(state, f_init)`
+    /// pairs in ascending state order.  The forward kernels snapshot
+    /// this once per parameter freeze instead of rescanning `f_init`
+    /// on every observation.
+    #[inline]
+    pub fn init_states(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.f_init
+            .iter()
+            .enumerate()
+            .filter(|&(_, &p)| p > 0.0)
+            .map(|(i, &p)| (i as u32, p))
+    }
+
     /// True if the graph contains silent (deletion) states.
     pub fn has_silent_states(&self) -> bool {
         self.kinds.iter().any(|k| k.is_silent())

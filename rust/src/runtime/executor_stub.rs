@@ -1,0 +1,84 @@
+//! API-compatible stubs for the PJRT executor (default build).
+//!
+//! The real executor (`executor.rs`) links against the `xla` crate (PJRT
+//! C API), which is not available in the offline build environment.  The
+//! default build therefore compiles this stub instead: the same public
+//! surface, but [`ArtifactStore::load`] always fails with
+//! [`ApHmmError::Runtime`], so every consumer — the CLI `runtime`
+//! subcommand, the coordinator's XLA device thread, the parity tests —
+//! compiles unchanged and degrades gracefully at runtime.  Build with
+//! `--features xla` (plus a vendored `xla` crate) for real execution.
+
+use std::path::Path;
+
+use crate::baumwelch::BandedBwSums;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::BandedPhmm;
+use crate::seq::Sequence;
+
+use super::artifacts::ArtifactSpec;
+
+fn unavailable(what: &str) -> ApHmmError {
+    ApHmmError::Runtime(format!(
+        "{what}: built without the `xla` feature (PJRT runtime unavailable)"
+    ))
+}
+
+/// Stub artifact store; [`ArtifactStore::load`] always errors.
+pub struct ArtifactStore {
+    _priv: (),
+}
+
+impl ArtifactStore {
+    /// Always fails in the default build.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        Err(unavailable(&format!("cannot load artifacts from {}", dir.display())))
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    /// Names of the compiled artifacts (always empty).
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Spec of a compiled artifact (always `None`).
+    pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+        None
+    }
+}
+
+/// Stub engine mirroring `XlaBandedEngine`'s surface.
+pub struct XlaBandedEngine<'a> {
+    _store: &'a ArtifactStore,
+    /// Artifact with entry `baum_welch_sums` (None = scoring only).
+    pub bw_artifact: Option<String>,
+    /// Artifact with entry `forward_scores`.
+    pub fwd_artifact: Option<String>,
+}
+
+impl<'a> XlaBandedEngine<'a> {
+    /// Always fails in the default build.
+    pub fn for_shape(
+        _store: &'a ArtifactStore,
+        _n: usize,
+        _w: usize,
+        _sigma: usize,
+        _t: usize,
+    ) -> Result<XlaBandedEngine<'a>> {
+        Err(unavailable("XlaBandedEngine::for_shape"))
+    }
+
+    /// Always fails in the default build.
+    pub fn score(&self, _banded: &BandedPhmm, _seq: &Sequence) -> Result<f64> {
+        Err(unavailable("XlaBandedEngine::score"))
+    }
+
+    /// Always fails in the default build.
+    pub fn bw_sums(&self, _banded: &BandedPhmm, _seq: &Sequence) -> Result<BandedBwSums> {
+        Err(unavailable("XlaBandedEngine::bw_sums"))
+    }
+}

@@ -9,6 +9,10 @@
 //! update sums out.  Python never runs at request time.
 
 mod artifacts;
+#[cfg(feature = "xla")]
+mod executor;
+#[cfg(not(feature = "xla"))]
+#[path = "executor_stub.rs"]
 mod executor;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec};

@@ -223,7 +223,7 @@ mod tests {
         train(
             &mut g,
             &reads,
-            &TrainConfig { max_iters: 3, tol: 0.0, filter: FilterConfig::None },
+            &TrainConfig { max_iters: 3, tol: 0.0, filter: FilterConfig::None, n_workers: 1 },
         )
         .unwrap();
         let decoded = consensus(&g).unwrap().consensus;

@@ -1,0 +1,193 @@
+//! Parity suite for the memoized fused-coefficient kernels: the
+//! optimized forward / fused backward+update must match both the
+//! pre-memoization engine (`baumwelch::reference`, bit-for-bit-ish) and
+//! the structurally independent log-space oracle, filters on and off;
+//! the parallel batch E-step must be unobservable in the results; and
+//! the score-only fast path must run in memory independent of sequence
+//! length.
+
+use aphmm::baumwelch::{
+    forward_sparse, forward_sparse_with, log_likelihood, reference, score_sparse_with,
+    train, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
+    TrainConfig,
+};
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::seq::Sequence;
+use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
+use aphmm::testutil;
+
+fn ec_graph(rng: &mut XorShift, len: usize) -> Phmm {
+    let data = testutil::random_seq(rng, len, 4);
+    Phmm::error_correction(&Sequence::from_symbols("r", data), &EcDesignParams::default())
+        .unwrap()
+}
+
+fn to_dense(row: &aphmm::baumwelch::SparseRow, n: usize) -> Vec<f64> {
+    let mut dense = vec![0.0f64; n];
+    for (&i, &v) in row.idx.iter().zip(row.val.iter()) {
+        dense[i as usize] = v as f64;
+    }
+    dense
+}
+
+fn filter_cases() -> [ForwardOptions; 3] {
+    [
+        ForwardOptions { filter: FilterConfig::None },
+        ForwardOptions { filter: FilterConfig::Sort { size: 40 } },
+        ForwardOptions { filter: FilterConfig::Histogram { size: 40, bins: 128 } },
+    ]
+}
+
+#[test]
+fn memoized_forward_matches_reference_and_oracle() {
+    testutil::check(25, |rng| {
+        let ref_len = rng.range(5, 45);
+        let g = ec_graph(rng, ref_len);
+        let obs_len = rng.range(2, 30);
+        let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        for opts in filter_cases() {
+            let baseline = reference::forward_sparse_reference(&g, &obs, &opts).unwrap();
+            let memoized = forward_sparse_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+            // Log-likelihood: bit-for-bit-ish (the fused product only
+            // reassociates one f32 multiply per state).
+            testutil::assert_close(memoized.loglik, baseline.loglik, 1e-5, 1e-9);
+            assert_eq!(memoized.rows.len(), baseline.rows.len());
+            if opts.filter == FilterConfig::None {
+                // Unfiltered, the scaled rows agree elementwise within
+                // reassociation noise (states that underflow to zero in
+                // exactly one engine are covered by the absolute floor).
+                for (a, b) in memoized.rows.iter().zip(baseline.rows.iter()) {
+                    let dense_a = to_dense(a, g.n_states());
+                    let dense_b = to_dense(b, g.n_states());
+                    testutil::assert_all_close(&dense_a, &dense_b, 1e-5, 1e-9);
+                }
+                // And both agree with the independent log-space oracle.
+                let want = log_likelihood(&g, &obs);
+                testutil::assert_close(memoized.loglik, want, 1e-4, 1e-5);
+            }
+            scratch.recycle(memoized);
+        }
+    });
+}
+
+#[test]
+fn memoized_accumulate_matches_reference() {
+    // The fused product is pre-widened to f64 exactly as the reference
+    // computes it, so the expectation sums agree to the last few bits.
+    testutil::check(20, |rng| {
+        let ref_len = rng.range(4, 30);
+        let g = ec_graph(rng, ref_len);
+        let obs_len = rng.range(2, 20);
+        let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        for opts in filter_cases() {
+            let fwd = forward_sparse(&g, &obs, &opts).unwrap();
+            let mut acc_ref = BwAccumulators::new(&g);
+            reference::accumulate_reference(&mut acc_ref, &g, &obs, &fwd).unwrap();
+            let mut acc_new = BwAccumulators::new(&g);
+            acc_new.accumulate_with(&g, &coeffs, &obs, &fwd, &mut scratch).unwrap();
+            testutil::assert_all_close(&acc_new.xi, &acc_ref.xi, 1e-12, 1e-300);
+            testutil::assert_all_close(&acc_new.trans_den, &acc_ref.trans_den, 1e-12, 1e-300);
+            testutil::assert_all_close(&acc_new.e_num, &acc_ref.e_num, 1e-12, 1e-300);
+            testutil::assert_all_close(&acc_new.gamma_den, &acc_ref.gamma_den, 1e-12, 1e-300);
+            assert_eq!(acc_new.n_observations, acc_ref.n_observations);
+        }
+    });
+}
+
+#[test]
+fn scratch_backward_buffers_self_clean() {
+    // Reusing one scratch across many accumulations must not leak
+    // backward mass between observations: the second accumulation of
+    // the same read equals the first.
+    let mut rng = XorShift::new(404);
+    let g = ec_graph(&mut rng, 25);
+    let coeffs = FusedCoeffs::new(&g);
+    let mut scratch = ForwardScratch::new(&g);
+    let opts = ForwardOptions::default();
+    let reads: Vec<Sequence> = (0..4)
+        .map(|i| Sequence::from_symbols(format!("o{i}"), testutil::random_seq(&mut rng, 12, 4)))
+        .collect();
+    let mut first: Vec<Vec<f64>> = Vec::new();
+    for round in 0..2 {
+        for (i, read) in reads.iter().enumerate() {
+            let fwd = forward_sparse_with(&g, &coeffs, read, &opts, &mut scratch).unwrap();
+            let mut acc = BwAccumulators::new(&g);
+            acc.accumulate_with(&g, &coeffs, read, &fwd, &mut scratch).unwrap();
+            scratch.recycle(fwd);
+            if round == 0 {
+                first.push(acc.xi.clone());
+            } else {
+                testutil::assert_all_close(&acc.xi, &first[i], 1e-15, 1e-300);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_train_is_bit_identical_across_worker_counts_and_filters() {
+    let mut rng = XorShift::new(808);
+    let reference_seq = Sequence::from_symbols("r", testutil::random_seq(&mut rng, 120, 4));
+    let reads: Vec<Sequence> = (0..19)
+        .map(|i| {
+            simulate_read(&mut rng, &reference_seq, 0, 120, &ErrorProfile::pacbio(), i).seq
+        })
+        .collect();
+    for filter in [FilterConfig::None, FilterConfig::histogram_default()] {
+        let mut histories: Vec<Vec<f64>> = Vec::new();
+        let mut params: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for n_workers in [1usize, 2, 5] {
+            let mut g = Phmm::error_correction(&reference_seq, &EcDesignParams::default())
+                .unwrap();
+            let cfg = TrainConfig { max_iters: 3, tol: 0.0, filter, n_workers };
+            let res = train(&mut g, &reads, &cfg).unwrap();
+            histories.push(res.loglik_history);
+            params.push((g.out_prob, g.emissions));
+        }
+        assert_eq!(histories[0], histories[1], "filter {filter:?}");
+        assert_eq!(histories[0], histories[2], "filter {filter:?}");
+        assert_eq!(params[0], params[1], "filter {filter:?}");
+        assert_eq!(params[0], params[2], "filter {filter:?}");
+    }
+}
+
+#[test]
+fn score_fast_path_memory_is_independent_of_sequence_length() {
+    // A 2000-base EC graph and two reads that differ 20x in length: the
+    // score-only kernel must not acquire any additional row buffers for
+    // the long read (two rows total), while the full forward pass
+    // materializes one row per timestep.
+    let mut rng = XorShift::new(515);
+    let reference_seq = Sequence::from_symbols("r", testutil::random_seq(&mut rng, 2000, 4));
+    let g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+    let long_read =
+        simulate_read(&mut rng, &reference_seq, 0, 2000, &ErrorProfile::pacbio(), 0).seq;
+    let short_read = long_read.slice(0, 100);
+    assert!(long_read.len() >= 15 * short_read.len());
+    let coeffs = FusedCoeffs::new(&g);
+    let opts = ForwardOptions { filter: FilterConfig::histogram_default() };
+
+    let mut scratch = ForwardScratch::new(&g);
+    score_sparse_with(&g, &coeffs, &short_read, &opts, &mut scratch).unwrap();
+    let rows_after_short = scratch.fresh_rows_allocated();
+    assert!(rows_after_short <= 2, "score path acquired {rows_after_short} rows");
+    let long_score = score_sparse_with(&g, &coeffs, &long_read, &opts, &mut scratch).unwrap();
+    assert_eq!(
+        scratch.fresh_rows_allocated(),
+        rows_after_short,
+        "longer sequences must not allocate more row buffers"
+    );
+    // The dense state buffer is sized by the graph, not the sequence.
+    assert_eq!(scratch.dense_len(), g.n_states());
+
+    // Contrast: the row-materializing forward scales with T...
+    let mut full_scratch = ForwardScratch::new(&g);
+    let fwd = forward_sparse_with(&g, &coeffs, &long_read, &opts, &mut full_scratch).unwrap();
+    assert_eq!(fwd.rows.len(), long_read.len());
+    assert!(full_scratch.fresh_rows_allocated() as usize >= long_read.len());
+    // ...and the two kernels agree exactly.
+    assert_eq!(fwd.loglik.to_bits(), long_score.loglik.to_bits());
+}
