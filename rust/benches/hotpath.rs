@@ -1,23 +1,37 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation): per-edge and
 //! per-state throughput of the forward pass, the fused
-//! backward+update pass, both filters, the banded engine, and (when
-//! artifacts exist) the XLA runtime path.  Used to drive and record the
-//! optimization iterations in EXPERIMENTS.md §Perf.
+//! backward+update pass, both filters, the banded engine (pre-refactor
+//! scan vs fused coefficient tables), and (when artifacts exist) the
+//! XLA runtime path.  Used to drive and record the optimization
+//! iterations in EXPERIMENTS.md §Perf.
+//!
+//! Set `APHMM_BENCH_SHORT=1` for the CI smoke mode: a smaller workload
+//! and fewer repetitions, exercising every measured kernel so
+//! regressions fail loudly without burning CI minutes.
 
 mod common;
 
 use std::path::Path;
 
 use aphmm::baumwelch::{
-    forward_sparse, forward_sparse_with, reference, score_sparse_with, BandedEngine,
-    BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
+    forward_sparse, forward_sparse_with, reference, score_sparse_with, BandedCoeffs,
+    BandedEngine, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
 
 fn main() {
-    common::banner("hot paths (median of 5)");
-    let scenario = common::ec_scenario(3, 650, 1);
+    let short = std::env::var("APHMM_BENCH_SHORT").is_ok();
+    let reps = if short { 2 } else { 7 };
+    let reps_small = if short { 2 } else { 5 };
+    let chunk = if short { 160 } else { 650 };
+
+    common::banner(if short {
+        "hot paths (SHORT smoke mode)"
+    } else {
+        "hot paths (median of 5)"
+    });
+    let scenario = common::ec_scenario(3, chunk, 1);
     let graph =
         Phmm::error_correction(&scenario.reference, &EcDesignParams::default()).unwrap();
     let read = &scenario.reads[0];
@@ -30,10 +44,10 @@ fn main() {
     let mut scratch = ForwardScratch::new(&graph);
     let opts_m = ForwardOptions::default();
 
-    let t_ref_f = common::time_median(7, || {
+    let t_ref_f = common::time_median(reps, || {
         reference::forward_sparse_reference(&graph, read, &opts_m).unwrap();
     });
-    let t_new_f = common::time_median(7, || {
+    let t_new_f = common::time_median(reps, || {
         let fwd = forward_sparse_with(&graph, &coeffs, read, &opts_m, &mut scratch).unwrap();
         scratch.recycle(fwd);
     });
@@ -45,11 +59,11 @@ fn main() {
     );
 
     let fwd_m = forward_sparse_with(&graph, &coeffs, read, &opts_m, &mut scratch).unwrap();
-    let t_ref_b = common::time_median(7, || {
+    let t_ref_b = common::time_median(reps, || {
         let mut acc = BwAccumulators::new(&graph);
         reference::accumulate_reference(&mut acc, &graph, read, &fwd_m).unwrap();
     });
-    let t_new_b = common::time_median(7, || {
+    let t_new_b = common::time_median(reps, || {
         let mut acc = BwAccumulators::new(&graph);
         acc.accumulate_with(&graph, &coeffs, read, &fwd_m, &mut scratch).unwrap();
     });
@@ -66,7 +80,7 @@ fn main() {
 
     // Fresh scratch so the row counter reflects the score kernel alone.
     let mut score_scratch = ForwardScratch::new(&graph);
-    let t_score = common::time_median(7, || {
+    let t_score = common::time_median(reps, || {
         score_sparse_with(&graph, &coeffs, read, &opts_m, &mut score_scratch).unwrap();
     });
     println!(
@@ -80,7 +94,7 @@ fn main() {
     let opts = ForwardOptions::default();
     let fwd = forward_sparse(&graph, read, &opts).unwrap();
     let edges = fwd.edges_processed as f64;
-    let t = common::time_median(5, || {
+    let t = common::time_median(reps_small, || {
         forward_sparse(&graph, read, &opts).unwrap();
     });
     println!(
@@ -93,7 +107,7 @@ fn main() {
     // --- sparse forward, histogram filter ---
     let opts_h = ForwardOptions { filter: FilterConfig::histogram_default() };
     let fwd_h = forward_sparse(&graph, read, &opts_h).unwrap();
-    let t = common::time_median(5, || {
+    let t = common::time_median(reps_small, || {
         forward_sparse(&graph, read, &opts_h).unwrap();
     });
     println!(
@@ -106,7 +120,7 @@ fn main() {
     // --- sparse forward, sort filter ---
     let opts_s = ForwardOptions { filter: FilterConfig::Sort { size: 500 } };
     let fwd_s = forward_sparse(&graph, read, &opts_s).unwrap();
-    let t = common::time_median(5, || {
+    let t = common::time_median(reps_small, || {
         forward_sparse(&graph, read, &opts_s).unwrap();
     });
     println!(
@@ -117,7 +131,7 @@ fn main() {
     );
 
     // --- fused backward + update ---
-    let t = common::time_median(5, || {
+    let t = common::time_median(reps_small, || {
         let mut acc = BwAccumulators::new(&graph);
         acc.accumulate(&graph, read, &fwd).unwrap();
     });
@@ -127,16 +141,39 @@ fn main() {
         t * 1e9 / edges
     );
 
-    // --- banded dense engine ---
+    // === banded engine: fused coefficient tables vs the pre-refactor
+    // === scan (the ROADMAP "coefficient tables for the banded engine"
+    // === candidate; parity pinned by tests/engine_matrix.rs)
+    common::banner("banded engine: fused tables vs pre-refactor scan");
     let banded = graph.to_banded().unwrap();
+    let bcoeffs = BandedCoeffs::new(&banded);
     let dense_ops = (banded.n * banded.w * read.len()) as f64;
-    let t = common::time_median(5, || {
-        BandedEngine::bw_sums(&banded, read).unwrap();
+
+    let t_band_f_old = common::time_median(reps_small, || {
+        BandedEngine::forward(&banded, read).unwrap();
+    });
+    let t_band_f_new = common::time_median(reps_small, || {
+        BandedEngine::forward_with(&banded, &bcoeffs, read).unwrap();
     });
     println!(
-        "banded bw_sums (dense):         {:>9.3} ms  {:>7.2} ns/band-op ({} ops)",
-        t * 1e3,
-        t * 1e9 / dense_ops,
+        "banded forward:   scan {:>9.3} ms -> fused {:>9.3} ms  ({:.2}x)",
+        t_band_f_old * 1e3,
+        t_band_f_new * 1e3,
+        t_band_f_old / t_band_f_new
+    );
+
+    let t_band_s_old = common::time_median(reps_small, || {
+        BandedEngine::bw_sums(&banded, read).unwrap();
+    });
+    let t_band_s_new = common::time_median(reps_small, || {
+        BandedEngine::bw_sums_with(&banded, &bcoeffs, read).unwrap();
+    });
+    println!(
+        "banded bw_sums:   scan {:>9.3} ms -> fused {:>9.3} ms  ({:.2}x)  {:>7.2} ns/band-op ({} ops)",
+        t_band_s_old * 1e3,
+        t_band_s_new * 1e3,
+        t_band_s_old / t_band_s_new,
+        t_band_s_new * 1e9 / dense_ops,
         dense_ops as u64
     );
 
@@ -144,16 +181,16 @@ fn main() {
     let dir = Path::new("artifacts");
     if dir.join("manifest.txt").exists() {
         let store = ArtifactStore::load(dir).unwrap();
-        let short = common::ec_scenario(4, 100, 1);
-        let g2 = Phmm::error_correction(&short.reference, &EcDesignParams::default()).unwrap();
+        let short_scn = common::ec_scenario(4, 100, 1);
+        let g2 = Phmm::error_correction(&short_scn.reference, &EcDesignParams::default()).unwrap();
         let b2 = g2.to_banded().unwrap();
-        let r2 = &short.reads[0];
+        let r2 = &short_scn.reads[0];
         let engine = XlaBandedEngine::for_shape(&store, b2.n, b2.w, b2.sigma, r2.len()).unwrap();
         engine.bw_sums(&b2, r2).unwrap(); // warm up
-        let t = common::time_median(5, || {
+        let t = common::time_median(reps_small, || {
             engine.bw_sums(&b2, r2).unwrap();
         });
-        let t_native = common::time_median(5, || {
+        let t_native = common::time_median(reps_small, || {
             BandedEngine::bw_sums(&b2, r2).unwrap();
         });
         println!(

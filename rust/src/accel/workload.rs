@@ -8,7 +8,7 @@
 //! [`Workload::from_forward`]) or synthesized for design-space sweeps
 //! ([`Workload::synthetic`]).
 
-use crate::baumwelch::{ForwardResult, TrainResult};
+use crate::baumwelch::{ForwardResult, ScoreResult, TrainResult};
 use crate::phmm::Phmm;
 
 /// Which Baum-Welch steps a workload executes (§4.1: Backward and
@@ -75,6 +75,36 @@ impl Workload {
         Workload {
             total_steps: t,
             avg_active_states: res.states_processed as f64 / t.max(1) as f64,
+            avg_degree: if res.states_processed > 0 {
+                res.edges_processed as f64 / res.states_processed as f64
+            } else {
+                phmm.mean_out_degree()
+            },
+            sigma: phmm.sigma(),
+            n_states: phmm.n_states() as u64,
+            chunk_len: phmm.position.last().map(|&p| p as usize + 1).unwrap_or(0),
+            steps,
+            n_sequences: 1,
+            n_iterations: 1,
+        }
+    }
+
+    /// Extract from a score-only pass.  [`ScoreResult`] is the uniform
+    /// output of every [`crate::baumwelch::ExpectationEngine`]'s
+    /// forward path, so inference workloads (protein search, MSA
+    /// pre-screening) feed the accelerator model identically whichever
+    /// backend produced them; `timesteps` is the query length (the
+    /// score path does not materialize rows to count).
+    pub fn from_score(
+        phmm: &Phmm,
+        res: &ScoreResult,
+        timesteps: u64,
+        steps: StepKind,
+    ) -> Workload {
+        let t = timesteps.max(1);
+        Workload {
+            total_steps: t,
+            avg_active_states: res.states_processed as f64 / t as f64,
             avg_degree: if res.states_processed > 0 {
                 res.edges_processed as f64 / res.states_processed as f64
             } else {
@@ -169,7 +199,7 @@ mod tests {
                 max_iters: 1,
                 tol: 0.0,
                 filter: FilterConfig::Sort { size: 64 },
-                n_workers: 1,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -177,6 +207,31 @@ mod tests {
         assert!(wl.avg_active_states <= 64.0 + 1e-9);
         assert_eq!(wl.steps, StepKind::Training);
         assert!(wl.total_steps >= 300);
+    }
+
+    #[test]
+    fn from_score_matches_from_forward_counters() {
+        // The score fast path and the row-materializing forward report
+        // the same workload counters, so the extracted descriptors must
+        // agree whichever inference path produced them.
+        use crate::baumwelch::score_sparse_with;
+        use crate::baumwelch::{ForwardScratch, FusedCoeffs};
+        let mut rng = XorShift::new(3);
+        let reference = Sequence::from_symbols("r", testutil::random_seq(&mut rng, 80, 4));
+        let g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 40, 4));
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        let score =
+            score_sparse_with(&g, &coeffs, &obs, &ForwardOptions::default(), &mut scratch)
+                .unwrap();
+        let fwd = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+        let ws = Workload::from_score(&g, &score, obs.len() as u64, StepKind::Forward);
+        let wf = Workload::from_forward(&g, &fwd, StepKind::Forward);
+        assert_eq!(ws.total_steps, wf.total_steps);
+        assert!((ws.avg_active_states - wf.avg_active_states).abs() < 1e-9);
+        assert!((ws.avg_degree - wf.avg_degree).abs() < 1e-9);
+        assert_eq!(ws.steps, StepKind::Forward);
     }
 
     #[test]

@@ -8,10 +8,11 @@
 
 use std::time::Instant;
 
-use crate::baumwelch::{train, FilterConfig, TrainConfig};
+use crate::baumwelch::{train_in, EngineKind, FilterConfig, TrainConfig};
 use crate::error::Result;
 use crate::mapper::{MapperConfig, MinimizerIndex};
 use crate::phmm::{EcDesignParams, Phmm};
+use crate::pool::WorkerPool;
 use crate::seq::Sequence;
 use crate::viterbi::consensus;
 
@@ -41,8 +42,11 @@ pub struct CorrectionConfig {
     /// E-step worker threads per chunk (1 = single-threaded).  Results
     /// are bit-identical for any value; raise it when correcting few
     /// large chunks rather than many small ones (which parallelize
-    /// better at the chunk/coordinator level).
+    /// better at the chunk/coordinator level).  Parallelism draws from
+    /// the process-wide shared [`WorkerPool`].
     pub estep_workers: usize,
+    /// Baum-Welch backend used to train each chunk.
+    pub engine: EngineKind,
 }
 
 impl Default for CorrectionConfig {
@@ -56,6 +60,7 @@ impl Default for CorrectionConfig {
             margin: 0,
             mapper: MapperConfig::default(),
             estep_workers: 1,
+            engine: EngineKind::Sparse,
         }
     }
 }
@@ -91,6 +96,9 @@ pub fn correct_assembly(
     cfg: &CorrectionConfig,
 ) -> Result<CorrectionReport> {
     let mut timings = AppTimings::default();
+    // One shared pool per app session: every chunk's E-step fan-out
+    // draws helpers from it instead of spawning fresh scoped threads.
+    let pool = WorkerPool::global();
 
     // ---- Mapping (non-BW time) ----
     let t0 = Instant::now();
@@ -157,8 +165,9 @@ pub fn correct_assembly(
             tol: 1e-3,
             filter: cfg.filter,
             n_workers: cfg.estep_workers,
+            engine: cfg.engine,
         };
-        let res = train(&mut graph, &segments, &train_cfg)?;
+        let res = train_in(&mut graph, &segments, &train_cfg, pool)?;
         timings.forward_ns += res.forward_ns;
         timings.backward_update_ns += res.backward_update_ns;
         timings.maximize_ns += res.maximize_ns;
@@ -308,6 +317,28 @@ mod tests {
         .unwrap();
         assert_eq!(one.corrected.data, four.corrected.data);
         assert_eq!(one.reads_skipped, four.reads_skipped);
+    }
+
+    #[test]
+    fn engine_selection_is_configuration() {
+        // Swapping the Baum-Welch backend is pure configuration: the
+        // banded engine runs the same pipeline end-to-end and must not
+        // make the assembly worse.
+        let mut rng = XorShift::new(12);
+        let truth = generate_genome(&mut rng, 600);
+        let assembly = corrupt(&mut rng, &truth, 0.03);
+        let reads = simulate_reads(&mut rng, &truth, 8.0, 300, &ErrorProfile::pacbio());
+        let read_seqs: Vec<Sequence> = reads.into_iter().map(|r| r.seq).collect();
+        let cfg = CorrectionConfig {
+            chunk_len: 300,
+            engine: EngineKind::Banded,
+            ..Default::default()
+        };
+        let report = correct_assembly(&assembly, &read_seqs, &cfg).unwrap();
+        assert!(report.chunks_trained > 0, "no chunk trained under the banded engine");
+        let before = edit_distance(&assembly.data, &truth.data, 200);
+        let after = edit_distance(&report.corrected.data, &truth.data, 200);
+        assert!(after <= before, "banded correction regressed: {before} -> {after}");
     }
 
     #[test]

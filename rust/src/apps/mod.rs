@@ -8,6 +8,6 @@ mod protein_search;
 mod timing;
 
 pub use error_correction::{correct_assembly, CorrectionConfig, CorrectionReport};
-pub use msa::{align_all, msa_identity, AlignedRow, MsaConfig, MsaReport};
-pub use protein_search::{FamilyDb, SearchConfig, SearchHit, SearchReport};
+pub use msa::{align_all, align_all_with, msa_identity, AlignedRow, MsaConfig, MsaReport};
+pub use protein_search::{FamilyDb, FamilyEntry, SearchConfig, SearchHit, SearchReport};
 pub use timing::AppTimings;

@@ -6,19 +6,27 @@
 //! maximum-posterior state, and match-state assignments define the MSA
 //! columns (insertion-state residues sit between columns), which is how
 //! hmmalign constructs its alignment.
+//!
+//! All compute routes through the [`ExpectationEngine`] selected by
+//! [`MsaConfig::engine`] (default: the banded engine, whose fused
+//! coefficient tables are built once per profile): the optional
+//! score-only pre-screen uses [`ExpectationEngine::score`] and the
+//! decode uses [`ExpectationEngine::posterior`].
 
 use std::time::Instant;
 
-use crate::baumwelch::{score_sparse_with, BandedEngine, ForwardOptions, ForwardScratch, FusedCoeffs};
-use crate::error::Result;
+use crate::baumwelch::{
+    BandedEngine, EngineKind, ExpectationEngine, ForwardOptions, ReferenceEngine, SparseEngine,
+};
+use crate::error::{ApHmmError, Result};
 use crate::phmm::{Phmm, StateKind};
 use crate::seq::Sequence;
 
 use super::timing::AppTimings;
 
 /// Thresholds above this activate the score-only pre-screen: junk is
-/// rejected by the two-row sparse forward fast path *before* the full
-/// banded posterior decode is paid for it.
+/// rejected by the engine's forward score *before* the full posterior
+/// decode is paid for it.
 const PRESCREEN_ACTIVE: f64 = -1e8;
 
 /// MSA configuration.
@@ -29,11 +37,16 @@ pub struct MsaConfig {
     /// any threshold above -1e8 is additionally enforced by a cheap
     /// score-only pre-screen ahead of posterior decoding.
     pub min_avg_loglik: f64,
+    /// Baum-Welch backend.  The banded engine is the natural fit
+    /// (posterior decode needs dense forward rows); the sparse and
+    /// reference engines fall back to a per-sequence banded lowering
+    /// for the decode.
+    pub engine: EngineKind,
 }
 
 impl Default for MsaConfig {
     fn default() -> Self {
-        MsaConfig { min_avg_loglik: -1e9 }
+        MsaConfig { min_avg_loglik: -1e9, engine: EngineKind::Banded }
     }
 }
 
@@ -63,70 +76,13 @@ pub struct MsaReport {
     pub timings: AppTimings,
 }
 
-/// Align one sequence to the profile by posterior decoding.
-fn align_one(
+/// Map the best-state path onto profile columns (hmmalign's rule).
+fn build_row(
     phmm: &Phmm,
-    banded: &crate::phmm::BandedPhmm,
     n_columns: usize,
     seq: &Sequence,
-    timings: &mut AppTimings,
-) -> Result<AlignedRow> {
-    // ---- Forward (BW time) ----
-    let t0 = Instant::now();
-    let (f_rows, scales, loglik) = BandedEngine::forward(banded, seq)?;
-    timings.forward_ns += t0.elapsed().as_nanos();
-
-    // ---- Backward + posterior argmax (BW time) ----
-    let t1 = Instant::now();
-    let n = banded.n;
-    let w = banded.w;
-    let t_len = seq.len();
-    let mut b_next = vec![1.0f32; n];
-    let mut b_cur = vec![0.0f32; n];
-    // best state per timestep by posterior γ = F̂ · B̂.
-    let mut best_state = vec![0u32; t_len];
-    {
-        let f_last = &f_rows[(t_len - 1) * n..];
-        let mut bi = 0usize;
-        for i in 1..n {
-            if f_last[i] > f_last[bi] {
-                bi = i;
-            }
-        }
-        best_state[t_len - 1] = bi as u32;
-    }
-    for t in (0..t_len.saturating_sub(1)).rev() {
-        let s_next = seq.data[t + 1] as usize;
-        let inv_c = 1.0 / scales[t + 1];
-        for j in 0..n {
-            let row = &banded.a_band[j * w..(j + 1) * w];
-            let hi = w.min(n - j);
-            let mut acc = 0.0f32;
-            for (x, &a) in row.iter().enumerate().take(hi) {
-                if a > 0.0 {
-                    let to = j + x;
-                    acc += a * banded.e(to, s_next) * b_next[to];
-                }
-            }
-            b_cur[j] = acc * inv_c;
-        }
-        let f_t = &f_rows[t * n..(t + 1) * n];
-        let mut bi = 0usize;
-        let mut bv = -1.0f32;
-        for j in 0..n {
-            let g = f_t[j] * b_cur[j];
-            if g > bv {
-                bv = g;
-                bi = j;
-            }
-        }
-        best_state[t] = bi as u32;
-        std::mem::swap(&mut b_next, &mut b_cur);
-    }
-    timings.backward_update_ns += t1.elapsed().as_nanos();
-
-    // ---- Build the row (non-BW) ----
-    let t2 = Instant::now();
+    best_state: &[u32],
+) -> (Vec<Option<u8>>, usize) {
     let mut columns: Vec<Option<u8>> = vec![None; n_columns];
     let mut insertions = 0usize;
     for (t, &s) in best_state.iter().enumerate() {
@@ -144,15 +100,37 @@ fn align_one(
             StateKind::Deletion => {}
         }
     }
-    timings.other_ns += t2.elapsed().as_nanos();
-    Ok(AlignedRow { id: seq.id.clone(), columns, insertions, loglik })
+    (columns, insertions)
 }
 
-/// Align all `seqs` against the (emitting-only) profile `phmm`.
+/// Align all `seqs` against the (emitting-only) profile `phmm`, using
+/// the engine named by `cfg.engine`.
 pub fn align_all(phmm: &Phmm, seqs: &[Sequence], cfg: &MsaConfig) -> Result<MsaReport> {
+    match cfg.engine {
+        EngineKind::Sparse => align_all_with(&SparseEngine, phmm, seqs, cfg),
+        EngineKind::Banded => align_all_with(&BandedEngine, phmm, seqs, cfg),
+        EngineKind::Reference => align_all_with(&ReferenceEngine, phmm, seqs, cfg),
+        EngineKind::Xla => Err(ApHmmError::Config(
+            "the XLA engine is device-backed; MSA supports the in-process engines \
+             (sparse | banded | reference)"
+                .into(),
+        )),
+    }
+}
+
+/// [`align_all`] over any [`ExpectationEngine`] instance.
+pub fn align_all_with<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &Phmm,
+    seqs: &[Sequence],
+    cfg: &MsaConfig,
+) -> Result<MsaReport> {
     let mut timings = AppTimings::default();
+    // Freeze the profile once: the engine's coefficient tables are
+    // shared across every sequence (non-BW time).
     let t0 = Instant::now();
-    let banded = phmm.to_banded()?;
+    let prep = engine.prepare(phmm)?;
+    let mut scratch = engine.make_scratch(phmm);
     let n_columns = phmm
         .kinds
         .iter()
@@ -163,12 +141,8 @@ pub fn align_all(phmm: &Phmm, seqs: &[Sequence], cfg: &MsaConfig) -> Result<MsaR
         .unwrap_or(0);
     timings.other_ns += t0.elapsed().as_nanos();
 
-    // Score-only pre-screen state (built only when the threshold is
-    // active): the fused tables are shared across sequences and the
-    // fast path keeps two rows regardless of sequence length.
     let prescreen = cfg.min_avg_loglik > PRESCREEN_ACTIVE;
-    let coeffs = if prescreen { Some(FusedCoeffs::new(phmm)) } else { None };
-    let mut scratch = ForwardScratch::default();
+    let opts = ForwardOptions::default();
 
     let mut rows = Vec::with_capacity(seqs.len());
     let mut skipped = 0usize;
@@ -177,10 +151,9 @@ pub fn align_all(phmm: &Phmm, seqs: &[Sequence], cfg: &MsaConfig) -> Result<MsaR
             skipped += 1;
             continue;
         }
-        if let Some(coeffs) = &coeffs {
+        if prescreen {
             let t = Instant::now();
-            let verdict =
-                score_sparse_with(phmm, coeffs, seq, &ForwardOptions::default(), &mut scratch);
+            let verdict = engine.score(phmm, &prep, seq, &opts, &mut scratch);
             timings.forward_ns += t.elapsed().as_nanos();
             match verdict {
                 Ok(score) if score.loglik / seq.len() as f64 >= cfg.min_avg_loglik => {}
@@ -190,10 +163,20 @@ pub fn align_all(phmm: &Phmm, seqs: &[Sequence], cfg: &MsaConfig) -> Result<MsaR
                 }
             }
         }
-        match align_one(phmm, &banded, n_columns, seq, &mut timings) {
-            Ok(row) => {
-                if row.loglik / seq.len() as f64 >= cfg.min_avg_loglik {
-                    rows.push(row);
+        match engine.posterior(phmm, &prep, seq) {
+            Ok(dec) => {
+                timings.forward_ns += dec.forward_ns;
+                timings.backward_update_ns += dec.backward_ns;
+                if dec.loglik / seq.len() as f64 >= cfg.min_avg_loglik {
+                    let t2 = Instant::now();
+                    let (columns, insertions) = build_row(phmm, n_columns, seq, &dec.best_state);
+                    rows.push(AlignedRow {
+                        id: seq.id.clone(),
+                        columns,
+                        insertions,
+                        loglik: dec.loglik,
+                    });
+                    timings.other_ns += t2.elapsed().as_nanos();
                 } else {
                     skipped += 1;
                 }
@@ -291,6 +274,40 @@ mod tests {
     }
 
     #[test]
+    fn engines_produce_identical_alignments() {
+        // The posterior decode is the same banded computation whichever
+        // engine fronts it, so the alignments must agree exactly.
+        let mut rng = XorShift::new(26);
+        let (fam, phmm) = family_profile(&mut rng);
+        let seqs = &fam.members[..4];
+        let banded = align_all(
+            &phmm,
+            seqs,
+            &MsaConfig { engine: EngineKind::Banded, ..Default::default() },
+        )
+        .unwrap();
+        let sparse = align_all(
+            &phmm,
+            seqs,
+            &MsaConfig { engine: EngineKind::Sparse, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(banded.rows.len(), sparse.rows.len());
+        for (a, b) in banded.rows.iter().zip(sparse.rows.iter()) {
+            assert_eq!(a.columns, b.columns, "row {}", a.id);
+            assert_eq!(a.insertions, b.insertions, "row {}", a.id);
+        }
+    }
+
+    #[test]
+    fn xla_engine_is_rejected_for_msa() {
+        let mut rng = XorShift::new(27);
+        let (fam, phmm) = family_profile(&mut rng);
+        let cfg = MsaConfig { engine: EngineKind::Xla, ..Default::default() };
+        assert!(align_all(&phmm, &fam.members[..1], &cfg).is_err());
+    }
+
+    #[test]
     fn prescreen_rejects_junk_before_posterior_decode() {
         use crate::sim::XorShift as Rng;
         let mut rng = Rng::new(25);
@@ -317,7 +334,10 @@ mod tests {
             worst_member > junk_score,
             "profile cannot separate members ({worst_member}) from junk ({junk_score})"
         );
-        let cfg = MsaConfig { min_avg_loglik: (worst_member + junk_score) / 2.0 };
+        let cfg = MsaConfig {
+            min_avg_loglik: (worst_member + junk_score) / 2.0,
+            ..Default::default()
+        };
         let report = align_all(&phmm, &seqs, &cfg).unwrap();
         assert_eq!(report.rows.len(), 4, "members must survive the pre-screen");
         assert_eq!(report.skipped, 1, "junk must be rejected");

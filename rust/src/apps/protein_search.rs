@@ -4,16 +4,20 @@
 //! (the role Pfam's `.hmm` files play).  A query is first screened by a
 //! cheap k-mer containment pre-filter (the role of HMMER's MSV/SSV
 //! pipeline stages — this is the "non-Baum-Welch" part of Fig. 2's
-//! hmmsearch profile), and the surviving families are scored with the
-//! Forward pass (log-odds vs a uniform null model).
+//! hmmsearch profile), and the surviving families are scored through the
+//! database's [`ExpectationEngine`] (log-odds vs a uniform null model).
+//!
+//! Database profiles are frozen, so each family's engine state is
+//! prepared once at load time ([`ExpectationEngine::prepare`] — the
+//! fused coefficient tables of the sparse engine, the banded encoding
+//! of the dense one) and every query scores through it (paper §4.2
+//! applied to search).  [`FamilyDb`] defaults to the sparse engine;
+//! [`FamilyDb::build_with`] accepts any backend.
 
 use std::collections::HashSet;
 use std::time::Instant;
 
-use crate::baumwelch::{
-    forward_sparse_with, score_sparse_with, BwAccumulators, FilterConfig, ForwardOptions,
-    ForwardScratch, FusedCoeffs,
-};
+use crate::baumwelch::{ExpectationEngine, FilterConfig, ForwardOptions, SparseEngine};
 use crate::error::Result;
 use crate::phmm::{Phmm, Profile, TraditionalParams};
 use crate::seq::{Alphabet, Sequence};
@@ -29,7 +33,8 @@ pub struct SearchConfig {
     /// Minimum shared-k-mer fraction to run the full Forward scoring
     /// (0 disables the pre-filter, scoring every family).
     pub prefilter_min_frac: f64,
-    /// State filter during scoring.
+    /// State filter during scoring (sparse engine; dense engines
+    /// ignore it).
     pub filter: FilterConfig,
     /// Report the top `max_hits` families.
     pub max_hits: usize,
@@ -58,23 +63,25 @@ impl Default for SearchConfig {
 }
 
 /// One family profile in the database.
-pub struct FamilyEntry {
+pub struct FamilyEntry<E: ExpectationEngine = SparseEngine> {
     /// Family identifier.
     pub id: String,
     /// Folded (emitting-only) pHMM.
     pub phmm: Phmm,
     /// k-mer set of the family consensus (pre-filter).
     kmers: HashSet<u64>,
-    /// Memoized per-symbol fused coefficients — database profiles are
-    /// frozen, so the tables are built once per family at load time and
-    /// every query scores through them (paper §4.2 applied to search).
-    coeffs: FusedCoeffs,
+    /// Frozen engine state for the profile — database profiles never
+    /// change, so it is built once per family at load time and every
+    /// query scores through it.
+    prepared: E::Prepared,
 }
 
-/// A database of family pHMMs (the Pfam stand-in).
-pub struct FamilyDb {
+/// A database of family pHMMs (the Pfam stand-in), scored through one
+/// [`ExpectationEngine`].
+pub struct FamilyDb<E: ExpectationEngine = SparseEngine> {
     /// Profiles, indexed by family.
-    pub entries: Vec<FamilyEntry>,
+    pub entries: Vec<FamilyEntry<E>>,
+    engine: E,
     alphabet: Alphabet,
     k: usize,
 }
@@ -114,21 +121,37 @@ fn kmer_set(seq: &[u8], k: usize, sigma: usize) -> HashSet<u64> {
     set
 }
 
-impl FamilyDb {
-    /// Build the database from simulated families: column-counted
-    /// profiles of the members (what `hmmbuild` would produce), lowered
-    /// to folded traditional pHMMs.
-    pub fn build(families: &[ProteinFamily], alphabet: Alphabet, cfg: &SearchConfig) -> Result<FamilyDb> {
+impl FamilyDb<SparseEngine> {
+    /// Build the database from simulated families on the default sparse
+    /// engine: column-counted profiles of the members (what `hmmbuild`
+    /// would produce), lowered to folded traditional pHMMs.
+    pub fn build(
+        families: &[ProteinFamily],
+        alphabet: Alphabet,
+        cfg: &SearchConfig,
+    ) -> Result<FamilyDb<SparseEngine>> {
+        FamilyDb::build_with(SparseEngine, families, alphabet, cfg)
+    }
+}
+
+impl<E: ExpectationEngine> FamilyDb<E> {
+    /// [`FamilyDb::build`] on an explicit engine backend.
+    pub fn build_with(
+        engine: E,
+        families: &[ProteinFamily],
+        alphabet: Alphabet,
+        cfg: &SearchConfig,
+    ) -> Result<FamilyDb<E>> {
         let mut entries = Vec::with_capacity(families.len());
         for fam in families {
             let profile =
                 Profile::from_members(&fam.members, fam.ancestor.len(), alphabet, 0.5);
             let phmm = Phmm::traditional(&profile, &cfg.params)?.fold_silent(cfg.fold_depth)?;
             let kmers = kmer_set(&fam.ancestor.data, cfg.prefilter_k, alphabet.size());
-            let coeffs = FusedCoeffs::new(&phmm);
-            entries.push(FamilyEntry { id: fam.id.clone(), phmm, kmers, coeffs });
+            let prepared = engine.prepare(&phmm)?;
+            entries.push(FamilyEntry { id: fam.id.clone(), phmm, kmers, prepared });
         }
-        Ok(FamilyDb { entries, alphabet, k: cfg.prefilter_k })
+        Ok(FamilyDb { entries, engine, alphabet, k: cfg.prefilter_k })
     }
 
     /// Number of families.
@@ -167,17 +190,17 @@ impl FamilyDb {
         report.timings.other_ns += t0.elapsed().as_nanos();
 
         // ---- Forward scoring (BW) ----
-        // Score-only fast path: two live rows per family (memory
-        // independent of query length), one scratch reused across the
-        // whole candidate list, and each family's precomputed fused
-        // coefficient tables.
+        // One scratch reused across the whole candidate list (the
+        // sparse engine's buffers grow to the largest profile), each
+        // family scored through its frozen engine state.
         let opts = ForwardOptions { filter: cfg.filter };
-        let mut scratch = ForwardScratch::default();
+        let mut scratch: Option<E::Scratch> = None;
         let mut hits: Vec<SearchHit> = Vec::new();
         for &i in &candidates {
             let entry = &self.entries[i];
+            let scratch = scratch.get_or_insert_with(|| self.engine.make_scratch(&entry.phmm));
             let t1 = Instant::now();
-            let ll = match score_sparse_with(&entry.phmm, &entry.coeffs, query, &opts, &mut scratch)
+            let ll = match self.engine.score(&entry.phmm, &entry.prepared, query, &opts, scratch)
             {
                 Ok(res) => res.loglik,
                 Err(_) => {
@@ -197,24 +220,23 @@ impl FamilyDb {
 
         // ---- Posterior decoding of the top hits (BW: Backward) ----
         // hmmsearch runs Forward AND Backward for its reported domains
-        // (the paper's Fig. 2 shows both for this use case); we decode
-        // posteriors for the best `posterior_hits` families.
+        // (the paper's Fig. 2 shows both for this use case); we run the
+        // engine's full expectation pass for the best `posterior_hits`
+        // families.
         for hit in hits.iter().take(cfg.posterior_hits) {
             if let Some(entry) = self.entries.iter().find(|e| e.id == hit.family) {
-                let t3 = Instant::now();
-                match forward_sparse_with(&entry.phmm, &entry.coeffs, query, &opts, &mut scratch) {
-                    Ok(fwd) => {
-                        report.timings.forward_ns += t3.elapsed().as_nanos();
-                        let t4 = Instant::now();
-                        let mut acc = BwAccumulators::new(&entry.phmm);
-                        let _ =
-                            acc.accumulate_with(&entry.phmm, &entry.coeffs, query, &fwd, &mut scratch);
-                        report.timings.backward_update_ns += t4.elapsed().as_nanos();
-                        scratch.recycle(fwd);
-                    }
-                    Err(_) => {
-                        report.timings.forward_ns += t3.elapsed().as_nanos();
-                    }
+                let scratch = scratch.get_or_insert_with(|| self.engine.make_scratch(&entry.phmm));
+                let mut acc = self.engine.make_acc(&entry.phmm);
+                if let Ok(stats) = self.engine.accumulate_read(
+                    &entry.phmm,
+                    &entry.prepared,
+                    query,
+                    &opts,
+                    scratch,
+                    &mut acc,
+                ) {
+                    report.timings.forward_ns += stats.forward_ns;
+                    report.timings.backward_update_ns += stats.backward_update_ns;
                 }
             }
         }
@@ -226,6 +248,7 @@ impl FamilyDb {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baumwelch::BandedEngine;
     use crate::seq::PROTEIN;
     use crate::sim::{generate_families, ProteinSimParams, XorShift};
 
@@ -291,6 +314,31 @@ mod tests {
     }
 
     #[test]
+    fn banded_backend_ranks_like_sparse() {
+        // The database is generic over the engine: the banded backend
+        // must agree with the sparse default on the top hit (scores
+        // differ only by f32 rounding).
+        let mut rng = XorShift::new(15);
+        let params = ProteinSimParams { n_families: 8, ..Default::default() };
+        let fams = generate_families(&mut rng, &params);
+        let cfg = SearchConfig::default();
+        let sparse_db = FamilyDb::build(&fams, PROTEIN, &cfg).unwrap();
+        let banded_db = FamilyDb::build_with(BandedEngine, &fams, PROTEIN, &cfg).unwrap();
+        for fam in fams.iter().take(3) {
+            let query = &fam.members[0];
+            let a = sparse_db.search(query, &cfg).unwrap();
+            let b = banded_db.search(query, &cfg).unwrap();
+            assert_eq!(a.scored, b.scored);
+            assert_eq!(
+                a.hits.first().map(|h| h.family.clone()),
+                b.hits.first().map(|h| h.family.clone()),
+                "query {}",
+                query.id
+            );
+        }
+    }
+
+    #[test]
     fn scores_are_length_normalized() {
         let mut rng = XorShift::new(14);
         let (fams, db, cfg) = db(&mut rng, 8);
@@ -302,7 +350,7 @@ mod tests {
 
     #[test]
     fn empty_db_returns_no_hits() {
-        let db = FamilyDb { entries: Vec::new(), alphabet: PROTEIN, k: 3 };
+        let db = FamilyDb::build(&[], PROTEIN, &SearchConfig::default()).unwrap();
         let q = Sequence::from_str("q", "ACDEFGHIKL", PROTEIN).unwrap();
         let report = db.search(&q, &SearchConfig::default()).unwrap();
         assert!(report.hits.is_empty());

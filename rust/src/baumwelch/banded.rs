@@ -6,11 +6,116 @@
 //! (`crate::runtime`) is a drop-in replacement for [`BandedEngine`]
 //! (same inputs, same outputs), which is exactly what the parity
 //! integration test asserts.
+//!
+//! Two generations of kernels coexist:
+//!
+//! * [`BandedEngine::forward`] / [`BandedEngine::bw_sums`] — the
+//!   pre-refactor scan that re-gathers `a[j,x] · e(j+x, s)` per band
+//!   entry per timestep.  Kept as the parity baseline (the fused tables
+//!   are pinned against it) and as the exact mirror of the AOT
+//!   artifacts for the XLA parity tests.
+//! * [`BandedEngine::forward_with`] / [`BandedEngine::bw_sums_with`] —
+//!   the fused-coefficient hot path: [`BandedCoeffs`] memoizes the
+//!   per-symbol transition×emission band once per parameter freeze
+//!   (paper §4.2–4.3 applied to the dense engine; the ROADMAP's
+//!   "coefficient tables for the banded engine" perf candidate), so the
+//!   timestep scan performs one multiply-accumulate per band entry with
+//!   no emission gather.  The backward scan consumes the same table in
+//!   the same association as the old code, so its sums are
+//!   bit-identical; the forward fuses the emission into the scatter
+//!   (one f32 reassociation per entry, tolerance-pinned by
+//!   `tests/engine_matrix.rs`).
 
+use std::time::Instant;
+
+use super::engine::PosteriorDecode;
 use super::EPS;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::BandedPhmm;
 use crate::seq::Sequence;
+
+/// Per-symbol fused coefficient tables for the banded engine: one
+/// parameter-freeze snapshot of `a[j,x] · e(j+x, s)` per symbol, plus
+/// the fused `f_init[i] · e(i, s)` start row.
+///
+/// Built once per EM iteration (or once per frozen profile for
+/// inference) by [`BandedCoeffs::new`]; rebuild after any parameter
+/// update — the `_with` kernels reject shape mismatches but cannot
+/// detect stale values.
+pub struct BandedCoeffs {
+    n: usize,
+    w: usize,
+    sigma: usize,
+    /// `a[j,x] · e(j+x, s)`, symbol-major `[Σ × N × W]`.
+    coef: Vec<f32>,
+    /// `f_init[i] · e(i, s)`, symbol-major `[Σ × N]`.
+    init_coef: Vec<f32>,
+}
+
+impl BandedCoeffs {
+    /// Precompute the fused band for the current parameters of `b`.
+    /// Cost: `O(Σ · N · W)` multiplies and `4·Σ·N·(W+1)` bytes,
+    /// amortized over `T · N · W` band operations per read.
+    pub fn new(b: &BandedPhmm) -> BandedCoeffs {
+        let (n, w, sigma) = (b.n, b.w, b.sigma);
+        let mut coef = vec![0.0f32; sigma * n * w];
+        for s in 0..sigma {
+            let base = s * n * w;
+            for j in 0..n {
+                let hi = w.min(n - j);
+                for x in 0..hi {
+                    let a = b.a_band[j * w + x];
+                    if a > 0.0 {
+                        coef[base + j * w + x] = a * b.e(j + x, s);
+                    }
+                }
+            }
+        }
+        let mut init_coef = vec![0.0f32; sigma * n];
+        for s in 0..sigma {
+            for i in 0..n {
+                init_coef[s * n + i] = b.f_init[i] * b.e(i, s);
+            }
+        }
+        BandedCoeffs { n, w, sigma, coef, init_coef }
+    }
+
+    /// `(N, W, Σ)` the tables were built for.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.n, self.w, self.sigma)
+    }
+
+    /// The fused band of symbol `s`, row-major `[N × W]`.
+    #[inline]
+    fn coef_for(&self, s: usize) -> &[f32] {
+        &self.coef[s * self.n * self.w..(s + 1) * self.n * self.w]
+    }
+
+    /// The fused start row of symbol `s`, `[N]`.
+    #[inline]
+    fn init_for(&self, s: usize) -> &[f32] {
+        &self.init_coef[s * self.n..(s + 1) * self.n]
+    }
+}
+
+/// Shared input validation of the fused banded kernels.
+fn precheck_banded(b: &BandedPhmm, coeffs: &BandedCoeffs, seq: &Sequence) -> Result<()> {
+    if coeffs.shape() != (b.n, b.w, b.sigma) {
+        return Err(ApHmmError::Banded(
+            "banded coefficient tables do not match the graph (stale BandedCoeffs?)".into(),
+        ));
+    }
+    if seq.is_empty() {
+        return Err(ApHmmError::Numerical("empty observation sequence".into()));
+    }
+    if seq.data.iter().any(|&s| (s as usize) >= b.sigma) {
+        return Err(ApHmmError::Numerical(format!(
+            "sequence {:?} contains a symbol outside the {}-letter alphabet",
+            seq.id, b.sigma
+        )));
+    }
+    Ok(())
+}
 
 /// Raw update sums in banded layout (mirrors `model.baum_welch_sums`).
 #[derive(Clone, Debug)]
@@ -217,6 +322,212 @@ impl BandedEngine {
         }
         Ok(sums)
     }
+
+    /// Fused-coefficient scaled forward pass: same recurrences as
+    /// [`BandedEngine::forward`], but every band entry is a single
+    /// multiply-accumulate against the memoized `a·e` table (no
+    /// emission gather, no post-hoc per-state emission multiply).
+    pub fn forward_with(
+        b: &BandedPhmm,
+        coeffs: &BandedCoeffs,
+        seq: &Sequence,
+    ) -> Result<(Vec<f32>, Vec<f32>, f64)> {
+        precheck_banded(b, coeffs, seq)?;
+        let (n, w) = (b.n, b.w);
+        let t_len = seq.len();
+        let mut f_rows = vec![0.0f32; t_len * n];
+        let mut scales = vec![0.0f32; t_len];
+        let mut loglik = 0.0f64;
+        // t = 0: fused init·emission row.
+        {
+            let init = coeffs.init_for(seq.data[0] as usize);
+            let mut c = 0.0f32;
+            for i in 0..n {
+                let v = init[i];
+                f_rows[i] = v;
+                c += v;
+            }
+            if c <= EPS {
+                return Err(ApHmmError::Numerical("dead start in banded forward".into()));
+            }
+            for i in 0..n {
+                f_rows[i] /= c;
+            }
+            scales[0] = c;
+            loglik += (c as f64).ln();
+        }
+        for t in 1..t_len {
+            let coef = coeffs.coef_for(seq.data[t] as usize);
+            let (prev_rows, cur_rows) = f_rows.split_at_mut(t * n);
+            let prev = &prev_rows[(t - 1) * n..];
+            let cur = &mut cur_rows[..n];
+            // Fused banded scatter: cur[j + x] += prev[j] · (a·e)[j, x].
+            for j in 0..n {
+                let fj = prev[j];
+                if fj == 0.0 {
+                    continue;
+                }
+                let row = &coef[j * w..(j + 1) * w];
+                let hi = w.min(n - j);
+                for x in 0..hi {
+                    cur[j + x] += fj * row[x];
+                }
+            }
+            let mut c = 0.0f32;
+            for i in 0..n {
+                c += cur[i];
+            }
+            if c <= EPS {
+                return Err(ApHmmError::Numerical(format!("banded forward died at t={t}")));
+            }
+            let inv = 1.0 / c;
+            for i in 0..n {
+                cur[i] *= inv;
+            }
+            scales[t] = c;
+            loglik += (c as f64).ln();
+        }
+        Ok((f_rows, scales, loglik))
+    }
+
+    /// Fused-coefficient forward-only score.
+    pub fn score_with(b: &BandedPhmm, coeffs: &BandedCoeffs, seq: &Sequence) -> Result<f64> {
+        Ok(Self::forward_with(b, coeffs, seq)?.2)
+    }
+
+    /// Fused-coefficient full expectation pass.  The backward scan
+    /// consumes the memoized `a·e` product in exactly the association
+    /// of [`BandedEngine::bw_sums`], so (given the same forward rows)
+    /// its sums are bit-identical to the pre-refactor scan.
+    pub fn bw_sums_with(
+        b: &BandedPhmm,
+        coeffs: &BandedCoeffs,
+        seq: &Sequence,
+    ) -> Result<BandedBwSums> {
+        let (f_rows, scales, loglik) = Self::forward_with(b, coeffs, seq)?;
+        Self::backward_sums_with(b, coeffs, seq, &f_rows, &scales, loglik)
+    }
+
+    /// The fused backward + update scan over precomputed forward rows
+    /// (split out so callers can time the two phases separately).
+    pub fn backward_sums_with(
+        b: &BandedPhmm,
+        coeffs: &BandedCoeffs,
+        seq: &Sequence,
+        f_rows: &[f32],
+        scales: &[f32],
+        loglik: f64,
+    ) -> Result<BandedBwSums> {
+        precheck_banded(b, coeffs, seq)?;
+        let (n, w, sigma) = (b.n, b.w, b.sigma);
+        let t_len = seq.len();
+        let mut sums = BandedBwSums::zeros(n, w, sigma);
+        sums.loglik = loglik as f32;
+
+        let mut b_next = vec![1.0f32; n]; // B̂_{T-1} = 1
+        let mut b_cur = vec![0.0f32; n];
+        // γ at t = T-1.
+        {
+            let f_last = &f_rows[(t_len - 1) * n..];
+            let s_t = seq.data[t_len - 1] as usize;
+            for i in 0..n {
+                let g = f_last[i];
+                sums.gamma_den[i] += g;
+                sums.e_num[i * sigma + s_t] += g;
+            }
+        }
+        for t in (0..t_len.saturating_sub(1)).rev() {
+            let coef = coeffs.coef_for(seq.data[t + 1] as usize);
+            let s_t = seq.data[t] as usize;
+            let inv_c = 1.0 / scales[t + 1];
+            let f_t = &f_rows[t * n..(t + 1) * n];
+            // m = (a·e)[j,x] · B̂_{t+1}(j+x) / c — one table gather per
+            // band entry instead of a transition read plus an emission
+            // gather.
+            for j in 0..n {
+                let row = &coef[j * w..(j + 1) * w];
+                let hi = w.min(n - j);
+                let mut acc = 0.0f32;
+                let fj = f_t[j];
+                for x in 0..hi {
+                    let ae = row[x];
+                    if ae == 0.0 {
+                        continue;
+                    }
+                    let m = ae * b_next[j + x] * inv_c;
+                    acc += m;
+                    sums.xi_band[j * w + x] += fj * m;
+                }
+                b_cur[j] = acc;
+                let g = fj * acc;
+                sums.trans_den[j] += g;
+                sums.gamma_den[j] += g;
+                sums.e_num[j * sigma + s_t] += g;
+            }
+            std::mem::swap(&mut b_next, &mut b_cur);
+        }
+        Ok(sums)
+    }
+
+    /// Posterior best-state decode (hmmalign's alignment rule): forward
+    /// plus a backward scan tracking `argmax_i γ_t(i) = F̂_t(i)·B̂_t(i)`
+    /// per timestep, both on the fused coefficient tables.  The two
+    /// phases are timed separately for the Fig. 2 breakdown.
+    pub fn posterior_with(
+        b: &BandedPhmm,
+        coeffs: &BandedCoeffs,
+        seq: &Sequence,
+    ) -> Result<PosteriorDecode> {
+        let t0 = Instant::now();
+        let (f_rows, scales, loglik) = Self::forward_with(b, coeffs, seq)?;
+        let forward_ns = t0.elapsed().as_nanos();
+
+        let t1 = Instant::now();
+        let (n, w) = (b.n, b.w);
+        let t_len = seq.len();
+        let mut b_next = vec![1.0f32; n];
+        let mut b_cur = vec![0.0f32; n];
+        let mut best_state = vec![0u32; t_len];
+        {
+            let f_last = &f_rows[(t_len - 1) * n..];
+            let mut bi = 0usize;
+            for i in 1..n {
+                if f_last[i] > f_last[bi] {
+                    bi = i;
+                }
+            }
+            best_state[t_len - 1] = bi as u32;
+        }
+        for t in (0..t_len.saturating_sub(1)).rev() {
+            let coef = coeffs.coef_for(seq.data[t + 1] as usize);
+            let inv_c = 1.0 / scales[t + 1];
+            for j in 0..n {
+                let row = &coef[j * w..(j + 1) * w];
+                let hi = w.min(n - j);
+                let mut acc = 0.0f32;
+                for (x, &ae) in row.iter().enumerate().take(hi) {
+                    if ae > 0.0 {
+                        acc += ae * b_next[j + x];
+                    }
+                }
+                b_cur[j] = acc * inv_c;
+            }
+            let f_t = &f_rows[t * n..(t + 1) * n];
+            let mut bi = 0usize;
+            let mut bv = -1.0f32;
+            for j in 0..n {
+                let g = f_t[j] * b_cur[j];
+                if g > bv {
+                    bv = g;
+                    bi = j;
+                }
+            }
+            best_state[t] = bi as u32;
+            std::mem::swap(&mut b_next, &mut b_cur);
+        }
+        let backward_ns = t1.elapsed().as_nanos();
+        Ok(PosteriorDecode { best_state, loglik, forward_ns, backward_ns })
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +625,132 @@ mod tests {
             let ll1 = BandedEngine::score(&banded, &obs).unwrap();
             assert!(ll1 >= ll0 - 1e-3, "EM decreased loglik {ll0} -> {ll1}");
         });
+    }
+
+    #[test]
+    fn fused_band_tables_match_direct_products() {
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(4, 30);
+            let (g, _) = setup(rng, __h0, 5);
+            let b = g.to_banded().unwrap();
+            let c = BandedCoeffs::new(&b);
+            assert_eq!(c.shape(), (b.n, b.w, b.sigma));
+            for s in 0..b.sigma {
+                let band = c.coef_for(s);
+                for j in 0..b.n {
+                    let hi = b.w.min(b.n - j);
+                    for x in 0..hi {
+                        let want = b.a_band[j * b.w + x] * b.e(j + x, s);
+                        assert_eq!(band[j * b.w + x].to_bits(), want.to_bits(), "j={j} x={x} s={s}");
+                    }
+                }
+                let init = c.init_for(s);
+                for i in 0..b.n {
+                    assert_eq!(init[i].to_bits(), (b.f_init[i] * b.e(i, s)).to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fused_forward_matches_prerefactor_scan() {
+        // The fused scatter reassociates one f32 multiply per band
+        // entry; rows, scales and log-likelihood stay within
+        // reassociation noise of the pre-refactor scan.
+        testutil::check(12, |rng| {
+            let __h0 = rng.range(4, 35);
+            let __h1 = rng.range(2, 25);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let b = g.to_banded().unwrap();
+            let c = BandedCoeffs::new(&b);
+            let (f_old, s_old, ll_old) = BandedEngine::forward(&b, &obs).unwrap();
+            let (f_new, s_new, ll_new) = BandedEngine::forward_with(&b, &c, &obs).unwrap();
+            testutil::assert_close(ll_new, ll_old, 1e-4, 1e-6);
+            let f_old: Vec<f64> = f_old.iter().map(|&x| x as f64).collect();
+            let f_new: Vec<f64> = f_new.iter().map(|&x| x as f64).collect();
+            testutil::assert_all_close(&f_new, &f_old, 1e-3, 1e-6);
+            let s_old: Vec<f64> = s_old.iter().map(|&x| x as f64).collect();
+            let s_new: Vec<f64> = s_new.iter().map(|&x| x as f64).collect();
+            testutil::assert_all_close(&s_new, &s_old, 1e-3, 1e-6);
+        });
+    }
+
+    #[test]
+    fn fused_backward_is_bit_identical_given_same_forward_rows() {
+        // The backward scan consumes the memoized a·e product in the
+        // exact association of the pre-refactor code, so feeding it the
+        // pre-refactor forward rows must reproduce bw_sums to the bit.
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(4, 30);
+            let __h1 = rng.range(2, 20);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let b = g.to_banded().unwrap();
+            let c = BandedCoeffs::new(&b);
+            let (f_rows, scales, loglik) = BandedEngine::forward(&b, &obs).unwrap();
+            let old = BandedEngine::bw_sums(&b, &obs).unwrap();
+            let new =
+                BandedEngine::backward_sums_with(&b, &c, &obs, &f_rows, &scales, loglik).unwrap();
+            assert_eq!(old.loglik.to_bits(), new.loglik.to_bits());
+            for (a, b_) in old.xi_band.iter().zip(&new.xi_band) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+            for (a, b_) in old.gamma_den.iter().zip(&new.gamma_den) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+            for (a, b_) in old.trans_den.iter().zip(&new.trans_den) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+            for (a, b_) in old.e_num.iter().zip(&new.e_num) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn fused_sums_track_prerefactor_sums() {
+        // End-to-end (fused forward + fused backward) the sums stay
+        // within forward-reassociation noise of the pre-refactor scan.
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(4, 25);
+            let __h1 = rng.range(3, 15);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let b = g.to_banded().unwrap();
+            let c = BandedCoeffs::new(&b);
+            let old = BandedEngine::bw_sums(&b, &obs).unwrap();
+            let new = BandedEngine::bw_sums_with(&b, &c, &obs).unwrap();
+            testutil::assert_close(new.loglik as f64, old.loglik as f64, 1e-4, 1e-6);
+            let o: Vec<f64> = old.gamma_den.iter().map(|&x| x as f64).collect();
+            let n_: Vec<f64> = new.gamma_den.iter().map(|&x| x as f64).collect();
+            testutil::assert_all_close(&n_, &o, 5e-3, 1e-5);
+            let o: Vec<f64> = old.xi_band.iter().map(|&x| x as f64).collect();
+            let n_: Vec<f64> = new.xi_band.iter().map(|&x| x as f64).collect();
+            testutil::assert_all_close(&n_, &o, 5e-3, 1e-5);
+        });
+    }
+
+    #[test]
+    fn fused_kernels_reject_stale_coeffs() {
+        let mut rng = crate::sim::XorShift::new(17);
+        let (g, obs) = setup(&mut rng, 20, 10);
+        let (g2, _) = setup(&mut rng, 31, 5);
+        let b = g.to_banded().unwrap();
+        let b2 = g2.to_banded().unwrap();
+        let stale = BandedCoeffs::new(&b2);
+        assert!(BandedEngine::forward_with(&b, &stale, &obs).is_err());
+        assert!(BandedEngine::bw_sums_with(&b, &stale, &obs).is_err());
+    }
+
+    #[test]
+    fn posterior_decode_tracks_high_probability_states() {
+        let mut rng = crate::sim::XorShift::new(23);
+        let (g, obs) = setup(&mut rng, 30, 20);
+        let b = g.to_banded().unwrap();
+        let c = BandedCoeffs::new(&b);
+        let dec = BandedEngine::posterior_with(&b, &c, &obs).unwrap();
+        assert_eq!(dec.best_state.len(), obs.len());
+        let ll = BandedEngine::score(&b, &obs).unwrap();
+        testutil::assert_close(dec.loglik, ll, 1e-3, 1e-6);
+        assert!(dec.best_state.iter().all(|&s| (s as usize) < b.n));
     }
 
     #[test]

@@ -1,0 +1,668 @@
+//! The pluggable Baum-Welch execution framework (paper §1, §4: one
+//! algorithm, many execution substrates).
+//!
+//! [`ExpectationEngine`] abstracts everything the EM training loop, the
+//! three applications and the coordinator need from a Baum-Welch
+//! backend:
+//!
+//! * [`ExpectationEngine::prepare`] — freeze the current parameters
+//!   into backend-specific coefficient tables (the software analogue of
+//!   ApHMM loading its on-chip coefficient memory);
+//! * [`ExpectationEngine::accumulate_read`] — run forward + fused
+//!   backward/update of one read into a backend-specific accumulator,
+//!   reporting uniform [`ReadStats`] instrumentation;
+//! * [`ExpectationEngine::merge`] / [`ExpectationEngine::maximize`] —
+//!   the deterministic block reduction and the M-step;
+//! * [`ExpectationEngine::score`] — the forward-only inference path
+//!   (protein search, MSA pre-screening);
+//! * [`ExpectationEngine::posterior`] — posterior best-state decoding
+//!   (hmmalign).
+//!
+//! Four engines implement it: [`SparseEngine`] (the CSR
+//! fused-coefficient hot path), [`super::BandedEngine`] (dense banded
+//! with its own fused tables), [`ReferenceEngine`] (the pre-memoization
+//! parity oracle) and `coordinator::XlaEngine` (expectation passes
+//! shipped to the shared PJRT device thread; real execution is gated
+//! behind the `xla`/`pjrt` features, stubs otherwise).  Callers select
+//! one with [`EngineKind`] (`TrainConfig::engine`, the apps' configs,
+//! the `--engine` CLI flag); generic code dispatches through
+//! `train_with_engine` and friends.
+//!
+//! The contract every engine must keep: accumulation is commutative
+//! enough that merging block accumulators **in block order** is
+//! equivalent to sequential accumulation, which is what makes the
+//! shared-[`crate::pool::WorkerPool`] E-step bit-identical for any
+//! worker count.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::banded::{BandedBwSums, BandedCoeffs, BandedEngine};
+use super::filter::FilterStats;
+use super::kernels::{ForwardScratch, FusedCoeffs};
+use super::reference;
+use super::sparse::{forward_sparse_with, score_sparse_with, ForwardOptions, ScoreResult};
+use super::update::BwAccumulators;
+use crate::error::Result;
+use crate::phmm::{BandedPhmm, Phmm};
+use crate::seq::Sequence;
+
+/// Which [`ExpectationEngine`] backs a session.  Carried by
+/// `TrainConfig` and the application configs; plain `Copy` data so the
+/// configs stay `Copy` (the XLA device's artifact directory lives in
+/// `CoordinatorConfig::artifacts_dir`, not here).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// CSR sparse engine with state filtering and memoized per-symbol
+    /// fused-coefficient tables — the software baseline / hot path.
+    #[default]
+    Sparse,
+    /// Dense banded engine (mirror of the L2 JAX model) with its own
+    /// fused-coefficient tables.
+    Banded,
+    /// Pre-memoization reference kernels — the parity oracle.  Slow;
+    /// for tests and speedup measurement.
+    Reference,
+    /// Expectation passes shipped to the shared XLA device thread
+    /// (AOT artifacts via PJRT).  Requires a device session: use the
+    /// coordinator with `artifacts_dir`, or `train_with_engine` with a
+    /// `coordinator::XlaEngine` directly.
+    Xla,
+}
+
+impl EngineKind {
+    /// Parse a CLI/config name (`sparse | banded | reference | xla`).
+    pub fn parse(name: &str) -> Option<EngineKind> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "sparse" => Some(EngineKind::Sparse),
+            "banded" => Some(EngineKind::Banded),
+            "reference" | "ref" => Some(EngineKind::Reference),
+            "xla" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Sparse => "sparse",
+            EngineKind::Banded => "banded",
+            EngineKind::Reference => "reference",
+            EngineKind::Xla => "xla",
+        }
+    }
+}
+
+/// Uniform per-read instrumentation reported by every engine: the
+/// Fig. 2 step timings plus the workload counters the accelerator
+/// model consumes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReadStats {
+    /// Forward-pass nanoseconds.
+    pub forward_ns: u128,
+    /// Fused backward + update nanoseconds.
+    pub backward_update_ns: u128,
+    /// State-filter instrumentation (empty for dense engines).
+    pub filter_stats: FilterStats,
+    /// Σ over timesteps of active states.
+    pub states_processed: u64,
+    /// Σ over timesteps of traversed edges / band entries.
+    pub edges_processed: u64,
+    /// Timesteps executed.
+    pub timesteps: u64,
+}
+
+impl ReadStats {
+    /// Fold another read's stats into this aggregate.
+    pub fn merge(&mut self, other: &ReadStats) {
+        self.forward_ns += other.forward_ns;
+        self.backward_update_ns += other.backward_update_ns;
+        self.filter_stats.merge(&other.filter_stats);
+        self.states_processed += other.states_processed;
+        self.edges_processed += other.edges_processed;
+        self.timesteps += other.timesteps;
+    }
+}
+
+/// Output of [`ExpectationEngine::posterior`]: the per-timestep maximum
+/// posterior states plus phase timings for the Fig. 2 breakdown.
+#[derive(Clone, Debug)]
+pub struct PosteriorDecode {
+    /// `argmax_i γ_t(i)` per timestep.
+    pub best_state: Vec<u32>,
+    /// `log P(S | G)`.
+    pub loglik: f64,
+    /// Forward-pass nanoseconds.
+    pub forward_ns: u128,
+    /// Backward + argmax nanoseconds.
+    pub backward_ns: u128,
+}
+
+/// A pluggable Baum-Welch execution backend.  See the module docs for
+/// the method contract; `Sync` because one engine instance is shared by
+/// all E-step workers of a session.
+pub trait ExpectationEngine: Sync {
+    /// Frozen per-parameter-freeze state (coefficient tables and
+    /// whatever encoding the backend computes on), shared read-only by
+    /// every worker.  Owns copies: the graph may be mutably borrowed
+    /// again (maximization) while a `Prepared` is alive, but it must be
+    /// rebuilt after any parameter update.
+    type Prepared: Send + Sync;
+    /// Per-worker mutable scratch (buffer pools etc.).
+    type Scratch: Send;
+    /// Backend-specific expectation accumulator (one per E-step block).
+    type Acc: Send;
+
+    /// Canonical engine name for logs and docs.
+    fn name(&self) -> &'static str;
+
+    /// Freeze the current parameters of `phmm` into coefficient tables.
+    fn prepare(&self, phmm: &Phmm) -> Result<Self::Prepared>;
+
+    /// A fresh per-worker scratch sized for `phmm`.
+    fn make_scratch(&self, phmm: &Phmm) -> Self::Scratch;
+
+    /// A zeroed accumulator shaped for `phmm`.
+    fn make_acc(&self, phmm: &Phmm) -> Self::Acc;
+
+    /// Forward + fused backward/update of one read into `acc`.
+    ///
+    /// Errors follow the shared skip rule of the training loop:
+    /// `ApHmmError::Numerical` marks a dead read (skipped and counted);
+    /// anything else is fatal and aborts the E-step.
+    fn accumulate_read(
+        &self,
+        phmm: &Phmm,
+        prep: &Self::Prepared,
+        read: &Sequence,
+        opts: &ForwardOptions,
+        scratch: &mut Self::Scratch,
+        acc: &mut Self::Acc,
+    ) -> Result<ReadStats>;
+
+    /// Merge a block accumulator into `into` (called in block order).
+    fn merge(&self, into: &mut Self::Acc, from: &Self::Acc);
+
+    /// `(Σ log-likelihood, observation count)` accumulated so far.
+    fn observations(&self, acc: &Self::Acc) -> (f64, u64);
+
+    /// Maximization: write the re-estimated parameters into `phmm`.
+    fn maximize(&self, phmm: &mut Phmm, acc: &Self::Acc) -> Result<()>;
+
+    /// Forward-only score of one read (the inference path).
+    fn score(
+        &self,
+        phmm: &Phmm,
+        prep: &Self::Prepared,
+        read: &Sequence,
+        opts: &ForwardOptions,
+        scratch: &mut Self::Scratch,
+    ) -> Result<ScoreResult>;
+
+    /// Posterior best-state decode of one read (hmmalign).  The default
+    /// lowers to the banded encoding per call (the reference engine's
+    /// oracle path); the banded engine reuses its prepared tables and
+    /// the sparse engine caches the lowering in its `Prepared` on first
+    /// use.
+    fn posterior(
+        &self,
+        phmm: &Phmm,
+        _prep: &Self::Prepared,
+        read: &Sequence,
+    ) -> Result<PosteriorDecode> {
+        let banded = phmm.to_banded()?;
+        let coeffs = BandedCoeffs::new(&banded);
+        BandedEngine::posterior_with(&banded, &coeffs, read)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sparse engine — the CSR fused-coefficient hot path.
+// ---------------------------------------------------------------------
+
+/// Today's production engine: CSR sparse forward with state filtering
+/// and the memoized per-symbol fused-coefficient kernels of
+/// [`super::kernels`].
+pub struct SparseEngine;
+
+/// Frozen state of the sparse engine: the fused CSR tables, plus a
+/// lazily-built banded lowering for posterior decoding — built at most
+/// once per parameter freeze, on first [`ExpectationEngine::posterior`]
+/// call, so profiles that are never posterior-decoded pay nothing and
+/// profiles decoded `M` times pay once instead of `M` times.
+pub struct SparsePrepared {
+    /// Per-symbol fused CSR coefficient tables (the training/scoring
+    /// hot path).
+    pub coeffs: FusedCoeffs,
+    banded: OnceLock<BandedPrepared>,
+}
+
+impl SparsePrepared {
+    fn banded_for(&self, phmm: &Phmm) -> Result<&BandedPrepared> {
+        if let Some(bp) = self.banded.get() {
+            return Ok(bp);
+        }
+        let banded = phmm.to_banded()?;
+        let coeffs = BandedCoeffs::new(&banded);
+        // A concurrent builder may win the race; its value is used.
+        Ok(self.banded.get_or_init(|| BandedPrepared { banded, coeffs }))
+    }
+}
+
+impl ExpectationEngine for SparseEngine {
+    type Prepared = SparsePrepared;
+    type Scratch = ForwardScratch;
+    type Acc = BwAccumulators;
+
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+
+    fn prepare(&self, phmm: &Phmm) -> Result<SparsePrepared> {
+        Ok(SparsePrepared { coeffs: FusedCoeffs::new(phmm), banded: OnceLock::new() })
+    }
+
+    fn make_scratch(&self, phmm: &Phmm) -> ForwardScratch {
+        ForwardScratch::new(phmm)
+    }
+
+    fn make_acc(&self, phmm: &Phmm) -> BwAccumulators {
+        BwAccumulators::new(phmm)
+    }
+
+    fn accumulate_read(
+        &self,
+        phmm: &Phmm,
+        prep: &SparsePrepared,
+        read: &Sequence,
+        opts: &ForwardOptions,
+        scratch: &mut ForwardScratch,
+        acc: &mut BwAccumulators,
+    ) -> Result<ReadStats> {
+        let t0 = Instant::now();
+        let fwd = forward_sparse_with(phmm, &prep.coeffs, read, opts, scratch)?;
+        let mut stats = ReadStats {
+            forward_ns: t0.elapsed().as_nanos(),
+            filter_stats: fwd.filter_stats,
+            states_processed: fwd.states_processed,
+            edges_processed: fwd.edges_processed,
+            timesteps: fwd.rows.len() as u64,
+            ..Default::default()
+        };
+        let t1 = Instant::now();
+        acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch)?;
+        stats.backward_update_ns = t1.elapsed().as_nanos();
+        scratch.recycle(fwd);
+        Ok(stats)
+    }
+
+    fn merge(&self, into: &mut BwAccumulators, from: &BwAccumulators) {
+        into.merge(from);
+    }
+
+    fn observations(&self, acc: &BwAccumulators) -> (f64, u64) {
+        (acc.total_loglik, acc.n_observations)
+    }
+
+    fn maximize(&self, phmm: &mut Phmm, acc: &BwAccumulators) -> Result<()> {
+        acc.apply(phmm)
+    }
+
+    fn score(
+        &self,
+        phmm: &Phmm,
+        prep: &SparsePrepared,
+        read: &Sequence,
+        opts: &ForwardOptions,
+        scratch: &mut ForwardScratch,
+    ) -> Result<ScoreResult> {
+        score_sparse_with(phmm, &prep.coeffs, read, opts, scratch)
+    }
+
+    fn posterior(
+        &self,
+        phmm: &Phmm,
+        prep: &SparsePrepared,
+        read: &Sequence,
+    ) -> Result<PosteriorDecode> {
+        let bp = prep.banded_for(phmm)?;
+        BandedEngine::posterior_with(&bp.banded, &bp.coeffs, read)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference engine — the pre-memoization parity oracle.
+// ---------------------------------------------------------------------
+
+/// The pre-memoization kernels of [`super::reference`] behind the
+/// engine interface: byte-for-byte the original compute, usable as a
+/// drop-in oracle by the engine-equivalence matrix tests.
+pub struct ReferenceEngine;
+
+impl ExpectationEngine for ReferenceEngine {
+    type Prepared = ();
+    type Scratch = ();
+    type Acc = BwAccumulators;
+
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn prepare(&self, _phmm: &Phmm) -> Result<()> {
+        Ok(())
+    }
+
+    fn make_scratch(&self, _phmm: &Phmm) {}
+
+    fn make_acc(&self, phmm: &Phmm) -> BwAccumulators {
+        BwAccumulators::new(phmm)
+    }
+
+    fn accumulate_read(
+        &self,
+        phmm: &Phmm,
+        _prep: &(),
+        read: &Sequence,
+        opts: &ForwardOptions,
+        _scratch: &mut (),
+        acc: &mut BwAccumulators,
+    ) -> Result<ReadStats> {
+        let t0 = Instant::now();
+        let fwd = reference::forward_sparse_reference(phmm, read, opts)?;
+        let mut stats = ReadStats {
+            forward_ns: t0.elapsed().as_nanos(),
+            filter_stats: fwd.filter_stats,
+            states_processed: fwd.states_processed,
+            edges_processed: fwd.edges_processed,
+            timesteps: fwd.rows.len() as u64,
+            ..Default::default()
+        };
+        let t1 = Instant::now();
+        reference::accumulate_reference(acc, phmm, read, &fwd)?;
+        stats.backward_update_ns = t1.elapsed().as_nanos();
+        Ok(stats)
+    }
+
+    fn merge(&self, into: &mut BwAccumulators, from: &BwAccumulators) {
+        into.merge(from);
+    }
+
+    fn observations(&self, acc: &BwAccumulators) -> (f64, u64) {
+        (acc.total_loglik, acc.n_observations)
+    }
+
+    fn maximize(&self, phmm: &mut Phmm, acc: &BwAccumulators) -> Result<()> {
+        acc.apply(phmm)
+    }
+
+    fn score(
+        &self,
+        phmm: &Phmm,
+        _prep: &(),
+        read: &Sequence,
+        opts: &ForwardOptions,
+        _scratch: &mut (),
+    ) -> Result<ScoreResult> {
+        let fwd = reference::forward_sparse_reference(phmm, read, opts)?;
+        Ok(ScoreResult {
+            loglik: fwd.loglik,
+            filter_stats: fwd.filter_stats,
+            states_processed: fwd.states_processed,
+            edges_processed: fwd.edges_processed,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Banded engine — dense banded with fused coefficient tables.
+// ---------------------------------------------------------------------
+
+/// Frozen state of the banded engine: the banded encoding plus its
+/// per-symbol fused coefficient tables.
+pub struct BandedPrepared {
+    /// The banded parameter snapshot.
+    pub banded: BandedPhmm,
+    /// Fused `a·e` tables built from it.
+    pub coeffs: BandedCoeffs,
+}
+
+/// Banded expectation accumulator: raw update sums plus the observation
+/// count the generic loop needs for the mean log-likelihood.
+pub struct BandedAcc {
+    /// Raw banded update sums.
+    pub sums: BandedBwSums,
+    /// Σ log-likelihood accumulated in `f64`.  `sums.loglik` mirrors
+    /// the f32 artifact layout and loses precision on large batches
+    /// (ulp ≈ 0.03 at a batch total of −3e5, enough to cross the
+    /// default `tol`); the convergence check reads this field instead.
+    pub loglik: f64,
+    /// Observations accumulated.
+    pub n_observations: u64,
+}
+
+impl BandedAcc {
+    /// Zeroed accumulator of shape `(n, w, sigma)`.
+    pub fn new(n: usize, w: usize, sigma: usize) -> BandedAcc {
+        BandedAcc { sums: BandedBwSums::zeros(n, w, sigma), loglik: 0.0, n_observations: 0 }
+    }
+
+    /// Elementwise accumulate (shared by the banded and XLA engines).
+    pub fn merge(&mut self, other: &BandedAcc) {
+        self.sums.add(&other.sums);
+        self.loglik += other.loglik;
+        self.n_observations += other.n_observations;
+    }
+
+    /// Maximization through the banded encoding: apply the sums to a
+    /// fresh banded snapshot of `phmm`, then write the parameters back
+    /// into the CSR arrays.
+    pub fn maximize_into(&self, phmm: &mut Phmm) -> Result<()> {
+        let mut banded = phmm.to_banded()?;
+        self.sums.apply(&mut banded);
+        phmm.update_from_banded(&banded)
+    }
+}
+
+impl ExpectationEngine for BandedEngine {
+    type Prepared = BandedPrepared;
+    type Scratch = ();
+    type Acc = BandedAcc;
+
+    fn name(&self) -> &'static str {
+        "banded"
+    }
+
+    fn prepare(&self, phmm: &Phmm) -> Result<BandedPrepared> {
+        let banded = phmm.to_banded()?;
+        let coeffs = BandedCoeffs::new(&banded);
+        Ok(BandedPrepared { banded, coeffs })
+    }
+
+    fn make_scratch(&self, _phmm: &Phmm) {}
+
+    fn make_acc(&self, phmm: &Phmm) -> BandedAcc {
+        BandedAcc::new(phmm.n_states(), phmm.band_width(), phmm.sigma())
+    }
+
+    fn accumulate_read(
+        &self,
+        _phmm: &Phmm,
+        prep: &BandedPrepared,
+        read: &Sequence,
+        _opts: &ForwardOptions,
+        _scratch: &mut (),
+        acc: &mut BandedAcc,
+    ) -> Result<ReadStats> {
+        let t0 = Instant::now();
+        let (f_rows, scales, loglik) =
+            BandedEngine::forward_with(&prep.banded, &prep.coeffs, read)?;
+        let forward_ns = t0.elapsed().as_nanos();
+        let t1 = Instant::now();
+        let sums = BandedEngine::backward_sums_with(
+            &prep.banded,
+            &prep.coeffs,
+            read,
+            &f_rows,
+            &scales,
+            loglik,
+        )?;
+        acc.sums.add(&sums);
+        acc.loglik += loglik;
+        acc.n_observations += 1;
+        let backward_update_ns = t1.elapsed().as_nanos();
+        let t = read.len() as u64;
+        let n = prep.banded.n as u64;
+        Ok(ReadStats {
+            forward_ns,
+            backward_update_ns,
+            filter_stats: FilterStats::default(),
+            states_processed: n * t,
+            edges_processed: n * prep.banded.w as u64 * t.saturating_sub(1),
+            timesteps: t,
+        })
+    }
+
+    fn merge(&self, into: &mut BandedAcc, from: &BandedAcc) {
+        into.merge(from);
+    }
+
+    fn observations(&self, acc: &BandedAcc) -> (f64, u64) {
+        (acc.loglik, acc.n_observations)
+    }
+
+    fn maximize(&self, phmm: &mut Phmm, acc: &BandedAcc) -> Result<()> {
+        acc.maximize_into(phmm)
+    }
+
+    fn score(
+        &self,
+        _phmm: &Phmm,
+        prep: &BandedPrepared,
+        read: &Sequence,
+        _opts: &ForwardOptions,
+        _scratch: &mut (),
+    ) -> Result<ScoreResult> {
+        let loglik = BandedEngine::score_with(&prep.banded, &prep.coeffs, read)?;
+        let t = read.len() as u64;
+        let n = prep.banded.n as u64;
+        Ok(ScoreResult {
+            loglik,
+            filter_stats: FilterStats::default(),
+            states_processed: n * t,
+            edges_processed: n * prep.banded.w as u64 * t.saturating_sub(1),
+        })
+    }
+
+    fn posterior(
+        &self,
+        _phmm: &Phmm,
+        prep: &BandedPrepared,
+        read: &Sequence,
+    ) -> Result<PosteriorDecode> {
+        BandedEngine::posterior_with(&prep.banded, &prep.coeffs, read)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn setup(rng: &mut XorShift, ref_len: usize, obs_len: usize) -> (Phmm, Sequence) {
+        let data = testutil::random_seq(rng, ref_len, 4);
+        let g = Phmm::error_correction(
+            &Sequence::from_symbols("r", data),
+            &EcDesignParams::default(),
+        )
+        .unwrap();
+        let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+        (g, obs)
+    }
+
+    #[test]
+    fn engine_kind_parses_names() {
+        assert_eq!(EngineKind::parse("sparse"), Some(EngineKind::Sparse));
+        assert_eq!(EngineKind::parse("BANDED"), Some(EngineKind::Banded));
+        assert_eq!(EngineKind::parse("ref"), Some(EngineKind::Reference));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Xla));
+        assert_eq!(EngineKind::parse("gpu"), None);
+        assert_eq!(EngineKind::default(), EngineKind::Sparse);
+        assert_eq!(EngineKind::Banded.name(), "banded");
+    }
+
+    #[test]
+    fn engines_score_within_tolerance_of_each_other() {
+        testutil::check(8, |rng| {
+            let ref_len = rng.range(5, 30);
+            let obs_len = rng.range(3, 20);
+            let (g, obs) = setup(rng, ref_len, obs_len);
+            let opts = ForwardOptions::default();
+
+            let sparse = SparseEngine;
+            let sp = sparse.prepare(&g).unwrap();
+            let mut ss = sparse.make_scratch(&g);
+            let a = sparse.score(&g, &sp, &obs, &opts, &mut ss).unwrap().loglik;
+
+            let banded = BandedEngine;
+            let bp = banded.prepare(&g).unwrap();
+            let b = banded.score(&g, &bp, &obs, &opts, &mut ()).unwrap().loglik;
+
+            let reference = ReferenceEngine;
+            let c = reference.score(&g, &(), &obs, &opts, &mut ()).unwrap().loglik;
+
+            testutil::assert_close(a, c, 1e-5, 1e-9);
+            testutil::assert_close(a, b, 1e-3, 1e-5);
+        });
+    }
+
+    #[test]
+    fn engine_accumulate_and_maximize_improve_likelihood() {
+        // One EM step through the trait must not decrease the
+        // likelihood, for every in-process engine.
+        let mut rng = XorShift::new(97);
+        let (g0, obs) = setup(&mut rng, 20, 12);
+
+        fn em_step<E: ExpectationEngine>(engine: &E, g0: &Phmm, obs: &Sequence) -> (f64, f64) {
+            let mut g = g0.clone();
+            let prep = engine.prepare(&g).unwrap();
+            let mut scratch = engine.make_scratch(&g);
+            let mut acc = engine.make_acc(&g);
+            let opts = ForwardOptions::default();
+            let stats = engine
+                .accumulate_read(&g, &prep, obs, &opts, &mut scratch, &mut acc)
+                .unwrap();
+            assert!(stats.timesteps == obs.len() as u64);
+            let (ll0, n) = engine.observations(&acc);
+            assert_eq!(n, 1);
+            engine.maximize(&mut g, &acc).unwrap();
+            let prep2 = engine.prepare(&g).unwrap();
+            let mut scratch2 = engine.make_scratch(&g);
+            let ll1 = engine.score(&g, &prep2, obs, &opts, &mut scratch2).unwrap().loglik;
+            (ll0, ll1)
+        }
+
+        for (name, (ll0, ll1)) in [
+            ("sparse", em_step(&SparseEngine, &g0, &obs)),
+            ("banded", em_step(&BandedEngine, &g0, &obs)),
+            ("reference", em_step(&ReferenceEngine, &g0, &obs)),
+        ] {
+            assert!(ll1 >= ll0 - 1e-2, "{name}: EM decreased loglik {ll0} -> {ll1}");
+        }
+    }
+
+    #[test]
+    fn sparse_and_banded_posterior_agree() {
+        let mut rng = XorShift::new(101);
+        let (g, obs) = setup(&mut rng, 25, 15);
+        let sparse = SparseEngine;
+        let sp = sparse.prepare(&g).unwrap();
+        let banded = BandedEngine;
+        let bp = banded.prepare(&g).unwrap();
+        let a = sparse.posterior(&g, &sp, &obs).unwrap();
+        let b = banded.posterior(&g, &bp, &obs).unwrap();
+        assert_eq!(a.best_state, b.best_state);
+        testutil::assert_close(a.loglik, b.loglik, 1e-9, 1e-12);
+    }
+}

@@ -1,31 +1,40 @@
-//! The Baum-Welch algorithm over pHMM graphs (§2.2).
+//! The Baum-Welch algorithm over pHMM graphs (§2.2), behind one
+//! pluggable execution framework.
 //!
-//! Two engines with identical semantics:
+//! All compute paths implement the [`ExpectationEngine`] trait
+//! (prepare frozen coefficients → E-step accumulate → maximize →
+//! score/posterior) and are selected by [`EngineKind`]:
 //!
-//! * [`sparse`] — CSR-based engine with per-timestep *state filtering*
-//!   (sort-based, the software baseline; or histogram-based, ApHMM's
-//!   hardware mechanism in software form).  This is the faithful
-//!   reimplementation of what Apollo/HMMER do on CPU and the workload
-//!   the accelerator model is driven by.
-//! * [`banded`] — dense banded engine mirroring the L2 JAX model
-//!   bit-for-bit (same scaled recurrences, same raw update sums); the
-//!   PJRT runtime slots in as a drop-in replacement for it.
+//! * [`SparseEngine`] — CSR-based engine with per-timestep *state
+//!   filtering* (sort-based, the software baseline; or histogram-based,
+//!   ApHMM's hardware mechanism in software form), built on the
+//!   memoized per-symbol fused-coefficient tables of [`kernels`] (paper
+//!   §4.2–4.3).  This is the faithful reimplementation of what
+//!   Apollo/HMMER do on CPU and the workload the accelerator model is
+//!   driven by.
+//! * [`BandedEngine`] — dense banded engine mirroring the L2 JAX model
+//!   (same scaled recurrences, same raw update sums), now with its own
+//!   per-symbol fused-coefficient tables ([`BandedCoeffs`]); the PJRT
+//!   runtime slots in as a drop-in replacement for its pre-refactor
+//!   scan.
+//! * [`ReferenceEngine`] — the pre-memoization kernels of
+//!   [`reference`], kept as the parity oracle and the speedup baseline.
+//! * `coordinator::XlaEngine` — expectation passes shipped to the
+//!   shared PJRT device thread (the accelerator's role; stubs unless
+//!   built with the `pjrt` feature).
 //!
 //! Shared numerics: per-timestep scaling (DESIGN.md §Numerics); raw
 //! expectation sums accumulated across observation sequences and divided
 //! once per EM iteration ([`BwAccumulators`]).  [`logspace`] provides an
 //! independent log-space oracle used by the test suite.
 //!
-//! The sparse hot path is built on the memoized per-symbol
-//! fused-coefficient tables of [`kernels`] (paper §4.2–4.3): transition ×
-//! emission products are computed once per parameter freeze, the forward
-//! inner loop is a pure per-symbol CSR SpMV, and the fused backward + ξ
-//! update performs a single table gather per live edge.  [`reference`]
-//! preserves the pre-memoization kernels for parity tests and speedup
-//! measurement, and the training loop fans the batch E-step out across
-//! worker threads with a deterministic block reduction.
+//! The training loop ([`train`] / [`train_with_engine`]) is generic
+//! over the engine and fans the batch E-step out across a shared
+//! [`crate::pool::WorkerPool`] with a deterministic block reduction —
+//! bit-identical results for any worker count.
 
 pub mod banded;
+mod engine;
 mod filter;
 mod kernels;
 mod logspace;
@@ -34,7 +43,11 @@ mod sparse;
 mod train;
 mod update;
 
-pub use banded::{BandedBwSums, BandedEngine};
+pub use banded::{BandedBwSums, BandedCoeffs, BandedEngine};
+pub use engine::{
+    BandedAcc, BandedPrepared, EngineKind, ExpectationEngine, PosteriorDecode, ReadStats,
+    ReferenceEngine, SparseEngine, SparsePrepared,
+};
 pub use filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
 pub use kernels::{ForwardScratch, FusedCoeffs};
 pub use logspace::{log_backward, log_forward, log_likelihood};
@@ -42,7 +55,7 @@ pub use sparse::{
     forward_sparse, forward_sparse_with, score_sparse, score_sparse_with, ForwardOptions,
     ForwardResult, ScoreResult, SparseRow,
 };
-pub use train::{train, TrainConfig, TrainResult};
+pub use train::{train, train_in, train_with_engine, TrainConfig, TrainResult};
 pub use update::BwAccumulators;
 
 /// Numerical floor guarding divisions.

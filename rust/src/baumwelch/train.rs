@@ -1,27 +1,36 @@
 //! The EM training loop (expectation over many reads + one maximization
-//! per iteration), with step-level timing instrumentation that feeds
-//! Fig. 2 (execution-time breakdown) and the accelerator model.
+//! per iteration), generic over the [`ExpectationEngine`] backend, with
+//! step-level timing instrumentation that feeds Fig. 2 (execution-time
+//! breakdown) and the accelerator model.
 //!
 //! The E-step is a **parallel batch reduction**: reads are cut into
-//! fixed-size blocks, worker threads (`TrainConfig::n_workers`) pull
-//! blocks from a shared counter, each block accumulates into its own
-//! [`BwAccumulators`] (with a per-worker [`ForwardScratch`] and the
-//! iteration's shared [`FusedCoeffs`] tables), and block accumulators
-//! are merged **in block order**.  Because the block structure and the
-//! merge order are independent of the worker count, results are
-//! bit-identical for any `n_workers` — `n_workers = 1` is literally the
-//! same computation on one thread.
+//! fixed-size blocks, participants drawn from a shared
+//! [`WorkerPool`] pull blocks from a shared counter, each block
+//! accumulates into its own engine accumulator (with a per-worker
+//! scratch and the iteration's shared frozen coefficient tables), and
+//! block accumulators are merged **in block order**.  Because the block
+//! structure and the merge order are independent of both the requested
+//! worker count and the number of pool helpers that actually join,
+//! results are bit-identical for any `n_workers` and any pool —
+//! `n_workers = 1` is literally the same computation on one thread.
+//!
+//! Backend selection: [`TrainConfig::engine`] names an [`EngineKind`];
+//! [`train`] / [`train_in`] dispatch to the matching engine, and
+//! [`train_with_engine`] accepts any [`ExpectationEngine`] instance
+//! directly (the coordinator uses this for the device-backed XLA
+//! engine).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::Mutex;
 use std::time::Instant;
 
+use super::banded::BandedEngine;
+use super::engine::{EngineKind, ExpectationEngine, ReadStats, ReferenceEngine, SparseEngine};
 use super::filter::{FilterConfig, FilterStats};
-use super::kernels::{ForwardScratch, FusedCoeffs};
-use super::sparse::{forward_sparse_with, ForwardOptions};
-use super::update::BwAccumulators;
-use crate::error::Result;
+use super::sparse::ForwardOptions;
+use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
+use crate::pool::WorkerPool;
 use crate::seq::Sequence;
 
 /// Reads per E-step block.  The unit of the deterministic reduction:
@@ -36,16 +45,27 @@ pub struct TrainConfig {
     /// Stop when the mean per-read log-likelihood improves less than
     /// this between iterations.
     pub tol: f64,
-    /// State filter used during the forward pass.
+    /// State filter used during the forward pass (sparse engines; the
+    /// dense engines ignore it).
     pub filter: FilterConfig,
     /// E-step worker threads (1 = single-threaded).  Any value yields
     /// bit-identical results; see the module docs.
     pub n_workers: usize,
+    /// Compute backend.  [`EngineKind::Xla`] needs a device session and
+    /// is only reachable through the coordinator or
+    /// [`train_with_engine`]; the other kinds work everywhere.
+    pub engine: EngineKind,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { max_iters: 3, tol: 1e-3, filter: FilterConfig::None, n_workers: 1 }
+        TrainConfig {
+            max_iters: 3,
+            tol: 1e-3,
+            filter: FilterConfig::None,
+            n_workers: 1,
+            engine: EngineKind::Sparse,
+        }
     }
 }
 
@@ -80,33 +100,27 @@ pub struct TrainResult {
 
 /// Per-block E-step output: one accumulator plus its instrumentation,
 /// merged into the iteration totals in block order.
-struct BlockOut {
-    acc: BwAccumulators,
-    forward_ns: u128,
-    backward_update_ns: u128,
-    filter_stats: FilterStats,
-    states_processed: u64,
-    edges_processed: u64,
-    timesteps: u64,
+struct BlockOut<A> {
+    acc: A,
+    stats: ReadStats,
     reads_skipped: u64,
 }
 
+/// One block's result slot in the parallel E-step.
+type BlockSlot<A> = Mutex<Option<Result<BlockOut<A>>>>;
+
 /// Run one block of reads through forward + fused backward/update.
-fn process_block(
+fn process_block<E: ExpectationEngine>(
+    engine: &E,
     phmm: &Phmm,
-    coeffs: &FusedCoeffs,
+    prep: &E::Prepared,
     reads: &[Sequence],
     opts: &ForwardOptions,
-    scratch: &mut ForwardScratch,
-) -> Result<BlockOut> {
+    scratch: &mut E::Scratch,
+) -> Result<BlockOut<E::Acc>> {
     let mut out = BlockOut {
-        acc: BwAccumulators::new(phmm),
-        forward_ns: 0,
-        backward_update_ns: 0,
-        filter_stats: FilterStats::default(),
-        states_processed: 0,
-        edges_processed: 0,
-        timesteps: 0,
+        acc: engine.make_acc(phmm),
+        stats: ReadStats::default(),
         reads_skipped: 0,
     };
     for read in reads {
@@ -114,92 +128,113 @@ fn process_block(
             out.reads_skipped += 1;
             continue;
         }
-        let t0 = Instant::now();
-        let fwd = match forward_sparse_with(phmm, coeffs, read, opts, scratch) {
-            Ok(f) => f,
-            Err(_) => {
-                // Dead read under the current parameters (e.g. a
-                // mis-mapped read whose path probability underflows the
-                // filter) — counted, then skipped, matching Apollo.
-                out.reads_skipped += 1;
-                continue;
-            }
-        };
-        out.forward_ns += t0.elapsed().as_nanos();
-        out.filter_stats.merge(&fwd.filter_stats);
-        out.states_processed += fwd.states_processed;
-        out.edges_processed += fwd.edges_processed;
-        out.timesteps += fwd.rows.len() as u64;
-
-        let t1 = Instant::now();
-        out.acc.accumulate_with(phmm, coeffs, read, &fwd, scratch)?;
-        out.backward_update_ns += t1.elapsed().as_nanos();
-        scratch.recycle(fwd);
+        match engine.accumulate_read(phmm, prep, read, opts, scratch, &mut out.acc) {
+            Ok(stats) => out.stats.merge(&stats),
+            // Dead read under the current parameters (e.g. a mis-mapped
+            // read whose path probability underflows the filter) —
+            // counted, then skipped, matching Apollo.  Everything else
+            // (shape mismatches, device failures) is fatal.
+            Err(ApHmmError::Numerical(_)) => out.reads_skipped += 1,
+            Err(e) => return Err(e),
+        }
     }
     Ok(out)
 }
 
-/// One E-step over all reads: block-parallel, deterministically reduced.
-fn run_estep(
+/// One E-step over all reads: block-parallel on the shared pool,
+/// deterministically reduced.
+fn run_estep<E: ExpectationEngine>(
+    engine: &E,
     phmm: &Phmm,
-    coeffs: &FusedCoeffs,
+    prep: &E::Prepared,
     reads: &[Sequence],
     opts: &ForwardOptions,
     n_workers: usize,
-) -> Result<Vec<BlockOut>> {
+    pool: &WorkerPool,
+) -> Result<Vec<BlockOut<E::Acc>>> {
     let blocks: Vec<&[Sequence]> = reads.chunks(ESTEP_BLOCK).collect();
     if blocks.is_empty() {
         return Ok(Vec::new());
     }
     let workers = n_workers.max(1).min(blocks.len());
     if workers == 1 {
-        let mut scratch = ForwardScratch::new(phmm);
+        let mut scratch = engine.make_scratch(phmm);
         return blocks
             .iter()
-            .map(|&block| process_block(phmm, coeffs, block, opts, &mut scratch))
+            .map(|&block| process_block(engine, phmm, prep, block, opts, &mut scratch))
             .collect();
     }
 
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, Result<BlockOut>)>();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let next = &next;
-            let blocks = &blocks;
-            scope.spawn(move || {
-                let mut scratch = ForwardScratch::new(phmm);
-                loop {
-                    let bi = next.fetch_add(1, Ordering::Relaxed);
-                    if bi >= blocks.len() {
-                        break;
-                    }
-                    let out = process_block(phmm, coeffs, blocks[bi], opts, &mut scratch);
-                    if tx.send((bi, out)).is_err() {
-                        break;
-                    }
-                }
-            });
+    let mut slots: Vec<BlockSlot<E::Acc>> = Vec::with_capacity(blocks.len());
+    slots.resize_with(blocks.len(), || Mutex::new(None));
+    pool.scope(workers, |_slot| {
+        let mut scratch = engine.make_scratch(phmm);
+        loop {
+            let bi = next.fetch_add(1, Ordering::Relaxed);
+            if bi >= blocks.len() {
+                break;
+            }
+            let out = process_block(engine, phmm, prep, blocks[bi], opts, &mut scratch);
+            *slots[bi].lock().unwrap() = Some(out);
         }
     });
-    drop(tx);
-    let mut slots: Vec<Option<Result<BlockOut>>> = Vec::with_capacity(blocks.len());
-    slots.resize_with(blocks.len(), || None);
-    for (bi, out) in rx {
-        slots[bi] = Some(out);
-    }
-    // Propagate the first error in *block* order (determinism).
-    slots.into_iter().map(|s| s.expect("E-step worker dropped a block")).collect()
+    // Collect (and propagate the first error) in *block* order
+    // (determinism).
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("E-step participant dropped a block"))
+        .collect()
 }
 
-/// Train `phmm` on `reads` with batch EM.
+/// Train `phmm` on `reads` with batch EM, using the engine named by
+/// `cfg.engine` and the process-wide shared [`WorkerPool`].
 ///
 /// Reads that become numerically dead under the current parameters (e.g.
 /// mis-mapped reads whose path probability underflows the filter) are
 /// skipped and counted in [`TrainResult::reads_skipped`], matching
 /// Apollo's behaviour.  With `cfg.n_workers > 1` the E-step fans out
-/// across scoped threads; results are bit-identical to `n_workers = 1`.
+/// across pool participants; results are bit-identical to
+/// `n_workers = 1`.
 pub fn train(phmm: &mut Phmm, reads: &[Sequence], cfg: &TrainConfig) -> Result<TrainResult> {
+    train_in(phmm, reads, cfg, WorkerPool::global())
+}
+
+/// [`train`] drawing E-step parallelism from a caller-owned pool (the
+/// coordinator passes its session pool so chunk-level and E-step
+/// parallelism share capacity).
+pub fn train_in(
+    phmm: &mut Phmm,
+    reads: &[Sequence],
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+) -> Result<TrainResult> {
+    match cfg.engine {
+        EngineKind::Sparse => train_with_engine(&SparseEngine, phmm, reads, cfg, pool),
+        EngineKind::Banded => train_with_engine(&BandedEngine, phmm, reads, cfg, pool),
+        EngineKind::Reference => train_with_engine(&ReferenceEngine, phmm, reads, cfg, pool),
+        EngineKind::Xla => Err(ApHmmError::Config(
+            "EngineKind::Xla needs a device session: use the coordinator with artifacts_dir, \
+             or call train_with_engine with a coordinator::XlaEngine"
+                .into(),
+        )),
+    }
+}
+
+/// The generic EM loop over any [`ExpectationEngine`] instance.
+///
+/// Per iteration: freeze the parameters into the engine's coefficient
+/// tables ([`ExpectationEngine::prepare`], charged to the forward
+/// phase it accelerates, paper §4.2–4.3), fan the batch E-step out over
+/// `pool`, merge block accumulators in block order, and run the
+/// engine's maximization.
+pub fn train_with_engine<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &mut Phmm,
+    reads: &[Sequence],
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+) -> Result<TrainResult> {
     let opts = ForwardOptions { filter: cfg.filter };
     let mut result = TrainResult {
         loglik_history: Vec::new(),
@@ -213,36 +248,36 @@ pub fn train(phmm: &mut Phmm, reads: &[Sequence], cfg: &TrainConfig) -> Result<T
         timesteps: 0,
         reads_skipped: 0,
     };
-    let mut acc = BwAccumulators::new(phmm);
     let mut prev_mean = f64::NEG_INFINITY;
     for _iter in 0..cfg.max_iters {
-        acc.reset();
         // Parameters are frozen for the whole E-step: memoize the fused
         // per-symbol coefficient tables once per iteration (§4.2–4.3).
         // The build is charged to the forward phase it accelerates.
         let t0 = Instant::now();
-        let coeffs = FusedCoeffs::new(phmm);
+        let prep = engine.prepare(phmm)?;
         result.forward_ns += t0.elapsed().as_nanos();
-        let outs = run_estep(phmm, &coeffs, reads, &opts, cfg.n_workers)?;
+        let outs = run_estep(engine, phmm, &prep, reads, &opts, cfg.n_workers, pool)?;
+        let mut acc = engine.make_acc(phmm);
         for out in &outs {
-            acc.merge(&out.acc);
-            result.forward_ns += out.forward_ns;
-            result.backward_update_ns += out.backward_update_ns;
-            result.filter_stats.merge(&out.filter_stats);
-            result.states_processed += out.states_processed;
-            result.edges_processed += out.edges_processed;
-            result.timesteps += out.timesteps;
+            engine.merge(&mut acc, &out.acc);
+            result.forward_ns += out.stats.forward_ns;
+            result.backward_update_ns += out.stats.backward_update_ns;
+            result.filter_stats.merge(&out.stats.filter_stats);
+            result.states_processed += out.stats.states_processed;
+            result.edges_processed += out.stats.edges_processed;
+            result.timesteps += out.stats.timesteps;
             result.reads_skipped += out.reads_skipped;
         }
-        if acc.n_observations == 0 {
+        let (total_loglik, n_observations) = engine.observations(&acc);
+        if n_observations == 0 {
             break;
         }
-        let mean_ll = acc.total_loglik / acc.n_observations as f64;
+        let mean_ll = total_loglik / n_observations as f64;
         result.loglik_history.push(mean_ll);
         result.iters += 1;
 
         let t2 = Instant::now();
-        acc.apply(phmm)?;
+        engine.maximize(phmm, &acc)?;
         result.maximize_ns += t2.elapsed().as_nanos();
 
         if (mean_ll - prev_mean).abs() < cfg.tol {
@@ -315,7 +350,8 @@ mod tests {
         for filter in [FilterConfig::None, FilterConfig::histogram_default()] {
             let mut g1 = Phmm::error_correction(&reference, &Default::default()).unwrap();
             let mut g4 = g1.clone();
-            let base = TrainConfig { max_iters: 3, tol: 0.0, filter, n_workers: 1 };
+            let base =
+                TrainConfig { max_iters: 3, tol: 0.0, filter, ..Default::default() };
             let res1 = train(&mut g1, &reads, &base).unwrap();
             let res4 =
                 train(&mut g4, &reads, &TrainConfig { n_workers: 4, ..base }).unwrap();
@@ -326,6 +362,37 @@ mod tests {
             assert_eq!(res1.edges_processed, res4.edges_processed);
             assert_eq!(res1.reads_skipped, res4.reads_skipped);
         }
+    }
+
+    #[test]
+    fn engine_kinds_train_through_the_same_loop() {
+        // Every in-process engine kind trains monotonically through the
+        // generic loop and leaves a valid graph behind.
+        let mut rng = XorShift::new(61);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 60, 4));
+        let reads = noisy_reads(&mut rng, &reference, 5);
+        for engine in [EngineKind::Sparse, EngineKind::Banded, EngineKind::Reference] {
+            let mut g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+            let cfg = TrainConfig { max_iters: 2, tol: 0.0, engine, ..Default::default() };
+            let res = train(&mut g, &reads, &cfg).unwrap();
+            assert_eq!(res.iters, 2, "engine {engine:?}");
+            assert!(res.forward_ns > 0, "engine {engine:?}");
+            assert!(res.backward_update_ns > 0, "engine {engine:?}");
+            assert!(res.states_processed > 0, "engine {engine:?}");
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn xla_kind_without_device_is_a_config_error() {
+        let mut rng = XorShift::new(67);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 30, 4));
+        let mut g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let reads = noisy_reads(&mut rng, &reference, 2);
+        let cfg = TrainConfig { engine: EngineKind::Xla, ..Default::default() };
+        assert!(matches!(train(&mut g, &reads, &cfg), Err(ApHmmError::Config(_))));
     }
 
     #[test]
@@ -356,7 +423,7 @@ mod tests {
         let exact = train(
             &mut g_exact,
             &reads,
-            &TrainConfig { max_iters: 2, tol: 0.0, filter: FilterConfig::None, n_workers: 1 },
+            &TrainConfig { max_iters: 2, tol: 0.0, ..Default::default() },
         )
         .unwrap();
         let filt = train(
@@ -366,7 +433,7 @@ mod tests {
                 max_iters: 2,
                 tol: 0.0,
                 filter: FilterConfig::histogram_default(),
-                n_workers: 1,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -1,64 +1,66 @@
 //! The L3 coordinator: multi-worker chunk-training orchestration.
 //!
-//! This is the deployment shape of the system: a leader thread feeds
-//! chunk-training jobs through a bounded queue (backpressure), worker
-//! threads run the Baum-Welch training + Viterbi decode per chunk, and
-//! an optional shared **XLA device thread** plays the accelerator's
-//! role — workers ship banded expectation requests to it over a channel
-//! exactly the way ApHMM cores receive work from the host (Supplemental
-//! S3's execution flow).  `tokio` is not in the offline registry, so the
-//! runtime is std threads + `mpsc::sync_channel`, which models the same
-//! structure.
+//! This is the deployment shape of the system: chunk-training jobs are
+//! drained by worker participants of one session-owned
+//! [`WorkerPool`], each job runs Baum-Welch training (through the
+//! [`ExpectationEngine`] named by `cfg.train.engine`) plus a Viterbi
+//! decode, and an optional shared **XLA device thread** plays the
+//! accelerator's role — workers ship banded expectation requests to it
+//! over a channel exactly the way ApHMM cores receive work from the
+//! host (Supplemental S3's execution flow).  `tokio` is not in the
+//! offline registry, so the runtime is std threads + channels, which
+//! models the same structure.
+//!
+//! Chunk-level and E-step parallelism share the session pool: a chunk
+//! worker that fans its E-step out (`cfg.train.n_workers > 1`) enlists
+//! idle pool helpers and otherwise runs on its own thread, so the two
+//! levels compose without oversubscription or deadlock (the ROADMAP's
+//! "chunk-level + E-step thread-pool sharing" perf item).
 
 mod metrics;
 mod xla_device;
 
 pub use metrics::{Metrics, MetricsSummary};
-pub use xla_device::{XlaDevice, XlaHandle};
+pub use xla_device::{XlaDevice, XlaEngine, XlaHandle};
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::baumwelch::{train, TrainConfig};
+use crate::baumwelch::{train_in, train_with_engine, EngineKind, TrainConfig};
 use crate::error::{ApHmmError, Result};
 use crate::phmm::{EcDesignParams, Phmm};
+use crate::pool::WorkerPool;
 use crate::seq::Sequence;
 use crate::viterbi::consensus;
 
-/// Compute backend for chunk training.
-#[derive(Clone, Debug)]
-pub enum BackendKind {
-    /// Native sparse Rust engine on each worker.
-    Native,
-    /// Expectation passes shipped to the shared XLA device thread
-    /// (AOT artifacts via PJRT); reads must fit the artifact's T.
-    Xla {
-        /// Directory holding `manifest.txt` + `*.hlo.txt`.
-        artifacts_dir: std::path::PathBuf,
-    },
-}
-
 /// Coordinator configuration.
 ///
-/// Two levels of parallelism compose: `n_workers` chunk-training
-/// threads, each of which may fan its per-chunk E-step out across
-/// `train.n_workers` threads (total peak threads ≈ the product).  For
-/// many small chunks, keep `train.n_workers = 1` and scale `n_workers`;
-/// reserve the E-step workers for few/large chunks.
+/// Two levels of parallelism compose on one pool: `n_workers`
+/// chunk-training participants, each of which may fan its per-chunk
+/// E-step out across `train.n_workers` participants.  For many small
+/// chunks, keep `train.n_workers = 1` and scale `n_workers`; reserve
+/// the E-step workers for few/large chunks.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Worker threads (the paper's 4-core sweet spot).
     pub n_workers: usize,
-    /// Bounded queue depth (backpressure).
+    /// Bounded queue depth.  Retained for API compatibility with the
+    /// leader/queue deployment shape; the in-memory job vector is
+    /// drained through a shared cursor, so depth only matters once jobs
+    /// stream in from I/O.
     pub queue_depth: usize,
-    /// Training parameters.
+    /// Training parameters; `train.engine` selects the compute backend
+    /// ([`EngineKind::Xla`] routes through the shared device thread and
+    /// requires [`CoordinatorConfig::artifacts_dir`]).
     pub train: TrainConfig,
     /// EC design parameters.
     pub design: EcDesignParams,
-    /// Compute backend.
-    pub backend: BackendKind,
-    /// EM iterations on the XLA path.
+    /// Directory holding `manifest.txt` + `*.hlo.txt` for the XLA
+    /// engine; ignored by the in-process engines.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// EM iterations on the XLA path (the device path runs a fixed
+    /// iteration budget instead of `train.max_iters`/`tol`).
     pub xla_iters: usize,
 }
 
@@ -69,7 +71,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 16,
             train: TrainConfig::default(),
             design: EcDesignParams::default(),
-            backend: BackendKind::Native,
+            artifacts_dir: None,
             xla_iters: 2,
         }
     }
@@ -95,125 +97,142 @@ pub struct ChunkOutcome {
     pub consensus: Sequence,
     /// Mean per-read log-likelihood after training.
     pub mean_loglik: f64,
-    /// Wall latency of the job (ns).
+    /// Wall latency of the job (ns), measured on the executing worker
+    /// from graph construction through consensus decode.
     pub latency_ns: u64,
     /// Worker that executed the job.
     pub worker: usize,
 }
 
-/// Run all jobs across the configured workers; outcomes are returned
-/// sorted by job id.  Failed jobs are counted in the metrics and
-/// omitted from the output.
+/// Run all jobs across the configured workers on a pool owned by this
+/// session; outcomes are returned sorted by job id.  Failed jobs are
+/// counted in the metrics and omitted from the output.
 pub fn run_jobs(
     jobs: Vec<ChunkJob>,
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
 ) -> Result<Vec<ChunkOutcome>> {
-    let n_workers = cfg.n_workers.max(1);
-    let xla = match &cfg.backend {
-        BackendKind::Native => None,
-        BackendKind::Xla { artifacts_dir } => Some(XlaDevice::spawn(artifacts_dir.clone())?),
-    };
+    // One pool per coordinator session, sized so every chunk worker can
+    // run plus each chunk's E-step fan-out can find helpers.
+    let chunk_workers = cfg.n_workers.max(1);
+    let estep_workers = cfg.train.n_workers.max(1);
+    let helpers = (chunk_workers - 1) + chunk_workers * (estep_workers - 1);
+    let pool = WorkerPool::new(helpers);
+    run_jobs_in(jobs, cfg, metrics, &pool)
+}
 
-    let (job_tx, job_rx) = mpsc::sync_channel::<ChunkJob>(cfg.queue_depth.max(1));
-    let job_rx = Arc::new(std::sync::Mutex::new(job_rx));
-    let (out_tx, out_rx) = mpsc::channel::<ChunkOutcome>();
+/// [`run_jobs`] on a caller-owned [`WorkerPool`] (apps embedding the
+/// coordinator share one pool across sessions).
+pub fn run_jobs_in(
+    jobs: Vec<ChunkJob>,
+    cfg: &CoordinatorConfig,
+    metrics: &Metrics,
+    pool: &WorkerPool,
+) -> Result<Vec<ChunkOutcome>> {
+    // `_xla_device` owns the device thread (joined on drop at the end
+    // of this call); only the Sync `XlaEngine` wrapper is captured by
+    // the worker closure.
+    let (_xla_device, xla_engine): (Option<XlaDevice>, Option<XlaEngine>) =
+        match cfg.train.engine {
+            EngineKind::Xla => {
+                let dir = cfg.artifacts_dir.clone().ok_or_else(|| {
+                    ApHmmError::Config(
+                        "EngineKind::Xla requires CoordinatorConfig::artifacts_dir".into(),
+                    )
+                })?;
+                let device = XlaDevice::spawn(dir)?;
+                let engine = XlaEngine::new(device.handle());
+                (Some(device), Some(engine))
+            }
+            _ => (None, None),
+        };
 
-    let worker_err: Arc<std::sync::Mutex<Option<ApHmmError>>> =
-        Arc::new(std::sync::Mutex::new(None));
+    let next = AtomicUsize::new(0);
+    let outcomes: Mutex<Vec<ChunkOutcome>> = Mutex::new(Vec::with_capacity(jobs.len()));
+    let fatal: Mutex<Option<ApHmmError>> = Mutex::new(None);
 
-    std::thread::scope(|scope| -> Result<()> {
-        for worker_id in 0..n_workers {
-            let job_rx = Arc::clone(&job_rx);
-            let out_tx = out_tx.clone();
-            let cfg = cfg.clone();
-            let xla_handle = xla.as_ref().map(|d| d.handle());
-            let worker_err = Arc::clone(&worker_err);
-            scope.spawn(move || {
-                loop {
-                    let job = {
-                        let rx = job_rx.lock().unwrap();
-                        rx.recv()
-                    };
-                    let Ok(job) = job else { break };
-                    let t0 = Instant::now();
-                    let result = run_one(&job, &cfg, xla_handle.as_ref(), worker_id);
-                    match result {
-                        Ok((outcome, timesteps, states, reads_skipped)) => {
-                            metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
-                            if reads_skipped > 0 {
-                                metrics.record_skipped_reads(reads_skipped);
-                            }
-                            let _ = out_tx.send(outcome);
-                        }
-                        Err(e) => {
-                            metrics.record_failure();
-                            if matches!(e, ApHmmError::Runtime(_)) {
-                                // Runtime (device) errors are fatal;
-                                // numeric chunk failures are skipped.
-                                *worker_err.lock().unwrap() = Some(e);
-                                break;
-                            }
-                        }
-                    }
+    pool.scope(cfg.n_workers.max(1), |worker_id| loop {
+        if fatal.lock().unwrap().is_some() {
+            break;
+        }
+        let ji = next.fetch_add(1, Ordering::Relaxed);
+        if ji >= jobs.len() {
+            break;
+        }
+        let job = &jobs[ji];
+        let t0 = Instant::now();
+        let result = run_one(job, cfg, xla_engine.as_ref(), worker_id, pool);
+        match result {
+            Ok((outcome, timesteps, states, reads_skipped)) => {
+                metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
+                if reads_skipped > 0 {
+                    metrics.record_skipped_reads(reads_skipped);
                 }
-            });
+                outcomes.lock().unwrap().push(outcome);
+            }
+            Err(e) => {
+                metrics.record_failure();
+                if matches!(e, ApHmmError::Runtime(_)) {
+                    // Runtime (device) errors are fatal; numeric chunk
+                    // failures are skipped.
+                    *fatal.lock().unwrap() = Some(e);
+                    break;
+                }
+            }
         }
-        drop(out_tx);
-        // Leader: feed jobs (blocks when the queue is full: backpressure).
-        for job in jobs {
-            job_tx.send(job).map_err(|_| {
-                ApHmmError::Coordinator("all workers exited while jobs remain".into())
-            })?;
-        }
-        drop(job_tx);
-        Ok(())
-    })?;
+    });
 
-    if let Some(e) = worker_err.lock().unwrap().take() {
+    if let Some(e) = fatal.into_inner().unwrap() {
         return Err(e);
     }
-    let mut outcomes: Vec<ChunkOutcome> = out_rx.try_iter().collect();
+    let mut outcomes = outcomes.into_inner().unwrap();
     outcomes.sort_by_key(|o| o.id);
     Ok(outcomes)
 }
 
 /// Execute one job on this worker.  Returns the outcome plus the
 /// timestep/state workload counters and the number of skipped reads.
+///
+/// A chunk whose reads are all skipped trains zero iterations and is
+/// emitted with `mean_loglik = -inf` and the untrained consensus —
+/// uniform across every engine (the XLA path used to hard-error on
+/// this; it now matches the native engines' semantics, and consumers
+/// detect the case via the infinite `mean_loglik` plus the skipped-read
+/// metrics).
 fn run_one(
     job: &ChunkJob,
     cfg: &CoordinatorConfig,
-    xla: Option<&XlaHandle>,
+    xla: Option<&XlaEngine>,
     worker: usize,
+    pool: &WorkerPool,
 ) -> Result<(ChunkOutcome, u64, u64, u64)> {
+    let t0 = Instant::now();
     let mut graph = Phmm::error_correction(&job.reference, &cfg.design)?;
-    let (mean_loglik, timesteps, states, reads_skipped) = match xla {
-        None => {
-            let res = train(&mut graph, &job.reads, &cfg.train)?;
-            (
-                res.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY),
-                res.timesteps,
-                res.states_processed,
-                res.reads_skipped,
-            )
+    let res = match cfg.train.engine {
+        EngineKind::Xla => {
+            let engine = xla.ok_or_else(|| {
+                ApHmmError::Coordinator("XLA engine requested but no device session".into())
+            })?;
+            // The device path runs a fixed iteration budget (matching
+            // the accelerator's host schedule) instead of max_iters/tol.
+            let xcfg = TrainConfig { max_iters: cfg.xla_iters.max(1), tol: 0.0, ..cfg.train };
+            train_with_engine(engine, &mut graph, &job.reads, &xcfg, pool)?
         }
-        Some(handle) => {
-            let stats = xla_device::train_via_xla(handle, &mut graph, &job.reads, cfg.xla_iters)?;
-            (stats.mean_loglik, stats.timesteps, stats.states, stats.reads_skipped)
-        }
+        _ => train_in(&mut graph, &job.reads, &cfg.train, pool)?,
     };
+    let mean_loglik = res.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY);
     let decoded = consensus(&graph)?;
     Ok((
         ChunkOutcome {
             id: job.id,
             consensus: decoded.consensus,
             mean_loglik,
-            latency_ns: 0,
+            latency_ns: t0.elapsed().as_nanos() as u64,
             worker,
         },
-        timesteps,
-        states,
-        reads_skipped,
+        res.timesteps,
+        res.states_processed,
+        res.reads_skipped,
     ))
 }
 
@@ -248,6 +267,7 @@ mod tests {
         for (i, o) in outcomes.iter().enumerate() {
             assert_eq!(o.id, i);
             assert!(!o.consensus.is_empty());
+            assert!(o.latency_ns > 0, "job {i} has no measured latency");
         }
         let s = metrics.summary(1.0);
         assert_eq!(s.jobs_done, 12);
@@ -324,6 +344,51 @@ mod tests {
         for (a, b) in sequential.iter().zip(threaded.iter()) {
             assert_eq!(a.consensus.data, b.consensus.data, "job {}", a.id);
             assert_eq!(a.mean_loglik.to_bits(), b.mean_loglik.to_bits(), "job {}", a.id);
+        }
+    }
+
+    #[test]
+    fn banded_engine_runs_through_the_coordinator() {
+        // Backend selection is pure configuration: the banded engine
+        // trains every chunk through the same pool and metrics.
+        let mut rng = XorShift::new(56);
+        let jobs = make_jobs(&mut rng, 4, 50);
+        let metrics = Metrics::default();
+        let mut cfg = CoordinatorConfig { n_workers: 2, ..Default::default() };
+        cfg.train.engine = EngineKind::Banded;
+        let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(metrics.summary(1.0).jobs_done, 4);
+        for o in &outcomes {
+            assert!(!o.consensus.is_empty());
+            assert!(o.mean_loglik.is_finite());
+            assert!(o.latency_ns > 0);
+        }
+    }
+
+    #[test]
+    fn xla_engine_without_artifacts_dir_is_a_config_error() {
+        let mut rng = XorShift::new(57);
+        let jobs = make_jobs(&mut rng, 1, 40);
+        let metrics = Metrics::default();
+        let mut cfg = CoordinatorConfig::default();
+        cfg.train.engine = EngineKind::Xla;
+        assert!(matches!(
+            run_jobs(jobs, &cfg, &metrics),
+            Err(ApHmmError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn shared_session_pool_is_reusable() {
+        let mut rng = XorShift::new(58);
+        let pool = WorkerPool::new(3);
+        let cfg = CoordinatorConfig { n_workers: 2, ..Default::default() };
+        for round in 0..3 {
+            let jobs = make_jobs(&mut rng, 5, 40);
+            let metrics = Metrics::default();
+            let outcomes = run_jobs_in(jobs, &cfg, &metrics, &pool).unwrap();
+            assert_eq!(outcomes.len(), 5, "round {round}");
         }
     }
 

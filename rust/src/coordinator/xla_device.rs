@@ -1,16 +1,25 @@
-//! Shared XLA "device" thread.
+//! Shared XLA "device" thread and the [`XlaEngine`] backend built on it.
 //!
 //! PJRT client handles are not `Send`-safe across arbitrary threads, and
 //! an accelerator is a shared resource anyway — so one device thread
 //! owns the [`ArtifactStore`] and serves banded expectation requests
 //! over a channel, exactly the host↔accelerator split of the paper's
 //! Supplemental S3 execution flow.  Workers hold a cloneable
-//! [`XlaHandle`].
+//! [`XlaHandle`]; [`XlaEngine`] wraps one behind the
+//! [`ExpectationEngine`] trait, so the generic training loop drives the
+//! device exactly the way it drives the in-process engines.  Real PJRT
+//! execution is gated behind the `pjrt` cargo feature (the `xla`
+//! feature compiles the same surface against stubs).
 
 use std::sync::mpsc;
+use std::sync::Mutex;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::baumwelch::BandedBwSums;
+use crate::baumwelch::{
+    BandedAcc, BandedBwSums, ExpectationEngine, FilterStats, ForwardOptions, ReadStats,
+    ScoreResult,
+};
 use crate::error::{ApHmmError, Result};
 use crate::phmm::{BandedPhmm, Phmm};
 use crate::runtime::{ArtifactStore, XlaBandedEngine};
@@ -18,6 +27,7 @@ use crate::seq::Sequence;
 
 enum Request {
     BwSums { banded: BandedPhmm, seq: Sequence, reply: mpsc::Sender<Result<BandedBwSums>> },
+    Score { banded: BandedPhmm, seq: Sequence, reply: mpsc::Sender<Result<f64>> },
     Shutdown,
 }
 
@@ -33,6 +43,18 @@ impl XlaHandle {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Request::BwSums { banded: banded.clone(), seq: seq.clone(), reply: reply_tx })
+            .map_err(|_| ApHmmError::Coordinator("XLA device thread is gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| ApHmmError::Coordinator("XLA device dropped the reply".into()))?
+    }
+
+    /// Forward-only score on the device (the forward artifact; half the
+    /// work and payload of a full expectation pass).
+    pub fn score(&self, banded: &BandedPhmm, seq: &Sequence) -> Result<f64> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Score { banded: banded.clone(), seq: seq.clone(), reply: reply_tx })
             .map_err(|_| ApHmmError::Coordinator("XLA device thread is gone".into()))?;
         reply_rx
             .recv()
@@ -77,6 +99,17 @@ impl XlaDevice {
                         .and_then(|engine| engine.bw_sums(&banded, &seq));
                         let _ = reply.send(result);
                     }
+                    Request::Score { banded, seq, reply } => {
+                        let result = XlaBandedEngine::for_shape(
+                            &store,
+                            banded.n,
+                            banded.w,
+                            banded.sigma,
+                            seq.len(),
+                        )
+                        .and_then(|engine| engine.score(&banded, &seq));
+                        let _ = reply.send(result);
+                    }
                 }
             }
         });
@@ -101,64 +134,111 @@ impl Drop for XlaDevice {
     }
 }
 
-/// Training statistics of the XLA path.
-#[derive(Clone, Copy, Debug)]
-pub struct XlaTrainStats {
-    /// Mean per-read log-likelihood of the final iteration.
-    pub mean_loglik: f64,
-    /// Total timesteps processed.
-    pub timesteps: u64,
-    /// Total state-steps (N × timesteps; the dense engine touches all).
-    pub states: u64,
-    /// Reads skipped (empty or numerically dead), summed over
-    /// iterations — surfaced in the coordinator metrics.
-    pub reads_skipped: u64,
+/// The XLA device as an [`ExpectationEngine`]: every expectation pass
+/// ships the banded encoding plus one read to the shared device thread
+/// and accumulates the returned [`BandedBwSums`], exactly the way
+/// ApHMM cores receive work from the host.  Maximization and the EM
+/// schedule stay on the host in the generic training loop
+/// (`train_with_engine`), so the device path composes with the same
+/// pool, metrics and skip accounting as every other engine.
+pub struct XlaEngine {
+    /// The submit handle, behind a mutex so one engine instance can be
+    /// shared by all E-step workers (`ExpectationEngine: Sync`).  The
+    /// mutex is only touched once per worker: [`XlaEngine::make_scratch`]
+    /// clones a private per-worker sender out of it, and every
+    /// per-read call goes through that scratch handle lock-free.
+    handle: Mutex<XlaHandle>,
 }
 
-/// Batch-EM training through the device: accumulate banded sums across
-/// reads, apply, repeat.  Writes the final parameters back into `graph`.
-pub fn train_via_xla(
-    handle: &XlaHandle,
-    graph: &mut Phmm,
-    reads: &[Sequence],
-    iters: usize,
-) -> Result<XlaTrainStats> {
-    let mut banded = graph.to_banded()?;
-    let mut stats = XlaTrainStats {
-        mean_loglik: f64::NEG_INFINITY,
-        timesteps: 0,
-        states: 0,
-        reads_skipped: 0,
-    };
-    for _ in 0..iters.max(1) {
-        let mut total = BandedBwSums::zeros(banded.n, banded.w, banded.sigma);
-        let mut n_reads = 0u64;
-        for read in reads {
-            if read.is_empty() {
-                stats.reads_skipped += 1;
-                continue;
-            }
-            match handle.bw_sums(&banded, read) {
-                Ok(sums) => {
-                    total.add(&sums);
-                    n_reads += 1;
-                    stats.timesteps += read.len() as u64;
-                    stats.states += (read.len() * banded.n) as u64;
-                }
-                Err(e @ ApHmmError::Runtime(_)) => return Err(e),
-                Err(_) => {
-                    // Numerically dead read — counted, then skipped.
-                    stats.reads_skipped += 1;
-                    continue;
-                }
-            }
-        }
-        if n_reads == 0 {
-            return Err(ApHmmError::Numerical("no read survived XLA training".into()));
-        }
-        stats.mean_loglik = total.loglik as f64 / n_reads as f64;
-        total.apply(&mut banded);
+impl XlaEngine {
+    /// An engine submitting to `handle`'s device thread.
+    pub fn new(handle: XlaHandle) -> XlaEngine {
+        XlaEngine { handle: Mutex::new(handle) }
     }
-    graph.update_from_banded(&banded)?;
-    Ok(stats)
+}
+
+impl ExpectationEngine for XlaEngine {
+    type Prepared = BandedPhmm;
+    /// A private submit handle per E-step worker.
+    type Scratch = XlaHandle;
+    type Acc = BandedAcc;
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn prepare(&self, phmm: &Phmm) -> Result<BandedPhmm> {
+        phmm.to_banded()
+    }
+
+    fn make_scratch(&self, _phmm: &Phmm) -> XlaHandle {
+        self.handle.lock().unwrap().clone()
+    }
+
+    fn make_acc(&self, phmm: &Phmm) -> BandedAcc {
+        BandedAcc::new(phmm.n_states(), phmm.band_width(), phmm.sigma())
+    }
+
+    fn accumulate_read(
+        &self,
+        _phmm: &Phmm,
+        prep: &BandedPhmm,
+        read: &Sequence,
+        _opts: &ForwardOptions,
+        scratch: &mut XlaHandle,
+        acc: &mut BandedAcc,
+    ) -> Result<ReadStats> {
+        let t0 = Instant::now();
+        // Device failures (`ApHmmError::Runtime`) propagate out of the
+        // training loop and are fatal in the coordinator; numerically
+        // dead reads are skipped by the shared skip rule.
+        let sums = scratch.bw_sums(prep, read)?;
+        let elapsed = t0.elapsed().as_nanos();
+        acc.loglik += sums.loglik as f64;
+        acc.sums.add(&sums);
+        acc.n_observations += 1;
+        let t = read.len() as u64;
+        let n = prep.n as u64;
+        Ok(ReadStats {
+            // The device fuses forward+backward in one artifact; charge
+            // the round trip to the forward phase.
+            forward_ns: elapsed,
+            backward_update_ns: 0,
+            filter_stats: FilterStats::default(),
+            states_processed: n * t,
+            edges_processed: n * prep.w as u64 * t.saturating_sub(1),
+            timesteps: t,
+        })
+    }
+
+    fn merge(&self, into: &mut BandedAcc, from: &BandedAcc) {
+        into.merge(from);
+    }
+
+    fn observations(&self, acc: &BandedAcc) -> (f64, u64) {
+        (acc.loglik, acc.n_observations)
+    }
+
+    fn maximize(&self, phmm: &mut Phmm, acc: &BandedAcc) -> Result<()> {
+        acc.maximize_into(phmm)
+    }
+
+    fn score(
+        &self,
+        _phmm: &Phmm,
+        prep: &BandedPhmm,
+        read: &Sequence,
+        _opts: &ForwardOptions,
+        scratch: &mut XlaHandle,
+    ) -> Result<ScoreResult> {
+        let loglik = scratch.score(prep, read)?;
+        let t = read.len() as u64;
+        let n = prep.n as u64;
+        Ok(ScoreResult {
+            loglik,
+            filter_stats: FilterStats::default(),
+            states_processed: n * t,
+            edges_processed: n * prep.w as u64 * t.saturating_sub(1),
+        })
+    }
 }

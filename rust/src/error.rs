@@ -79,7 +79,9 @@ impl From<std::io::Error> for ApHmmError {
     }
 }
 
-#[cfg(feature = "xla")]
+// Gated on `pjrt` (not the stub-compatible `xla` feature): the `xla`
+// crate only exists in vendored `pjrt` builds.
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for ApHmmError {
     fn from(e: xla::Error) -> Self {
         ApHmmError::Runtime(e.to_string())

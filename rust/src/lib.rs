@@ -11,7 +11,11 @@
 //!   tables (the software analogue of the paper's §4.2–4.3 on-chip
 //!   memoization; see `baumwelch/README.md`), a score-only
 //!   constant-memory forward for inference, and a deterministic
-//!   block-parallel batch E-step — Viterbi consensus decoding, the
+//!   block-parallel batch E-step — all reachable behind the pluggable
+//!   [`baumwelch::ExpectationEngine`] trait (sparse / banded /
+//!   reference / XLA backends selected by
+//!   [`baumwelch::EngineKind`], parallelism drawn from one shared
+//!   [`pool::WorkerPool`]) — Viterbi consensus decoding, the
 //!   three end-to-end applications (error correction, protein family
 //!   search, multiple sequence alignment), simulation substrates
 //!   (genomes, long reads, protein families), a minimizer read mapper,
@@ -38,6 +42,7 @@ pub mod error;
 pub mod io;
 pub mod mapper;
 pub mod phmm;
+pub mod pool;
 pub mod runtime;
 pub mod seq;
 pub mod sim;

@@ -16,9 +16,11 @@ use std::process::ExitCode;
 
 use aphmm::accel::{self, AccelConfig, Workload};
 use aphmm::apps::{self, CorrectionConfig, MsaConfig, SearchConfig};
-use aphmm::baumwelch::FilterConfig;
+use aphmm::baumwelch::{
+    BandedEngine, EngineKind, ExpectationEngine, FilterConfig, ReferenceEngine, SparseEngine,
+};
 use aphmm::config::Config;
-use aphmm::error::Result;
+use aphmm::error::{ApHmmError, Result};
 use aphmm::io;
 use aphmm::phmm::{Phmm, Profile, TraditionalParams};
 use aphmm::seq::{DNA, PROTEIN};
@@ -27,11 +29,15 @@ use aphmm::sim::{self, XorShift};
 fn usage() -> &'static str {
     "usage: aphmm <simulate|correct|search|align|accel|runtime> [--config FILE] [--set k=v ...]
   simulate --out-dir DIR [--set sim.genome_len=N --set sim.coverage=X]
-  correct  --assembly A.fasta --reads R.fasta --out C.fasta
-  search   [--set search.n_families=N --set search.queries=N]
-  align    [--set msa.n_seqs=N]
+  correct  --assembly A.fasta --reads R.fasta --out C.fasta [--engine sparse|banded|reference]
+  search   [--engine E] [--set search.n_families=N --set search.queries=N]
+  align    [--engine E] [--set msa.n_seqs=N]
   accel    [--set accel.pes=N --set accel.chunk=N]
-  runtime  --artifacts DIR"
+  runtime  --artifacts DIR
+
+  --engine selects the Baum-Welch ExpectationEngine backend
+  (default: sparse for correct/search, banded for align; also settable
+  via --set <section>.engine=NAME)"
 }
 
 /// Minimal argument parser: positional subcommand + `--flag value` pairs.
@@ -84,6 +90,25 @@ impl Args {
     }
 }
 
+/// Resolve the engine backend: `--engine NAME` wins, then
+/// `<section>.engine` from the config file, then `default_kind`.
+fn engine_from(
+    args: &Args,
+    cfg: &Config,
+    section: &str,
+    default_kind: EngineKind,
+) -> Result<EngineKind> {
+    let name = match args.get("engine") {
+        Some(v) if !v.is_empty() => v.to_string(),
+        _ => cfg.str_or(&format!("{section}.engine"), default_kind.name()),
+    };
+    EngineKind::parse(&name).ok_or_else(|| {
+        ApHmmError::Config(format!(
+            "unknown engine {name:?} (expected sparse | banded | reference | xla)"
+        ))
+    })
+}
+
 fn filter_from(cfg: &Config, section: &str) -> Result<FilterConfig> {
     let kind = cfg.str_or(&format!("{section}.filter"), "histogram");
     let size = cfg.usize_or(&format!("{section}.filter_size"), 500)?;
@@ -131,6 +156,7 @@ fn cmd_correct(args: &Args) -> Result<()> {
         chunk_len: cfg.usize_or("correction.chunk_len", 650)?,
         max_iters: cfg.usize_or("correction.max_iters", 2)?,
         filter: filter_from(&cfg, "correction")?,
+        engine: engine_from(args, &cfg, "correction", EngineKind::Sparse)?,
         ..Default::default()
     };
     let mut corrected = Vec::new();
@@ -157,16 +183,34 @@ fn cmd_search(args: &Args) -> Result<()> {
     let seed = cfg.usize_or("search.seed", 7)? as u64;
     let n_families = cfg.usize_or("search.n_families", 64)?;
     let n_queries = cfg.usize_or("search.queries", 16)?;
+    let engine = engine_from(args, &cfg, "search", EngineKind::Sparse)?;
     let mut rng = XorShift::new(seed);
     let params = sim::ProteinSimParams { n_families, ..Default::default() };
     let families = sim::generate_families(&mut rng, &params);
     let search_cfg = SearchConfig::default();
-    let db = apps::FamilyDb::build(&families, PROTEIN, &search_cfg)?;
+    match engine {
+        EngineKind::Sparse => run_search(SparseEngine, &families, n_queries, &search_cfg),
+        EngineKind::Banded => run_search(BandedEngine, &families, n_queries, &search_cfg),
+        EngineKind::Reference => run_search(ReferenceEngine, &families, n_queries, &search_cfg),
+        EngineKind::Xla => Err(ApHmmError::Config(
+            "the XLA engine is device-backed; search supports sparse | banded | reference".into(),
+        )),
+    }
+}
+
+/// The search loop, generic over the database's engine backend.
+fn run_search<E: ExpectationEngine>(
+    engine: E,
+    families: &[sim::ProteinFamily],
+    n_queries: usize,
+    search_cfg: &SearchConfig,
+) -> Result<()> {
+    let db = apps::FamilyDb::build_with(engine, families, PROTEIN, search_cfg)?;
     let mut correct = 0usize;
     for q in 0..n_queries {
         let fam = &families[q % families.len()];
         let query = &fam.members[q % fam.members.len()];
-        let report = db.search(query, &search_cfg)?;
+        let report = db.search(query, search_cfg)?;
         let top = report.hits.first().map(|h| h.family.clone()).unwrap_or_default();
         if top == fam.id {
             correct += 1;
@@ -193,7 +237,11 @@ fn cmd_align(args: &Args) -> Result<()> {
     let fam = sim::generate_families(&mut rng, &params).remove(0);
     let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
     let phmm = Phmm::traditional(&profile, &TraditionalParams::default())?.fold_silent(4)?;
-    let report = apps::align_all(&phmm, &fam.members, &MsaConfig::default())?;
+    let msa_cfg = MsaConfig {
+        engine: engine_from(args, &cfg, "msa", EngineKind::Banded)?,
+        ..Default::default()
+    };
+    let report = apps::align_all(&phmm, &fam.members, &msa_cfg)?;
     println!(
         "aligned {}/{} sequences to {} columns; identity {:.1}%; BW fraction {:.1}%",
         report.rows.len(),

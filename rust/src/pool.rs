@@ -1,0 +1,325 @@
+//! A shared, reusable worker pool with scoped fan-out.
+//!
+//! Before this module, every parallel region spawned its own scoped
+//! threads: `train()` spawned E-step workers per call and the
+//! coordinator spawned chunk workers per `run_jobs`, so the two levels
+//! of parallelism could not share capacity (ROADMAP perf candidate:
+//! "chunk-level + E-step thread-pool sharing in the coordinator").
+//! [`WorkerPool`] replaces both: one set of helper threads is created
+//! per coordinator/app session (or once per process via
+//! [`WorkerPool::global`]) and every fan-out — chunk training, the
+//! batch E-step, nested combinations of the two — draws from it.
+//!
+//! # Execution model
+//!
+//! [`WorkerPool::scope`]`(participants, f)` runs `f(slot)` on the
+//! calling thread (slot 0) plus up to `participants - 1` *currently
+//! idle* helper threads (slots 1, 2, ...), and returns once every
+//! participant has finished.  Two properties make this safe to nest and
+//! share:
+//!
+//! * **The caller always participates.**  Helpers are enlisted
+//!   opportunistically and never waited for, so a scope makes progress
+//!   even when every helper is busy — a chunk worker that fans its
+//!   E-step out while all helpers are occupied simply runs the E-step
+//!   on its own thread.  Deadlock is impossible by construction.
+//! * **Work must be self-scheduling.**  `f` receives only a slot index;
+//!   participants are expected to pull work items from a shared atomic
+//!   cursor.  Results therefore cannot depend on how many helpers
+//!   actually joined — the Baum-Welch E-step keeps its bit-identical
+//!   guarantee for any worker count because its block reduction merges
+//!   in block order, not completion order.
+//!
+//! Closures are handed to helpers by lifetime-erased pointer; `scope`
+//! blocks until the last helper leaves the closure, which is what makes
+//! the erasure sound (see the SAFETY notes inline).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// One fan-out region: the closure plus slot/lifecycle accounting.
+///
+/// `task` is a reference whose lifetime has been transmuted to
+/// `'static`; it is only ever called by a helper that claimed a slot
+/// while the owning [`WorkerPool::scope`] call was still blocked, and
+/// `scope` does not return (or unwind) until every such helper has
+/// left the closure — so the reference never actually outlives the
+/// closure it points at (see the SAFETY notes in `scope`).
+struct ScopeJob {
+    task: &'static (dyn Fn(usize) + Sync),
+    state: Mutex<ScopeState>,
+    done: Condvar,
+}
+
+struct ScopeState {
+    /// Helper slots handed out so far (slot 0 belongs to the caller).
+    claimed: usize,
+    /// Maximum helper slots (`participants - 1`).
+    max_helpers: usize,
+    /// Helpers currently inside the closure.
+    running: usize,
+    /// Set by the scope owner during teardown; no new claims after.
+    closed: bool,
+    /// A helper panicked inside the closure.
+    panicked: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    work: Condvar,
+}
+
+struct PoolQueue {
+    jobs: VecDeque<Arc<ScopeJob>>,
+    shutdown: bool,
+}
+
+/// A reusable pool of helper threads serving [`WorkerPool::scope`]
+/// fan-outs.  See the module docs for the execution model.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    helpers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool with `n_helpers` background threads.  `n_helpers = 0` is
+    /// valid: every scope then runs entirely on the calling thread.
+    pub fn new(n_helpers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let helpers = (0..n_helpers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || helper_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, helpers }
+    }
+
+    /// Number of background helper threads.
+    pub fn n_helpers(&self) -> usize {
+        self.helpers.len()
+    }
+
+    /// The process-wide shared pool, created on first use with
+    /// `available_parallelism - 1` helpers.  Convenience entry points
+    /// (`train`, the apps) draw from this one; sessions that want
+    /// isolated capacity build their own with [`WorkerPool::new`].
+    pub fn global() -> &'static WorkerPool {
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            WorkerPool::new(n.saturating_sub(1).min(15))
+        })
+    }
+
+    /// Run `f(slot)` on the calling thread (slot 0) and up to
+    /// `participants - 1` idle helpers (slots 1, 2, ...), returning when
+    /// every participant has finished.  `f` must be self-scheduling
+    /// (pull work from a shared cursor): the number of participants that
+    /// actually run is between 1 and `participants`.
+    ///
+    /// Panics in any participant are propagated to the caller after all
+    /// other participants have finished.
+    pub fn scope<F: Fn(usize) + Sync>(&self, participants: usize, f: F) {
+        let max_helpers = participants.saturating_sub(1);
+        if max_helpers == 0 || self.helpers.is_empty() {
+            f(0);
+            return;
+        }
+        let task_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the 'static lifetime is a lie confined to this call:
+        // the reference is only called by helpers that claimed a slot
+        // before `closed` is set below, and this function does not
+        // return (or unwind) until `running == 0`, so `f` outlives
+        // every call through the reference.
+        #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+        let task_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                task_ref,
+            )
+        };
+        let job = Arc::new(ScopeJob {
+            task: task_static,
+            state: Mutex::new(ScopeState {
+                claimed: 0,
+                max_helpers,
+                running: 0,
+                closed: false,
+                panicked: false,
+            }),
+            done: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push_back(Arc::clone(&job));
+        }
+        self.shared.work.notify_all();
+
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+
+        // Teardown: remove the job so no further helper can claim it
+        // (claims happen under the queue lock), then wait out the ones
+        // already inside.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if let Some(pos) = q.jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                q.jobs.remove(pos);
+            }
+        }
+        let helper_panicked = {
+            let mut st = job.state.lock().unwrap();
+            st.closed = true;
+            while st.running > 0 {
+                st = job.done.wait(st).unwrap();
+            }
+            st.panicked
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if helper_panicked {
+            panic!("WorkerPool helper panicked inside a scope closure");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.helpers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_loop(shared: &PoolShared) {
+    loop {
+        // Claim a slot while holding the queue lock, so the scope owner
+        // (which removes its job under the same lock before closing)
+        // can never tear down a job between our pop and our claim.
+        let (job, slot) = {
+            let mut q = shared.queue.lock().unwrap();
+            'find: loop {
+                if q.shutdown {
+                    return;
+                }
+                let mut exhausted: Option<usize> = None;
+                let mut found: Option<(Arc<ScopeJob>, usize)> = None;
+                for (i, job) in q.jobs.iter().enumerate() {
+                    let mut st = job.state.lock().unwrap();
+                    if !st.closed && st.claimed < st.max_helpers {
+                        st.claimed += 1;
+                        st.running += 1;
+                        let slot = st.claimed; // 1..=max_helpers
+                        if st.claimed == st.max_helpers {
+                            exhausted = Some(i);
+                        }
+                        found = Some((Arc::clone(job), slot));
+                        break;
+                    }
+                }
+                if let Some(i) = exhausted {
+                    q.jobs.remove(i);
+                }
+                match found {
+                    Some(claim) => break 'find claim,
+                    None => q = shared.work.wait(q).unwrap(),
+                }
+            }
+        };
+        // The slot was claimed before the job closed; the scope owner
+        // blocks until `running == 0`, so the closure is alive for the
+        // whole call (see the SAFETY note in `scope`).
+        let task = job.task;
+        let outcome = catch_unwind(AssertUnwindSafe(|| task(slot)));
+        let mut st = job.state.lock().unwrap();
+        st.running -= 1;
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        drop(st);
+        job.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Self-scheduling counter workload: participants pull items.
+    fn drain_counter(pool: &WorkerPool, participants: usize, items: usize) -> usize {
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        pool.scope(participants, |_slot| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= items {
+                break;
+            }
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        done.load(Ordering::Relaxed)
+    }
+
+    #[test]
+    fn scope_completes_all_items() {
+        let pool = WorkerPool::new(3);
+        for participants in [1, 2, 4, 9] {
+            assert_eq!(drain_counter(&pool, participants, 100), 100);
+        }
+    }
+
+    #[test]
+    fn zero_helper_pool_runs_on_caller() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.n_helpers(), 0);
+        assert_eq!(drain_counter(&pool, 4, 50), 50);
+    }
+
+    #[test]
+    fn nested_scopes_make_progress() {
+        // A scope participant opening an inner scope must never
+        // deadlock, even when the pool is smaller than the demand.
+        let pool = WorkerPool::new(1);
+        let total = AtomicUsize::new(0);
+        let outer_next = AtomicUsize::new(0);
+        pool.scope(3, |_slot| loop {
+            let i = outer_next.fetch_add(1, Ordering::Relaxed);
+            if i >= 4 {
+                break;
+            }
+            let inner_next = AtomicUsize::new(0);
+            pool.scope(3, |_inner| loop {
+                let j = inner_next.fetch_add(1, Ordering::Relaxed);
+                if j >= 10 {
+                    break;
+                }
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_scopes() {
+        let pool = WorkerPool::new(2);
+        for _ in 0..20 {
+            assert_eq!(drain_counter(&pool, 3, 17), 17);
+        }
+    }
+
+    #[test]
+    fn global_pool_exists() {
+        let done = drain_counter(WorkerPool::global(), 2, 10);
+        assert_eq!(done, 10);
+    }
+}

@@ -7,7 +7,9 @@
 //! [`ApHmmError::Runtime`], so every consumer — the CLI `runtime`
 //! subcommand, the coordinator's XLA device thread, the parity tests —
 //! compiles unchanged and degrades gracefully at runtime.  Build with
-//! `--features xla` (plus a vendored `xla` crate) for real execution.
+//! `--features pjrt` (plus a vendored `xla` crate) for real execution;
+//! the bare `xla` feature keeps these stubs so the feature-gated engine
+//! surface compiles offline.
 
 use std::path::Path;
 
@@ -20,7 +22,7 @@ use super::artifacts::ArtifactSpec;
 
 fn unavailable(what: &str) -> ApHmmError {
     ApHmmError::Runtime(format!(
-        "{what}: built without the `xla` feature (PJRT runtime unavailable)"
+        "{what}: built without the `pjrt` feature (PJRT runtime unavailable)"
     ))
 }
 

@@ -9,9 +9,9 @@
 //! update sums out.  Python never runs at request time.
 
 mod artifacts;
-#[cfg(feature = "xla")]
+#[cfg(feature = "pjrt")]
 mod executor;
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "pjrt"))]
 #[path = "executor_stub.rs"]
 mod executor;
 

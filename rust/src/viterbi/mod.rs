@@ -152,7 +152,7 @@ pub fn path_composition(phmm: &Phmm, path: &[u32]) -> (usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baumwelch::{train, FilterConfig, TrainConfig};
+    use crate::baumwelch::{train, TrainConfig};
     use crate::phmm::EcDesignParams;
     use crate::sim::{simulate_read, ErrorProfile, XorShift};
     use crate::testutil;
@@ -223,7 +223,7 @@ mod tests {
         train(
             &mut g,
             &reads,
-            &TrainConfig { max_iters: 3, tol: 0.0, filter: FilterConfig::None, n_workers: 1 },
+            &TrainConfig { max_iters: 3, tol: 0.0, ..Default::default() },
         )
         .unwrap();
         let decoded = consensus(&g).unwrap().consensus;

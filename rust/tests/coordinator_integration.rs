@@ -3,7 +3,8 @@
 
 use std::path::Path;
 
-use aphmm::coordinator::{run_jobs, BackendKind, ChunkJob, CoordinatorConfig, Metrics};
+use aphmm::baumwelch::{EngineKind, TrainConfig};
+use aphmm::coordinator::{run_jobs, ChunkJob, CoordinatorConfig, Metrics};
 use aphmm::seq::Sequence;
 use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
 use aphmm::testutil;
@@ -50,6 +51,7 @@ fn native_coordinator_corrects_chunks() {
         let n = o.consensus.len().min(r.len());
         let same = (0..n).filter(|&i| o.consensus.data[i] == r[i]).count();
         assert!(same as f64 / n as f64 > 0.8, "job {} diverged", o.id);
+        assert!(o.latency_ns > 0, "job {} reported no latency", o.id);
     }
 }
 
@@ -75,7 +77,8 @@ fn xla_backend_runs_and_agrees_with_native() {
 
     let cfg = CoordinatorConfig {
         n_workers: 2,
-        backend: BackendKind::Xla { artifacts_dir: dir },
+        train: TrainConfig { engine: EngineKind::Xla, ..Default::default() },
+        artifacts_dir: Some(dir),
         xla_iters: 2,
         ..Default::default()
     };
@@ -110,7 +113,8 @@ fn xla_backend_rejects_oversized_reads() {
     let jobs = make_jobs(&mut rng, 1, 200, 2);
     let cfg = CoordinatorConfig {
         n_workers: 1,
-        backend: BackendKind::Xla { artifacts_dir: dir },
+        train: TrainConfig { engine: EngineKind::Xla, ..Default::default() },
+        artifacts_dir: Some(dir),
         ..Default::default()
     };
     let metrics = Metrics::default();

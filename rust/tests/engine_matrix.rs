@@ -1,0 +1,185 @@
+//! Engine-equivalence matrix and worker-pool determinism.
+//!
+//! The same workload trained under every in-process
+//! `ExpectationEngine` must tell the same statistical story
+//! (log-likelihood agreement within numeric-format tolerance), and the
+//! shared `WorkerPool` E-step must be bit-identical to single-threaded
+//! execution for any worker count and any pool instance — the guarantee
+//! the pre-refactor scoped-thread implementation made.
+
+use aphmm::baumwelch::{
+    train, train_in, BandedCoeffs, BandedEngine, EngineKind, FilterConfig, TrainConfig,
+};
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::pool::WorkerPool;
+use aphmm::seq::Sequence;
+use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
+use aphmm::testutil;
+
+fn scenario(seed: u64, ref_len: usize, n_reads: usize) -> (Sequence, Vec<Sequence>) {
+    let mut rng = XorShift::new(seed);
+    let reference = Sequence::from_symbols("r", testutil::random_seq(&mut rng, ref_len, 4));
+    let reads = (0..n_reads)
+        .map(|i| {
+            simulate_read(&mut rng, &reference, 0, ref_len, &ErrorProfile::pacbio(), i).seq
+        })
+        .collect();
+    (reference, reads)
+}
+
+#[test]
+fn engine_matrix_loglik_agreement() {
+    // Sparse, banded and reference engines train the same workload to
+    // mutually consistent log-likelihood trajectories: sparse vs
+    // reference within f64 reassociation noise, banded within f32
+    // accumulation noise.
+    let (reference_seq, reads) = scenario(71, 80, 6);
+    let mut histories: Vec<(EngineKind, Vec<f64>)> = Vec::new();
+    for engine in [EngineKind::Sparse, EngineKind::Banded, EngineKind::Reference] {
+        let mut g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+        let cfg = TrainConfig { max_iters: 3, tol: 0.0, engine, ..Default::default() };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        assert_eq!(res.iters, 3, "engine {engine:?} stopped early");
+        g.validate().unwrap();
+        histories.push((engine, res.loglik_history));
+    }
+    let sparse = &histories[0].1;
+    let banded = &histories[1].1;
+    let reference = &histories[2].1;
+    for (i, (&s, &r)) in sparse.iter().zip(reference.iter()).enumerate() {
+        testutil::assert_close(s, r, 1e-3, 1e-6);
+        let b = banded[i];
+        testutil::assert_close(s, b, 1e-2, 1e-4);
+    }
+}
+
+#[test]
+fn engine_matrix_trained_parameters_track_each_other() {
+    // After one EM iteration from identical starting parameters, the
+    // re-estimated emission rows of the three engines agree closely
+    // (f32 banded accumulation is the loosest link).
+    let (reference_seq, reads) = scenario(73, 50, 5);
+    let mut trained: Vec<Vec<f32>> = Vec::new();
+    for engine in [EngineKind::Sparse, EngineKind::Banded, EngineKind::Reference] {
+        let mut g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+        let cfg = TrainConfig { max_iters: 1, tol: 0.0, engine, ..Default::default() };
+        train(&mut g, &reads, &cfg).unwrap();
+        trained.push(g.emissions.clone());
+    }
+    let to64 = |v: &Vec<f32>| -> Vec<f64> { v.iter().map(|&x| x as f64).collect() };
+    testutil::assert_all_close(&to64(&trained[0]), &to64(&trained[2]), 1e-4, 1e-6);
+    testutil::assert_all_close(&to64(&trained[0]), &to64(&trained[1]), 2e-2, 2e-3);
+}
+
+#[test]
+fn banded_fused_coefficients_match_prerefactor_scan() {
+    // The acceptance parity check: the banded engine's new fused
+    // coefficient tables reproduce the pre-refactor banded scan — the
+    // backward bit-for-bit (same association), the forward within one
+    // f32 reassociation per band entry.
+    let (reference_seq, reads) = scenario(79, 60, 3);
+    let g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+    let banded = g.to_banded().unwrap();
+    let coeffs = BandedCoeffs::new(&banded);
+    for read in &reads {
+        let (f_rows, scales, loglik) = BandedEngine::forward(&banded, read).unwrap();
+        let old = BandedEngine::bw_sums(&banded, read).unwrap();
+        // Same forward rows -> bit-identical backward/update sums.
+        let new_bwd =
+            BandedEngine::backward_sums_with(&banded, &coeffs, read, &f_rows, &scales, loglik)
+                .unwrap();
+        for (a, b) in old.xi_band.iter().zip(&new_bwd.xi_band) {
+            assert_eq!(a.to_bits(), b.to_bits(), "xi diverged");
+        }
+        for (a, b) in old.gamma_den.iter().zip(&new_bwd.gamma_den) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gamma diverged");
+        }
+        // End-to-end fused pass: tolerance parity.
+        let new_full = BandedEngine::bw_sums_with(&banded, &coeffs, read).unwrap();
+        testutil::assert_close(new_full.loglik as f64, old.loglik as f64, 1e-4, 1e-6);
+        let o: Vec<f64> = old.gamma_den.iter().map(|&x| x as f64).collect();
+        let n: Vec<f64> = new_full.gamma_den.iter().map(|&x| x as f64).collect();
+        testutil::assert_all_close(&n, &o, 5e-3, 1e-5);
+    }
+}
+
+#[test]
+fn shared_pool_is_bit_identical_to_private_pools_for_any_worker_count() {
+    // The pool-determinism guarantee: one shared pool reused across
+    // training sessions, a fresh pool per session, and the process
+    // global pool all produce byte-identical histories and parameters
+    // for every worker count, filters on and off.
+    let (reference_seq, reads) = scenario(83, 100, 21); // 3 blocks of 8
+    let shared = WorkerPool::new(3);
+    for filter in [FilterConfig::None, FilterConfig::histogram_default()] {
+        let mut baseline: Option<(Vec<f64>, Vec<f32>, Vec<f32>)> = None;
+        for n_workers in [1usize, 2, 4, 5] {
+            let cfg = TrainConfig { max_iters: 3, tol: 0.0, filter, n_workers, ..Default::default() };
+
+            let mut g_shared =
+                Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+            let res_shared = train_in(&mut g_shared, &reads, &cfg, &shared).unwrap();
+
+            let fresh = WorkerPool::new(2);
+            let mut g_fresh = Phmm::error_correction(&reference_seq, &EcDesignParams::default())
+                .unwrap();
+            let res_fresh = train_in(&mut g_fresh, &reads, &cfg, &fresh).unwrap();
+
+            let mut g_global =
+                Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+            let res_global = train(&mut g_global, &reads, &cfg).unwrap();
+
+            assert_eq!(res_shared.loglik_history, res_fresh.loglik_history);
+            assert_eq!(res_shared.loglik_history, res_global.loglik_history);
+            assert_eq!(g_shared.out_prob, g_fresh.out_prob);
+            assert_eq!(g_shared.out_prob, g_global.out_prob);
+            assert_eq!(g_shared.emissions, g_fresh.emissions);
+            assert_eq!(g_shared.emissions, g_global.emissions);
+
+            match &baseline {
+                None => {
+                    baseline = Some((
+                        res_shared.loglik_history.clone(),
+                        g_shared.out_prob.clone(),
+                        g_shared.emissions.clone(),
+                    ))
+                }
+                Some((hist, out_prob, emissions)) => {
+                    assert_eq!(
+                        &res_shared.loglik_history, hist,
+                        "worker count {n_workers} changed the history (filter {filter:?})"
+                    );
+                    assert_eq!(&g_shared.out_prob, out_prob, "filter {filter:?}");
+                    assert_eq!(&g_shared.emissions, emissions, "filter {filter:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_determinism_holds_for_banded_engine_too() {
+    // The deterministic block reduction is engine-agnostic: the banded
+    // engine's f32 sums are merged in block order as well.
+    let (reference_seq, reads) = scenario(89, 60, 17);
+    let shared = WorkerPool::new(3);
+    let mut baseline: Option<Vec<f64>> = None;
+    for n_workers in [1usize, 3, 5] {
+        let cfg = TrainConfig {
+            max_iters: 2,
+            tol: 0.0,
+            engine: EngineKind::Banded,
+            n_workers,
+            ..Default::default()
+        };
+        let mut g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+        let res = train_in(&mut g, &reads, &cfg, &shared).unwrap();
+        match &baseline {
+            None => baseline = Some(res.loglik_history.clone()),
+            Some(hist) => assert_eq!(
+                &res.loglik_history, hist,
+                "banded E-step not deterministic at {n_workers} workers"
+            ),
+        }
+    }
+}

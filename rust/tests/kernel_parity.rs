@@ -142,7 +142,7 @@ fn parallel_train_is_bit_identical_across_worker_counts_and_filters() {
         for n_workers in [1usize, 2, 5] {
             let mut g = Phmm::error_correction(&reference_seq, &EcDesignParams::default())
                 .unwrap();
-            let cfg = TrainConfig { max_iters: 3, tol: 0.0, filter, n_workers };
+            let cfg = TrainConfig { max_iters: 3, tol: 0.0, filter, n_workers, ..Default::default() };
             let res = train(&mut g, &reads, &cfg).unwrap();
             histories.push(res.loglik_history);
             params.push((g.out_prob, g.emissions));
