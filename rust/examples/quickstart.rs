@@ -5,6 +5,9 @@
 //! 3. Decode the Viterbi consensus.
 //! 4. If `artifacts/` exists, score the same model through the
 //!    AOT-compiled XLA path and check it agrees with the native engine.
+//! 5. Serve the profile: register it with a streaming `Server` and
+//!    score two requests — the second hits the cross-request
+//!    Prepared-coefficient cache (no re-freeze).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -13,6 +16,7 @@ use std::path::Path;
 use aphmm::baumwelch::{score_sparse, train, BandedEngine, FilterConfig, ForwardOptions, TrainConfig};
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
+use aphmm::server::{Request, ResponseBody, Server, ServerConfig};
 use aphmm::sim::{generate_genome, simulate_read, ErrorProfile, XorShift};
 use aphmm::viterbi::consensus;
 
@@ -75,5 +79,28 @@ fn main() -> aphmm::Result<()> {
     } else {
         println!("(artifacts/ missing — run `make artifacts` to exercise the XLA path)");
     }
+
+    // 5. Serve the trained profile: requests stream through a bounded
+    //    job queue, and repeated requests against one profile reuse a
+    //    single frozen coefficient table (the cross-request cache).
+    let mut server = Server::start(ServerConfig::default());
+    server.register_profile("ref", graph.clone());
+    for (i, read) in reads.iter().take(2).enumerate() {
+        let resp = server
+            .submit(None, Request::Score { profile: "ref".into(), read: read.clone() })?
+            .wait();
+        if let ResponseBody::Score { loglik, cache_hit, .. } = resp.body {
+            println!(
+                "serve: score request {i}: loglik {loglik:.4}, prepared cache {} \
+                 ({} us)",
+                if cache_hit { "hit" } else { "miss" },
+                resp.latency_ns / 1_000
+            );
+        }
+    }
+    let cache = server.cache_stats();
+    println!("serve: cache hits={} misses={} (second request skipped the freeze)", cache.hits, cache.misses);
+    assert_eq!(cache.hits, 1, "second same-profile request must be a cache hit");
+    server.shutdown(true);
     Ok(())
 }

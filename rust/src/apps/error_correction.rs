@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use crate::baumwelch::{train_in, EngineKind, FilterConfig, TrainConfig};
+use crate::baumwelch::{train_in, EngineKind, FilterConfig, TrainConfig, TrainResult};
 use crate::error::Result;
 use crate::mapper::{MapperConfig, MinimizerIndex};
 use crate::phmm::{EcDesignParams, Phmm};
@@ -17,6 +17,42 @@ use crate::seq::Sequence;
 use crate::viterbi::consensus;
 
 use super::timing::AppTimings;
+
+/// One trained chunk: the decoded consensus plus the training
+/// instrumentation and the non-Baum-Welch build/decode times.
+#[derive(Clone, Debug)]
+pub struct ChunkTrainOutcome {
+    /// Viterbi consensus of the trained graph.
+    pub consensus: Sequence,
+    /// Training result and instrumentation.
+    pub train: TrainResult,
+    /// Graph construction time (ns).
+    pub build_ns: u128,
+    /// Consensus decode time (ns).
+    pub decode_ns: u128,
+}
+
+/// Build an EC-design pHMM for `reference` (over `alphabet`), train it
+/// on `reads`, and decode the Viterbi consensus — the chunk-level
+/// primitive shared by the batch corrector below, the coordinator's
+/// streaming chunk jobs, and the serving layer's `Correct` requests.
+pub fn train_chunk(
+    reference: &Sequence,
+    reads: &[Sequence],
+    design: &EcDesignParams,
+    alphabet: crate::seq::Alphabet,
+    train_cfg: &TrainConfig,
+    pool: &WorkerPool,
+) -> Result<ChunkTrainOutcome> {
+    let t0 = Instant::now();
+    let mut graph = Phmm::error_correction_for(reference, design, alphabet)?;
+    let build_ns = t0.elapsed().as_nanos();
+    let train = train_in(&mut graph, reads, train_cfg, pool)?;
+    let t1 = Instant::now();
+    let decoded = consensus(&graph)?;
+    let decode_ns = t1.elapsed().as_nanos();
+    Ok(ChunkTrainOutcome { consensus: decoded.consensus, train, build_ns, decode_ns })
+}
 
 /// Error-correction configuration.
 #[derive(Clone, Copy, Debug)]
@@ -155,11 +191,7 @@ pub fn correct_assembly(
             continue;
         }
 
-        // ---- Build + train + decode ----
-        let t2 = Instant::now();
-        let mut graph = Phmm::error_correction(&chunk_ref, &cfg.design)?;
-        timings.other_ns += t2.elapsed().as_nanos();
-
+        // ---- Build + train + decode (the shared chunk primitive) ----
         let train_cfg = TrainConfig {
             max_iters: cfg.max_iters,
             tol: 1e-3,
@@ -167,19 +199,18 @@ pub fn correct_assembly(
             n_workers: cfg.estep_workers,
             engine: cfg.engine,
         };
-        let res = train_in(&mut graph, &segments, &train_cfg, pool)?;
+        let out =
+            train_chunk(&chunk_ref, &segments, &cfg.design, crate::seq::DNA, &train_cfg, pool)?;
+        let res = &out.train;
         timings.forward_ns += res.forward_ns;
         timings.backward_update_ns += res.backward_update_ns;
         timings.maximize_ns += res.maximize_ns;
+        timings.other_ns += out.build_ns + out.decode_ns;
         states_processed += res.states_processed;
         edges_processed += res.edges_processed;
         timesteps += res.timesteps;
         reads_skipped += res.reads_skipped;
-
-        let t3 = Instant::now();
-        let decoded = consensus(&graph)?;
-        corrected_parts.push(decoded.consensus);
-        timings.other_ns += t3.elapsed().as_nanos();
+        corrected_parts.push(out.consensus);
         chunks_trained += 1;
     }
 

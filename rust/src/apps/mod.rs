@@ -7,7 +7,14 @@ mod msa;
 mod protein_search;
 mod timing;
 
-pub use error_correction::{correct_assembly, CorrectionConfig, CorrectionReport};
-pub use msa::{align_all, align_all_with, msa_identity, AlignedRow, MsaConfig, MsaReport};
-pub use protein_search::{FamilyDb, FamilyEntry, SearchConfig, SearchHit, SearchReport};
+pub use error_correction::{
+    correct_assembly, train_chunk, ChunkTrainOutcome, CorrectionConfig, CorrectionReport,
+};
+pub use msa::{
+    align_all, align_all_with, msa_identity, posterior_columns, profile_columns, AlignedRow,
+    MsaConfig, MsaReport,
+};
+pub use protein_search::{
+    kmer_set, log_odds_score, FamilyDb, FamilyEntry, SearchConfig, SearchHit, SearchReport,
+};
 pub use timing::AppTimings;

@@ -76,8 +76,24 @@ pub struct MsaReport {
     pub timings: AppTimings,
 }
 
-/// Map the best-state path onto profile columns (hmmalign's rule).
-fn build_row(
+/// Number of profile columns of an (emitting-only) profile pHMM: the
+/// highest match-state position + 1.  Shared by [`align_all_with`] and
+/// the serving layer's `Align` responses.
+pub fn profile_columns(phmm: &Phmm) -> usize {
+    phmm.kinds
+        .iter()
+        .zip(phmm.position.iter())
+        .filter(|(k, _)| matches!(k, StateKind::Match))
+        .map(|(_, &p)| p as usize + 1)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Map a maximum-posterior state path onto profile columns (hmmalign's
+/// rule): match-state residues fill their column, everything else
+/// counts as an insertion.  Returns the column row plus the insertion
+/// count.
+pub fn posterior_columns(
     phmm: &Phmm,
     n_columns: usize,
     seq: &Sequence,
@@ -131,14 +147,7 @@ pub fn align_all_with<E: ExpectationEngine>(
     let t0 = Instant::now();
     let prep = engine.prepare(phmm)?;
     let mut scratch = engine.make_scratch(phmm);
-    let n_columns = phmm
-        .kinds
-        .iter()
-        .zip(phmm.position.iter())
-        .filter(|(k, _)| matches!(k, StateKind::Match))
-        .map(|(_, &p)| p as usize + 1)
-        .max()
-        .unwrap_or(0);
+    let n_columns = profile_columns(phmm);
     timings.other_ns += t0.elapsed().as_nanos();
 
     let prescreen = cfg.min_avg_loglik > PRESCREEN_ACTIVE;
@@ -169,7 +178,8 @@ pub fn align_all_with<E: ExpectationEngine>(
                 timings.backward_update_ns += dec.backward_ns;
                 if dec.loglik / seq.len() as f64 >= cfg.min_avg_loglik {
                     let t2 = Instant::now();
-                    let (columns, insertions) = build_row(phmm, n_columns, seq, &dec.best_state);
+                    let (columns, insertions) =
+                        posterior_columns(phmm, n_columns, seq, &dec.best_state);
                     rows.push(AlignedRow {
                         id: seq.id.clone(),
                         columns,

@@ -106,7 +106,21 @@ pub struct SearchReport {
     pub timings: AppTimings,
 }
 
-fn kmer_set(seq: &[u8], k: usize, sigma: usize) -> HashSet<u64> {
+/// Length-normalized log-odds score of a forward log-likelihood
+/// against an i.i.d. uniform null model over `sigma` symbols — the
+/// score unit shared by [`FamilyDb::search`] and the serving layer's
+/// `Score`/`Search` responses (hmmsearch uses a background model;
+/// uniform keeps scores comparable here).
+pub fn log_odds_score(loglik: f64, len: usize, sigma: usize) -> f64 {
+    let len = len.max(1) as f64;
+    let null_per_residue = -(sigma as f64).ln();
+    (loglik - null_per_residue * len) / len
+}
+
+/// The k-mer containment set of a sequence (encoded symbols), used by
+/// the MSV/SSV-style pre-filter of [`FamilyDb::search`] and the serving
+/// layer's `Search` requests.
+pub fn kmer_set(seq: &[u8], k: usize, sigma: usize) -> HashSet<u64> {
     let mut set = HashSet::new();
     if seq.len() < k {
         return set;
@@ -168,9 +182,6 @@ impl<E: ExpectationEngine> FamilyDb<E> {
     pub fn search(&self, query: &Sequence, cfg: &SearchConfig) -> Result<SearchReport> {
         let mut report = SearchReport::default();
         let sigma = self.alphabet.size();
-        // Null model: i.i.d. uniform emissions (hmmsearch uses a
-        // background model; uniform keeps scores comparable here).
-        let null_per_residue = -(sigma as f64).ln();
 
         // ---- Pre-filter (non-BW) ----
         let t0 = Instant::now();
@@ -209,7 +220,7 @@ impl<E: ExpectationEngine> FamilyDb<E> {
                 }
             };
             report.timings.forward_ns += t1.elapsed().as_nanos();
-            let score = (ll - null_per_residue * query.len() as f64) / query.len() as f64;
+            let score = log_odds_score(ll, query.len(), sigma);
             hits.push(SearchHit { family: entry.id.clone(), score });
         }
         let t2 = Instant::now();

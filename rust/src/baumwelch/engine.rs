@@ -51,7 +51,7 @@ use crate::seq::Sequence;
 /// `TrainConfig` and the application configs; plain `Copy` data so the
 /// configs stay `Copy` (the XLA device's artifact directory lives in
 /// `CoordinatorConfig::artifacts_dir`, not here).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum EngineKind {
     /// CSR sparse engine with state filtering and memoized per-symbol
     /// fused-coefficient tables — the software baseline / hot path.
@@ -71,6 +71,10 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Canonical names of every engine, for CLI usage text and parse
+    /// errors (`reference` also accepts the shorthand `ref`).
+    pub const NAMES: &'static [&'static str] = &["sparse", "banded", "reference", "xla"];
+
     /// Parse a CLI/config name (`sparse | banded | reference | xla`).
     pub fn parse(name: &str) -> Option<EngineKind> {
         match name.trim().to_ascii_lowercase().as_str() {
@@ -563,6 +567,112 @@ impl ExpectationEngine for BandedEngine {
     }
 }
 
+// ---------------------------------------------------------------------
+// Type-erased frozen state — the serving layer's cache entry.
+// ---------------------------------------------------------------------
+
+/// A frozen coefficient table with the engine choice erased — one
+/// variant per in-process engine.  This is what the serving layer's
+/// cross-request cache stores: many clients scoring against the same
+/// profile share one [`PreparedAny`] (behind an `Arc`) instead of
+/// re-freezing per request, extending the paper's per-EM-iteration
+/// memoization (§4.2–4.3) across requests.
+///
+/// Only the read-only inference paths are exposed (`score`,
+/// `posterior`): training re-freezes every EM iteration by design, so
+/// a cross-request cache of training state would be incoherent.  The
+/// XLA engine is device-backed (its "prepared" state lives in the
+/// device session), so [`PreparedAny::freeze`] rejects it.
+pub enum PreparedAny {
+    /// Fused CSR tables (+ lazily cached banded lowering).  Boxed: the
+    /// tables are table-sized, the enum travels by `Arc`.
+    Sparse(Box<SparsePrepared>),
+    /// Banded snapshot + fused `a·e` tables.
+    Banded(Box<BandedPrepared>),
+    /// The reference engine freezes nothing.
+    Reference,
+}
+
+/// Per-worker scratch matching a [`PreparedAny`] variant.  Workers keep
+/// one across requests; [`PreparedAny::score`] rebuilds it when the
+/// cached entry's engine (or profile shape) does not match.
+pub enum ScratchAny {
+    /// Sparse forward scratch (buffer pools).
+    Sparse(Box<ForwardScratch>),
+    /// Dense engines need no scratch.
+    None,
+}
+
+impl PreparedAny {
+    /// Freeze the current parameters of `phmm` for `kind` — the entry
+    /// point the cross-request cache calls on a miss.
+    pub fn freeze(kind: EngineKind, phmm: &Phmm) -> Result<PreparedAny> {
+        match kind {
+            EngineKind::Sparse => {
+                Ok(PreparedAny::Sparse(Box::new(SparseEngine.prepare(phmm)?)))
+            }
+            EngineKind::Banded => {
+                Ok(PreparedAny::Banded(Box::new(BandedEngine.prepare(phmm)?)))
+            }
+            EngineKind::Reference => Ok(PreparedAny::Reference),
+            EngineKind::Xla => Err(crate::error::ApHmmError::Config(
+                "the XLA engine is device-backed and cannot be frozen into a shared \
+                 cache entry; serve supports sparse | banded | reference"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Which engine froze this state.
+    pub fn kind(&self) -> EngineKind {
+        match self {
+            PreparedAny::Sparse(_) => EngineKind::Sparse,
+            PreparedAny::Banded(_) => EngineKind::Banded,
+            PreparedAny::Reference => EngineKind::Reference,
+        }
+    }
+
+    /// A scratch sized for `phmm`, matching this variant.
+    pub fn make_scratch(&self, phmm: &Phmm) -> ScratchAny {
+        match self {
+            PreparedAny::Sparse(_) => ScratchAny::Sparse(Box::new(ForwardScratch::new(phmm))),
+            _ => ScratchAny::None,
+        }
+    }
+
+    /// Forward-only score of `read` through the frozen tables.
+    /// `scratch` is replaced in place when it does not match the
+    /// variant (workers reuse one slot across heterogeneous requests).
+    pub fn score(
+        &self,
+        phmm: &Phmm,
+        read: &Sequence,
+        opts: &ForwardOptions,
+        scratch: &mut ScratchAny,
+    ) -> Result<ScoreResult> {
+        match self {
+            PreparedAny::Sparse(prep) => {
+                if !matches!(scratch, ScratchAny::Sparse(_)) {
+                    *scratch = ScratchAny::Sparse(Box::new(ForwardScratch::new(phmm)));
+                }
+                let ScratchAny::Sparse(s) = scratch else { unreachable!() };
+                SparseEngine.score(phmm, prep, read, opts, s)
+            }
+            PreparedAny::Banded(prep) => BandedEngine.score(phmm, prep, read, opts, &mut ()),
+            PreparedAny::Reference => ReferenceEngine.score(phmm, &(), read, opts, &mut ()),
+        }
+    }
+
+    /// Posterior best-state decode of `read` through the frozen tables.
+    pub fn posterior(&self, phmm: &Phmm, read: &Sequence) -> Result<PosteriorDecode> {
+        match self {
+            PreparedAny::Sparse(prep) => SparseEngine.posterior(phmm, prep, read),
+            PreparedAny::Banded(prep) => BandedEngine.posterior(phmm, prep, read),
+            PreparedAny::Reference => ReferenceEngine.posterior(phmm, &(), read),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -650,6 +760,40 @@ mod tests {
         ] {
             assert!(ll1 >= ll0 - 1e-2, "{name}: EM decreased loglik {ll0} -> {ll1}");
         }
+    }
+
+    #[test]
+    fn prepared_any_matches_the_concrete_engines() {
+        // The type-erased frozen state (what the serving cache stores)
+        // must score and decode bit-identically to the engine it wraps.
+        let mut rng = XorShift::new(103);
+        let (g, obs) = setup(&mut rng, 30, 18);
+        let opts = ForwardOptions::default();
+
+        let sparse = SparseEngine;
+        let sp = sparse.prepare(&g).unwrap();
+        let mut ss = sparse.make_scratch(&g);
+        let direct = sparse.score(&g, &sp, &obs, &opts, &mut ss).unwrap().loglik;
+        let any = PreparedAny::freeze(EngineKind::Sparse, &g).unwrap();
+        assert_eq!(any.kind(), EngineKind::Sparse);
+        let mut scratch = any.make_scratch(&g);
+        let erased = any.score(&g, &obs, &opts, &mut scratch).unwrap().loglik;
+        assert_eq!(direct.to_bits(), erased.to_bits());
+
+        // A worker's scratch slot survives an engine switch in place.
+        let banded_any = PreparedAny::freeze(EngineKind::Banded, &g).unwrap();
+        let via_switched = banded_any.score(&g, &obs, &opts, &mut scratch).unwrap().loglik;
+        let banded = BandedEngine;
+        let bp = banded.prepare(&g).unwrap();
+        let direct_banded = banded.score(&g, &bp, &obs, &opts, &mut ()).unwrap().loglik;
+        assert_eq!(direct_banded.to_bits(), via_switched.to_bits());
+
+        let a = any.posterior(&g, &obs).unwrap();
+        let b = banded_any.posterior(&g, &obs).unwrap();
+        assert_eq!(a.best_state, b.best_state);
+
+        // The device-backed engine cannot be frozen into a cache entry.
+        assert!(PreparedAny::freeze(EngineKind::Xla, &g).is_err());
     }
 
     #[test]

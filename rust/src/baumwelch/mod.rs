@@ -45,8 +45,8 @@ mod update;
 
 pub use banded::{BandedBwSums, BandedCoeffs, BandedEngine};
 pub use engine::{
-    BandedAcc, BandedPrepared, EngineKind, ExpectationEngine, PosteriorDecode, ReadStats,
-    ReferenceEngine, SparseEngine, SparsePrepared,
+    BandedAcc, BandedPrepared, EngineKind, ExpectationEngine, PosteriorDecode, PreparedAny,
+    ReadStats, ReferenceEngine, ScratchAny, SparseEngine, SparsePrepared,
 };
 pub use filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
 pub use kernels::{ForwardScratch, FusedCoeffs};

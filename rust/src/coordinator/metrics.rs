@@ -1,9 +1,23 @@
-//! Coordinator metrics: throughput, latency distribution, queue stats.
+//! Coordinator/server metrics: throughput, latency distribution, queue
+//! backpressure gauges.
+//!
+//! One [`Metrics`] instance is shared (lock-free) by every worker of a
+//! coordinator run or a [`crate::server::Server`] lifetime.  Latencies
+//! feed a fixed-bucket power-of-two histogram, so [`MetricsSummary`]
+//! reports p50/p99 instead of only sum/max; queue gauges mirror the
+//! most recently absorbed [`crate::server::JobQueue`] snapshot, so the
+//! summary shows whether `queue_depth` actually exerted backpressure.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Latency histogram buckets: bucket `i` holds latencies in
+/// `[2^(i-1), 2^i)` ns (bucket 0 holds 0 ns; the last bucket holds
+/// everything ≥ 2^(N-2) ns, ≈ 4.6 min).  Fixed buckets keep recording
+/// a single atomic increment.
+const LATENCY_BUCKETS: usize = 39;
+
 /// Shared (lock-free) counters updated by workers.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Jobs completed.
     pub jobs_done: AtomicU64,
@@ -20,6 +34,48 @@ pub struct Metrics {
     /// Reads skipped during training (empty or numerically dead) —
     /// surfaced so dropped coverage is visible instead of silent.
     pub reads_skipped: AtomicU64,
+    /// Current job-queue depth (gauge; latest absorbed snapshot).
+    pub queue_depth: AtomicU64,
+    /// Highest job-queue depth observed (monotone across absorbs).
+    pub queue_high_water: AtomicU64,
+    /// Producer admissions refused/blocked by the full queue (latest
+    /// absorbed snapshot — monotone within one queue's lifetime).
+    pub producer_blocks: AtomicU64,
+    /// Power-of-two latency histogram (see [`LATENCY_BUCKETS`]).
+    latency_hist: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            jobs_done: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            timesteps: AtomicU64::new(0),
+            states: AtomicU64::new(0),
+            latency_sum_ns: AtomicU64::new(0),
+            latency_max_ns: AtomicU64::new(0),
+            reads_skipped: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_high_water: AtomicU64::new(0),
+            producer_blocks: AtomicU64::new(0),
+            latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Histogram bucket of a latency: 0 ns → 0, else `floor(log2) + 1`,
+/// clamped to the last (overflow) bucket.
+fn bucket_of(latency_ns: u64) -> usize {
+    ((64 - latency_ns.leading_zeros()) as usize).min(LATENCY_BUCKETS - 1)
+}
+
+/// Upper bound (ns) of histogram bucket `i`.
+fn bucket_bound_ns(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
 }
 
 impl Metrics {
@@ -30,6 +86,7 @@ impl Metrics {
         self.states.fetch_add(states, Ordering::Relaxed);
         self.latency_sum_ns.fetch_add(latency_ns, Ordering::Relaxed);
         self.latency_max_ns.fetch_max(latency_ns, Ordering::Relaxed);
+        self.latency_hist[bucket_of(latency_ns)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a failed job.
@@ -40,6 +97,36 @@ impl Metrics {
     /// Record reads skipped while training a job.
     pub fn record_skipped_reads(&self, n: u64) {
         self.reads_skipped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Fold a job-queue gauge snapshot in: `depth` and `blocks` mirror
+    /// the snapshot (idempotent for one queue), `high_water` is kept
+    /// monotone so repeated absorbs never lose the peak.
+    pub fn absorb_queue(&self, depth: u64, high_water: u64, blocks: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_high_water.fetch_max(high_water, Ordering::Relaxed);
+        self.producer_blocks.store(blocks, Ordering::Relaxed);
+    }
+
+    /// Latency quantile from the histogram: the upper bound of the
+    /// first bucket whose cumulative count reaches `q` of all recorded
+    /// jobs (0 when nothing was recorded).
+    fn latency_quantile_ms(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.latency_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_bound_ns(i) as f64 / 1e6;
+            }
+        }
+        bucket_bound_ns(LATENCY_BUCKETS - 1) as f64 / 1e6
     }
 
     /// Snapshot as a display-friendly summary.
@@ -54,7 +141,12 @@ impl Metrics {
             reads_skipped: self.reads_skipped.load(Ordering::Relaxed),
             mean_latency_ms: if done > 0 { sum as f64 / done as f64 / 1e6 } else { 0.0 },
             max_latency_ms: self.latency_max_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            latency_p50_ms: self.latency_quantile_ms(0.50),
+            latency_p99_ms: self.latency_quantile_ms(0.99),
             jobs_per_second: if wall_seconds > 0.0 { done as f64 / wall_seconds } else { 0.0 },
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_high_water: self.queue_high_water.load(Ordering::Relaxed),
+            producer_blocks: self.producer_blocks.load(Ordering::Relaxed),
         }
     }
 }
@@ -76,8 +168,18 @@ pub struct MetricsSummary {
     pub mean_latency_ms: f64,
     /// Max job latency (ms).
     pub max_latency_ms: f64,
+    /// Median job latency (ms, histogram bucket upper bound).
+    pub latency_p50_ms: f64,
+    /// 99th-percentile job latency (ms, histogram bucket upper bound).
+    pub latency_p99_ms: f64,
     /// Throughput (jobs/s).
     pub jobs_per_second: f64,
+    /// Job-queue depth at the last absorbed snapshot.
+    pub queue_depth: u64,
+    /// Highest job-queue depth observed.
+    pub queue_high_water: u64,
+    /// Producer admissions refused/blocked by a full queue.
+    pub producer_blocks: u64,
 }
 
 #[cfg(test)]
@@ -99,5 +201,61 @@ mod tests {
         assert!((s.mean_latency_ms - 2.0).abs() < 1e-9);
         assert!((s.max_latency_ms - 3.0).abs() < 1e-9);
         assert!((s.jobs_per_second - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_the_latencies() {
+        let m = Metrics::default();
+        // 99 fast jobs (~1 ms) and one slow job (~1 s).
+        for _ in 0..99 {
+            m.record(1_000_000, 1, 1);
+        }
+        m.record(1_000_000_000, 1, 1);
+        let s = m.summary(1.0);
+        // p50 lands in the ~1 ms bucket (bound within 2x), p99 must not
+        // be dragged up to the outlier, and the max still sees it.
+        assert!(s.latency_p50_ms >= 1.0 && s.latency_p50_ms <= 3.0, "p50 {}", s.latency_p50_ms);
+        assert!(s.latency_p99_ms <= 3.0, "p99 {}", s.latency_p99_ms);
+        assert!((s.max_latency_ms - 1000.0).abs() < 1e-9);
+        // With the outlier weighted at 2%+, p99 climbs into its bucket.
+        m.record(1_000_000_000, 1, 1);
+        m.record(1_000_000_000, 1, 1);
+        let s = m.summary(1.0);
+        assert!(s.latency_p99_ms >= 500.0, "p99 {}", s.latency_p99_ms);
+    }
+
+    #[test]
+    fn zero_jobs_have_zero_quantiles() {
+        let m = Metrics::default();
+        let s = m.summary(1.0);
+        assert_eq!(s.latency_p50_ms, 0.0);
+        assert_eq!(s.latency_p99_ms, 0.0);
+    }
+
+    #[test]
+    fn absorb_queue_keeps_high_water_monotone() {
+        let m = Metrics::default();
+        m.absorb_queue(3, 7, 2);
+        m.absorb_queue(0, 5, 4);
+        let s = m.summary(1.0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_high_water, 7);
+        assert_eq!(s.producer_blocks, 4);
+    }
+
+    #[test]
+    fn bucket_mapping_is_monotone() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        let mut prev = 0;
+        for ns in [0u64, 1, 10, 1_000, 1_000_000, u64::MAX] {
+            let b = bucket_of(ns);
+            assert!(b >= prev);
+            assert!(b < LATENCY_BUCKETS);
+            prev = b;
+        }
     }
 }

@@ -1,15 +1,25 @@
 //! The L3 coordinator: multi-worker chunk-training orchestration.
 //!
-//! This is the deployment shape of the system: chunk-training jobs are
-//! drained by worker participants of one session-owned
-//! [`WorkerPool`], each job runs Baum-Welch training (through the
-//! [`ExpectationEngine`] named by `cfg.train.engine`) plus a Viterbi
-//! decode, and an optional shared **XLA device thread** plays the
-//! accelerator's role — workers ship banded expectation requests to it
-//! over a channel exactly the way ApHMM cores receive work from the
+//! This is the deployment shape of the system: chunk-training jobs
+//! **stream through a bounded [`JobQueue`]** (the same queue type the
+//! serving layer runs on — the coordinator is one producer among many,
+//! not a parallel code path) and are drained by worker participants of
+//! one session-owned [`WorkerPool`].  Each job runs Baum-Welch training
+//! (through the [`ExpectationEngine`] named by `cfg.train.engine`) plus
+//! a Viterbi decode, and an optional shared **XLA device thread** plays
+//! the accelerator's role — workers ship banded expectation requests to
+//! it over a channel exactly the way ApHMM cores receive work from the
 //! host (Supplemental S3's execution flow).  `tokio` is not in the
 //! offline registry, so the runtime is std threads + channels, which
 //! models the same structure.
+//!
+//! `CoordinatorConfig::queue_depth` is a real backpressure bound: the
+//! producer admits at most that many pending jobs, and on a full queue
+//! it **helps drain** (executes a queued job itself) instead of
+//! blocking — the pool's caller-participates rule means helpers may
+//! never join, so the producer must always be able to make progress
+//! alone.  Queue gauges (depth high-water, producer block count) are
+//! folded into [`Metrics`] at the end of the run.
 //!
 //! Chunk-level and E-step parallelism share the session pool: a chunk
 //! worker that fans its E-step out (`cfg.train.n_workers > 1`) enlists
@@ -23,15 +33,16 @@ mod xla_device;
 pub use metrics::{Metrics, MetricsSummary};
 pub use xla_device::{XlaDevice, XlaEngine, XlaHandle};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::baumwelch::{train_in, train_with_engine, EngineKind, TrainConfig};
+use crate::apps::train_chunk;
+use crate::baumwelch::{train_with_engine, EngineKind, TrainConfig};
 use crate::error::{ApHmmError, Result};
 use crate::phmm::{EcDesignParams, Phmm};
 use crate::pool::WorkerPool;
 use crate::seq::Sequence;
+use crate::server::{JobQueue, PushError};
 use crate::viterbi::consensus;
 
 /// Coordinator configuration.
@@ -45,10 +56,11 @@ use crate::viterbi::consensus;
 pub struct CoordinatorConfig {
     /// Worker threads (the paper's 4-core sweet spot).
     pub n_workers: usize,
-    /// Bounded queue depth.  Retained for API compatibility with the
-    /// leader/queue deployment shape; the in-memory job vector is
-    /// drained through a shared cursor, so depth only matters once jobs
-    /// stream in from I/O.
+    /// Bounded streaming-queue depth: at most this many jobs are
+    /// admitted ahead of the workers; the producer helps drain when the
+    /// queue is full (real backpressure, surfaced by the
+    /// `queue_high_water`/`producer_blocks` gauges in
+    /// [`MetricsSummary`]).
     pub queue_depth: usize,
     /// Training parameters; `train.engine` selects the compute backend
     /// ([`EngineKind::Xla`] routes through the shared device thread and
@@ -112,11 +124,12 @@ pub fn run_jobs(
     cfg: &CoordinatorConfig,
     metrics: &Metrics,
 ) -> Result<Vec<ChunkOutcome>> {
-    // One pool per coordinator session, sized so every chunk worker can
-    // run plus each chunk's E-step fan-out can find helpers.
+    // One pool per coordinator session, sized so the producer plus
+    // every chunk worker can run, and each chunk's E-step fan-out can
+    // still find helpers.
     let chunk_workers = cfg.n_workers.max(1);
     let estep_workers = cfg.train.n_workers.max(1);
-    let helpers = (chunk_workers - 1) + chunk_workers * (estep_workers - 1);
+    let helpers = chunk_workers + chunk_workers * (estep_workers - 1);
     let pool = WorkerPool::new(helpers);
     run_jobs_in(jobs, cfg, metrics, &pool)
 }
@@ -147,22 +160,18 @@ pub fn run_jobs_in(
             _ => (None, None),
         };
 
-    let next = AtomicUsize::new(0);
-    let outcomes: Mutex<Vec<ChunkOutcome>> = Mutex::new(Vec::with_capacity(jobs.len()));
+    let n_expected = jobs.len();
+    let queue: JobQueue<ChunkJob> = JobQueue::new(cfg.queue_depth);
+    let pending: Mutex<std::vec::IntoIter<ChunkJob>> = Mutex::new(jobs.into_iter());
+    let outcomes: Mutex<Vec<ChunkOutcome>> = Mutex::new(Vec::with_capacity(n_expected));
     let fatal: Mutex<Option<ApHmmError>> = Mutex::new(None);
 
-    pool.scope(cfg.n_workers.max(1), |worker_id| loop {
-        if fatal.lock().unwrap().is_some() {
-            break;
-        }
-        let ji = next.fetch_add(1, Ordering::Relaxed);
-        if ji >= jobs.len() {
-            break;
-        }
-        let job = &jobs[ji];
+    // Execute one job on this participant and record its metrics.  On a
+    // fatal (device) error the queue is aborted so the producer stops
+    // admitting and the consumers drain out.
+    let run_job = |job: ChunkJob, worker_id: usize| {
         let t0 = Instant::now();
-        let result = run_one(job, cfg, xla_engine.as_ref(), worker_id, pool);
-        match result {
+        match run_one(&job, cfg, xla_engine.as_ref(), worker_id, pool) {
             Ok((outcome, timesteps, states, reads_skipped)) => {
                 metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
                 if reads_skipped > 0 {
@@ -176,11 +185,62 @@ pub fn run_jobs_in(
                     // Runtime (device) errors are fatal; numeric chunk
                     // failures are skipped.
                     *fatal.lock().unwrap() = Some(e);
-                    break;
+                    queue.abort();
                 }
             }
         }
+    };
+
+    // Participant 0 produces (streaming the job list through the
+    // bounded queue); the others consume until the queue reports
+    // exhaustion.  On a full queue the producer helps drain instead of
+    // blocking, so progress never depends on a helper actually joining
+    // (the pool enlists helpers opportunistically).
+    // Closes the queue when the producer slot unwinds: without it, a
+    // producer panic (e.g. a poisoned mutex after another participant
+    // panicked) would leave the queue open and the consumers blocked in
+    // `pop()` forever, deadlocking the scope teardown instead of
+    // propagating the panic.
+    struct CloseOnDrop<'a, T>(&'a JobQueue<T>);
+    impl<T> Drop for CloseOnDrop<'_, T> {
+        fn drop(&mut self) {
+            self.0.close();
+        }
+    }
+
+    pool.scope(cfg.n_workers.max(1) + 1, |slot| {
+        if slot == 0 {
+            let _close_guard = CloseOnDrop(&queue);
+            loop {
+                let next_job = pending.lock().unwrap().next();
+                let Some(mut item) = next_job else { break };
+                loop {
+                    match queue.try_push(item) {
+                        Ok(()) => break,
+                        Err(PushError::Busy(back)) => {
+                            item = back;
+                            if let Some(job) = queue.try_pop() {
+                                run_job(job, slot);
+                            }
+                        }
+                        // Fatal abort elsewhere: stop producing.
+                        Err(PushError::Closed(_)) => return,
+                    }
+                }
+            }
+            queue.close();
+            while let Some(job) = queue.pop() {
+                run_job(job, slot);
+            }
+        } else {
+            while let Some(job) = queue.pop() {
+                run_job(job, slot);
+            }
+        }
     });
+
+    let qs = queue.stats();
+    metrics.absorb_queue(qs.depth, qs.high_water, qs.producer_blocks);
 
     if let Some(e) = fatal.into_inner().unwrap() {
         return Err(e);
@@ -207,8 +267,7 @@ fn run_one(
     pool: &WorkerPool,
 ) -> Result<(ChunkOutcome, u64, u64, u64)> {
     let t0 = Instant::now();
-    let mut graph = Phmm::error_correction(&job.reference, &cfg.design)?;
-    let res = match cfg.train.engine {
+    let (decoded, res) = match cfg.train.engine {
         EngineKind::Xla => {
             let engine = xla.ok_or_else(|| {
                 ApHmmError::Coordinator("XLA engine requested but no device session".into())
@@ -216,16 +275,30 @@ fn run_one(
             // The device path runs a fixed iteration budget (matching
             // the accelerator's host schedule) instead of max_iters/tol.
             let xcfg = TrainConfig { max_iters: cfg.xla_iters.max(1), tol: 0.0, ..cfg.train };
-            train_with_engine(engine, &mut graph, &job.reads, &xcfg, pool)?
+            let mut graph = Phmm::error_correction(&job.reference, &cfg.design)?;
+            let res = train_with_engine(engine, &mut graph, &job.reads, &xcfg, pool)?;
+            (consensus(&graph)?.consensus, res)
         }
-        _ => train_in(&mut graph, &job.reads, &cfg.train, pool)?,
+        // Native engines go through the shared chunk primitive (also
+        // used by the batch corrector and the server's `Correct`
+        // requests).
+        _ => {
+            let out = train_chunk(
+                &job.reference,
+                &job.reads,
+                &cfg.design,
+                crate::seq::DNA,
+                &cfg.train,
+                pool,
+            )?;
+            (out.consensus, out.train)
+        }
     };
     let mean_loglik = res.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY);
-    let decoded = consensus(&graph)?;
     Ok((
         ChunkOutcome {
             id: job.id,
-            consensus: decoded.consensus,
+            consensus: decoded,
             mean_loglik,
             latency_ns: t0.elapsed().as_nanos() as u64,
             worker,
@@ -307,6 +380,28 @@ mod tests {
         let cfg = CoordinatorConfig { n_workers: 2, queue_depth: 1, ..Default::default() };
         let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
         assert_eq!(outcomes.len(), 20);
+        // The depth bound is real: never more than one job admitted
+        // ahead of the workers, and the (instant) producer must have
+        // been refused admission at least once by the (ms-scale)
+        // training jobs.
+        let s = metrics.summary(1.0);
+        assert!(s.queue_high_water <= 1, "high water {}", s.queue_high_water);
+        assert!(s.producer_blocks > 0, "queue_depth never exerted backpressure");
+        assert_eq!(s.queue_depth, 0, "queue must drain by completion");
+        assert!(s.latency_p50_ms > 0.0 && s.latency_p99_ms >= s.latency_p50_ms);
+    }
+
+    #[test]
+    fn generous_queue_never_blocks_the_producer() {
+        let mut rng = XorShift::new(59);
+        let jobs = make_jobs(&mut rng, 6, 40);
+        let metrics = Metrics::default();
+        let cfg = CoordinatorConfig { n_workers: 2, queue_depth: 64, ..Default::default() };
+        let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
+        assert_eq!(outcomes.len(), 6);
+        let s = metrics.summary(1.0);
+        assert_eq!(s.producer_blocks, 0);
+        assert!(s.queue_high_water <= 6);
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //!   three end-to-end applications (error correction, protein family
 //!   search, multiple sequence alignment), simulation substrates
 //!   (genomes, long reads, protein families), a minimizer read mapper,
-//!   a multi-threaded training coordinator, and the ApHMM accelerator
+//!   a multi-threaded training coordinator streaming its jobs through a
+//!   bounded queue, a multi-tenant [`server`] (persistent job queue +
+//!   cross-request cache of frozen coefficient tables + line protocol
+//!   over stdin/TCP), and the ApHMM accelerator
 //!   performance/energy/area model that regenerates every table and
 //!   figure of the paper.
 //! * **L2/L1 (python/, build time only)** — the banded Baum-Welch
@@ -45,6 +48,7 @@ pub mod phmm;
 pub mod pool;
 pub mod runtime;
 pub mod seq;
+pub mod server;
 pub mod sim;
 pub mod testutil;
 pub mod viterbi;

@@ -5,6 +5,7 @@
 //!   correct    Apollo-style assembly error correction
 //!   search     protein family search over a generated family database
 //!   align      hmmalign-style MSA against a family profile
+//!   serve      long-lived multi-tenant server (stdin or TCP protocol)
 //!   accel      query the accelerator model (cycles/energy/area)
 //!   runtime    list and smoke-run the AOT artifacts via PJRT
 //!
@@ -13,31 +14,38 @@
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::time::Instant;
 
 use aphmm::accel::{self, AccelConfig, Workload};
-use aphmm::apps::{self, CorrectionConfig, MsaConfig, SearchConfig};
-use aphmm::baumwelch::{
-    BandedEngine, EngineKind, ExpectationEngine, FilterConfig, ReferenceEngine, SparseEngine,
-};
+use aphmm::apps::{self, CorrectionConfig, MsaReport, SearchConfig};
+use aphmm::baumwelch::{EngineKind, FilterConfig, TrainConfig};
 use aphmm::config::Config;
 use aphmm::error::{ApHmmError, Result};
 use aphmm::io;
 use aphmm::phmm::{Phmm, Profile, TraditionalParams};
-use aphmm::seq::{DNA, PROTEIN};
+use aphmm::seq::{Alphabet, DNA, PROTEIN};
+use aphmm::server::{self, Request, ResponseBody, Server, ServerConfig, SessionEnd};
 use aphmm::sim::{self, XorShift};
 
-fn usage() -> &'static str {
-    "usage: aphmm <simulate|correct|search|align|accel|runtime> [--config FILE] [--set k=v ...]
+fn usage() -> String {
+    let engines = EngineKind::NAMES.join("|");
+    format!(
+        "usage: aphmm <simulate|correct|search|align|serve|accel|runtime> \
+[--config FILE] [--set k=v ...]
   simulate --out-dir DIR [--set sim.genome_len=N --set sim.coverage=X]
-  correct  --assembly A.fasta --reads R.fasta --out C.fasta [--engine sparse|banded|reference]
+  correct  --assembly A.fasta --reads R.fasta --out C.fasta [--engine {engines}]
   search   [--engine E] [--set search.n_families=N --set search.queries=N]
   align    [--engine E] [--set msa.n_seqs=N]
+  serve    [--port N] [--engine E] [--set serve.workers=N --set serve.queue_depth=N]
+           (no --port: newline-delimited protocol on stdin/stdout;
+            see rust/src/server/README.md for the request grammar)
   accel    [--set accel.pes=N --set accel.chunk=N]
   runtime  --artifacts DIR
 
-  --engine selects the Baum-Welch ExpectationEngine backend
-  (default: sparse for correct/search, banded for align; also settable
-  via --set <section>.engine=NAME)"
+  --engine selects the Baum-Welch ExpectationEngine backend, one of
+  {engines} (default: sparse for correct/search/serve, banded for
+  align; also settable via --set <section>.engine=NAME)"
+    )
 }
 
 /// Minimal argument parser: positional subcommand + `--flag value` pairs.
@@ -104,7 +112,8 @@ fn engine_from(
     };
     EngineKind::parse(&name).ok_or_else(|| {
         ApHmmError::Config(format!(
-            "unknown engine {name:?} (expected sparse | banded | reference | xla)"
+            "unknown engine {name:?} (expected {})",
+            EngineKind::NAMES.join(" | ")
         ))
     })
 }
@@ -178,49 +187,109 @@ fn cmd_correct(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build a [`ServerConfig`] from a config-file `section` (the serving
+/// entry point shared by `search`, `align`, and `serve`).
+fn server_config(
+    args: &Args,
+    cfg: &Config,
+    section: &str,
+    default_engine: EngineKind,
+    alphabet: Alphabet,
+) -> Result<ServerConfig> {
+    let engine = engine_from(args, cfg, section, default_engine)?;
+    if engine == EngineKind::Xla {
+        return Err(ApHmmError::Config(
+            "the XLA engine is device-backed; the server supports sparse | banded | reference"
+                .into(),
+        ));
+    }
+    let defaults = ServerConfig::default();
+    // Scoring stays exact unless a filter is explicitly configured
+    // (matches the search app's historical FilterConfig::None default).
+    let filter = match cfg.get(&format!("{section}.filter")) {
+        Some(_) => filter_from(cfg, section)?,
+        None => FilterConfig::None,
+    };
+    let train = TrainConfig {
+        max_iters: cfg.usize_or(&format!("{section}.max_iters"), 2)?,
+        n_workers: cfg.usize_or(&format!("{section}.estep_workers"), 1)?,
+        filter,
+        engine,
+        ..Default::default()
+    };
+    Ok(ServerConfig {
+        n_workers: cfg.usize_or(&format!("{section}.workers"), defaults.n_workers)?,
+        queue_depth: cfg.usize_or(&format!("{section}.queue_depth"), defaults.queue_depth)?,
+        cache_capacity: cfg
+            .usize_or(&format!("{section}.cache_capacity"), defaults.cache_capacity)?,
+        microbatch: cfg.usize_or(&format!("{section}.microbatch"), defaults.microbatch)?,
+        max_hits: cfg.usize_or(&format!("{section}.max_hits"), defaults.max_hits)?,
+        engine,
+        train,
+        alphabet,
+        ..defaults
+    })
+}
+
 fn cmd_search(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let seed = cfg.usize_or("search.seed", 7)? as u64;
     let n_families = cfg.usize_or("search.n_families", 64)?;
     let n_queries = cfg.usize_or("search.queries", 16)?;
-    let engine = engine_from(args, &cfg, "search", EngineKind::Sparse)?;
     let mut rng = XorShift::new(seed);
     let params = sim::ProteinSimParams { n_families, ..Default::default() };
     let families = sim::generate_families(&mut rng, &params);
     let search_cfg = SearchConfig::default();
-    match engine {
-        EngineKind::Sparse => run_search(SparseEngine, &families, n_queries, &search_cfg),
-        EngineKind::Banded => run_search(BandedEngine, &families, n_queries, &search_cfg),
-        EngineKind::Reference => run_search(ReferenceEngine, &families, n_queries, &search_cfg),
-        EngineKind::Xla => Err(ApHmmError::Config(
-            "the XLA engine is device-backed; search supports sparse | banded | reference".into(),
-        )),
-    }
-}
 
-/// The search loop, generic over the database's engine backend.
-fn run_search<E: ExpectationEngine>(
-    engine: E,
-    families: &[sim::ProteinFamily],
-    n_queries: usize,
-    search_cfg: &SearchConfig,
-) -> Result<()> {
-    let db = apps::FamilyDb::build_with(engine, families, PROTEIN, search_cfg)?;
+    // Route through the serving layer: one profile per family in the
+    // registry, every query a typed Search request through the bounded
+    // queue — repeated queries share the frozen coefficient tables via
+    // the cross-request cache.  The hmmsearch screening defaults are
+    // restored (k-mer pre-filter + posterior pass on top hits), and the
+    // cache is sized to hold every family: Search scans the registry in
+    // order, the LRU worst case for an undersized cache.
+    let mut scfg = server_config(args, &cfg, "search", EngineKind::Sparse, PROTEIN)?;
+    scfg.prefilter_k = search_cfg.prefilter_k;
+    scfg.prefilter_min_frac = search_cfg.prefilter_min_frac;
+    scfg.posterior_hits = search_cfg.posterior_hits;
+    scfg.cache_capacity = scfg.cache_capacity.max(n_families + 4);
+    let mut server = Server::start(scfg);
+    for fam in &families {
+        let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
+        let phmm =
+            Phmm::traditional(&profile, &search_cfg.params)?.fold_silent(search_cfg.fold_depth)?;
+        server.register_profile(&fam.id, phmm);
+    }
     let mut correct = 0usize;
     for q in 0..n_queries {
         let fam = &families[q % families.len()];
         let query = &fam.members[q % fam.members.len()];
-        let report = db.search(query, search_cfg)?;
-        let top = report.hits.first().map(|h| h.family.clone()).unwrap_or_default();
+        let resp = server.submit(None, Request::Search { read: query.clone() })?.wait();
+        let (top, scored) = match resp.body {
+            ResponseBody::Search { hits, scored } => {
+                (hits.first().map(|h| h.profile.clone()).unwrap_or_default(), scored)
+            }
+            ResponseBody::Error { message } => return Err(ApHmmError::Config(message)),
+            _ => unreachable!("search request answered with a non-search body"),
+        };
         if top == fam.id {
             correct += 1;
         }
         println!(
             "query {:<16} -> {:<10} (scored {}/{} families)",
-            query.id, top, report.scored, db.len()
+            query.id,
+            top,
+            scored,
+            server.registry().len()
         );
     }
     println!("top-1 accuracy: {correct}/{n_queries}");
+    let c = server.cache_stats();
+    println!(
+        "prepared cache: {} hits, {} misses, {} evictions (cross-request reuse)",
+        c.hits, c.misses, c.evictions
+    );
+    server.shutdown(true);
     Ok(())
 }
 
@@ -235,13 +304,47 @@ fn cmd_align(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let fam = sim::generate_families(&mut rng, &params).remove(0);
+
+    let mut report = MsaReport {
+        rows: Vec::new(),
+        n_columns: 0,
+        skipped: 0,
+        timings: Default::default(),
+    };
+    // Profile construction + registration is the non-Baum-Welch part of
+    // the split this command reports.
+    let t0 = Instant::now();
     let profile = Profile::from_members(&fam.members, fam.ancestor.len(), PROTEIN, 0.5);
     let phmm = Phmm::traditional(&profile, &TraditionalParams::default())?.fold_silent(4)?;
-    let msa_cfg = MsaConfig {
-        engine: engine_from(args, &cfg, "msa", EngineKind::Banded)?,
-        ..Default::default()
-    };
-    let report = apps::align_all(&phmm, &fam.members, &msa_cfg)?;
+    report.n_columns = apps::profile_columns(&phmm);
+
+    // Route through the serving layer: the family profile is
+    // registered once, each member is a typed Align request, and every
+    // decode after the first reuses the cached frozen tables.
+    let mut server = Server::start(server_config(args, &cfg, "msa", EngineKind::Banded, PROTEIN)?);
+    server.register_profile(&fam.id, phmm);
+    report.timings.other_ns += t0.elapsed().as_nanos();
+
+    let tickets: Vec<_> = fam
+        .members
+        .iter()
+        .map(|member| {
+            server.submit(None, Request::Align { profile: fam.id.clone(), read: member.clone() })
+        })
+        .collect::<Result<_>>()?;
+    for ticket in tickets {
+        let resp = ticket.wait();
+        let t1 = Instant::now();
+        match resp.body {
+            ResponseBody::Align { row, .. } => {
+                report.timings.forward_ns += resp.stats.forward_ns;
+                report.timings.backward_update_ns += resp.stats.backward_update_ns;
+                report.rows.push(row);
+            }
+            _ => report.skipped += 1,
+        }
+        report.timings.other_ns += t1.elapsed().as_nanos();
+    }
     println!(
         "aligned {}/{} sequences to {} columns; identity {:.1}%; BW fraction {:.1}%",
         report.rows.len(),
@@ -250,6 +353,34 @@ fn cmd_align(args: &Args) -> Result<()> {
         apps::msa_identity(&report) * 100.0,
         report.timings.bw_fraction() * 100.0
     );
+    let c = server.cache_stats();
+    println!("prepared cache: {} hits, {} misses", c.hits, c.misses);
+    server.shutdown(true);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let alphabet = Alphabet::by_name(&cfg.str_or("serve.alphabet", "dna"))?;
+    let scfg = server_config(args, &cfg, "serve", EngineKind::Sparse, alphabet)?;
+    let mut server = Server::start(scfg);
+    match args.get("port") {
+        Some(port) if !port.is_empty() => {
+            let port: u16 = port
+                .parse()
+                .map_err(|_| ApHmmError::Config(format!("invalid port {port:?}")))?;
+            eprintln!("aphmm serve: listening on 127.0.0.1:{port} (send `shutdown` to stop)");
+            server::serve_tcp(&server, port)?;
+        }
+        _ => {
+            let end = server::serve_stdio(&server)?;
+            if end == SessionEnd::Eof {
+                eprintln!("aphmm serve: stdin closed, draining");
+            }
+        }
+    }
+    server.shutdown(true);
+    eprintln!("aphmm serve: {}", server.stats_line());
     Ok(())
 }
 
@@ -323,10 +454,11 @@ fn main() -> ExitCode {
         "correct" => cmd_correct(&args),
         "search" => cmd_search(&args),
         "align" => cmd_align(&args),
+        "serve" => cmd_serve(&args),
         "accel" => cmd_accel(&args),
         "runtime" => cmd_runtime(&args),
-        _ => {
-            eprintln!("{}", usage());
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{}", usage());
             return ExitCode::from(2);
         }
     };

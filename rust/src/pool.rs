@@ -117,6 +117,16 @@ impl WorkerPool {
         })
     }
 
+    /// Weak probe on the pool's shared state.  Every helper thread (and
+    /// the pool itself) holds a strong reference, so the probe upgrades
+    /// exactly while any of them is alive: after the pool is dropped,
+    /// `upgrade()` returning `None` *proves* every helper thread exited
+    /// (the server shutdown test relies on this).
+    pub fn liveness(&self) -> std::sync::Weak<dyn std::any::Any + Send + Sync> {
+        let strong: Arc<dyn std::any::Any + Send + Sync> = Arc::clone(&self.shared) as _;
+        Arc::downgrade(&strong)
+    }
+
     /// Run `f(slot)` on the calling thread (slot 0) and up to
     /// `participants - 1` idle helpers (slots 1, 2, ...), returning when
     /// every participant has finished.  `f` must be self-scheduling
@@ -188,6 +198,16 @@ impl WorkerPool {
     }
 }
 
+/// Dropping a pool **drains, never aborts**: helpers that are inside a
+/// scope closure finish it (a scope cannot outlive its `scope()` call,
+/// which blocks until `running == 0`), idle helpers see the shutdown
+/// flag and exit, and `drop` joins every helper thread before
+/// returning.  There is no mechanism to kill a closure mid-flight — a
+/// caller that wants "abort" semantics must make its *work* stop early
+/// (the server does this by aborting its job queue, which turns every
+/// worker's next `pop()` into `None`), after which the pool drop is
+/// prompt.  Consequently no thread ever outlives the pool; see
+/// [`WorkerPool::liveness`] for the probe tests use to assert it.
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
@@ -321,5 +341,15 @@ mod tests {
     fn global_pool_exists() {
         let done = drain_counter(WorkerPool::global(), 2, 10);
         assert_eq!(done, 10);
+    }
+
+    #[test]
+    fn drop_joins_all_helpers() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(drain_counter(&pool, 4, 40), 40);
+        let probe = pool.liveness();
+        assert!(probe.upgrade().is_some(), "probe must be live while the pool is");
+        drop(pool);
+        assert!(probe.upgrade().is_none(), "helper threads leaked past drop");
     }
 }

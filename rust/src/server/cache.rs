@@ -1,0 +1,310 @@
+//! Cross-request cache of frozen per-profile coefficient tables.
+//!
+//! ApHMM's core insight (§4.2–4.3) is that pHMM coefficients are
+//! frozen for a whole EM iteration and therefore worth memoizing in
+//! on-chip memory.  A serving layer extends the same insight **across
+//! requests**: many clients scoring/aligning against the same profile
+//! should share one frozen [`PreparedAny`] instead of re-freezing per
+//! request.  [`PreparedCache`] is that share point — an LRU map from
+//! `(profile content hash, engine kind)` to `Arc<PreparedAny>` with
+//! hit/miss/evict counters, so the serving tests can *prove* the
+//! second request for a profile skipped the freeze.
+//!
+//! # Keying
+//!
+//! Entries are keyed by [`profile_hash`] — an FNV-1a digest of the
+//! full parameter content of the graph (design, alphabet, state kinds
+//! and positions, CSR structure, transition probabilities, emissions,
+//! initial distribution) — plus the [`EngineKind`] that froze the
+//! tables.  Content addressing means two tenants registering the same
+//! profile under different names share one entry, and any parameter
+//! change (retraining) produces a new key instead of serving stale
+//! coefficients.
+//!
+//! # Concurrency
+//!
+//! Lookups take a short mutex; freezing happens **outside** the lock so
+//! a slow freeze of one profile never blocks hits on others.  Two
+//! racing misses for the same key may both freeze; the first insert
+//! wins and the loser's table is dropped (counted as a miss each —
+//! `misses` counts freezes performed, `hits` counts freezes avoided).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::baumwelch::{EngineKind, PreparedAny};
+use crate::error::Result;
+use crate::phmm::{Phmm, PhmmDesign, StateKind};
+
+/// Cache key: profile content hash + the engine that froze the tables.
+pub type CacheKey = (u64, EngineKind);
+
+/// FNV-1a content hash of every parameter of `phmm`.  Stable across
+/// clones and re-registrations; changes whenever any probability,
+/// emission, or structural array changes.
+pub fn profile_hash(phmm: &Phmm) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn eat(h: &mut u64, byte: u8) {
+        *h ^= byte as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+    fn eat_u32(h: &mut u64, v: u32) {
+        for b in v.to_le_bytes() {
+            eat(h, b);
+        }
+    }
+    let mut h = FNV_OFFSET;
+    match phmm.design {
+        PhmmDesign::Traditional => eat(&mut h, 0),
+        PhmmDesign::TraditionalFolded => eat(&mut h, 1),
+        PhmmDesign::ErrorCorrection => eat(&mut h, 2),
+    }
+    for b in phmm.alphabet.name().bytes() {
+        eat(&mut h, b);
+    }
+    for k in &phmm.kinds {
+        eat(
+            &mut h,
+            match k {
+                StateKind::Match => 0,
+                StateKind::Insertion => 1,
+                StateKind::Deletion => 2,
+            },
+        );
+    }
+    for &p in &phmm.position {
+        eat_u32(&mut h, p);
+    }
+    for &p in &phmm.out_ptr {
+        eat_u32(&mut h, p);
+    }
+    for &t in &phmm.out_to {
+        eat_u32(&mut h, t);
+    }
+    for &p in &phmm.out_prob {
+        eat_u32(&mut h, p.to_bits());
+    }
+    for &e in &phmm.emissions {
+        eat_u32(&mut h, e.to_bits());
+    }
+    for &f in &phmm.f_init {
+        eat_u32(&mut h, f.to_bits());
+    }
+    h
+}
+
+/// Counter snapshot of the cache.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Lookups served from a cached entry (freeze skipped).
+    pub hits: u64,
+    /// Lookups that had to freeze (including both sides of a racing
+    /// double-freeze).
+    pub misses: u64,
+    /// Entries evicted by the LRU policy.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+struct LruState {
+    map: HashMap<CacheKey, Arc<PreparedAny>>,
+    /// Keys in recency order: least-recently-used at the front.
+    order: Vec<CacheKey>,
+}
+
+impl LruState {
+    fn touch(&mut self, key: CacheKey) {
+        if let Some(pos) = self.order.iter().position(|k| *k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push(key);
+    }
+}
+
+/// LRU cache of frozen per-profile coefficient tables.  See the module
+/// docs for keying and concurrency semantics.
+pub struct PreparedCache {
+    inner: Mutex<LruState>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PreparedCache {
+    /// A cache holding at most `capacity` frozen tables (clamped ≥ 1).
+    pub fn new(capacity: usize) -> PreparedCache {
+        PreparedCache {
+            inner: Mutex::new(LruState { map: HashMap::new(), order: Vec::new() }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fetch the frozen tables for (`hash`, `kind`), freezing from
+    /// `phmm` on a miss.  Returns the shared entry plus `true` when it
+    /// was served from cache.
+    pub fn get_or_freeze(
+        &self,
+        hash: u64,
+        kind: EngineKind,
+        phmm: &Phmm,
+    ) -> Result<(Arc<PreparedAny>, bool)> {
+        let key = (hash, kind);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(entry) = inner.map.get(&key).cloned() {
+                inner.touch(key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((entry, true));
+            }
+        }
+        // Freeze outside the lock: a slow freeze must not block hits on
+        // other profiles.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(PreparedAny::freeze(kind, phmm)?);
+        let mut inner = self.inner.lock().unwrap();
+        let entry = match inner.map.get(&key) {
+            // A racing freeze for the same key won the insert; share it
+            // and drop ours.
+            Some(existing) => Arc::clone(existing),
+            None => {
+                inner.map.insert(key, Arc::clone(&fresh));
+                fresh
+            }
+        };
+        inner.touch(key);
+        while inner.map.len() > self.capacity {
+            let victim = inner.order.remove(0);
+            inner.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((entry, false))
+    }
+
+    /// Drop every entry (used when a tenant re-registers profiles and
+    /// wants a cold cache; counters are preserved).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.order.clear();
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.inner.lock().unwrap().map.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::seq::Sequence;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn ec_graph(seed: u64, len: usize) -> Phmm {
+        let mut rng = XorShift::new(seed);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, len, 4));
+        Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap()
+    }
+
+    #[test]
+    fn hash_is_content_addressed() {
+        let a = ec_graph(1, 30);
+        let b = a.clone();
+        let c = ec_graph(2, 30);
+        assert_eq!(profile_hash(&a), profile_hash(&b), "clones must collide");
+        assert_ne!(profile_hash(&a), profile_hash(&c), "different content must differ");
+        // A single parameter nudge changes the key.
+        let mut d = a.clone();
+        d.out_prob[0] = (d.out_prob[0] * 0.5).max(1e-6);
+        assert_ne!(profile_hash(&a), profile_hash(&d));
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit() {
+        let g = ec_graph(3, 25);
+        let h = profile_hash(&g);
+        let cache = PreparedCache::new(4);
+        let (_, hit0) = cache.get_or_freeze(h, EngineKind::Sparse, &g).unwrap();
+        let (_, hit1) = cache.get_or_freeze(h, EngineKind::Sparse, &g).unwrap();
+        assert!(!hit0);
+        assert!(hit1);
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.entries, 1);
+        // The same profile under a different engine is its own entry.
+        let (_, hit2) = cache.get_or_freeze(h, EngineKind::Banded, &g).unwrap();
+        assert!(!hit2);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let g1 = ec_graph(4, 20);
+        let g2 = ec_graph(5, 20);
+        let g3 = ec_graph(6, 20);
+        let cache = PreparedCache::new(2);
+        cache.get_or_freeze(profile_hash(&g1), EngineKind::Sparse, &g1).unwrap();
+        cache.get_or_freeze(profile_hash(&g2), EngineKind::Sparse, &g2).unwrap();
+        // Touch g1 so g2 is the LRU victim.
+        cache.get_or_freeze(profile_hash(&g1), EngineKind::Sparse, &g1).unwrap();
+        cache.get_or_freeze(profile_hash(&g3), EngineKind::Sparse, &g3).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        // g1 survived (hit), g2 was evicted (miss re-freezes).
+        let (_, hit) = cache.get_or_freeze(profile_hash(&g1), EngineKind::Sparse, &g1).unwrap();
+        assert!(hit);
+        let (_, hit) = cache.get_or_freeze(profile_hash(&g2), EngineKind::Sparse, &g2).unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn xla_kind_is_rejected() {
+        let g = ec_graph(7, 20);
+        let cache = PreparedCache::new(2);
+        assert!(cache.get_or_freeze(profile_hash(&g), EngineKind::Xla, &g).is_err());
+    }
+
+    #[test]
+    fn cached_tables_score_identically_to_fresh_ones() {
+        use crate::baumwelch::ForwardOptions;
+        let g = ec_graph(8, 40);
+        let mut rng = XorShift::new(9);
+        let read = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 30, 4));
+        let cache = PreparedCache::new(2);
+        let h = profile_hash(&g);
+        for kind in [EngineKind::Sparse, EngineKind::Banded] {
+            let fresh = PreparedAny::freeze(kind, &g).unwrap();
+            let mut s1 = fresh.make_scratch(&g);
+            let a = fresh.score(&g, &read, &ForwardOptions::default(), &mut s1).unwrap();
+            let (cached, _) = cache.get_or_freeze(h, kind, &g).unwrap();
+            let (cached2, hit) = cache.get_or_freeze(h, kind, &g).unwrap();
+            assert!(hit);
+            assert!(Arc::ptr_eq(&cached, &cached2));
+            let mut s2 = cached2.make_scratch(&g);
+            let b = cached2.score(&g, &read, &ForwardOptions::default(), &mut s2).unwrap();
+            assert_eq!(a.loglik.to_bits(), b.loglik.to_bits(), "{kind:?}");
+        }
+    }
+}

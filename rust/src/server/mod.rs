@@ -1,0 +1,537 @@
+//! The streaming multi-tenant serving subsystem.
+//!
+//! This module turns the batch pipeline into a long-lived service (the
+//! ROADMAP's "production-scale system serving heavy traffic" north
+//! star):
+//!
+//! * [`queue`] — a bounded blocking MPMC job queue with real admission
+//!   control: producers block or get `Busy` when `queue_depth` jobs are
+//!   pending, so backpressure finally governs I/O-bound producers.  The
+//!   coordinator streams its chunk jobs through the same queue type —
+//!   one producer among many rather than a parallel code path.
+//! * [`cache`] — an LRU cache of frozen per-profile coefficient tables
+//!   ([`crate::baumwelch::PreparedAny`]) keyed by profile content hash,
+//!   with hit/miss/evict counters.  ApHMM memoizes frozen coefficients
+//!   per EM iteration (§4.2–4.3); the cache extends the same reuse
+//!   **across requests**: every client scoring against the same profile
+//!   shares one frozen table.
+//! * [`session`] — typed requests/responses, the multi-tenant profile
+//!   registry, and the newline-delimited wire protocol (stdin or TCP).
+//! * [`Server`] (here) — owns one [`WorkerPool`], drains the queue with
+//!   `n_workers` participants, micro-batches same-profile `Score`
+//!   requests for locality, and reports per-request
+//!   [`ReadStats`]/latency plus queue/cache/latency-histogram metrics
+//!   through [`crate::coordinator::Metrics`].
+//!
+//! # Shutdown: drain vs abort
+//!
+//! [`Server::shutdown`]`(drain = true)` closes the queue gracefully:
+//! admitted requests complete, then workers exit.  `drain = false`
+//! aborts: the backlog is discarded and every queued request receives
+//! an `Error` response.  Dropping a `Server` aborts — a drop mid-stream
+//! must not hang on an arbitrary backlog.  Both paths join the
+//! dispatcher and (via [`WorkerPool`]'s own drop) every helper thread:
+//! no threads outlive the server (asserted by
+//! `tests/server_integration.rs`).
+
+pub mod cache;
+pub mod queue;
+pub mod session;
+
+pub use cache::{profile_hash, CacheStats, PreparedCache};
+pub use queue::{JobQueue, PushError, QueueStats};
+pub use session::{
+    serve_connection, serve_stdio, serve_tcp, ProfileEntry, ProfileRegistry, RankedHit, Request,
+    Response, ResponseBody, SessionEnd,
+};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::baumwelch::{EngineKind, ReadStats, ScratchAny, TrainConfig};
+use crate::coordinator::{Metrics, MetricsSummary};
+use crate::error::{ApHmmError, Result};
+use crate::phmm::{EcDesignParams, Phmm};
+use crate::pool::WorkerPool;
+use crate::seq::Alphabet;
+
+use session::ExecCtx;
+
+/// Serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Queue-draining worker participants (the dispatcher thread plus
+    /// `n_workers - 1` pool helpers).
+    pub n_workers: usize,
+    /// Bounded queue depth: the admission-control backpressure bound.
+    pub queue_depth: usize,
+    /// Frozen-coefficient cache capacity (entries).
+    pub cache_capacity: usize,
+    /// Default engine for requests that don't name one.
+    pub engine: EngineKind,
+    /// Training parameters for `Correct` requests (`engine` is
+    /// overridden per request; `filter` also governs scoring).
+    pub train: TrainConfig,
+    /// EC design parameters for `Correct` requests and `register`ed
+    /// profiles.
+    pub design: EcDesignParams,
+    /// Maximum same-profile `Score` requests fused into one worker
+    /// turn (1 disables micro-batching).
+    pub microbatch: usize,
+    /// `Search` responses report at most this many hits.
+    pub max_hits: usize,
+    /// k-mer size of the `Search` pre-filter (k-mers are taken from
+    /// each profile's decoded consensus at registration time).
+    pub prefilter_k: usize,
+    /// Minimum shared-k-mer fraction for a profile to be forward-scored
+    /// by `Search` (0 disables the pre-filter and scores every
+    /// profile — the safe default; the `search` CLI sets the hmmsearch
+    /// screening default).
+    pub prefilter_min_frac: f64,
+    /// Run posterior decoding on this many top `Search` hits (the
+    /// hmmsearch domain post-processing stage; 0 disables it).
+    pub posterior_hits: usize,
+    /// Alphabet of the wire protocol's sequences.
+    pub alphabet: Alphabet,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_workers: 4,
+            queue_depth: 16,
+            cache_capacity: 64,
+            engine: EngineKind::Sparse,
+            train: TrainConfig { max_iters: 2, ..Default::default() },
+            design: EcDesignParams::default(),
+            microbatch: 8,
+            max_hits: 10,
+            prefilter_k: 3,
+            prefilter_min_frac: 0.0,
+            posterior_hits: 0,
+            alphabet: crate::seq::DNA,
+        }
+    }
+}
+
+/// One admitted request: the typed body plus its reply channel and
+/// admission timestamp (per-request latency is measured from here).
+struct Job {
+    id: u64,
+    engine: EngineKind,
+    body: Request,
+    reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+}
+
+/// Handle to one submitted request.
+pub struct Ticket {
+    /// Request id (echoed in the [`Response`]).
+    pub id: u64,
+    engine: EngineKind,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.  If the server aborted before
+    /// the request ran, a synthesized `Error` response is returned —
+    /// waiting never hangs.
+    pub fn wait(self) -> Response {
+        match self.rx.recv() {
+            Ok(resp) => resp,
+            Err(_) => Response {
+                id: self.id,
+                engine: self.engine,
+                latency_ns: 0,
+                stats: ReadStats::default(),
+                body: ResponseBody::Error {
+                    message: "request dropped: server aborted".into(),
+                },
+            },
+        }
+    }
+
+    /// Non-blocking poll; `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+}
+
+struct Shared {
+    cfg: ServerConfig,
+    queue: JobQueue<Job>,
+    registry: ProfileRegistry,
+    cache: PreparedCache,
+    pool: WorkerPool,
+    metrics: Metrics,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+/// A long-lived multi-tenant server: one shared [`WorkerPool`], one
+/// bounded [`JobQueue`], one cross-request [`PreparedCache`].  See the
+/// module docs for the execution model and shutdown semantics.
+pub struct Server {
+    shared: Arc<Shared>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the server: spawns the dispatcher thread, which fans out
+    /// over `cfg.n_workers` pool participants draining the queue.
+    pub fn start(cfg: ServerConfig) -> Server {
+        let workers = cfg.n_workers.max(1);
+        let estep = cfg.train.n_workers.max(1);
+        // The dispatcher occupies participant slot 0; helpers cover the
+        // other worker slots plus each worker's E-step fan-out.
+        let helpers = (workers - 1) + workers * (estep - 1);
+        let shared = Arc::new(Shared {
+            queue: JobQueue::new(cfg.queue_depth),
+            registry: ProfileRegistry::default(),
+            cache: PreparedCache::new(cfg.cache_capacity),
+            pool: WorkerPool::new(helpers),
+            metrics: Metrics::default(),
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+            cfg,
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let s: &Shared = &shared;
+                s.pool.scope(s.cfg.n_workers.max(1), |_slot| worker_loop(s));
+            })
+        };
+        Server { shared, dispatcher: Some(dispatcher) }
+    }
+
+    /// The configuration the server was started with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.shared.cfg
+    }
+
+    /// Register (or replace) a named profile; returns its content hash.
+    /// For `Search`-heavy workloads size `cache_capacity` at or above
+    /// the number of registered profiles: `Search` scans every profile
+    /// in registration order, which is the LRU worst case when the
+    /// cache is smaller than the registry (every lookup evicts the
+    /// next-needed entry).
+    pub fn register_profile(&self, name: &str, phmm: Phmm) -> u64 {
+        self.shared.registry.register(name, phmm, self.shared.cfg.prefilter_k)
+    }
+
+    /// The profile registry (shared by every session).
+    pub fn registry(&self) -> &ProfileRegistry {
+        &self.shared.registry
+    }
+
+    fn make_job(&self, engine: Option<EngineKind>, body: Request) -> (Job, Ticket) {
+        let engine = engine.unwrap_or(self.shared.cfg.engine);
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        (
+            Job { id, engine, body, reply: tx, enqueued: Instant::now() },
+            Ticket { id, engine, rx },
+        )
+    }
+
+    /// Submit a request, **blocking while the queue is full** (the
+    /// admission-control path for streaming clients).  Fails only once
+    /// the server is shut down.
+    pub fn submit(&self, engine: Option<EngineKind>, body: Request) -> Result<Ticket> {
+        let (job, ticket) = self.make_job(engine, body);
+        self.shared.queue.push(job).map_err(|job| {
+            ApHmmError::Coordinator(format!(
+                "server is shut down: {} request refused",
+                job.body.kind_name()
+            ))
+        })?;
+        Ok(ticket)
+    }
+
+    /// Submit without blocking: [`PushError::Busy`] hands the request
+    /// back when the queue is at `queue_depth` (the caller may retry,
+    /// shed load, or block on [`Server::submit`]).
+    pub fn try_submit(
+        &self,
+        engine: Option<EngineKind>,
+        body: Request,
+    ) -> std::result::Result<Ticket, PushError<Request>> {
+        let (job, ticket) = self.make_job(engine, body);
+        match self.shared.queue.try_push(job) {
+            Ok(()) => Ok(ticket),
+            Err(PushError::Busy(job)) => Err(PushError::Busy(job.body)),
+            Err(PushError::Closed(job)) => Err(PushError::Closed(job.body)),
+        }
+    }
+
+    /// Queue gauges (depth, high-water, producer blocks, totals).
+    pub fn queue_stats(&self) -> QueueStats {
+        self.shared.queue.stats()
+    }
+
+    /// Cross-request cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.stats()
+    }
+
+    /// Metrics snapshot over the server's lifetime so far (queue gauges
+    /// folded in).
+    pub fn metrics_summary(&self) -> MetricsSummary {
+        let qs = self.shared.queue.stats();
+        self.shared.metrics.absorb_queue(qs.depth, qs.high_water, qs.producer_blocks);
+        self.shared.metrics.summary(self.shared.started.elapsed().as_secs_f64())
+    }
+
+    /// One-line `stats` response for the wire protocol.
+    pub fn stats_line(&self) -> String {
+        let m = self.metrics_summary();
+        let c = self.cache_stats();
+        format!(
+            "stats jobs_done={} jobs_failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
+             queue_high_water={} producer_blocks={} cache_hits={} cache_misses={} \
+             cache_evictions={} profiles={}",
+            m.jobs_done,
+            m.jobs_failed,
+            m.latency_p50_ms,
+            m.latency_p99_ms,
+            m.queue_depth,
+            m.queue_high_water,
+            m.producer_blocks,
+            c.hits,
+            c.misses,
+            c.evictions,
+            self.shared.registry.len(),
+        )
+    }
+
+    /// Weak probe on the pool's shared state: upgradeable only while
+    /// the pool or one of its helper threads is alive.  Tests use it to
+    /// prove no thread leaks after the server is dropped.
+    pub fn pool_liveness(&self) -> std::sync::Weak<dyn std::any::Any + Send + Sync> {
+        self.shared.pool.liveness()
+    }
+
+    /// Stop the server.  `drain = true`: complete every admitted
+    /// request, then stop (graceful).  `drain = false`: discard the
+    /// backlog, sending each queued request an `Error` response
+    /// (abort).  Idempotent; joins the dispatcher either way.
+    pub fn shutdown(&mut self, drain: bool) {
+        if drain {
+            self.shared.queue.close();
+        } else {
+            for job in self.shared.queue.abort() {
+                let _ = job.reply.send(Response {
+                    id: job.id,
+                    engine: job.engine,
+                    latency_ns: job.enqueued.elapsed().as_nanos() as u64,
+                    stats: ReadStats::default(),
+                    body: ResponseBody::Error {
+                        message: "request aborted: server shutting down".into(),
+                    },
+                });
+            }
+        }
+        if let Some(handle) = self.dispatcher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    /// Dropping aborts (see the module docs): a drop mid-stream must
+    /// not hang on an arbitrary backlog.  Call
+    /// [`Server::shutdown`]`(true)` first for a graceful drain.
+    fn drop(&mut self) {
+        self.shutdown(false);
+    }
+}
+
+/// One queue-draining participant: pop, micro-batch compatible `Score`
+/// requests, execute, respond, repeat until the queue reports
+/// exhaustion.
+fn worker_loop(shared: &Shared) {
+    let mut scratch = ScratchAny::None;
+    while let Some(job) = shared.queue.pop() {
+        if let Request::Score { profile, .. } = &job.body {
+            // Micro-batch: pull further Score requests for the same
+            // (profile, engine) so they run back-to-back through one
+            // frozen table and a warm scratch, instead of interleaving
+            // with unrelated profiles across workers.
+            let name = profile.clone();
+            let engine = job.engine;
+            let mut batch = vec![job];
+            while batch.len() < shared.cfg.microbatch.max(1) {
+                let more = shared.queue.try_pop_where(|j| {
+                    j.engine == engine
+                        && matches!(&j.body, Request::Score { profile: p, .. } if *p == name)
+                });
+                match more {
+                    Some(j) => batch.push(j),
+                    None => break,
+                }
+            }
+            for j in batch {
+                process_one(shared, j, &mut scratch);
+            }
+        } else {
+            process_one(shared, job, &mut scratch);
+        }
+    }
+}
+
+fn process_one(shared: &Shared, job: Job, scratch: &mut ScratchAny) {
+    let ctx = ExecCtx {
+        registry: &shared.registry,
+        cache: &shared.cache,
+        pool: &shared.pool,
+        cfg: &shared.cfg,
+    };
+    let (body, stats) = match session::execute(&ctx, job.engine, &job.body, scratch) {
+        Ok(done) => done,
+        Err(e) => {
+            shared.metrics.record_failure();
+            (ResponseBody::Error { message: e.to_string() }, ReadStats::default())
+        }
+    };
+    let latency_ns = job.enqueued.elapsed().as_nanos() as u64;
+    if !matches!(body, ResponseBody::Error { .. }) {
+        shared.metrics.record(latency_ns, stats.timesteps, stats.states_processed);
+    }
+    // A dropped ticket just means the client stopped waiting.
+    let _ = job.reply.send(Response {
+        id: job.id,
+        engine: job.engine,
+        latency_ns,
+        stats,
+        body,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seq::Sequence;
+    use crate::sim::{simulate_read, ErrorProfile, XorShift};
+    use crate::testutil;
+
+    fn dna(rng: &mut XorShift, len: usize) -> Sequence {
+        Sequence::from_symbols("s", testutil::random_seq(rng, len, 4))
+    }
+
+    #[test]
+    fn score_round_trip_hits_the_cache_second_time() {
+        let mut rng = XorShift::new(71);
+        let reference = dna(&mut rng, 60);
+        let read = simulate_read(&mut rng, &reference, 0, 60, &ErrorProfile::pacbio(), 0).seq;
+        let mut server = Server::start(ServerConfig::default());
+        let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        server.register_profile("chr1", phmm);
+
+        let r1 = server
+            .submit(None, Request::Score { profile: "chr1".into(), read: read.clone() })
+            .unwrap()
+            .wait();
+        let r2 = server
+            .submit(None, Request::Score { profile: "chr1".into(), read })
+            .unwrap()
+            .wait();
+        let (ll1, hit1) = match r1.body {
+            ResponseBody::Score { loglik, cache_hit, .. } => (loglik, cache_hit),
+            other => panic!("unexpected response {other:?}"),
+        };
+        let (ll2, hit2) = match r2.body {
+            ResponseBody::Score { loglik, cache_hit, .. } => (loglik, cache_hit),
+            other => panic!("unexpected response {other:?}"),
+        };
+        assert_eq!(ll1.to_bits(), ll2.to_bits());
+        assert!(!hit1, "first request must freeze");
+        assert!(hit2, "second request must reuse the frozen tables");
+        let c = server.cache_stats();
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits, 1);
+        assert!(r1.latency_ns > 0);
+        server.shutdown(true);
+    }
+
+    #[test]
+    fn unknown_profile_is_an_error_response_not_a_crash() {
+        let mut rng = XorShift::new(72);
+        let read = dna(&mut rng, 20);
+        let mut server = Server::start(ServerConfig::default());
+        let resp = server
+            .submit(None, Request::Score { profile: "nope".into(), read })
+            .unwrap()
+            .wait();
+        assert!(matches!(resp.body, ResponseBody::Error { .. }));
+        assert_eq!(server.metrics_summary().jobs_failed, 1);
+        server.shutdown(true);
+        // The server still answers nothing after shutdown.
+        assert!(server
+            .submit(None, Request::Search { read: dna(&mut rng, 10) })
+            .is_err());
+    }
+
+    #[test]
+    fn graceful_shutdown_completes_admitted_requests() {
+        let mut rng = XorShift::new(73);
+        let reference = dna(&mut rng, 50);
+        let reads: Vec<_> = (0..4)
+            .map(|i| simulate_read(&mut rng, &reference, 0, 50, &ErrorProfile::pacbio(), i).seq)
+            .collect();
+        let mut server = Server::start(ServerConfig {
+            n_workers: 2,
+            queue_depth: 8,
+            ..Default::default()
+        });
+        let tickets: Vec<_> = (0..6)
+            .map(|_| {
+                server
+                    .submit(
+                        None,
+                        Request::Correct {
+                            reference: reference.clone(),
+                            reads: reads.clone(),
+                        },
+                    )
+                    .unwrap()
+            })
+            .collect();
+        server.shutdown(true);
+        for t in tickets {
+            let resp = t.wait();
+            match resp.body {
+                ResponseBody::Correct { consensus, .. } => assert!(!consensus.is_empty()),
+                other => panic!("drain lost a request: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn search_ranks_registered_profiles() {
+        let mut rng = XorShift::new(74);
+        let a = dna(&mut rng, 60);
+        let b = dna(&mut rng, 60);
+        let mut server = Server::start(ServerConfig::default());
+        server.register_profile(
+            "a",
+            Phmm::error_correction(&a, &EcDesignParams::default()).unwrap(),
+        );
+        server.register_profile(
+            "b",
+            Phmm::error_correction(&b, &EcDesignParams::default()).unwrap(),
+        );
+        let query = simulate_read(&mut rng, &a, 0, 60, &ErrorProfile::pacbio(), 0).seq;
+        let resp = server.submit(None, Request::Search { read: query }).unwrap().wait();
+        match resp.body {
+            ResponseBody::Search { hits, scored } => {
+                assert_eq!(scored, 2);
+                assert_eq!(hits[0].profile, "a", "query from profile a must rank a first");
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        server.shutdown(true);
+    }
+}

@@ -1,0 +1,413 @@
+//! A bounded, blocking MPMC job queue with real admission control.
+//!
+//! This is the "persistent leader/streaming job queue" the ROADMAP
+//! perf log called for: before it, `CoordinatorConfig::queue_depth`
+//! was documentation-only because jobs were drained from an in-memory
+//! `Vec` through a shared cursor.  [`JobQueue`] makes the depth a real
+//! backpressure bound — producers either block ([`JobQueue::push`]) or
+//! get [`PushError::Busy`] back ([`JobQueue::try_push`]) when the queue
+//! is full, so an I/O-bound producer can never race arbitrarily far
+//! ahead of the compute workers.
+//!
+//! # Lifecycle
+//!
+//! A queue is open until [`JobQueue::close`] (graceful drain: no new
+//! pushes are admitted, consumers keep popping until the backlog is
+//! empty, then [`JobQueue::pop`] returns `None`) or [`JobQueue::abort`]
+//! (close **and** discard the backlog, returning the unprocessed items
+//! to the caller so it can fail them explicitly).  Both are idempotent.
+//!
+//! # Instrumentation
+//!
+//! The queue tracks its own gauges — current depth, high-water mark,
+//! producer block/busy events, totals — snapshotted by
+//! [`JobQueue::stats`].  The coordinator and the server fold these into
+//! [`crate::coordinator::Metrics`] so `MetricsSummary` finally shows
+//! whether `queue_depth` is actually exerting backpressure.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking push was refused.  The item is handed back so the
+/// producer can retry, run it in-line, or drop it deliberately.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at `depth`: admission control says try again later
+    /// (or help drain).
+    Busy(T),
+    /// The queue was closed or aborted: no further work is admitted.
+    Closed(T),
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Monotonic counters shared by all queue handles (lock-free reads).
+#[derive(Debug, Default)]
+struct QueueCounters {
+    high_water: AtomicU64,
+    producer_blocks: AtomicU64,
+    pushed: AtomicU64,
+    popped: AtomicU64,
+}
+
+/// Point-in-time view of the queue gauges.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    /// Items currently queued (admitted, not yet popped).
+    pub depth: u64,
+    /// Maximum depth ever observed.
+    pub high_water: u64,
+    /// Times a producer was refused admission (blocking pushes that had
+    /// to wait, plus `try_push` calls that returned [`PushError::Busy`]).
+    pub producer_blocks: u64,
+    /// Items admitted over the queue's lifetime.
+    pub pushed: u64,
+    /// Items handed to consumers over the queue's lifetime.
+    pub popped: u64,
+}
+
+/// A bounded blocking MPMC queue.  See the module docs for the
+/// lifecycle and backpressure semantics.
+pub struct JobQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    depth: usize,
+    counters: QueueCounters,
+}
+
+impl<T> JobQueue<T> {
+    /// A queue admitting at most `depth` items (clamped to ≥ 1).
+    pub fn new(depth: usize) -> JobQueue<T> {
+        JobQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            depth: depth.max(1),
+            counters: QueueCounters::default(),
+        }
+    }
+
+    /// Configured capacity bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once [`JobQueue::close`] or [`JobQueue::abort`] has run.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    fn admitted(&self, new_len: usize) {
+        self.counters.pushed.fetch_add(1, Ordering::Relaxed);
+        self.counters.high_water.fetch_max(new_len as u64, Ordering::Relaxed);
+    }
+
+    /// Admit `item`, returning `Err(item)` if the queue is closed.
+    /// **Blocks while the queue is full** — this is the admission
+    /// control path for producers that may safely sleep (e.g. a socket
+    /// reader).  Producers that must stay deadlock-free under a shared
+    /// worker pool should use [`JobQueue::try_push`] and help drain on
+    /// [`PushError::Busy`] instead.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut counted_block = false;
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            if inner.items.len() < self.depth {
+                inner.items.push_back(item);
+                self.admitted(inner.items.len());
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            if !counted_block {
+                self.counters.producer_blocks.fetch_add(1, Ordering::Relaxed);
+                counted_block = true;
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Admit `item` without blocking: [`PushError::Busy`] when full,
+    /// [`PushError::Closed`] after close/abort.  A `Busy` refusal counts
+    /// as one producer block in the stats.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.depth {
+            self.counters.producer_blocks.fetch_add(1, Ordering::Relaxed);
+            return Err(PushError::Busy(item));
+        }
+        inner.items.push_back(item);
+        self.admitted(inner.items.len());
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Take the oldest item, blocking while the queue is open but
+    /// empty.  Returns `None` once the queue is closed **and** drained
+    /// — the consumer's termination signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                self.counters.popped.fetch_add(1, Ordering::Relaxed);
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Take the oldest item without blocking (`None` when empty,
+    /// whether or not the queue is closed).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let item = inner.items.pop_front()?;
+        self.counters.popped.fetch_add(1, Ordering::Relaxed);
+        drop(inner);
+        self.not_full.notify_one();
+        Some(item)
+    }
+
+    /// Remove and return the **first queued item matching `pred`**,
+    /// without blocking.  This is the micro-batching hook: a worker
+    /// that popped a small request can opportunistically pull further
+    /// compatible requests (same profile, same engine) and run them
+    /// through one frozen coefficient table.
+    pub fn try_pop_where<P: FnMut(&T) -> bool>(&self, mut pred: P) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let pos = inner.items.iter().position(&mut pred)?;
+        let item = inner.items.remove(pos)?;
+        self.counters.popped.fetch_add(1, Ordering::Relaxed);
+        drop(inner);
+        self.not_full.notify_one();
+        Some(item)
+    }
+
+    /// Graceful drain: refuse new work, let consumers empty the
+    /// backlog, then report exhaustion (`pop` → `None`).  Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Close **and discard** the backlog, returning the unprocessed
+    /// items so the caller can fail them explicitly (the server sends
+    /// an `aborted` response for each).  Idempotent; a second call
+    /// returns an empty vec.
+    pub fn abort(&self) -> Vec<T> {
+        let dropped: Vec<T> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.closed = true;
+            inner.items.drain(..).collect()
+        };
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+        dropped
+    }
+
+    /// Snapshot the gauges.
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            depth: self.len() as u64,
+            high_water: self.counters.high_water.load(Ordering::Relaxed),
+            producer_blocks: self.counters.producer_blocks.load(Ordering::Relaxed),
+            pushed: self.counters.pushed.load(Ordering::Relaxed),
+            popped: self.counters.popped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let q = JobQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        let s = q.stats();
+        assert_eq!(s.pushed, 4);
+        assert_eq!(s.popped, 4);
+        assert_eq!(s.high_water, 4);
+        assert_eq!(s.producer_blocks, 0);
+    }
+
+    #[test]
+    fn try_push_refuses_when_full_and_counts_blocks() {
+        let q = JobQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Busy(3)) => {}
+            other => panic!("expected Busy(3), got {other:?}"),
+        }
+        assert_eq!(q.stats().producer_blocks, 1);
+        // Draining one item re-admits.
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(JobQueue::new(1));
+        q.push(0usize).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 1..=20usize {
+                    q.push(i).unwrap();
+                }
+            })
+        };
+        let mut seen = Vec::new();
+        for _ in 0..=20 {
+            seen.push(q.pop().unwrap());
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..=20).collect::<Vec<_>>());
+        let s = q.stats();
+        assert!(s.high_water <= 1, "depth bound violated: {}", s.high_water);
+        assert!(s.producer_blocks > 0, "producer never blocked");
+    }
+
+    #[test]
+    fn close_drains_then_signals_exhaustion() {
+        let q = JobQueue::new(8);
+        q.push('a').unwrap();
+        q.push('b').unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.push('c').is_err());
+        assert!(matches!(q.try_push('c'), Err(PushError::Closed('c'))));
+        assert_eq!(q.pop(), Some('a'));
+        assert_eq!(q.pop(), Some('b'));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None); // idempotent exhaustion
+    }
+
+    #[test]
+    fn abort_returns_the_backlog() {
+        let q = JobQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.try_pop(), Some(0));
+        let dropped = q.abort();
+        assert_eq!(dropped, vec![1, 2, 3, 4]);
+        assert_eq!(q.pop(), None);
+        assert!(q.abort().is_empty());
+    }
+
+    #[test]
+    fn close_unblocks_waiting_consumers() {
+        let q = Arc::new(JobQueue::<u32>::new(2));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut n = 0usize;
+                    while q.pop().is_some() {
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn try_pop_where_picks_matching_item() {
+        let q = JobQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.try_pop_where(|&i| i % 2 == 1), Some(1));
+        assert_eq!(q.try_pop_where(|&i| i % 2 == 1), Some(3));
+        assert_eq!(q.try_pop_where(|&i| i > 10), None);
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+    }
+
+    #[test]
+    fn mpmc_under_contention_delivers_every_item_once() {
+        let q = Arc::new(JobQueue::new(4));
+        let delivered = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let delivered = Arc::clone(&delivered);
+                std::thread::spawn(move || {
+                    while q.pop().is_some() {
+                        delivered.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(delivered.load(Ordering::Relaxed), 200);
+        let s = q.stats();
+        assert_eq!(s.pushed, 200);
+        assert_eq!(s.popped, 200);
+        assert!(s.high_water <= 4);
+    }
+}

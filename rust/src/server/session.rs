@@ -1,0 +1,649 @@
+//! Typed requests/responses, the multi-tenant profile registry, and
+//! the newline-delimited wire protocol of the serving layer.
+//!
+//! # Request model
+//!
+//! A tenant registers named profiles ([`ProfileRegistry`]) and then
+//! submits typed requests against them: [`Request::Score`] (forward
+//! log-likelihood, the hmmsearch inner loop), [`Request::Align`]
+//! (posterior best-state decode mapped onto profile columns, the
+//! hmmalign rule), [`Request::Search`] (score against every registered
+//! profile, ranked by length-normalized log-odds), and
+//! [`Request::Correct`] (build + Baum-Welch-train + decode one EC
+//! chunk, the Apollo primitive).  Each request is tagged with an
+//! [`EngineKind`]; the read-only requests flow through the
+//! cross-request [`PreparedCache`](super::PreparedCache), so repeated
+//! requests against one profile share a single frozen coefficient
+//! table.
+//!
+//! # Wire protocol
+//!
+//! One request per line, one response line per request, in request
+//! order (see `server/README.md` for the full grammar):
+//!
+//! ```text
+//! register <name> <sequence>
+//! score <profile> <read> [engine]
+//! align <profile> <read> [engine]
+//! search <read> [engine]
+//! correct <reference> <read1,read2,...> [engine]
+//! stats | quit | shutdown
+//! ```
+//!
+//! [`serve_stdio`] speaks it over stdin/stdout; [`serve_tcp`] accepts
+//! concurrent connections on a local port (std threads only — `tokio`
+//! is not in the offline registry, matching the coordinator's stance).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::apps::{self, AlignedRow};
+use crate::baumwelch::{EngineKind, ForwardOptions, ReadStats, ScratchAny};
+use crate::error::{ApHmmError, Result};
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+use super::cache::profile_hash;
+use super::{Server, ServerConfig};
+
+/// A typed request against the serving layer.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Forward log-likelihood of `read` under a registered profile.
+    Score {
+        /// Registered profile name.
+        profile: String,
+        /// Read to score.
+        read: Sequence,
+    },
+    /// Posterior best-state alignment of `read` to a registered
+    /// profile (hmmalign).
+    Align {
+        /// Registered profile name.
+        profile: String,
+        /// Read to align.
+        read: Sequence,
+    },
+    /// Score `read` against every registered profile, ranked by
+    /// length-normalized log-odds (hmmsearch).
+    Search {
+        /// Query read.
+        read: Sequence,
+    },
+    /// Build an EC-design pHMM for `reference`, train it on `reads`,
+    /// and decode the corrected consensus (Apollo).
+    Correct {
+        /// Chunk reference sequence.
+        reference: Sequence,
+        /// Read segments mapped to the chunk.
+        reads: Vec<Sequence>,
+    },
+}
+
+impl Request {
+    /// Request kind, for logs and the usage line.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Request::Score { .. } => "score",
+            Request::Align { .. } => "align",
+            Request::Search { .. } => "search",
+            Request::Correct { .. } => "correct",
+        }
+    }
+}
+
+/// One ranked hit of a [`Request::Search`].
+#[derive(Clone, Debug)]
+pub struct RankedHit {
+    /// Registered profile name.
+    pub profile: String,
+    /// Length-normalized log-odds score.
+    pub log_odds: f64,
+}
+
+/// Typed response payload.
+#[derive(Clone, Debug)]
+pub enum ResponseBody {
+    /// Answer to [`Request::Score`].
+    Score {
+        /// Profile the read was scored against.
+        profile: String,
+        /// `log P(read | profile)`.
+        loglik: f64,
+        /// Length-normalized log-odds vs the uniform null model.
+        log_odds: f64,
+        /// True when the frozen coefficient tables came from the
+        /// cross-request cache (no re-freeze).
+        cache_hit: bool,
+    },
+    /// Answer to [`Request::Align`].
+    Align {
+        /// Profile the read was aligned to.
+        profile: String,
+        /// Aligned row (columns + insertion count + loglik).
+        row: AlignedRow,
+    },
+    /// Answer to [`Request::Search`].
+    Search {
+        /// Ranked hits, best first.
+        hits: Vec<RankedHit>,
+        /// Profiles scored.
+        scored: usize,
+    },
+    /// Answer to [`Request::Correct`].
+    Correct {
+        /// Decoded consensus of the trained chunk graph.
+        consensus: Sequence,
+        /// Mean per-read log-likelihood after training.
+        mean_loglik: f64,
+        /// EM iterations run.
+        iters: usize,
+    },
+    /// The request failed; the queue and the other tenants are
+    /// unaffected.
+    Error {
+        /// Human-readable failure description.
+        message: String,
+    },
+}
+
+/// A completed request: payload plus uniform per-request
+/// instrumentation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id assigned at submission.
+    pub id: u64,
+    /// Engine that served the request.
+    pub engine: EngineKind,
+    /// Wall latency from admission to completion (ns).
+    pub latency_ns: u64,
+    /// Engine instrumentation (timings, workload counters).
+    pub stats: ReadStats,
+    /// Payload.
+    pub body: ResponseBody,
+}
+
+/// A registered profile: the graph plus its content hash (the cache
+/// key component) and the pre-filter k-mer set of its decoded
+/// consensus.
+pub struct ProfileEntry {
+    /// Tenant-chosen name.
+    pub name: String,
+    /// The profile graph.
+    pub phmm: Phmm,
+    /// Content hash (see [`profile_hash`]).
+    pub hash: u64,
+    /// k-mers of the profile's Viterbi consensus (the `Search`
+    /// pre-filter screen); empty when the graph has no decodable
+    /// consensus, in which case the profile is always forward-scored.
+    kmers: std::collections::HashSet<u64>,
+}
+
+/// Named profiles shared by every session of a server.  Registration
+/// order is preserved so `Search` responses are deterministic.
+#[derive(Default)]
+pub struct ProfileRegistry {
+    entries: RwLock<Vec<Arc<ProfileEntry>>>,
+}
+
+impl ProfileRegistry {
+    /// Register (or replace) `name`, returning the profile content
+    /// hash.  Replacing keeps the original registration order slot.
+    /// `prefilter_k` sizes the consensus k-mer set used by the `Search`
+    /// pre-filter.
+    pub fn register(&self, name: &str, phmm: Phmm, prefilter_k: usize) -> u64 {
+        let hash = profile_hash(&phmm);
+        // Silent-state graphs have no decodable consensus: leave the
+        // set empty so the profile is never screened out.
+        let kmers = crate::viterbi::consensus(&phmm)
+            .map(|c| apps::kmer_set(&c.consensus.data, prefilter_k, phmm.sigma()))
+            .unwrap_or_default();
+        let entry = Arc::new(ProfileEntry { name: name.to_string(), phmm, hash, kmers });
+        let mut entries = self.entries.write().unwrap();
+        match entries.iter_mut().find(|e| e.name == name) {
+            Some(slot) => *slot = entry,
+            None => entries.push(entry),
+        }
+        hash
+    }
+
+    /// Look up a profile by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ProfileEntry>> {
+        self.entries.read().unwrap().iter().find(|e| e.name == name).cloned()
+    }
+
+    /// All profiles, in registration order.
+    pub fn all(&self) -> Vec<Arc<ProfileEntry>> {
+        self.entries.read().unwrap().clone()
+    }
+
+    /// Number of registered profiles.
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    /// True when no profile is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Everything a worker needs to execute one request.
+pub(crate) struct ExecCtx<'a> {
+    pub registry: &'a ProfileRegistry,
+    pub cache: &'a super::PreparedCache,
+    pub pool: &'a crate::pool::WorkerPool,
+    pub cfg: &'a ServerConfig,
+}
+
+impl ExecCtx<'_> {
+    fn resolve(&self, name: &str) -> Result<Arc<ProfileEntry>> {
+        self.registry.get(name).ok_or_else(|| {
+            ApHmmError::Config(format!("unknown profile {name:?} (register it first)"))
+        })
+    }
+
+    fn opts(&self) -> ForwardOptions {
+        ForwardOptions { filter: self.cfg.train.filter }
+    }
+}
+
+/// Execute one request on the calling worker.  Read-only requests pull
+/// their frozen coefficient tables from the cross-request cache;
+/// `Correct` trains through the shared worker pool.
+pub(crate) fn execute(
+    ctx: &ExecCtx<'_>,
+    engine: EngineKind,
+    req: &Request,
+    scratch: &mut ScratchAny,
+) -> Result<(ResponseBody, ReadStats)> {
+    match req {
+        Request::Score { profile, read } => {
+            let entry = ctx.resolve(profile)?;
+            let (prepared, cache_hit) =
+                ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+            let t0 = Instant::now();
+            let res = prepared.score(&entry.phmm, read, &ctx.opts(), scratch)?;
+            let stats = ReadStats {
+                forward_ns: t0.elapsed().as_nanos(),
+                filter_stats: res.filter_stats,
+                states_processed: res.states_processed,
+                edges_processed: res.edges_processed,
+                timesteps: read.len() as u64,
+                ..Default::default()
+            };
+            let log_odds = apps::log_odds_score(res.loglik, read.len(), entry.phmm.sigma());
+            Ok((
+                ResponseBody::Score {
+                    profile: entry.name.clone(),
+                    loglik: res.loglik,
+                    log_odds,
+                    cache_hit,
+                },
+                stats,
+            ))
+        }
+        Request::Align { profile, read } => {
+            let entry = ctx.resolve(profile)?;
+            let (prepared, _) = ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+            let dec = prepared.posterior(&entry.phmm, read)?;
+            let n_columns = apps::profile_columns(&entry.phmm);
+            let (columns, insertions) =
+                apps::posterior_columns(&entry.phmm, n_columns, read, &dec.best_state);
+            let stats = ReadStats {
+                forward_ns: dec.forward_ns,
+                backward_update_ns: dec.backward_ns,
+                timesteps: read.len() as u64,
+                ..Default::default()
+            };
+            let row = AlignedRow {
+                id: read.id.clone(),
+                columns,
+                insertions,
+                loglik: dec.loglik,
+            };
+            Ok((ResponseBody::Align { profile: entry.name.clone(), row }, stats))
+        }
+        Request::Search { read } => {
+            let mut stats = ReadStats::default();
+            let mut hits = Vec::new();
+            let mut scored = 0usize;
+            // MSV/SSV-style screen (the non-Baum-Welch part of Fig. 2's
+            // hmmsearch profile): only profiles sharing enough consensus
+            // k-mers with the query pay for a forward pass.
+            let min_frac = ctx.cfg.prefilter_min_frac;
+            let qk = apps::kmer_set(&read.data, ctx.cfg.prefilter_k, ctx.cfg.alphabet.size());
+            let entries = ctx.registry.all();
+            for entry in &entries {
+                if min_frac > 0.0 && !entry.kmers.is_empty() {
+                    let shared = qk.intersection(&entry.kmers).count();
+                    if (shared as f64 / qk.len().max(1) as f64) < min_frac {
+                        continue;
+                    }
+                }
+                let (prepared, _) =
+                    ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+                let t0 = Instant::now();
+                let res = match prepared.score(&entry.phmm, read, &ctx.opts(), scratch) {
+                    Ok(res) => res,
+                    // A numerically dead (profile, read) pair is not a
+                    // request failure; the profile simply doesn't hit.
+                    Err(_) => {
+                        stats.forward_ns += t0.elapsed().as_nanos();
+                        continue;
+                    }
+                };
+                stats.forward_ns += t0.elapsed().as_nanos();
+                stats.filter_stats.merge(&res.filter_stats);
+                stats.states_processed += res.states_processed;
+                stats.edges_processed += res.edges_processed;
+                stats.timesteps += read.len() as u64;
+                scored += 1;
+                hits.push(RankedHit {
+                    profile: entry.name.clone(),
+                    log_odds: apps::log_odds_score(res.loglik, read.len(), entry.phmm.sigma()),
+                });
+            }
+            hits.sort_by(|a, b| b.log_odds.partial_cmp(&a.log_odds).unwrap());
+            hits.truncate(ctx.cfg.max_hits.max(1));
+            // hmmsearch's domain post-processing: a posterior (Backward)
+            // pass over the reported top hits.
+            for hit in hits.iter().take(ctx.cfg.posterior_hits) {
+                let Some(entry) = entries.iter().find(|e| e.name == hit.profile) else {
+                    continue;
+                };
+                let (prepared, _) =
+                    ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+                if let Ok(dec) = prepared.posterior(&entry.phmm, read) {
+                    stats.forward_ns += dec.forward_ns;
+                    stats.backward_update_ns += dec.backward_ns;
+                }
+            }
+            Ok((ResponseBody::Search { hits, scored }, stats))
+        }
+        Request::Correct { reference, reads } => {
+            let train_cfg =
+                crate::baumwelch::TrainConfig { engine, ..ctx.cfg.train };
+            let out = apps::train_chunk(
+                reference,
+                reads,
+                &ctx.cfg.design,
+                ctx.cfg.alphabet,
+                &train_cfg,
+                ctx.pool,
+            )?;
+            let stats = ReadStats {
+                forward_ns: out.train.forward_ns,
+                backward_update_ns: out.train.backward_update_ns,
+                filter_stats: out.train.filter_stats,
+                states_processed: out.train.states_processed,
+                edges_processed: out.train.edges_processed,
+                timesteps: out.train.timesteps,
+            };
+            let mean_loglik =
+                out.train.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY);
+            Ok((
+                ResponseBody::Correct {
+                    consensus: out.consensus,
+                    mean_loglik,
+                    iters: out.train.iters,
+                },
+                stats,
+            ))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire protocol.
+// ---------------------------------------------------------------------
+
+/// Why a protocol session ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// Client sent `quit` (or an equivalent polite close).
+    Quit,
+    /// Client sent `shutdown`: stop accepting connections and drain.
+    Shutdown,
+    /// The input stream ended.
+    Eof,
+}
+
+fn parse_engine(tok: Option<&str>, default: EngineKind) -> std::result::Result<EngineKind, String> {
+    match tok {
+        None => Ok(default),
+        Some(name) => EngineKind::parse(name).ok_or_else(|| {
+            format!("unknown engine {name:?} (expected {})", EngineKind::NAMES.join(" | "))
+        }),
+    }
+}
+
+/// Parse one request line.  `Ok(None)` means the line was blank or a
+/// comment.
+fn parse_line(
+    cfg: &ServerConfig,
+    line: &str,
+) -> std::result::Result<Option<Command>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut toks = line.split_whitespace();
+    let cmd = toks.next().unwrap();
+    let seq = |tok: Option<&str>, what: &str| -> std::result::Result<Sequence, String> {
+        let s = tok.ok_or_else(|| format!("{cmd}: missing {what}"))?;
+        Sequence::from_str(what, s, cfg.alphabet).map_err(|e| e.to_string())
+    };
+    let command = match cmd {
+        "register" => {
+            let name = toks.next().ok_or("register: missing profile name")?.to_string();
+            let reference = seq(toks.next(), "reference")?;
+            Command::Register { name, reference }
+        }
+        "score" | "align" => {
+            let profile = toks.next().ok_or_else(|| format!("{cmd}: missing profile name"))?;
+            let read = seq(toks.next(), "read")?;
+            let engine = parse_engine(toks.next(), cfg.engine)?;
+            let body = if cmd == "score" {
+                Request::Score { profile: profile.to_string(), read }
+            } else {
+                Request::Align { profile: profile.to_string(), read }
+            };
+            Command::Submit { engine, body }
+        }
+        "search" => {
+            let read = seq(toks.next(), "read")?;
+            let engine = parse_engine(toks.next(), cfg.engine)?;
+            Command::Submit { engine, body: Request::Search { read } }
+        }
+        "correct" => {
+            let reference = seq(toks.next(), "reference")?;
+            let reads_tok = toks.next().ok_or("correct: missing comma-separated reads")?;
+            let mut reads = Vec::new();
+            for (i, r) in reads_tok.split(',').filter(|r| !r.is_empty()).enumerate() {
+                reads.push(
+                    Sequence::from_str(format!("read{i}"), r, cfg.alphabet)
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            let engine = parse_engine(toks.next(), cfg.engine)?;
+            Command::Submit { engine, body: Request::Correct { reference, reads } }
+        }
+        "stats" => Command::Stats,
+        "quit" | "exit" => Command::Quit,
+        "shutdown" => Command::Shutdown,
+        other => {
+            return Err(format!(
+                "unknown command {other:?} (expected register | score | align | search | \
+                 correct | stats | quit | shutdown)"
+            ))
+        }
+    };
+    if let Some(extra) = toks.next() {
+        return Err(format!("{cmd}: unexpected trailing token {extra:?}"));
+    }
+    Ok(Some(command))
+}
+
+enum Command {
+    Register { name: String, reference: Sequence },
+    Submit { engine: EngineKind, body: Request },
+    Stats,
+    Quit,
+    Shutdown,
+}
+
+/// Render a completed response as one protocol line.
+fn format_response(cfg: &ServerConfig, resp: &Response) -> String {
+    let latency_us = resp.latency_ns / 1_000;
+    match &resp.body {
+        ResponseBody::Score { profile, loglik, log_odds, cache_hit } => format!(
+            "score {profile} loglik={loglik:.6} odds={log_odds:.6} cache={} engine={} latency_us={latency_us}",
+            if *cache_hit { "hit" } else { "miss" },
+            resp.engine.name(),
+        ),
+        ResponseBody::Align { profile, row } => {
+            let ascii: String = row
+                .columns
+                .iter()
+                .map(|c| match c {
+                    Some(sym) => cfg.alphabet.decode(*sym) as char,
+                    None => '-',
+                })
+                .collect();
+            format!(
+                "align {profile} loglik={:.6} insertions={} row={ascii} latency_us={latency_us}",
+                row.loglik, row.insertions
+            )
+        }
+        ResponseBody::Search { hits, scored } => {
+            let ranked: Vec<String> = hits
+                .iter()
+                .map(|h| format!("{}:{:.4}", h.profile, h.log_odds))
+                .collect();
+            format!(
+                "search scored={scored} hits={} latency_us={latency_us}",
+                if ranked.is_empty() { "-".to_string() } else { ranked.join(",") }
+            )
+        }
+        ResponseBody::Correct { consensus, mean_loglik, iters } => format!(
+            "corrected len={} mean_loglik={mean_loglik:.4} iters={iters} seq={} latency_us={latency_us}",
+            consensus.len(),
+            consensus.to_ascii(cfg.alphabet),
+        ),
+        ResponseBody::Error { message } => format!("err {message}"),
+    }
+}
+
+/// Serve one protocol session: read request lines from `input`, write
+/// one response line per request (in request order) to `out`.
+///
+/// Admission control is the blocking kind: when the job queue is full
+/// the session stalls until capacity frees up, which is exactly the
+/// backpressure a streaming client should feel.
+pub fn serve_connection<R: BufRead, W: Write>(
+    server: &Server,
+    input: R,
+    mut out: W,
+) -> Result<SessionEnd> {
+    for line in input.lines() {
+        let Ok(line) = line else {
+            return Ok(SessionEnd::Eof); // client went away mid-line
+        };
+        let reply = match parse_line(server.config(), &line) {
+            Ok(None) => continue,
+            Err(msg) => format!("err {msg}"),
+            Ok(Some(Command::Register { name, reference })) => {
+                let cfg = server.config();
+                match Phmm::error_correction_for(&reference, &cfg.design, cfg.alphabet) {
+                    Ok(phmm) => {
+                        let states = phmm.n_states();
+                        let hash = server.register_profile(&name, phmm);
+                        format!("ok profile {name} states={states} hash={hash:016x}")
+                    }
+                    Err(e) => format!("err {e}"),
+                }
+            }
+            Ok(Some(Command::Submit { engine, body })) => {
+                match server.submit(Some(engine), body) {
+                    Ok(ticket) => format_response(server.config(), &ticket.wait()),
+                    Err(e) => format!("err {e}"),
+                }
+            }
+            Ok(Some(Command::Stats)) => server.stats_line(),
+            Ok(Some(Command::Quit)) => {
+                let _ = writeln!(out, "ok bye");
+                let _ = out.flush();
+                return Ok(SessionEnd::Quit);
+            }
+            Ok(Some(Command::Shutdown)) => {
+                let _ = writeln!(out, "ok shutdown");
+                let _ = out.flush();
+                return Ok(SessionEnd::Shutdown);
+            }
+        };
+        if writeln!(out, "{reply}").is_err() || out.flush().is_err() {
+            return Ok(SessionEnd::Eof);
+        }
+    }
+    Ok(SessionEnd::Eof)
+}
+
+/// Serve the protocol over stdin/stdout until EOF, `quit`, or
+/// `shutdown`.
+pub fn serve_stdio(server: &Server) -> Result<SessionEnd> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    serve_connection(server, stdin.lock(), stdout.lock())
+}
+
+/// Serve the protocol on a local TCP port, one thread per connection,
+/// until a client sends `shutdown`.  On shutdown every still-open
+/// session socket is closed (its blocked read sees EOF), so this
+/// returns promptly even with idle clients connected.
+pub fn serve_tcp(server: &Server, port: u16) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    listener.set_nonblocking(true)?;
+    let stop = AtomicBool::new(false);
+    // One tracking clone per accepted socket: the accept loop uses
+    // these to force idle sessions off their blocking reads when a
+    // client requests shutdown.
+    let sessions: Mutex<Vec<std::net::TcpStream>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| -> Result<()> {
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                for s in sessions.lock().unwrap().iter() {
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // Accepted sockets may inherit the listener's
+                    // non-blocking mode on some platforms; sessions
+                    // want blocking reads.
+                    let _ = stream.set_nonblocking(false);
+                    if let Ok(track) = stream.try_clone() {
+                        sessions.lock().unwrap().push(track);
+                    }
+                    let stop = &stop;
+                    scope.spawn(move || {
+                        let Ok(reader) = stream.try_clone() else { return };
+                        match serve_connection(server, BufReader::new(reader), stream) {
+                            Ok(SessionEnd::Shutdown) => stop.store(true, Ordering::Relaxed),
+                            Ok(_) => {}
+                            Err(e) => eprintln!("serve: session error: {e}"),
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    })
+}

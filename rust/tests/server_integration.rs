@@ -1,0 +1,345 @@
+//! Integration: the streaming multi-tenant server — concurrent mixed
+//! workloads vs a serial replay, cross-request Prepared-cache reuse,
+//! and clean teardown (no leaked threads).
+
+use aphmm::apps;
+use aphmm::baumwelch::{EngineKind, ForwardOptions, PreparedAny, TrainConfig};
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::pool::WorkerPool;
+use aphmm::seq::Sequence;
+use aphmm::server::{PushError, Request, Response, ResponseBody, Server, ServerConfig};
+use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
+use aphmm::testutil;
+
+fn dna(rng: &mut XorShift, id: &str, len: usize) -> Sequence {
+    Sequence::from_symbols(id, testutil::random_seq(rng, len, 4))
+}
+
+fn reads_of(rng: &mut XorShift, reference: &Sequence, n: usize) -> Vec<Sequence> {
+    (0..n)
+        .map(|i| {
+            simulate_read(rng, reference, 0, reference.len(), &ErrorProfile::pacbio(), i).seq
+        })
+        .collect()
+}
+
+/// The expected answer for one request, computed serially with the
+/// library primitives (no queue, no cache, no worker pool fan-out).
+#[derive(Debug, Clone, PartialEq)]
+enum Expected {
+    Score { loglik_bits: u64 },
+    Correct { consensus: Vec<u8>, mean_loglik_bits: u64, iters: usize },
+}
+
+fn serial_replay(
+    req: &Request,
+    profiles: &[(String, Phmm)],
+    train: &TrainConfig,
+    design: &EcDesignParams,
+) -> Expected {
+    match req {
+        Request::Score { profile, read } => {
+            let (_, phmm) = profiles.iter().find(|(n, _)| n == profile).unwrap();
+            let prepared = PreparedAny::freeze(EngineKind::Sparse, phmm).unwrap();
+            let mut scratch = prepared.make_scratch(phmm);
+            let res =
+                prepared.score(phmm, read, &ForwardOptions::default(), &mut scratch).unwrap();
+            Expected::Score { loglik_bits: res.loglik.to_bits() }
+        }
+        Request::Correct { reference, reads } => {
+            let pool = WorkerPool::new(0);
+            let out =
+                apps::train_chunk(reference, reads, design, aphmm::seq::DNA, train, &pool)
+                    .unwrap();
+            Expected::Correct {
+                consensus: out.consensus.data,
+                mean_loglik_bits: out
+                    .train
+                    .loglik_history
+                    .last()
+                    .copied()
+                    .unwrap_or(f64::NEG_INFINITY)
+                    .to_bits(),
+                iters: out.train.iters,
+            }
+        }
+        other => panic!("no serial replay for {other:?}"),
+    }
+}
+
+fn assert_matches_expected(resp: &Response, expected: &Expected, what: &str) {
+    match (&resp.body, expected) {
+        (ResponseBody::Score { loglik, .. }, Expected::Score { loglik_bits }) => {
+            assert_eq!(loglik.to_bits(), *loglik_bits, "{what}: score diverged from serial run");
+        }
+        (
+            ResponseBody::Correct { consensus, mean_loglik, iters },
+            Expected::Correct { consensus: want, mean_loglik_bits, iters: want_iters },
+        ) => {
+            assert_eq!(&consensus.data, want, "{what}: consensus diverged from serial run");
+            assert_eq!(
+                mean_loglik.to_bits(),
+                *mean_loglik_bits,
+                "{what}: training loglik diverged from serial run"
+            );
+            assert_eq!(iters, want_iters, "{what}: iteration count diverged");
+        }
+        (body, expected) => panic!("{what}: response {body:?} does not match {expected:?}"),
+    }
+}
+
+/// Acceptance: ≥ 64 concurrent requests from ≥ 4 producer threads with
+/// `queue_depth = 8` complete without deadlock, and every result is
+/// bit-identical to a serial replay of the same request.
+#[test]
+fn concurrent_mixed_requests_match_serial_replay() {
+    let mut rng = XorShift::new(201);
+    let ref_a = dna(&mut rng, "chrA", 60);
+    let ref_b = dna(&mut rng, "chrB", 60);
+    let profiles: Vec<(String, Phmm)> = [("pa", &ref_a), ("pb", &ref_b)]
+        .into_iter()
+        .map(|(name, r)| {
+            (name.to_string(), Phmm::error_correction(r, &EcDesignParams::default()).unwrap())
+        })
+        .collect();
+
+    // 4 producers × 16 requests, mixing cached scoring and training.
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 16;
+    let mut requests: Vec<Vec<Request>> = Vec::new();
+    for p in 0..PRODUCERS {
+        let mut mine = Vec::new();
+        for i in 0..PER_PRODUCER {
+            let which = (p + i) % 2;
+            let (name, reference) =
+                if which == 0 { ("pa", &ref_a) } else { ("pb", &ref_b) };
+            if i % 4 == 3 {
+                mine.push(Request::Correct {
+                    reference: reference.clone(),
+                    reads: reads_of(&mut rng, reference, 3),
+                });
+            } else {
+                let read = simulate_read(
+                    &mut rng,
+                    reference,
+                    0,
+                    reference.len(),
+                    &ErrorProfile::pacbio(),
+                    p * PER_PRODUCER + i,
+                )
+                .seq;
+                mine.push(Request::Score { profile: name.to_string(), read });
+            }
+        }
+        requests.push(mine);
+    }
+
+    let cfg = ServerConfig { n_workers: 4, queue_depth: 8, ..Default::default() };
+    let train = cfg.train;
+    let design = cfg.design;
+    let expected: Vec<Vec<Expected>> = requests
+        .iter()
+        .map(|mine| mine.iter().map(|r| serial_replay(r, &profiles, &train, &design)).collect())
+        .collect();
+
+    let mut server = Server::start(cfg);
+    for (name, phmm) in &profiles {
+        server.register_profile(name, phmm.clone());
+    }
+    let responses: Vec<Vec<Response>> = std::thread::scope(|scope| {
+        let server = &server;
+        let handles: Vec<_> = requests
+            .iter()
+            .map(|mine| {
+                scope.spawn(move || {
+                    // Submit the whole stream (blocking admission
+                    // control), then collect in order.
+                    let tickets: Vec<_> = mine
+                        .iter()
+                        .map(|req| server.submit(None, req.clone()).unwrap())
+                        .collect();
+                    tickets.into_iter().map(|t| t.wait()).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (p, (resps, wants)) in responses.iter().zip(expected.iter()).enumerate() {
+        assert_eq!(resps.len(), PER_PRODUCER);
+        for (i, (resp, want)) in resps.iter().zip(wants.iter()).enumerate() {
+            assert_matches_expected(resp, want, &format!("producer {p} request {i}"));
+            assert!(resp.latency_ns > 0, "producer {p} request {i} has no latency");
+        }
+    }
+
+    // The queue really was bounded, and the metrics saw every job.
+    let q = server.queue_stats();
+    assert!(q.high_water <= 8, "queue depth bound violated: {}", q.high_water);
+    assert_eq!(q.pushed, (PRODUCERS * PER_PRODUCER) as u64);
+    assert_eq!(q.pushed, q.popped);
+    let m = server.metrics_summary();
+    assert_eq!(m.jobs_done, (PRODUCERS * PER_PRODUCER) as u64);
+    assert_eq!(m.jobs_failed, 0);
+    assert!(m.latency_p99_ms >= m.latency_p50_ms);
+    server.shutdown(true);
+}
+
+/// Acceptance: the second request for the same profile is a
+/// Prepared-cache hit (hit counter == 1) — the freeze ran once.
+#[test]
+fn repeated_profile_requests_reuse_the_frozen_tables() {
+    let mut rng = XorShift::new(202);
+    let reference = dna(&mut rng, "chr1", 50);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let mut server = Server::start(ServerConfig { n_workers: 2, ..Default::default() });
+    server.register_profile("chr1", phmm);
+
+    let reads = reads_of(&mut rng, &reference, 2);
+    let first = server
+        .submit(None, Request::Score { profile: "chr1".into(), read: reads[0].clone() })
+        .unwrap()
+        .wait();
+    let second = server
+        .submit(None, Request::Score { profile: "chr1".into(), read: reads[1].clone() })
+        .unwrap()
+        .wait();
+    match (&first.body, &second.body) {
+        (
+            ResponseBody::Score { cache_hit: h1, .. },
+            ResponseBody::Score { cache_hit: h2, .. },
+        ) => {
+            assert!(!*h1, "first request must freeze the tables");
+            assert!(*h2, "second request must not re-freeze");
+        }
+        other => panic!("unexpected responses {other:?}"),
+    }
+    let c = server.cache_stats();
+    assert_eq!(c.misses, 1, "exactly one freeze");
+    assert_eq!(c.hits, 1, "exactly one reuse");
+    assert_eq!(c.entries, 1);
+    server.shutdown(true);
+}
+
+/// Satellite: dropping a server mid-stream leaks no threads — the
+/// dispatcher and every pool helper are joined, and pending requests
+/// fail explicitly instead of hanging their clients.
+#[test]
+fn dropping_a_server_mid_stream_leaks_no_threads() {
+    let mut rng = XorShift::new(203);
+    let reference = dna(&mut rng, "chr1", 80);
+    let reads = reads_of(&mut rng, &reference, 6);
+    let server = Server::start(ServerConfig {
+        n_workers: 2,
+        queue_depth: 16,
+        ..Default::default()
+    });
+    let probe = server.pool_liveness();
+    assert!(probe.upgrade().is_some());
+
+    let tickets: Vec<_> = (0..10)
+        .map(|_| {
+            server
+                .submit(
+                    None,
+                    Request::Correct { reference: reference.clone(), reads: reads.clone() },
+                )
+                .unwrap()
+        })
+        .collect();
+
+    // Abort mid-stream.
+    drop(server);
+    assert!(
+        probe.upgrade().is_none(),
+        "pool helpers must be joined when the server is dropped"
+    );
+    let mut done = 0usize;
+    let mut aborted = 0usize;
+    for t in tickets {
+        match t.wait().body {
+            ResponseBody::Correct { .. } => done += 1,
+            ResponseBody::Error { .. } => aborted += 1,
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    assert_eq!(done + aborted, 10);
+    assert!(aborted > 0, "a 10-deep backlog on 2 workers cannot fully drain on abort");
+}
+
+/// Busy admission control surfaces as a typed refusal, not a block,
+/// on the non-blocking submit path.
+#[test]
+fn try_submit_refuses_when_the_queue_is_full() {
+    let mut rng = XorShift::new(204);
+    let reference = dna(&mut rng, "chr1", 80);
+    let reads = reads_of(&mut rng, &reference, 8);
+    // One worker, tiny queue: flood it with slow training jobs.
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        queue_depth: 2,
+        ..Default::default()
+    });
+    let mut tickets = Vec::new();
+    let mut refused = 0usize;
+    for _ in 0..50 {
+        match server.try_submit(
+            None,
+            Request::Correct { reference: reference.clone(), reads: reads.clone() },
+        ) {
+            Ok(t) => tickets.push(t),
+            Err(PushError::Busy(_)) => refused += 1,
+            Err(PushError::Closed(_)) => panic!("server closed unexpectedly"),
+        }
+    }
+    assert!(refused > 0, "a depth-2 queue must refuse some of 50 instant submissions");
+    for t in tickets {
+        assert!(matches!(t.wait().body, ResponseBody::Correct { .. }));
+    }
+    let q = server.queue_stats();
+    assert!(q.high_water <= 2);
+    assert!(q.producer_blocks >= refused as u64);
+    server.shutdown(true);
+}
+
+/// The wire protocol end-to-end over an in-memory session: register,
+/// score twice (second is a cache hit), stats, quit.
+#[test]
+fn line_protocol_round_trip() {
+    let mut rng = XorShift::new(205);
+    let reference = dna(&mut rng, "chr1", 40);
+    let ascii_ref = reference.to_ascii(aphmm::seq::DNA);
+    let read = simulate_read(&mut rng, &reference, 0, 40, &ErrorProfile::pacbio(), 0).seq;
+    let ascii_read = read.to_ascii(aphmm::seq::DNA);
+
+    let mut server = Server::start(ServerConfig { n_workers: 2, ..Default::default() });
+    let script = format!(
+        "register chr1 {ascii_ref}\nscore chr1 {ascii_read}\nscore chr1 {ascii_read}\n\
+         bogus line\nstats\nquit\n"
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let end =
+        aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Quit);
+    server.shutdown(true);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 6, "one response per request line:\n{text}");
+    assert!(lines[0].starts_with("ok profile chr1 states="), "{}", lines[0]);
+    assert!(lines[1].starts_with("score chr1 loglik="), "{}", lines[1]);
+    assert!(lines[1].contains("cache=miss"), "{}", lines[1]);
+    assert!(lines[2].contains("cache=hit"), "{}", lines[2]);
+    assert!(lines[3].starts_with("err "), "{}", lines[3]);
+    assert!(lines[4].starts_with("stats "), "{}", lines[4]);
+    assert!(lines[4].contains("cache_hits=1"), "{}", lines[4]);
+    assert_eq!(lines[5], "ok bye");
+    // Both scores agree bit-for-bit (same read, cached vs fresh tables).
+    let ll = |line: &str| {
+        line.split_whitespace()
+            .find_map(|t| t.strip_prefix("loglik="))
+            .unwrap()
+            .to_string()
+    };
+    assert_eq!(ll(lines[1]), ll(lines[2]));
+}
