@@ -47,12 +47,16 @@ fn main() {
         let scenario = common::ec_scenario(100 + len as u64, len, 1);
         let graph = Phmm::error_correction(&scenario.reference, &heavy).unwrap();
         let read = &scenario.reads[0];
-        let unfiltered =
-            forward_sparse(&graph, read, &ForwardOptions { filter: FilterConfig::None }).unwrap();
+        let unfiltered = forward_sparse(
+            &graph,
+            read,
+            &ForwardOptions { filter: FilterConfig::None, ..Default::default() },
+        )
+        .unwrap();
         let filtered = forward_sparse(
             &graph,
             read,
-            &ForwardOptions { filter: FilterConfig::histogram_default() },
+            &ForwardOptions { filter: FilterConfig::histogram_default(), ..Default::default() },
         )
         .unwrap();
         let wl = |f: &aphmm::baumwelch::ForwardResult| Workload {

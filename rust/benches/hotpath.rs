@@ -1,9 +1,16 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation): per-edge and
 //! per-state throughput of the forward pass, the fused
-//! backward+update pass, both filters, the banded engine (pre-refactor
-//! scan vs fused coefficient tables), and (when artifacts exist) the
-//! XLA runtime path.  Used to drive and record the optimization
-//! iterations in EXPERIMENTS.md §Perf.
+//! backward+update pass, both filters, the in-window gather kernels
+//! (CSR vs dense tile vs adaptive dispatch), the banded engine
+//! (pre-refactor scan vs fused coefficient tables), and (when artifacts
+//! exist) the XLA runtime path.  Used to drive and record the
+//! optimization iterations in EXPERIMENTS.md §Perf.
+//!
+//! Besides the human-readable rows, every run writes
+//! `BENCH_hotpath.json` (per-row `name`/`baseline_ns`/`new_ns`/
+//! `speedup`) next to the working directory so CI can upload the
+//! numbers as an artifact instead of someone scraping them out of the
+//! log by hand (the ROADMAP perf-log re-anchor debt).
 //!
 //! Set `APHMM_BENCH_SHORT=1` for the CI smoke mode: a smaller workload
 //! and fewer repetitions, exercising every measured kernel so
@@ -16,15 +23,50 @@ use std::path::Path;
 use aphmm::baumwelch::{
     forward_sparse, forward_sparse_with, reference, score_sparse_with, BandedCoeffs,
     BandedEngine, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
+    GatherKind,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
+
+/// One comparison row of the machine-readable bench report.
+struct BenchRow {
+    name: &'static str,
+    baseline_s: f64,
+    new_s: f64,
+}
+
+/// Serialize the rows as `BENCH_hotpath.json` (no serde: the crate is
+/// dependency-free, and the schema is flat).
+fn write_bench_json(rows: &[BenchRow], short: bool, chunk: usize) {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"hotpath\",\n");
+    s.push_str(&format!("  \"short_mode\": {short},\n"));
+    s.push_str(&format!("  \"chunk_bases\": {chunk},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"baseline_ns\": {:.0}, \"new_ns\": {:.0}, \
+             \"speedup\": {:.4}}}{sep}\n",
+            r.name,
+            r.baseline_s * 1e9,
+            r.new_s * 1e9,
+            r.baseline_s / r.new_s
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_hotpath.json", &s) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} rows)", rows.len()),
+        Err(e) => println!("\nWARNING: could not write BENCH_hotpath.json: {e}"),
+    }
+}
 
 fn main() {
     let short = std::env::var("APHMM_BENCH_SHORT").is_ok();
     let reps = if short { 2 } else { 7 };
     let reps_small = if short { 2 } else { 5 };
     let chunk = if short { 160 } else { 650 };
+    let mut rows: Vec<BenchRow> = Vec::new();
 
     common::banner(if short {
         "hot paths (SHORT smoke mode)"
@@ -57,6 +99,7 @@ fn main() {
         t_new_f * 1e3,
         t_ref_f / t_new_f
     );
+    rows.push(BenchRow { name: "forward", baseline_s: t_ref_f, new_s: t_new_f });
 
     let fwd_m = forward_sparse_with(&graph, &coeffs, read, &opts_m, &mut scratch).unwrap();
     let t_ref_b = common::time_median(reps, || {
@@ -73,10 +116,16 @@ fn main() {
         t_new_b * 1e3,
         t_ref_b / t_new_b
     );
+    rows.push(BenchRow { name: "backward+update", baseline_s: t_ref_b, new_s: t_new_b });
     println!(
         "combined fwd+bwd: {:.2}x speedup vs pre-memoization kernels",
         (t_ref_f + t_ref_b) / (t_new_f + t_new_b)
     );
+    rows.push(BenchRow {
+        name: "combined fwd+bwd",
+        baseline_s: t_ref_f + t_ref_b,
+        new_s: t_new_f + t_new_b,
+    });
 
     // Fresh scratch so the row counter reflects the score kernel alone.
     let mut score_scratch = ForwardScratch::new(&graph);
@@ -89,6 +138,112 @@ fn main() {
         score_scratch.fresh_rows_allocated()
     );
     scratch.recycle(fwd_m);
+
+    // === in-window gather: CSR vs the dense-tile kernel of the
+    // === lowering layer (bit-identical rows; see baumwelch::lowering).
+    // === Adaptive dispatch must track the better of the two — it is
+    // === the default, so a loss here is a production regression.
+    common::banner("in-window gather: csr vs dense tile (lowering layer)");
+    let opts_csr = ForwardOptions { gather: GatherKind::Csr, ..Default::default() };
+    let opts_tile = ForwardOptions { gather: GatherKind::DenseTile, ..Default::default() };
+    let opts_adapt = ForwardOptions { gather: GatherKind::Adaptive, ..Default::default() };
+    // Warm the lazy tile tables outside the timed region: the build is
+    // a once-per-freeze cost amortized over a whole batch, not part of
+    // the per-read gather this row measures (in short mode the 2-rep
+    // median would otherwise absorb it).
+    let warm = forward_sparse_with(&graph, &coeffs, read, &opts_tile, &mut scratch).unwrap();
+    scratch.recycle(warm);
+    let t_g_csr = common::time_median(reps, || {
+        let fwd = forward_sparse_with(&graph, &coeffs, read, &opts_csr, &mut scratch).unwrap();
+        scratch.recycle(fwd);
+    });
+    let t_g_tile = common::time_median(reps, || {
+        let fwd = forward_sparse_with(&graph, &coeffs, read, &opts_tile, &mut scratch).unwrap();
+        scratch.recycle(fwd);
+    });
+    let t_g_adapt = common::time_median(reps, || {
+        let fwd = forward_sparse_with(&graph, &coeffs, read, &opts_adapt, &mut scratch).unwrap();
+        scratch.recycle(fwd);
+    });
+    println!(
+        "window gather: csr {:>9.3} ms -> dense tile {:>9.3} ms  ({:.2}x)",
+        t_g_csr * 1e3,
+        t_g_tile * 1e3,
+        t_g_csr / t_g_tile
+    );
+    println!(
+        "window gather (adaptive):       {:>9.3} ms  ({:.2}x vs csr; loses if < 1.00)",
+        t_g_adapt * 1e3,
+        t_g_csr / t_g_adapt
+    );
+    rows.push(BenchRow { name: "window gather", baseline_s: t_g_csr, new_s: t_g_tile });
+    rows.push(BenchRow {
+        name: "window gather adaptive",
+        baseline_s: t_g_csr,
+        new_s: t_g_adapt,
+    });
+
+    // === the regime the tile kernel is built FOR: a structurally
+    // === near-dense band (occupancy ≥ TILE_MIN_OCCUPANCY, like folded
+    // === traditional profiles).  The EC rows above are occupancy-gated
+    // === to CSR, so without this block the tile win — and any
+    // === regression of it — would never be measured anywhere.
+    common::banner("in-window gather on a near-dense band (tile regime)");
+    let dense_graph = aphmm::testutil::dense_band_phmm(2 * chunk);
+    let dense_coeffs = FusedCoeffs::new(&dense_graph);
+    assert!(
+        dense_coeffs.lowering().tile_eligible(),
+        "dense-band bench graph must pass the occupancy gate"
+    );
+    let warm =
+        forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_tile, &mut scratch).unwrap();
+    scratch.recycle(warm);
+    let warm =
+        forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_adapt, &mut scratch).unwrap();
+    assert!(
+        warm.filter_stats.rows_dense_tile > 0,
+        "adaptive dispatch must reach the tile kernel on the dense band"
+    );
+    scratch.recycle(warm);
+    let t_d_csr = common::time_median(reps, || {
+        let fwd =
+            forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_csr, &mut scratch)
+                .unwrap();
+        scratch.recycle(fwd);
+    });
+    let t_d_tile = common::time_median(reps, || {
+        let fwd =
+            forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_tile, &mut scratch)
+                .unwrap();
+        scratch.recycle(fwd);
+    });
+    let t_d_adapt = common::time_median(reps, || {
+        let fwd =
+            forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_adapt, &mut scratch)
+                .unwrap();
+        scratch.recycle(fwd);
+    });
+    println!(
+        "window gather (dense band): csr {:>9.3} ms -> dense tile {:>9.3} ms  ({:.2}x)",
+        t_d_csr * 1e3,
+        t_d_tile * 1e3,
+        t_d_csr / t_d_tile
+    );
+    println!(
+        "window gather (dense band, adaptive): {:>9.3} ms  ({:.2}x vs csr)",
+        t_d_adapt * 1e3,
+        t_d_csr / t_d_adapt
+    );
+    rows.push(BenchRow {
+        name: "window gather dense-band",
+        baseline_s: t_d_csr,
+        new_s: t_d_tile,
+    });
+    rows.push(BenchRow {
+        name: "window gather dense-band adaptive",
+        baseline_s: t_d_csr,
+        new_s: t_d_adapt,
+    });
 
     // --- sparse forward, unfiltered ---
     let opts = ForwardOptions::default();
@@ -105,7 +260,8 @@ fn main() {
     );
 
     // --- sparse forward, histogram filter ---
-    let opts_h = ForwardOptions { filter: FilterConfig::histogram_default() };
+    let opts_h =
+        ForwardOptions { filter: FilterConfig::histogram_default(), ..Default::default() };
     let fwd_h = forward_sparse(&graph, read, &opts_h).unwrap();
     let t = common::time_median(reps_small, || {
         forward_sparse(&graph, read, &opts_h).unwrap();
@@ -118,7 +274,7 @@ fn main() {
     );
 
     // --- sparse forward, sort filter ---
-    let opts_s = ForwardOptions { filter: FilterConfig::Sort { size: 500 } };
+    let opts_s = ForwardOptions { filter: FilterConfig::Sort { size: 500 }, ..Default::default() };
     let fwd_s = forward_sparse(&graph, read, &opts_s).unwrap();
     let t = common::time_median(reps_small, || {
         forward_sparse(&graph, read, &opts_s).unwrap();
@@ -161,6 +317,11 @@ fn main() {
         t_band_f_new * 1e3,
         t_band_f_old / t_band_f_new
     );
+    rows.push(BenchRow {
+        name: "banded forward",
+        baseline_s: t_band_f_old,
+        new_s: t_band_f_new,
+    });
 
     let t_band_s_old = common::time_median(reps_small, || {
         BandedEngine::bw_sums(&banded, read).unwrap();
@@ -176,6 +337,11 @@ fn main() {
         t_band_s_new * 1e9 / dense_ops,
         dense_ops as u64
     );
+    rows.push(BenchRow {
+        name: "banded bw_sums",
+        baseline_s: t_band_s_old,
+        new_s: t_band_s_new,
+    });
 
     // --- XLA runtime path (T=128 artifacts -> short read) ---
     let dir = Path::new("artifacts");
@@ -201,4 +367,6 @@ fn main() {
     } else {
         println!("xla bw_sums: skipped (run `make artifacts`)");
     }
+
+    write_bench_json(&rows, short, chunk);
 }

@@ -198,6 +198,7 @@ pub fn correct_assembly(
             filter: cfg.filter,
             n_workers: cfg.estep_workers,
             engine: cfg.engine,
+            ..Default::default()
         };
         let out =
             train_chunk(&chunk_ref, &segments, &cfg.design, crate::seq::DNA, &train_cfg, pool)?;

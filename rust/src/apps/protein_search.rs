@@ -204,7 +204,7 @@ impl<E: ExpectationEngine> FamilyDb<E> {
         // One scratch reused across the whole candidate list (the
         // sparse engine's buffers grow to the largest profile), each
         // family scored through its frozen engine state.
-        let opts = ForwardOptions { filter: cfg.filter };
+        let opts = ForwardOptions { filter: cfg.filter, ..Default::default() };
         let mut scratch: Option<E::Scratch> = None;
         let mut hits: Vec<SearchHit> = Vec::new();
         for &i in &candidates {

@@ -39,9 +39,12 @@ use crate::seq::Sequence;
 /// the fused `f_init[i] · e(i, s)` start row.
 ///
 /// Built once per EM iteration (or once per frozen profile for
-/// inference) by [`BandedCoeffs::new`]; rebuild after any parameter
-/// update — the `_with` kernels reject shape mismatches but cannot
-/// detect stale values.
+/// inference); in-crate construction routes through the lowering layer
+/// (`lowering::BandedLowering::lower` pairs the banded encoding with
+/// these tables — both the banded engine's `prepare` and the sparse
+/// engine's posterior-decode cache use it).  Rebuild after any
+/// parameter update — the `_with` kernels reject shape mismatches but
+/// cannot detect stale values.
 pub struct BandedCoeffs {
     n: usize,
     w: usize,

@@ -34,17 +34,17 @@
 //! shared-[`crate::pool::WorkerPool`] E-step bit-identical for any
 //! worker count.
 
-use std::sync::OnceLock;
 use std::time::Instant;
 
-use super::banded::{BandedBwSums, BandedCoeffs, BandedEngine};
+use super::banded::{BandedBwSums, BandedEngine};
 use super::filter::FilterStats;
 use super::kernels::{ForwardScratch, FusedCoeffs};
+use super::lowering::BandedLowering;
 use super::reference;
 use super::sparse::{forward_sparse_with, score_sparse_with, ForwardOptions, ScoreResult};
 use super::update::BwAccumulators;
 use crate::error::Result;
-use crate::phmm::{BandedPhmm, Phmm};
+use crate::phmm::Phmm;
 use crate::seq::Sequence;
 
 /// Which [`ExpectationEngine`] backs a session.  Carried by
@@ -204,19 +204,19 @@ pub trait ExpectationEngine: Sync {
     ) -> Result<ScoreResult>;
 
     /// Posterior best-state decode of one read (hmmalign).  The default
-    /// lowers to the banded encoding per call (the reference engine's
-    /// oracle path); the banded engine reuses its prepared tables and
-    /// the sparse engine caches the lowering in its `Prepared` on first
-    /// use.
+    /// lowers to the banded encoding per call through
+    /// [`BandedLowering::lower`] (the reference engine's oracle path);
+    /// the banded engine reuses its prepared tables and the sparse
+    /// engine's shared [`super::Lowering`] caches the banded lowering
+    /// on first use.
     fn posterior(
         &self,
         phmm: &Phmm,
         _prep: &Self::Prepared,
         read: &Sequence,
     ) -> Result<PosteriorDecode> {
-        let banded = phmm.to_banded()?;
-        let coeffs = BandedCoeffs::new(&banded);
-        BandedEngine::posterior_with(&banded, &coeffs, read)
+        let bl = BandedLowering::lower(phmm)?;
+        BandedEngine::posterior_with(&bl.banded, &bl.coeffs, read)
     }
 }
 
@@ -229,28 +229,17 @@ pub trait ExpectationEngine: Sync {
 /// [`super::kernels`].
 pub struct SparseEngine;
 
-/// Frozen state of the sparse engine: the fused CSR tables, plus a
-/// lazily-built banded lowering for posterior decoding — built at most
-/// once per parameter freeze, on first [`ExpectationEngine::posterior`]
-/// call, so profiles that are never posterior-decoded pay nothing and
-/// profiles decoded `M` times pay once instead of `M` times.
+/// Frozen state of the sparse engine: the per-symbol fused CSR +
+/// dense-tile coefficient tables, built on the shared
+/// [`super::Lowering`].  The lowering also carries the lazily-built
+/// banded encoding for posterior decoding — built at most once per
+/// parameter freeze, on first [`ExpectationEngine::posterior`] call, so
+/// profiles that are never posterior-decoded pay nothing and profiles
+/// decoded `M` times pay once instead of `M` times.
 pub struct SparsePrepared {
-    /// Per-symbol fused CSR coefficient tables (the training/scoring
-    /// hot path).
+    /// Per-symbol fused coefficient tables over the shared lowering
+    /// (the training/scoring hot path).
     pub coeffs: FusedCoeffs,
-    banded: OnceLock<BandedPrepared>,
-}
-
-impl SparsePrepared {
-    fn banded_for(&self, phmm: &Phmm) -> Result<&BandedPrepared> {
-        if let Some(bp) = self.banded.get() {
-            return Ok(bp);
-        }
-        let banded = phmm.to_banded()?;
-        let coeffs = BandedCoeffs::new(&banded);
-        // A concurrent builder may win the race; its value is used.
-        Ok(self.banded.get_or_init(|| BandedPrepared { banded, coeffs }))
-    }
 }
 
 impl ExpectationEngine for SparseEngine {
@@ -263,7 +252,7 @@ impl ExpectationEngine for SparseEngine {
     }
 
     fn prepare(&self, phmm: &Phmm) -> Result<SparsePrepared> {
-        Ok(SparsePrepared { coeffs: FusedCoeffs::new(phmm), banded: OnceLock::new() })
+        Ok(SparsePrepared { coeffs: FusedCoeffs::new(phmm) })
     }
 
     fn make_scratch(&self, phmm: &Phmm) -> ForwardScratch {
@@ -329,8 +318,8 @@ impl ExpectationEngine for SparseEngine {
         prep: &SparsePrepared,
         read: &Sequence,
     ) -> Result<PosteriorDecode> {
-        let bp = prep.banded_for(phmm)?;
-        BandedEngine::posterior_with(&bp.banded, &bp.coeffs, read)
+        let bl = prep.coeffs.lowering().banded_for(phmm)?;
+        BandedEngine::posterior_with(&bl.banded, &bl.coeffs, read)
     }
 }
 
@@ -421,14 +410,10 @@ impl ExpectationEngine for ReferenceEngine {
 // Banded engine — dense banded with fused coefficient tables.
 // ---------------------------------------------------------------------
 
-/// Frozen state of the banded engine: the banded encoding plus its
-/// per-symbol fused coefficient tables.
-pub struct BandedPrepared {
-    /// The banded parameter snapshot.
-    pub banded: BandedPhmm,
-    /// Fused `a·e` tables built from it.
-    pub coeffs: BandedCoeffs,
-}
+/// Frozen state of the banded engine: the banded lowering product
+/// (banded encoding + per-symbol fused coefficient tables), produced by
+/// the shared lowering layer.
+pub type BandedPrepared = BandedLowering;
 
 /// Banded expectation accumulator: raw update sums plus the observation
 /// count the generic loop needs for the mean log-likelihood.
@@ -477,9 +462,7 @@ impl ExpectationEngine for BandedEngine {
     }
 
     fn prepare(&self, phmm: &Phmm) -> Result<BandedPrepared> {
-        let banded = phmm.to_banded()?;
-        let coeffs = BandedCoeffs::new(&banded);
-        Ok(BandedPrepared { banded, coeffs })
+        BandedLowering::lower(phmm)
     }
 
     fn make_scratch(&self, _phmm: &Phmm) {}

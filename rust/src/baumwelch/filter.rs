@@ -49,7 +49,11 @@ impl FilterConfig {
     }
 }
 
-/// Cumulative filtering statistics (instrumentation for Fig. 2/6b).
+/// Cumulative filtering statistics (instrumentation for Fig. 2/6b),
+/// plus the per-row gather-kernel dispatch counters of the
+/// density-adaptive hot path (`baumwelch::lowering`): how the filter
+/// thins each window decides which kernel executes it, so the two
+/// instruments travel together.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FilterStats {
     /// Total wall time spent inside filter selection.
@@ -60,6 +64,11 @@ pub struct FilterStats {
     pub states_in: u64,
     /// Total states admitted.
     pub states_out: u64,
+    /// Forward rows executed by the indexed CSR gather.
+    pub rows_csr: u64,
+    /// Forward rows executed by the dense-tile kernel (the window was
+    /// dense enough, or `GatherKind::DenseTile` forced it).
+    pub rows_dense_tile: u64,
 }
 
 impl FilterStats {
@@ -69,6 +78,8 @@ impl FilterStats {
         self.calls += other.calls;
         self.states_in += other.states_in;
         self.states_out += other.states_out;
+        self.rows_csr += other.rows_csr;
+        self.rows_dense_tile += other.rows_dense_tile;
     }
 }
 

@@ -13,20 +13,35 @@
 //!   *incoming* CSR — the forward pass becomes a pure per-symbol sparse
 //!   matrix-vector product (one multiply-accumulate per edge, no
 //!   emission gather, no post-hoc emission scale per state).
+//! * The same products in the per-window dense-tile layout of
+//!   [`super::DenseTiles`] — the branchless vector form the
+//!   density-adaptive gather dispatches to on near-dense windows.
 //! * [`FusedCoeffs::out_coef_for`]`(s)[e]` is the same product over the
 //!   *outgoing* CSR, pre-widened to `f64` — the fused backward + ξ
 //!   update touches one table entry per edge instead of performing two
 //!   `f32→f64` converts, an emission gather and an extra multiply.
 //!
+//! The transition *structure* behind the tables (incoming CSR, band
+//! width, tile geometry, the lazily-built banded encoding) is owned by
+//! the shared [`Lowering`] — one freeze-time product for every engine;
+//! this module only adds the parameter-dependent coefficient arrays on
+//! top of it.
+//!
 //! [`ForwardScratch`] complements the tables with reusable buffers: the
-//! dense gather buffer, the backward row pair, the histogram-filter
-//! state, and a pool of [`SparseRow`]s so the per-timestep
-//! `Vec::with_capacity` churn of the original engine disappears
-//! (recycle results with [`ForwardScratch::recycle`]).  One scratch per
-//! worker thread; the coefficient tables are immutable and shared.
+//! dense gather buffer (carrying [`Lowering::gather_pad`] leading zeros
+//! so tile rows can read a contiguous window), the backward row pair,
+//! the histogram-filter state, and a pool of [`SparseRow`]s so the
+//! per-timestep `Vec::with_capacity` churn of the original engine
+//! disappears (recycle results with [`ForwardScratch::recycle`]).  One
+//! scratch per worker thread; the coefficient tables are immutable and
+//! shared.
+
+use std::sync::OnceLock;
 
 use super::filter::{FilterConfig, HistogramFilter};
+use super::lowering::Lowering;
 use super::sparse::{ForwardResult, SparseRow};
+use super::tile::DenseTiles;
 use crate::phmm::Phmm;
 
 /// Per-symbol fused coefficient tables for one parameter freeze.
@@ -36,20 +51,18 @@ use crate::phmm::Phmm;
 /// maximization step) while the tables are alive — but they must be
 /// rebuilt after any parameter update.
 pub struct FusedCoeffs {
-    pub(super) sigma: usize,
-    pub(super) n_edges: usize,
-    /// Band width W of the graph (1 + max forward hop).
-    pub(super) band: usize,
-    /// Incoming-CSR row pointers (per target state).
-    pub(super) in_ptr: Vec<u32>,
-    /// Source state of each incoming edge.
-    pub(super) in_from: Vec<u32>,
+    /// The shared transition-structure lowering the tables are built on.
+    pub(super) lowering: Lowering,
     /// `α · e_s(to)` per incoming edge, symbol-major `[Σ × |A|]`.
     pub(super) in_coef: Vec<f32>,
     /// `α · e_s(to)` per outgoing edge in `f64`, symbol-major `[Σ × |A|]`.
     pub(super) out_coef: Vec<f64>,
-    /// Snapshot of the nonzero initial distribution.
-    pub(super) init: Vec<(u32, f32)>,
+    /// The same incoming products in the dense-tile layout — built at
+    /// most once per freeze, on the first forward pass that may
+    /// dispatch to the tile kernel (`GatherKind::Csr`-only workloads
+    /// never pay the `Σ·N·tile_w` footprint), mirroring the lazy
+    /// banded lowering beside it.
+    pub(super) tiles: OnceLock<DenseTiles>,
 }
 
 impl FusedCoeffs {
@@ -60,18 +73,26 @@ impl FusedCoeffs {
     /// once per EM iteration (or once per database profile for
     /// inference-only scoring).
     pub fn new(phmm: &Phmm) -> FusedCoeffs {
-        let sigma = phmm.sigma();
-        let n = phmm.n_states();
-        let n_edges = phmm.n_transitions();
-        let (in_ptr, in_from, in_eidx) = phmm.incoming_csr();
+        FusedCoeffs::from_lowering(Lowering::freeze(phmm), phmm)
+    }
+
+    /// Build the coefficient tables over an already-frozen `lowering`
+    /// of the same graph.
+    pub fn from_lowering(lowering: Lowering, phmm: &Phmm) -> FusedCoeffs {
+        assert_eq!(lowering.n_states, phmm.n_states(), "lowering frozen from another graph");
+        assert_eq!(lowering.n_edges, phmm.n_transitions(), "lowering frozen from another graph");
+        assert_eq!(lowering.sigma, phmm.sigma(), "lowering frozen from another graph");
+        let sigma = lowering.sigma;
+        let n = lowering.n_states;
+        let n_edges = lowering.n_edges;
 
         let mut in_coef = vec![0.0f32; sigma * n_edges];
         for to in 0..n {
-            let lo = in_ptr[to] as usize;
-            let hi = in_ptr[to + 1] as usize;
+            let lo = lowering.in_ptr[to] as usize;
+            let hi = lowering.in_ptr[to + 1] as usize;
             let emit = &phmm.emissions[to * sigma..(to + 1) * sigma];
             for slot in lo..hi {
-                let p = phmm.out_prob[in_eidx[slot] as usize];
+                let p = phmm.out_prob[lowering.in_eidx[slot] as usize];
                 for (s, &e_s) in emit.iter().enumerate() {
                     in_coef[s * n_edges + slot] = p * e_s;
                 }
@@ -88,40 +109,70 @@ impl FusedCoeffs {
             }
         }
 
-        FusedCoeffs {
-            sigma,
-            n_edges,
-            band: phmm.band_width(),
-            in_ptr,
-            in_from,
-            in_coef,
-            out_coef,
-            init: phmm.init_states().collect(),
+        FusedCoeffs { lowering, in_coef, out_coef, tiles: OnceLock::new() }
+    }
+
+    /// The dense-tile mirror of the incoming tables, built at most once
+    /// per freeze, on first demand.  `phmm` must be the graph the
+    /// tables were frozen from, with unchanged parameters — the same
+    /// contract as [`Lowering::banded_for`] (the tile products must be
+    /// bit-identical to `in_coef`, which already requires the
+    /// parameters not to have moved under a live `FusedCoeffs`).
+    pub(super) fn tiles_for(&self, phmm: &Phmm) -> &DenseTiles {
+        if let Some(t) = self.tiles.get() {
+            return t;
         }
+        let built = DenseTiles::new(&self.lowering, phmm);
+        // A concurrent builder may win the race; its value is used.
+        self.tiles.get_or_init(|| built)
+    }
+
+    /// The shared transition-structure lowering behind the tables.
+    #[inline]
+    pub fn lowering(&self) -> &Lowering {
+        &self.lowering
     }
 
     /// Number of edges the tables cover (sanity checks against a graph).
     #[inline]
     pub fn n_edges(&self) -> usize {
-        self.n_edges
+        self.lowering.n_edges
     }
 
     /// Alphabet size the tables cover.
     #[inline]
     pub fn sigma(&self) -> usize {
-        self.sigma
+        self.lowering.sigma
+    }
+
+    /// Leading zero-padding the gather scratch must carry
+    /// ([`Lowering::gather_pad`]).
+    #[inline]
+    pub fn gather_pad(&self) -> usize {
+        self.lowering.gather_pad()
     }
 
     /// Incoming fused coefficients of symbol `s` (incoming-slot order).
     #[inline]
     pub(super) fn in_coef_for(&self, s: usize) -> &[f32] {
-        &self.in_coef[s * self.n_edges..(s + 1) * self.n_edges]
+        let n_edges = self.lowering.n_edges;
+        &self.in_coef[s * n_edges..(s + 1) * n_edges]
     }
 
     /// Outgoing fused coefficients of symbol `s` (outgoing-edge order).
     #[inline]
     pub(super) fn out_coef_for(&self, s: usize) -> &[f64] {
-        &self.out_coef[s * self.n_edges..(s + 1) * self.n_edges]
+        let n_edges = self.lowering.n_edges;
+        &self.out_coef[s * n_edges..(s + 1) * n_edges]
+    }
+
+    /// Dense-tile rows of symbol `s` (`[N × tile_w]`).  The forward
+    /// entry points call [`FusedCoeffs::tiles_for`] before any row can
+    /// dispatch to the tile kernel, so the tables are always present
+    /// here.
+    #[inline]
+    pub(super) fn tile_coef_for(&self, s: usize) -> &[f32] {
+        self.tiles.get().expect("dense tiles not built before tile dispatch").coef_for(s)
     }
 }
 
@@ -132,7 +183,9 @@ impl FusedCoeffs {
 /// database).  All buffers are maintained zeroed/empty between calls.
 #[derive(Default)]
 pub struct ForwardScratch {
-    /// Dense gather buffer (≥ n_states, zero outside the active row).
+    /// Dense gather buffer (≥ n_states + gather pad; state `i` lives at
+    /// slot `i + pad` so tile rows read a contiguous window; zero
+    /// outside the active row).
     pub(super) dense: Vec<f32>,
     /// Backward value buffer for timestep t+1 (≥ n_states, zeroed).
     pub(super) b_next: Vec<f64>,
@@ -155,7 +208,8 @@ impl ForwardScratch {
         s
     }
 
-    /// Grow the dense/backward buffers to cover `n` states.
+    /// Grow the dense/backward buffers to cover `n` slots (the gather
+    /// kernels pass `n_states + gather_pad` so the pad region exists).
     pub(super) fn ensure(&mut self, n: usize) {
         if self.dense.len() < n {
             self.dense.resize(n, 0.0);
@@ -254,6 +308,7 @@ mod tests {
             let c = FusedCoeffs::new(&g);
             assert_eq!(c.n_edges(), g.n_transitions());
             assert_eq!(c.sigma(), g.sigma());
+            assert_eq!(c.lowering().band(), g.band_width());
             // Outgoing table: direct check against α · e_s(to).
             for s in 0..g.sigma() {
                 let oc = c.out_coef_for(s);
@@ -277,6 +332,29 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn tiles_are_lazy_and_cached() {
+        let mut rng = XorShift::new(23);
+        let g = ec_graph(&mut rng, 15);
+        let c = FusedCoeffs::new(&g);
+        assert!(c.tiles.get().is_none(), "freeze must not build tiles eagerly");
+        let t1 = c.tiles_for(&g) as *const DenseTiles;
+        let t2 = c.tiles_for(&g) as *const DenseTiles;
+        assert_eq!(t1, t2, "tiles must be built at most once per freeze");
+    }
+
+    #[test]
+    fn from_lowering_panics_on_foreign_graph() {
+        let mut rng = XorShift::new(19);
+        let g1 = ec_graph(&mut rng, 10);
+        let g2 = ec_graph(&mut rng, 25);
+        let low = Lowering::freeze(&g1);
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            FusedCoeffs::from_lowering(low, &g2)
+        }));
+        assert!(got.is_err(), "mismatched lowering/graph must not build tables");
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! The transition-structure lowering layer (paper §4.2, Observation 5).
+//!
+//! ApHMM's accelerator wins come from exploiting the *predictable data
+//! dependency patterns* of pHMM transitions: every engine in this crate
+//! runs on some re-encoding ("lowering") of the same [`Phmm`] transition
+//! structure, and all of those encodings are frozen together with the
+//! parameters once per EM iteration (or once per profile for
+//! inference).  Before this layer existed the lowerings were scattered —
+//! the incoming CSR lived inside `kernels::FusedCoeffs`, the banded
+//! tables were rebuilt by both `BandedEngine::prepare` and
+//! `SparsePrepared`'s private posterior-decode cache — so [`Lowering`]
+//! now owns every one of them:
+//!
+//! * **Incoming CSR** (`in_ptr`/`in_from`/`in_eidx`) — the gather-form
+//!   forward's window walk, consumed by the fused per-symbol CSR tables
+//!   of [`super::FusedCoeffs`].
+//! * **Banded window tables** ([`BandedLowering`] = [`BandedPhmm`] +
+//!   [`super::BandedCoeffs`]) — the dense banded engine's encoding and
+//!   the posterior-decode path of the sparse engine.  Built lazily via
+//!   [`Lowering::banded_for`] (profiles that are never
+//!   posterior-decoded pay nothing, profiles decoded `M` times pay
+//!   once) or eagerly via [`BandedLowering::lower`] (the banded
+//!   engine's `prepare`).
+//! * **Per-window dense tiles** ([`super::DenseTiles`]) — a new layout
+//!   of the same incoming structure: each target state's in-window
+//!   sources are packed into an `f32` tile row of fixed width
+//!   [`Lowering::tile_width`] with *window-relative* column indices
+//!   (column `x` is source `to + x − (tile_w − 1)`), zero-padded where
+//!   no edge exists.  The in-window gather over a tile row is a
+//!   branchless dense dot product the auto-vectorizer can chew on —
+//!   within a band the transition structure is near-dense (Fig. 4), so
+//!   a dense compute block beats the indexed CSR gather exactly when
+//!   the filter admits a dense window.
+//!
+//! [`GatherKind`] selects between the CSR gather and the dense-tile
+//! kernel per forward row; the default [`GatherKind::Adaptive`] policy
+//! picks the tile kernel when the graph passes the structural
+//! [`TILE_MIN_OCCUPANCY`] gate *and* the filter-admitted window density
+//! reaches [`DENSE_TILE_MIN_DENSITY`], falling back to the CSR gather
+//! otherwise.  Both kernels accumulate each target's contributions in
+//! ascending-source order with only non-negative terms, so their rows —
+//! and therefore the log-likelihoods and every downstream expectation
+//! sum — are **bit-identical** (asserted by `tests/engine_matrix.rs`).
+//!
+//! Freezing is strictly parameter-side: a [`Lowering`] never bakes in a
+//! [`super::FilterConfig`] or any other runtime decision, which is what
+//! lets the serving layer's `PreparedCache` key entries by profile
+//! content hash alone (see `server::cache`).
+
+use std::sync::OnceLock;
+
+use super::banded::BandedCoeffs;
+use crate::error::Result;
+use crate::phmm::{BandedPhmm, Phmm};
+
+/// Dense-tile rows are padded to a multiple of this lane count so the
+/// inner loop has a fixed, branch-free trip count.
+pub const TILE_LANES: usize = 4;
+
+/// [`GatherKind::Adaptive`] uses the dense-tile kernel for a forward
+/// row when `active states / window span` of the (possibly filtered)
+/// previous row is at least this threshold — i.e. the admitted window
+/// is near-dense.
+pub const DENSE_TILE_MIN_DENSITY: f32 = 0.75;
+
+/// Structural gate of the adaptive policy: the tile kernel performs
+/// `tile_w` multiply-adds per window target where the CSR gather
+/// performs `in-degree` — and because the bitwise contract forbids
+/// reassociating the f32 reduction, those extra padded terms are real
+/// serial work, not vector lanes.  Adaptive dispatch therefore only
+/// considers tiles when the graph's band is structurally dense enough
+/// that the padding overhead is bounded (≤ 2× the CSR arithmetic):
+/// `n_edges / (n_states · tile_w) ≥ TILE_MIN_OCCUPANCY`.  Low-occupancy
+/// bands (the default EC design: in-degree ≈ 7 in a 25-wide band,
+/// occupancy ≈ 0.25) always take the CSR gather under `Adaptive`, which
+/// is what keeps the adaptive path within noise of pure CSR there;
+/// narrow near-dense bands (folded traditional profiles) are where the
+/// tile kernel can win.  `GatherKind::DenseTile` bypasses the gate.
+pub const TILE_MIN_OCCUPANCY: f64 = 0.5;
+
+/// Which in-window gather kernel executes a forward row.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GatherKind {
+    /// Per-row density-adaptive dispatch: the dense-tile kernel when
+    /// the graph passes the structural [`TILE_MIN_OCCUPANCY`] gate and
+    /// the filter-admitted window density is at least
+    /// [`DENSE_TILE_MIN_DENSITY`]; the CSR gather otherwise.
+    #[default]
+    Adaptive,
+    /// Always the indexed CSR gather (the pre-tile hot path).
+    Csr,
+    /// Always the dense-tile kernel.
+    DenseTile,
+}
+
+impl GatherKind {
+    /// Canonical lowercase name (logs, bench rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            GatherKind::Adaptive => "adaptive",
+            GatherKind::Csr => "csr",
+            GatherKind::DenseTile => "dense-tile",
+        }
+    }
+}
+
+/// The banded lowering product: the dense banded parameter snapshot
+/// plus its per-symbol fused `a·e` tables.  This is the banded engine's
+/// frozen state (`BandedPrepared` is an alias) and the sparse engine's
+/// posterior-decode encoding.
+pub struct BandedLowering {
+    /// The banded parameter snapshot.
+    pub banded: BandedPhmm,
+    /// Fused `a·e` tables built from it.
+    pub coeffs: BandedCoeffs,
+}
+
+impl BandedLowering {
+    /// Lower `phmm` to the banded encoding and build its fused tables —
+    /// the single construction point for banded tables in the crate
+    /// (both `BandedEngine::prepare` and the sparse engine's lazy
+    /// posterior cache route through here).
+    pub fn lower(phmm: &Phmm) -> Result<BandedLowering> {
+        let banded = phmm.to_banded()?;
+        let coeffs = BandedCoeffs::new(&banded);
+        Ok(BandedLowering { banded, coeffs })
+    }
+}
+
+/// Every lowering of one [`Phmm`]'s transition structure, frozen once
+/// per parameter freeze (EM iteration or cached profile).
+///
+/// Owns copies: the graph may be mutably borrowed again (maximization)
+/// while a `Lowering` is alive, but it must be re-frozen after any
+/// parameter update.
+pub struct Lowering {
+    pub(super) n_states: usize,
+    pub(super) n_edges: usize,
+    pub(super) sigma: usize,
+    /// Band width W of the graph (1 + max forward hop).
+    pub(super) band: usize,
+    /// Dense-tile row width: `band` rounded up to [`TILE_LANES`].
+    pub(super) tile_w: usize,
+    /// Whether [`GatherKind::Adaptive`] may ever dispatch to the tile
+    /// kernel (the [`TILE_MIN_OCCUPANCY`] structural gate, frozen once).
+    pub(super) tile_eligible: bool,
+    /// Incoming-CSR row pointers (per target state).
+    pub(super) in_ptr: Vec<u32>,
+    /// Source state of each incoming edge.
+    pub(super) in_from: Vec<u32>,
+    /// Outgoing-edge index of each incoming slot (maps incoming slots
+    /// back to `phmm.out_prob`).
+    pub(super) in_eidx: Vec<u32>,
+    /// Snapshot of the nonzero initial distribution.
+    pub(super) init: Vec<(u32, f32)>,
+    /// Banded lowering, built at most once, on first demand.
+    banded: OnceLock<BandedLowering>,
+}
+
+impl Lowering {
+    /// Freeze the transition structure (and initial distribution) of
+    /// `phmm`.  Cost: one incoming-CSR transpose, `O(|A|)` — paid once
+    /// per parameter freeze and shared by every engine.
+    pub fn freeze(phmm: &Phmm) -> Lowering {
+        let (in_ptr, in_from, in_eidx) = phmm.incoming_csr();
+        let band = phmm.band_width();
+        let tile_w = band.div_ceil(TILE_LANES) * TILE_LANES;
+        let n_states = phmm.n_states();
+        let n_edges = phmm.n_transitions();
+        let tile_eligible =
+            n_edges as f64 >= TILE_MIN_OCCUPANCY * (n_states * tile_w) as f64;
+        Lowering {
+            n_states,
+            n_edges,
+            sigma: phmm.sigma(),
+            band,
+            tile_w,
+            tile_eligible,
+            in_ptr,
+            in_from,
+            in_eidx,
+            init: phmm.init_states().collect(),
+            banded: OnceLock::new(),
+        }
+    }
+
+    /// Number of states the lowering covers.
+    #[inline]
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    /// Number of edges the lowering covers.
+    #[inline]
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    /// Alphabet size the lowering covers.
+    #[inline]
+    pub fn sigma(&self) -> usize {
+        self.sigma
+    }
+
+    /// Band width W (1 + max forward hop).
+    #[inline]
+    pub fn band(&self) -> usize {
+        self.band
+    }
+
+    /// Dense-tile row width (`band` rounded up to [`TILE_LANES`]).
+    #[inline]
+    pub fn tile_width(&self) -> usize {
+        self.tile_w
+    }
+
+    /// Leading zero-padding of the gather buffer: tile column `0` of
+    /// target `to` reads source `to − pad`, so the dense scratch carries
+    /// `pad` permanently-zero slots in front of state `0`.
+    #[inline]
+    pub fn gather_pad(&self) -> usize {
+        self.tile_w - 1
+    }
+
+    /// Structural tile occupancy: `n_edges / (n_states · tile_w)` —
+    /// the fraction of tile arithmetic that touches a real edge.
+    pub fn tile_occupancy(&self) -> f64 {
+        self.n_edges as f64 / (self.n_states.max(1) * self.tile_w) as f64
+    }
+
+    /// Whether [`GatherKind::Adaptive`] may ever dispatch to the tile
+    /// kernel on this graph (the [`TILE_MIN_OCCUPANCY`] gate).
+    #[inline]
+    pub fn tile_eligible(&self) -> bool {
+        self.tile_eligible
+    }
+
+    /// The banded lowering of the same graph, built at most once per
+    /// freeze, on first use (the sparse engine's posterior-decode
+    /// path).  `phmm` must be the graph this lowering was frozen from.
+    pub fn banded_for(&self, phmm: &Phmm) -> Result<&BandedLowering> {
+        if let Some(bl) = self.banded.get() {
+            return Ok(bl);
+        }
+        let built = BandedLowering::lower(phmm)?;
+        // A concurrent builder may win the race; its value is used.
+        Ok(self.banded.get_or_init(|| built))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::seq::Sequence;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn ec_graph(rng: &mut XorShift, len: usize) -> Phmm {
+        let data = testutil::random_seq(rng, len, 4);
+        Phmm::error_correction(&Sequence::from_symbols("r", data), &EcDesignParams::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn freeze_matches_graph_shape() {
+        testutil::check(10, |rng| {
+            let len = rng.range(4, 40);
+            let g = ec_graph(rng, len);
+            let low = Lowering::freeze(&g);
+            assert_eq!(low.n_states(), g.n_states());
+            assert_eq!(low.n_edges(), g.n_transitions());
+            assert_eq!(low.sigma(), g.sigma());
+            assert_eq!(low.band(), g.band_width());
+            assert!(low.tile_width() >= low.band());
+            assert_eq!(low.tile_width() % TILE_LANES, 0);
+            assert!(low.tile_width() < low.band() + TILE_LANES);
+            assert_eq!(low.gather_pad(), low.tile_width() - 1);
+            // The incoming CSR covers every edge exactly once and every
+            // slot's source obeys the band bound.
+            assert_eq!(low.in_ptr.len(), g.n_states() + 1);
+            assert_eq!(low.in_from.len(), g.n_transitions());
+            for to in 0..g.n_states() {
+                for slot in low.in_ptr[to] as usize..low.in_ptr[to + 1] as usize {
+                    let from = low.in_from[slot] as usize;
+                    assert!(from <= to, "backward edge {from}->{to}");
+                    assert!(to - from < low.band(), "hop {from}->{to} exceeds band");
+                    let e = low.in_eidx[slot] as usize;
+                    assert_eq!(g.out_to[e] as usize, to);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn incoming_slots_are_sorted_by_source() {
+        // The bitwise contract between the CSR gather and the tile
+        // kernel: within each target the incoming slots ascend by
+        // source, which is the order the tile dot product sums in.
+        let mut rng = XorShift::new(11);
+        let g = ec_graph(&mut rng, 50);
+        let low = Lowering::freeze(&g);
+        for to in 0..g.n_states() {
+            let lo = low.in_ptr[to] as usize;
+            let hi = low.in_ptr[to + 1] as usize;
+            for pair in low.in_from[lo..hi].windows(2) {
+                assert!(pair[0] < pair[1], "incoming slots of {to} not ascending");
+            }
+        }
+    }
+
+    #[test]
+    fn banded_lowering_is_built_once_and_shared() {
+        let mut rng = XorShift::new(13);
+        let g = ec_graph(&mut rng, 20);
+        let low = Lowering::freeze(&g);
+        let a = low.banded_for(&g).unwrap() as *const BandedLowering;
+        let b = low.banded_for(&g).unwrap() as *const BandedLowering;
+        assert_eq!(a, b, "banded lowering must be cached after first use");
+        let bl = low.banded_for(&g).unwrap();
+        assert_eq!(bl.banded.n, g.n_states());
+        assert_eq!(bl.coeffs.shape(), (bl.banded.n, bl.banded.w, bl.banded.sigma));
+    }
+
+    #[test]
+    fn gather_kind_names() {
+        assert_eq!(GatherKind::default(), GatherKind::Adaptive);
+        assert_eq!(GatherKind::Csr.name(), "csr");
+        assert_eq!(GatherKind::DenseTile.name(), "dense-tile");
+        assert_eq!(GatherKind::Adaptive.name(), "adaptive");
+    }
+}

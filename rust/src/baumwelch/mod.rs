@@ -23,6 +23,13 @@
 //!   shared PJRT device thread (the accelerator's role; stubs unless
 //!   built with the `pjrt` feature).
 //!
+//! Every re-encoding of a graph's transition structure — the incoming
+//! CSR, the banded window tables, and the per-window dense tiles of the
+//! density-adaptive in-window gather — is owned by the freeze-time
+//! [`lowering`] layer ([`Lowering`] / [`BandedLowering`] /
+//! [`DenseTiles`]); engines only add parameter-dependent coefficient
+//! arrays on top of one shared lowering product.
+//!
 //! Shared numerics: per-timestep scaling (DESIGN.md §Numerics); raw
 //! expectation sums accumulated across observation sequences and divided
 //! once per EM iteration ([`BwAccumulators`]).  [`logspace`] provides an
@@ -37,9 +44,11 @@ pub mod banded;
 mod engine;
 mod filter;
 mod kernels;
+pub mod lowering;
 mod logspace;
 pub mod reference;
 mod sparse;
+mod tile;
 mod train;
 mod update;
 
@@ -51,10 +60,15 @@ pub use engine::{
 pub use filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
 pub use kernels::{ForwardScratch, FusedCoeffs};
 pub use logspace::{log_backward, log_forward, log_likelihood};
+pub use lowering::{
+    BandedLowering, GatherKind, Lowering, DENSE_TILE_MIN_DENSITY, TILE_LANES,
+    TILE_MIN_OCCUPANCY,
+};
 pub use sparse::{
     forward_sparse, forward_sparse_with, score_sparse, score_sparse_with, ForwardOptions,
     ForwardResult, ScoreResult, SparseRow,
 };
+pub use tile::DenseTiles;
 pub use train::{train, train_in, train_with_engine, TrainConfig, TrainResult};
 pub use update::BwAccumulators;
 

@@ -1,4 +1,5 @@
-//! Sparse (CSR) scaled forward pass with state filtering.
+//! Sparse (CSR) scaled forward pass with state filtering and
+//! density-adaptive in-window gather dispatch.
 //!
 //! This is the faithful CPU implementation of Eq. 1: per timestep the
 //! active-state set scatters probability mass along outgoing edges, the
@@ -10,7 +11,7 @@
 //! per-symbol fused-coefficient tables of [`super::kernels`] (paper
 //! §4.2–4.3 — the transition×emission products are computed once per
 //! parameter freeze, turning the timestep recurrence into a pure
-//! per-symbol CSR SpMV):
+//! per-symbol gather):
 //!
 //! * [`forward_sparse_with`] materializes every scaled row (training —
 //!   the fused backward pass needs them);
@@ -19,12 +20,31 @@
 //!   protein family search / MSA, after Miklós & Meyer's linear-memory
 //!   formulation).
 //!
+//! Each forward row is executed by one of two gather kernels over the
+//! shared [`super::Lowering`], selected per row by
+//! [`ForwardOptions::gather`]:
+//!
+//! * the **CSR gather** walks each window target's incoming slots
+//!   (indexed loads);
+//! * the **dense-tile kernel** dot-products each target's fixed-width
+//!   tile row ([`super::DenseTiles`]) against a contiguous window of
+//!   the scratch buffer — branchless and auto-vectorizable.
+//!
+//! The default [`GatherKind::Adaptive`] policy picks the tile kernel
+//! when the filter-admitted window density reaches
+//! [`DENSE_TILE_MIN_DENSITY`] (near-dense unfiltered EC rows) and the
+//! CSR gather otherwise; both kernels sum in ascending-source order so
+//! the rows — and everything downstream — are **bit-identical** either
+//! way.  The per-row choice is counted in
+//! [`FilterStats::rows_dense_tile`]/[`FilterStats::rows_csr`].
+//!
 //! The parameterless [`forward_sparse`] / [`score_sparse`] wrappers
 //! build throwaway tables and scratch; hot paths build
 //! [`FusedCoeffs`]/[`ForwardScratch`] once and call the `_with` forms.
 
 use super::filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
 use super::kernels::{ForwardScratch, FusedCoeffs};
+use super::lowering::{GatherKind, DENSE_TILE_MIN_DENSITY};
 use super::EPS;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -56,11 +76,13 @@ impl SparseRow {
 pub struct ForwardOptions {
     /// State filter policy.
     pub filter: FilterConfig,
+    /// In-window gather kernel policy (per-row adaptive by default).
+    pub gather: GatherKind,
 }
 
 impl Default for ForwardOptions {
     fn default() -> Self {
-        ForwardOptions { filter: FilterConfig::None }
+        ForwardOptions { filter: FilterConfig::None, gather: GatherKind::Adaptive }
     }
 }
 
@@ -73,12 +95,14 @@ pub struct ForwardResult {
     pub scales: Vec<f32>,
     /// `log P(S | G) = Σ log c_t`.
     pub loglik: f64,
-    /// Filtering instrumentation.
+    /// Filtering + gather-dispatch instrumentation.
     pub filter_stats: FilterStats,
     /// Total states processed (Σ_t active states) — the workload metric
     /// consumed by the accelerator model.
     pub states_processed: u64,
-    /// Total edges traversed (Σ_t Σ_active out-degree).
+    /// Total edges traversed (Σ_t in-window incoming edges) — identical
+    /// whichever gather kernel ran, so dispatch never perturbs the
+    /// accelerator model's workload counters.
     pub edges_processed: u64,
 }
 
@@ -88,7 +112,7 @@ pub struct ForwardResult {
 pub struct ScoreResult {
     /// `log P(S | G)`.
     pub loglik: f64,
-    /// Filtering instrumentation.
+    /// Filtering + gather-dispatch instrumentation.
     pub filter_stats: FilterStats,
     /// Total states processed.
     pub states_processed: u64,
@@ -106,7 +130,7 @@ fn precheck(phmm: &Phmm, coeffs: &FusedCoeffs, seq: &Sequence) -> Result<()> {
     }
     if coeffs.n_edges() != phmm.n_transitions()
         || coeffs.sigma() != phmm.sigma()
-        || coeffs.in_ptr.len() != phmm.n_states() + 1
+        || coeffs.lowering.in_ptr.len() != phmm.n_states() + 1
     {
         return Err(ApHmmError::InvalidGraph(
             "fused coefficient tables do not match the graph (stale FusedCoeffs?)".into(),
@@ -122,11 +146,25 @@ fn precheck(phmm: &Phmm, coeffs: &FusedCoeffs, seq: &Sequence) -> Result<()> {
     Ok(())
 }
 
+/// True when some forward row of this (graph, policy) pair may
+/// dispatch to the tile kernel — i.e. the lazy tile tables must exist.
+/// Mirrors the `use_tile` gates of `gather_row`, minus the per-row
+/// density term, so ineligible-graph `Adaptive` workloads (the default
+/// EC configuration) never build or hold the tile tables at all.
+#[inline]
+fn may_dispatch_tiles(coeffs: &FusedCoeffs, gather: GatherKind) -> bool {
+    match gather {
+        GatherKind::Csr => false,
+        GatherKind::DenseTile => true,
+        GatherKind::Adaptive => coeffs.lowering.tile_eligible,
+    }
+}
+
 /// t = 0 row: initial distribution times emission (unscaled).
 fn init_row(phmm: &Phmm, coeffs: &FusedCoeffs, s0: u8, row: &mut SparseRow) -> Result<f32> {
     row.idx.clear();
     row.val.clear();
-    for &(i, p) in &coeffs.init {
+    for &(i, p) in &coeffs.lowering.init {
         let v = p * phmm.emission(i as usize, s0);
         if v > 0.0 {
             row.idx.push(i);
@@ -140,13 +178,90 @@ fn init_row(phmm: &Phmm, coeffs: &FusedCoeffs, s0: u8, row: &mut SparseRow) -> R
     Ok(c)
 }
 
-/// Gather one timestep: scatter `prev` into the dense buffer, run the
-/// per-symbol fused SpMV over the topology window, clear the buffer.
+/// CSR gather over the window `[win_lo, win_hi)`: each target walks its
+/// incoming slots (ascending source order).  `dense` carries `pad`
+/// leading zeros — state `i` lives at slot `i + pad`.
+#[inline]
+fn gather_csr(
+    coeffs: &FusedCoeffs,
+    dense: &[f32],
+    pad: usize,
+    win_lo: usize,
+    win_hi: usize,
+    s_t: usize,
+    out: &mut SparseRow,
+) -> f32 {
+    let low = &coeffs.lowering;
+    let coef = coeffs.in_coef_for(s_t);
+    let mut c = 0.0f32;
+    // SAFETY: incoming-CSR invariants mirror the outgoing CSR (built by
+    // incoming_csr from a validated graph), the window bounds are
+    // clamped to n, `ensure` sized the dense buffer to n + pad, and
+    // `precheck` guarantees s_t < Σ so `coef` covers every edge index.
+    unsafe {
+        for to in win_lo..win_hi {
+            let lo = *low.in_ptr.get_unchecked(to) as usize;
+            let hi = *low.in_ptr.get_unchecked(to + 1) as usize;
+            let mut acc = 0.0f32;
+            for e in lo..hi {
+                let from = *low.in_from.get_unchecked(e) as usize;
+                acc += *dense.get_unchecked(from + pad) * *coef.get_unchecked(e);
+            }
+            if acc > 0.0 {
+                out.idx.push(to as u32);
+                out.val.push(acc);
+                c += acc;
+            }
+        }
+    }
+    c
+}
+
+/// Dense-tile gather over the same window: each target dot-products its
+/// fixed-width tile row against the contiguous scratch slice
+/// `dense[to..to + tile_w]` (tile column `x` is source `to + x − pad`,
+/// i.e. scratch slot `to + x`).  Ascending columns are ascending
+/// sources and padded columns contribute `+0.0` to a non-negative
+/// accumulator, so the sums are bit-identical to [`gather_csr`].
+#[inline]
+fn gather_tile(
+    coeffs: &FusedCoeffs,
+    dense: &[f32],
+    win_lo: usize,
+    win_hi: usize,
+    s_t: usize,
+    out: &mut SparseRow,
+) -> f32 {
+    let tw = coeffs.lowering.tile_w;
+    let tiles = coeffs.tile_coef_for(s_t);
+    let mut c = 0.0f32;
+    for to in win_lo..win_hi {
+        let row = &tiles[to * tw..(to + 1) * tw];
+        let win = &dense[to..to + tw];
+        let mut acc = 0.0f32;
+        for (&w, &t) in win.iter().zip(row.iter()) {
+            acc += w * t;
+        }
+        if acc > 0.0 {
+            out.idx.push(to as u32);
+            out.val.push(acc);
+            c += acc;
+        }
+    }
+    c
+}
+
+/// Gather one timestep: scatter `prev` into the dense buffer, dispatch
+/// the window to the CSR or dense-tile kernel per `gather`, clear the
+/// buffer.
 ///
-/// Returns the unscaled row sum `c` and the number of edges traversed.
-/// `out` receives the unscaled row.  The dense buffer is restored to
-/// all-zero before returning (also on dead rows), so scratch reuse is
-/// safe even on error paths.
+/// Returns the unscaled row sum `c`, the number of in-window edges (the
+/// algorithmic workload metric — identical for both kernels, so
+/// dispatch never perturbs the accelerator model's counters), and
+/// whether the tile kernel ran (for the dispatch counters).  `out`
+/// receives the unscaled row.  The dense buffer is restored to all-zero
+/// before returning (also on dead rows), so scratch reuse is safe even
+/// on error paths.
 #[inline]
 fn gather_row(
     coeffs: &FusedCoeffs,
@@ -155,51 +270,49 @@ fn gather_row(
     s_t: usize,
     n: usize,
     out: &mut SparseRow,
-) -> (f32, u64) {
+    gather: GatherKind,
+) -> (f32, u64, bool) {
     out.idx.clear();
     out.val.clear();
+    let pad = coeffs.lowering.tile_w - 1;
     for (&i, &v) in prev.idx.iter().zip(prev.val.iter()) {
-        dense[i as usize] = v;
+        dense[i as usize + pad] = v;
     }
     // Gather-form forward (§Perf in EXPERIMENTS.md): pHMM topology
     // bounds every timestep's successors to the window
     // [first_active, last_active + band), so each window target gathers
-    // its incoming contributions — sequential reads of the incoming
-    // CSR, independent accumulators, no scatter bookkeeping.  The fused
-    // coefficient already carries the target's emission, so the row
-    // value is the raw accumulator.
-    let win_lo = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
-    let win_hi = prev.idx.last().map(|&i| i as usize + coeffs.band).unwrap_or(0).min(n);
+    // its incoming contributions — independent accumulators, no scatter
+    // bookkeeping.  The fused coefficient already carries the target's
+    // emission, so the row value is the raw accumulator.
+    let first = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
+    let last = prev.idx.last().map(|&i| i as usize).unwrap_or(0);
+    let win_lo = first;
+    let win_hi = if prev.idx.is_empty() { 0 } else { (last + coeffs.lowering.band).min(n) };
     out.idx.reserve(win_hi.saturating_sub(win_lo));
     out.val.reserve(win_hi.saturating_sub(win_lo));
-    let coef = coeffs.in_coef_for(s_t);
-    let mut c = 0.0f32;
-    let mut edges = 0u64;
-    // SAFETY: incoming-CSR invariants mirror the outgoing CSR (built by
-    // incoming_csr from a validated graph), the window bounds are
-    // clamped to n ≤ dense.len(), and `precheck` guarantees s_t < Σ so
-    // `coef` covers every edge index.
-    unsafe {
-        for to in win_lo..win_hi {
-            let lo = *coeffs.in_ptr.get_unchecked(to) as usize;
-            let hi = *coeffs.in_ptr.get_unchecked(to + 1) as usize;
-            let mut acc = 0.0f32;
-            for e in lo..hi {
-                let from = *coeffs.in_from.get_unchecked(e) as usize;
-                acc += *dense.get_unchecked(from) * *coef.get_unchecked(e);
-            }
-            edges += (hi - lo) as u64;
-            if acc > 0.0 {
-                out.idx.push(to as u32);
-                out.val.push(acc);
-                c += acc;
-            }
-        }
-    }
+    // Structural gate first (shared with the entry points' tile-build
+    // decision — `use_tile` must stay a subset of `may_dispatch_tiles`
+    // or `tile_coef_for` would panic on missing tables), then the
+    // per-row term: under `Adaptive` the filter-admitted states must
+    // nearly fill their window (filter-thinned rows fall back to the
+    // indexed gather).
+    let use_tile = may_dispatch_tiles(coeffs, gather)
+        && (gather != GatherKind::Adaptive
+            || (!prev.idx.is_empty()
+                && prev.len() as f32 >= DENSE_TILE_MIN_DENSITY * (last - first + 1) as f32));
+    let c = if use_tile {
+        gather_tile(coeffs, dense, win_lo, win_hi, s_t, out)
+    } else {
+        gather_csr(coeffs, dense, pad, win_lo, win_hi, s_t, out)
+    };
     for &i in prev.idx.iter() {
-        dense[i as usize] = 0.0;
+        dense[i as usize + pad] = 0.0;
     }
-    (c, edges)
+    // Window targets are contiguous, so the in-window edge count is one
+    // incoming-CSR pointer difference.
+    let edges =
+        (coeffs.lowering.in_ptr[win_hi] - coeffs.lowering.in_ptr[win_lo]) as u64;
+    (c, edges, use_tile)
 }
 
 /// Run the scaled, filtered forward pass of `seq` over `phmm`, reusing
@@ -213,8 +326,13 @@ pub fn forward_sparse_with(
 ) -> Result<ForwardResult> {
     precheck(phmm, coeffs, seq)?;
     let n = phmm.n_states();
-    scratch.ensure(n);
+    scratch.ensure(n + coeffs.gather_pad());
     scratch.ensure_hist(&opts.filter);
+    if may_dispatch_tiles(coeffs, opts.gather) {
+        // Some row may dispatch to the tile kernel: make sure the lazy
+        // tile tables exist before the timestep loop.
+        coeffs.tiles_for(phmm);
+    }
     let t_len = seq.len();
     let mut stats = FilterStats::default();
     let mut rows = scratch.take_rows_vec();
@@ -241,8 +359,14 @@ pub fn forward_sparse_with(
         let s_t = seq.data[t] as usize;
         let mut row = scratch.take_row();
         let prev = rows.last().unwrap();
-        let (c, edges) = gather_row(coeffs, &mut scratch.dense, prev, s_t, n, &mut row);
+        let (c, edges, used_tile) =
+            gather_row(coeffs, &mut scratch.dense, prev, s_t, n, &mut row, opts.gather);
         edges_processed += edges;
+        if used_tile {
+            stats.rows_dense_tile += 1;
+        } else {
+            stats.rows_csr += 1;
+        }
         if c <= EPS {
             return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
         }
@@ -281,8 +405,11 @@ pub fn score_sparse_with(
 ) -> Result<ScoreResult> {
     precheck(phmm, coeffs, seq)?;
     let n = phmm.n_states();
-    scratch.ensure(n);
+    scratch.ensure(n + coeffs.gather_pad());
     scratch.ensure_hist(&opts.filter);
+    if may_dispatch_tiles(coeffs, opts.gather) {
+        coeffs.tiles_for(phmm);
+    }
     let t_len = seq.len();
     let mut stats = FilterStats::default();
     let mut prev = scratch.take_row();
@@ -311,8 +438,14 @@ pub fn score_sparse_with(
 
     for t in 1..t_len {
         let s_t = seq.data[t] as usize;
-        let (c, edges) = gather_row(coeffs, &mut scratch.dense, &prev, s_t, n, &mut cur);
+        let (c, edges, used_tile) =
+            gather_row(coeffs, &mut scratch.dense, &prev, s_t, n, &mut cur, opts.gather);
         edges_processed += edges;
+        if used_tile {
+            stats.rows_dense_tile += 1;
+        } else {
+            stats.rows_csr += 1;
+        }
         if c <= EPS {
             finish(scratch, prev, cur);
             return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
@@ -370,6 +503,13 @@ mod tests {
         Phmm::error_correction(&seq, &EcDesignParams::default()).unwrap()
     }
 
+    /// A chain graph whose band is structurally near-dense — the regime
+    /// where the adaptive policy's occupancy gate admits the tile
+    /// kernel (shared with the hotpath bench via `testutil`).
+    fn dense_band_graph() -> Phmm {
+        testutil::dense_band_phmm(24)
+    }
+
     #[test]
     fn forward_rows_are_normalized() {
         testutil::check(20, |rng| {
@@ -401,9 +541,167 @@ mod tests {
     }
 
     #[test]
+    fn tile_and_csr_rows_are_bit_identical() {
+        // The dense-tile kernel sums each target's contributions in the
+        // same (ascending source) order as the CSR gather with only
+        // +0.0 padding interleaved, so rows, scales and log-likelihood
+        // must agree to the bit — filters on and off.
+        testutil::check(15, |rng| {
+            let ref_len = rng.range(5, 50);
+            let g = ec_graph(rng, ref_len);
+            let obs_len = rng.range(2, 40);
+            let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+            for filter in [
+                FilterConfig::None,
+                FilterConfig::Sort { size: 30 },
+                FilterConfig::Histogram { size: 30, bins: 64 },
+            ] {
+                let csr = forward_sparse(
+                    &g,
+                    &obs,
+                    &ForwardOptions { filter, gather: GatherKind::Csr },
+                )
+                .unwrap();
+                let tile = forward_sparse(
+                    &g,
+                    &obs,
+                    &ForwardOptions { filter, gather: GatherKind::DenseTile },
+                )
+                .unwrap();
+                let adaptive = forward_sparse(
+                    &g,
+                    &obs,
+                    &ForwardOptions { filter, gather: GatherKind::Adaptive },
+                )
+                .unwrap();
+                assert_eq!(csr.loglik.to_bits(), tile.loglik.to_bits(), "filter {filter:?}");
+                assert_eq!(csr.loglik.to_bits(), adaptive.loglik.to_bits(), "filter {filter:?}");
+                assert_eq!(csr.states_processed, tile.states_processed);
+                assert_eq!(csr.edges_processed, tile.edges_processed);
+                assert_eq!(csr.edges_processed, adaptive.edges_processed);
+                for (t, (a, b)) in csr.rows.iter().zip(tile.rows.iter()).enumerate() {
+                    assert_eq!(a.idx, b.idx, "active set diverged at t={t}");
+                    for (x, y) in a.val.iter().zip(b.val.iter()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "row value diverged at t={t}");
+                    }
+                }
+                for (a, b) in csr.scales.iter().zip(tile.scales.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gather_dispatch_is_instrumented() {
+        let mut rng = XorShift::new(21);
+        let g = ec_graph(&mut rng, 80);
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 40, 4));
+        let t_rows = obs.len() as u64 - 1; // t = 0 is the init row, not a gather
+
+        let csr = forward_sparse(
+            &g,
+            &obs,
+            &ForwardOptions { gather: GatherKind::Csr, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(csr.filter_stats.rows_csr, t_rows);
+        assert_eq!(csr.filter_stats.rows_dense_tile, 0);
+
+        let tile = forward_sparse(
+            &g,
+            &obs,
+            &ForwardOptions { gather: GatherKind::DenseTile, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(tile.filter_stats.rows_dense_tile, t_rows);
+        assert_eq!(tile.filter_stats.rows_csr, 0);
+
+        // The default EC design is occupancy-gated (in-degree ≈ 7 in a
+        // 25-wide band): adaptive dispatch must stay on the CSR gather.
+        let coeffs = FusedCoeffs::new(&g);
+        assert!(!coeffs.lowering().tile_eligible(), "EC band unexpectedly near-dense");
+        let adaptive = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+        assert_eq!(adaptive.filter_stats.rows_csr, t_rows);
+        assert_eq!(adaptive.filter_stats.rows_dense_tile, 0);
+    }
+
+    #[test]
+    fn adaptive_dispatch_tiles_near_dense_bands() {
+        // On a structurally near-dense band the occupancy gate opens
+        // and unfiltered (density ≈ 1) rows take the tile kernel —
+        // bit-identically to the CSR gather.
+        let mut rng = XorShift::new(37);
+        let g = dense_band_graph();
+        let coeffs = FusedCoeffs::new(&g);
+        assert!(coeffs.lowering().tile_eligible());
+        assert!(coeffs.lowering().tile_occupancy() >= 0.5);
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 6, 4));
+        let t_rows = obs.len() as u64 - 1;
+
+        let adaptive = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+        assert_eq!(
+            adaptive.filter_stats.rows_dense_tile, t_rows,
+            "unfiltered near-dense rows must take the tile kernel"
+        );
+        assert_eq!(adaptive.filter_stats.rows_csr, 0);
+
+        let csr = forward_sparse(
+            &g,
+            &obs,
+            &ForwardOptions { gather: GatherKind::Csr, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(adaptive.loglik.to_bits(), csr.loglik.to_bits());
+        for (a, b) in adaptive.rows.iter().zip(csr.rows.iter()) {
+            assert_eq!(a.idx, b.idx);
+            for (x, y) in a.val.iter().zip(b.val.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_are_only_built_when_dispatch_can_reach_them() {
+        // Forced-CSR workloads and occupancy-gated Adaptive workloads
+        // (the default EC configuration) must never pay the Σ·N·tile_w
+        // tile footprint; the first forward that may actually dispatch
+        // to the tile kernel builds the tables once per freeze.
+        let mut rng = XorShift::new(23);
+        let g = ec_graph(&mut rng, 40);
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 20, 4));
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        let opts = ForwardOptions { gather: GatherKind::Csr, ..Default::default() };
+        let fwd = forward_sparse_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+        scratch.recycle(fwd);
+        assert!(coeffs.tiles.get().is_none(), "forced-CSR forward built tiles");
+        // Adaptive on the (ineligible) EC band: still no tiles.
+        let fwd = forward_sparse_with(&g, &coeffs, &obs, &ForwardOptions::default(), &mut scratch)
+            .unwrap();
+        scratch.recycle(fwd);
+        assert!(coeffs.tiles.get().is_none(), "gated adaptive forward built tiles");
+        // Forcing the tile kernel builds them.
+        let opts = ForwardOptions { gather: GatherKind::DenseTile, ..Default::default() };
+        let fwd = forward_sparse_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+        scratch.recycle(fwd);
+        assert!(coeffs.tiles.get().is_some(), "forced-tile forward must build tiles");
+
+        // Adaptive on an eligible band builds them too.
+        let g2 = dense_band_graph();
+        let coeffs2 = FusedCoeffs::new(&g2);
+        let obs2 = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 6, 4));
+        let fwd =
+            forward_sparse_with(&g2, &coeffs2, &obs2, &ForwardOptions::default(), &mut scratch)
+                .unwrap();
+        scratch.recycle(fwd);
+        assert!(coeffs2.tiles.get().is_some(), "eligible adaptive forward must build tiles");
+    }
+
+    #[test]
     fn score_fast_path_matches_full_forward_bitwise() {
         // Same arithmetic, different row lifetime: the two kernels must
-        // agree to the last bit, filters on and off.
+        // agree to the last bit, filters and gather kernels on and off.
         testutil::check(15, |rng| {
             let ref_len = rng.range(5, 50);
             let g = ec_graph(rng, ref_len);
@@ -411,12 +709,17 @@ mod tests {
             let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
             for opts in [
                 ForwardOptions::default(),
-                ForwardOptions { filter: FilterConfig::Sort { size: 30 } },
-                ForwardOptions { filter: FilterConfig::Histogram { size: 30, bins: 64 } },
+                ForwardOptions { filter: FilterConfig::Sort { size: 30 }, ..Default::default() },
+                ForwardOptions {
+                    filter: FilterConfig::Histogram { size: 30, bins: 64 },
+                    ..Default::default()
+                },
+                ForwardOptions { gather: GatherKind::Csr, ..Default::default() },
+                ForwardOptions { gather: GatherKind::DenseTile, ..Default::default() },
             ] {
                 let full = forward_sparse(&g, &obs, &opts).unwrap();
                 let fast = score_sparse(&g, &obs, &opts).unwrap();
-                assert_eq!(full.loglik.to_bits(), fast.to_bits(), "filter {:?}", opts.filter);
+                assert_eq!(full.loglik.to_bits(), fast.to_bits(), "opts {opts:?}");
             }
         });
     }
@@ -469,7 +772,7 @@ mod tests {
         let mut rng = XorShift::new(3);
         let g = ec_graph(&mut rng, 300);
         let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 100, 4));
-        let opts = ForwardOptions { filter: FilterConfig::Sort { size: 50 } };
+        let opts = ForwardOptions { filter: FilterConfig::Sort { size: 50 }, ..Default::default() };
         let r = forward_sparse(&g, &obs, &opts).unwrap();
         for row in &r.rows {
             assert!(row.len() <= 50);
@@ -485,7 +788,10 @@ mod tests {
         let g = Phmm::error_correction(&refseq, &EcDesignParams::default()).unwrap();
         // Observation close to the reference so mass is concentrated.
         let exact = score_sparse(&g, &refseq, &ForwardOptions::default()).unwrap();
-        let opts = ForwardOptions { filter: FilterConfig::Histogram { size: 500, bins: 16 } };
+        let opts = ForwardOptions {
+            filter: FilterConfig::Histogram { size: 500, bins: 16 },
+            ..Default::default()
+        };
         let filt = score_sparse(&g, &refseq, &opts).unwrap();
         assert!((exact - filt).abs() / exact.abs() < 0.02, "{exact} vs {filt}");
     }

@@ -1,0 +1,177 @@
+//! Per-window dense tiles of the fused in-window gather coefficients.
+//!
+//! The CSR gather walks each window target's incoming slots through two
+//! levels of indirection (`in_ptr` → `in_from` → dense buffer), which
+//! defeats the auto-vectorizer.  Within a band, pHMM transition
+//! structure is near-dense (paper §4.2 Observation 5 / Fig. 4 — the
+//! same observation CUDAMPF++ uses to pack pHMM rows into dense SIMD
+//! lanes), so [`DenseTiles`] re-lowers the *same* fused
+//! `α(from→to) · e_s(to)` products into one fixed-width `f32` tile row
+//! per target state:
+//!
+//! ```text
+//! coef[s][to][x] = α(to+x−pad → to) · e_s(to)      pad = tile_w − 1
+//! ```
+//!
+//! Column indices are *window-relative* (column `x` is source
+//! `to + x − pad`; columns with no edge hold `0.0`), and rows are
+//! padded to [`super::lowering::TILE_LANES`], so the gather of one
+//! target is a branchless dense dot product against a contiguous slice
+//! of the (pad-offset) scratch buffer — no index loads, no tail loop.
+//!
+//! **Bitwise contract:** ascending columns are ascending sources, the
+//! exact order the CSR gather sums its slots in, and every padded
+//! column contributes `+0.0` to a non-negative accumulator — so the
+//! tile dot product reproduces the CSR gather's sums *bit for bit*
+//! (`sparse::tests` and `tests/engine_matrix.rs` assert this).  The
+//! block summation order of the E-step is therefore preserved no matter
+//! which kernel executes each row.  The mapping relies on each `(from,
+//! to)` pair owning exactly one tile cell; `Phmm::validate` enforces
+//! strictly-ascending rows (no parallel edges), so a slot can never
+//! silently overwrite another.
+
+use super::lowering::Lowering;
+use crate::phmm::Phmm;
+
+/// Per-symbol dense tile tables for one parameter freeze, built from
+/// the shared [`Lowering`] by [`super::FusedCoeffs`].
+pub struct DenseTiles {
+    n: usize,
+    sigma: usize,
+    tile_w: usize,
+    /// `α · e_s(to)` tiles, symbol-major `[Σ × N × tile_w]`.
+    coef: Vec<f32>,
+}
+
+impl DenseTiles {
+    /// Build the tiles for the current parameters of `phmm` over the
+    /// frozen structure `lowering`.  Cost: `O(Σ · N · tile_w)` bytes and
+    /// `O(Σ · |A|)` multiplies — the products are computed exactly as
+    /// the CSR tables compute them (same operands, same f32 multiply),
+    /// so the two lowerings carry bit-identical coefficients.
+    pub(super) fn new(lowering: &Lowering, phmm: &Phmm) -> DenseTiles {
+        let (n, sigma, tile_w) = (lowering.n_states, lowering.sigma, lowering.tile_w);
+        let pad = tile_w - 1;
+        let mut coef = vec![0.0f32; sigma * n * tile_w];
+        for to in 0..n {
+            let lo = lowering.in_ptr[to] as usize;
+            let hi = lowering.in_ptr[to + 1] as usize;
+            let emit = &phmm.emissions[to * sigma..(to + 1) * sigma];
+            for slot in lo..hi {
+                let from = lowering.in_from[slot] as usize;
+                let x = pad - (to - from);
+                let p = phmm.out_prob[lowering.in_eidx[slot] as usize];
+                for (s, &e_s) in emit.iter().enumerate() {
+                    coef[s * n * tile_w + to * tile_w + x] = p * e_s;
+                }
+            }
+        }
+        DenseTiles { n, sigma, tile_w, coef }
+    }
+
+    /// Tile row width (`Lowering::tile_width`).
+    #[inline]
+    pub fn tile_width(&self) -> usize {
+        self.tile_w
+    }
+
+    /// `(N, Σ)` the tiles were built for.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.sigma)
+    }
+
+    /// The tiles of symbol `s`, row-major `[N × tile_w]`.
+    #[inline]
+    pub(super) fn coef_for(&self, s: usize) -> &[f32] {
+        &self.coef[s * self.n * self.tile_w..(s + 1) * self.n * self.tile_w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernels::FusedCoeffs;
+    use super::super::lowering::Lowering;
+    use super::*;
+    use crate::phmm::EcDesignParams;
+    use crate::seq::Sequence;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn ec_graph(rng: &mut XorShift, len: usize) -> Phmm {
+        let data = testutil::random_seq(rng, len, 4);
+        Phmm::error_correction(&Sequence::from_symbols("r", data), &EcDesignParams::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn tiles_carry_the_csr_products_bit_for_bit() {
+        testutil::check(10, |rng| {
+            let len = rng.range(4, 30);
+            let g = ec_graph(rng, len);
+            let low = Lowering::freeze(&g);
+            let tiles = DenseTiles::new(&low, &g);
+            assert_eq!(tiles.shape(), (g.n_states(), g.sigma()));
+            assert_eq!(tiles.tile_width(), low.tile_width());
+            let pad = low.gather_pad();
+            let tw = tiles.tile_width();
+            for s in 0..g.sigma() {
+                let tc = tiles.coef_for(s);
+                let mut nz = 0usize;
+                for to in 0..g.n_states() {
+                    for slot in low.in_ptr[to] as usize..low.in_ptr[to + 1] as usize {
+                        let from = low.in_from[slot] as usize;
+                        let x = pad - (to - from);
+                        let want = g.out_prob[low.in_eidx[slot] as usize]
+                            * g.emission(to, s as u8);
+                        let got = tc[to * tw + x];
+                        assert_eq!(got.to_bits(), want.to_bits(), "to={to} slot={slot} s={s}");
+                        if got != 0.0 {
+                            nz += 1;
+                        }
+                    }
+                }
+                // Every nonzero tile entry corresponds to an edge slot.
+                let total_nz = tc.iter().filter(|&&v| v != 0.0).count();
+                assert_eq!(total_nz, nz, "stray nonzero tile entries for symbol {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn tiles_match_the_fused_csr_tables() {
+        // The two lowerings of the same freeze hold bit-identical
+        // coefficients slot for slot.
+        let mut rng = XorShift::new(29);
+        let g = ec_graph(&mut rng, 40);
+        let coeffs = FusedCoeffs::new(&g);
+        let low = coeffs.lowering();
+        let tiles = coeffs.tiles_for(&g);
+        assert!(
+            std::ptr::eq(tiles, coeffs.tiles_for(&g)),
+            "tiles must be cached after the first build"
+        );
+        let pad = low.gather_pad();
+        let tw = tiles.tile_width();
+        for s in 0..g.sigma() {
+            let csr = coeffs.in_coef_for(s);
+            let tc = tiles.coef_for(s);
+            for to in 0..g.n_states() {
+                for slot in low.in_ptr[to] as usize..low.in_ptr[to + 1] as usize {
+                    let from = low.in_from[slot] as usize;
+                    let x = pad - (to - from);
+                    assert_eq!(csr[slot].to_bits(), tc[to * tw + x].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ec_tiles_are_structurally_dense_enough_to_matter() {
+        let mut rng = XorShift::new(31);
+        let g = ec_graph(&mut rng, 60);
+        let low = Lowering::freeze(&g);
+        // Fig. 4's point: within the band the structure is far denser
+        // than the N×N matrix (occupancy ~ mean in-degree / tile_w).
+        assert!(low.tile_occupancy() > 0.1, "occupancy {}", low.tile_occupancy());
+    }
+}

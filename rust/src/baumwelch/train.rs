@@ -27,6 +27,7 @@ use std::time::Instant;
 use super::banded::BandedEngine;
 use super::engine::{EngineKind, ExpectationEngine, ReadStats, ReferenceEngine, SparseEngine};
 use super::filter::{FilterConfig, FilterStats};
+use super::lowering::GatherKind;
 use super::sparse::ForwardOptions;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -48,6 +49,9 @@ pub struct TrainConfig {
     /// State filter used during the forward pass (sparse engines; the
     /// dense engines ignore it).
     pub filter: FilterConfig,
+    /// In-window gather kernel policy of the sparse engine (per-row
+    /// density-adaptive by default; every kind is bit-identical).
+    pub gather: GatherKind,
     /// E-step worker threads (1 = single-threaded).  Any value yields
     /// bit-identical results; see the module docs.
     pub n_workers: usize,
@@ -63,6 +67,7 @@ impl Default for TrainConfig {
             max_iters: 3,
             tol: 1e-3,
             filter: FilterConfig::None,
+            gather: GatherKind::Adaptive,
             n_workers: 1,
             engine: EngineKind::Sparse,
         }
@@ -235,7 +240,7 @@ pub fn train_with_engine<E: ExpectationEngine>(
     cfg: &TrainConfig,
     pool: &WorkerPool,
 ) -> Result<TrainResult> {
-    let opts = ForwardOptions { filter: cfg.filter };
+    let opts = ForwardOptions { filter: cfg.filter, gather: cfg.gather };
     let mut result = TrainResult {
         loglik_history: Vec::new(),
         iters: 0,

@@ -93,6 +93,7 @@ pub fn read_phmm_str(text: &str, origin: &str) -> Result<Phmm> {
     let mut emissions: Vec<f32> = Vec::new();
     let mut edges: Vec<Vec<(u32, f32)>> = Vec::new();
     let mut f_init: Vec<f32> = Vec::new();
+    let mut saw_end = false;
 
     for (lineno, line) in lines.enumerate() {
         let line = line.trim();
@@ -166,9 +167,15 @@ pub fn read_phmm_str(text: &str, origin: &str) -> Result<Phmm> {
                 }
                 f_init[idx] = p;
             }
-            "END" => break,
+            "END" => {
+                saw_end = true;
+                break;
+            }
             other => return Err(ctx(&format!("unknown tag {other:?}"))),
         }
+    }
+    if !saw_end {
+        return Err(err("missing END terminator (truncated file?)".into()));
     }
     if kinds.len() != n_states {
         return Err(err(format!("expected {n_states} states, found {}", kinds.len())));
@@ -239,8 +246,97 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_is_byte_identical_for_all_designs_and_alphabets() {
+        // write -> read -> write is exactly the identity on the text:
+        // probabilities are printed with 7 decimals, f32 parsing is the
+        // nearest float (within half an ulp < 5e-8 for values ≤ 1), so
+        // re-printing recovers the same 7-decimal string; edges are
+        // written in (sorted) CSR order on both sides.
+        use crate::phmm::{EcDesignParams, Profile, TraditionalParams};
+        use crate::seq::{DNA, PROTEIN};
+        let dna_seq = Sequence::from_str("r", "ACGTACGTTGCAACGTAC", DNA).unwrap();
+        let protein_seq = Sequence::from_str("r", "ACDEFGHIKLMNPQRSTVWY", PROTEIN).unwrap();
+        let mut graphs: Vec<(String, Phmm)> = Vec::new();
+        for (alph, seq) in [(DNA, &dna_seq), (PROTEIN, &protein_seq)] {
+            graphs.push((
+                format!("error_correction/{}", alph.name()),
+                Phmm::error_correction_for(seq, &EcDesignParams::default(), alph).unwrap(),
+            ));
+            let profile = Profile::from_sequence(seq, alph, 0.9);
+            let traditional = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
+            graphs.push((
+                format!("traditional_folded/{}", alph.name()),
+                traditional.fold_silent(4).unwrap(),
+            ));
+            graphs.push((format!("traditional/{}", alph.name()), traditional));
+        }
+        assert_eq!(graphs.len(), 6, "three designs x two alphabets");
+        for (name, g) in &graphs {
+            let text1 = write_phmm_string(g);
+            let back = read_phmm_str(&text1, "mem").unwrap();
+            assert_eq!(back.design, g.design, "{name}");
+            assert_eq!(back.alphabet.name(), g.alphabet.name(), "{name}");
+            assert_eq!(back.n_states(), g.n_states(), "{name}");
+            let text2 = write_phmm_string(&back);
+            assert_eq!(text1, text2, "write->read->write not byte-identical for {name}");
+        }
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         assert!(read_phmm_str("NOPE\n", "mem").is_err());
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        let valid = write_phmm_string(
+            &Phmm::error_correction(
+                &Sequence::from_str("r", "ACGTAC", crate::seq::DNA).unwrap(),
+                &EcDesignParams::default(),
+            )
+            .unwrap(),
+        );
+
+        // Unknown design name.
+        let bad_design = valid.replacen("design error_correction", "design quantum", 1);
+        assert!(read_phmm_str(&bad_design, "mem").is_err());
+
+        // Truncated `state` line: fewer emissions than the alphabet.
+        let text = "APHMM 1\ndesign error_correction\nalphabet dna\nstates 1\n\
+                    state 0 M 0 0.25 0.25\nEND\n";
+        assert!(read_phmm_str(text, "mem").is_err());
+
+        // Missing END: a file cut off mid-transfer must not parse as a
+        // (possibly truncated) graph.
+        let truncated = valid.replacen("END\n", "", 1);
+        assert!(
+            read_phmm_str(&truncated, "mem").is_err(),
+            "a file without END must be rejected"
+        );
+
+        // Duplicate trans lines (parallel edges) survive the stable
+        // per-row sort but are rejected by Phmm::validate — the dense
+        // lowerings keep one band/tile cell per (from, to) pair, so a
+        // parallel edge cannot be represented faithfully.
+        let dup = valid.replacen("trans 0 1 ", "trans 0 1 0.0100000\ntrans 0 1 ", 1);
+        assert!(
+            dup.contains("trans 0 1 0.0100000\ntrans 0 1 "),
+            "fixture assumption broken: no `trans 0 1` line to duplicate"
+        );
+        assert!(read_phmm_str(&dup, "mem").is_err(), "parallel edges must be rejected");
+
+        // Structurally hostile lines: out-of-range indices, tags before
+        // their prerequisites — errors, never panics.
+        for text in [
+            "APHMM 1\ntrans 3 4 0.5\nEND\n",
+            "APHMM 1\ninit 9 0.5\nEND\n",
+            "APHMM 1\nstate 0 M 0 0.25 0.25 0.25 0.25\nEND\n",
+            "APHMM 1\ndesign error_correction\nalphabet dna\nstates 1\nstate 1 M 0\nEND\n",
+            "APHMM 1\nwhat 1 2 3\nEND\n",
+            "APHMM 1\n",
+        ] {
+            assert!(read_phmm_str(text, "mem").is_err(), "accepted malformed input {text:?}");
+        }
     }
 
     #[test]

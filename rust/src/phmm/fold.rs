@@ -54,7 +54,21 @@ impl Phmm {
             let src = new_index[i];
             let mut acc: Vec<(u32, f32)> = Vec::new();
             self.collect_folded(i, 1.0, 0, max_chain, &mut acc)?;
+            // Converging silent paths (possible in externally-loaded
+            // graphs) can reach the same emitting target more than
+            // once; folding is exact under summation, and parallel
+            // edges are a structural error (`Phmm::validate` — the
+            // dense lowerings hold one cell per (from, to) pair), so
+            // coalesce per target.  First-occurrence order is kept so
+            // duplicate-free graphs fold bit-identically to before.
+            let mut merged: Vec<(u32, f32)> = Vec::new();
             for (to, p) in acc {
+                match merged.iter_mut().find(|e| e.0 == to) {
+                    Some(e) => e.1 += p,
+                    None => merged.push((to, p)),
+                }
+            }
+            for (to, p) in merged {
                 b.add_edge(src, new_index[to as usize], p);
             }
         }
@@ -194,6 +208,38 @@ mod tests {
         let g = Phmm::error_correction(&seq, &Default::default()).unwrap();
         let f = g.fold_silent(5).unwrap();
         assert_eq!(g.n_states(), f.n_states());
+    }
+
+    #[test]
+    fn converging_silent_paths_coalesce_into_one_edge() {
+        // Two silent chains from the same emitting source converging on
+        // the same emitting target (constructible via external formats)
+        // must fold into ONE edge carrying the summed path mass —
+        // parallel edges are rejected by Phmm::validate, so without
+        // coalescing fold_silent would fail on its own output.
+        let mut b = GraphBuilder::new(PhmmDesign::Traditional, DNA);
+        let m0 = b.add_state(StateKind::Match, 0, vec![0.25; 4]);
+        let da = b.add_state(StateKind::Deletion, 1, vec![0.0; 4]);
+        let db = b.add_state(StateKind::Deletion, 1, vec![0.0; 4]);
+        let m1 = b.add_state(StateKind::Match, 2, vec![0.25; 4]);
+        b.add_edge(m0, da, 0.3);
+        b.add_edge(m0, db, 0.3);
+        b.add_edge(m0, m1, 0.4);
+        b.add_edge(da, m1, 1.0);
+        b.add_edge(db, m1, 1.0);
+        let mut f_init = vec![0.0f32; 4];
+        f_init[0] = 1.0;
+        let g = b.build(f_init).unwrap();
+        assert!(g.has_silent_states());
+
+        let f = g.fold_silent(5).unwrap();
+        f.validate().unwrap();
+        assert_eq!(f.n_states(), 2);
+        let edges: Vec<(u32, f32)> = f.outgoing(0).collect();
+        assert_eq!(edges.len(), 1, "converging paths must coalesce: {edges:?}");
+        assert_eq!(edges[0].0, 1);
+        // 0.4 direct + 0.3 via Da + 0.3 via Db, renormalized to 1.
+        assert!((edges[0].1 - 1.0).abs() < 1e-6, "summed mass {edges:?}");
     }
 
     #[test]

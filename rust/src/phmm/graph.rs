@@ -203,6 +203,21 @@ impl Phmm {
                         self.out_prob[e]
                     )));
                 }
+                // Rows must be strictly ascending in `to`: parallel
+                // edges (duplicate from->to pairs) would be summed by
+                // the CSR kernels but silently *overwritten* by the
+                // dense lowerings (one band/tile cell per (from, to) in
+                // `to_banded` and `baumwelch::tile`), so they are a
+                // structural error, not a representable graph.  Every
+                // in-crate constructor sorts rows (`GraphBuilder::build`,
+                // `read_phmm_str`), so this only fires on duplicates or
+                // hand-assembled unsorted CSR arrays.
+                if e > lo && self.out_to[e] <= self.out_to[e - 1] {
+                    return Err(ApHmmError::InvalidGraph(format!(
+                        "row {i}: out_to not strictly ascending at edge {e} \
+                         (parallel or unsorted edges)"
+                    )));
+                }
             }
             let erow = &self.emissions[i * s..(i + 1) * s];
             let esum: f32 = erow.iter().sum();
@@ -358,6 +373,19 @@ mod tests {
         b.add_state(StateKind::Match, 0, vec![0.25; 4]);
         b.add_state(StateKind::Match, 1, vec![0.25; 4]);
         b.add_edge(1, 0, 1.0);
+        assert!(b.build(vec![1.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_parallel_edges() {
+        // Two edges on the same (from, to) pair: the CSR kernels would
+        // sum them but the banded/tile lowerings keep one cell per
+        // pair, so validate must reject the graph outright.
+        let mut b = GraphBuilder::new(PhmmDesign::ErrorCorrection, DNA);
+        b.add_state(StateKind::Match, 0, vec![0.25; 4]);
+        b.add_state(StateKind::Match, 1, vec![0.25; 4]);
+        b.add_edge(0, 1, 0.5);
+        b.add_edge(0, 1, 0.5);
         assert!(b.build(vec![1.0, 0.0]).is_err());
     }
 

@@ -21,6 +21,20 @@
 //! change (retraining) produces a new key instead of serving stale
 //! coefficients.
 //!
+//! # Filter/train independence
+//!
+//! [`profile_hash`] is a pure function of the *graph* — it has no
+//! `FilterConfig`, `GatherKind` or `TrainConfig` input, and must never
+//! grow one.  The invariant this encodes: a frozen [`PreparedAny`]
+//! (the `baumwelch::lowering` products plus coefficient tables) bakes
+//! in **parameters only**; state filtering and gather-kernel dispatch
+//! are strictly runtime-side (`ForwardOptions`), so one cached entry
+//! serves every filter/gather configuration bit-identically to a fresh
+//! freeze (asserted by `prepared_tables_are_filter_agnostic` below).
+//! If frozen tables ever started depending on a runtime config, this
+//! keying would silently serve wrong coefficients across tenants with
+//! different configs.
+//!
 //! # Concurrency
 //!
 //! Lookups take a short mutex; freezing happens **outside** the lock so
@@ -284,6 +298,54 @@ mod tests {
         let g = ec_graph(7, 20);
         let cache = PreparedCache::new(2);
         assert!(cache.get_or_freeze(profile_hash(&g), EngineKind::Xla, &g).is_err());
+    }
+
+    #[test]
+    fn prepared_tables_are_filter_agnostic() {
+        // The module-doc invariant: profile_hash has no FilterConfig /
+        // GatherKind / TrainConfig input, frozen tables bake in
+        // parameters only, and therefore ONE cached entry must serve
+        // every runtime filter/gather configuration bit-identically to
+        // a table frozen fresh for that configuration.
+        use crate::baumwelch::{FilterConfig, ForwardOptions, GatherKind};
+        let g = ec_graph(11, 60);
+        let mut rng = XorShift::new(12);
+        let read = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 40, 4));
+        let h = profile_hash(&g);
+
+        let cache = PreparedCache::new(2);
+        let (entry, _) = cache.get_or_freeze(h, EngineKind::Sparse, &g).unwrap();
+        // Exercising the frozen tables (including the lazy banded
+        // lowering built by posterior decode) must not perturb the
+        // content hash: the hash reads the graph, never the tables.
+        entry.posterior(&g, &read).unwrap();
+        assert_eq!(h, profile_hash(&g), "freezing/decoding changed the profile hash");
+
+        let mut scratch = entry.make_scratch(&g);
+        for filter in [
+            FilterConfig::None,
+            FilterConfig::Sort { size: 50 },
+            FilterConfig::histogram_default(),
+        ] {
+            for gather in [GatherKind::Adaptive, GatherKind::Csr, GatherKind::DenseTile] {
+                let opts = ForwardOptions { filter, gather };
+                // A fresh freeze performed "for" this runtime config...
+                let fresh = PreparedAny::freeze(EngineKind::Sparse, &g).unwrap();
+                let mut fs = fresh.make_scratch(&g);
+                let want = fresh.score(&g, &read, &opts, &mut fs).unwrap();
+                // ...is indistinguishable from the one shared entry.
+                let got = entry.score(&g, &read, &opts, &mut scratch).unwrap();
+                assert_eq!(
+                    want.loglik.to_bits(),
+                    got.loglik.to_bits(),
+                    "cached entry diverged under {filter:?}/{gather:?}"
+                );
+                // And every configuration maps to the same cache key:
+                // the second lookup is a hit, never a re-freeze.
+                let (_, hit) = cache.get_or_freeze(h, EngineKind::Sparse, &g).unwrap();
+                assert!(hit, "runtime config must not influence the cache key");
+            }
+        }
     }
 
     #[test]

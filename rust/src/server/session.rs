@@ -247,7 +247,7 @@ impl ExecCtx<'_> {
     }
 
     fn opts(&self) -> ForwardOptions {
-        ForwardOptions { filter: self.cfg.train.filter }
+        ForwardOptions { filter: self.cfg.train.filter, gather: self.cfg.train.gather }
     }
 }
 

@@ -59,6 +59,49 @@ pub fn random_seq(rng: &mut XorShift, len: usize, sigma: usize) -> Vec<u8> {
     (0..len).map(|_| rng.below(sigma) as u8).collect()
 }
 
+/// A structurally near-dense banded chain [`Phmm`]: every state reaches
+/// its next three successors (band 4 = one `TILE_LANES` tile width,
+/// occupancy ≈ 0.69 ≥ `TILE_MIN_OCCUPANCY`), uniform DNA emissions,
+/// all start mass on state 0 — the regime where the adaptive gather
+/// policy's occupancy gate admits the dense-tile kernel, unlike the
+/// default EC design (in-degree ≈ 7 in a 25-wide band).  Shared by the
+/// `baumwelch::sparse` dispatch tests and the hotpath bench so both pin
+/// the same graph.  Forward passes survive any read shorter than `n`
+/// (the minimum hop is one state per timestep).
+pub fn dense_band_phmm(n: usize) -> crate::phmm::Phmm {
+    use crate::phmm::{Phmm, PhmmDesign, StateKind};
+    use crate::seq::DNA;
+    let mut out_ptr = vec![0u32];
+    let mut out_to = Vec::new();
+    let mut out_prob = Vec::new();
+    for i in 0..n {
+        let targets: Vec<usize> = (i + 1..n.min(i + 4)).collect();
+        if !targets.is_empty() {
+            let p = 1.0 / targets.len() as f32;
+            for &t in &targets {
+                out_to.push(t as u32);
+                out_prob.push(p);
+            }
+        }
+        out_ptr.push(out_to.len() as u32);
+    }
+    let mut f_init = vec![0.0f32; n];
+    f_init[0] = 1.0;
+    let g = Phmm {
+        design: PhmmDesign::ErrorCorrection,
+        alphabet: DNA,
+        kinds: vec![StateKind::Match; n],
+        position: (0..n as u32).collect(),
+        out_ptr,
+        out_to,
+        out_prob,
+        emissions: vec![0.25; n * 4],
+        f_init,
+    };
+    g.validate().expect("dense band graph must validate");
+    g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

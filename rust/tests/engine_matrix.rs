@@ -8,7 +8,8 @@
 //! the pre-refactor scoped-thread implementation made.
 
 use aphmm::baumwelch::{
-    train, train_in, BandedCoeffs, BandedEngine, EngineKind, FilterConfig, TrainConfig,
+    train, train_in, BandedCoeffs, BandedEngine, EngineKind, ExpectationEngine, FilterConfig,
+    ForwardOptions, GatherKind, ReadStats, SparseEngine, TrainConfig,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::pool::WorkerPool;
@@ -100,6 +101,91 @@ fn banded_fused_coefficients_match_prerefactor_scan() {
         let o: Vec<f64> = old.gamma_den.iter().map(|&x| x as f64).collect();
         let n: Vec<f64> = new_full.gamma_den.iter().map(|&x| x as f64).collect();
         testutil::assert_all_close(&n, &o, 5e-3, 1e-5);
+    }
+}
+
+#[test]
+fn gather_matrix_tile_vs_csr_bit_identical_merged_sums() {
+    // The lowering-layer acceptance check: forced-dense, forced-sparse
+    // and adaptive gather dispatch must produce identical
+    // log-likelihoods and bit-identical merged expectation sums on the
+    // EC workload — the tile kernel preserves the CSR gather's block
+    // summation order exactly.
+    let (reference_seq, reads) = scenario(97, 100, 9);
+    let g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+    let engine = SparseEngine;
+    let prep = engine.prepare(&g).unwrap();
+    for filter in [FilterConfig::None, FilterConfig::histogram_default()] {
+        let mut baseline: Option<(f64, Vec<u64>, Vec<u64>)> = None;
+        for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
+            let opts = ForwardOptions { filter, gather };
+            let mut scratch = engine.make_scratch(&g);
+            let mut acc = engine.make_acc(&g);
+            let mut stats = ReadStats::default();
+            for read in &reads {
+                let s = engine
+                    .accumulate_read(&g, &prep, read, &opts, &mut scratch, &mut acc)
+                    .unwrap();
+                stats.merge(&s);
+            }
+            // The dispatch choice is instrumented per row.
+            let rows = stats.timesteps - reads.len() as u64; // t=0 rows are not gathers
+            assert_eq!(stats.filter_stats.rows_csr + stats.filter_stats.rows_dense_tile, rows);
+            match gather {
+                GatherKind::Csr => assert_eq!(stats.filter_stats.rows_dense_tile, 0),
+                GatherKind::DenseTile => assert_eq!(stats.filter_stats.rows_csr, 0),
+                // The default EC band is occupancy-gated (≈ 0.25 <
+                // TILE_MIN_OCCUPANCY), so Adaptive must stay on CSR
+                // here; the tile-firing side of the policy is pinned by
+                // `sparse::tests::adaptive_dispatch_tiles_near_dense_bands`.
+                GatherKind::Adaptive => assert_eq!(stats.filter_stats.rows_dense_tile, 0),
+            }
+            let (loglik, n) = engine.observations(&acc);
+            assert_eq!(n, reads.len() as u64);
+            let xi_bits: Vec<u64> = acc.xi.iter().map(|v| v.to_bits()).collect();
+            let mut sum_bits: Vec<u64> = acc.gamma_den.iter().map(|v| v.to_bits()).collect();
+            sum_bits.extend(acc.trans_den.iter().map(|v| v.to_bits()));
+            sum_bits.extend(acc.e_num.iter().map(|v| v.to_bits()));
+            match &baseline {
+                None => baseline = Some((loglik, xi_bits, sum_bits)),
+                Some((ll, xi, sums)) => {
+                    assert_eq!(loglik.to_bits(), ll.to_bits(), "{gather:?}/{filter:?}");
+                    assert_eq!(&xi_bits, xi, "xi diverged under {gather:?}/{filter:?}");
+                    assert_eq!(&sum_bits, sums, "sums diverged under {gather:?}/{filter:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_matrix_training_is_bit_identical_end_to_end() {
+    // Same property through the full parallel training loop: histories
+    // and trained parameters must not depend on the gather kernel, for
+    // any worker count.
+    let (reference_seq, reads) = scenario(101, 80, 17);
+    let mut baseline: Option<(Vec<f64>, Vec<f32>, Vec<f32>)> = None;
+    for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
+        for n_workers in [1usize, 4] {
+            let cfg = TrainConfig {
+                max_iters: 3,
+                tol: 0.0,
+                gather,
+                n_workers,
+                ..Default::default()
+            };
+            let mut g =
+                Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+            let res = train(&mut g, &reads, &cfg).unwrap();
+            match &baseline {
+                None => baseline = Some((res.loglik_history, g.out_prob, g.emissions)),
+                Some((hist, out_prob, emissions)) => {
+                    assert_eq!(&res.loglik_history, hist, "{gather:?} x{n_workers}");
+                    assert_eq!(&g.out_prob, out_prob, "{gather:?} x{n_workers}");
+                    assert_eq!(&g.emissions, emissions, "{gather:?} x{n_workers}");
+                }
+            }
+        }
     }
 }
 

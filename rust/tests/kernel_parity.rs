@@ -32,9 +32,12 @@ fn to_dense(row: &aphmm::baumwelch::SparseRow, n: usize) -> Vec<f64> {
 
 fn filter_cases() -> [ForwardOptions; 3] {
     [
-        ForwardOptions { filter: FilterConfig::None },
-        ForwardOptions { filter: FilterConfig::Sort { size: 40 } },
-        ForwardOptions { filter: FilterConfig::Histogram { size: 40, bins: 128 } },
+        ForwardOptions { filter: FilterConfig::None, ..Default::default() },
+        ForwardOptions { filter: FilterConfig::Sort { size: 40 }, ..Default::default() },
+        ForwardOptions {
+            filter: FilterConfig::Histogram { size: 40, bins: 128 },
+            ..Default::default()
+        },
     ]
 }
 
@@ -168,7 +171,7 @@ fn score_fast_path_memory_is_independent_of_sequence_length() {
     let short_read = long_read.slice(0, 100);
     assert!(long_read.len() >= 15 * short_read.len());
     let coeffs = FusedCoeffs::new(&g);
-    let opts = ForwardOptions { filter: FilterConfig::histogram_default() };
+    let opts = ForwardOptions { filter: FilterConfig::histogram_default(), ..Default::default() };
 
     let mut scratch = ForwardScratch::new(&g);
     score_sparse_with(&g, &coeffs, &short_read, &opts, &mut scratch).unwrap();
@@ -180,8 +183,9 @@ fn score_fast_path_memory_is_independent_of_sequence_length() {
         rows_after_short,
         "longer sequences must not allocate more row buffers"
     );
-    // The dense state buffer is sized by the graph, not the sequence.
-    assert_eq!(scratch.dense_len(), g.n_states());
+    // The dense state buffer is sized by the graph (states + the
+    // dense-tile gather pad), not the sequence.
+    assert_eq!(scratch.dense_len(), g.n_states() + coeffs.gather_pad());
 
     // Contrast: the row-materializing forward scales with T...
     let mut full_scratch = ForwardScratch::new(&g);
