@@ -16,6 +16,8 @@
 
 use std::time::Instant;
 
+use crate::error::{ApHmmError, Result};
+
 /// Filtering policy for the sparse engine.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FilterConfig {
@@ -46,6 +48,28 @@ impl FilterConfig {
     /// operating point), 128 exponent bins.
     pub fn histogram_default() -> Self {
         FilterConfig::Histogram { size: 500, bins: 128 }
+    }
+
+    /// Reject configurations that cannot mean anything: `size == 0`
+    /// (an empty keep-set would kill every forward path — disabling
+    /// filtering is spelled `FilterConfig::None`) and `bins == 0`.
+    /// Config parsing calls this so a bad `filter_size` is a clean
+    /// config error; the filters themselves additionally clamp
+    /// defensively (see [`SortFilter::select`]).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            FilterConfig::Sort { size: 0 } | FilterConfig::Histogram { size: 0, .. } => {
+                Err(ApHmmError::Config(
+                    "filter_size must be >= 1 (an empty keep-set would kill every \
+                     forward path; use filter = \"none\" to disable filtering)"
+                        .into(),
+                ))
+            }
+            FilterConfig::Histogram { bins: 0, .. } => {
+                Err(ApHmmError::Config("filter_bins must be >= 1".into()))
+            }
+            _ => Ok(()),
+        }
     }
 }
 
@@ -91,10 +115,16 @@ impl SortFilter {
     /// Uses an O(m) partial selection (`select_nth_unstable`) rather than
     /// a full sort; ties at the cut are broken arbitrarily, matching the
     /// semantics of Apollo's best-n heap.
+    ///
+    /// `keep == 0` is clamped to 1: an empty keep-set would kill every
+    /// forward path (and `keep - 1` below would underflow).
+    /// [`FilterConfig::validate`] rejects `size == 0` at config parse,
+    /// so the clamp is defense-in-depth for direct callers.
     pub fn select(idx: &mut Vec<u32>, val: &mut Vec<f32>, keep: usize, stats: &mut FilterStats) {
         let t0 = Instant::now();
         stats.calls += 1;
         stats.states_in += idx.len() as u64;
+        let keep = keep.max(1);
         if idx.len() > keep {
             let mut pairs: Vec<(f32, u32)> =
                 val.iter().copied().zip(idx.iter().copied()).collect();
@@ -147,6 +177,11 @@ impl HistogramFilter {
     /// linear pass — no sorting, the base-and-offset addressing of the
     /// hardware design degenerates to this threshold compare in software.
     ///
+    /// `keep == 0` is clamped to 1 (same defensive semantics as
+    /// [`SortFilter::select`]); bin granularity then admits the whole
+    /// top bin.  A dead row (all values zero, `vmax == 0.0`) is left
+    /// untouched: there is nothing to rank, and truncating arbitrarily
+    /// would mask the numerical failure the caller is about to report.
     pub fn select(
         &mut self,
         idx: &mut Vec<u32>,
@@ -157,6 +192,7 @@ impl HistogramFilter {
         let t0 = Instant::now();
         stats.calls += 1;
         stats.states_in += idx.len() as u64;
+        let keep = keep.max(1);
         if idx.len() > keep {
             let vmax = val.iter().copied().fold(0.0f32, f32::max);
             if vmax > 0.0 {
@@ -293,6 +329,74 @@ mod tests {
         let mut sorted = idx.clone();
         sorted.sort_unstable();
         assert_eq!(idx, sorted);
+    }
+
+    #[test]
+    fn keep_zero_is_clamped_not_a_panic() {
+        // Regression: `keep - 1` underflowed in SortFilter::select, so
+        // `filter_size = 0` in a config crashed a whole training run.
+        // The clamp keeps the single best state; the histogram keeps
+        // (at least) the whole top bin.
+        let mut idx: Vec<u32> = (0..20).collect();
+        let mut val: Vec<f32> = (0..20).map(|i| (i as f32 + 1.0) / 20.0).collect();
+        let mut stats = FilterStats::default();
+        SortFilter::select(&mut idx, &mut val, 0, &mut stats);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx[0], 19, "the clamp must keep the best state");
+
+        let mut idx: Vec<u32> = (0..20).collect();
+        let mut val: Vec<f32> = (0..20).map(|i| (i as f32 + 1.0) / 20.0).collect();
+        let mut hf = HistogramFilter::new(128);
+        hf.select(&mut idx, &mut val, 0, &mut stats);
+        assert!(!idx.is_empty(), "histogram must keep at least the top bin");
+        assert!(idx.contains(&19));
+    }
+
+    #[test]
+    fn keep_at_or_above_n_is_a_no_op() {
+        for keep in [5usize, 6, 1000] {
+            let mut idx: Vec<u32> = (0..5).collect();
+            let mut val = vec![0.1, 0.9, 0.3, 0.2, 0.5];
+            let mut stats = FilterStats::default();
+            SortFilter::select(&mut idx, &mut val, keep, &mut stats);
+            assert_eq!(idx.len(), 5, "keep = {keep}");
+            let mut hf = HistogramFilter::new(128);
+            hf.select(&mut idx, &mut val, keep, &mut stats);
+            assert_eq!(idx.len(), 5, "keep = {keep}");
+        }
+    }
+
+    #[test]
+    fn dead_rows_pass_through_the_histogram_unfiltered() {
+        // Pinned behavior: when every value is zero (`vmax == 0.0`) the
+        // histogram filter deliberately skips selection — a dead row is
+        // a numerical failure the forward pass reports itself
+        // (`ApHmmError::Numerical`), and truncating it arbitrarily here
+        // would mask which states died.
+        let mut idx: Vec<u32> = (0..100).collect();
+        let mut val = vec![0.0f32; 100];
+        let mut hf = HistogramFilter::new(128);
+        let mut stats = FilterStats::default();
+        hf.select(&mut idx, &mut val, 10, &mut stats);
+        assert_eq!(idx.len(), 100, "dead rows must not be truncated");
+        assert_eq!(stats.states_out, 100);
+        // The sort filter has no vmax gate: it truncates ties
+        // arbitrarily, which is also fine — every kept state is as
+        // (non-)alive as every dropped one.
+        let mut idx: Vec<u32> = (0..100).collect();
+        let mut val = vec![0.0f32; 100];
+        SortFilter::select(&mut idx, &mut val, 10, &mut stats);
+        assert_eq!(idx.len(), 10);
+    }
+
+    #[test]
+    fn validate_rejects_zero_sizes() {
+        assert!(FilterConfig::Sort { size: 0 }.validate().is_err());
+        assert!(FilterConfig::Histogram { size: 0, bins: 128 }.validate().is_err());
+        assert!(FilterConfig::Histogram { size: 500, bins: 0 }.validate().is_err());
+        assert!(FilterConfig::None.validate().is_ok());
+        assert!(FilterConfig::Sort { size: 1 }.validate().is_ok());
+        assert!(FilterConfig::histogram_default().validate().is_ok());
     }
 
     #[test]

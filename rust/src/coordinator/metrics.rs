@@ -8,7 +8,11 @@
 //! most recently absorbed [`crate::server::JobQueue`] snapshot, so the
 //! summary shows whether `queue_depth` actually exerted backpressure.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::server::queue::MAX_TRACKED_TENANTS;
 
 /// Latency histogram buckets: bucket `i` holds latencies in
 /// `[2^(i-1), 2^i)` ns (bucket 0 holds 0 ns; the last bucket holds
@@ -43,7 +47,33 @@ pub struct Metrics {
     pub producer_blocks: AtomicU64,
     /// Power-of-two latency histogram (see [`LATENCY_BUCKETS`]).
     latency_hist: [AtomicU64; LATENCY_BUCKETS],
+    /// Per-tenant gauges (multi-tenant serving; empty for coordinator
+    /// runs).  BTreeMap keeps snapshot order deterministic.
+    tenants: Mutex<BTreeMap<String, TenantGauges>>,
 }
+
+/// Per-tenant counter block inside [`Metrics`].  Completion counts are
+/// recorded by workers; the admission-side gauges mirror the latest
+/// absorbed [`crate::server::TenantStats`] snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+struct TenantGauges {
+    admitted: u64,
+    completed: u64,
+    failed: u64,
+    quota_refusals: u64,
+    queued: u64,
+    in_flight: u64,
+}
+
+// Tenant-map bounding (tenant ids are client-controlled and must not
+// grow the map, or every summary, without limit): the accurate
+// eviction runs in [`Metrics::evict_stale_tenants`], fed the queue's
+// *current* tenant set by the server right after it absorbed fresh
+// gauges — the mirrored gauges alone can be stale and must not decide
+// evictions, or a tenant with real queued work could lose its
+// counters.  `record_tenant_done` only refuses to create brand-new
+// entries past a generous overflow bound (attribution for overflow
+// tenants is dropped, live entries are never evicted there).
 
 impl Default for Metrics {
     fn default() -> Self {
@@ -59,6 +89,7 @@ impl Default for Metrics {
             queue_high_water: AtomicU64::new(0),
             producer_blocks: AtomicU64::new(0),
             latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            tenants: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -108,6 +139,66 @@ impl Metrics {
         self.producer_blocks.store(blocks, Ordering::Relaxed);
     }
 
+    /// Record a completed (or failed) request for `tenant`.  Past the
+    /// overflow bound, completions of brand-new tenants go unattributed
+    /// (the aggregate counters still see them) rather than evicting a
+    /// live entry on possibly-stale gauges.
+    pub fn record_tenant_done(&self, tenant: &str, ok: bool) {
+        let mut tenants = self.tenants.lock().unwrap();
+        if !tenants.contains_key(tenant) && tenants.len() >= MAX_TRACKED_TENANTS * 4 {
+            return;
+        }
+        let t = tenants.entry(tenant.to_string()).or_default();
+        if ok {
+            t.completed += 1;
+        } else {
+            t.failed += 1;
+        }
+    }
+
+    /// Fold one tenant's admission-side gauge snapshot in (idempotent
+    /// for one queue — the counters mirror the snapshot).
+    pub fn absorb_tenant(
+        &self,
+        tenant: &str,
+        admitted: u64,
+        quota_refusals: u64,
+        queued: u64,
+        in_flight: u64,
+    ) {
+        let mut tenants = self.tenants.lock().unwrap();
+        let t = tenants.entry(tenant.to_string()).or_default();
+        t.admitted = admitted;
+        t.quota_refusals = quota_refusals;
+        t.queued = queued;
+        t.in_flight = in_flight;
+    }
+
+    /// Reconcile the tenant map against `active` — the queue's
+    /// *current* tenant set, whose just-absorbed gauges are
+    /// authoritative — then bound it past [`MAX_TRACKED_TENANTS`].  A
+    /// tenant absent from `active` has nothing queued or in flight
+    /// (the queue evicts only idle entries, so absence means idle):
+    /// its mirrored gauges are cleared first, so a stale snapshot
+    /// taken while it was busy can neither pin the entry here forever
+    /// nor report phantom queued work.  A tenant with real work is in
+    /// `active` and can never be evicted.
+    pub fn evict_stale_tenants(&self, active: &[&str]) {
+        let active: std::collections::HashSet<&str> = active.iter().copied().collect();
+        let mut tenants = self.tenants.lock().unwrap();
+        for (name, t) in tenants.iter_mut() {
+            if !active.contains(name.as_str()) {
+                t.queued = 0;
+                t.in_flight = 0;
+            }
+        }
+        if tenants.len() > MAX_TRACKED_TENANTS {
+            tenants.retain(|name, t| {
+                t.queued > 0 || t.in_flight > 0 || active.contains(name.as_str())
+            });
+        }
+    }
+
     /// Latency quantile from the histogram: the upper bound of the
     /// first bucket whose cumulative count reaches `q` of all recorded
     /// jobs (0 when nothing was recorded).
@@ -133,7 +224,23 @@ impl Metrics {
     pub fn summary(&self, wall_seconds: f64) -> MetricsSummary {
         let done = self.jobs_done.load(Ordering::Relaxed);
         let sum = self.latency_sum_ns.load(Ordering::Relaxed);
+        let tenants = self
+            .tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, t)| TenantSummary {
+                tenant: name.clone(),
+                admitted: t.admitted,
+                completed: t.completed,
+                failed: t.failed,
+                quota_refusals: t.quota_refusals,
+                queued: t.queued,
+                in_flight: t.in_flight,
+            })
+            .collect();
         MetricsSummary {
+            tenants,
             jobs_done: done,
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             timesteps: self.timesteps.load(Ordering::Relaxed),
@@ -151,8 +258,27 @@ impl Metrics {
     }
 }
 
+/// One tenant's slice of a [`MetricsSummary`].
+#[derive(Clone, Debug, Default)]
+pub struct TenantSummary {
+    /// Tenant id.
+    pub tenant: String,
+    /// Requests admitted to the queue.
+    pub admitted: u64,
+    /// Requests completed successfully.
+    pub completed: u64,
+    /// Requests that answered an error.
+    pub failed: u64,
+    /// Admissions refused/blocked by a tenant quota cap.
+    pub quota_refusals: u64,
+    /// Requests currently queued (gauge).
+    pub queued: u64,
+    /// Requests currently in flight (gauge).
+    pub in_flight: u64,
+}
+
 /// Snapshot of the metrics.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct MetricsSummary {
     /// Jobs completed.
     pub jobs_done: u64,
@@ -180,6 +306,9 @@ pub struct MetricsSummary {
     pub queue_high_water: u64,
     /// Producer admissions refused/blocked by a full queue.
     pub producer_blocks: u64,
+    /// Per-tenant gauges, sorted by tenant id (empty for coordinator
+    /// runs — only the serving layer is multi-tenant).
+    pub tenants: Vec<TenantSummary>,
 }
 
 #[cfg(test)]
@@ -230,6 +359,29 @@ mod tests {
         let s = m.summary(1.0);
         assert_eq!(s.latency_p50_ms, 0.0);
         assert_eq!(s.latency_p99_ms, 0.0);
+    }
+
+    #[test]
+    fn tenant_gauges_fold_into_the_summary_sorted() {
+        let m = Metrics::default();
+        m.record_tenant_done("bravo", true);
+        m.record_tenant_done("bravo", false);
+        m.record_tenant_done("alpha", true);
+        m.absorb_tenant("bravo", 5, 2, 1, 1);
+        m.absorb_tenant("alpha", 3, 0, 0, 1);
+        // Absorb is idempotent: a second snapshot mirrors, not adds.
+        m.absorb_tenant("alpha", 4, 0, 0, 0);
+        let s = m.summary(1.0);
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].tenant, "alpha");
+        assert_eq!(s.tenants[0].admitted, 4);
+        assert_eq!(s.tenants[0].completed, 1);
+        assert_eq!(s.tenants[0].in_flight, 0);
+        assert_eq!(s.tenants[1].tenant, "bravo");
+        assert_eq!(s.tenants[1].admitted, 5);
+        assert_eq!(s.tenants[1].completed, 1);
+        assert_eq!(s.tenants[1].failed, 1);
+        assert_eq!(s.tenants[1].quota_refusals, 2);
     }
 
     #[test]

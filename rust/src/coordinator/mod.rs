@@ -30,7 +30,7 @@
 mod metrics;
 mod xla_device;
 
-pub use metrics::{Metrics, MetricsSummary};
+pub use metrics::{Metrics, MetricsSummary, TenantSummary};
 pub use xla_device::{XlaDevice, XlaEngine, XlaHandle};
 
 use std::sync::Mutex;

@@ -142,6 +142,15 @@ pub fn read_phmm_str(text: &str, origin: &str) -> Result<Phmm> {
                         .next()
                         .and_then(|s| s.parse().ok())
                         .ok_or_else(|| ctx("missing emission"))?;
+                    // Reject here, not in Phmm::validate: a NaN poisons
+                    // the row-sum check there into silently passing,
+                    // and validate only checks the row SUM — a hostile
+                    // `1.5 -0.5 ...` row sums to 1 yet would feed
+                    // negative probabilities into the forward pass.
+                    // Tolerance above 1 mirrors validate's edge check.
+                    if !(0.0..=1.0 + 1e-6).contains(&e) {
+                        return Err(ctx("emission out of [0, 1]"));
+                    }
                     emissions.push(e);
                 }
             }
@@ -152,6 +161,9 @@ pub fn read_phmm_str(text: &str, origin: &str) -> Result<Phmm> {
                     it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad to"))?;
                 let p: f32 =
                     it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad prob"))?;
+                if !p.is_finite() {
+                    return Err(ctx("non-finite prob"));
+                }
                 if from >= n_states {
                     return Err(ctx("from out of range"));
                 }
@@ -162,6 +174,12 @@ pub fn read_phmm_str(text: &str, origin: &str) -> Result<Phmm> {
                     it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad index"))?;
                 let p: f32 =
                     it.next().and_then(|s| s.parse().ok()).ok_or_else(|| ctx("bad prob"))?;
+                // Per-element range check (covers NaN too): validate
+                // only checks the init SUM, so a negative entry
+                // balanced by an oversized one would slip through.
+                if !(0.0..=1.0 + 1e-6).contains(&p) {
+                    return Err(ctx("init prob out of [0, 1]"));
+                }
                 if idx >= n_states {
                     return Err(ctx("init out of range"));
                 }
@@ -337,6 +355,63 @@ mod tests {
         ] {
             assert!(read_phmm_str(text, "mem").is_err(), "accepted malformed input {text:?}");
         }
+    }
+
+    #[test]
+    fn rejects_non_finite_probabilities() {
+        // `f32::parse` happily accepts "inf" and "NaN", and a NaN
+        // emission row defeats Phmm::validate's row-sum check (NaN
+        // comparisons are false), so the parser must reject non-finite
+        // values outright — these payloads arrive over the wire from
+        // untrusted tenants via `register-profile`.
+        let valid = write_phmm_string(
+            &Phmm::error_correction(
+                &Sequence::from_str("r", "ACGTAC", crate::seq::DNA).unwrap(),
+                &EcDesignParams::default(),
+            )
+            .unwrap(),
+        );
+        let first_trans = valid
+            .lines()
+            .find(|l| l.starts_with("trans "))
+            .expect("fixture has a trans line")
+            .to_string();
+        let toks: Vec<&str> = first_trans.split_whitespace().collect();
+        for hostile in ["inf", "-inf", "NaN", "nan"] {
+            let bad_trans = valid.replacen(
+                &first_trans,
+                &format!("trans {} {} {hostile}", toks[1], toks[2]),
+                1,
+            );
+            assert!(
+                read_phmm_str(&bad_trans, "mem").is_err(),
+                "accepted trans prob {hostile}"
+            );
+        }
+        let bad_init = valid.replacen("init 0 ", "init 0 NaN #", 1);
+        if bad_init != valid {
+            assert!(read_phmm_str(&bad_init, "mem").is_err(), "accepted init NaN");
+        }
+        let text = "APHMM 1\ndesign error_correction\nalphabet dna\nstates 1\n\
+                    state 0 M 0 NaN 0.25 0.25 0.25\nEND\n";
+        assert!(read_phmm_str(text, "mem").is_err(), "accepted NaN emission");
+        let text = "APHMM 1\ndesign error_correction\nalphabet dna\nstates 1\n\
+                    state 0 M 0 inf 0.25 0.25 0.25\nEND\n";
+        assert!(read_phmm_str(text, "mem").is_err(), "accepted inf emission");
+
+        // Negative probabilities hidden behind a valid SUM: validate
+        // only checks row/init sums, so the per-element range check in
+        // the parser is what stops `1.5 -0.5` rows (which would feed
+        // negative probabilities into the forward pass) and negative
+        // init mass balanced by an oversized entry.
+        let text = "APHMM 1\ndesign error_correction\nalphabet dna\nstates 1\n\
+                    state 0 M 0 1.5 -0.5 0.0 0.0\nEND\n";
+        assert!(read_phmm_str(text, "mem").is_err(), "accepted negative emission");
+        let text = "APHMM 1\ndesign error_correction\nalphabet dna\nstates 2\n\
+                    state 0 M 0 0.25 0.25 0.25 0.25\n\
+                    state 1 M 1 0.25 0.25 0.25 0.25\n\
+                    trans 0 1 1.0\ninit 0 1.5\ninit 1 -0.5\nEND\n";
+        assert!(read_phmm_str(text, "mem").is_err(), "accepted negative init prob");
     }
 
     #[test]

@@ -22,23 +22,29 @@ use aphmm::baumwelch::{EngineKind, FilterConfig, TrainConfig};
 use aphmm::config::Config;
 use aphmm::error::{ApHmmError, Result};
 use aphmm::io;
-use aphmm::phmm::{Phmm, Profile, TraditionalParams};
-use aphmm::seq::{Alphabet, DNA, PROTEIN};
-use aphmm::server::{self, Request, ResponseBody, Server, ServerConfig, SessionEnd};
+use aphmm::phmm::{EcDesignParams, Phmm, Profile, TraditionalParams};
+use aphmm::seq::{Alphabet, Sequence, DNA, PROTEIN};
+use aphmm::server::{
+    self, profile_hash, Request, ResponseBody, Server, ServerConfig, SessionEnd, TenantQuota,
+};
 use aphmm::sim::{self, XorShift};
 
 fn usage() -> String {
     let engines = EngineKind::NAMES.join("|");
     format!(
-        "usage: aphmm <simulate|correct|search|align|serve|accel|runtime> \
+        "usage: aphmm <simulate|correct|search|align|serve|profile|accel|runtime> \
 [--config FILE] [--set k=v ...]
   simulate --out-dir DIR [--set sim.genome_len=N --set sim.coverage=X]
   correct  --assembly A.fasta --reads R.fasta --out C.fasta [--engine {engines}]
   search   [--engine E] [--set search.n_families=N --set search.queries=N]
   align    [--engine E] [--set msa.n_seqs=N]
-  serve    [--port N] [--engine E] [--set serve.workers=N --set serve.queue_depth=N]
+  serve    [--port N] [--engine E] [--set serve.workers=N --set serve.queue_depth=N
+           --set serve.tenant_max_queued=N --set serve.tenant_max_in_flight=N]
            (no --port: newline-delimited protocol on stdin/stdout;
             see rust/src/server/README.md for the request grammar)
+  profile  --seq ACGT... | --fasta F.fasta [--out P.aphmm]
+           (build an EC-design profile and write it in the .aphmm wire
+            format accepted by the serve `register-profile` command)
   accel    [--set accel.pes=N --set accel.chunk=N]
   runtime  --artifacts DIR
 
@@ -121,12 +127,20 @@ fn engine_from(
 fn filter_from(cfg: &Config, section: &str) -> Result<FilterConfig> {
     let kind = cfg.str_or(&format!("{section}.filter"), "histogram");
     let size = cfg.usize_or(&format!("{section}.filter_size"), 500)?;
-    let bins = cfg.usize_or(&format!("{section}.filter_bins"), 16)?;
-    Ok(match kind.as_str() {
+    // 128 exponent bins, matching FilterConfig::histogram_default: the
+    // paper's 16 linear bins collapse under exponent binning (see the
+    // baumwelch::filter module docs — everything below 2^-16 of the
+    // row max would land in one bin).
+    let bins = cfg.usize_or(&format!("{section}.filter_bins"), 128)?;
+    let filter = match kind.as_str() {
         "none" => FilterConfig::None,
         "sort" => FilterConfig::Sort { size },
         _ => FilterConfig::Histogram { size, bins },
-    })
+    };
+    // `filter_size = 0` is a clean config error here, not a panic (or
+    // an empty keep-set) deep inside training.
+    filter.validate()?;
+    Ok(filter)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -217,6 +231,26 @@ fn server_config(
         engine,
         ..Default::default()
     };
+    let tenant_quota = TenantQuota {
+        max_queued: cfg.usize_or(
+            &format!("{section}.tenant_max_queued"),
+            defaults.tenant_quota.max_queued,
+        )?,
+        max_in_flight: cfg.usize_or(
+            &format!("{section}.tenant_max_in_flight"),
+            defaults.tenant_quota.max_in_flight,
+        )?,
+    };
+    // Like filter_size, a zero cap is a clean config error rather than
+    // the queue's silent defensive clamp to 1 (a 0 in-flight cap would
+    // otherwise deadlock consumers).
+    if tenant_quota.max_queued == 0 || tenant_quota.max_in_flight == 0 {
+        return Err(ApHmmError::Config(
+            "tenant_max_queued / tenant_max_in_flight must be >= 1 \
+             (omit the key for unlimited)"
+                .into(),
+        ));
+    }
     Ok(ServerConfig {
         n_workers: cfg.usize_or(&format!("{section}.workers"), defaults.n_workers)?,
         queue_depth: cfg.usize_or(&format!("{section}.queue_depth"), defaults.queue_depth)?,
@@ -224,6 +258,16 @@ fn server_config(
             .usize_or(&format!("{section}.cache_capacity"), defaults.cache_capacity)?,
         microbatch: cfg.usize_or(&format!("{section}.microbatch"), defaults.microbatch)?,
         max_hits: cfg.usize_or(&format!("{section}.max_hits"), defaults.max_hits)?,
+        tenant_quota,
+        max_profile_bytes: cfg.usize_or(
+            &format!("{section}.max_profile_bytes"),
+            defaults.max_profile_bytes,
+        )?,
+        max_profiles: cfg.usize_or(&format!("{section}.max_profiles"), defaults.max_profiles)?,
+        max_profiles_per_tenant: cfg.usize_or(
+            &format!("{section}.max_profiles_per_tenant"),
+            defaults.max_profiles_per_tenant,
+        )?,
         engine,
         train,
         alphabet,
@@ -384,6 +428,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build an EC-design profile from a reference sequence and persist it
+/// in the `.aphmm` text format — the payload `aphmm serve`'s
+/// `register-profile` command accepts, so tenants can register
+/// prebuilt profiles instead of raw sequences.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let alphabet = Alphabet::by_name(&cfg.str_or("profile.alphabet", "dna"))?;
+    let out_path = args.get("out").unwrap_or("profile.aphmm").to_string();
+    let reference = match args.get("seq") {
+        Some(s) if !s.is_empty() => Sequence::from_str("reference", s, alphabet)?,
+        _ => {
+            let fasta = args.get("fasta").filter(|p| !p.is_empty()).ok_or_else(|| {
+                ApHmmError::Config("profile: pass --seq ASCII or --fasta FILE".into())
+            })?;
+            io::read_fasta(Path::new(fasta), alphabet)?
+                .into_iter()
+                .next()
+                .ok_or_else(|| ApHmmError::Config(format!("{fasta}: no sequences")))?
+        }
+    };
+    let phmm = Phmm::error_correction_for(&reference, &EcDesignParams::default(), alphabet)?;
+    // The server hashes what it parses from the payload, not this
+    // in-memory graph: printing f32 parameters at 7 decimals can round
+    // them, so report the hash of the round-tripped graph the file
+    // actually describes (a parsed graph is a fixed point of the
+    // format, so this matches the server's `ok profile ... hash=`).
+    let text = io::write_phmm_string(&phmm);
+    let canon = io::read_phmm_str(&text, &out_path)?;
+    std::fs::write(Path::new(&out_path), &text)?;
+    println!(
+        "wrote {out_path}: {} states, hash={:016x} (register with: \
+         register-profile <name> {} followed by the file bytes)",
+        canon.n_states(),
+        profile_hash(&canon),
+        text.len()
+    );
+    Ok(())
+}
+
 fn cmd_accel(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let mut acfg = AccelConfig::default();
@@ -455,6 +538,7 @@ fn main() -> ExitCode {
         "search" => cmd_search(&args),
         "align" => cmd_align(&args),
         "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
         "accel" => cmd_accel(&args),
         "runtime" => cmd_runtime(&args),
         other => {

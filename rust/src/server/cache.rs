@@ -57,6 +57,18 @@ pub type CacheKey = (u64, EngineKind);
 /// FNV-1a content hash of every parameter of `phmm`.  Stable across
 /// clones and re-registrations; changes whenever any probability,
 /// emission, or structural array changes.
+///
+/// Every field is **domain-separated**: a per-field tag byte plus the
+/// element count prefix the field's bytes.  Without them, two
+/// structurally different graphs whose concatenated byte streams
+/// coincide (e.g. a trailing `position` element re-read as the first
+/// `out_ptr` element) would collide — in a multi-tenant cache that is
+/// one tenant receiving another profile's frozen coefficient tables.
+/// The regression test `hash_separates_adjacent_field_boundaries`
+/// below pins the property; it also pins that this PR deliberately
+/// changed hash values relative to the unprefixed scheme (see
+/// `server/README.md` — the cache is in-memory only, so old keys
+/// simply miss once and re-freeze).
 pub fn profile_hash(phmm: &Phmm) -> u64 {
     const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -69,15 +81,24 @@ pub fn profile_hash(phmm: &Phmm) -> u64 {
             eat(h, b);
         }
     }
+    // Open field `tag` holding `len` elements: the (tag, len) pair is
+    // what makes adjacent variable-length fields unambiguous.
+    fn eat_field(h: &mut u64, tag: u8, len: usize) {
+        eat(h, tag);
+        eat_u32(h, len as u32);
+    }
     let mut h = FNV_OFFSET;
+    eat_field(&mut h, 1, 1);
     match phmm.design {
         PhmmDesign::Traditional => eat(&mut h, 0),
         PhmmDesign::TraditionalFolded => eat(&mut h, 1),
         PhmmDesign::ErrorCorrection => eat(&mut h, 2),
     }
+    eat_field(&mut h, 2, phmm.alphabet.name().len());
     for b in phmm.alphabet.name().bytes() {
         eat(&mut h, b);
     }
+    eat_field(&mut h, 3, phmm.kinds.len());
     for k in &phmm.kinds {
         eat(
             &mut h,
@@ -88,21 +109,27 @@ pub fn profile_hash(phmm: &Phmm) -> u64 {
             },
         );
     }
+    eat_field(&mut h, 4, phmm.position.len());
     for &p in &phmm.position {
         eat_u32(&mut h, p);
     }
+    eat_field(&mut h, 5, phmm.out_ptr.len());
     for &p in &phmm.out_ptr {
         eat_u32(&mut h, p);
     }
+    eat_field(&mut h, 6, phmm.out_to.len());
     for &t in &phmm.out_to {
         eat_u32(&mut h, t);
     }
+    eat_field(&mut h, 7, phmm.out_prob.len());
     for &p in &phmm.out_prob {
         eat_u32(&mut h, p.to_bits());
     }
+    eat_field(&mut h, 8, phmm.emissions.len());
     for &e in &phmm.emissions {
         eat_u32(&mut h, e.to_bits());
     }
+    eat_field(&mut h, 9, phmm.f_init.len());
     for &f in &phmm.f_init {
         eat_u32(&mut h, f.to_bits());
     }
@@ -251,6 +278,48 @@ mod tests {
         let mut d = a.clone();
         d.out_prob[0] = (d.out_prob[0] * 0.5).max(1e-6);
         assert_ne!(profile_hash(&a), profile_hash(&d));
+    }
+
+    #[test]
+    fn hash_separates_adjacent_field_boundaries() {
+        // Regression for the unprefixed hash: all graph arrays were
+        // fed back-to-back, so shifting one element across a field
+        // boundary left the concatenated byte stream — and therefore
+        // the cache key — unchanged.  In a multi-tenant cache that is
+        // one tenant being served another profile's frozen tables.
+        // profile_hash reads fields only, so the fixtures need not be
+        // valid graphs.
+        fn raw(position: Vec<u32>, out_ptr: Vec<u32>, out_to: Vec<u32>, out_prob: Vec<f32>) -> Phmm {
+            Phmm {
+                design: PhmmDesign::ErrorCorrection,
+                alphabet: crate::seq::DNA,
+                kinds: Vec::new(),
+                position,
+                out_ptr,
+                out_to,
+                out_prob,
+                emissions: Vec::new(),
+                f_init: Vec::new(),
+            }
+        }
+        // position | out_ptr boundary: [1,2]+[3] vs [1]+[2,3] — the
+        // concatenated u32 stream is [1,2,3] both times.
+        let a = raw(vec![1, 2], vec![3], Vec::new(), Vec::new());
+        let b = raw(vec![1], vec![2, 3], Vec::new(), Vec::new());
+        assert_ne!(
+            profile_hash(&a),
+            profile_hash(&b),
+            "shifting an element across position/out_ptr must change the hash"
+        );
+        // out_to | out_prob boundary: 1.0f32 has the same bit pattern
+        // as the u32 1065353216, so the unprefixed streams coincide.
+        let c = raw(Vec::new(), Vec::new(), vec![7, 1.0f32.to_bits()], Vec::new());
+        let d = raw(Vec::new(), Vec::new(), vec![7], vec![1.0]);
+        assert_ne!(
+            profile_hash(&c),
+            profile_hash(&d),
+            "shifting an element across out_to/out_prob must change the hash"
+        );
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!   control: producers block or get `Busy` when `queue_depth` jobs are
 //!   pending, so backpressure finally governs I/O-bound producers.  The
 //!   coordinator streams its chunk jobs through the same queue type —
-//!   one producer among many rather than a parallel code path.
+//!   one producer among many rather than a parallel code path.  The
+//!   server itself runs on the tenant-aware [`TenantQueue`] layer:
+//!   per-tenant queued/in-flight quotas (an at-quota tenant is refused
+//!   with [`AdmitError::AtQuota`] while others keep admitting) and
+//!   priority classes popped high-first.
 //! * [`cache`] — an LRU cache of frozen per-profile coefficient tables
 //!   ([`crate::baumwelch::PreparedAny`]) keyed by profile content hash,
 //!   with hit/miss/evict counters.  ApHMM memoizes frozen coefficients
@@ -39,11 +43,25 @@ pub mod queue;
 pub mod session;
 
 pub use cache::{profile_hash, CacheStats, PreparedCache};
-pub use queue::{JobQueue, PushError, QueueStats};
+pub use queue::{
+    AdmitError, JobQueue, Priority, PushError, QueueStats, TenantQueue, TenantQuota, TenantStats,
+};
 pub use session::{
     serve_connection, serve_stdio, serve_tcp, ProfileEntry, ProfileRegistry, RankedHit, Request,
     Response, ResponseBody, SessionEnd,
 };
+
+/// Tenant id used by submissions that don't name one (the single-tenant
+/// Rust API paths and wire sessions before a `tenant` command).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Reserved owner of profiles registered through the trusted in-process
+/// API ([`Server::register_profile`]).  Wire sessions can never assume
+/// it — the `tenant` command rejects the reserved `__`-prefixed
+/// namespace — so an anonymous connection cannot replace an
+/// operator-registered profile (ownership-checked replacement requires
+/// the owner id).
+pub const OPERATOR_TENANT: &str = "__operator__";
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -95,6 +113,24 @@ pub struct ServerConfig {
     pub posterior_hits: usize,
     /// Alphabet of the wire protocol's sequences.
     pub alphabet: Alphabet,
+    /// Per-tenant admission caps (identical for every tenant —
+    /// including the shared `default` tenant of anonymous sessions and
+    /// the tenant-less Rust API; the default is unlimited, i.e.
+    /// single-tenant behavior).
+    pub tenant_quota: TenantQuota,
+    /// Upper bound on one `register-profile` wire payload, checked
+    /// before any payload byte is read or allocated.
+    pub max_profile_bytes: usize,
+    /// Registry bound for **untrusted wire registrations**: total
+    /// profiles across all tenants.  Each entry stores a full graph +
+    /// k-mer set and costs a consensus decode to build, so an
+    /// unbounded registry is a one-connection memory/CPU DoS.  The
+    /// trusted in-process path is exempt.
+    pub max_profiles: usize,
+    /// Registry bound for untrusted wire registrations: profiles owned
+    /// by one tenant (so one tenant can't consume the whole
+    /// `max_profiles` budget).
+    pub max_profiles_per_tenant: usize,
 }
 
 impl Default for ServerConfig {
@@ -112,6 +148,10 @@ impl Default for ServerConfig {
             prefilter_min_frac: 0.0,
             posterior_hits: 0,
             alphabet: crate::seq::DNA,
+            tenant_quota: TenantQuota::default(),
+            max_profile_bytes: 8 << 20,
+            max_profiles: 4096,
+            max_profiles_per_tenant: 256,
         }
     }
 }
@@ -161,7 +201,7 @@ impl Ticket {
 
 struct Shared {
     cfg: ServerConfig,
-    queue: JobQueue<Job>,
+    queue: TenantQueue<Job>,
     registry: ProfileRegistry,
     cache: PreparedCache,
     pool: WorkerPool,
@@ -171,8 +211,9 @@ struct Shared {
 }
 
 /// A long-lived multi-tenant server: one shared [`WorkerPool`], one
-/// bounded [`JobQueue`], one cross-request [`PreparedCache`].  See the
-/// module docs for the execution model and shutdown semantics.
+/// bounded tenant-aware [`TenantQueue`], one cross-request
+/// [`PreparedCache`].  See the module docs for the execution model and
+/// shutdown semantics.
 pub struct Server {
     shared: Arc<Shared>,
     dispatcher: Option<JoinHandle<()>>,
@@ -188,7 +229,7 @@ impl Server {
         // other worker slots plus each worker's E-step fan-out.
         let helpers = (workers - 1) + workers * (estep - 1);
         let shared = Arc::new(Shared {
-            queue: JobQueue::new(cfg.queue_depth),
+            queue: TenantQueue::new(cfg.queue_depth, cfg.tenant_quota),
             registry: ProfileRegistry::default(),
             cache: PreparedCache::new(cfg.cache_capacity),
             pool: WorkerPool::new(helpers),
@@ -213,13 +254,37 @@ impl Server {
     }
 
     /// Register (or replace) a named profile; returns its content hash.
+    /// This is the **trusted in-process/operator path**: it replaces
+    /// unconditionally and owns the profile as [`OPERATOR_TENANT`] — a
+    /// reserved id wire sessions cannot assume, so remote clients can
+    /// never replace an operator-registered profile.  Untrusted wire
+    /// registrations go through [`Server::register_profile_for`], which
+    /// enforces ownership.
     /// For `Search`-heavy workloads size `cache_capacity` at or above
     /// the number of registered profiles: `Search` scans every profile
     /// in registration order, which is the LRU worst case when the
     /// cache is smaller than the registry (every lookup evicts the
     /// next-needed entry).
     pub fn register_profile(&self, name: &str, phmm: Phmm) -> u64 {
-        self.shared.registry.register(name, phmm, self.shared.cfg.prefilter_k)
+        self.shared.registry.register(name, OPERATOR_TENANT, phmm, self.shared.cfg.prefilter_k)
+    }
+
+    /// Ownership-checked registration on behalf of a (wire) tenant:
+    /// same-content re-uploads always succeed; fresh names succeed
+    /// while the registry is under `max_profiles` (total) and
+    /// `max_profiles_per_tenant` (owned by this tenant); replacing an
+    /// existing name with different content is allowed only for its
+    /// owner.  See `ProfileRegistry::register_checked`.
+    pub fn register_profile_for(&self, tenant: &str, name: &str, phmm: Phmm) -> Result<u64> {
+        let cfg = &self.shared.cfg;
+        self.shared.registry.register_checked(
+            name,
+            tenant,
+            phmm,
+            cfg.prefilter_k,
+            cfg.max_profiles,
+            cfg.max_profiles_per_tenant,
+        )
     }
 
     /// The profile registry (shared by every session).
@@ -237,12 +302,27 @@ impl Server {
         )
     }
 
-    /// Submit a request, **blocking while the queue is full** (the
-    /// admission-control path for streaming clients).  Fails only once
-    /// the server is shut down.
+    /// Submit a request as the default tenant at normal priority,
+    /// **blocking while the queue is full** (the admission-control path
+    /// for streaming clients).  Fails only once the server is shut
+    /// down.
     pub fn submit(&self, engine: Option<EngineKind>, body: Request) -> Result<Ticket> {
+        self.submit_for(DEFAULT_TENANT, Priority::Normal, engine, body)
+    }
+
+    /// Submit a request on behalf of `tenant` at `priority`, blocking
+    /// while the queue is globally full **or** the tenant is at its
+    /// queued quota (quota pressure becomes backpressure; sheddable
+    /// producers use [`Server::try_submit_for`]).
+    pub fn submit_for(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        engine: Option<EngineKind>,
+        body: Request,
+    ) -> Result<Ticket> {
         let (job, ticket) = self.make_job(engine, body);
-        self.shared.queue.push(job).map_err(|job| {
+        self.shared.queue.push(tenant, priority, job).map_err(|job| {
             ApHmmError::Coordinator(format!(
                 "server is shut down: {} request refused",
                 job.body.kind_name()
@@ -252,18 +332,45 @@ impl Server {
     }
 
     /// Submit without blocking: [`PushError::Busy`] hands the request
-    /// back when the queue is at `queue_depth` (the caller may retry,
-    /// shed load, or block on [`Server::submit`]).
+    /// back when admission is refused (the caller may retry, shed
+    /// load, or block on [`Server::submit`]).  Uses the shared
+    /// `default` tenant, which is subject to the configured
+    /// [`TenantQuota`] like any other — a quota refusal is folded into
+    /// `Busy` because this legacy two-variant signature has no quota
+    /// case; callers that need to distinguish "server full" from "your
+    /// quota" use [`Server::try_submit_for`].
     pub fn try_submit(
         &self,
         engine: Option<EngineKind>,
         body: Request,
     ) -> std::result::Result<Ticket, PushError<Request>> {
+        match self.try_submit_for(DEFAULT_TENANT, Priority::Normal, engine, body) {
+            Ok(ticket) => Ok(ticket),
+            Err(AdmitError::Busy(body)) | Err(AdmitError::AtQuota(body)) => {
+                Err(PushError::Busy(body))
+            }
+            Err(AdmitError::Closed(body)) => Err(PushError::Closed(body)),
+        }
+    }
+
+    /// Submit on behalf of `tenant` without blocking.  The typed
+    /// refusal distinguishes a globally full queue
+    /// ([`AdmitError::Busy`]) from this tenant being at its quota
+    /// ([`AdmitError::AtQuota`]) — at-quota tenants are refused while
+    /// other tenants still admit.
+    pub fn try_submit_for(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        engine: Option<EngineKind>,
+        body: Request,
+    ) -> std::result::Result<Ticket, AdmitError<Request>> {
         let (job, ticket) = self.make_job(engine, body);
-        match self.shared.queue.try_push(job) {
+        match self.shared.queue.try_push(tenant, priority, job) {
             Ok(()) => Ok(ticket),
-            Err(PushError::Busy(job)) => Err(PushError::Busy(job.body)),
-            Err(PushError::Closed(job)) => Err(PushError::Closed(job.body)),
+            Err(AdmitError::Busy(job)) => Err(AdmitError::Busy(job.body)),
+            Err(AdmitError::AtQuota(job)) => Err(AdmitError::AtQuota(job.body)),
+            Err(AdmitError::Closed(job)) => Err(AdmitError::Closed(job.body)),
         }
     }
 
@@ -277,11 +384,32 @@ impl Server {
         self.shared.cache.stats()
     }
 
-    /// Metrics snapshot over the server's lifetime so far (queue gauges
-    /// folded in).
+    /// Per-tenant admission gauges (queued, in-flight, admitted, quota
+    /// refusals), sorted by tenant id.
+    pub fn tenant_stats(&self) -> Vec<(String, TenantStats)> {
+        self.shared.queue.tenant_stats()
+    }
+
+    /// Metrics snapshot over the server's lifetime so far (queue and
+    /// per-tenant gauges folded in).
     pub fn metrics_summary(&self) -> MetricsSummary {
         let qs = self.shared.queue.stats();
         self.shared.metrics.absorb_queue(qs.depth, qs.high_water, qs.producer_blocks);
+        let tstats = self.shared.queue.tenant_stats();
+        for (tenant, ts) in &tstats {
+            self.shared.metrics.absorb_tenant(
+                tenant,
+                ts.admitted,
+                ts.quota_refusals,
+                ts.queued,
+                ts.in_flight,
+            );
+        }
+        // Bound the metrics-side tenant map with the queue's current
+        // tenant set (fresh gauges just absorbed), never with stale
+        // mirrors alone.
+        let active: Vec<&str> = tstats.iter().map(|(name, _)| name.as_str()).collect();
+        self.shared.metrics.evict_stale_tenants(&active);
         self.shared.metrics.summary(self.shared.started.elapsed().as_secs_f64())
     }
 
@@ -292,7 +420,7 @@ impl Server {
         format!(
             "stats jobs_done={} jobs_failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
              queue_high_water={} producer_blocks={} cache_hits={} cache_misses={} \
-             cache_evictions={} profiles={}",
+             cache_evictions={} profiles={} tenants={}",
             m.jobs_done,
             m.jobs_failed,
             m.latency_p50_ms,
@@ -304,7 +432,34 @@ impl Server {
             c.misses,
             c.evictions,
             self.shared.registry.len(),
+            m.tenants.len(),
         )
+    }
+
+    /// One-line `tenants` response for the wire protocol: one
+    /// space-separated block per tenant, sorted by tenant id.
+    pub fn tenants_line(&self) -> String {
+        let m = self.metrics_summary();
+        if m.tenants.is_empty() {
+            return "tenants -".to_string();
+        }
+        let blocks: Vec<String> = m
+            .tenants
+            .iter()
+            .map(|t| {
+                format!(
+                    "{}:admitted={},completed={},failed={},refused={},queued={},in_flight={}",
+                    t.tenant,
+                    t.admitted,
+                    t.completed,
+                    t.failed,
+                    t.quota_refusals,
+                    t.queued,
+                    t.in_flight
+                )
+            })
+            .collect();
+        format!("tenants {}", blocks.join(" "))
     }
 
     /// Weak probe on the pool's shared state: upgradeable only while
@@ -322,7 +477,7 @@ impl Server {
         if drain {
             self.shared.queue.close();
         } else {
-            for job in self.shared.queue.abort() {
+            for (_tenant, job) in self.shared.queue.abort() {
                 let _ = job.reply.send(Response {
                     id: job.id,
                     engine: job.engine,
@@ -350,39 +505,44 @@ impl Drop for Server {
 }
 
 /// One queue-draining participant: pop, micro-batch compatible `Score`
-/// requests, execute, respond, repeat until the queue reports
-/// exhaustion.
+/// requests, execute, respond, finish (releasing the tenant's
+/// in-flight slot), repeat until the queue reports exhaustion.
 fn worker_loop(shared: &Shared) {
     let mut scratch = ScratchAny::None;
-    while let Some(job) = shared.queue.pop() {
+    while let Some((tenant, job)) = shared.queue.pop() {
         if let Request::Score { profile, .. } = &job.body {
             // Micro-batch: pull further Score requests for the same
             // (profile, engine) so they run back-to-back through one
             // frozen table and a warm scratch, instead of interleaving
-            // with unrelated profiles across workers.
+            // with unrelated profiles across workers.  The pull goes
+            // through the same tenant accounting as pop: every batched
+            // item charges (and must release) its own tenant's
+            // in-flight slot, and items of at-cap tenants are skipped.
             let name = profile.clone();
             let engine = job.engine;
-            let mut batch = vec![job];
+            let mut batch = vec![(tenant, job)];
             while batch.len() < shared.cfg.microbatch.max(1) {
                 let more = shared.queue.try_pop_where(|j| {
                     j.engine == engine
                         && matches!(&j.body, Request::Score { profile: p, .. } if *p == name)
                 });
                 match more {
-                    Some(j) => batch.push(j),
+                    Some(pair) => batch.push(pair),
                     None => break,
                 }
             }
-            for j in batch {
-                process_one(shared, j, &mut scratch);
+            for (tenant, j) in batch {
+                process_one(shared, &tenant, j, &mut scratch);
+                shared.queue.finish(&tenant);
             }
         } else {
-            process_one(shared, job, &mut scratch);
+            process_one(shared, &tenant, job, &mut scratch);
+            shared.queue.finish(&tenant);
         }
     }
 }
 
-fn process_one(shared: &Shared, job: Job, scratch: &mut ScratchAny) {
+fn process_one(shared: &Shared, tenant: &str, job: Job, scratch: &mut ScratchAny) {
     let ctx = ExecCtx {
         registry: &shared.registry,
         cache: &shared.cache,
@@ -397,9 +557,11 @@ fn process_one(shared: &Shared, job: Job, scratch: &mut ScratchAny) {
         }
     };
     let latency_ns = job.enqueued.elapsed().as_nanos() as u64;
-    if !matches!(body, ResponseBody::Error { .. }) {
+    let ok = !matches!(body, ResponseBody::Error { .. });
+    if ok {
         shared.metrics.record(latency_ns, stats.timesteps, stats.states_processed);
     }
+    shared.metrics.record_tenant_done(tenant, ok);
     // A dropped ticket just means the client stopped waiting.
     let _ = job.reply.send(Response {
         id: job.id,

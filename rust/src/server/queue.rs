@@ -24,8 +24,29 @@
 //! [`JobQueue::stats`].  The coordinator and the server fold these into
 //! [`crate::coordinator::Metrics`] so `MetricsSummary` finally shows
 //! whether `queue_depth` is actually exerting backpressure.
+//!
+//! # Tenant-aware admission ([`TenantQueue`])
+//!
+//! The serving layer needs more than a single bounded FIFO: one tenant
+//! flooding the queue must not starve everyone else.  [`TenantQueue`]
+//! layers two policies on the same blocking MPMC core:
+//!
+//! * **Per-tenant quotas** ([`TenantQuota`]): a cap on how many
+//!   requests a tenant may have *queued* and a cap on how many may be
+//!   *in flight* (popped but not yet [`TenantQueue::finish`]ed).  A
+//!   tenant at its queued cap gets [`AdmitError::AtQuota`] back while
+//!   other tenants still admit; a tenant at its in-flight cap simply
+//!   isn't popped until one of its requests finishes (other tenants'
+//!   work flows past it).
+//! * **Priority classes** ([`Priority`]): a small fixed set of classes
+//!   popped high-first, FIFO within each class.
+//!
+//! The coordinator keeps using the plain [`JobQueue`] (its single
+//! producer is itself); the server's [`crate::server::Server`] runs on
+//! [`TenantQueue`] and folds the per-tenant gauges into
+//! [`crate::coordinator::Metrics`].
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
@@ -244,6 +265,440 @@ impl<T> JobQueue<T> {
     }
 }
 
+// ---------------------------------------------------------------------
+// Tenant-aware admission layer.
+// ---------------------------------------------------------------------
+
+/// Priority class of a request.  A small fixed set, popped high-first;
+/// FIFO within one class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Background / batch work: served only when nothing more urgent
+    /// is queued.
+    Low,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Latency-sensitive work, always popped first.
+    High,
+}
+
+impl Priority {
+    /// Number of priority classes.
+    pub const N_CLASSES: usize = 3;
+
+    /// Canonical lowercase name (wire protocol / config value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a canonical name.
+    pub fn parse(name: &str) -> Option<Priority> {
+        match name {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    /// Pop-order class index: 0 is popped first.
+    fn class(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Per-tenant admission caps.  The same quota applies to every tenant
+/// (fair by symmetry); `usize::MAX` on both fields disables quotas.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantQuota {
+    /// Maximum requests one tenant may have waiting in the queue.  At
+    /// the cap, non-blocking admission returns
+    /// [`AdmitError::AtQuota`]; blocking admission waits.
+    pub max_queued: usize,
+    /// Maximum requests one tenant may have in flight (popped but not
+    /// yet [`TenantQueue::finish`]ed).  At the cap the tenant's queued
+    /// requests are skipped by consumers, letting other tenants' work
+    /// through, until one of its in-flight requests finishes.
+    pub max_in_flight: usize,
+}
+
+impl Default for TenantQuota {
+    /// Unlimited — single-tenant callers see the plain bounded-queue
+    /// behavior.
+    fn default() -> Self {
+        TenantQuota { max_queued: usize::MAX, max_in_flight: usize::MAX }
+    }
+}
+
+/// Why tenant-aware admission refused an item (handed back).
+#[derive(Debug)]
+pub enum AdmitError<T> {
+    /// The queue is globally full; any tenant would be refused.
+    Busy(T),
+    /// *This tenant* is at its queued cap; other tenants still admit.
+    AtQuota(T),
+    /// The queue was closed or aborted.
+    Closed(T),
+}
+
+/// Point-in-time per-tenant gauges.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantStats {
+    /// Requests currently queued for this tenant.
+    pub queued: u64,
+    /// Requests popped but not yet finished.
+    pub in_flight: u64,
+    /// Requests admitted over the queue's lifetime.
+    pub admitted: u64,
+    /// Admissions refused (or blocked) because the tenant was at a
+    /// quota cap — the "your quota, not the server" signal.
+    pub quota_refusals: u64,
+    /// Requests finished ([`TenantQueue::finish`]) over the lifetime.
+    pub finished: u64,
+}
+
+#[derive(Default)]
+struct TenantCount {
+    queued: usize,
+    in_flight: usize,
+    admitted: u64,
+    quota_refusals: u64,
+    finished: u64,
+}
+
+/// Bound on distinct tenants tracked in the gauge maps — this one and
+/// the mirror map in [`crate::coordinator::Metrics`], which imports
+/// the same constant so the two evict at the same threshold.  Tenant
+/// ids are client-controlled, so without a cap a client cycling fresh
+/// ids would grow the maps (and every stats snapshot) without limit.
+/// When the cap is exceeded, *idle* entries (nothing queued or in
+/// flight) are evicted; an evicted tenant that returns simply restarts
+/// its lifetime counters from zero.
+pub(crate) const MAX_TRACKED_TENANTS: usize = 1024;
+
+struct TenantInner<T> {
+    /// One FIFO per priority class, indexed by [`Priority::class`]
+    /// (0 popped first).
+    classes: [VecDeque<(String, T)>; Priority::N_CLASSES],
+    /// Per-tenant accounting, keyed by tenant id (BTreeMap for
+    /// deterministic snapshot order).
+    tenants: BTreeMap<String, TenantCount>,
+    closed: bool,
+}
+
+impl<T> TenantInner<T> {
+    fn total_len(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// A bounded blocking MPMC queue with per-tenant quotas and priority
+/// classes — the serving layer's admission-control core.  See the
+/// module docs for the policy and [`JobQueue`] for the lifecycle
+/// semantics it inherits (close/abort, blocking pop, gauges).
+pub struct TenantQueue<T> {
+    inner: Mutex<TenantInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    depth: usize,
+    quota: TenantQuota,
+    counters: QueueCounters,
+}
+
+impl<T> TenantQueue<T> {
+    /// A queue admitting at most `depth` items in total (clamped ≥ 1),
+    /// with `quota` applied to every tenant (caps clamped ≥ 1 — a
+    /// zero cap would deadlock consumers on permanently unpoppable
+    /// items).
+    pub fn new(depth: usize, quota: TenantQuota) -> TenantQueue<T> {
+        TenantQueue {
+            inner: Mutex::new(TenantInner {
+                classes: std::array::from_fn(|_| VecDeque::new()),
+                tenants: BTreeMap::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            depth: depth.max(1),
+            quota: TenantQuota {
+                max_queued: quota.max_queued.max(1),
+                max_in_flight: quota.max_in_flight.max(1),
+            },
+            counters: QueueCounters::default(),
+        }
+    }
+
+    /// Configured global capacity bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Per-tenant caps in force.
+    pub fn quota(&self) -> TenantQuota {
+        self.quota
+    }
+
+    /// Items currently queued across all tenants and classes.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().total_len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once [`TenantQueue::close`] or [`TenantQueue::abort`] has
+    /// run.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    fn admit(&self, inner: &mut TenantInner<T>, tenant: &str, priority: Priority, item: T) {
+        let t = inner.tenants.entry(tenant.to_string()).or_default();
+        t.queued += 1;
+        t.admitted += 1;
+        // Admission is the only place a tenant entry is created (the
+        // refusal paths require an existing queued count and finish()
+        // only updates existing entries), so the cap check here bounds
+        // the map.  A just-admitted tenant has queued >= 1 and is
+        // never idle, so it cannot evict itself.
+        if inner.tenants.len() > MAX_TRACKED_TENANTS {
+            inner.tenants.retain(|_, t| t.queued > 0 || t.in_flight > 0);
+        }
+        inner.classes[priority.class()].push_back((tenant.to_string(), item));
+        self.counters.pushed.fetch_add(1, Ordering::Relaxed);
+        self.counters.high_water.fetch_max(inner.total_len() as u64, Ordering::Relaxed);
+    }
+
+    /// Admit without blocking.  Checks the tenant's queued cap first
+    /// (so an at-quota tenant sees [`AdmitError::AtQuota`] even when
+    /// the queue is also full), then the global depth.
+    pub fn try_push(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        item: T,
+    ) -> std::result::Result<(), AdmitError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(AdmitError::Closed(item));
+        }
+        let queued = inner.tenants.get(tenant).map_or(0, |t| t.queued);
+        if queued >= self.quota.max_queued {
+            inner.tenants.entry(tenant.to_string()).or_default().quota_refusals += 1;
+            return Err(AdmitError::AtQuota(item));
+        }
+        if inner.total_len() >= self.depth {
+            self.counters.producer_blocks.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmitError::Busy(item));
+        }
+        self.admit(&mut inner, tenant, priority, item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Admit, blocking while the queue is globally full **or** the
+    /// tenant is at its queued cap (streaming clients feel quota
+    /// pressure as backpressure, not errors — sheddable producers use
+    /// [`TenantQueue::try_push`]).  Returns `Err(item)` once closed.
+    pub fn push(&self, tenant: &str, priority: Priority, item: T) -> std::result::Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut counted_block = false;
+        let mut counted_quota = false;
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            let queued = inner.tenants.get(tenant).map_or(0, |t| t.queued);
+            let at_quota = queued >= self.quota.max_queued;
+            let full = inner.total_len() >= self.depth;
+            if !at_quota && !full {
+                self.admit(&mut inner, tenant, priority, item);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            if at_quota && !counted_quota {
+                inner.tenants.entry(tenant.to_string()).or_default().quota_refusals += 1;
+                counted_quota = true;
+            }
+            if full && !counted_block {
+                self.counters.producer_blocks.fetch_add(1, Ordering::Relaxed);
+                counted_block = true;
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Pop the next eligible item under the scheduling policy: highest
+    /// priority class first, FIFO within the class, skipping items
+    /// whose tenant is at its in-flight cap.  Increments the tenant's
+    /// in-flight count — the consumer **must** call
+    /// [`TenantQueue::finish`] when done, or the tenant wedges at its
+    /// cap.  Blocks while the queue is open and nothing is eligible;
+    /// returns `None` once closed **and** drained.
+    pub fn pop(&self) -> Option<(String, T)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(pair) = self.take_eligible(&mut inner, |_| true) {
+                drop(inner);
+                self.not_full.notify_all();
+                return Some(pair);
+            }
+            if inner.closed && inner.total_len() == 0 {
+                return None;
+            }
+            // Either empty, or every queued item belongs to a tenant at
+            // its in-flight cap: wait for a push or a finish.
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking [`TenantQueue::pop`]: `None` when nothing is
+    /// eligible right now.
+    pub fn try_pop(&self) -> Option<(String, T)> {
+        let mut inner = self.inner.lock().unwrap();
+        let pair = self.take_eligible(&mut inner, |_| true)?;
+        drop(inner);
+        self.not_full.notify_all();
+        Some(pair)
+    }
+
+    /// Remove the first eligible queued item matching `pred` (the
+    /// micro-batching hook — see [`JobQueue::try_pop_where`]).  The
+    /// same in-flight accounting applies: a match from a tenant at its
+    /// cap is skipped, and a returned item must be
+    /// [`TenantQueue::finish`]ed.
+    pub fn try_pop_where<P: FnMut(&T) -> bool>(&self, pred: P) -> Option<(String, T)> {
+        let mut inner = self.inner.lock().unwrap();
+        let pair = self.take_eligible(&mut inner, pred)?;
+        drop(inner);
+        self.not_full.notify_all();
+        Some(pair)
+    }
+
+    /// Scan classes high-priority-first for the first item that
+    /// matches `pred` and whose tenant is under its in-flight cap;
+    /// remove it and charge the tenant's in-flight count.
+    fn take_eligible<P: FnMut(&T) -> bool>(
+        &self,
+        inner: &mut TenantInner<T>,
+        mut pred: P,
+    ) -> Option<(String, T)> {
+        let mut found: Option<(usize, usize)> = None;
+        'classes: for (c, class) in inner.classes.iter().enumerate() {
+            for (i, (tenant, item)) in class.iter().enumerate() {
+                let in_flight = inner.tenants.get(tenant).map_or(0, |t| t.in_flight);
+                if in_flight >= self.quota.max_in_flight {
+                    continue;
+                }
+                if pred(item) {
+                    found = Some((c, i));
+                    break 'classes;
+                }
+            }
+        }
+        let (c, i) = found?;
+        let (tenant, item) = inner.classes[c].remove(i).expect("scanned index in range");
+        let t = inner.tenants.entry(tenant.clone()).or_default();
+        t.queued = t.queued.saturating_sub(1);
+        t.in_flight += 1;
+        self.counters.popped.fetch_add(1, Ordering::Relaxed);
+        Some((tenant, item))
+    }
+
+    /// Mark one popped item of `tenant` complete: releases an in-flight
+    /// slot (possibly making its queued items eligible again) and wakes
+    /// blocked producers/consumers.  Unknown tenants are a no-op —
+    /// `finish` must never create gauge entries (tenant ids are
+    /// client-controlled; see [`MAX_TRACKED_TENANTS`]).
+    pub fn finish(&self, tenant: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(t) = inner.tenants.get_mut(tenant) {
+            t.in_flight = t.in_flight.saturating_sub(1);
+            t.finished += 1;
+        }
+        drop(inner);
+        // A consumer may be parked on not_empty waiting for this
+        // tenant's cap to release, and a producer on not_full for its
+        // quota: wake both sides.
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Graceful drain (see [`JobQueue::close`]).  Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Close **and discard** the backlog, returning the unprocessed
+    /// `(tenant, item)` pairs in pop-priority order.  Idempotent.
+    pub fn abort(&self) -> Vec<(String, T)> {
+        let dropped: Vec<(String, T)> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.closed = true;
+            let mut dropped = Vec::new();
+            for class in inner.classes.iter_mut() {
+                dropped.extend(class.drain(..));
+            }
+            for (tenant, _) in &dropped {
+                if let Some(t) = inner.tenants.get_mut(tenant) {
+                    t.queued = t.queued.saturating_sub(1);
+                }
+            }
+            dropped
+        };
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+        dropped
+    }
+
+    /// Snapshot the global gauges (same shape as [`JobQueue::stats`]).
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            depth: self.len() as u64,
+            high_water: self.counters.high_water.load(Ordering::Relaxed),
+            producer_blocks: self.counters.producer_blocks.load(Ordering::Relaxed),
+            pushed: self.counters.pushed.load(Ordering::Relaxed),
+            popped: self.counters.popped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot the per-tenant gauges, sorted by tenant id.
+    pub fn tenant_stats(&self) -> Vec<(String, TenantStats)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tenants
+            .iter()
+            .map(|(name, t)| {
+                (
+                    name.clone(),
+                    TenantStats {
+                        queued: t.queued as u64,
+                        in_flight: t.in_flight as u64,
+                        admitted: t.admitted,
+                        quota_refusals: t.quota_refusals,
+                        finished: t.finished,
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,5 +864,190 @@ mod tests {
         assert_eq!(s.pushed, 200);
         assert_eq!(s.popped, 200);
         assert!(s.high_water <= 4);
+    }
+
+    // -----------------------------------------------------------------
+    // TenantQueue: priority classes + per-tenant quotas.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn priorities_pop_high_first_fifo_within_class() {
+        let q = TenantQueue::new(16, TenantQuota::default());
+        q.push("t", Priority::Low, "l1").unwrap();
+        q.push("t", Priority::Normal, "n1").unwrap();
+        q.push("t", Priority::High, "h1").unwrap();
+        q.push("t", Priority::Normal, "n2").unwrap();
+        q.push("t", Priority::High, "h2").unwrap();
+        let order: Vec<&str> = (0..5).map(|_| q.pop().unwrap().1).collect();
+        assert_eq!(order, vec!["h1", "h2", "n1", "n2", "l1"]);
+        for _ in 0..5 {
+            q.finish("t");
+        }
+        let ts = q.tenant_stats();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].0, "t");
+        assert_eq!(ts[0].1.admitted, 5);
+        assert_eq!(ts[0].1.finished, 5);
+        assert_eq!(ts[0].1.queued, 0);
+        assert_eq!(ts[0].1.in_flight, 0);
+    }
+
+    #[test]
+    fn tenant_at_queued_cap_gets_at_quota_while_others_admit() {
+        let quota = TenantQuota { max_queued: 2, max_in_flight: usize::MAX };
+        let q = TenantQueue::new(16, quota);
+        q.try_push("a", Priority::Normal, 1).unwrap();
+        q.try_push("a", Priority::Normal, 2).unwrap();
+        match q.try_push("a", Priority::Normal, 3) {
+            Err(AdmitError::AtQuota(3)) => {}
+            other => panic!("expected AtQuota(3), got {other:?}"),
+        }
+        // Another tenant is unaffected by a's quota.
+        q.try_push("b", Priority::Normal, 10).unwrap();
+        let ts = q.tenant_stats();
+        assert_eq!(ts[0].0, "a");
+        assert_eq!(ts[0].1.quota_refusals, 1);
+        assert_eq!(ts[0].1.queued, 2);
+        assert_eq!(ts[1].0, "b");
+        assert_eq!(ts[1].1.queued, 1);
+        // Draining one of a's items re-admits a.
+        let (tenant, item) = q.pop().unwrap();
+        assert_eq!((tenant.as_str(), item), ("a", 1));
+        q.try_push("a", Priority::Normal, 3).unwrap();
+        q.finish("a");
+    }
+
+    #[test]
+    fn global_full_is_busy_not_at_quota() {
+        let q = TenantQueue::new(2, TenantQuota::default());
+        q.try_push("a", Priority::Normal, 1).unwrap();
+        q.try_push("b", Priority::Normal, 2).unwrap();
+        match q.try_push("c", Priority::Normal, 3) {
+            Err(AdmitError::Busy(3)) => {}
+            other => panic!("expected Busy(3), got {other:?}"),
+        }
+        assert_eq!(q.stats().producer_blocks, 1);
+    }
+
+    #[test]
+    fn in_flight_cap_skips_tenant_but_not_others() {
+        let quota = TenantQuota { max_queued: usize::MAX, max_in_flight: 1 };
+        let q = TenantQueue::new(16, quota);
+        q.push("a", Priority::High, "a1").unwrap();
+        q.push("a", Priority::High, "a2").unwrap();
+        q.push("b", Priority::Low, "b1").unwrap();
+        // a1 pops (a now at in-flight cap); a2 is skipped even though
+        // it outranks b1, so b1 flows past the capped tenant.
+        assert_eq!(q.try_pop().unwrap(), ("a".to_string(), "a1"));
+        assert_eq!(q.try_pop().unwrap(), ("b".to_string(), "b1"));
+        assert!(q.try_pop().is_none(), "a is at its in-flight cap");
+        assert_eq!(q.len(), 1);
+        // Finishing a1 releases a2.
+        q.finish("a");
+        assert_eq!(q.try_pop().unwrap(), ("a".to_string(), "a2"));
+        q.finish("a");
+        q.finish("b");
+    }
+
+    #[test]
+    fn finish_wakes_consumers_blocked_on_the_in_flight_cap() {
+        let quota = TenantQuota { max_queued: usize::MAX, max_in_flight: 1 };
+        let q = Arc::new(TenantQueue::new(16, quota));
+        q.push("a", Priority::Normal, 1).unwrap();
+        q.push("a", Priority::Normal, 2).unwrap();
+        let (_, first) = q.pop().unwrap();
+        assert_eq!(first, 1);
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                // Blocks: the only queued item belongs to a capped tenant.
+                let got = q.pop();
+                if let Some((tenant, _)) = &got {
+                    q.finish(tenant);
+                }
+                got
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        q.finish("a");
+        let got = waiter.join().unwrap();
+        assert_eq!(got, Some(("a".to_string(), 2)));
+    }
+
+    #[test]
+    fn blocking_push_waits_out_the_quota() {
+        let quota = TenantQuota { max_queued: 1, max_in_flight: usize::MAX };
+        let q = Arc::new(TenantQueue::new(16, quota));
+        q.push("a", Priority::Normal, 0usize).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 1..=10usize {
+                    q.push("a", Priority::Normal, i).unwrap();
+                }
+            })
+        };
+        let mut seen = Vec::new();
+        for _ in 0..=10 {
+            let (tenant, item) = q.pop().unwrap();
+            seen.push(item);
+            q.finish(&tenant);
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..=10).collect::<Vec<_>>());
+        let ts = q.tenant_stats();
+        assert!(ts[0].1.quota_refusals > 0, "producer never hit the quota");
+    }
+
+    #[test]
+    fn tenant_close_drains_and_abort_returns_backlog() {
+        let q = TenantQueue::new(16, TenantQuota::default());
+        q.push("a", Priority::Normal, 1).unwrap();
+        q.push("b", Priority::High, 2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert!(q.push("a", Priority::Normal, 9).is_err());
+        assert!(matches!(
+            q.try_push("a", Priority::Normal, 9),
+            Err(AdmitError::Closed(9))
+        ));
+        // Backlog still pops after close (graceful drain), high first.
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert!(q.pop().is_none());
+        q.finish("a");
+        q.finish("b");
+
+        let q = TenantQueue::new(16, TenantQuota::default());
+        q.push("a", Priority::Normal, 1).unwrap();
+        q.push("b", Priority::High, 2).unwrap();
+        let dropped = q.abort();
+        assert_eq!(dropped.len(), 2);
+        assert_eq!(dropped[0], ("b".to_string(), 2));
+        assert_eq!(dropped[1], ("a".to_string(), 1));
+        assert!(q.pop().is_none());
+        assert!(q.abort().is_empty());
+        for (_, t) in q.tenant_stats() {
+            assert_eq!(t.queued, 0, "abort must zero the queued gauges");
+        }
+    }
+
+    #[test]
+    fn tenant_try_pop_where_respects_caps_and_priority() {
+        let quota = TenantQuota { max_queued: usize::MAX, max_in_flight: 1 };
+        let q = TenantQueue::new(16, quota);
+        q.push("a", Priority::Normal, 10).unwrap();
+        q.push("b", Priority::Normal, 11).unwrap();
+        q.push("b", Priority::High, 12).unwrap();
+        // b's high-priority even item wins over a's earlier normal one.
+        assert_eq!(q.try_pop_where(|&i| i % 2 == 0), Some(("b".to_string(), 12)));
+        // b is now at its in-flight cap: its remaining odd item is
+        // skipped, and a has no odd item... 11 is odd but capped, 10 is
+        // even. So no odd match is eligible.
+        assert_eq!(q.try_pop_where(|&i| i % 2 == 1), None);
+        q.finish("b");
+        assert_eq!(q.try_pop_where(|&i| i % 2 == 1), Some(("b".to_string(), 11)));
+        q.finish("b");
+        q.finish("a"); // no-op resilience: a never popped
     }
 }

@@ -22,19 +22,34 @@
 //! order (see `server/README.md` for the full grammar):
 //!
 //! ```text
+//! tenant <id> [low|normal|high]
 //! register <name> <sequence>
+//! register-profile <name> <nbytes>
+//! <nbytes bytes of io::profile_fmt (.aphmm) text>
 //! score <profile> <read> [engine]
 //! align <profile> <read> [engine]
 //! search <read> [engine]
 //! correct <reference> <read1,read2,...> [engine]
-//! stats | quit | shutdown
+//! stats | tenants | quit | shutdown
 //! ```
+//!
+//! `tenant` sets the session's tenant id and priority class for every
+//! later submission (default: tenant `"default"`, priority `normal`);
+//! admission quotas are per tenant (see [`super::TenantQuota`]).
+//! `register-profile` is the prebuilt-profile path: the command line
+//! declares the payload length in bytes, then exactly that many bytes
+//! of `.aphmm` text ([`crate::io::read_phmm_str`]) follow — a length
+//! prefix rather than an in-band terminator, so hostile payloads can't
+//! smuggle protocol lines.  Registered profiles flow through the same
+//! [`ProfileRegistry`] → content hash → `PreparedCache` pipeline as
+//! in-process ones, so two tenants uploading the same profile text
+//! share one frozen coefficient table.
 //!
 //! [`serve_stdio`] speaks it over stdin/stdout; [`serve_tcp`] accepts
 //! concurrent connections on a local port (std threads only — `tokio`
 //! is not in the offline registry, matching the coordinator's stance).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -47,7 +62,8 @@ use crate::phmm::Phmm;
 use crate::seq::Sequence;
 
 use super::cache::profile_hash;
-use super::{Server, ServerConfig};
+use super::queue::Priority;
+use super::{Server, ServerConfig, DEFAULT_TENANT};
 
 /// A typed request against the serving layer.
 #[derive(Clone, Debug)]
@@ -167,11 +183,16 @@ pub struct Response {
 }
 
 /// A registered profile: the graph plus its content hash (the cache
-/// key component) and the pre-filter k-mer set of its decoded
-/// consensus.
+/// key component), the owning tenant, and the pre-filter k-mer set of
+/// its decoded consensus.
 pub struct ProfileEntry {
     /// Tenant-chosen name.
     pub name: String,
+    /// Tenant that registered the profile (ownership check for wire
+    /// re-registrations; the trusted in-process API registers as the
+    /// reserved [`super::OPERATOR_TENANT`], which wire sessions can
+    /// never claim).
+    pub owner: String,
     /// The profile graph.
     pub phmm: Phmm,
     /// Content hash (see [`profile_hash`]).
@@ -190,24 +211,135 @@ pub struct ProfileRegistry {
 }
 
 impl ProfileRegistry {
-    /// Register (or replace) `name`, returning the profile content
-    /// hash.  Replacing keeps the original registration order slot.
-    /// `prefilter_k` sizes the consensus k-mer set used by the `Search`
-    /// pre-filter.
-    pub fn register(&self, name: &str, phmm: Phmm, prefilter_k: usize) -> u64 {
+    fn make_entry(
+        name: &str,
+        owner: &str,
+        phmm: Phmm,
+        prefilter_k: usize,
+    ) -> (Arc<ProfileEntry>, u64) {
         let hash = profile_hash(&phmm);
         // Silent-state graphs have no decodable consensus: leave the
         // set empty so the profile is never screened out.
         let kmers = crate::viterbi::consensus(&phmm)
             .map(|c| apps::kmer_set(&c.consensus.data, prefilter_k, phmm.sigma()))
             .unwrap_or_default();
-        let entry = Arc::new(ProfileEntry { name: name.to_string(), phmm, hash, kmers });
+        let entry = Arc::new(ProfileEntry {
+            name: name.to_string(),
+            owner: owner.to_string(),
+            phmm,
+            hash,
+            kmers,
+        });
+        (entry, hash)
+    }
+
+    /// Register (or unconditionally replace) `name` as `owner`,
+    /// returning the profile content hash.  Replacing keeps the
+    /// original registration order slot.  `prefilter_k` sizes the
+    /// consensus k-mer set used by the `Search` pre-filter.  This is
+    /// the **trusted** (in-process/operator) path; untrusted wire
+    /// registrations go through [`ProfileRegistry::register_checked`].
+    pub fn register(&self, name: &str, owner: &str, phmm: Phmm, prefilter_k: usize) -> u64 {
+        let (entry, hash) = Self::make_entry(name, owner, phmm, prefilter_k);
         let mut entries = self.entries.write().unwrap();
         match entries.iter_mut().find(|e| e.name == name) {
             Some(slot) => *slot = entry,
             None => entries.push(entry),
         }
         hash
+    }
+
+    /// Fast admission decision for [`ProfileRegistry::register_checked`]
+    /// from the content hash alone: `Ok(true)` = identical content
+    /// already registered (idempotent, nothing to do), `Ok(false)` =
+    /// go ahead and build/insert, `Err` = the name belongs to another
+    /// tenant with different content, or a fresh name would push the
+    /// registry past its caps (entries store full graphs — untrusted
+    /// registration must be bounded).
+    fn check_replace(
+        entries: &[Arc<ProfileEntry>],
+        name: &str,
+        owner: &str,
+        hash: u64,
+        max_profiles: usize,
+        max_per_tenant: usize,
+    ) -> Result<bool> {
+        match entries.iter().find(|e| e.name == name) {
+            None => {
+                if entries.len() >= max_profiles.max(1) {
+                    return Err(ApHmmError::Config(format!(
+                        "profile registry is full ({} profiles; serve.max_profiles)",
+                        entries.len()
+                    )));
+                }
+                let owned = entries.iter().filter(|e| e.owner == owner).count();
+                if owned >= max_per_tenant.max(1) {
+                    return Err(ApHmmError::Config(format!(
+                        "tenant {owner:?} already owns {owned} profiles \
+                         (serve.max_profiles_per_tenant)"
+                    )));
+                }
+                Ok(false)
+            }
+            Some(e) if e.hash == hash => Ok(true),
+            Some(e) if e.owner == owner => Ok(false),
+            Some(e) => Err(ApHmmError::Config(format!(
+                "profile {name:?} is owned by tenant {:?}; registering \
+                 different content under that name is not allowed",
+                e.owner
+            ))),
+        }
+    }
+
+    /// Ownership-checked registration for untrusted (wire) tenants.
+    /// Registering a fresh name succeeds; re-registering an existing
+    /// name succeeds when the caller owns it (profile update) or when
+    /// the content hash is identical (idempotent re-upload — the entry
+    /// and its owner are left untouched, which is what lets two
+    /// tenants share one frozen table by uploading the same text).  A
+    /// different tenant replacing a name with **different** content is
+    /// refused — that would silently redirect the owner's subsequent
+    /// requests onto foreign parameters.
+    ///
+    /// The refusal/idempotence decision needs only the content hash,
+    /// so it runs **before** the expensive part of entry construction
+    /// (Viterbi consensus decode + k-mer set): refused uploads cost an
+    /// attacker-controlled hash, not a decode.  The check is repeated
+    /// under the write lock — the cheap first pass is an early-out,
+    /// not the authority — so concurrent registrations can't interleave
+    /// past it.
+    pub fn register_checked(
+        &self,
+        name: &str,
+        owner: &str,
+        phmm: Phmm,
+        prefilter_k: usize,
+        max_profiles: usize,
+        max_per_tenant: usize,
+    ) -> Result<u64> {
+        let hash = profile_hash(&phmm);
+        if Self::check_replace(
+            &self.entries.read().unwrap(),
+            name,
+            owner,
+            hash,
+            max_profiles,
+            max_per_tenant,
+        )? {
+            return Ok(hash); // idempotent: identical content
+        }
+        // Build outside the lock: the consensus decode must not block
+        // other sessions' lookups.
+        let (entry, _) = Self::make_entry(name, owner, phmm, prefilter_k);
+        let mut entries = self.entries.write().unwrap();
+        if Self::check_replace(&entries, name, owner, hash, max_profiles, max_per_tenant)? {
+            return Ok(hash);
+        }
+        match entries.iter_mut().find(|e| e.name == name) {
+            Some(slot) => *slot = entry,
+            None => entries.push(entry),
+        }
+        Ok(hash)
     }
 
     /// Look up a profile by name.
@@ -438,10 +570,36 @@ fn parse_line(
         Sequence::from_str(what, s, cfg.alphabet).map_err(|e| e.to_string())
     };
     let command = match cmd {
+        "tenant" => {
+            let name = toks.next().ok_or("tenant: missing tenant id")?.to_string();
+            // `__`-prefixed ids are reserved for in-process principals
+            // (see `OPERATOR_TENANT`): a wire session must not be able
+            // to assume the operator's profile ownership.
+            if name.starts_with("__") {
+                return Err(format!("tenant: id {name:?} is reserved (`__` prefix)"));
+            }
+            let priority = match toks.next() {
+                None => Priority::Normal,
+                Some(p) => Priority::parse(p).ok_or_else(|| {
+                    format!("tenant: unknown priority {p:?} (expected low | normal | high)")
+                })?,
+            };
+            Command::Tenant { name, priority }
+        }
         "register" => {
             let name = toks.next().ok_or("register: missing profile name")?.to_string();
             let reference = seq(toks.next(), "reference")?;
             Command::Register { name, reference }
+        }
+        "register-profile" => {
+            let name =
+                toks.next().ok_or("register-profile: missing profile name")?.to_string();
+            let nbytes: usize = toks
+                .next()
+                .ok_or("register-profile: missing payload byte count")?
+                .parse()
+                .map_err(|_| "register-profile: payload byte count must be an integer")?;
+            Command::RegisterProfile { name, nbytes }
         }
         "score" | "align" => {
             let profile = toks.next().ok_or_else(|| format!("{cmd}: missing profile name"))?;
@@ -473,12 +631,13 @@ fn parse_line(
             Command::Submit { engine, body: Request::Correct { reference, reads } }
         }
         "stats" => Command::Stats,
+        "tenants" => Command::Tenants,
         "quit" | "exit" => Command::Quit,
         "shutdown" => Command::Shutdown,
         other => {
             return Err(format!(
-                "unknown command {other:?} (expected register | score | align | search | \
-                 correct | stats | quit | shutdown)"
+                "unknown command {other:?} (expected tenant | register | register-profile | \
+                 score | align | search | correct | stats | tenants | quit | shutdown)"
             ))
         }
     };
@@ -489,9 +648,12 @@ fn parse_line(
 }
 
 enum Command {
+    Tenant { name: String, priority: Priority },
     Register { name: String, reference: Sequence },
+    RegisterProfile { name: String, nbytes: usize },
     Submit { engine: EngineKind, body: Request },
     Stats,
+    Tenants,
     Quit,
     Shutdown,
 }
@@ -538,42 +700,137 @@ fn format_response(cfg: &ServerConfig, resp: &Response) -> String {
     }
 }
 
+/// Read a `register-profile` payload: exactly `nbytes` of UTF-8
+/// `.aphmm` text.  The byte count is validated against the configured
+/// cap **before** any byte is consumed, so an oversized length prefix
+/// is a refused request, not an allocation.  `Err((message, fatal))`:
+/// `fatal` means the session must end after the error reply — both an
+/// oversized prefix (the client may already have written the payload
+/// we are not going to read, so the stream cannot be resynchronized)
+/// and a truncated payload leave the stream unusable.
+fn read_profile_payload<R: BufRead>(
+    input: &mut R,
+    nbytes: usize,
+    cap: usize,
+) -> std::result::Result<String, (String, bool)> {
+    if nbytes > cap {
+        return Err((
+            format!(
+                "register-profile: payload of {nbytes} bytes exceeds the \
+                 {cap}-byte cap (serve.max_profile_bytes); closing session"
+            ),
+            true,
+        ));
+    }
+    let mut buf = vec![0u8; nbytes];
+    if let Err(e) = input.read_exact(&mut buf) {
+        return Err((format!("register-profile: truncated payload ({e})"), true));
+    }
+    String::from_utf8(buf)
+        .map_err(|_| ("register-profile: payload is not UTF-8".to_string(), false))
+}
+
+/// Handle a `register-profile` payload that was read successfully:
+/// parse, cross-check the alphabet, register under the session tenant
+/// (ownership-checked — see [`Server::register_profile_for`]).
+fn register_profile_text(server: &Server, tenant: &str, name: &str, text: &str) -> String {
+    let cfg = server.config();
+    match crate::io::read_phmm_str(text, "wire") {
+        Ok(phmm) if phmm.alphabet.name() != cfg.alphabet.name() => format!(
+            "err register-profile: profile alphabet {} does not match server alphabet {}",
+            phmm.alphabet.name(),
+            cfg.alphabet.name()
+        ),
+        Ok(phmm) => {
+            let states = phmm.n_states();
+            match server.register_profile_for(tenant, name, phmm) {
+                Ok(hash) => format!("ok profile {name} states={states} hash={hash:016x}"),
+                Err(e) => format!("err {e}"),
+            }
+        }
+        Err(e) => format!("err {e}"),
+    }
+}
+
 /// Serve one protocol session: read request lines from `input`, write
 /// one response line per request (in request order) to `out`.
 ///
 /// Admission control is the blocking kind: when the job queue is full
-/// the session stalls until capacity frees up, which is exactly the
-/// backpressure a streaming client should feel.
+/// — or this session's tenant is at its quota — the session stalls
+/// until capacity frees up, which is exactly the backpressure a
+/// streaming client should feel (load-shedding clients use the typed
+/// [`Server::try_submit_for`] API instead).
 pub fn serve_connection<R: BufRead, W: Write>(
     server: &Server,
-    input: R,
+    mut input: R,
     mut out: W,
 ) -> Result<SessionEnd> {
-    for line in input.lines() {
-        let Ok(line) = line else {
-            return Ok(SessionEnd::Eof); // client went away mid-line
-        };
+    let mut tenant = DEFAULT_TENANT.to_string();
+    let mut priority = Priority::Normal;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match input.read_line(&mut line) {
+            Ok(0) => return Ok(SessionEnd::Eof),
+            Ok(_) => {}
+            Err(_) => return Ok(SessionEnd::Eof), // client went away mid-line
+        }
         let reply = match parse_line(server.config(), &line) {
             Ok(None) => continue,
-            Err(msg) => format!("err {msg}"),
+            Err(msg) => {
+                // A malformed register-profile command line may have a
+                // payload already in flight behind it; like the
+                // over-cap case, the stream cannot be resynchronized —
+                // leaving it open would parse the payload as commands.
+                if line.trim_start().starts_with("register-profile") {
+                    let _ = writeln!(out, "err {msg}; closing session");
+                    let _ = out.flush();
+                    return Ok(SessionEnd::Eof);
+                }
+                format!("err {msg}")
+            }
+            Ok(Some(Command::Tenant { name, priority: p })) => {
+                tenant = name;
+                priority = p;
+                format!("ok tenant {tenant} priority={}", priority.name())
+            }
             Ok(Some(Command::Register { name, reference })) => {
                 let cfg = server.config();
                 match Phmm::error_correction_for(&reference, &cfg.design, cfg.alphabet) {
                     Ok(phmm) => {
                         let states = phmm.n_states();
-                        let hash = server.register_profile(&name, phmm);
-                        format!("ok profile {name} states={states} hash={hash:016x}")
+                        match server.register_profile_for(&tenant, &name, phmm) {
+                            Ok(hash) => {
+                                format!("ok profile {name} states={states} hash={hash:016x}")
+                            }
+                            Err(e) => format!("err {e}"),
+                        }
                     }
                     Err(e) => format!("err {e}"),
                 }
             }
+            Ok(Some(Command::RegisterProfile { name, nbytes })) => {
+                let cap = server.config().max_profile_bytes;
+                match read_profile_payload(&mut input, nbytes, cap) {
+                    Ok(text) => register_profile_text(server, &tenant, &name, &text),
+                    Err((msg, fatal)) => {
+                        let _ = writeln!(out, "err {msg}");
+                        let _ = out.flush();
+                        if fatal {
+                            return Ok(SessionEnd::Eof);
+                        }
+                        continue;
+                    }
+                }
+            }
             Ok(Some(Command::Submit { engine, body })) => {
-                match server.submit(Some(engine), body) {
+                match server.submit_for(&tenant, priority, Some(engine), body) {
                     Ok(ticket) => format_response(server.config(), &ticket.wait()),
                     Err(e) => format!("err {e}"),
                 }
             }
             Ok(Some(Command::Stats)) => server.stats_line(),
+            Ok(Some(Command::Tenants)) => server.tenants_line(),
             Ok(Some(Command::Quit)) => {
                 let _ = writeln!(out, "ok bye");
                 let _ = out.flush();
@@ -589,7 +846,6 @@ pub fn serve_connection<R: BufRead, W: Write>(
             return Ok(SessionEnd::Eof);
         }
     }
-    Ok(SessionEnd::Eof)
 }
 
 /// Serve the protocol over stdin/stdout until EOF, `quit`, or

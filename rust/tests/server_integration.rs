@@ -4,10 +4,14 @@
 
 use aphmm::apps;
 use aphmm::baumwelch::{EngineKind, ForwardOptions, PreparedAny, TrainConfig};
+use aphmm::io::write_phmm_string;
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::pool::WorkerPool;
 use aphmm::seq::Sequence;
-use aphmm::server::{PushError, Request, Response, ResponseBody, Server, ServerConfig};
+use aphmm::server::{
+    AdmitError, Priority, PushError, Request, Response, ResponseBody, Server, ServerConfig,
+    TenantQuota,
+};
 use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
 use aphmm::testutil;
 
@@ -299,6 +303,388 @@ fn try_submit_refuses_when_the_queue_is_full() {
     let q = server.queue_stats();
     assert!(q.high_water <= 2);
     assert!(q.producer_blocks >= refused as u64);
+    server.shutdown(true);
+}
+
+/// Acceptance (tenant-aware admission): a tenant at its quota gets a
+/// typed `AtQuota` refusal while a second tenant's requests still
+/// admit, and per-tenant gauges appear in `MetricsSummary`.
+#[test]
+fn tenant_at_quota_is_refused_while_others_admit() {
+    let mut rng = XorShift::new(206);
+    let reference = dna(&mut rng, "chr1", 80);
+    let reads = reads_of(&mut rng, &reference, 8);
+    let read = reads[0].clone();
+    // One worker chewing slow training jobs; tenant "a" may queue at
+    // most one request at a time.
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        queue_depth: 16,
+        tenant_quota: TenantQuota { max_queued: 1, max_in_flight: 1 },
+        ..Default::default()
+    });
+    server.register_profile(
+        "chr1",
+        Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap(),
+    );
+
+    let mut tickets = Vec::new();
+    let mut at_quota = 0usize;
+    for _ in 0..8 {
+        match server.try_submit_for(
+            "a",
+            Priority::Normal,
+            None,
+            Request::Correct { reference: reference.clone(), reads: reads.clone() },
+        ) {
+            Ok(t) => tickets.push(t),
+            Err(AdmitError::AtQuota(_)) => at_quota += 1,
+            Err(other) => panic!("unexpected admission result {other:?}"),
+        }
+    }
+    assert!(
+        at_quota > 0,
+        "8 instant submissions against a max_queued=1 quota must hit AtQuota"
+    );
+    // Tenant "b" is unaffected by a's quota: its request admits (and
+    // completes) even while a is being refused.
+    let b_ticket = server
+        .try_submit_for(
+            "b",
+            Priority::High,
+            None,
+            Request::Score { profile: "chr1".into(), read },
+        )
+        .expect("tenant b must admit while tenant a is at quota");
+    tickets.push(b_ticket);
+    server.shutdown(true);
+    for t in tickets {
+        match t.wait().body {
+            ResponseBody::Correct { .. } | ResponseBody::Score { .. } => {}
+            other => panic!("admitted request failed: {other:?}"),
+        }
+    }
+
+    // Per-tenant gauges in the metrics summary.
+    let m = server.metrics_summary();
+    let find = |name: &str| {
+        m.tenants
+            .iter()
+            .find(|t| t.tenant == name)
+            .unwrap_or_else(|| panic!("tenant {name} missing from MetricsSummary"))
+    };
+    let a = find("a");
+    assert!(a.quota_refusals >= at_quota as u64, "a.quota_refusals = {}", a.quota_refusals);
+    assert!(a.admitted >= 1);
+    assert!(a.completed >= 1);
+    assert_eq!(a.queued, 0, "drained server must show empty tenant queues");
+    assert_eq!(a.in_flight, 0);
+    let b = find("b");
+    assert_eq!(b.admitted, 1);
+    assert_eq!(b.completed, 1);
+    assert_eq!(b.quota_refusals, 0);
+}
+
+/// Acceptance (wire-format registration): a profile registered over
+/// the wire via `register-profile` + `io::profile_fmt` text scores
+/// bit-identically to the same profile registered in-process, and the
+/// second registration shares the frozen tables (PreparedCache hit
+/// counters prove the freeze ran once).
+#[test]
+fn wire_registered_profile_shares_frozen_tables_with_in_process_one() {
+    let mut rng = XorShift::new(207);
+    let reference = dna(&mut rng, "chr1", 50);
+    // Canonicalize through one text round trip: the profile_fmt
+    // write→read→write byte-identity property makes a parsed graph a
+    // fixed point of the format, so the in-process registration and
+    // the wire payload below describe bit-identical parameters.  (A
+    // raw in-memory graph may carry f32s that 7-decimal text rounds.)
+    let raw = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let phmm = aphmm::io::read_phmm_str(&write_phmm_string(&raw), "canon").unwrap();
+    let read = simulate_read(&mut rng, &reference, 0, 50, &ErrorProfile::pacbio(), 0).seq;
+    let ascii_read = read.to_ascii(aphmm::seq::DNA);
+
+    let mut server = Server::start(ServerConfig { n_workers: 2, ..Default::default() });
+    // Tenant 1 registers in-process and scores: this freezes the
+    // tables (cache miss #1 — and the only freeze in this test).
+    server.register_profile("native", phmm.clone());
+    let native = server
+        .submit(None, Request::Score { profile: "native".into(), read: read.clone() })
+        .unwrap()
+        .wait();
+    let native_bits = match native.body {
+        ResponseBody::Score { loglik, cache_hit, .. } => {
+            assert!(!cache_hit);
+            loglik.to_bits()
+        }
+        other => panic!("unexpected response {other:?}"),
+    };
+
+    // Tenant 2 uploads the same profile as .aphmm text over the wire
+    // under a different name.  Content addressing maps it to the same
+    // cache entry, so its first score is already a hit.
+    let payload = write_phmm_string(&phmm);
+    let script = format!(
+        "tenant t2 high\nregister-profile wirep {}\n{payload}score wirep {ascii_read}\nquit\n",
+        payload.len()
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Quit);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4, "one response per request:\n{text}");
+    assert_eq!(lines[0], "ok tenant t2 priority=high");
+    assert!(lines[1].starts_with("ok profile wirep states="), "{}", lines[1]);
+    assert!(
+        lines[2].starts_with("score wirep loglik=") && lines[2].contains("cache=hit"),
+        "wire profile must reuse the in-process frozen tables: {}",
+        lines[2]
+    );
+
+    // Same hash as the in-process registration (content addressing).
+    let registry = server.registry();
+    let native_entry = registry.get("native").unwrap();
+    let wire_entry = registry.get("wirep").unwrap();
+    assert_eq!(native_entry.hash, wire_entry.hash, "wire round trip changed the content hash");
+
+    // And the wire-registered profile scores bit-identically through
+    // the typed API too.
+    let wire = server
+        .submit(None, Request::Score { profile: "wirep".into(), read })
+        .unwrap()
+        .wait();
+    match wire.body {
+        ResponseBody::Score { loglik, cache_hit, .. } => {
+            assert_eq!(loglik.to_bits(), native_bits, "wire profile diverged from in-process");
+            assert!(cache_hit);
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    let c = server.cache_stats();
+    assert_eq!(c.misses, 1, "exactly one freeze across both registrations");
+    assert!(c.hits >= 2, "both wire scores must hit, got {}", c.hits);
+    // Tenant t2's activity shows up in the per-tenant gauges.
+    let m = server.metrics_summary();
+    assert!(m.tenants.iter().any(|t| t.tenant == "t2" && t.completed >= 1));
+    server.shutdown(true);
+}
+
+/// Hostile `register-profile` payloads: truncated stream, oversized
+/// length prefix, non-finite probabilities, garbage bytes — all are
+/// clean `err` responses (or a clean session end for a truncated
+/// stream), never panics, and the session/server stays usable.
+#[test]
+fn hostile_register_profile_payloads_are_rejected() {
+    let mut rng = XorShift::new(208);
+    let reference = dna(&mut rng, "chr1", 40);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let valid = write_phmm_string(&phmm);
+
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        max_profile_bytes: 64 * 1024,
+        ..Default::default()
+    });
+
+    // Oversized length prefix: refused before any byte is read or
+    // allocated, and the session is closed — the client may already
+    // have written the payload we are not going to read, so the stream
+    // cannot be resynchronized (leaving it open would parse megabytes
+    // of profile text as protocol commands).
+    let script = "register-profile big 999999999\nstats\nquit\n".to_string();
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Eof, "over-cap must close the session");
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1, "no further command may be parsed from the stream:\n{text}");
+    assert!(lines[0].starts_with("err register-profile:"), "{}", lines[0]);
+    assert!(lines[0].contains("cap"), "{}", lines[0]);
+    // The server itself survives; a fresh session works.
+    let mut out: Vec<u8> = Vec::new();
+    aphmm::server::serve_connection(&server, "stats\nquit\n".as_bytes(), &mut out).unwrap();
+    assert!(String::from_utf8(out).unwrap().starts_with("stats "));
+
+    // Truncated payload: the declared length exceeds what the stream
+    // holds; the session answers an error and ends cleanly.
+    let script = format!("register-profile cut {}\nAPHMM 1\n", 10_000);
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Eof);
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.starts_with("err register-profile: truncated payload"), "{text}");
+
+    // Non-finite probability in an otherwise valid payload.
+    let first_trans = valid
+        .lines()
+        .find(|l| l.starts_with("trans "))
+        .expect("fixture has a trans line")
+        .to_string();
+    let toks: Vec<&str> = first_trans.split_whitespace().collect();
+    let hostile = valid.replacen(&first_trans, &format!("trans {} {} inf", toks[1], toks[2]), 1);
+    let script = format!("register-profile nan {}\n{hostile}quit\n", hostile.len());
+    let mut out: Vec<u8> = Vec::new();
+    aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.starts_with("err "), "non-finite prob must be rejected: {text}");
+    assert!(server.registry().get("nan").is_none());
+
+    // Garbage bytes of the declared length: parse error, session lives.
+    let garbage = "x".repeat(100);
+    let script = format!("register-profile junk 100\n{garbage}quit\n");
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Quit);
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.starts_with("err "), "{text}");
+    assert!(server.registry().get("junk").is_none());
+
+    // A malformed byte count also closes the session: the client may
+    // have pipelined the payload right behind the bad command line,
+    // and an open session would parse those bytes as commands.
+    let script = "register-profile bad 54z1\nAPHMM 1\ndesign error_correction\nquit\n";
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Eof, "bad count must close the session");
+    let text = String::from_utf8(out).unwrap();
+    assert_eq!(text.lines().count(), 1, "payload lines must not be parsed:\n{text}");
+    assert!(text.starts_with("err register-profile:"), "{text}");
+
+    // A valid registration still works after all the hostility.
+    let script = format!("register-profile good {}\n{valid}quit\n", valid.len());
+    let mut out: Vec<u8> = Vec::new();
+    aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.starts_with("ok profile good states="), "{text}");
+    server.shutdown(true);
+}
+
+/// Wire registration is bounded: fresh names are refused past the
+/// per-tenant and total registry caps (entries store full graphs —
+/// unbounded untrusted registration is a memory/CPU DoS), while
+/// same-content re-uploads and owner updates still succeed.
+#[test]
+fn wire_registration_is_bounded_by_registry_caps() {
+    let mut rng = XorShift::new(210);
+    let texts: Vec<String> = (0..3)
+        .map(|i| {
+            let r = dna(&mut rng, &format!("r{i}"), 30);
+            write_phmm_string(&Phmm::error_correction(&r, &EcDesignParams::default()).unwrap())
+        })
+        .collect();
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        max_profiles: 64,
+        max_profiles_per_tenant: 2,
+        ..Default::default()
+    });
+    let run = |script: String| {
+        let mut out: Vec<u8> = Vec::new();
+        aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+        String::from_utf8(out).unwrap()
+    };
+    // Two fresh names fit the per-tenant cap; the third is refused.
+    for (i, text) in texts.iter().enumerate().take(2) {
+        let out = run(format!("tenant t\nregister-profile p{i} {}\n{text}quit\n", text.len()));
+        assert!(out.lines().nth(1).unwrap().starts_with("ok profile"), "{out}");
+    }
+    let out = run(format!("tenant t\nregister-profile p2 {}\n{}quit\n", texts[2].len(), texts[2]));
+    let reply = out.lines().nth(1).unwrap();
+    assert!(reply.starts_with("err ") && reply.contains("owns"), "{out}");
+    assert!(server.registry().get("p2").is_none());
+    // Same-content re-upload (cap-exempt) and owner update still work.
+    let out = run(format!("tenant t\nregister-profile p0 {}\n{}quit\n", texts[0].len(), texts[0]));
+    assert!(out.lines().nth(1).unwrap().starts_with("ok profile"), "{out}");
+    let out = run(format!("tenant t\nregister-profile p0 {}\n{}quit\n", texts[2].len(), texts[2]));
+    assert!(out.lines().nth(1).unwrap().starts_with("ok profile"), "{out}");
+    // Another tenant still has its own budget.
+    let out = run(format!("tenant u\nregister-profile q0 {}\n{}quit\n", texts[1].len(), texts[1]));
+    let reply = out.lines().nth(1).unwrap();
+    // texts[1] is already registered as "p1" with identical content by
+    // tenant t under a different name, so this is a fresh name for u —
+    // admitted within u's budget.
+    assert!(reply.starts_with("ok profile q0"), "{out}");
+    server.shutdown(true);
+}
+
+/// Wire registration is ownership-checked: one tenant cannot replace
+/// another tenant's named profile with different content (which would
+/// silently redirect the owner's requests onto foreign parameters),
+/// while same-content re-uploads and owner updates still succeed.
+#[test]
+fn wire_registration_cannot_hijack_another_tenants_profile() {
+    let mut rng = XorShift::new(209);
+    let ref_a = dna(&mut rng, "ra", 40);
+    let ref_b = dna(&mut rng, "rb", 40);
+    let text_a = write_phmm_string(
+        &Phmm::error_correction(&ref_a, &EcDesignParams::default()).unwrap(),
+    );
+    let text_b = write_phmm_string(
+        &Phmm::error_correction(&ref_b, &EcDesignParams::default()).unwrap(),
+    );
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+
+    let run = |script: String| {
+        let mut out: Vec<u8> = Vec::new();
+        aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+        String::from_utf8(out).unwrap()
+    };
+
+    // Tenant alice registers "fam".
+    let text = run(format!(
+        "tenant alice\nregister-profile fam {}\n{text_a}quit\n",
+        text_a.len()
+    ));
+    assert!(text.lines().nth(1).unwrap().starts_with("ok profile fam"), "{text}");
+    let owner_hash = server.registry().get("fam").unwrap().hash;
+
+    // Tenant mallory tries to replace it with different content: err,
+    // and the registry still holds alice's graph.
+    let text = run(format!(
+        "tenant mallory\nregister-profile fam {}\n{text_b}quit\n",
+        text_b.len()
+    ));
+    let reply = text.lines().nth(1).unwrap();
+    assert!(reply.starts_with("err ") && reply.contains("owned"), "{text}");
+    assert_eq!(server.registry().get("fam").unwrap().hash, owner_hash);
+    assert_eq!(server.registry().get("fam").unwrap().owner, "alice");
+
+    // Same content under the same name from another tenant is an
+    // idempotent no-op (content addressing — this is what lets tenants
+    // share one frozen table), and ownership does not transfer.
+    let text = run(format!(
+        "tenant mallory\nregister-profile fam {}\n{text_a}quit\n",
+        text_a.len()
+    ));
+    assert!(text.lines().nth(1).unwrap().starts_with("ok profile fam"), "{text}");
+    assert_eq!(server.registry().get("fam").unwrap().owner, "alice");
+
+    // The owner may replace their own profile with new content.
+    let text = run(format!(
+        "tenant alice\nregister-profile fam {}\n{text_b}quit\n",
+        text_b.len()
+    ));
+    assert!(text.lines().nth(1).unwrap().starts_with("ok profile fam"), "{text}");
+    assert_ne!(server.registry().get("fam").unwrap().hash, owner_hash);
+
+    // Operator-registered profiles are owned by a reserved id no wire
+    // session can assume: an anonymous session (default tenant, no
+    // `tenant` command) cannot replace them either...
+    server.register_profile(
+        "opprof",
+        Phmm::error_correction(&ref_a, &EcDesignParams::default()).unwrap(),
+    );
+    let op_hash = server.registry().get("opprof").unwrap().hash;
+    let text = run(format!("register-profile opprof {}\n{text_b}quit\n", text_b.len()));
+    let reply = text.lines().next().unwrap();
+    assert!(reply.starts_with("err ") && reply.contains("owned"), "{text}");
+    assert_eq!(server.registry().get("opprof").unwrap().hash, op_hash);
+
+    // ...and the reserved `__` namespace is rejected outright at the
+    // `tenant` command, so the operator id cannot be claimed.
+    let text = run("tenant __operator__\nquit\n".to_string());
+    assert!(text.lines().next().unwrap().starts_with("err tenant:"), "{text}");
     server.shutdown(true);
 }
 
