@@ -8,7 +8,8 @@
 
 use std::time::Instant;
 
-use crate::baumwelch::{train_in, EngineKind, FilterConfig, TrainConfig, TrainResult};
+use crate::baumwelch::{train_in_with, EngineKind, FilterConfig, TrainConfig, TrainResult};
+use crate::cancel::CancelToken;
 use crate::error::Result;
 use crate::mapper::{MapperConfig, MinimizerIndex};
 use crate::phmm::{EcDesignParams, Phmm};
@@ -44,10 +45,26 @@ pub fn train_chunk(
     train_cfg: &TrainConfig,
     pool: &WorkerPool,
 ) -> Result<ChunkTrainOutcome> {
+    train_chunk_with(reference, reads, design, alphabet, train_cfg, pool, &CancelToken::none())
+}
+
+/// [`train_chunk`] with a cooperative [`CancelToken`], observed at each
+/// per-read E-step boundary.  A fired token aborts the whole chunk with
+/// [`crate::error::ApHmmError::Cancelled`]; chunks that complete are
+/// bit-identical to untokened runs.
+pub fn train_chunk_with(
+    reference: &Sequence,
+    reads: &[Sequence],
+    design: &EcDesignParams,
+    alphabet: crate::seq::Alphabet,
+    train_cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<ChunkTrainOutcome> {
     let t0 = Instant::now();
     let mut graph = Phmm::error_correction_for(reference, design, alphabet)?;
     let build_ns = t0.elapsed().as_nanos();
-    let train = train_in(&mut graph, reads, train_cfg, pool)?;
+    let train = train_in_with(&mut graph, reads, train_cfg, pool, cancel)?;
     let t1 = Instant::now();
     let decoded = consensus(&graph)?;
     let decode_ns = t1.elapsed().as_nanos();

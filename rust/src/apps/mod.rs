@@ -8,7 +8,8 @@ mod protein_search;
 mod timing;
 
 pub use error_correction::{
-    correct_assembly, train_chunk, ChunkTrainOutcome, CorrectionConfig, CorrectionReport,
+    correct_assembly, train_chunk, train_chunk_with, ChunkTrainOutcome, CorrectionConfig,
+    CorrectionReport,
 };
 pub use msa::{
     align_all, align_all_with, msa_identity, posterior_columns, profile_columns, AlignedRow,

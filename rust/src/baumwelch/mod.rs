@@ -69,7 +69,10 @@ pub use sparse::{
     ForwardResult, ScoreResult, SparseRow,
 };
 pub use tile::DenseTiles;
-pub use train::{train, train_in, train_with_engine, TrainConfig, TrainResult};
+pub use train::{
+    train, train_in, train_in_with, train_with_engine, train_with_engine_with, TrainConfig,
+    TrainResult,
+};
 pub use update::BwAccumulators;
 
 /// Numerical floor guarding divisions.

@@ -29,6 +29,7 @@ use super::engine::{EngineKind, ExpectationEngine, ReadStats, ReferenceEngine, S
 use super::filter::{FilterConfig, FilterStats};
 use super::lowering::GatherKind;
 use super::sparse::ForwardOptions;
+use crate::cancel::CancelToken;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
 use crate::pool::WorkerPool;
@@ -115,12 +116,20 @@ struct BlockOut<A> {
 type BlockSlot<A> = Mutex<Option<Result<BlockOut<A>>>>;
 
 /// Run one block of reads through forward + fused backward/update.
+///
+/// `cancel` is checked at each per-read boundary — the accumulate
+/// loop's natural chunk boundary.  A fired token aborts the whole
+/// block (and with it the whole request) with
+/// [`ApHmmError::Cancelled`]; it never skips individual reads, so a
+/// training run that completes is bit-identical to an uncancellable
+/// one.
 fn process_block<E: ExpectationEngine>(
     engine: &E,
     phmm: &Phmm,
     prep: &E::Prepared,
     reads: &[Sequence],
     opts: &ForwardOptions,
+    cancel: &CancelToken,
     scratch: &mut E::Scratch,
 ) -> Result<BlockOut<E::Acc>> {
     let mut out = BlockOut {
@@ -129,6 +138,10 @@ fn process_block<E: ExpectationEngine>(
         reads_skipped: 0,
     };
     for read in reads {
+        if let Some(cause) = cancel.check() {
+            return Err(ApHmmError::Cancelled(cause));
+        }
+        crate::failpoint!("engine::accumulate");
         if read.is_empty() {
             out.reads_skipped += 1;
             continue;
@@ -148,6 +161,7 @@ fn process_block<E: ExpectationEngine>(
 
 /// One E-step over all reads: block-parallel on the shared pool,
 /// deterministically reduced.
+#[allow(clippy::too_many_arguments)]
 fn run_estep<E: ExpectationEngine>(
     engine: &E,
     phmm: &Phmm,
@@ -156,6 +170,7 @@ fn run_estep<E: ExpectationEngine>(
     opts: &ForwardOptions,
     n_workers: usize,
     pool: &WorkerPool,
+    cancel: &CancelToken,
 ) -> Result<Vec<BlockOut<E::Acc>>> {
     let blocks: Vec<&[Sequence]> = reads.chunks(ESTEP_BLOCK).collect();
     if blocks.is_empty() {
@@ -166,7 +181,7 @@ fn run_estep<E: ExpectationEngine>(
         let mut scratch = engine.make_scratch(phmm);
         return blocks
             .iter()
-            .map(|&block| process_block(engine, phmm, prep, block, opts, &mut scratch))
+            .map(|&block| process_block(engine, phmm, prep, block, opts, cancel, &mut scratch))
             .collect();
     }
 
@@ -180,7 +195,7 @@ fn run_estep<E: ExpectationEngine>(
             if bi >= blocks.len() {
                 break;
             }
-            let out = process_block(engine, phmm, prep, blocks[bi], opts, &mut scratch);
+            let out = process_block(engine, phmm, prep, blocks[bi], opts, cancel, &mut scratch);
             *slots[bi].lock().unwrap() = Some(out);
         }
     });
@@ -214,10 +229,28 @@ pub fn train_in(
     cfg: &TrainConfig,
     pool: &WorkerPool,
 ) -> Result<TrainResult> {
+    train_in_with(phmm, reads, cfg, pool, &CancelToken::none())
+}
+
+/// [`train_in`] with a cooperative [`CancelToken`], observed at each
+/// per-read E-step boundary (see [`train_with_engine_with`]).
+pub fn train_in_with(
+    phmm: &mut Phmm,
+    reads: &[Sequence],
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
     match cfg.engine {
-        EngineKind::Sparse => train_with_engine(&SparseEngine, phmm, reads, cfg, pool),
-        EngineKind::Banded => train_with_engine(&BandedEngine, phmm, reads, cfg, pool),
-        EngineKind::Reference => train_with_engine(&ReferenceEngine, phmm, reads, cfg, pool),
+        EngineKind::Sparse => {
+            train_with_engine_with(&SparseEngine, phmm, reads, cfg, pool, cancel)
+        }
+        EngineKind::Banded => {
+            train_with_engine_with(&BandedEngine, phmm, reads, cfg, pool, cancel)
+        }
+        EngineKind::Reference => {
+            train_with_engine_with(&ReferenceEngine, phmm, reads, cfg, pool, cancel)
+        }
         EngineKind::Xla => Err(ApHmmError::Config(
             "EngineKind::Xla needs a device session: use the coordinator with artifacts_dir, \
              or call train_with_engine with a coordinator::XlaEngine"
@@ -240,6 +273,22 @@ pub fn train_with_engine<E: ExpectationEngine>(
     cfg: &TrainConfig,
     pool: &WorkerPool,
 ) -> Result<TrainResult> {
+    train_with_engine_with(engine, phmm, reads, cfg, pool, &CancelToken::none())
+}
+
+/// [`train_with_engine`] with a cooperative [`CancelToken`].  The token
+/// is observed at each per-read boundary of the E-step accumulate loop;
+/// a fired token aborts the **whole** training run with
+/// [`ApHmmError::Cancelled`] — it never perturbs partial sums, so runs
+/// that complete are bit-identical to untokened ones.
+pub fn train_with_engine_with<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &mut Phmm,
+    reads: &[Sequence],
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
     let opts = ForwardOptions { filter: cfg.filter, gather: cfg.gather };
     let mut result = TrainResult {
         loglik_history: Vec::new(),
@@ -261,7 +310,7 @@ pub fn train_with_engine<E: ExpectationEngine>(
         let t0 = Instant::now();
         let prep = engine.prepare(phmm)?;
         result.forward_ns += t0.elapsed().as_nanos();
-        let outs = run_estep(engine, phmm, &prep, reads, &opts, cfg.n_workers, pool)?;
+        let outs = run_estep(engine, phmm, &prep, reads, &opts, cfg.n_workers, pool, cancel)?;
         let mut acc = engine.make_acc(phmm);
         for out in &outs {
             engine.merge(&mut acc, &out.acc);

@@ -1,0 +1,124 @@
+//! Cooperative cancellation: [`CancelToken`].
+//!
+//! A request may carry a deadline and/or be cancelled explicitly; the
+//! compute path polls the token at coarse boundaries (queue pop, the
+//! per-read loop of the E-step, the per-profile loop of Search) and
+//! aborts the *whole request* with a typed
+//! [`ApHmmError::Cancelled`](crate::ApHmmError::Cancelled) when it
+//! fires.  Checks never perturb sums: a request either completes
+//! bit-identically to an uncancelled run or returns no result at all.
+//!
+//! The default token ([`CancelToken::none`]) holds no allocation and
+//! its `check` is a single `Option` test, so paths that never cancel
+//! pay nothing.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::CancelCause;
+
+struct CancelInner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// A cloneable cancellation handle shared between a request's
+/// submitter and the worker computing it.  See the module docs.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    inner: Option<Arc<CancelInner>>,
+}
+
+impl CancelToken {
+    /// A token that never fires (no allocation).
+    pub fn none() -> CancelToken {
+        CancelToken { inner: None }
+    }
+
+    /// A cancellable token, expiring at `deadline` if one is given.
+    pub fn with_deadline(deadline: Option<Instant>) -> CancelToken {
+        CancelToken {
+            inner: Some(Arc::new(CancelInner {
+                cancelled: AtomicBool::new(false),
+                deadline,
+            })),
+        }
+    }
+
+    /// Request cancellation.  Idempotent; a no-op on [`none`] tokens.
+    ///
+    /// [`none`]: CancelToken::none
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// Why this token has fired, if it has.  Explicit cancellation
+    /// wins over a deadline when both hold (the caller asked first).
+    pub fn check(&self) -> Option<CancelCause> {
+        let inner = self.inner.as_ref()?;
+        if inner.cancelled.load(Ordering::Acquire) {
+            return Some(CancelCause::Cancelled);
+        }
+        match inner.deadline {
+            Some(d) if Instant::now() >= d => Some(CancelCause::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// The deadline this token carries, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.as_ref().and_then(|i| i.deadline)
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            None => write!(f, "CancelToken::none"),
+            Some(inner) => f
+                .debug_struct("CancelToken")
+                .field("cancelled", &inner.cancelled.load(Ordering::Relaxed))
+                .field("deadline", &inner.deadline)
+                .finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn none_token_never_fires() {
+        let t = CancelToken::none();
+        t.cancel();
+        assert!(t.check().is_none());
+        assert!(t.deadline().is_none());
+    }
+
+    #[test]
+    fn explicit_cancel_fires_and_wins_over_deadline() {
+        let t = CancelToken::with_deadline(None);
+        assert!(t.check().is_none());
+        t.cancel();
+        assert_eq!(t.check(), Some(CancelCause::Cancelled));
+
+        // Both expired deadline and explicit cancel: cancel wins.
+        let t = CancelToken::with_deadline(Some(Instant::now() - Duration::from_millis(1)));
+        assert_eq!(t.check(), Some(CancelCause::DeadlineExceeded));
+        t.cancel();
+        assert_eq!(t.check(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let t = CancelToken::with_deadline(None);
+        let c = t.clone();
+        c.cancel();
+        assert_eq!(t.check(), Some(CancelCause::Cancelled));
+    }
+}

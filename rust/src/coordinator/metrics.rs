@@ -20,6 +20,33 @@ use crate::server::queue::MAX_TRACKED_TENANTS;
 /// a single atomic increment.
 const LATENCY_BUCKETS: usize = 39;
 
+/// Why a request failed, for the by-cause failure counters.  Wire
+/// names (`name()`) appear in the `stats` / `tenants` commands and in
+/// [`crate::server::ResponseBody::Failure`] lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureCause {
+    /// The request's deadline passed before it completed.
+    DeadlineExceeded,
+    /// The submitter cancelled the request.
+    Cancelled,
+    /// The job panicked and was contained at the per-job boundary.
+    Panicked,
+    /// Load shedding refused the request at admission.
+    Shed,
+}
+
+impl FailureCause {
+    /// Stable snake_case wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureCause::DeadlineExceeded => "deadline_exceeded",
+            FailureCause::Cancelled => "cancelled",
+            FailureCause::Panicked => "panicked",
+            FailureCause::Shed => "shed",
+        }
+    }
+}
+
 /// Shared (lock-free) counters updated by workers.
 #[derive(Debug)]
 pub struct Metrics {
@@ -45,6 +72,16 @@ pub struct Metrics {
     /// Producer admissions refused/blocked by the full queue (latest
     /// absorbed snapshot — monotone within one queue's lifetime).
     pub producer_blocks: AtomicU64,
+    /// Failures whose deadline expired (subset of `jobs_failed`).
+    pub failures_deadline_exceeded: AtomicU64,
+    /// Failures cancelled by the submitter (subset of `jobs_failed`).
+    pub failures_cancelled: AtomicU64,
+    /// Jobs that panicked and were contained at the per-job boundary
+    /// (subset of `jobs_failed`; surfaced as `pool_panics`).
+    pub failures_panicked: AtomicU64,
+    /// Requests refused by load shedding at admission (never admitted,
+    /// so *not* counted in `jobs_failed`).
+    pub failures_shed: AtomicU64,
     /// Power-of-two latency histogram (see [`LATENCY_BUCKETS`]).
     latency_hist: [AtomicU64; LATENCY_BUCKETS],
     /// Per-tenant gauges (multi-tenant serving; empty for coordinator
@@ -63,6 +100,12 @@ struct TenantGauges {
     quota_refusals: u64,
     queued: u64,
     in_flight: u64,
+    deadline_exceeded: u64,
+    cancelled: u64,
+    panicked: u64,
+    /// Mirrors the queue's admission-side shed counter (absorbed, not
+    /// worker-recorded — shed requests never reach a worker).
+    shed: u64,
 }
 
 // Tenant-map bounding (tenant ids are client-controlled and must not
@@ -88,6 +131,10 @@ impl Default for Metrics {
             queue_depth: AtomicU64::new(0),
             queue_high_water: AtomicU64::new(0),
             producer_blocks: AtomicU64::new(0),
+            failures_deadline_exceeded: AtomicU64::new(0),
+            failures_cancelled: AtomicU64::new(0),
+            failures_panicked: AtomicU64::new(0),
+            failures_shed: AtomicU64::new(0),
             latency_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             tenants: Mutex::new(BTreeMap::new()),
         }
@@ -125,6 +172,39 @@ impl Metrics {
         self.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a failed request *with* its latency and cause: failures
+    /// feed the latency histogram too (a fleet whose p99 is dominated
+    /// by requests that die at their deadline must show it), and the
+    /// cause increments its by-cause counter.  `cause = None` is a
+    /// plain execution error.
+    pub fn record_failed_request(&self, latency_ns: u64, cause: Option<FailureCause>) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_ns.fetch_add(latency_ns, Ordering::Relaxed);
+        self.latency_max_ns.fetch_max(latency_ns, Ordering::Relaxed);
+        self.latency_hist[bucket_of(latency_ns)].fetch_add(1, Ordering::Relaxed);
+        match cause {
+            Some(FailureCause::DeadlineExceeded) => {
+                self.failures_deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(FailureCause::Cancelled) => {
+                self.failures_cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(FailureCause::Panicked) => {
+                self.failures_panicked.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(FailureCause::Shed) => {
+                self.failures_shed.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {}
+        }
+    }
+
+    /// Record a request refused by load shedding (admission-side: the
+    /// request was never a job, so `jobs_failed` is untouched).
+    pub fn record_shed(&self) {
+        self.failures_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record reads skipped while training a job.
     pub fn record_skipped_reads(&self, n: u64) {
         self.reads_skipped.fetch_add(n, Ordering::Relaxed);
@@ -156,6 +236,27 @@ impl Metrics {
         }
     }
 
+    /// Record a failed request for `tenant` with its cause (same
+    /// overflow bound as [`record_tenant_done`]).  Increments both the
+    /// tenant's `failed` total and the by-cause counter.
+    ///
+    /// [`record_tenant_done`]: Metrics::record_tenant_done
+    pub fn record_tenant_failure(&self, tenant: &str, cause: Option<FailureCause>) {
+        let mut tenants = self.tenants.lock().unwrap();
+        if !tenants.contains_key(tenant) && tenants.len() >= MAX_TRACKED_TENANTS * 4 {
+            return;
+        }
+        let t = tenants.entry(tenant.to_string()).or_default();
+        t.failed += 1;
+        match cause {
+            Some(FailureCause::DeadlineExceeded) => t.deadline_exceeded += 1,
+            Some(FailureCause::Cancelled) => t.cancelled += 1,
+            Some(FailureCause::Panicked) => t.panicked += 1,
+            Some(FailureCause::Shed) => t.shed += 1,
+            None => {}
+        }
+    }
+
     /// Fold one tenant's admission-side gauge snapshot in (idempotent
     /// for one queue — the counters mirror the snapshot).
     pub fn absorb_tenant(
@@ -165,6 +266,7 @@ impl Metrics {
         quota_refusals: u64,
         queued: u64,
         in_flight: u64,
+        shed: u64,
     ) {
         let mut tenants = self.tenants.lock().unwrap();
         let t = tenants.entry(tenant.to_string()).or_default();
@@ -172,6 +274,7 @@ impl Metrics {
         t.quota_refusals = quota_refusals;
         t.queued = queued;
         t.in_flight = in_flight;
+        t.shed = shed;
     }
 
     /// Reconcile the tenant map against `active` — the queue's
@@ -237,6 +340,10 @@ impl Metrics {
                 quota_refusals: t.quota_refusals,
                 queued: t.queued,
                 in_flight: t.in_flight,
+                deadline_exceeded: t.deadline_exceeded,
+                cancelled: t.cancelled,
+                panicked: t.panicked,
+                shed: t.shed,
             })
             .collect();
         MetricsSummary {
@@ -254,6 +361,10 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_high_water: self.queue_high_water.load(Ordering::Relaxed),
             producer_blocks: self.producer_blocks.load(Ordering::Relaxed),
+            deadline_exceeded: self.failures_deadline_exceeded.load(Ordering::Relaxed),
+            cancelled: self.failures_cancelled.load(Ordering::Relaxed),
+            pool_panics: self.failures_panicked.load(Ordering::Relaxed),
+            shed: self.failures_shed.load(Ordering::Relaxed),
         }
     }
 }
@@ -275,6 +386,14 @@ pub struct TenantSummary {
     pub queued: u64,
     /// Requests currently in flight (gauge).
     pub in_flight: u64,
+    /// Failures whose deadline expired.
+    pub deadline_exceeded: u64,
+    /// Failures cancelled by the submitter.
+    pub cancelled: u64,
+    /// Failures contained from a panicking job.
+    pub panicked: u64,
+    /// Admissions refused by load shedding.
+    pub shed: u64,
 }
 
 /// Snapshot of the metrics.
@@ -306,6 +425,14 @@ pub struct MetricsSummary {
     pub queue_high_water: u64,
     /// Producer admissions refused/blocked by a full queue.
     pub producer_blocks: u64,
+    /// Failures whose deadline expired (subset of `jobs_failed`).
+    pub deadline_exceeded: u64,
+    /// Failures cancelled by the submitter (subset of `jobs_failed`).
+    pub cancelled: u64,
+    /// Jobs that panicked and were contained at the per-job boundary.
+    pub pool_panics: u64,
+    /// Requests refused by load shedding at admission.
+    pub shed: u64,
     /// Per-tenant gauges, sorted by tenant id (empty for coordinator
     /// runs — only the serving layer is multi-tenant).
     pub tenants: Vec<TenantSummary>,
@@ -367,21 +494,59 @@ mod tests {
         m.record_tenant_done("bravo", true);
         m.record_tenant_done("bravo", false);
         m.record_tenant_done("alpha", true);
-        m.absorb_tenant("bravo", 5, 2, 1, 1);
-        m.absorb_tenant("alpha", 3, 0, 0, 1);
+        m.absorb_tenant("bravo", 5, 2, 1, 1, 0);
+        m.absorb_tenant("alpha", 3, 0, 0, 1, 0);
         // Absorb is idempotent: a second snapshot mirrors, not adds.
-        m.absorb_tenant("alpha", 4, 0, 0, 0);
+        m.absorb_tenant("alpha", 4, 0, 0, 0, 2);
         let s = m.summary(1.0);
         assert_eq!(s.tenants.len(), 2);
         assert_eq!(s.tenants[0].tenant, "alpha");
         assert_eq!(s.tenants[0].admitted, 4);
         assert_eq!(s.tenants[0].completed, 1);
         assert_eq!(s.tenants[0].in_flight, 0);
+        assert_eq!(s.tenants[0].shed, 2);
         assert_eq!(s.tenants[1].tenant, "bravo");
         assert_eq!(s.tenants[1].admitted, 5);
         assert_eq!(s.tenants[1].completed, 1);
         assert_eq!(s.tenants[1].failed, 1);
         assert_eq!(s.tenants[1].quota_refusals, 2);
+    }
+
+    #[test]
+    fn failures_count_by_cause_and_feed_the_histogram() {
+        let m = Metrics::default();
+        // Only failed requests are recorded; the histogram must still
+        // see their latencies (p50 > 0 proves it — an empty histogram
+        // reports exactly 0).
+        m.record_failed_request(2_000_000, Some(FailureCause::DeadlineExceeded));
+        m.record_failed_request(2_000_000, Some(FailureCause::Cancelled));
+        m.record_failed_request(2_000_000, Some(FailureCause::Panicked));
+        m.record_failed_request(2_000_000, None);
+        m.record_shed();
+        let s = m.summary(1.0);
+        assert_eq!(s.jobs_done, 0);
+        assert_eq!(s.jobs_failed, 4, "shed is admission-side, not a failed job");
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.pool_panics, 1);
+        assert_eq!(s.shed, 1);
+        assert!(s.latency_p50_ms > 0.0, "failed requests must land in the histogram");
+        assert!((s.max_latency_ms - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_failures_count_by_cause() {
+        let m = Metrics::default();
+        m.record_tenant_failure("acme", Some(FailureCause::DeadlineExceeded));
+        m.record_tenant_failure("acme", Some(FailureCause::Cancelled));
+        m.record_tenant_failure("acme", Some(FailureCause::Panicked));
+        m.record_tenant_failure("acme", None);
+        let s = m.summary(1.0);
+        assert_eq!(s.tenants.len(), 1);
+        assert_eq!(s.tenants[0].failed, 4);
+        assert_eq!(s.tenants[0].deadline_exceeded, 1);
+        assert_eq!(s.tenants[0].cancelled, 1);
+        assert_eq!(s.tenants[0].panicked, 1);
     }
 
     #[test]

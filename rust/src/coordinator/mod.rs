@@ -30,9 +30,10 @@
 mod metrics;
 mod xla_device;
 
-pub use metrics::{Metrics, MetricsSummary, TenantSummary};
+pub use metrics::{FailureCause, Metrics, MetricsSummary, TenantSummary};
 pub use xla_device::{XlaDevice, XlaEngine, XlaHandle};
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -168,25 +169,38 @@ pub fn run_jobs_in(
 
     // Execute one job on this participant and record its metrics.  On a
     // fatal (device) error the queue is aborted so the producer stops
-    // admitting and the consumers drain out.
+    // admitting and the consumers drain out.  A *panicking* job is
+    // contained at this boundary and becomes a by-cause failure: the
+    // pool's own scope teardown is already panic-clean (helpers finish
+    // before the payload is resumed), so the remaining jobs keep
+    // running instead of the whole run tearing down.
     let run_job = |job: ChunkJob, worker_id: usize| {
         let t0 = Instant::now();
-        match run_one(&job, cfg, xla_engine.as_ref(), worker_id, pool) {
-            Ok((outcome, timesteps, states, reads_skipped)) => {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_one(&job, cfg, xla_engine.as_ref(), worker_id, pool)
+        }));
+        match result {
+            Ok(Ok((outcome, timesteps, states, reads_skipped))) => {
                 metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
                 if reads_skipped > 0 {
                     metrics.record_skipped_reads(reads_skipped);
                 }
                 outcomes.lock().unwrap().push(outcome);
             }
-            Err(e) => {
-                metrics.record_failure();
+            Ok(Err(e)) => {
+                metrics.record_failed_request(t0.elapsed().as_nanos() as u64, None);
                 if matches!(e, ApHmmError::Runtime(_)) {
                     // Runtime (device) errors are fatal; numeric chunk
                     // failures are skipped.
                     *fatal.lock().unwrap() = Some(e);
                     queue.abort();
                 }
+            }
+            Err(_payload) => {
+                metrics.record_failed_request(
+                    t0.elapsed().as_nanos() as u64,
+                    Some(FailureCause::Panicked),
+                );
             }
         }
     };

@@ -5,6 +5,25 @@
 
 use std::fmt;
 
+/// Why a request was abandoned before completion (see
+/// [`ApHmmError::Cancelled`] and the `cancel` module).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelCause {
+    /// The submitter cancelled the request explicitly.
+    Cancelled,
+    /// The request's deadline passed before it completed.
+    DeadlineExceeded,
+}
+
+impl fmt::Display for CancelCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CancelCause::Cancelled => write!(f, "request cancelled"),
+            CancelCause::DeadlineExceeded => write!(f, "deadline exceeded"),
+        }
+    }
+}
+
 /// Errors surfaced by the ApHMM library.
 #[derive(Debug)]
 pub enum ApHmmError {
@@ -42,6 +61,12 @@ pub enum ApHmmError {
     /// Coordinator scheduling / channel failure.
     Coordinator(String),
 
+    /// The request was cancelled or its deadline expired before it
+    /// completed.  Aborts the whole request at a cooperative check —
+    /// never a partial result, so completed requests stay
+    /// bit-identical to uncancelled runs.
+    Cancelled(CancelCause),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -59,6 +84,7 @@ impl fmt::Display for ApHmmError {
             ApHmmError::Parse { path, msg } => write!(f, "parse error in {path}: {msg}"),
             ApHmmError::Runtime(m) => write!(f, "runtime error: {m}"),
             ApHmmError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            ApHmmError::Cancelled(cause) => write!(f, "{cause}"),
             ApHmmError::Io(e) => write!(f, "{e}"),
         }
     }

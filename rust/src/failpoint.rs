@@ -1,0 +1,151 @@
+//! Deterministic fault injection (`failpoint!`), cfg-gated.
+//!
+//! Fault-tolerance code is only trustworthy if every failure path is
+//! exercised by a *deterministic* test — timing luck (sleeping and
+//! hoping a deadline fires mid-compute) is not a test.  This module
+//! provides a tiny registry of named failure sites; production code
+//! marks the sites with the [`failpoint!`] macro and tests arm them
+//! with [`configure`]/[`configure_times`].
+//!
+//! The whole facility is gated behind the `failpoints` cargo feature:
+//! without it the macro expands to nothing (an empty block), so the
+//! hot paths carry zero cost and `cargo build` proves the sites
+//! compile away.  Named sites currently wired in:
+//!
+//! | site                 | location                                   |
+//! |----------------------|--------------------------------------------|
+//! | `queue::pop`         | `TenantQueue::pop`, after an item is taken |
+//! | `cache::insert`      | `PreparedCache::get_or_freeze`, miss path  |
+//! | `engine::accumulate` | `baumwelch::train::process_block`, per read|
+//! | `wire::io`           | `session::serve_connection`, per line      |
+//!
+//! Tests that arm failpoints must hold a [`scenario`] guard: the
+//! registry is process-global and the test harness runs tests
+//! concurrently, so the guard serializes failpoint scenarios and
+//! clears the registry on entry and exit.
+
+#![cfg(feature = "failpoints")]
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// What an armed failpoint does when execution reaches it.
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// Panic with the given message (exercises panic containment).
+    Panic(String),
+    /// Sleep for the given number of milliseconds (holds a job inside
+    /// a compute loop so deadlines/cancellation can fire mid-flight).
+    Sleep(u64),
+    /// Yield an error message; the site maps it into a typed error and
+    /// returns it (exercises error paths like a failed cache insert).
+    Error(String),
+}
+
+struct Entry {
+    action: Action,
+    /// `Some(n)`: fire `n` more times, then disarm. `None`: always.
+    remaining: Option<u64>,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Entry>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Entry>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `name` with `action` until cleared.
+pub fn configure(name: &str, action: Action) {
+    registry().lock().unwrap().insert(name.to_string(), Entry { action, remaining: None });
+}
+
+/// Arm `name` with `action` for exactly `times` firings, then disarm.
+pub fn configure_times(name: &str, action: Action, times: u64) {
+    registry()
+        .lock()
+        .unwrap()
+        .insert(name.to_string(), Entry { action, remaining: Some(times) });
+}
+
+/// Disarm `name`.
+pub fn clear(name: &str) {
+    registry().lock().unwrap().remove(name);
+}
+
+/// Disarm every failpoint.
+pub fn reset() {
+    registry().lock().unwrap().clear();
+}
+
+/// Evaluate the failpoint `name`: perform `Panic`/`Sleep` side effects
+/// inline and return `Some(message)` iff an `Error` action fired.
+/// Called by the [`failpoint!`] macro, not directly.
+pub fn eval(name: &str) -> Option<String> {
+    let action = {
+        let mut reg = registry().lock().unwrap();
+        let entry = reg.get_mut(name)?;
+        if let Some(n) = &mut entry.remaining {
+            if *n == 0 {
+                return None;
+            }
+            *n -= 1;
+        }
+        entry.action.clone()
+        // Lock released here: a Sleep/Panic must not hold the registry.
+    };
+    match action {
+        Action::Panic(msg) => panic!("failpoint {name}: {msg}"),
+        Action::Sleep(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            None
+        }
+        Action::Error(msg) => Some(msg),
+    }
+}
+
+/// Serialize failpoint scenarios across concurrently-running tests.
+///
+/// Holds a process-global mutex for its lifetime and clears the
+/// registry both on acquisition and on drop, so a scenario can never
+/// observe (or leak) another test's armed failpoints.
+pub fn scenario() -> Scenario {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    let gate = GATE.get_or_init(|| Mutex::new(()));
+    // A test that panicked mid-scenario poisons the gate; the lock
+    // itself is still a valid serialization point.
+    let guard = match gate.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    reset();
+    Scenario { _guard: guard }
+}
+
+/// Guard returned by [`scenario`]; see there.
+pub struct Scenario {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl Drop for Scenario {
+    fn drop(&mut self) {
+        reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_sites_are_inert_and_times_disarms() {
+        let _s = scenario();
+        assert!(eval("t::nowhere").is_none());
+        configure_times("t::err", Action::Error("boom".into()), 2);
+        assert_eq!(eval("t::err").as_deref(), Some("boom"));
+        assert_eq!(eval("t::err").as_deref(), Some("boom"));
+        assert!(eval("t::err").is_none(), "failpoint must disarm after N firings");
+        configure("t::err", Action::Error("again".into()));
+        assert_eq!(eval("t::err").as_deref(), Some("again"));
+        clear("t::err");
+        assert!(eval("t::err").is_none());
+    }
+}

@@ -39,9 +39,11 @@
 pub mod accel;
 pub mod apps;
 pub mod baumwelch;
+pub mod cancel;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod failpoint;
 pub mod io;
 pub mod mapper;
 pub mod phmm;
@@ -54,3 +56,32 @@ pub mod testutil;
 pub mod viterbi;
 
 pub use error::{ApHmmError, Result};
+
+/// Mark a named fault-injection site (see the [`failpoint`] module).
+///
+/// Statement position only.  Two forms:
+///
+/// * `failpoint!("site")` — evaluates the site for its side effects
+///   (`Panic` / `Sleep` actions); an armed `Error` action is ignored.
+/// * `failpoint!("site", mapper)` — additionally, if an `Error` action
+///   fires, `return Err(mapper(message))` from the enclosing function.
+///
+/// Without the `failpoints` cargo feature both forms expand to an
+/// empty block: the sites cost nothing and pull in no code.
+#[macro_export]
+macro_rules! failpoint {
+    ($name:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            let _ = $crate::failpoint::eval($name);
+        }
+    }};
+    ($name:expr, $mapper:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            if let Some(__fp_msg) = $crate::failpoint::eval($name) {
+                return Err($mapper(__fp_msg));
+            }
+        }
+    }};
+}

@@ -251,6 +251,13 @@ fn server_config(
                 .into(),
         ));
     }
+    let shed_fraction =
+        cfg.f64_or(&format!("{section}.shed_fraction"), defaults.shed_fraction)?;
+    if !(0.0..=1.0).contains(&shed_fraction) {
+        return Err(ApHmmError::Config(
+            "shed_fraction must be in [0, 1] (0 disables load shedding)".into(),
+        ));
+    }
     Ok(ServerConfig {
         n_workers: cfg.usize_or(&format!("{section}.workers"), defaults.n_workers)?,
         queue_depth: cfg.usize_or(&format!("{section}.queue_depth"), defaults.queue_depth)?,
@@ -268,6 +275,13 @@ fn server_config(
             &format!("{section}.max_profiles_per_tenant"),
             defaults.max_profiles_per_tenant,
         )?,
+        shed_fraction,
+        read_timeout_ms: cfg
+            .usize_or(&format!("{section}.read_timeout_ms"), defaults.read_timeout_ms as usize)?
+            as u64,
+        idle_timeout_ms: cfg
+            .usize_or(&format!("{section}.idle_timeout_ms"), defaults.idle_timeout_ms as usize)?
+            as u64,
         engine,
         train,
         alphabet,

@@ -39,6 +39,21 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+/// Best-effort human-readable message from a caught panic payload
+/// (`panic!` with a literal yields `&str`, with a format string
+/// `String`; anything else is opaque).  Used by the per-job panic
+/// containment in the server and coordinator to build typed `Failed`
+/// responses that preserve the original failure message.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// One fan-out region: the closure plus slot/lifecycle accounting.
 ///
 /// `task` is a reference whose lifetime has been transmuted to
@@ -62,8 +77,10 @@ struct ScopeState {
     running: usize,
     /// Set by the scope owner during teardown; no new claims after.
     closed: bool,
-    /// A helper panicked inside the closure.
-    panicked: bool,
+    /// The first helper panic's payload, resumed on the caller after
+    /// teardown so the original failure message survives the pool
+    /// boundary (later helper panics in the same scope are dropped).
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
 }
 
 struct PoolShared {
@@ -160,7 +177,7 @@ impl WorkerPool {
                 max_helpers,
                 running: 0,
                 closed: false,
-                panicked: false,
+                panic_payload: None,
             }),
             done: Condvar::new(),
         });
@@ -181,19 +198,22 @@ impl WorkerPool {
                 q.jobs.remove(pos);
             }
         }
-        let helper_panicked = {
+        let helper_payload = {
             let mut st = job.state.lock().unwrap();
             st.closed = true;
             while st.running > 0 {
                 st = job.done.wait(st).unwrap();
             }
-            st.panicked
+            st.panic_payload.take()
         };
+        // Caller's own panic wins (it is the closure the user wrote);
+        // otherwise re-raise the helper's original payload so the real
+        // failure message reaches the caller's `catch_unwind`.
         if let Err(payload) = caller {
             resume_unwind(payload);
         }
-        if helper_panicked {
-            panic!("WorkerPool helper panicked inside a scope closure");
+        if let Some(payload) = helper_payload {
+            resume_unwind(payload);
         }
     }
 }
@@ -263,8 +283,10 @@ fn helper_loop(shared: &PoolShared) {
         let outcome = catch_unwind(AssertUnwindSafe(|| task(slot)));
         let mut st = job.state.lock().unwrap();
         st.running -= 1;
-        if outcome.is_err() {
-            st.panicked = true;
+        if let Err(payload) = outcome {
+            if st.panic_payload.is_none() {
+                st.panic_payload = Some(payload);
+            }
         }
         drop(st);
         job.done.notify_all();
@@ -341,6 +363,36 @@ mod tests {
     fn global_pool_exists() {
         let done = drain_counter(WorkerPool::global(), 2, 10);
         assert_eq!(done, 10);
+    }
+
+    #[test]
+    fn helper_panic_payload_reaches_the_caller() {
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(1);
+        let helper_entered = AtomicBool::new(false);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(2, |slot| {
+                if slot == 0 {
+                    // Keep the scope open until the helper has joined,
+                    // so the panic deterministically comes from a
+                    // helper thread, not the caller.
+                    while !helper_entered.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                } else {
+                    helper_entered.store(true, Ordering::Release);
+                    panic!("boom-123");
+                }
+            });
+        }));
+        let payload = outcome.expect_err("helper panic must propagate out of scope()");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"boom-123"),
+            "the helper's original payload must survive, not a generic message"
+        );
+        // The pool must remain usable after a contained panic.
+        assert_eq!(drain_counter(&pool, 2, 25), 25);
     }
 
     #[test]

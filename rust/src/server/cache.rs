@@ -213,6 +213,12 @@ impl PreparedCache {
         // Freeze outside the lock: a slow freeze must not block hits on
         // other profiles.
         self.misses.fetch_add(1, Ordering::Relaxed);
+        // Fault-injection site on the miss path: an `Error` action maps
+        // to a freeze failure, a `Panic` action exercises the serving
+        // layer's per-job panic containment.
+        crate::failpoint!("cache::insert", |msg: String| {
+            crate::error::ApHmmError::Runtime(format!("failpoint cache::insert: {msg}"))
+        });
         let fresh = Arc::new(PreparedAny::freeze(kind, phmm)?);
         let mut inner = self.inner.lock().unwrap();
         let entry = match inner.map.get(&key) {

@@ -51,6 +51,9 @@ pub use session::{
     Response, ResponseBody, SessionEnd,
 };
 
+pub use crate::cancel::CancelToken;
+pub use crate::coordinator::FailureCause;
+
 /// Tenant id used by submissions that don't name one (the single-tenant
 /// Rust API paths and wire sessions before a `tenant` command).
 pub const DEFAULT_TENANT: &str = "default";
@@ -63,16 +66,17 @@ pub const DEFAULT_TENANT: &str = "default";
 /// the owner id).
 pub const OPERATOR_TENANT: &str = "__operator__";
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::baumwelch::{EngineKind, ReadStats, ScratchAny, TrainConfig};
 use crate::coordinator::{Metrics, MetricsSummary};
-use crate::error::{ApHmmError, Result};
+use crate::error::{ApHmmError, CancelCause, Result};
 use crate::phmm::{EcDesignParams, Phmm};
-use crate::pool::WorkerPool;
+use crate::pool::{panic_message, WorkerPool};
 use crate::seq::Alphabet;
 
 use session::ExecCtx;
@@ -131,6 +135,22 @@ pub struct ServerConfig {
     /// by one tenant (so one tenant can't consume the whole
     /// `max_profiles` budget).
     pub max_profiles_per_tenant: usize,
+    /// Load-shedding high-water fraction of `queue_depth`: once the
+    /// backlog reaches `ceil(shed_fraction * queue_depth)` items,
+    /// non-blocking low-priority submissions are refused early with
+    /// [`AdmitError::Shed`] instead of crowding the queue.  `0.0`
+    /// (default) disables shedding; blocking submissions are never
+    /// shed.
+    pub shed_fraction: f64,
+    /// Per-session socket read/write timeout (ms) for TCP sessions, so
+    /// an abandoned connection cannot pin its session thread forever.
+    /// `0` (default) keeps blocking sockets.
+    pub read_timeout_ms: u64,
+    /// Idle-session reaping for TCP sessions: a session that has not
+    /// completed a command for this long is closed.  Requires
+    /// `read_timeout_ms > 0` to take effect (the reaping check runs on
+    /// read-timeout wakeups).  `0` (default) never reaps.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -152,18 +172,23 @@ impl Default for ServerConfig {
             max_profile_bytes: 8 << 20,
             max_profiles: 4096,
             max_profiles_per_tenant: 256,
+            shed_fraction: 0.0,
+            read_timeout_ms: 0,
+            idle_timeout_ms: 0,
         }
     }
 }
 
-/// One admitted request: the typed body plus its reply channel and
-/// admission timestamp (per-request latency is measured from here).
+/// One admitted request: the typed body plus its reply channel,
+/// admission timestamp (per-request latency is measured from here),
+/// and the cancellation token shared with the submitter's [`Ticket`].
 struct Job {
     id: u64,
     engine: EngineKind,
     body: Request,
     reply: mpsc::Sender<Response>,
     enqueued: Instant,
+    cancel: CancelToken,
 }
 
 /// Handle to one submitted request.
@@ -172,9 +197,20 @@ pub struct Ticket {
     pub id: u64,
     engine: EngineKind,
     rx: mpsc::Receiver<Response>,
+    cancel: CancelToken,
 }
 
 impl Ticket {
+    /// Cooperatively cancel the request.  The server observes the flag
+    /// at its next cancellation point (queue pop, or a chunk boundary
+    /// inside the engine) and answers a typed
+    /// [`ResponseBody::Failure`] with [`FailureCause::Cancelled`]
+    /// instead of a result.  Requests that already completed are
+    /// unaffected — cancellation aborts whole requests, never partial
+    /// sums, so completed responses stay bit-identical.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
     /// Block until the response arrives.  If the server aborted before
     /// the request ran, a synthesized `Error` response is returned —
     /// waiting never hangs.
@@ -228,8 +264,17 @@ impl Server {
         // The dispatcher occupies participant slot 0; helpers cover the
         // other worker slots plus each worker's E-step fan-out.
         let helpers = (workers - 1) + workers * (estep - 1);
+        // High-water mark for load shedding: a fraction of the queue
+        // depth, at least 1 slot when enabled, never above the depth
+        // itself (beyond which the plain Busy refusal already fires).
+        let shed_limit = if cfg.shed_fraction > 0.0 {
+            ((cfg.queue_depth as f64 * cfg.shed_fraction).ceil() as usize)
+                .clamp(1, cfg.queue_depth.max(1))
+        } else {
+            0
+        };
         let shared = Arc::new(Shared {
-            queue: TenantQueue::new(cfg.queue_depth, cfg.tenant_quota),
+            queue: TenantQueue::new_with_shed(cfg.queue_depth, cfg.tenant_quota, shed_limit),
             registry: ProfileRegistry::default(),
             cache: PreparedCache::new(cfg.cache_capacity),
             pool: WorkerPool::new(helpers),
@@ -292,13 +337,19 @@ impl Server {
         &self.shared.registry
     }
 
-    fn make_job(&self, engine: Option<EngineKind>, body: Request) -> (Job, Ticket) {
+    fn make_job(
+        &self,
+        engine: Option<EngineKind>,
+        body: Request,
+        deadline: Option<Duration>,
+    ) -> (Job, Ticket) {
         let engine = engine.unwrap_or(self.shared.cfg.engine);
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        let cancel = CancelToken::with_deadline(deadline.map(|d| Instant::now() + d));
         (
-            Job { id, engine, body, reply: tx, enqueued: Instant::now() },
-            Ticket { id, engine, rx },
+            Job { id, engine, body, reply: tx, enqueued: Instant::now(), cancel: cancel.clone() },
+            Ticket { id, engine, rx, cancel },
         )
     }
 
@@ -321,7 +372,24 @@ impl Server {
         engine: Option<EngineKind>,
         body: Request,
     ) -> Result<Ticket> {
-        let (job, ticket) = self.make_job(engine, body);
+        self.submit_with_deadline(tenant, priority, engine, body, None)
+    }
+
+    /// [`Server::submit_for`] with an optional per-request deadline
+    /// (measured from submission).  A request that exceeds its budget
+    /// — whether still queued or mid-compute — answers a typed
+    /// [`ResponseBody::Failure`] with
+    /// [`FailureCause::DeadlineExceeded`]; requests that finish in
+    /// time are byte-for-byte identical to undeadlined runs.
+    pub fn submit_with_deadline(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        engine: Option<EngineKind>,
+        body: Request,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket> {
+        let (job, ticket) = self.make_job(engine, body, deadline);
         self.shared.queue.push(tenant, priority, job).map_err(|job| {
             ApHmmError::Coordinator(format!(
                 "server is shut down: {} request refused",
@@ -346,9 +414,9 @@ impl Server {
     ) -> std::result::Result<Ticket, PushError<Request>> {
         match self.try_submit_for(DEFAULT_TENANT, Priority::Normal, engine, body) {
             Ok(ticket) => Ok(ticket),
-            Err(AdmitError::Busy(body)) | Err(AdmitError::AtQuota(body)) => {
-                Err(PushError::Busy(body))
-            }
+            Err(AdmitError::Busy(body))
+            | Err(AdmitError::AtQuota(body))
+            | Err(AdmitError::Shed(body)) => Err(PushError::Busy(body)),
             Err(AdmitError::Closed(body)) => Err(PushError::Closed(body)),
         }
     }
@@ -356,8 +424,10 @@ impl Server {
     /// Submit on behalf of `tenant` without blocking.  The typed
     /// refusal distinguishes a globally full queue
     /// ([`AdmitError::Busy`]) from this tenant being at its quota
-    /// ([`AdmitError::AtQuota`]) — at-quota tenants are refused while
-    /// other tenants still admit.
+    /// ([`AdmitError::AtQuota`]) and from load shedding
+    /// ([`AdmitError::Shed`]: the backlog crossed the configured
+    /// high-water fraction and `priority` is [`Priority::Low`]) —
+    /// at-quota/shed tenants are refused while other work still admits.
     pub fn try_submit_for(
         &self,
         tenant: &str,
@@ -365,11 +435,15 @@ impl Server {
         engine: Option<EngineKind>,
         body: Request,
     ) -> std::result::Result<Ticket, AdmitError<Request>> {
-        let (job, ticket) = self.make_job(engine, body);
+        let (job, ticket) = self.make_job(engine, body, None);
         match self.shared.queue.try_push(tenant, priority, job) {
             Ok(()) => Ok(ticket),
             Err(AdmitError::Busy(job)) => Err(AdmitError::Busy(job.body)),
             Err(AdmitError::AtQuota(job)) => Err(AdmitError::AtQuota(job.body)),
+            Err(AdmitError::Shed(job)) => {
+                self.shared.metrics.record_shed();
+                Err(AdmitError::Shed(job.body))
+            }
             Err(AdmitError::Closed(job)) => Err(AdmitError::Closed(job.body)),
         }
     }
@@ -403,6 +477,7 @@ impl Server {
                 ts.quota_refusals,
                 ts.queued,
                 ts.in_flight,
+                ts.shed,
             );
         }
         // Bound the metrics-side tenant map with the queue's current
@@ -420,7 +495,8 @@ impl Server {
         format!(
             "stats jobs_done={} jobs_failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
              queue_high_water={} producer_blocks={} cache_hits={} cache_misses={} \
-             cache_evictions={} profiles={} tenants={}",
+             cache_evictions={} profiles={} tenants={} deadline_exceeded={} cancelled={} \
+             pool_panics={} shed={}",
             m.jobs_done,
             m.jobs_failed,
             m.latency_p50_ms,
@@ -433,6 +509,10 @@ impl Server {
             c.evictions,
             self.shared.registry.len(),
             m.tenants.len(),
+            m.deadline_exceeded,
+            m.cancelled,
+            m.pool_panics,
+            m.shed,
         )
     }
 
@@ -448,14 +528,19 @@ impl Server {
             .iter()
             .map(|t| {
                 format!(
-                    "{}:admitted={},completed={},failed={},refused={},queued={},in_flight={}",
+                    "{}:admitted={},completed={},failed={},refused={},queued={},in_flight={},\
+                     deadline_exceeded={},cancelled={},panicked={},shed={}",
                     t.tenant,
                     t.admitted,
                     t.completed,
                     t.failed,
                     t.quota_refusals,
                     t.queued,
-                    t.in_flight
+                    t.in_flight,
+                    t.deadline_exceeded,
+                    t.cancelled,
+                    t.panicked,
+                    t.shed
                 )
             })
             .collect();
@@ -542,26 +627,82 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
+fn failure_cause_of(cause: CancelCause) -> FailureCause {
+    match cause {
+        CancelCause::Cancelled => FailureCause::Cancelled,
+        CancelCause::DeadlineExceeded => FailureCause::DeadlineExceeded,
+    }
+}
+
 fn process_one(shared: &Shared, tenant: &str, job: Job, scratch: &mut ScratchAny) {
-    let ctx = ExecCtx {
-        registry: &shared.registry,
-        cache: &shared.cache,
-        pool: &shared.pool,
-        cfg: &shared.cfg,
-    };
-    let (body, stats) = match session::execute(&ctx, job.engine, &job.body, scratch) {
-        Ok(done) => done,
-        Err(e) => {
-            shared.metrics.record_failure();
-            (ResponseBody::Error { message: e.to_string() }, ReadStats::default())
+    // Queue-side cancellation point: a request whose deadline expired
+    // (or that was cancelled) while waiting is answered without
+    // executing at all.
+    let (body, stats) = if let Some(cause) = job.cancel.check() {
+        (
+            ResponseBody::Failure {
+                cause: failure_cause_of(cause),
+                message: format!("{cause} before execution started"),
+            },
+            ReadStats::default(),
+        )
+    } else {
+        let ctx = ExecCtx {
+            registry: &shared.registry,
+            cache: &shared.cache,
+            pool: &shared.pool,
+            cfg: &shared.cfg,
+        };
+        // Per-job fault isolation: a panicking request must not take
+        // down its worker (and with it the queue, the cache, and every
+        // other tenant).  `AssertUnwindSafe` is sound here because the
+        // shared structures are lock-protected (poisoning surfaces as
+        // an error, not corruption) and the per-worker scratch is reset
+        // below before reuse.
+        match catch_unwind(AssertUnwindSafe(|| {
+            session::execute(&ctx, job.engine, &job.body, &job.cancel, scratch)
+        })) {
+            Ok(Ok(done)) => done,
+            Ok(Err(ApHmmError::Cancelled(cause))) => (
+                ResponseBody::Failure {
+                    cause: failure_cause_of(cause),
+                    message: cause.to_string(),
+                },
+                ReadStats::default(),
+            ),
+            Ok(Err(e)) => {
+                (ResponseBody::Error { message: e.to_string() }, ReadStats::default())
+            }
+            Err(payload) => {
+                // The unwound job may have left the warm scratch
+                // half-updated; drop it so the next request on this
+                // worker re-derives a clean one.
+                *scratch = ScratchAny::None;
+                (
+                    ResponseBody::Failure {
+                        cause: FailureCause::Panicked,
+                        message: panic_message(payload.as_ref()),
+                    },
+                    ReadStats::default(),
+                )
+            }
         }
     };
     let latency_ns = job.enqueued.elapsed().as_nanos() as u64;
-    let ok = !matches!(body, ResponseBody::Error { .. });
-    if ok {
-        shared.metrics.record(latency_ns, stats.timesteps, stats.states_processed);
+    match &body {
+        ResponseBody::Error { .. } => {
+            shared.metrics.record_failed_request(latency_ns, None);
+            shared.metrics.record_tenant_failure(tenant, None);
+        }
+        ResponseBody::Failure { cause, .. } => {
+            shared.metrics.record_failed_request(latency_ns, Some(*cause));
+            shared.metrics.record_tenant_failure(tenant, Some(*cause));
+        }
+        _ => {
+            shared.metrics.record(latency_ns, stats.timesteps, stats.states_processed);
+            shared.metrics.record_tenant_done(tenant, true);
+        }
     }
-    shared.metrics.record_tenant_done(tenant, ok);
     // A dropped ticket just means the client stopped waiting.
     let _ = job.reply.send(Response {
         id: job.id,

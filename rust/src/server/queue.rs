@@ -346,6 +346,11 @@ pub enum AdmitError<T> {
     Busy(T),
     /// *This tenant* is at its queued cap; other tenants still admit.
     AtQuota(T),
+    /// Load shedding: the queue is past its high-water shed limit and
+    /// the item is low-priority — refused early instead of letting it
+    /// crowd out latency-sensitive work (see
+    /// [`TenantQueue::new_with_shed`]).
+    Shed(T),
     /// The queue was closed or aborted.
     Closed(T),
 }
@@ -364,6 +369,10 @@ pub struct TenantStats {
     pub quota_refusals: u64,
     /// Requests finished ([`TenantQueue::finish`]) over the lifetime.
     pub finished: u64,
+    /// Low-priority admissions refused by load shedding.  Only counted
+    /// for tenants the queue already tracks (a shed refusal must never
+    /// create a gauge entry — tenant ids are client-controlled).
+    pub shed: u64,
 }
 
 #[derive(Default)]
@@ -373,6 +382,7 @@ struct TenantCount {
     admitted: u64,
     quota_refusals: u64,
     finished: u64,
+    shed: u64,
 }
 
 /// Bound on distinct tenants tracked in the gauge maps — this one and
@@ -411,6 +421,10 @@ pub struct TenantQueue<T> {
     not_empty: Condvar,
     depth: usize,
     quota: TenantQuota,
+    /// Load-shedding high-water mark in items: once the total backlog
+    /// reaches this, non-blocking low-priority admission is refused
+    /// with [`AdmitError::Shed`].  `0` disables shedding.
+    shed_limit: usize,
     counters: QueueCounters,
 }
 
@@ -418,8 +432,20 @@ impl<T> TenantQueue<T> {
     /// A queue admitting at most `depth` items in total (clamped ≥ 1),
     /// with `quota` applied to every tenant (caps clamped ≥ 1 — a
     /// zero cap would deadlock consumers on permanently unpoppable
-    /// items).
+    /// items).  Load shedding is off; see
+    /// [`TenantQueue::new_with_shed`].
     pub fn new(depth: usize, quota: TenantQuota) -> TenantQueue<T> {
+        TenantQueue::new_with_shed(depth, quota, 0)
+    }
+
+    /// [`TenantQueue::new`] plus a load-shedding high-water mark:
+    /// while `total_len() >= shed_limit`, [`TenantQueue::try_push`]
+    /// refuses [`Priority::Low`] items with [`AdmitError::Shed`]
+    /// instead of queueing them behind everyone else (normal/high
+    /// items still admit up to `depth`).  `shed_limit = 0` disables
+    /// shedding; the blocking [`TenantQueue::push`] path is never
+    /// shed — streaming producers feel backpressure instead.
+    pub fn new_with_shed(depth: usize, quota: TenantQuota, shed_limit: usize) -> TenantQueue<T> {
         TenantQueue {
             inner: Mutex::new(TenantInner {
                 classes: std::array::from_fn(|_| VecDeque::new()),
@@ -433,8 +459,14 @@ impl<T> TenantQueue<T> {
                 max_queued: quota.max_queued.max(1),
                 max_in_flight: quota.max_in_flight.max(1),
             },
+            shed_limit,
             counters: QueueCounters::default(),
         }
+    }
+
+    /// Load-shedding high-water mark in items (0 = shedding off).
+    pub fn shed_limit(&self) -> usize {
+        self.shed_limit
     }
 
     /// Configured global capacity bound.
@@ -498,6 +530,19 @@ impl<T> TenantQueue<T> {
             inner.tenants.entry(tenant.to_string()).or_default().quota_refusals += 1;
             return Err(AdmitError::AtQuota(item));
         }
+        if self.shed_limit > 0
+            && priority == Priority::Low
+            && inner.total_len() >= self.shed_limit
+        {
+            // Attribute the shed only to already-tracked tenants:
+            // unlike AtQuota (which requires an existing queued count),
+            // shedding can hit a brand-new tenant, and a refusal must
+            // never create a gauge entry for a client-controlled id.
+            if let Some(t) = inner.tenants.get_mut(tenant) {
+                t.shed += 1;
+            }
+            return Err(AdmitError::Shed(item));
+        }
         if inner.total_len() >= self.depth {
             self.counters.producer_blocks.fetch_add(1, Ordering::Relaxed);
             return Err(AdmitError::Busy(item));
@@ -554,6 +599,10 @@ impl<T> TenantQueue<T> {
             if let Some(pair) = self.take_eligible(&mut inner, |_| true) {
                 drop(inner);
                 self.not_full.notify_all();
+                // Fault-injection site: fires with the lock released,
+                // after the item is charged in flight — exactly where a
+                // worker would start executing it.
+                crate::failpoint!("queue::pop");
                 return Some(pair);
             }
             if inner.closed && inner.total_len() == 0 {
@@ -692,6 +741,7 @@ impl<T> TenantQueue<T> {
                         admitted: t.admitted,
                         quota_refusals: t.quota_refusals,
                         finished: t.finished,
+                        shed: t.shed,
                     },
                 )
             })
@@ -1030,6 +1080,53 @@ mod tests {
         for (_, t) in q.tenant_stats() {
             assert_eq!(t.queued, 0, "abort must zero the queued gauges");
         }
+    }
+
+    #[test]
+    fn shed_limit_refuses_low_priority_but_admits_high() {
+        // Deterministic: no consumer, so the backlog is exactly what
+        // was pushed.  Depth 4, shed at 2 queued items.
+        let q = TenantQueue::new_with_shed(4, TenantQuota::default(), 2);
+        assert_eq!(q.shed_limit(), 2);
+        q.try_push("a", Priority::Low, 1).unwrap();
+        q.try_push("a", Priority::Normal, 2).unwrap();
+        // At the shed limit: low-priority work is refused early...
+        match q.try_push("a", Priority::Low, 3) {
+            Err(AdmitError::Shed(3)) => {}
+            other => panic!("expected Shed(3), got {other:?}"),
+        }
+        match q.try_push("b", Priority::Low, 4) {
+            Err(AdmitError::Shed(4)) => {}
+            other => panic!("expected Shed(4), got {other:?}"),
+        }
+        // ...while normal and high priority still admit up to depth.
+        q.try_push("a", Priority::Normal, 5).unwrap();
+        q.try_push("a", Priority::High, 6).unwrap();
+        match q.try_push("a", Priority::High, 7) {
+            Err(AdmitError::Busy(7)) => {}
+            other => panic!("expected Busy(7) at full depth, got {other:?}"),
+        }
+        // Shed attribution: tenant "a" was tracked (it had queued
+        // items) so its shed counts; "b" was brand new — no gauge
+        // entry may be created for it.
+        let ts = q.tenant_stats();
+        assert_eq!(ts.len(), 1, "a shed refusal must not create tenant entries");
+        assert_eq!(ts[0].0, "a");
+        assert_eq!(ts[0].1.shed, 1);
+        // Draining below the limit re-admits low-priority work.
+        while q.try_pop().is_some() {
+            q.finish("a");
+        }
+        q.try_push("a", Priority::Low, 8).unwrap();
+    }
+
+    #[test]
+    fn zero_shed_limit_never_sheds() {
+        let q = TenantQueue::new(2, TenantQuota::default());
+        q.try_push("a", Priority::Low, 1).unwrap();
+        q.try_push("a", Priority::Low, 2).unwrap();
+        // Full queue is Busy, not Shed, when shedding is off.
+        assert!(matches!(q.try_push("a", Priority::Low, 3), Err(AdmitError::Busy(3))));
     }
 
     #[test]

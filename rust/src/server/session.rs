@@ -23,6 +23,7 @@
 //!
 //! ```text
 //! tenant <id> [low|normal|high]
+//! deadline <ms|off>
 //! register <name> <sequence>
 //! register-profile <name> <nbytes>
 //! <nbytes bytes of io::profile_fmt (.aphmm) text>
@@ -53,10 +54,12 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::apps::{self, AlignedRow};
 use crate::baumwelch::{EngineKind, ForwardOptions, ReadStats, ScratchAny};
+use crate::cancel::CancelToken;
+use crate::coordinator::FailureCause;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
 use crate::seq::Sequence;
@@ -162,6 +165,17 @@ pub enum ResponseBody {
     /// unaffected.
     Error {
         /// Human-readable failure description.
+        message: String,
+    },
+    /// The request was terminated by the serving layer itself — its
+    /// deadline expired, it was cancelled, or it panicked — rather
+    /// than by an input error.  The cause is typed so clients and
+    /// metrics can distinguish the failure modes; the worker, queue,
+    /// cache, and other tenants are unaffected.
+    Failure {
+        /// Why the serving layer terminated the request.
+        cause: FailureCause,
+        /// Human-readable detail.
         message: String,
     },
 }
@@ -386,10 +400,17 @@ impl ExecCtx<'_> {
 /// Execute one request on the calling worker.  Read-only requests pull
 /// their frozen coefficient tables from the cross-request cache;
 /// `Correct` trains through the shared worker pool.
+///
+/// `cancel` is observed at coarse boundaries — between profiles in
+/// `Search`, between reads inside `Correct`'s E-step — and always
+/// aborts the **whole** request with [`ApHmmError::Cancelled`]; a
+/// request that runs to completion is bit-identical whether or not a
+/// token was attached.
 pub(crate) fn execute(
     ctx: &ExecCtx<'_>,
     engine: EngineKind,
     req: &Request,
+    cancel: &CancelToken,
     scratch: &mut ScratchAny,
 ) -> Result<(ResponseBody, ReadStats)> {
     match req {
@@ -450,6 +471,12 @@ pub(crate) fn execute(
             let qk = apps::kmer_set(&read.data, ctx.cfg.prefilter_k, ctx.cfg.alphabet.size());
             let entries = ctx.registry.all();
             for entry in &entries {
+                // Per-profile cancellation point: a deadline that
+                // expires mid-scan aborts the whole request (partial
+                // rankings are never returned).
+                if let Some(cause) = cancel.check() {
+                    return Err(ApHmmError::Cancelled(cause));
+                }
                 if min_frac > 0.0 && !entry.kmers.is_empty() {
                     let shared = qk.intersection(&entry.kmers).count();
                     if (shared as f64 / qk.len().max(1) as f64) < min_frac {
@@ -499,13 +526,14 @@ pub(crate) fn execute(
         Request::Correct { reference, reads } => {
             let train_cfg =
                 crate::baumwelch::TrainConfig { engine, ..ctx.cfg.train };
-            let out = apps::train_chunk(
+            let out = apps::train_chunk_with(
                 reference,
                 reads,
                 &ctx.cfg.design,
                 ctx.cfg.alphabet,
                 &train_cfg,
                 ctx.pool,
+                cancel,
             )?;
             let stats = ReadStats {
                 forward_ns: out.train.forward_ns,
@@ -586,6 +614,22 @@ fn parse_line(
             };
             Command::Tenant { name, priority }
         }
+        "deadline" => {
+            let tok = toks.next().ok_or("deadline: missing budget (ms or `off`)")?;
+            let ms = if tok == "off" {
+                None
+            } else {
+                let ms: u64 = tok
+                    .parse()
+                    .map_err(|_| "deadline: budget must be milliseconds or `off`")?;
+                if ms == 0 {
+                    None
+                } else {
+                    Some(ms)
+                }
+            };
+            Command::Deadline { ms }
+        }
         "register" => {
             let name = toks.next().ok_or("register: missing profile name")?.to_string();
             let reference = seq(toks.next(), "reference")?;
@@ -636,8 +680,9 @@ fn parse_line(
         "shutdown" => Command::Shutdown,
         other => {
             return Err(format!(
-                "unknown command {other:?} (expected tenant | register | register-profile | \
-                 score | align | search | correct | stats | tenants | quit | shutdown)"
+                "unknown command {other:?} (expected tenant | deadline | register | \
+                 register-profile | score | align | search | correct | stats | tenants | \
+                 quit | shutdown)"
             ))
         }
     };
@@ -649,6 +694,7 @@ fn parse_line(
 
 enum Command {
     Tenant { name: String, priority: Priority },
+    Deadline { ms: Option<u64> },
     Register { name: String, reference: Sequence },
     RegisterProfile { name: String, nbytes: usize },
     Submit { engine: EngineKind, body: Request },
@@ -697,6 +743,9 @@ fn format_response(cfg: &ServerConfig, resp: &Response) -> String {
             consensus.to_ascii(cfg.alphabet),
         ),
         ResponseBody::Error { message } => format!("err {message}"),
+        ResponseBody::Failure { cause, message } => {
+            format!("err {}: {message} latency_us={latency_us}", cause.name())
+        }
     }
 }
 
@@ -767,14 +816,42 @@ pub fn serve_connection<R: BufRead, W: Write>(
 ) -> Result<SessionEnd> {
     let mut tenant = DEFAULT_TENANT.to_string();
     let mut priority = Priority::Normal;
+    let mut deadline: Option<Duration> = None;
     let mut line = String::new();
+    // Idle reaping: a session that completes no command for
+    // `serve.idle_timeout_ms` is closed.  The check only fires on
+    // read-timeout wakeups, so it requires `serve.read_timeout_ms > 0`
+    // on the underlying socket (serve_tcp sets this); with blocking
+    // reads (stdio, in-memory tests) the behavior is unchanged.
+    let idle_timeout = Duration::from_millis(server.config().idle_timeout_ms);
+    let mut idle_since = Instant::now();
     loop {
+        crate::failpoint!("wire::io", |msg: String| {
+            ApHmmError::Coordinator(format!("failpoint wire::io: {msg}"))
+        });
         line.clear();
-        match input.read_line(&mut line) {
-            Ok(0) => return Ok(SessionEnd::Eof),
-            Ok(_) => {}
-            Err(_) => return Ok(SessionEnd::Eof), // client went away mid-line
+        // Retry loop for socket read timeouts.  `read_line` may have
+        // appended a partial line to `line` before timing out, so the
+        // buffer must persist across retries — clearing it would
+        // corrupt a slow writer's command.
+        loop {
+            match input.read_line(&mut line) {
+                Ok(0) => return Ok(SessionEnd::Eof),
+                Ok(_) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if !idle_timeout.is_zero() && idle_since.elapsed() >= idle_timeout {
+                        return Ok(SessionEnd::Eof); // reap idle session
+                    }
+                }
+                Err(_) => return Ok(SessionEnd::Eof), // client went away mid-line
+            }
         }
+        idle_since = Instant::now();
         let reply = match parse_line(server.config(), &line) {
             Ok(None) => continue,
             Err(msg) => {
@@ -793,6 +870,13 @@ pub fn serve_connection<R: BufRead, W: Write>(
                 tenant = name;
                 priority = p;
                 format!("ok tenant {tenant} priority={}", priority.name())
+            }
+            Ok(Some(Command::Deadline { ms })) => {
+                deadline = ms.map(Duration::from_millis);
+                match ms {
+                    Some(ms) => format!("ok deadline {ms}ms"),
+                    None => "ok deadline off".to_string(),
+                }
             }
             Ok(Some(Command::Register { name, reference })) => {
                 let cfg = server.config();
@@ -824,7 +908,8 @@ pub fn serve_connection<R: BufRead, W: Write>(
                 }
             }
             Ok(Some(Command::Submit { engine, body })) => {
-                match server.submit_for(&tenant, priority, Some(engine), body) {
+                match server.submit_with_deadline(&tenant, priority, Some(engine), body, deadline)
+                {
                     Ok(ticket) => format_response(server.config(), &ticket.wait()),
                     Err(e) => format!("err {e}"),
                 }
@@ -882,6 +967,16 @@ pub fn serve_tcp(server: &Server, port: u16) -> Result<()> {
                     // non-blocking mode on some platforms; sessions
                     // want blocking reads.
                     let _ = stream.set_nonblocking(false);
+                    // Per-session socket timeouts: an abandoned or
+                    // wedged client cannot pin its session thread on a
+                    // blocking read/write forever.  Zero keeps fully
+                    // blocking sockets (today's behavior).
+                    let timeout_ms = server.config().read_timeout_ms;
+                    if timeout_ms > 0 {
+                        let t = Some(Duration::from_millis(timeout_ms));
+                        let _ = stream.set_read_timeout(t);
+                        let _ = stream.set_write_timeout(t);
+                    }
                     if let Ok(track) = stream.try_clone() {
                         sessions.lock().unwrap().push(track);
                     }

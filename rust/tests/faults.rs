@@ -1,0 +1,363 @@
+//! Deterministic fault injection (requires `--features failpoints`):
+//! every serving-layer failure path — deadline mid-compute, explicit
+//! cancellation, contained panics, failed cache inserts, wire faults,
+//! load shedding under a pinned backlog — is driven by an armed
+//! failpoint, not by timing luck.  Each scenario holds the global
+//! [`aphmm::failpoint::scenario`] guard so concurrently-running tests
+//! never observe each other's armed sites.
+
+#![cfg(feature = "failpoints")]
+
+use std::time::Duration;
+
+use aphmm::failpoint::{self, Action};
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::seq::Sequence;
+use aphmm::server::{
+    AdmitError, FailureCause, Priority, Request, ResponseBody, Server, ServerConfig, TenantQuota,
+};
+use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
+use aphmm::testutil;
+
+fn dna(rng: &mut XorShift, id: &str, len: usize) -> Sequence {
+    Sequence::from_symbols(id, testutil::random_seq(rng, len, 4))
+}
+
+fn reads_of(rng: &mut XorShift, reference: &Sequence, n: usize) -> Vec<Sequence> {
+    (0..n)
+        .map(|i| {
+            simulate_read(rng, reference, 0, reference.len(), &ErrorProfile::pacbio(), i).seq
+        })
+        .collect()
+}
+
+/// Tentpole (deadline mid-compute): a Sleep failpoint at the E-step's
+/// per-read boundary holds the job long enough for its budget to
+/// expire **while computing**; the next boundary check aborts the
+/// whole request with a typed `DeadlineExceeded` failure — it never
+/// runs to completion.
+#[test]
+fn deadline_fires_mid_compute_at_a_read_boundary() {
+    let _s = failpoint::scenario();
+    failpoint::configure("engine::accumulate", Action::Sleep(20));
+
+    let mut rng = XorShift::new(301);
+    let reference = dna(&mut rng, "chr1", 60);
+    let reads = reads_of(&mut rng, &reference, 4);
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    let resp = server
+        .submit_with_deadline(
+            "slow",
+            Priority::Normal,
+            None,
+            Request::Correct { reference, reads },
+            Some(Duration::from_millis(5)),
+        )
+        .unwrap()
+        .wait();
+    match &resp.body {
+        ResponseBody::Failure { cause, .. } => {
+            assert_eq!(*cause, FailureCause::DeadlineExceeded);
+        }
+        other => panic!("expected DeadlineExceeded mid-compute, got {other:?}"),
+    }
+    let m = server.metrics_summary();
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.jobs_failed, 1);
+    let t = m.tenants.iter().find(|t| t.tenant == "slow").unwrap();
+    assert_eq!(t.deadline_exceeded, 1);
+    server.shutdown(true);
+}
+
+/// Tentpole (explicit cancel mid-compute): with every read boundary
+/// slowed by a Sleep failpoint, a cancel issued after submission is
+/// observed at the next boundary and aborts the request with a typed
+/// `Cancelled` failure.
+#[test]
+fn cancel_fires_mid_compute_at_a_read_boundary() {
+    let _s = failpoint::scenario();
+    failpoint::configure("engine::accumulate", Action::Sleep(10));
+
+    let mut rng = XorShift::new(302);
+    let reference = dna(&mut rng, "chr1", 60);
+    let reads = reads_of(&mut rng, &reference, 4);
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    let ticket = server
+        .submit(None, Request::Correct { reference, reads })
+        .unwrap();
+    ticket.cancel();
+    let resp = ticket.wait();
+    match &resp.body {
+        ResponseBody::Failure { cause, .. } => assert_eq!(*cause, FailureCause::Cancelled),
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    assert_eq!(server.metrics_summary().cancelled, 1);
+    server.shutdown(true);
+}
+
+/// Tentpole (panic containment + bit-identity): a panic injected into
+/// the cache-insert path of one request yields a typed `Panicked`
+/// failure carrying the original payload message; the worker, pool,
+/// cache, and queue survive, and the *next* request on the same server
+/// completes bit-identically to an undisturbed server.
+#[test]
+fn injected_panic_is_contained_and_later_results_are_bit_identical() {
+    let _s = failpoint::scenario();
+
+    let mut rng = XorShift::new(303);
+    let reference = dna(&mut rng, "chr1", 50);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let read = reads_of(&mut rng, &reference, 1).remove(0);
+    let req = Request::Score { profile: "chr1".into(), read };
+
+    // Undisturbed server: the reference answer.
+    let mut clean = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    clean.register_profile("chr1", phmm.clone());
+    let want_bits = match clean.submit(None, req.clone()).unwrap().wait().body {
+        ResponseBody::Score { loglik, .. } => loglik.to_bits(),
+        other => panic!("clean server failed: {other:?}"),
+    };
+    clean.shutdown(true);
+
+    // Disturbed server: the first request panics inside the worker.
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    server.register_profile("chr1", phmm);
+    let probe = server.pool_liveness();
+    failpoint::configure_times("cache::insert", Action::Panic("injected-fault".into()), 1);
+    let resp = server.submit(None, req.clone()).unwrap().wait();
+    match &resp.body {
+        ResponseBody::Failure { cause, message } => {
+            assert_eq!(*cause, FailureCause::Panicked);
+            assert!(message.contains("injected-fault"), "payload lost: {message}");
+        }
+        other => panic!("expected a contained panic, got {other:?}"),
+    }
+
+    // The failpoint disarmed itself after one firing: the same request
+    // now completes, bit-identical to the undisturbed server.
+    let resp = server.submit(None, req).unwrap().wait();
+    match &resp.body {
+        ResponseBody::Score { loglik, .. } => {
+            assert_eq!(
+                loglik.to_bits(),
+                want_bits,
+                "a contained panic must not perturb later results"
+            );
+        }
+        other => panic!("server did not recover after a contained panic: {other:?}"),
+    }
+    let m = server.metrics_summary();
+    assert_eq!(m.pool_panics, 1);
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_done, 1);
+    assert!(
+        server.tenants_line().contains("panicked=1"),
+        "tenants line missing the panic counter: {}",
+        server.tenants_line()
+    );
+    server.shutdown(true);
+    drop(server);
+    assert!(probe.upgrade().is_none(), "pool helpers must survive the panic, then join");
+}
+
+/// A failed (erroring) cache insert is a clean per-request `Error`
+/// response; the next request re-freezes successfully.
+#[test]
+fn cache_insert_error_is_a_clean_error_response() {
+    let _s = failpoint::scenario();
+    failpoint::configure_times("cache::insert", Action::Error("synthetic".into()), 1);
+
+    let mut rng = XorShift::new(304);
+    let reference = dna(&mut rng, "chr1", 40);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let read = reads_of(&mut rng, &reference, 1).remove(0);
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    server.register_profile("chr1", phmm);
+
+    let req = Request::Score { profile: "chr1".into(), read };
+    let resp = server.submit(None, req.clone()).unwrap().wait();
+    match &resp.body {
+        ResponseBody::Error { message } => {
+            assert!(message.contains("failpoint cache::insert"), "{message}");
+        }
+        other => panic!("expected an Error response, got {other:?}"),
+    }
+    let resp = server.submit(None, req).unwrap().wait();
+    assert!(matches!(resp.body, ResponseBody::Score { .. }), "{:?}", resp.body);
+    server.shutdown(true);
+}
+
+/// Tentpole (load shedding, deterministic backlog): with the one
+/// worker pinned inside a Sleep failpoint, the backlog is exactly what
+/// was pushed — at the high-water mark, low-priority non-blocking
+/// submissions are refused with a typed `Shed` while high-priority
+/// ones still admit, and the refusal shows up in the metrics.
+#[test]
+fn shed_at_high_water_refuses_low_priority_while_high_admits() {
+    let _s = failpoint::scenario();
+    failpoint::configure("engine::accumulate", Action::Sleep(30));
+
+    let mut rng = XorShift::new(305);
+    let reference = dna(&mut rng, "chr1", 40);
+    let reads = reads_of(&mut rng, &reference, 2);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    // depth 4, shed_fraction 0.5 -> shed at 2 queued items.
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        queue_depth: 4,
+        shed_fraction: 0.5,
+        tenant_quota: TenantQuota { max_queued: 8, max_in_flight: 8 },
+        ..Default::default()
+    });
+    server.register_profile("chr1", phmm);
+    let read = reads_of(&mut rng, &reference, 1).remove(0);
+
+    // Three slow jobs: at most one is in flight (held by the Sleep),
+    // so at least two are queued — at/over the shed limit.
+    let blockers: Vec<_> = (0..3)
+        .map(|_| {
+            server
+                .submit(
+                    None,
+                    Request::Correct { reference: reference.clone(), reads: reads.clone() },
+                )
+                .unwrap()
+        })
+        .collect();
+
+    match server.try_submit_for(
+        "shedme",
+        Priority::Low,
+        None,
+        Request::Score { profile: "chr1".into(), read: read.clone() },
+    ) {
+        Err(AdmitError::Shed(_)) => {}
+        Ok(_) => panic!("low-priority work must shed at the high-water mark"),
+        Err(other) => panic!("expected a Shed refusal, got {other:?}"),
+    }
+    let vip = server
+        .try_submit_for(
+            "vip",
+            Priority::High,
+            None,
+            Request::Score { profile: "chr1".into(), read },
+        )
+        .expect("high-priority work must still admit at the shed mark");
+
+    // Un-pin the worker and drain.
+    failpoint::clear("engine::accumulate");
+    for b in blockers {
+        assert!(matches!(b.wait().body, ResponseBody::Correct { .. }));
+    }
+    assert!(matches!(vip.wait().body, ResponseBody::Score { .. }));
+    let m = server.metrics_summary();
+    assert!(m.shed >= 1, "aggregate shed counter must record the refusal");
+    assert_eq!(m.jobs_failed, 0, "shed refusals are admission-side, not failed jobs");
+    assert!(
+        server.stats_line().contains("shed="),
+        "stats line must surface the shed counter: {}",
+        server.stats_line()
+    );
+    server.shutdown(true);
+}
+
+/// The `deadline` wire command applies a per-request budget to every
+/// later submission of the session: with the E-step pinned by a Sleep
+/// failpoint, `correct` answers a typed `err deadline_exceeded:` line,
+/// and `deadline off` restores normal completion.
+#[test]
+fn wire_deadline_command_applies_and_clears() {
+    let _s = failpoint::scenario();
+    failpoint::configure_times("engine::accumulate", Action::Sleep(20), 4);
+
+    let mut rng = XorShift::new(306);
+    let reference = dna(&mut rng, "chr1", 40);
+    let ascii_ref = reference.to_ascii(aphmm::seq::DNA);
+    let reads = reads_of(&mut rng, &reference, 2);
+    let ascii_reads: Vec<String> =
+        reads.iter().map(|r| r.to_ascii(aphmm::seq::DNA)).collect();
+    let joined = ascii_reads.join(",");
+
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    let script = format!(
+        "deadline 5\ncorrect {ascii_ref} {joined}\ndeadline off\ncorrect {ascii_ref} {joined}\nquit\n"
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Quit);
+    server.shutdown(true);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "one response per request line:\n{text}");
+    assert_eq!(lines[0], "ok deadline 5ms");
+    assert!(
+        lines[1].starts_with("err deadline_exceeded:"),
+        "budgeted correct must fail typed: {}",
+        lines[1]
+    );
+    assert_eq!(lines[2], "ok deadline off");
+    assert!(
+        lines[3].starts_with("corrected len="),
+        "after `deadline off` the request must complete: {}",
+        lines[3]
+    );
+    assert_eq!(lines[4], "ok bye");
+}
+
+/// A wire-I/O fault surfaces as a session error (the session dies, the
+/// server lives): the `wire::io` failpoint's `Error` action maps to a
+/// typed error return from `serve_connection`.
+#[test]
+fn wire_io_fault_ends_the_session_not_the_server() {
+    let _s = failpoint::scenario();
+
+    let mut rng = XorShift::new(307);
+    let reference = dna(&mut rng, "chr1", 40);
+    let ascii_ref = reference.to_ascii(aphmm::seq::DNA);
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+
+    failpoint::configure_times("wire::io", Action::Error("socket gremlin".into()), 1);
+    let mut out: Vec<u8> = Vec::new();
+    let err = aphmm::server::serve_connection(
+        &server,
+        format!("register chr1 {ascii_ref}\nquit\n").as_bytes(),
+        &mut out,
+    )
+    .expect_err("an armed wire::io failpoint must fail the session");
+    assert!(err.to_string().contains("failpoint wire::io"), "{err}");
+
+    // The server survives: a fresh session completes normally.
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(
+        &server,
+        format!("register chr1 {ascii_ref}\nquit\n").as_bytes(),
+        &mut out,
+    )
+    .unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Quit);
+    assert!(String::from_utf8(out).unwrap().starts_with("ok profile chr1"));
+    server.shutdown(true);
+}
+
+/// The queue::pop failpoint site is reachable: a Sleep armed there
+/// delays (but does not corrupt) dispatch, and the request still
+/// completes correctly.
+#[test]
+fn queue_pop_failpoint_site_is_wired() {
+    let _s = failpoint::scenario();
+    failpoint::configure_times("queue::pop", Action::Sleep(5), 1);
+
+    let mut rng = XorShift::new(308);
+    let reference = dna(&mut rng, "chr1", 40);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let read = reads_of(&mut rng, &reference, 1).remove(0);
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    server.register_profile("chr1", phmm);
+    let resp = server
+        .submit(None, Request::Score { profile: "chr1".into(), read })
+        .unwrap()
+        .wait();
+    assert!(matches!(resp.body, ResponseBody::Score { .. }), "{:?}", resp.body);
+    server.shutdown(true);
+}

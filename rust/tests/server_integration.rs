@@ -2,6 +2,8 @@
 //! workloads vs a serial replay, cross-request Prepared-cache reuse,
 //! and clean teardown (no leaked threads).
 
+use std::time::Duration;
+
 use aphmm::apps;
 use aphmm::baumwelch::{EngineKind, ForwardOptions, PreparedAny, TrainConfig};
 use aphmm::io::write_phmm_string;
@@ -9,8 +11,8 @@ use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::pool::WorkerPool;
 use aphmm::seq::Sequence;
 use aphmm::server::{
-    AdmitError, Priority, PushError, Request, Response, ResponseBody, Server, ServerConfig,
-    TenantQuota,
+    AdmitError, FailureCause, Priority, PushError, Request, Response, ResponseBody, Server,
+    ServerConfig, TenantQuota,
 };
 use aphmm::sim::{simulate_read, ErrorProfile, XorShift};
 use aphmm::testutil;
@@ -685,6 +687,127 @@ fn wire_registration_cannot_hijack_another_tenants_profile() {
     // `tenant` command, so the operator id cannot be claimed.
     let text = run("tenant __operator__\nquit\n".to_string());
     assert!(text.lines().next().unwrap().starts_with("err tenant:"), "{text}");
+    server.shutdown(true);
+}
+
+/// Tentpole (deadlines): a request whose deadline expired while it was
+/// still queued is answered with a typed `Failure` **without ever
+/// executing** — the Prepared cache shows zero freezes — and the
+/// failure is attributed by cause in the aggregate and per-tenant
+/// metrics.  A follow-up request on the same server succeeds normally.
+#[test]
+fn expired_deadline_fails_typed_without_executing() {
+    let mut rng = XorShift::new(211);
+    let reference = dna(&mut rng, "chr1", 40);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    server.register_profile("chr1", phmm);
+    let read = reads_of(&mut rng, &reference, 1).remove(0);
+
+    // A zero budget is already expired at the queue-pop check.
+    let resp = server
+        .submit_with_deadline(
+            "lat",
+            Priority::Normal,
+            None,
+            Request::Score { profile: "chr1".into(), read: read.clone() },
+            Some(Duration::ZERO),
+        )
+        .unwrap()
+        .wait();
+    match &resp.body {
+        ResponseBody::Failure { cause, .. } => {
+            assert_eq!(*cause, FailureCause::DeadlineExceeded);
+        }
+        other => panic!("expected a typed deadline failure, got {other:?}"),
+    }
+    assert_eq!(
+        server.cache_stats().misses,
+        0,
+        "an expired-in-queue request must never start executing"
+    );
+    let m = server.metrics_summary();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.cancelled, 0);
+    assert_eq!(m.pool_panics, 0);
+    let lat = m.tenants.iter().find(|t| t.tenant == "lat").expect("tenant gauges");
+    assert_eq!(lat.failed, 1);
+    assert_eq!(lat.deadline_exceeded, 1);
+    assert!(
+        server.tenants_line().contains("lat:admitted=1"),
+        "wire tenants line missing the tenant: {}",
+        server.tenants_line()
+    );
+    assert!(
+        server.tenants_line().contains("deadline_exceeded=1"),
+        "wire tenants line missing the cause counter: {}",
+        server.tenants_line()
+    );
+
+    // The server is unharmed: the same request without a deadline (and
+    // one with a generous deadline) complete normally and agree.
+    let ok = server
+        .submit(None, Request::Score { profile: "chr1".into(), read: read.clone() })
+        .unwrap()
+        .wait();
+    let ok_budget = server
+        .submit_with_deadline(
+            "lat",
+            Priority::Normal,
+            None,
+            Request::Score { profile: "chr1".into(), read },
+            Some(Duration::from_secs(60)),
+        )
+        .unwrap()
+        .wait();
+    match (&ok.body, &ok_budget.body) {
+        (ResponseBody::Score { loglik: a, .. }, ResponseBody::Score { loglik: b, .. }) => {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "a deadline that does not fire must not perturb results"
+            );
+        }
+        other => panic!("follow-up requests failed: {other:?}"),
+    }
+    server.shutdown(true);
+}
+
+/// Tentpole (cancellation): cancelling a ticket makes the request
+/// return a typed `Cancelled` failure — observed either at the
+/// queue-pop boundary or at a per-read boundary mid-compute — and the
+/// server keeps serving afterwards.
+#[test]
+fn cancelled_ticket_fails_typed_and_server_keeps_serving() {
+    let mut rng = XorShift::new(212);
+    let reference = dna(&mut rng, "chr1", 200);
+    let reads = reads_of(&mut rng, &reference, 12);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    server.register_profile("chr1", phmm);
+
+    // Correct has per-read cancellation points, so the cancel lands
+    // whether the job is still queued or already mid-E-step.
+    let ticket = server
+        .submit(None, Request::Correct { reference: reference.clone(), reads: reads.clone() })
+        .unwrap();
+    ticket.cancel();
+    let resp = ticket.wait();
+    match &resp.body {
+        ResponseBody::Failure { cause, .. } => assert_eq!(*cause, FailureCause::Cancelled),
+        other => panic!("expected a typed cancellation, got {other:?}"),
+    }
+    let m = server.metrics_summary();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.jobs_failed, 1);
+
+    // Subsequent work is unaffected.
+    let ok = server
+        .submit(None, Request::Correct { reference, reads })
+        .unwrap()
+        .wait();
+    assert!(matches!(ok.body, ResponseBody::Correct { .. }), "{:?}", ok.body);
     server.shutdown(true);
 }
 
