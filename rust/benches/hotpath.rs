@@ -21,10 +21,11 @@ mod common;
 use std::path::Path;
 
 use aphmm::baumwelch::{
-    forward_sparse, forward_sparse_with, reference, score_sparse_with, BandedCoeffs,
-    BandedEngine, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
-    GatherKind,
+    forward_sparse, forward_sparse_with, reference, score_sparse_with, score_striped_with,
+    BandedCoeffs, BandedEngine, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch,
+    FusedCoeffs, GatherKind, SimdPolicy, MAX_STRIPE,
 };
+use aphmm::seq::Sequence;
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
 
@@ -108,7 +109,7 @@ fn main() {
     });
     let t_new_b = common::time_median(reps, || {
         let mut acc = BwAccumulators::new(&graph);
-        acc.accumulate_with(&graph, &coeffs, read, &fwd_m, &mut scratch).unwrap();
+        acc.accumulate_with(&graph, &coeffs, read, &fwd_m, &mut scratch, &opts_m).unwrap();
     });
     println!(
         "backward+update:  reference {:>9.3} ms -> memoized {:>9.3} ms  ({:.2}x)",
@@ -243,6 +244,99 @@ fn main() {
         name: "window gather dense-band adaptive",
         baseline_s: t_d_csr,
         new_s: t_d_adapt,
+    });
+
+    // === explicit simd lanes over the dense-tile dot product: the
+    // === scalar lane shim vs the widest lane width this host resolves
+    // === (`SimdPolicy::Auto`; `APHMM_SIMD` overrides).  Measured in
+    // === the tile regime — on occupancy-gated CSR rows the lane
+    // === policy is a no-op by construction.
+    common::banner("explicit simd lanes on the dense-tile kernel");
+    let wide = SimdPolicy::Auto.resolve();
+    let opts_lane_scalar = ForwardOptions {
+        gather: GatherKind::DenseTile,
+        simd: SimdPolicy::Scalar,
+        ..Default::default()
+    };
+    let opts_lane_wide = ForwardOptions {
+        gather: GatherKind::DenseTile,
+        simd: SimdPolicy::Auto,
+        ..Default::default()
+    };
+    let t_lane_scalar = common::time_median(reps, || {
+        let fwd =
+            forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_lane_scalar, &mut scratch)
+                .unwrap();
+        scratch.recycle(fwd);
+    });
+    let t_lane_wide = common::time_median(reps, || {
+        let fwd =
+            forward_sparse_with(&dense_graph, &dense_coeffs, read, &opts_lane_wide, &mut scratch)
+                .unwrap();
+        scratch.recycle(fwd);
+    });
+    println!(
+        "simd lanes: scalar {:>9.3} ms -> {} {:>9.3} ms  ({:.2}x)",
+        t_lane_scalar * 1e3,
+        wide.name(),
+        t_lane_wide * 1e3,
+        t_lane_scalar / t_lane_wide
+    );
+    rows.push(BenchRow { name: "simd lanes", baseline_s: t_lane_scalar, new_s: t_lane_wide });
+
+    // === striped multi-read batch kernel: K same-profile reads in one
+    // === lock-step pass over the frozen tables vs scoring them one at
+    // === a time (the server's Score micro-batch and the batch E-step
+    // === inner loop).  Per-read results are asserted bit-identical to
+    // === the one-at-a-time kernel before timing — a fast wrong answer
+    // === must not make it into the perf log.
+    common::banner("striped multi-read batch scoring (K same-profile reads)");
+    let stripe_scn = common::ec_scenario(3, chunk, MAX_STRIPE);
+    assert_eq!(
+        stripe_scn.reference.data, scenario.reference.data,
+        "stripe scenario must share the bench profile's reference"
+    );
+    let stripe_refs: Vec<&Sequence> = stripe_scn.reads.iter().collect();
+    let solo_bits: Vec<u64> = stripe_refs
+        .iter()
+        .map(|r| {
+            score_sparse_with(&graph, &coeffs, r, &opts_m, &mut scratch)
+                .unwrap()
+                .loglik
+                .to_bits()
+        })
+        .collect();
+    for (i, res) in score_striped_with(&graph, &coeffs, &stripe_refs, &opts_m, &mut scratch)
+        .iter()
+        .enumerate()
+    {
+        assert_eq!(
+            res.as_ref().unwrap().loglik.to_bits(),
+            solo_bits[i],
+            "striped slot {i} diverged from the one-at-a-time kernel"
+        );
+    }
+    let t_solo_batch = common::time_median(reps, || {
+        for r in &stripe_refs {
+            score_sparse_with(&graph, &coeffs, r, &opts_m, &mut scratch).unwrap();
+        }
+    });
+    let t_striped_batch = common::time_median(reps, || {
+        for res in score_striped_with(&graph, &coeffs, &stripe_refs, &opts_m, &mut scratch) {
+            res.unwrap();
+        }
+    });
+    println!(
+        "striped batch: 1-read {:>9.3} ms -> {}-read {:>9.3} ms  ({:.2}x)",
+        t_solo_batch * 1e3,
+        stripe_refs.len(),
+        t_striped_batch * 1e3,
+        t_solo_batch / t_striped_batch
+    );
+    rows.push(BenchRow {
+        name: "striped batch",
+        baseline_s: t_solo_batch,
+        new_s: t_striped_batch,
     });
 
     // --- sparse forward, unfiltered ---

@@ -41,7 +41,9 @@ use super::filter::FilterStats;
 use super::kernels::{ForwardScratch, FusedCoeffs};
 use super::lowering::BandedLowering;
 use super::reference;
+use super::simd::MAX_STRIPE;
 use super::sparse::{forward_sparse_with, score_sparse_with, ForwardOptions, ScoreResult};
+use super::striped;
 use super::update::BwAccumulators;
 use crate::error::Result;
 use crate::phmm::Phmm;
@@ -184,6 +186,29 @@ pub trait ExpectationEngine: Sync {
         acc: &mut Self::Acc,
     ) -> Result<ReadStats>;
 
+    /// Batch form of [`ExpectationEngine::accumulate_read`]: fold a
+    /// group of same-profile reads into `acc`, returning one result per
+    /// read (same order).  The contract is *bit-identity with the
+    /// sequential loop*: the merged sums, and each read's stats
+    /// counters, must equal calling `accumulate_read` per read in
+    /// order.  The default does exactly that; engines with a
+    /// multi-read kernel (the sparse engine's striped forward)
+    /// override it.
+    fn accumulate_batch(
+        &self,
+        phmm: &Phmm,
+        prep: &Self::Prepared,
+        reads: &[&Sequence],
+        opts: &ForwardOptions,
+        scratch: &mut Self::Scratch,
+        acc: &mut Self::Acc,
+    ) -> Vec<Result<ReadStats>> {
+        reads
+            .iter()
+            .map(|read| self.accumulate_read(phmm, prep, read, opts, scratch, acc))
+            .collect()
+    }
+
     /// Merge a block accumulator into `into` (called in block order).
     fn merge(&self, into: &mut Self::Acc, from: &Self::Acc);
 
@@ -202,6 +227,22 @@ pub trait ExpectationEngine: Sync {
         opts: &ForwardOptions,
         scratch: &mut Self::Scratch,
     ) -> Result<ScoreResult>;
+
+    /// Batch form of [`ExpectationEngine::score`]: score a group of
+    /// same-profile reads, one result per read (same order).  Same
+    /// bit-identity contract as
+    /// [`ExpectationEngine::accumulate_batch`]; the default loops, the
+    /// sparse engine runs the striped multi-read score kernel.
+    fn score_batch(
+        &self,
+        phmm: &Phmm,
+        prep: &Self::Prepared,
+        reads: &[&Sequence],
+        opts: &ForwardOptions,
+        scratch: &mut Self::Scratch,
+    ) -> Vec<Result<ScoreResult>> {
+        reads.iter().map(|read| self.score(phmm, prep, read, opts, scratch)).collect()
+    }
 
     /// Posterior best-state decode of one read (hmmalign).  The default
     /// lowers to the banded encoding per call through
@@ -283,10 +324,56 @@ impl ExpectationEngine for SparseEngine {
             ..Default::default()
         };
         let t1 = Instant::now();
-        acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch)?;
+        acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch, opts)?;
         stats.backward_update_ns = t1.elapsed().as_nanos();
         scratch.recycle(fwd);
         Ok(stats)
+    }
+
+    fn accumulate_batch(
+        &self,
+        phmm: &Phmm,
+        prep: &SparsePrepared,
+        reads: &[&Sequence],
+        opts: &ForwardOptions,
+        scratch: &mut ForwardScratch,
+        acc: &mut BwAccumulators,
+    ) -> Vec<Result<ReadStats>> {
+        let mut out = Vec::with_capacity(reads.len());
+        for chunk in reads.chunks(MAX_STRIPE) {
+            let t0 = Instant::now();
+            let fwds = striped::forward_striped_with(phmm, &prep.coeffs, chunk, opts, scratch);
+            // One striped pass serves the whole chunk; attribute the
+            // wall time evenly so aggregated forward_ns stays a usable
+            // Fig. 2 proxy.
+            let fwd_ns = t0.elapsed().as_nanos() / chunk.len() as u128;
+            // Backwards run per read, in chunk order: the accumulator
+            // sees the exact += sequence of the sequential loop, so
+            // the merged sums stay bit-identical to one-at-a-time.
+            for (read, fwd) in chunk.iter().zip(fwds) {
+                let fwd = match fwd {
+                    Ok(f) => f,
+                    Err(e) => {
+                        out.push(Err(e));
+                        continue;
+                    }
+                };
+                let mut stats = ReadStats {
+                    forward_ns: fwd_ns,
+                    filter_stats: fwd.filter_stats,
+                    states_processed: fwd.states_processed,
+                    edges_processed: fwd.edges_processed,
+                    timesteps: fwd.rows.len() as u64,
+                    ..Default::default()
+                };
+                let t1 = Instant::now();
+                let res = acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch, opts);
+                stats.backward_update_ns = t1.elapsed().as_nanos();
+                scratch.recycle(fwd);
+                out.push(res.map(|()| stats));
+            }
+        }
+        out
     }
 
     fn merge(&self, into: &mut BwAccumulators, from: &BwAccumulators) {
@@ -310,6 +397,21 @@ impl ExpectationEngine for SparseEngine {
         scratch: &mut ForwardScratch,
     ) -> Result<ScoreResult> {
         score_sparse_with(phmm, &prep.coeffs, read, opts, scratch)
+    }
+
+    fn score_batch(
+        &self,
+        phmm: &Phmm,
+        prep: &SparsePrepared,
+        reads: &[&Sequence],
+        opts: &ForwardOptions,
+        scratch: &mut ForwardScratch,
+    ) -> Vec<Result<ScoreResult>> {
+        let mut out = Vec::with_capacity(reads.len());
+        for chunk in reads.chunks(MAX_STRIPE) {
+            out.extend(striped::score_striped_with(phmm, &prep.coeffs, chunk, opts, scratch));
+        }
+        out
     }
 
     fn posterior(
@@ -646,6 +748,37 @@ impl PreparedAny {
         }
     }
 
+    /// Batch score of same-profile reads through the frozen tables —
+    /// the serving layer's Score micro-batch entry point.  One result
+    /// per read, same order, bit-identical to calling
+    /// [`PreparedAny::score`] per read (the sparse variant runs the
+    /// striped multi-read kernel; dense engines loop).
+    pub fn score_batch(
+        &self,
+        phmm: &Phmm,
+        reads: &[&Sequence],
+        opts: &ForwardOptions,
+        scratch: &mut ScratchAny,
+    ) -> Vec<Result<ScoreResult>> {
+        match self {
+            PreparedAny::Sparse(prep) => {
+                if !matches!(scratch, ScratchAny::Sparse(_)) {
+                    *scratch = ScratchAny::Sparse(Box::new(ForwardScratch::new(phmm)));
+                }
+                let ScratchAny::Sparse(s) = scratch else { unreachable!() };
+                SparseEngine.score_batch(phmm, prep, reads, opts, s)
+            }
+            PreparedAny::Banded(prep) => reads
+                .iter()
+                .map(|read| BandedEngine.score(phmm, prep, read, opts, &mut ()))
+                .collect(),
+            PreparedAny::Reference => reads
+                .iter()
+                .map(|read| ReferenceEngine.score(phmm, &(), read, opts, &mut ()))
+                .collect(),
+        }
+    }
+
     /// Posterior best-state decode of `read` through the frozen tables.
     pub fn posterior(&self, phmm: &Phmm, read: &Sequence) -> Result<PosteriorDecode> {
         match self {
@@ -777,6 +910,59 @@ mod tests {
 
         // The device-backed engine cannot be frozen into a cache entry.
         assert!(PreparedAny::freeze(EngineKind::Xla, &g).is_err());
+    }
+
+    #[test]
+    fn batch_entry_points_match_sequential_loops() {
+        // The batch contract: one result per read, merged sums and
+        // log-likelihoods bit-identical to the sequential loop at the
+        // same lane width (whatever Auto resolves to here).  Ten reads
+        // exercises the MAX_STRIPE chunking.
+        let mut rng = XorShift::new(109);
+        let (g, _) = setup(&mut rng, 25, 10);
+        let reads: Vec<Sequence> = (0..10)
+            .map(|i| {
+                Sequence::from_symbols(
+                    format!("r{i}"),
+                    testutil::random_seq(&mut rng, 5 + i, 4),
+                )
+            })
+            .collect();
+        let read_refs: Vec<&Sequence> = reads.iter().collect();
+        let opts = ForwardOptions::default();
+        let engine = SparseEngine;
+        let prep = engine.prepare(&g).unwrap();
+        let mut scratch = engine.make_scratch(&g);
+
+        let batch = engine.score_batch(&g, &prep, &read_refs, &opts, &mut scratch);
+        assert_eq!(batch.len(), reads.len());
+        for (read, got) in reads.iter().zip(&batch) {
+            let solo = engine.score(&g, &prep, read, &opts, &mut scratch).unwrap();
+            assert_eq!(got.as_ref().unwrap().loglik.to_bits(), solo.loglik.to_bits());
+        }
+
+        let mut acc_b = engine.make_acc(&g);
+        let res = engine.accumulate_batch(&g, &prep, &read_refs, &opts, &mut scratch, &mut acc_b);
+        assert!(res.iter().all(|r| r.is_ok()));
+        let mut acc_s = engine.make_acc(&g);
+        for read in &reads {
+            engine.accumulate_read(&g, &prep, read, &opts, &mut scratch, &mut acc_s).unwrap();
+        }
+        assert_eq!(acc_b.xi, acc_s.xi);
+        assert_eq!(acc_b.e_num, acc_s.e_num);
+        assert_eq!(acc_b.total_loglik.to_bits(), acc_s.total_loglik.to_bits());
+        assert_eq!(acc_b.n_observations, acc_s.n_observations);
+
+        // The type-erased batch entry dispatches to the same kernel.
+        let any = PreparedAny::freeze(EngineKind::Sparse, &g).unwrap();
+        let mut s_any = any.make_scratch(&g);
+        let via_any = any.score_batch(&g, &read_refs, &opts, &mut s_any);
+        for (a, b) in via_any.iter().zip(&batch) {
+            assert_eq!(
+                a.as_ref().unwrap().loglik.to_bits(),
+                b.as_ref().unwrap().loglik.to_bits()
+            );
+        }
     }
 
     #[test]

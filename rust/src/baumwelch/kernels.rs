@@ -41,7 +41,7 @@ use std::sync::OnceLock;
 use super::filter::{FilterConfig, HistogramFilter};
 use super::lowering::Lowering;
 use super::sparse::{ForwardResult, SparseRow};
-use super::tile::DenseTiles;
+use super::tile::{DenseTiles, OutTiles};
 use crate::phmm::Phmm;
 
 /// Per-symbol fused coefficient tables for one parameter freeze.
@@ -63,6 +63,11 @@ pub struct FusedCoeffs {
     /// never pay the `Σ·N·tile_w` footprint), mirroring the lazy
     /// banded lowering beside it.
     pub(super) tiles: OnceLock<DenseTiles>,
+    /// The outgoing products in the dense out-tile layout of the
+    /// tile-granular fused backward — same lazy once-per-freeze
+    /// lifecycle as `tiles` (only backward passes that may dispatch to
+    /// the out-tile walk build it).
+    pub(super) out_tiles: OnceLock<OutTiles>,
 }
 
 impl FusedCoeffs {
@@ -109,7 +114,7 @@ impl FusedCoeffs {
             }
         }
 
-        FusedCoeffs { lowering, in_coef, out_coef, tiles: OnceLock::new() }
+        FusedCoeffs { lowering, in_coef, out_coef, tiles: OnceLock::new(), out_tiles: OnceLock::new() }
     }
 
     /// The dense-tile mirror of the incoming tables, built at most once
@@ -125,6 +130,19 @@ impl FusedCoeffs {
         let built = DenseTiles::new(&self.lowering, phmm);
         // A concurrent builder may win the race; its value is used.
         self.tiles.get_or_init(|| built)
+    }
+
+    /// The dense out-tile mirror of the outgoing tables (the
+    /// tile-granular backward's lowering), built at most once per
+    /// freeze, on first demand — same contract as
+    /// [`FusedCoeffs::tiles_for`].
+    pub(super) fn out_tiles_for(&self, phmm: &Phmm) -> &OutTiles {
+        if let Some(t) = self.out_tiles.get() {
+            return t;
+        }
+        let built = OutTiles::new(&self.lowering, phmm);
+        // A concurrent builder may win the race; its value is used.
+        self.out_tiles.get_or_init(|| built)
     }
 
     /// The shared transition-structure lowering behind the tables.
@@ -187,6 +205,10 @@ pub struct ForwardScratch {
     /// slot `i + pad` so tile rows read a contiguous window; zero
     /// outside the active row).
     pub(super) dense: Vec<f32>,
+    /// Striped dense gather buffer of the multi-read kernels:
+    /// `(n_states + pad) · K` slots, read-minor (`slot i` of read `r`
+    /// lives at `i · K + r`); zero outside the scattered rows.
+    pub(super) striped: Vec<f32>,
     /// Backward value buffer for timestep t+1 (≥ n_states, zeroed).
     pub(super) b_next: Vec<f64>,
     /// Backward value buffer for timestep t (≥ n_states, zeroed).
@@ -215,6 +237,15 @@ impl ForwardScratch {
             self.dense.resize(n, 0.0);
             self.b_next.resize(n, 0.0);
             self.b_cur.resize(n, 0.0);
+        }
+    }
+
+    /// Grow the striped gather buffer to cover `len` slots (the striped
+    /// kernels pass `(n_states + gather_pad) · k`); maintained all-zero
+    /// between calls like `dense`.
+    pub(super) fn ensure_striped(&mut self, len: usize) {
+        if self.striped.len() < len {
+            self.striped.resize(len, 0.0);
         }
     }
 

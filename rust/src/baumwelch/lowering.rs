@@ -37,10 +37,16 @@
 //! picks the tile kernel when the graph passes the structural
 //! [`TILE_MIN_OCCUPANCY`] gate *and* the filter-admitted window density
 //! reaches [`DENSE_TILE_MIN_DENSITY`], falling back to the CSR gather
-//! otherwise.  Both kernels accumulate each target's contributions in
-//! ascending-source order with only non-negative terms, so their rows —
-//! and therefore the log-likelihoods and every downstream expectation
-//! sum — are **bit-identical** (asserted by `tests/engine_matrix.rs`).
+//! otherwise.  Under the scalar lane policy both kernels accumulate
+//! each target's contributions in ascending-source order with only
+//! non-negative terms, so their rows — and therefore the
+//! log-likelihoods and every downstream expectation sum — are
+//! **bit-identical** (asserted by `tests/engine_matrix.rs`).  Wider
+//! `SimdPolicy` lane widths reduce the tile dot product with the fixed
+//! lane tree of [`super::simd`] instead: deterministic per width, but
+//! reassociated relative to the CSR gather's scalar sum, so cross-kernel
+//! and cross-width comparisons then live in the pinned
+//! `SIMD_REASSOC_RTOL` tolerance tier.
 //!
 //! Freezing is strictly parameter-side: a [`Lowering`] never bakes in a
 //! [`super::FilterConfig`] or any other runtime decision, which is what
@@ -65,18 +71,26 @@ pub const DENSE_TILE_MIN_DENSITY: f32 = 0.75;
 
 /// Structural gate of the adaptive policy: the tile kernel performs
 /// `tile_w` multiply-adds per window target where the CSR gather
-/// performs `in-degree` — and because the bitwise contract forbids
-/// reassociating the f32 reduction, those extra padded terms are real
-/// serial work, not vector lanes.  Adaptive dispatch therefore only
-/// considers tiles when the graph's band is structurally dense enough
-/// that the padding overhead is bounded (≤ 2× the CSR arithmetic):
-/// `n_edges / (n_states · tile_w) ≥ TILE_MIN_OCCUPANCY`.  Low-occupancy
-/// bands (the default EC design: in-degree ≈ 7 in a 25-wide band,
-/// occupancy ≈ 0.25) always take the CSR gather under `Adaptive`, which
-/// is what keeps the adaptive path within noise of pure CSR there;
-/// narrow near-dense bands (folded traditional profiles) are where the
-/// tile kernel can win.  `GatherKind::DenseTile` bypasses the gate.
-pub const TILE_MIN_OCCUPANCY: f64 = 0.5;
+/// performs `in-degree`, so adaptive dispatch only considers tiles when
+/// the graph's band is structurally dense enough that the padding
+/// overhead is bounded: `n_edges / (n_states · tile_w) ≥
+/// TILE_MIN_OCCUPANCY`.  The gate was 0.5 when the tile reduction was a
+/// serial scalar chain (padded terms were real serial work — the
+/// bitwise contract forbade reassociating them).  With the explicit
+/// lane-parallel reduction of [`super::simd`], padded terms ride in
+/// otherwise-idle vector lanes: the tile row costs ~`tile_w / W` lane
+/// steps regardless of padding, which moves the break-even density down.
+/// We lower the gate conservatively to 0.45 rather than proportionally
+/// to `1/W` because the scalar fallback (and `APHMM_SIMD=scalar` CI
+/// runs) still pays per-term cost, and the gate is frozen
+/// per-structure, not per-policy.  Low-occupancy bands (the default EC
+/// design: in-degree ≈ 7 in a 25-wide band, occupancy ≈ 0.25) still
+/// always take the CSR gather under `Adaptive`; narrow near-dense bands
+/// (folded traditional profiles) are where the tile kernel wins.
+/// `GatherKind::DenseTile` bypasses the gate.  Re-tune from the
+/// `simd lanes` / `window gather` rows of `BENCH_hotpath.json` when
+/// measured numbers land (ROADMAP perf log).
+pub const TILE_MIN_OCCUPANCY: f64 = 0.45;
 
 /// Which in-window gather kernel executes a forward row.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

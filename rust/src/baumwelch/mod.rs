@@ -30,6 +30,16 @@
 //! [`DenseTiles`]); engines only add parameter-dependent coefficient
 //! arrays on top of one shared lowering product.
 //!
+//! The dense-tile dot product executes through the explicit lane shim
+//! of [`simd`] (scalar / f32x4 / f32x8, selected at runtime by
+//! [`SimdPolicy`] or the `APHMM_SIMD` override), and batches of
+//! same-profile reads can advance in lock-step through the striped
+//! multi-read kernels ([`forward_striped_with`] /
+//! [`score_striped_with`]) — per read bit-identical to the solo
+//! kernels at the same lane width, exposed through the engine batch
+//! entry points ([`ExpectationEngine::accumulate_batch`] /
+//! [`ExpectationEngine::score_batch`]).
+//!
 //! Shared numerics: per-timestep scaling (DESIGN.md §Numerics); raw
 //! expectation sums accumulated across observation sequences and divided
 //! once per EM iteration ([`BwAccumulators`]).  [`logspace`] provides an
@@ -47,7 +57,9 @@ mod kernels;
 pub mod lowering;
 mod logspace;
 pub mod reference;
+mod simd;
 mod sparse;
+mod striped;
 mod tile;
 mod train;
 mod update;
@@ -64,11 +76,13 @@ pub use lowering::{
     BandedLowering, GatherKind, Lowering, DENSE_TILE_MIN_DENSITY, TILE_LANES,
     TILE_MIN_OCCUPANCY,
 };
+pub use simd::{SimdLanes, SimdPolicy, MAX_STRIPE, SIMD_REASSOC_ATOL, SIMD_REASSOC_RTOL};
 pub use sparse::{
     forward_sparse, forward_sparse_with, score_sparse, score_sparse_with, ForwardOptions,
     ForwardResult, ScoreResult, SparseRow,
 };
-pub use tile::DenseTiles;
+pub use striped::{forward_striped_with, score_striped_with};
+pub use tile::{DenseTiles, OutTiles};
 pub use train::{
     train, train_in, train_in_with, train_with_engine, train_with_engine_with, TrainConfig,
     TrainResult,

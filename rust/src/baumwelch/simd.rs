@@ -1,0 +1,390 @@
+//! Portable SIMD shim for the dense-tile gather kernels.
+//!
+//! The dense tiles of [`super::lowering`] are `TILE_LANES`-padded f32
+//! rows built explicitly so the in-window dot product can vectorize,
+//! but until this module existed the reduction was a single scalar
+//! accumulator — a serial dependency chain the compiler must not
+//! reassociate.  This shim gives the kernels an explicit lane-parallel
+//! form without nightly `std::simd` or any dependency: fixed-width
+//! `[f32; W]` lane accumulators over exact chunks, which LLVM lowers to
+//! vector FMAs/adds on every target we build for, plus a scalar
+//! fallback that preserves the historic ascending-order sum bit for
+//! bit.
+//!
+//! ## Reproducibility contract
+//!
+//! * `SimdLanes::Scalar` sums window terms in ascending source order —
+//!   **bit-identical** to the pre-SIMD kernel and to the CSR gather.
+//! * `SimdLanes::X4` / `SimdLanes::X8` keep W partial sums (term `i`
+//!   goes to lane `i % W` of its chunk) and reduce them in a **fixed
+//!   binary tree** — `(a0+a1)+(a2+a3)`, and for 8 lanes
+//!   `((a0+a1)+(a2+a3))+((a4+a5)+(a6+a7))`.  The result is fully
+//!   deterministic for a given lane width on every platform (portable
+//!   per-lane f32 ops are exact IEEE), but it is a *reassociation* of
+//!   the scalar sum, so cross-width comparisons live in the
+//!   [`SIMD_REASSOC_RTOL`]/[`SIMD_REASSOC_ATOL`] tolerance tier rather
+//!   than the bitwise tier.
+//! * The striped variants replicate, per read, exactly the lane
+//!   assignment and reduction tree of the one-read kernel at the same
+//!   width — striped results are **bit-identical** to running each
+//!   read alone at that width (the acceptance contract of the striped
+//!   batch kernels; pinned in `striped::tests` and the engine matrix).
+//!
+//! ## Selection
+//!
+//! [`SimdPolicy`] lives on `ForwardOptions`/`TrainConfig`/serve config;
+//! `Auto` resolves from the host (AVX2 → 8 lanes, otherwise 4 on
+//! x86-64/aarch64, scalar elsewhere).  The `APHMM_SIMD` environment
+//! variable (`scalar` | `f32x4` | `f32x8` | `auto`) overrides the
+//! configured policy process-wide — that is how CI forces the whole
+//! suite down the scalar fallback on any runner.  Unknown values are
+//! ignored.
+
+use std::sync::OnceLock;
+
+/// Relative tolerance for comparisons across lane widths (scalar vs
+/// f32x4 vs f32x8): the only permitted divergence is f32 reassociation
+/// of the in-window dot product, once per gathered cell.
+pub const SIMD_REASSOC_RTOL: f64 = 1e-4;
+/// Absolute tolerance companion to [`SIMD_REASSOC_RTOL`].
+pub const SIMD_REASSOC_ATOL: f64 = 1e-9;
+
+/// Maximum number of reads a striped kernel processes per sweep; the
+/// striped accumulators are stack arrays sized by this.
+pub const MAX_STRIPE: usize = 8;
+
+/// Lane-width policy for the dense-tile dot product.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdPolicy {
+    /// Pick the widest lane count the host supports (the default).
+    #[default]
+    Auto,
+    /// Force the scalar ascending-order fallback (bitwise tier).
+    Scalar,
+    /// Force 4 lanes (portable: plain `[f32; 4]` arithmetic).
+    F32x4,
+    /// Force 8 lanes (portable: plain `[f32; 8]` arithmetic).
+    F32x8,
+}
+
+impl SimdPolicy {
+    /// All accepted [`SimdPolicy::parse`] spellings.
+    pub const NAMES: [&'static str; 4] = ["auto", "scalar", "f32x4", "f32x8"];
+
+    /// Parse a policy name as used by configs and `APHMM_SIMD`.
+    pub fn parse(s: &str) -> Option<SimdPolicy> {
+        match s {
+            "auto" => Some(SimdPolicy::Auto),
+            "scalar" => Some(SimdPolicy::Scalar),
+            "f32x4" => Some(SimdPolicy::F32x4),
+            "f32x8" => Some(SimdPolicy::F32x8),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (inverse of [`SimdPolicy::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Scalar => "scalar",
+            SimdPolicy::F32x4 => "f32x4",
+            SimdPolicy::F32x8 => "f32x8",
+        }
+    }
+
+    /// Resolve the policy to concrete lanes.  The `APHMM_SIMD`
+    /// environment override (read once per process) wins over the
+    /// configured value so CI can force every code path scalar.
+    pub fn resolve(self) -> SimdLanes {
+        match env_override().unwrap_or(self) {
+            SimdPolicy::Scalar => SimdLanes::Scalar,
+            SimdPolicy::F32x4 => SimdLanes::X4,
+            SimdPolicy::F32x8 => SimdLanes::X8,
+            SimdPolicy::Auto => auto_lanes(),
+        }
+    }
+}
+
+fn env_override() -> Option<SimdPolicy> {
+    static OVERRIDE: OnceLock<Option<SimdPolicy>> = OnceLock::new();
+    *OVERRIDE
+        .get_or_init(|| std::env::var("APHMM_SIMD").ok().and_then(|v| SimdPolicy::parse(v.trim())))
+}
+
+fn auto_lanes() -> SimdLanes {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            SimdLanes::X8
+        } else {
+            SimdLanes::X4
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdLanes::X4
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdLanes::Scalar
+    }
+}
+
+/// A resolved lane width (what the kernels actually dispatch on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLanes {
+    /// Ascending-order scalar sum (the bitwise-contract fallback).
+    Scalar,
+    /// 4 partial sums, fixed-tree reduced.
+    X4,
+    /// 8 partial sums, fixed-tree reduced.
+    X8,
+}
+
+impl SimdLanes {
+    /// Number of f32 lanes.
+    pub fn width(self) -> usize {
+        match self {
+            SimdLanes::Scalar => 1,
+            SimdLanes::X4 => 4,
+            SimdLanes::X8 => 8,
+        }
+    }
+
+    /// Display name used by benches and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLanes::Scalar => "scalar",
+            SimdLanes::X4 => "f32x4",
+            SimdLanes::X8 => "f32x8",
+        }
+    }
+}
+
+/// In-window dot product of one dense window against one tile row.
+///
+/// `win.len() == row.len()` and is a multiple of `TILE_LANES` (= 4) by
+/// tile construction, so the 4-lane path has no remainder and the
+/// 8-lane remainder is either empty or exactly 4 terms (folded into
+/// lanes 0..4 before the tree reduction).
+#[inline]
+pub(super) fn dot_tile(win: &[f32], row: &[f32], lanes: SimdLanes) -> f32 {
+    debug_assert_eq!(win.len(), row.len());
+    debug_assert_eq!(win.len() % 4, 0, "tile rows are TILE_LANES-padded");
+    match lanes {
+        SimdLanes::Scalar => {
+            let mut acc = 0.0f32;
+            for (&w, &t) in win.iter().zip(row.iter()) {
+                acc += w * t;
+            }
+            acc
+        }
+        SimdLanes::X4 => {
+            let mut acc = [0.0f32; 4];
+            for (w, t) in win.chunks_exact(4).zip(row.chunks_exact(4)) {
+                for l in 0..4 {
+                    acc[l] += w[l] * t[l];
+                }
+            }
+            (acc[0] + acc[1]) + (acc[2] + acc[3])
+        }
+        SimdLanes::X8 => {
+            let mut acc = [0.0f32; 8];
+            let main = win.len() - win.len() % 8;
+            for (w, t) in win[..main].chunks_exact(8).zip(row[..main].chunks_exact(8)) {
+                for l in 0..8 {
+                    acc[l] += w[l] * t[l];
+                }
+            }
+            // Remainder (0 or 4 terms): term j folds into lane j.
+            for (l, (&w, &t)) in win[main..].iter().zip(row[main..].iter()).enumerate() {
+                acc[l] += w * t;
+            }
+            ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+        }
+    }
+}
+
+/// Striped in-window dot product: `k` reads' windows interleaved
+/// read-minor (`striped[i * k + r]` is read `r`'s value for window
+/// slot `i`), one shared tile row, all `k` accumulators produced in
+/// one sweep (`out[r]`).
+///
+/// Per read, the lane assignment and reduction tree are exactly those
+/// of [`dot_tile`] at the same width, so each `out[r]` is bit-identical
+/// to `dot_tile(win_r, row, lanes)` — while the inner loops read
+/// contiguous `k`-wide spans and broadcast one coefficient, the shape
+/// that vectorizes *across* reads.
+#[inline]
+pub(super) fn dot_tile_striped(
+    striped: &[f32],
+    row: &[f32],
+    k: usize,
+    lanes: SimdLanes,
+    out: &mut [f32],
+) {
+    debug_assert!(k >= 1 && k <= MAX_STRIPE);
+    debug_assert_eq!(striped.len(), row.len() * k);
+    debug_assert_eq!(out.len(), k);
+    debug_assert_eq!(row.len() % 4, 0, "tile rows are TILE_LANES-padded");
+    const S: usize = MAX_STRIPE;
+    match lanes {
+        SimdLanes::Scalar => {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            for (i, &t) in row.iter().enumerate() {
+                let base = i * k;
+                for r in 0..k {
+                    out[r] += striped[base + r] * t;
+                }
+            }
+        }
+        SimdLanes::X4 => {
+            let mut acc = [0.0f32; 4 * S];
+            for (c, t) in row.chunks_exact(4).enumerate() {
+                let base = c * 4 * k;
+                for l in 0..4 {
+                    for r in 0..k {
+                        acc[l * S + r] += striped[base + l * k + r] * t[l];
+                    }
+                }
+            }
+            for r in 0..k {
+                out[r] = (acc[r] + acc[S + r]) + (acc[2 * S + r] + acc[3 * S + r]);
+            }
+        }
+        SimdLanes::X8 => {
+            let mut acc = [0.0f32; 8 * S];
+            let main = row.len() - row.len() % 8;
+            for (c, t) in row[..main].chunks_exact(8).enumerate() {
+                let base = c * 8 * k;
+                for l in 0..8 {
+                    for r in 0..k {
+                        acc[l * S + r] += striped[base + l * k + r] * t[l];
+                    }
+                }
+            }
+            for (l, &t) in row[main..].iter().enumerate() {
+                let base = (main + l) * k;
+                for r in 0..k {
+                    acc[l * S + r] += striped[base + r] * t;
+                }
+            }
+            for r in 0..k {
+                let lo = (acc[r] + acc[S + r]) + (acc[2 * S + r] + acc[3 * S + r]);
+                let hi = (acc[4 * S + r] + acc[5 * S + r]) + (acc[6 * S + r] + acc[7 * S + r]);
+                out[r] = lo + hi;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(n: usize, seed: u32) -> Vec<f32> {
+        // Deterministic pseudo-random positive values (no RNG deps).
+        let mut x = seed.wrapping_mul(2654435761).wrapping_add(12345);
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                ((x >> 8) as f32 / (1u32 << 24) as f32) * 0.9 + 0.05
+            })
+            .collect()
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for name in SimdPolicy::NAMES {
+            let p = SimdPolicy::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert_eq!(SimdPolicy::parse("avx512"), None);
+        assert_eq!(SimdPolicy::default(), SimdPolicy::Auto);
+    }
+
+    #[test]
+    fn scalar_dot_matches_ascending_sum() {
+        for len in [4usize, 8, 12, 16, 24] {
+            let w = window(len, 1);
+            let t = window(len, 2);
+            let mut expect = 0.0f32;
+            for i in 0..len {
+                expect += w[i] * t[i];
+            }
+            assert_eq!(dot_tile(&w, &t, SimdLanes::Scalar).to_bits(), expect.to_bits());
+        }
+    }
+
+    #[test]
+    fn lane_trees_are_pinned() {
+        // The fixed reduction trees, written out longhand: lanes must
+        // match them bit for bit (the reproducibility contract).
+        let len = 20; // 2 full 8-chunks + a 4-term remainder
+        let w = window(len, 3);
+        let t = window(len, 4);
+
+        let mut a4 = [0.0f32; 4];
+        for c in 0..len / 4 {
+            for l in 0..4 {
+                a4[l] += w[c * 4 + l] * t[c * 4 + l];
+            }
+        }
+        let expect4 = (a4[0] + a4[1]) + (a4[2] + a4[3]);
+        assert_eq!(dot_tile(&w, &t, SimdLanes::X4).to_bits(), expect4.to_bits());
+
+        let mut a8 = [0.0f32; 8];
+        for c in 0..len / 8 {
+            for l in 0..8 {
+                a8[l] += w[c * 8 + l] * t[c * 8 + l];
+            }
+        }
+        for l in 0..len % 8 {
+            a8[l] += w[16 + l] * t[16 + l];
+        }
+        let expect8 =
+            ((a8[0] + a8[1]) + (a8[2] + a8[3])) + ((a8[4] + a8[5]) + (a8[6] + a8[7]));
+        assert_eq!(dot_tile(&w, &t, SimdLanes::X8).to_bits(), expect8.to_bits());
+    }
+
+    #[test]
+    fn widths_agree_within_reassoc_tolerance() {
+        for len in [8usize, 12, 32, 44] {
+            let w = window(len, 5);
+            let t = window(len, 6);
+            let s = dot_tile(&w, &t, SimdLanes::Scalar) as f64;
+            for lanes in [SimdLanes::X4, SimdLanes::X8] {
+                let v = dot_tile(&w, &t, lanes) as f64;
+                crate::testutil::assert_close(v, s, SIMD_REASSOC_RTOL, SIMD_REASSOC_ATOL);
+            }
+        }
+    }
+
+    #[test]
+    fn striped_is_bit_identical_to_solo_at_every_width() {
+        let len = 12;
+        let row = window(len, 7);
+        for k in 1..=MAX_STRIPE {
+            // Build k distinct windows and their striped interleave.
+            let wins: Vec<Vec<f32>> = (0..k).map(|r| window(len, 100 + r as u32)).collect();
+            let mut striped = vec![0.0f32; len * k];
+            for i in 0..len {
+                for (r, win) in wins.iter().enumerate() {
+                    striped[i * k + r] = win[i];
+                }
+            }
+            for lanes in [SimdLanes::Scalar, SimdLanes::X4, SimdLanes::X8] {
+                let mut out = vec![0.0f32; k];
+                dot_tile_striped(&striped, &row, k, lanes, &mut out);
+                for (r, win) in wins.iter().enumerate() {
+                    let solo = dot_tile(win, &row, lanes);
+                    assert_eq!(
+                        out[r].to_bits(),
+                        solo.to_bits(),
+                        "striped k={k} read {r} diverged from solo at {lanes:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -33,10 +33,17 @@
 //! The default [`GatherKind::Adaptive`] policy picks the tile kernel
 //! when the filter-admitted window density reaches
 //! [`DENSE_TILE_MIN_DENSITY`] (near-dense unfiltered EC rows) and the
-//! CSR gather otherwise; both kernels sum in ascending-source order so
-//! the rows — and everything downstream — are **bit-identical** either
-//! way.  The per-row choice is counted in
-//! [`FilterStats::rows_dense_tile`]/[`FilterStats::rows_csr`].
+//! CSR gather otherwise.  Under [`SimdPolicy::Scalar`] both kernels sum
+//! in ascending-source order so the rows — and everything downstream —
+//! are **bit-identical** either way.  Wider lane policies
+//! ([`SimdPolicy::F32x4`]/[`SimdPolicy::F32x8`], or whatever `Auto`
+//! resolves to) reduce the tile dot product with the fixed lane tree of
+//! [`super::simd`]: still fully deterministic for a given width, but a
+//! reassociation of the scalar sum — tile-kernel rows then agree with
+//! the CSR gather within the pinned
+//! [`super::simd::SIMD_REASSOC_RTOL`] tier instead of bitwise (the CSR
+//! gather itself is scalar under every policy).  The per-row choice is
+//! counted in [`FilterStats::rows_dense_tile`]/[`FilterStats::rows_csr`].
 //!
 //! The parameterless [`forward_sparse`] / [`score_sparse`] wrappers
 //! build throwaway tables and scratch; hot paths build
@@ -45,6 +52,7 @@
 use super::filter::{FilterConfig, FilterStats, HistogramFilter, SortFilter};
 use super::kernels::{ForwardScratch, FusedCoeffs};
 use super::lowering::{GatherKind, DENSE_TILE_MIN_DENSITY};
+use super::simd::{self, SimdLanes, SimdPolicy};
 use super::EPS;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -78,11 +86,18 @@ pub struct ForwardOptions {
     pub filter: FilterConfig,
     /// In-window gather kernel policy (per-row adaptive by default).
     pub gather: GatherKind,
+    /// Lane-width policy for the dense-tile dot product (resolved once
+    /// per pass; `APHMM_SIMD` overrides it process-wide).
+    pub simd: SimdPolicy,
 }
 
 impl Default for ForwardOptions {
     fn default() -> Self {
-        ForwardOptions { filter: FilterConfig::None, gather: GatherKind::Adaptive }
+        ForwardOptions {
+            filter: FilterConfig::None,
+            gather: GatherKind::Adaptive,
+            simd: SimdPolicy::Auto,
+        }
     }
 }
 
@@ -121,7 +136,7 @@ pub struct ScoreResult {
 }
 
 /// Validate inputs shared by both kernels.
-fn precheck(phmm: &Phmm, coeffs: &FusedCoeffs, seq: &Sequence) -> Result<()> {
+pub(super) fn precheck(phmm: &Phmm, coeffs: &FusedCoeffs, seq: &Sequence) -> Result<()> {
     if phmm.has_silent_states() {
         return Err(ApHmmError::InvalidGraph("forward_sparse requires an emitting graph".into()));
     }
@@ -152,7 +167,7 @@ fn precheck(phmm: &Phmm, coeffs: &FusedCoeffs, seq: &Sequence) -> Result<()> {
 /// density term, so ineligible-graph `Adaptive` workloads (the default
 /// EC configuration) never build or hold the tile tables at all.
 #[inline]
-fn may_dispatch_tiles(coeffs: &FusedCoeffs, gather: GatherKind) -> bool {
+pub(super) fn may_dispatch_tiles(coeffs: &FusedCoeffs, gather: GatherKind) -> bool {
     match gather {
         GatherKind::Csr => false,
         GatherKind::DenseTile => true,
@@ -161,7 +176,12 @@ fn may_dispatch_tiles(coeffs: &FusedCoeffs, gather: GatherKind) -> bool {
 }
 
 /// t = 0 row: initial distribution times emission (unscaled).
-fn init_row(phmm: &Phmm, coeffs: &FusedCoeffs, s0: u8, row: &mut SparseRow) -> Result<f32> {
+pub(super) fn init_row(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    s0: u8,
+    row: &mut SparseRow,
+) -> Result<f32> {
     row.idx.clear();
     row.val.clear();
     for &(i, p) in &coeffs.lowering.init {
@@ -222,7 +242,12 @@ fn gather_csr(
 /// `dense[to..to + tile_w]` (tile column `x` is source `to + x − pad`,
 /// i.e. scratch slot `to + x`).  Ascending columns are ascending
 /// sources and padded columns contribute `+0.0` to a non-negative
-/// accumulator, so the sums are bit-identical to [`gather_csr`].
+/// accumulator, so under `SimdLanes::Scalar` the sums are bit-identical
+/// to [`gather_csr`]; wider lanes reduce with the fixed tree of
+/// [`super::simd::dot_tile`] (deterministic per width, tolerance-tier
+/// vs scalar).  A row is pushed iff its sum is positive — monotone
+/// non-negative addition makes that predicate association-independent,
+/// so the active set never depends on the lane width.
 #[inline]
 fn gather_tile(
     coeffs: &FusedCoeffs,
@@ -230,6 +255,7 @@ fn gather_tile(
     win_lo: usize,
     win_hi: usize,
     s_t: usize,
+    lanes: SimdLanes,
     out: &mut SparseRow,
 ) -> f32 {
     let tw = coeffs.lowering.tile_w;
@@ -238,10 +264,7 @@ fn gather_tile(
     for to in win_lo..win_hi {
         let row = &tiles[to * tw..(to + 1) * tw];
         let win = &dense[to..to + tw];
-        let mut acc = 0.0f32;
-        for (&w, &t) in win.iter().zip(row.iter()) {
-            acc += w * t;
-        }
+        let acc = simd::dot_tile(win, row, lanes);
         if acc > 0.0 {
             out.idx.push(to as u32);
             out.val.push(acc);
@@ -249,6 +272,28 @@ fn gather_tile(
         }
     }
     c
+}
+
+/// Per-row tile admission: the structural gate first (shared with the
+/// entry points' tile-build decision — admission must stay a subset of
+/// [`may_dispatch_tiles`] or `tile_coef_for` would panic on missing
+/// tables), then the per-row density term: under `Adaptive` the
+/// filter-admitted states must nearly fill their window
+/// (filter-thinned rows fall back to the indexed gather).  Shared with
+/// the striped kernels and (mirrored on the next-row support) the
+/// tile-granular backward, so every dispatcher agrees on one formula.
+#[inline]
+pub(super) fn row_admits_tile(
+    coeffs: &FusedCoeffs,
+    gather: GatherKind,
+    prev: &SparseRow,
+    first: usize,
+    last: usize,
+) -> bool {
+    may_dispatch_tiles(coeffs, gather)
+        && (gather != GatherKind::Adaptive
+            || (!prev.idx.is_empty()
+                && prev.len() as f32 >= DENSE_TILE_MIN_DENSITY * (last - first + 1) as f32))
 }
 
 /// Gather one timestep: scatter `prev` into the dense buffer, dispatch
@@ -271,6 +316,7 @@ fn gather_row(
     n: usize,
     out: &mut SparseRow,
     gather: GatherKind,
+    lanes: SimdLanes,
 ) -> (f32, u64, bool) {
     out.idx.clear();
     out.val.clear();
@@ -290,18 +336,9 @@ fn gather_row(
     let win_hi = if prev.idx.is_empty() { 0 } else { (last + coeffs.lowering.band).min(n) };
     out.idx.reserve(win_hi.saturating_sub(win_lo));
     out.val.reserve(win_hi.saturating_sub(win_lo));
-    // Structural gate first (shared with the entry points' tile-build
-    // decision — `use_tile` must stay a subset of `may_dispatch_tiles`
-    // or `tile_coef_for` would panic on missing tables), then the
-    // per-row term: under `Adaptive` the filter-admitted states must
-    // nearly fill their window (filter-thinned rows fall back to the
-    // indexed gather).
-    let use_tile = may_dispatch_tiles(coeffs, gather)
-        && (gather != GatherKind::Adaptive
-            || (!prev.idx.is_empty()
-                && prev.len() as f32 >= DENSE_TILE_MIN_DENSITY * (last - first + 1) as f32));
+    let use_tile = row_admits_tile(coeffs, gather, prev, first, last);
     let c = if use_tile {
-        gather_tile(coeffs, dense, win_lo, win_hi, s_t, out)
+        gather_tile(coeffs, dense, win_lo, win_hi, s_t, lanes, out)
     } else {
         gather_csr(coeffs, dense, pad, win_lo, win_hi, s_t, out)
     };
@@ -326,6 +363,7 @@ pub fn forward_sparse_with(
 ) -> Result<ForwardResult> {
     precheck(phmm, coeffs, seq)?;
     let n = phmm.n_states();
+    let lanes = opts.simd.resolve();
     scratch.ensure(n + coeffs.gather_pad());
     scratch.ensure_hist(&opts.filter);
     if may_dispatch_tiles(coeffs, opts.gather) {
@@ -360,7 +398,7 @@ pub fn forward_sparse_with(
         let mut row = scratch.take_row();
         let prev = rows.last().unwrap();
         let (c, edges, used_tile) =
-            gather_row(coeffs, &mut scratch.dense, prev, s_t, n, &mut row, opts.gather);
+            gather_row(coeffs, &mut scratch.dense, prev, s_t, n, &mut row, opts.gather, lanes);
         edges_processed += edges;
         if used_tile {
             stats.rows_dense_tile += 1;
@@ -405,6 +443,7 @@ pub fn score_sparse_with(
 ) -> Result<ScoreResult> {
     precheck(phmm, coeffs, seq)?;
     let n = phmm.n_states();
+    let lanes = opts.simd.resolve();
     scratch.ensure(n + coeffs.gather_pad());
     scratch.ensure_hist(&opts.filter);
     if may_dispatch_tiles(coeffs, opts.gather) {
@@ -439,7 +478,7 @@ pub fn score_sparse_with(
     for t in 1..t_len {
         let s_t = seq.data[t] as usize;
         let (c, edges, used_tile) =
-            gather_row(coeffs, &mut scratch.dense, &prev, s_t, n, &mut cur, opts.gather);
+            gather_row(coeffs, &mut scratch.dense, &prev, s_t, n, &mut cur, opts.gather, lanes);
         edges_processed += edges;
         if used_tile {
             stats.rows_dense_tile += 1;
@@ -462,7 +501,7 @@ pub fn score_sparse_with(
     Ok(ScoreResult { loglik, filter_stats: stats, states_processed, edges_processed })
 }
 
-fn apply_filter(
+pub(super) fn apply_filter(
     cfg: &FilterConfig,
     hist: &mut Option<HistogramFilter>,
     idx: &mut Vec<u32>,
@@ -542,10 +581,12 @@ mod tests {
 
     #[test]
     fn tile_and_csr_rows_are_bit_identical() {
-        // The dense-tile kernel sums each target's contributions in the
-        // same (ascending source) order as the CSR gather with only
-        // +0.0 padding interleaved, so rows, scales and log-likelihood
-        // must agree to the bit — filters on and off.
+        // Under the scalar lane policy the dense-tile kernel sums each
+        // target's contributions in the same (ascending source) order
+        // as the CSR gather with only +0.0 padding interleaved, so
+        // rows, scales and log-likelihood must agree to the bit —
+        // filters on and off.  (Wider lanes trade this for the
+        // tolerance tier; see `lane_widths_agree_within_reassoc_tier`.)
         testutil::check(15, |rng| {
             let ref_len = rng.range(5, 50);
             let g = ec_graph(rng, ref_len);
@@ -559,19 +600,31 @@ mod tests {
                 let csr = forward_sparse(
                     &g,
                     &obs,
-                    &ForwardOptions { filter, gather: GatherKind::Csr },
+                    &ForwardOptions {
+                        filter,
+                        gather: GatherKind::Csr,
+                        simd: SimdPolicy::Scalar,
+                    },
                 )
                 .unwrap();
                 let tile = forward_sparse(
                     &g,
                     &obs,
-                    &ForwardOptions { filter, gather: GatherKind::DenseTile },
+                    &ForwardOptions {
+                        filter,
+                        gather: GatherKind::DenseTile,
+                        simd: SimdPolicy::Scalar,
+                    },
                 )
                 .unwrap();
                 let adaptive = forward_sparse(
                     &g,
                     &obs,
-                    &ForwardOptions { filter, gather: GatherKind::Adaptive },
+                    &ForwardOptions {
+                        filter,
+                        gather: GatherKind::Adaptive,
+                        simd: SimdPolicy::Scalar,
+                    },
                 )
                 .unwrap();
                 assert_eq!(csr.loglik.to_bits(), tile.loglik.to_bits(), "filter {filter:?}");
@@ -639,7 +692,9 @@ mod tests {
         let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 6, 4));
         let t_rows = obs.len() as u64 - 1;
 
-        let adaptive = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap();
+        // Scalar lanes: the tile-vs-CSR comparison below is bitwise.
+        let opts_scalar = ForwardOptions { simd: SimdPolicy::Scalar, ..Default::default() };
+        let adaptive = forward_sparse(&g, &obs, &opts_scalar).unwrap();
         assert_eq!(
             adaptive.filter_stats.rows_dense_tile, t_rows,
             "unfiltered near-dense rows must take the tile kernel"
@@ -649,7 +704,11 @@ mod tests {
         let csr = forward_sparse(
             &g,
             &obs,
-            &ForwardOptions { gather: GatherKind::Csr, ..Default::default() },
+            &ForwardOptions {
+                gather: GatherKind::Csr,
+                simd: SimdPolicy::Scalar,
+                ..Default::default()
+            },
         )
         .unwrap();
         assert_eq!(adaptive.loglik.to_bits(), csr.loglik.to_bits());
@@ -658,6 +717,70 @@ mod tests {
             for (x, y) in a.val.iter().zip(b.val.iter()) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn lane_widths_agree_within_reassoc_tier() {
+        // The lane-width parity half of the matrix: explicit f32x4 and
+        // f32x8 tile forwards against the scalar baseline.  The active
+        // sets and scale structure must match exactly (positivity is
+        // association-independent for non-negative sums) and every
+        // value stays inside the pinned reassociation tier.  Forced
+        // lane widths are portable, so this runs on any host — under an
+        // `APHMM_SIMD=scalar` override all three collapse to scalar and
+        // the assertions hold degenerately.
+        let mut rng = XorShift::new(53);
+        let g = dense_band_graph();
+        let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, 12, 4));
+        let scalar = forward_sparse(
+            &g,
+            &obs,
+            &ForwardOptions {
+                gather: GatherKind::DenseTile,
+                simd: SimdPolicy::Scalar,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for simd in [SimdPolicy::F32x4, SimdPolicy::F32x8] {
+            let wide = forward_sparse(
+                &g,
+                &obs,
+                &ForwardOptions { gather: GatherKind::DenseTile, simd, ..Default::default() },
+            )
+            .unwrap();
+            testutil::assert_close(
+                wide.loglik,
+                scalar.loglik,
+                simd::SIMD_REASSOC_RTOL,
+                simd::SIMD_REASSOC_ATOL,
+            );
+            assert_eq!(wide.states_processed, scalar.states_processed, "{simd:?}");
+            assert_eq!(wide.edges_processed, scalar.edges_processed, "{simd:?}");
+            assert_eq!(
+                wide.filter_stats.rows_dense_tile, scalar.filter_stats.rows_dense_tile,
+                "{simd:?}"
+            );
+            for (t, (a, b)) in wide.rows.iter().zip(scalar.rows.iter()).enumerate() {
+                assert_eq!(a.idx, b.idx, "active set diverged at t={t} under {simd:?}");
+                for (x, y) in a.val.iter().zip(b.val.iter()) {
+                    testutil::assert_close(
+                        *x as f64,
+                        *y as f64,
+                        simd::SIMD_REASSOC_RTOL,
+                        simd::SIMD_REASSOC_ATOL,
+                    );
+                }
+            }
+            // Same-width determinism: a second run is bit-identical.
+            let again = forward_sparse(
+                &g,
+                &obs,
+                &ForwardOptions { gather: GatherKind::DenseTile, simd, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(wide.loglik.to_bits(), again.loglik.to_bits(), "{simd:?}");
         }
     }
 

@@ -1,0 +1,648 @@
+//! Striped multi-read forward kernels: `K` same-profile reads advance
+//! through one pass over the shared [`FusedCoeffs`]/tile tables.
+//!
+//! The shape follows CUDAMPF++-style register striping on a CPU: the
+//! per-read dense gather buffers are interleaved read-minor in one
+//! striped buffer (`slot i` of read `r` at `i · K + r`), so the
+//! dense-tile dot product loads contiguous `K`-wide spans and
+//! broadcasts one coefficient — the layout that vectorizes *across*
+//! reads ([`simd::dot_tile_striped`]) — and every coefficient-table
+//! cache line fetched for one read is reused by the other `K − 1`.
+//!
+//! **Reproducibility contract:** per read, the results are
+//! *bit-identical* to running that read alone through
+//! [`forward_sparse_with`]/[`score_sparse_with`] at the same lane
+//! width.  Every per-read decision (window bounds, tile admission,
+//! filter, scaling, death) uses the solo formulas on the read's own
+//! rows; the striped dot product replicates the solo lane assignment
+//! and reduction tree per read; and the CSR fallback stays a scalar
+//! ascending-source walk.  Reads are processed in lock-step timestep
+//! order with **no reordering**, ragged lengths are tail-masked (a
+//! finished or dead read simply stops scattering), and a read that
+//! dies mid-pass yields the same `forward died at t=…` error as the
+//! solo kernel while the rest of the stripe continues.
+//!
+//! Callers pass at most [`MAX_STRIPE`] reads per call; the engine's
+//! batch entry points chunk larger batches.
+
+use super::filter::FilterStats;
+use super::kernels::{ForwardScratch, FusedCoeffs};
+use super::lowering::GatherKind;
+use super::simd::{self, SimdLanes, MAX_STRIPE};
+use super::sparse::{
+    apply_filter, init_row, may_dispatch_tiles, precheck, row_admits_tile, ForwardOptions,
+    ForwardResult, ScoreResult, SparseRow,
+};
+use super::EPS;
+use crate::error::{ApHmmError, Result};
+use crate::phmm::Phmm;
+use crate::seq::Sequence;
+
+/// Per-read outcome of one striped timestep.
+#[derive(Clone, Copy, Default)]
+struct StepOut {
+    /// Unscaled row sum `c` (0.0 for masked slots).
+    c: f32,
+    /// In-window edge count (the workload metric).
+    edges: u64,
+    /// Whether the tile kernel produced this read's row.
+    used_tile: bool,
+}
+
+/// Advance every live read by one timestep: scatter the previous rows
+/// into the striped buffer, gather each read's window (tile-admitted
+/// reads grouped by symbol through [`simd::dot_tile_striped`], the
+/// rest through a per-read scalar CSR walk), and restore the buffer to
+/// all-zero.  `cur[r]` receives read `r`'s unscaled row.
+#[allow(clippy::too_many_arguments)]
+fn striped_step<'a>(
+    coeffs: &FusedCoeffs,
+    striped: &mut [f32],
+    k: usize,
+    live: &[usize],
+    prev_of: impl Fn(usize) -> &'a SparseRow,
+    syms: &[usize; MAX_STRIPE],
+    n: usize,
+    gather: GatherKind,
+    lanes: SimdLanes,
+    cur: &mut [SparseRow],
+) -> [StepOut; MAX_STRIPE] {
+    let low = coeffs.lowering();
+    let tw = low.tile_width();
+    let pad = tw - 1;
+    // Scatter: same slot layout as the solo dense buffer, striped by k.
+    for &r in live {
+        let prev = prev_of(r);
+        for (&i, &v) in prev.idx.iter().zip(prev.val.iter()) {
+            striped[(i as usize + pad) * k + r] = v;
+        }
+    }
+
+    let mut out = [StepOut::default(); MAX_STRIPE];
+    let mut win_lo = [0usize; MAX_STRIPE];
+    let mut win_hi = [0usize; MAX_STRIPE];
+    let mut tile = [false; MAX_STRIPE];
+    for &r in live {
+        let prev = prev_of(r);
+        // Solo window formulas (`gather_row`), per read.
+        let first = prev.idx.first().map(|&i| i as usize).unwrap_or(0);
+        let last = prev.idx.last().map(|&i| i as usize).unwrap_or(0);
+        win_lo[r] = first;
+        win_hi[r] = if prev.idx.is_empty() { 0 } else { (last + low.band).min(n) };
+        tile[r] = row_admits_tile(coeffs, gather, prev, first, last);
+        let row = &mut cur[r];
+        row.idx.clear();
+        row.val.clear();
+        row.idx.reserve(win_hi[r].saturating_sub(win_lo[r]));
+        row.val.reserve(win_hi[r].saturating_sub(win_lo[r]));
+        out[r].edges = (low.in_ptr[win_hi[r]] - low.in_ptr[win_lo[r]]) as u64;
+        out[r].used_tile = tile[r];
+    }
+
+    // Tile-admitted reads, grouped by symbol (the tile table is
+    // per-symbol): one sweep over the group's union window computes all
+    // members' dot products per target; each member consumes only the
+    // targets inside its own window, in ascending order — the same
+    // (value, order) sequence as its solo `gather_tile`.
+    let mut grouped = [false; MAX_STRIPE];
+    for (gi, &r0) in live.iter().enumerate() {
+        if !tile[r0] || grouped[r0] {
+            continue;
+        }
+        let s = syms[r0];
+        let mut members = [0usize; MAX_STRIPE];
+        let mut m = 0usize;
+        let (mut lo, mut hi) = (usize::MAX, 0usize);
+        for &r in &live[gi..] {
+            if tile[r] && !grouped[r] && syms[r] == s {
+                grouped[r] = true;
+                members[m] = r;
+                m += 1;
+                lo = lo.min(win_lo[r]);
+                hi = hi.max(win_hi[r]);
+            }
+        }
+        let tiles = coeffs.tile_coef_for(s);
+        let mut accs = [0.0f32; MAX_STRIPE];
+        for to in lo..hi {
+            let row = &tiles[to * tw..(to + 1) * tw];
+            simd::dot_tile_striped(&striped[to * k..(to + tw) * k], row, k, lanes, &mut accs[..k]);
+            for &r in &members[..m] {
+                if to >= win_lo[r] && to < win_hi[r] {
+                    let acc = accs[r];
+                    if acc > 0.0 {
+                        cur[r].idx.push(to as u32);
+                        cur[r].val.push(acc);
+                        out[r].c += acc;
+                    }
+                }
+            }
+        }
+    }
+
+    // CSR fallback reads: the solo indexed gather, reading this read's
+    // stripe — scalar under every lane policy, so bitwise regardless of
+    // width (matching `gather_csr`).
+    for &r in live {
+        if tile[r] {
+            continue;
+        }
+        let coef = coeffs.in_coef_for(syms[r]);
+        let mut c = 0.0f32;
+        // SAFETY: same invariants as `gather_csr` — validated incoming
+        // CSR, window bounds clamped to n, the striped buffer is sized
+        // `(n + pad) · k` by the entry points, and precheck guarantees
+        // the symbol is < Σ so `coef` covers every slot index.
+        unsafe {
+            for to in win_lo[r]..win_hi[r] {
+                let lo_e = *low.in_ptr.get_unchecked(to) as usize;
+                let hi_e = *low.in_ptr.get_unchecked(to + 1) as usize;
+                let mut acc = 0.0f32;
+                for e in lo_e..hi_e {
+                    let from = *low.in_from.get_unchecked(e) as usize;
+                    acc +=
+                        *striped.get_unchecked((from + pad) * k + r) * *coef.get_unchecked(e);
+                }
+                if acc > 0.0 {
+                    cur[r].idx.push(to as u32);
+                    cur[r].val.push(acc);
+                    c += acc;
+                }
+            }
+        }
+        out[r].c += c;
+    }
+
+    // Restore the all-zero invariant (also for reads that just died —
+    // they were scattered above).
+    for &r in live {
+        let prev = prev_of(r);
+        for &i in prev.idx.iter() {
+            striped[(i as usize + pad) * k + r] = 0.0;
+        }
+    }
+    out
+}
+
+/// Striped multi-read training forward: every read's scaled rows are
+/// materialized, per-read bit-identical to [`forward_sparse_with`] at
+/// the same lane width.  Per-read errors (precheck failures, dead
+/// reads) are reported in the matching output slot; the rest of the
+/// stripe completes normally.
+pub fn forward_striped_with(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    reads: &[&Sequence],
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+) -> Vec<Result<ForwardResult>> {
+    let k = reads.len();
+    assert!(k <= MAX_STRIPE, "striped kernels take at most MAX_STRIPE reads per call");
+    if k == 0 {
+        return Vec::new();
+    }
+    let n = phmm.n_states();
+    let lanes = opts.simd.resolve();
+    scratch.ensure(n + coeffs.gather_pad());
+    scratch.ensure_hist(&opts.filter);
+    scratch.ensure_striped((n + coeffs.gather_pad()) * k);
+    if may_dispatch_tiles(coeffs, opts.gather) {
+        coeffs.tiles_for(phmm);
+    }
+
+    struct Lane {
+        rows: Vec<SparseRow>,
+        scales: Vec<f32>,
+        loglik: f64,
+        stats: FilterStats,
+        states_processed: u64,
+        edges_processed: u64,
+        err: Option<ApHmmError>,
+    }
+
+    let mut lanes_state: Vec<Lane> = Vec::with_capacity(k);
+    for &read in reads {
+        let err = precheck(phmm, coeffs, read).err();
+        let mut lane = Lane {
+            rows: scratch.take_rows_vec(),
+            scales: scratch.take_scales_vec(),
+            loglik: 0.0,
+            stats: FilterStats::default(),
+            states_processed: 0,
+            edges_processed: 0,
+            err,
+        };
+        if lane.err.is_none() {
+            lane.rows.reserve(read.len());
+            lane.scales.reserve(read.len());
+        }
+        lanes_state.push(lane);
+    }
+
+    // t = 0: the solo init row, per read (no striping needed — the
+    // initial distribution involves no gather).
+    for (r, &read) in reads.iter().enumerate() {
+        let lane = &mut lanes_state[r];
+        if lane.err.is_some() {
+            continue;
+        }
+        let mut row = scratch.take_row();
+        match init_row(phmm, coeffs, read.data[0], &mut row) {
+            Ok(c) => {
+                let inv = 1.0 / c;
+                row.val.iter_mut().for_each(|v| *v *= inv);
+                apply_filter(
+                    &opts.filter,
+                    &mut scratch.hist,
+                    &mut row.idx,
+                    &mut row.val,
+                    &mut lane.stats,
+                );
+                lane.states_processed += row.len() as u64;
+                lane.scales.push(c);
+                lane.loglik += (c as f64).ln();
+                lane.rows.push(row);
+            }
+            Err(e) => {
+                scratch.put_row(row);
+                lane.err = Some(e);
+            }
+        }
+    }
+
+    let max_len = reads.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut striped = std::mem::take(&mut scratch.striped);
+    let mut cur: Vec<SparseRow> = (0..k).map(|_| scratch.take_row()).collect();
+    let mut syms = [0usize; MAX_STRIPE];
+    let mut live: Vec<usize> = Vec::with_capacity(k);
+    for t in 1..max_len {
+        live.clear();
+        for (r, &read) in reads.iter().enumerate() {
+            if lanes_state[r].err.is_none() && t < read.len() {
+                live.push(r);
+                syms[r] = read.data[t] as usize;
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+        let step = striped_step(
+            coeffs,
+            &mut striped,
+            k,
+            &live,
+            |r| lanes_state[r].rows.last().expect("live lanes have a previous row"),
+            &syms,
+            n,
+            opts.gather,
+            lanes,
+            &mut cur,
+        );
+        for &r in &live {
+            let StepOut { c, edges, used_tile } = step[r];
+            let lane = &mut lanes_state[r];
+            lane.edges_processed += edges;
+            if used_tile {
+                lane.stats.rows_dense_tile += 1;
+            } else {
+                lane.stats.rows_csr += 1;
+            }
+            if c <= EPS {
+                lane.err = Some(ApHmmError::Numerical(format!("forward died at t={t}")));
+                // The dead lane's partially-built row slot is reused.
+                continue;
+            }
+            let inv = 1.0 / c;
+            let row = &mut cur[r];
+            row.val.iter_mut().for_each(|v| *v *= inv);
+            apply_filter(
+                &opts.filter,
+                &mut scratch.hist,
+                &mut row.idx,
+                &mut row.val,
+                &mut lane.stats,
+            );
+            lane.states_processed += row.len() as u64;
+            lane.scales.push(c);
+            lane.loglik += (c as f64).ln();
+            lane.rows.push(std::mem::take(row));
+        }
+    }
+    scratch.striped = striped;
+    for row in cur {
+        scratch.put_row(row);
+    }
+
+    let mut out = Vec::with_capacity(k);
+    for lane in lanes_state {
+        match lane.err {
+            Some(e) => {
+                // Return the partial buffers to the pools.
+                scratch.recycle(ForwardResult {
+                    rows: lane.rows,
+                    scales: lane.scales,
+                    loglik: 0.0,
+                    filter_stats: FilterStats::default(),
+                    states_processed: 0,
+                    edges_processed: 0,
+                });
+                out.push(Err(e));
+            }
+            None => out.push(Ok(ForwardResult {
+                rows: lane.rows,
+                scales: lane.scales,
+                loglik: lane.loglik,
+                filter_stats: lane.stats,
+                states_processed: lane.states_processed,
+                edges_processed: lane.edges_processed,
+            })),
+        }
+    }
+    out
+}
+
+/// Striped multi-read score fast path: per-read bit-identical to
+/// [`score_sparse_with`] at the same lane width, with only two live
+/// rows per read — memory stays `O(K · active states)` regardless of
+/// read length (the serving layer's Score micro-batch kernel).
+pub fn score_striped_with(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    reads: &[&Sequence],
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+) -> Vec<Result<ScoreResult>> {
+    let k = reads.len();
+    assert!(k <= MAX_STRIPE, "striped kernels take at most MAX_STRIPE reads per call");
+    if k == 0 {
+        return Vec::new();
+    }
+    let n = phmm.n_states();
+    let lanes = opts.simd.resolve();
+    scratch.ensure(n + coeffs.gather_pad());
+    scratch.ensure_hist(&opts.filter);
+    scratch.ensure_striped((n + coeffs.gather_pad()) * k);
+    if may_dispatch_tiles(coeffs, opts.gather) {
+        coeffs.tiles_for(phmm);
+    }
+
+    struct Lane {
+        loglik: f64,
+        stats: FilterStats,
+        states_processed: u64,
+        edges_processed: u64,
+        err: Option<ApHmmError>,
+    }
+
+    let mut lanes_state: Vec<Lane> = reads
+        .iter()
+        .map(|read| Lane {
+            loglik: 0.0,
+            stats: FilterStats::default(),
+            states_processed: 0,
+            edges_processed: 0,
+            err: precheck(phmm, coeffs, read).err(),
+        })
+        .collect();
+
+    let mut prev: Vec<SparseRow> = (0..k).map(|_| scratch.take_row()).collect();
+    let mut cur: Vec<SparseRow> = (0..k).map(|_| scratch.take_row()).collect();
+
+    for (r, &read) in reads.iter().enumerate() {
+        let lane = &mut lanes_state[r];
+        if lane.err.is_some() {
+            continue;
+        }
+        match init_row(phmm, coeffs, read.data[0], &mut prev[r]) {
+            Ok(c) => {
+                let inv = 1.0 / c;
+                prev[r].val.iter_mut().for_each(|v| *v *= inv);
+                apply_filter(
+                    &opts.filter,
+                    &mut scratch.hist,
+                    &mut prev[r].idx,
+                    &mut prev[r].val,
+                    &mut lane.stats,
+                );
+                lane.states_processed += prev[r].len() as u64;
+                lane.loglik += (c as f64).ln();
+            }
+            Err(e) => lane.err = Some(e),
+        }
+    }
+
+    let max_len = reads.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut striped = std::mem::take(&mut scratch.striped);
+    let mut syms = [0usize; MAX_STRIPE];
+    let mut live: Vec<usize> = Vec::with_capacity(k);
+    for t in 1..max_len {
+        live.clear();
+        for (r, &read) in reads.iter().enumerate() {
+            if lanes_state[r].err.is_none() && t < read.len() {
+                live.push(r);
+                syms[r] = read.data[t] as usize;
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+        let step = striped_step(
+            coeffs,
+            &mut striped,
+            k,
+            &live,
+            |r| &prev[r],
+            &syms,
+            n,
+            opts.gather,
+            lanes,
+            &mut cur,
+        );
+        for &r in &live {
+            let StepOut { c, edges, used_tile } = step[r];
+            let lane = &mut lanes_state[r];
+            lane.edges_processed += edges;
+            if used_tile {
+                lane.stats.rows_dense_tile += 1;
+            } else {
+                lane.stats.rows_csr += 1;
+            }
+            if c <= EPS {
+                lane.err = Some(ApHmmError::Numerical(format!("forward died at t={t}")));
+                continue;
+            }
+            let inv = 1.0 / c;
+            let row = &mut cur[r];
+            row.val.iter_mut().for_each(|v| *v *= inv);
+            apply_filter(
+                &opts.filter,
+                &mut scratch.hist,
+                &mut row.idx,
+                &mut row.val,
+                &mut lane.stats,
+            );
+            lane.states_processed += row.len() as u64;
+            lane.loglik += (c as f64).ln();
+            std::mem::swap(&mut prev[r], &mut cur[r]);
+        }
+    }
+    scratch.striped = striped;
+    for row in prev.into_iter().chain(cur) {
+        scratch.put_row(row);
+    }
+
+    lanes_state
+        .into_iter()
+        .map(|lane| match lane.err {
+            Some(e) => Err(e),
+            None => Ok(ScoreResult {
+                loglik: lane.loglik,
+                filter_stats: lane.stats,
+                states_processed: lane.states_processed,
+                edges_processed: lane.edges_processed,
+            }),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baumwelch::filter::FilterConfig;
+    use crate::baumwelch::sparse::{forward_sparse_with, score_sparse_with};
+    use crate::baumwelch::SimdPolicy;
+    use crate::phmm::EcDesignParams;
+    use crate::sim::XorShift;
+    use crate::testutil;
+
+    fn ec_graph(rng: &mut XorShift, len: usize) -> Phmm {
+        let data = testutil::random_seq(rng, len, 4);
+        Phmm::error_correction(&Sequence::from_symbols("r", data), &EcDesignParams::default())
+            .unwrap()
+    }
+
+    fn ragged_reads(rng: &mut XorShift, lens: &[usize]) -> Vec<Sequence> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| {
+                Sequence::from_symbols(format!("r{i}"), testutil::random_seq(rng, l, 4))
+            })
+            .collect()
+    }
+
+    fn assert_rows_bitwise(a: &ForwardResult, b: &ForwardResult, tag: &str) {
+        assert_eq!(a.loglik.to_bits(), b.loglik.to_bits(), "{tag}: loglik");
+        assert_eq!(a.rows.len(), b.rows.len(), "{tag}: row count");
+        assert_eq!(a.states_processed, b.states_processed, "{tag}");
+        assert_eq!(a.edges_processed, b.edges_processed, "{tag}");
+        assert_eq!(a.filter_stats.rows_dense_tile, b.filter_stats.rows_dense_tile, "{tag}");
+        assert_eq!(a.filter_stats.rows_csr, b.filter_stats.rows_csr, "{tag}");
+        for (t, (x, y)) in a.rows.iter().zip(b.rows.iter()).enumerate() {
+            assert_eq!(x.idx, y.idx, "{tag}: active set at t={t}");
+            for (u, v) in x.val.iter().zip(y.val.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{tag}: value at t={t}");
+            }
+        }
+        for (t, (x, y)) in a.scales.iter().zip(b.scales.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: scale at t={t}");
+        }
+    }
+
+    #[test]
+    fn striped_forward_is_bit_identical_to_solo() {
+        // Per read, the striped pass must reproduce the solo pass to
+        // the bit — for every gather kind, every lane width, ragged
+        // lengths, filters on and off, on both a filter-friendly EC
+        // graph and a tile-admitting dense band.
+        let mut rng = XorShift::new(41);
+        let graphs = [ec_graph(&mut rng, 30), testutil::dense_band_phmm(32)];
+        let reads = ragged_reads(&mut rng, &[9, 1, 17, 4, 25, 12, 2, 20]);
+        let read_refs: Vec<&Sequence> = reads.iter().collect();
+        for g in &graphs {
+            for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
+                for policy in [SimdPolicy::Scalar, SimdPolicy::F32x4, SimdPolicy::F32x8] {
+                    for filter in [FilterConfig::None, FilterConfig::Sort { size: 24 }] {
+                        let opts = ForwardOptions { filter, gather, simd: policy };
+                        let coeffs = FusedCoeffs::new(g);
+                        let mut scratch = ForwardScratch::new(g);
+                        let batch =
+                            forward_striped_with(g, &coeffs, &read_refs, &opts, &mut scratch);
+                        assert_eq!(batch.len(), reads.len());
+                        for (read, got) in reads.iter().zip(batch) {
+                            let solo =
+                                forward_sparse_with(g, &coeffs, read, &opts, &mut scratch)
+                                    .unwrap();
+                            let got = got.unwrap();
+                            let tag = format!(
+                                "{:?}/{:?}/{:?}/{}",
+                                gather, policy, filter, read.id
+                            );
+                            assert_rows_bitwise(&got, &solo, &tag);
+                            scratch.recycle(solo);
+                            scratch.recycle(got);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_score_is_bit_identical_to_solo() {
+        let mut rng = XorShift::new(43);
+        let g = testutil::dense_band_phmm(28);
+        let reads = ragged_reads(&mut rng, &[5, 14, 1, 22, 8]);
+        let read_refs: Vec<&Sequence> = reads.iter().collect();
+        for policy in [SimdPolicy::Scalar, SimdPolicy::F32x4, SimdPolicy::F32x8] {
+            let opts = ForwardOptions { simd: policy, ..Default::default() };
+            let coeffs = FusedCoeffs::new(&g);
+            let mut scratch = ForwardScratch::new(&g);
+            let batch = score_striped_with(&g, &coeffs, &read_refs, &opts, &mut scratch);
+            for (read, got) in reads.iter().zip(batch) {
+                let solo = score_sparse_with(&g, &coeffs, read, &opts, &mut scratch).unwrap();
+                let got = got.unwrap();
+                assert_eq!(got.loglik.to_bits(), solo.loglik.to_bits(), "{:?}", read.id);
+                assert_eq!(got.states_processed, solo.states_processed);
+                assert_eq!(got.edges_processed, solo.edges_processed);
+            }
+        }
+    }
+
+    #[test]
+    fn per_read_errors_do_not_poison_the_stripe() {
+        // An invalid read (symbol outside the alphabet) and an empty
+        // read fail in their own slots with the solo error messages;
+        // the surviving reads stay bit-identical to solo runs.
+        let mut rng = XorShift::new(47);
+        let g = ec_graph(&mut rng, 20);
+        let good1 = Sequence::from_symbols("g1", testutil::random_seq(&mut rng, 12, 4));
+        let bad = Sequence::from_symbols("bad", vec![0, 1, 9, 2]);
+        let empty = Sequence::from_symbols("empty", Vec::new());
+        let good2 = Sequence::from_symbols("g2", testutil::random_seq(&mut rng, 7, 4));
+        let reads: Vec<&Sequence> = vec![&good1, &bad, &empty, &good2];
+        let opts = ForwardOptions { simd: SimdPolicy::Scalar, ..Default::default() };
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        let batch = forward_striped_with(&g, &coeffs, &reads, &opts, &mut scratch);
+        assert!(batch[1].is_err(), "alphabet violation must fail its slot");
+        assert!(batch[2].is_err(), "empty read must fail its slot");
+        for (i, read) in [(0usize, &good1), (3usize, &good2)] {
+            let solo = forward_sparse_with(&g, &coeffs, read, &opts, &mut scratch).unwrap();
+            let got = batch[i].as_ref().unwrap();
+            assert_eq!(got.loglik.to_bits(), solo.loglik.to_bits());
+            assert_eq!(got.rows.len(), solo.rows.len());
+            scratch.recycle(solo);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let mut rng = XorShift::new(53);
+        let g = ec_graph(&mut rng, 10);
+        let coeffs = FusedCoeffs::new(&g);
+        let mut scratch = ForwardScratch::new(&g);
+        let opts = ForwardOptions::default();
+        assert!(forward_striped_with(&g, &coeffs, &[], &opts, &mut scratch).is_empty());
+        assert!(score_striped_with(&g, &coeffs, &[], &opts, &mut scratch).is_empty());
+    }
+}

@@ -21,14 +21,28 @@
 //!
 //! **Bitwise contract:** ascending columns are ascending sources, the
 //! exact order the CSR gather sums its slots in, and every padded
-//! column contributes `+0.0` to a non-negative accumulator — so the
-//! tile dot product reproduces the CSR gather's sums *bit for bit*
-//! (`sparse::tests` and `tests/engine_matrix.rs` assert this).  The
-//! block summation order of the E-step is therefore preserved no matter
+//! column contributes `+0.0` to a non-negative accumulator — so under
+//! the scalar lane policy the tile dot product reproduces the CSR
+//! gather's sums *bit for bit* (`sparse::tests` and
+//! `tests/engine_matrix.rs` assert this); wider [`super::simd`] lane
+//! policies reduce the same terms with a fixed lane tree instead
+//! (deterministic per width, tolerance-tier vs scalar).  The block
+//! summation order of the E-step is therefore preserved no matter
 //! which kernel executes each row.  The mapping relies on each `(from,
 //! to)` pair owning exactly one tile cell; `Phmm::validate` enforces
 //! strictly-ascending rows (no parallel edges), so a slot can never
 //! silently overwrite another.
+//!
+//! [`OutTiles`] is the backward-pass mirror (the PR-4 tail): the fused
+//! backward's per-source walk over *outgoing* edges re-lowered into one
+//! fixed-width `f64` row per source state, column `x` being target
+//! `j + x`, with a parallel edge-index row (`u32::MAX` where no edge
+//! exists) so the ξ update still lands on exactly the CSR edge slots.
+//! The backward stays `f64` and strictly scalar — ascending columns are
+//! ascending targets, i.e. exactly the outgoing-CSR edge order, and
+//! no-edge columns contribute `m = 0.0 · β · c⁻¹ = +0.0` to the
+//! non-negative `f64` sums — so the out-tile backward is bit-identical
+//! to the CSR backward under **every** lane policy.
 
 use super::lowering::Lowering;
 use crate::phmm::Phmm;
@@ -84,6 +98,76 @@ impl DenseTiles {
     #[inline]
     pub(super) fn coef_for(&self, s: usize) -> &[f32] {
         &self.coef[s * self.n * self.tile_w..(s + 1) * self.n * self.tile_w]
+    }
+}
+
+/// Per-symbol dense *outgoing* tiles for the tile-granular fused
+/// backward, built from the shared [`Lowering`] by
+/// [`super::FusedCoeffs::out_tiles_for`].
+///
+/// `coef[s][j][x] = α(j → j+x) · e_s(j+x)` in `f64` (bit-identical to
+/// `FusedCoeffs::out_coef` — same operands, same widening multiply) and
+/// `eidx[j][x]` is the outgoing-CSR edge index of `j → j+x`, or
+/// `u32::MAX` where the band holds no edge (those columns carry
+/// `coef = 0.0` and must never touch ξ).
+pub struct OutTiles {
+    n: usize,
+    sigma: usize,
+    tile_w: usize,
+    /// `α · e_s(j+x)` rows, symbol-major `[Σ × N × tile_w]`, `f64`.
+    coef: Vec<f64>,
+    /// Outgoing-edge index per tile cell `[N × tile_w]` (`u32::MAX` =
+    /// no edge).
+    eidx: Vec<u32>,
+}
+
+impl OutTiles {
+    /// Build the outgoing tiles for the current parameters of `phmm`
+    /// over the frozen structure `lowering`.  Cost: `O(Σ · N · tile_w)`
+    /// `f64`s plus the `[N × tile_w]` index map.
+    pub(super) fn new(lowering: &Lowering, phmm: &Phmm) -> OutTiles {
+        let (n, sigma, tile_w) = (lowering.n_states, lowering.sigma, lowering.tile_w);
+        let mut coef = vec![0.0f64; sigma * n * tile_w];
+        let mut eidx = vec![u32::MAX; n * tile_w];
+        for j in 0..n {
+            let lo = phmm.out_ptr[j] as usize;
+            let hi = phmm.out_ptr[j + 1] as usize;
+            for e in lo..hi {
+                let to = phmm.out_to[e] as usize;
+                let x = to - j;
+                debug_assert!(x < tile_w, "edge {j}->{to} exceeds the tile width");
+                eidx[j * tile_w + x] = e as u32;
+                let p = phmm.out_prob[e] as f64;
+                let emit = &phmm.emissions[to * sigma..(to + 1) * sigma];
+                for (s, &e_s) in emit.iter().enumerate() {
+                    coef[s * n * tile_w + j * tile_w + x] = p * e_s as f64;
+                }
+            }
+        }
+        OutTiles { n, sigma, tile_w, coef, eidx }
+    }
+
+    /// Tile row width (`Lowering::tile_width`).
+    #[inline]
+    pub fn tile_width(&self) -> usize {
+        self.tile_w
+    }
+
+    /// `(N, Σ)` the tiles were built for.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.sigma)
+    }
+
+    /// The outgoing tile rows of symbol `s`, row-major `[N × tile_w]`.
+    #[inline]
+    pub(super) fn coef_for(&self, s: usize) -> &[f64] {
+        &self.coef[s * self.n * self.tile_w..(s + 1) * self.n * self.tile_w]
+    }
+
+    /// The edge-index map `[N × tile_w]` (`u32::MAX` = no edge).
+    #[inline]
+    pub(super) fn eidx(&self) -> &[u32] {
+        &self.eidx
     }
 }
 
@@ -160,6 +244,47 @@ mod tests {
                     let from = low.in_from[slot] as usize;
                     let x = pad - (to - from);
                     assert_eq!(csr[slot].to_bits(), tc[to * tw + x].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_tiles_mirror_the_outgoing_tables_bit_for_bit() {
+        // The backward's out-tile lowering carries exactly the fused
+        // out_coef products (same operands, same f64 widening multiply)
+        // at column x = to − j, an edge index everywhere a real edge
+        // lives, and strict zeros elsewhere — the three facts the
+        // tile-granular backward's bitwise argument rests on.
+        let mut rng = XorShift::new(41);
+        let g = ec_graph(&mut rng, 35);
+        let coeffs = FusedCoeffs::new(&g);
+        let ot = OutTiles::new(coeffs.lowering(), &g);
+        assert_eq!(ot.shape(), (g.n_states(), g.sigma()));
+        let tw = ot.tile_width();
+        let mut edges_seen = 0usize;
+        for j in 0..g.n_states() {
+            for e in g.out_ptr[j] as usize..g.out_ptr[j + 1] as usize {
+                let to = g.out_to[e] as usize;
+                let x = to - j;
+                assert_eq!(ot.eidx()[j * tw + x], e as u32, "edge {j}->{to}");
+                edges_seen += 1;
+                for s in 0..g.sigma() {
+                    assert_eq!(
+                        ot.coef_for(s)[j * tw + x].to_bits(),
+                        coeffs.out_coef_for(s)[e].to_bits(),
+                        "edge {e} symbol {s}"
+                    );
+                }
+            }
+        }
+        let mapped = ot.eidx().iter().filter(|&&e| e != u32::MAX).count();
+        assert_eq!(mapped, edges_seen, "eidx map must cover exactly the edge set");
+        for s in 0..g.sigma() {
+            let tc = ot.coef_for(s);
+            for (i, &e) in ot.eidx().iter().enumerate() {
+                if e == u32::MAX {
+                    assert_eq!(tc[i].to_bits(), 0.0f64.to_bits(), "cell {i} symbol {s}");
                 }
             }
         }

@@ -28,6 +28,7 @@ use super::banded::BandedEngine;
 use super::engine::{EngineKind, ExpectationEngine, ReadStats, ReferenceEngine, SparseEngine};
 use super::filter::{FilterConfig, FilterStats};
 use super::lowering::GatherKind;
+use super::simd::{SimdPolicy, MAX_STRIPE};
 use super::sparse::ForwardOptions;
 use crate::cancel::CancelToken;
 use crate::error::{ApHmmError, Result};
@@ -51,8 +52,13 @@ pub struct TrainConfig {
     /// dense engines ignore it).
     pub filter: FilterConfig,
     /// In-window gather kernel policy of the sparse engine (per-row
-    /// density-adaptive by default; every kind is bit-identical).
+    /// density-adaptive by default; every kind is bit-identical under
+    /// the scalar lane policy).
     pub gather: GatherKind,
+    /// SIMD lane-width policy of the sparse engine's dense-tile dot
+    /// product.  Deterministic per width; widths differ only within the
+    /// pinned reassociation tolerance on tile-dispatched rows.
+    pub simd: SimdPolicy,
     /// E-step worker threads (1 = single-threaded).  Any value yields
     /// bit-identical results; see the module docs.
     pub n_workers: usize,
@@ -69,6 +75,7 @@ impl Default for TrainConfig {
             tol: 1e-3,
             filter: FilterConfig::None,
             gather: GatherKind::Adaptive,
+            simd: SimdPolicy::Auto,
             n_workers: 1,
             engine: EngineKind::Sparse,
         }
@@ -132,11 +139,48 @@ fn process_block<E: ExpectationEngine>(
     cancel: &CancelToken,
     scratch: &mut E::Scratch,
 ) -> Result<BlockOut<E::Acc>> {
+    // Drain a buffered stripe through the engine's batch entry point.
+    // The batch contract is bit-identity with the sequential loop, so
+    // buffering never changes the merged sums; per-read errors follow
+    // the shared skip rule (Numerical → skipped, anything else fatal).
+    fn flush<E: ExpectationEngine>(
+        engine: &E,
+        phmm: &Phmm,
+        prep: &E::Prepared,
+        stripe: &mut Vec<&Sequence>,
+        opts: &ForwardOptions,
+        scratch: &mut E::Scratch,
+        out: &mut BlockOut<E::Acc>,
+    ) -> Result<()> {
+        if stripe.is_empty() {
+            return Ok(());
+        }
+        for res in engine.accumulate_batch(phmm, prep, stripe, opts, scratch, &mut out.acc) {
+            match res {
+                Ok(stats) => out.stats.merge(&stats),
+                // Dead read under the current parameters (e.g. a
+                // mis-mapped read whose path probability underflows
+                // the filter) — counted, then skipped, matching
+                // Apollo.  Everything else (shape mismatches, device
+                // failures) is fatal.
+                Err(ApHmmError::Numerical(_)) => out.reads_skipped += 1,
+                Err(e) => return Err(e),
+            }
+        }
+        stripe.clear();
+        Ok(())
+    }
+
     let mut out = BlockOut {
         acc: engine.make_acc(phmm),
         stats: ReadStats::default(),
         reads_skipped: 0,
     };
+    // Admission stays at the per-read boundary (cancellation,
+    // failpoints, empty-skip all observe every read exactly as the
+    // pre-batching loop did); admitted reads are buffered into a
+    // stripe so the engine can run its multi-read kernel.
+    let mut stripe: Vec<&Sequence> = Vec::with_capacity(MAX_STRIPE);
     for read in reads {
         if let Some(cause) = cancel.check() {
             return Err(ApHmmError::Cancelled(cause));
@@ -146,16 +190,12 @@ fn process_block<E: ExpectationEngine>(
             out.reads_skipped += 1;
             continue;
         }
-        match engine.accumulate_read(phmm, prep, read, opts, scratch, &mut out.acc) {
-            Ok(stats) => out.stats.merge(&stats),
-            // Dead read under the current parameters (e.g. a mis-mapped
-            // read whose path probability underflows the filter) —
-            // counted, then skipped, matching Apollo.  Everything else
-            // (shape mismatches, device failures) is fatal.
-            Err(ApHmmError::Numerical(_)) => out.reads_skipped += 1,
-            Err(e) => return Err(e),
+        stripe.push(read);
+        if stripe.len() == MAX_STRIPE {
+            flush(engine, phmm, prep, &mut stripe, opts, scratch, &mut out)?;
         }
     }
+    flush(engine, phmm, prep, &mut stripe, opts, scratch, &mut out)?;
     Ok(out)
 }
 
@@ -289,7 +329,7 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
     pool: &WorkerPool,
     cancel: &CancelToken,
 ) -> Result<TrainResult> {
-    let opts = ForwardOptions { filter: cfg.filter, gather: cfg.gather };
+    let opts = ForwardOptions { filter: cfg.filter, gather: cfg.gather, simd: cfg.simd };
     let mut result = TrainResult {
         loglik_history: Vec::new(),
         iters: 0,

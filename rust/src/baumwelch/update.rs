@@ -8,7 +8,7 @@
 //! [`BwAccumulators::apply`] performs the maximization division once.
 
 use super::kernels::{ForwardScratch, FusedCoeffs};
-use super::sparse::ForwardResult;
+use super::sparse::{self, ForwardOptions, ForwardResult};
 use super::EPS;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -142,7 +142,7 @@ impl BwAccumulators {
     ) -> Result<()> {
         let coeffs = FusedCoeffs::new(phmm);
         let mut scratch = ForwardScratch::new(phmm);
-        self.accumulate_with(phmm, &coeffs, seq, fwd, &mut scratch)
+        self.accumulate_with(phmm, &coeffs, seq, fwd, &mut scratch, &ForwardOptions::default())
     }
 
     /// Memoized fused backward + accumulate pass (paper §4.2–4.3).
@@ -152,6 +152,18 @@ impl BwAccumulators {
     /// symbol by [`FusedCoeffs`], so the inner loop is a single table
     /// gather and two multiplies per live edge).  The backward row pair
     /// lives in `scratch` and is left zeroed for the next observation.
+    ///
+    /// When `opts.gather` can dispatch dense tiles, timesteps whose
+    /// `t+1` forward row is dense enough (same admission rule as the
+    /// forward, [`sparse::row_admits_tile`]) walk the per-symbol
+    /// [`OutTiles`](super::tile::OutTiles) mirror instead of the
+    /// outgoing CSR lists: contiguous `tile_w` slabs of coefficients
+    /// and backward values, no `out_ptr`/`out_to` indirection.  No-edge
+    /// cells carry a `+0.0` coefficient and every backward value is
+    /// non-negative, so the tile walk is *bit-identical* to the CSR
+    /// walk (ascending `to` equals ascending edge order per CSR
+    /// validation) under every SIMD lane policy — the backward stays
+    /// scalar `f64` by contract.
     pub fn accumulate_with(
         &mut self,
         phmm: &Phmm,
@@ -159,6 +171,7 @@ impl BwAccumulators {
         seq: &Sequence,
         fwd: &ForwardResult,
         scratch: &mut ForwardScratch,
+        opts: &ForwardOptions,
     ) -> Result<()> {
         let n = phmm.n_states();
         let t_len = seq.len();
@@ -176,11 +189,22 @@ impl BwAccumulators {
             ));
         }
         let sigma = self.sigma;
+        // Out-tile mirror for the tile-granular backward.  Built lazily
+        // once per freeze, and only when the gather policy can actually
+        // dispatch tiles (CSR-only configurations never pay for it).
+        let out_tiles = if sparse::may_dispatch_tiles(coeffs, opts.gather) {
+            Some(coeffs.out_tiles_for(phmm))
+        } else {
+            None
+        };
         // Dense backward buffers; only active entries are ever nonzero.
         // f64: scaled backward values on low-forward-probability states
         // reach 1/F̂ magnitudes and overflow f32 on badly matching
         // prefixes (mapping slop); f64 keeps the fused pass robust.
-        scratch.ensure(n);
+        // The gather pad lets the tile walk read `b_next[j..j + tile_w]`
+        // without bounds logic: the pad region is never written, so it
+        // stays exactly +0.0 and padded terms are bitwise no-ops.
+        scratch.ensure(n + coeffs.gather_pad());
         let (b_next, b_cur) = scratch.backward_bufs();
         let mut b_next: &mut [f64] = b_next;
         let mut b_cur: &mut [f64] = b_cur;
@@ -200,38 +224,92 @@ impl BwAccumulators {
         for t in (0..t_len - 1).rev() {
             let row = &fwd.rows[t];
             let s_t = seq.data[t] as usize;
-            let oc = coeffs.out_coef_for(seq.data[t + 1] as usize);
+            let s_next = seq.data[t + 1] as usize;
+            let oc = coeffs.out_coef_for(s_next);
             let c_next = fwd.scales[t + 1] as f64;
             let inv_c = 1.0 / c_next;
-            for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
-                let j = j as usize;
-                let fj = fj as f64;
-                let lo = phmm.out_ptr[j] as usize;
-                let hi = phmm.out_ptr[j + 1] as usize;
-                let mut bsum = 0.0f64;
-                // SAFETY: CSR invariants are checked by Phmm::validate;
-                // `oc`, `xi` and the backward buffers all cover every
-                // edge/state index of the validated graph, and the
-                // accumulator shapes are pinned to the graph in `new`.
-                unsafe {
-                    for e in lo..hi {
-                        let to = *phmm.out_to.get_unchecked(e) as usize;
-                        let bn = *b_next.get_unchecked(to);
-                        if bn == 0.0 {
-                            continue;
+            // Tile admission mirrors the forward dispatcher: the walk
+            // below reads `b_next` over the support of row `t+1`, so
+            // that row's density is what decides whether padded slab
+            // reads beat the CSR indirection.
+            let row_next = &fwd.rows[t + 1];
+            let use_tile = match (out_tiles, row_next.idx.first(), row_next.idx.last()) {
+                (Some(_), Some(&first), Some(&last)) => sparse::row_admits_tile(
+                    coeffs,
+                    opts.gather,
+                    row_next,
+                    first as usize,
+                    last as usize,
+                ),
+                _ => false,
+            };
+            if use_tile {
+                let ot = out_tiles.expect("use_tile implies out_tiles");
+                let tw = ot.tile_width();
+                let oc_t = ot.coef_for(s_next);
+                let eix = ot.eidx();
+                for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
+                    let j = j as usize;
+                    let fj = fj as f64;
+                    let base = j * tw;
+                    let mut bsum = 0.0f64;
+                    // SAFETY: `oc_t`/`eix` span `n_states × tile_w`
+                    // for the validated graph, `b_next` is padded to
+                    // `n + tile_w - 1` above, and stored edge indices
+                    // are < n_edges by construction (u32::MAX marks
+                    // no-edge cells).  Cells without an edge carry a
+                    // +0.0 coefficient: `bsum += +0.0` and skipping
+                    // the ξ write keep the sums bit-identical to the
+                    // CSR walk in ascending `to` order.
+                    unsafe {
+                        for x in 0..tw {
+                            let m = *oc_t.get_unchecked(base + x)
+                                * *b_next.get_unchecked(j + x)
+                                * inv_c;
+                            bsum += m;
+                            let e = *eix.get_unchecked(base + x);
+                            if e != u32::MAX {
+                                *self.xi.get_unchecked_mut(e as usize) += fj * m;
+                            }
                         }
-                        // Shared product (memoized):
-                        // α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
-                        let m = *oc.get_unchecked(e) * bn * inv_c;
-                        bsum += m;
-                        *self.xi.get_unchecked_mut(e) += fj * m;
                     }
+                    b_cur[j] = bsum;
+                    let gamma = fj * bsum;
+                    self.trans_den[j] += gamma;
+                    self.gamma_den[j] += gamma;
+                    self.e_num[j * sigma + s_t] += gamma;
                 }
-                b_cur[j] = bsum;
-                let gamma = fj * bsum;
-                self.trans_den[j] += gamma;
-                self.gamma_den[j] += gamma;
-                self.e_num[j * sigma + s_t] += gamma;
+            } else {
+                for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
+                    let j = j as usize;
+                    let fj = fj as f64;
+                    let lo = phmm.out_ptr[j] as usize;
+                    let hi = phmm.out_ptr[j + 1] as usize;
+                    let mut bsum = 0.0f64;
+                    // SAFETY: CSR invariants are checked by Phmm::validate;
+                    // `oc`, `xi` and the backward buffers all cover every
+                    // edge/state index of the validated graph, and the
+                    // accumulator shapes are pinned to the graph in `new`.
+                    unsafe {
+                        for e in lo..hi {
+                            let to = *phmm.out_to.get_unchecked(e) as usize;
+                            let bn = *b_next.get_unchecked(to);
+                            if bn == 0.0 {
+                                continue;
+                            }
+                            // Shared product (memoized):
+                            // α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
+                            let m = *oc.get_unchecked(e) * bn * inv_c;
+                            bsum += m;
+                            *self.xi.get_unchecked_mut(e) += fj * m;
+                        }
+                    }
+                    b_cur[j] = bsum;
+                    let gamma = fj * bsum;
+                    self.trans_den[j] += gamma;
+                    self.gamma_den[j] += gamma;
+                    self.e_num[j * sigma + s_t] += gamma;
+                }
             }
             // Swap buffers; clear what we wrote at t+1.
             for &i in &fwd.rows[t + 1].idx {
@@ -389,6 +467,48 @@ mod tests {
             let after = forward_sparse(&g, &obs, &ForwardOptions::default()).unwrap().loglik;
             assert!(after >= before - 1e-3, "EM decreased loglik: {before} -> {after}");
         });
+    }
+
+    #[test]
+    fn tile_backward_is_bit_identical_to_csr_backward() {
+        use crate::baumwelch::sparse::GatherKind;
+        use crate::baumwelch::SimdPolicy;
+        // Dense-band graph admits the out-tile walk; one shared forward
+        // feeds both backward dispatches so any difference is the
+        // backward kernel's own doing.
+        let mut rng = XorShift::new(99);
+        let g = testutil::dense_band_phmm(24);
+        for obs_len in [1usize, 2, 7, 16] {
+            let obs = Sequence::from_symbols("o", testutil::random_seq(&mut rng, obs_len, 4));
+            let opts_csr = ForwardOptions {
+                gather: GatherKind::Csr,
+                simd: SimdPolicy::Scalar,
+                ..Default::default()
+            };
+            let opts_tile = ForwardOptions {
+                gather: GatherKind::DenseTile,
+                simd: SimdPolicy::Scalar,
+                ..Default::default()
+            };
+            let fwd = forward_sparse(&g, &obs, &opts_csr).unwrap();
+            let coeffs = FusedCoeffs::new(&g);
+            let mut scratch = ForwardScratch::new(&g);
+
+            let mut a_csr = BwAccumulators::new(&g);
+            a_csr
+                .accumulate_with(&g, &coeffs, &obs, &fwd, &mut scratch, &opts_csr)
+                .unwrap();
+            let mut a_tile = BwAccumulators::new(&g);
+            a_tile
+                .accumulate_with(&g, &coeffs, &obs, &fwd, &mut scratch, &opts_tile)
+                .unwrap();
+
+            assert_eq!(a_csr.xi, a_tile.xi, "xi diverged at obs_len={obs_len}");
+            assert_eq!(a_csr.trans_den, a_tile.trans_den);
+            assert_eq!(a_csr.e_num, a_tile.e_num);
+            assert_eq!(a_csr.gamma_den, a_tile.gamma_den);
+            assert_eq!(a_csr.total_loglik.to_bits(), a_tile.total_loglik.to_bits());
+        }
     }
 
     #[test]

@@ -403,7 +403,7 @@ mod tests {
             FilterConfig::histogram_default(),
         ] {
             for gather in [GatherKind::Adaptive, GatherKind::Csr, GatherKind::DenseTile] {
-                let opts = ForwardOptions { filter, gather };
+                let opts = ForwardOptions { filter, gather, ..Default::default() };
                 // A fresh freeze performed "for" this runtime config...
                 let fresh = PreparedAny::freeze(EngineKind::Sparse, &g).unwrap();
                 let mut fs = fresh.make_scratch(&g);

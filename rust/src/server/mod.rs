@@ -77,7 +77,7 @@ use crate::coordinator::{Metrics, MetricsSummary};
 use crate::error::{ApHmmError, CancelCause, Result};
 use crate::phmm::{EcDesignParams, Phmm};
 use crate::pool::{panic_message, WorkerPool};
-use crate::seq::Alphabet;
+use crate::seq::{Alphabet, Sequence};
 
 use session::ExecCtx;
 
@@ -597,12 +597,13 @@ fn worker_loop(shared: &Shared) {
     while let Some((tenant, job)) = shared.queue.pop() {
         if let Request::Score { profile, .. } = &job.body {
             // Micro-batch: pull further Score requests for the same
-            // (profile, engine) so they run back-to-back through one
-            // frozen table and a warm scratch, instead of interleaving
-            // with unrelated profiles across workers.  The pull goes
-            // through the same tenant accounting as pop: every batched
-            // item charges (and must release) its own tenant's
-            // in-flight slot, and items of at-cap tenants are skipped.
+            // (profile, engine) so they run together through one frozen
+            // table — as one striped multi-read pass when more than one
+            // job is pulled (see `process_score_batch`), with a warm
+            // scratch either way.  The pull goes through the same
+            // tenant accounting as pop: every batched item charges (and
+            // must release) its own tenant's in-flight slot, and items
+            // of at-cap tenants are skipped.
             let name = profile.clone();
             let engine = job.engine;
             let mut batch = vec![(tenant, job)];
@@ -616,13 +617,119 @@ fn worker_loop(shared: &Shared) {
                     None => break,
                 }
             }
-            for (tenant, j) in batch {
+            if batch.len() == 1 {
+                let (tenant, j) = batch.pop().unwrap();
                 process_one(shared, &tenant, j, &mut scratch);
                 shared.queue.finish(&tenant);
+            } else {
+                process_score_batch(shared, &name, engine, batch, &mut scratch);
             }
         } else {
             process_one(shared, &tenant, job, &mut scratch);
             shared.queue.finish(&tenant);
+        }
+    }
+}
+
+/// Execute a micro-batch of same-(profile, engine) `Score` jobs in one
+/// striped multi-read pass ([`session::execute_score_batch`]).  Per-job
+/// semantics match running [`process_one`] on each job in batch order:
+/// queue-side cancellation is checked per job before execution (an
+/// expired job answers a typed `Failure` and never runs — jobs
+/// cancelled *mid-pass* still complete, same as mid-`execute`
+/// cancellation of a solo `Score`, which has no in-engine cancellation
+/// point either); one read's numerical death is that job's `Error`
+/// alone; a panic answers every in-pass job with
+/// [`FailureCause::Panicked`] and drops the worker's scratch, and the
+/// worker survives.  Per-job results are bit-identical to solo
+/// execution at the same lane width (the striped kernel contract).
+fn process_score_batch(
+    shared: &Shared,
+    profile: &str,
+    engine: EngineKind,
+    batch: Vec<(String, Job)>,
+    scratch: &mut ScratchAny,
+) {
+    let mut live: Vec<(String, Job)> = Vec::with_capacity(batch.len());
+    for (tenant, job) in batch {
+        if let Some(cause) = job.cancel.check() {
+            respond(
+                shared,
+                &tenant,
+                job,
+                ResponseBody::Failure {
+                    cause: failure_cause_of(cause),
+                    message: format!("{cause} before execution started"),
+                },
+                ReadStats::default(),
+            );
+            shared.queue.finish(&tenant);
+        } else {
+            live.push((tenant, job));
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let ctx = ExecCtx {
+        registry: &shared.registry,
+        cache: &shared.cache,
+        pool: &shared.pool,
+        cfg: &shared.cfg,
+    };
+    // Same fault-isolation stance as `process_one`: the striped pass
+    // runs under `catch_unwind`, and an unwind condemns only this
+    // batch, never the worker.
+    let outcome = {
+        let reads: Vec<&Sequence> = live
+            .iter()
+            .map(|(_, j)| match &j.body {
+                Request::Score { read, .. } => read,
+                _ => unreachable!("score micro-batch holds only Score jobs"),
+            })
+            .collect();
+        catch_unwind(AssertUnwindSafe(|| {
+            session::execute_score_batch(&ctx, engine, profile, &reads, scratch)
+        }))
+    };
+    match outcome {
+        Ok(results) => {
+            for ((tenant, job), res) in live.into_iter().zip(results) {
+                let (body, stats) = match res {
+                    Ok(done) => done,
+                    Err(ApHmmError::Cancelled(cause)) => (
+                        ResponseBody::Failure {
+                            cause: failure_cause_of(cause),
+                            message: cause.to_string(),
+                        },
+                        ReadStats::default(),
+                    ),
+                    Err(e) => {
+                        (ResponseBody::Error { message: e.to_string() }, ReadStats::default())
+                    }
+                };
+                respond(shared, &tenant, job, body, stats);
+                shared.queue.finish(&tenant);
+            }
+        }
+        Err(payload) => {
+            // The unwound pass may have left the warm scratch
+            // half-updated; drop it before the next request.
+            *scratch = ScratchAny::None;
+            let message = panic_message(payload.as_ref());
+            for (tenant, job) in live {
+                respond(
+                    shared,
+                    &tenant,
+                    job,
+                    ResponseBody::Failure {
+                        cause: FailureCause::Panicked,
+                        message: message.clone(),
+                    },
+                    ReadStats::default(),
+                );
+                shared.queue.finish(&tenant);
+            }
         }
     }
 }
@@ -688,6 +795,12 @@ fn process_one(shared: &Shared, tenant: &str, job: Job, scratch: &mut ScratchAny
             }
         }
     };
+    respond(shared, tenant, job, body, stats);
+}
+
+/// Record metrics for one completed job and send its reply.  The
+/// shared tail of [`process_one`] and [`process_score_batch`].
+fn respond(shared: &Shared, tenant: &str, job: Job, body: ResponseBody, stats: ReadStats) {
     let latency_ns = job.enqueued.elapsed().as_nanos() as u64;
     match &body {
         ResponseBody::Error { .. } => {

@@ -393,8 +393,85 @@ impl ExecCtx<'_> {
     }
 
     fn opts(&self) -> ForwardOptions {
-        ForwardOptions { filter: self.cfg.train.filter, gather: self.cfg.train.gather }
+        ForwardOptions {
+            filter: self.cfg.train.filter,
+            gather: self.cfg.train.gather,
+            simd: self.cfg.train.simd,
+        }
     }
+}
+
+/// Execute a micro-batch of `Score` requests against **one** profile on
+/// the calling worker, in one striped pass over the frozen coefficient
+/// tables (see [`crate::baumwelch::score_striped_with`]).
+///
+/// Per-read results are bit-identical to executing each request alone
+/// through [`execute`] at the same lane width: the batch contract of
+/// [`crate::baumwelch::ExpectationEngine::score_batch`] guarantees the
+/// numerics, and this function reproduces `execute`'s per-request
+/// response assembly (log-odds, stats, `cache_hit`) slot by slot.  One
+/// `Err` slot (e.g. a numerically dead read) does not poison the other
+/// slots.  `forward_ns` is the striped wall time attributed evenly
+/// across the batch — per-read forward time is not separable inside a
+/// striped pass.
+pub(crate) fn execute_score_batch(
+    ctx: &ExecCtx<'_>,
+    engine: EngineKind,
+    profile: &str,
+    reads: &[&Sequence],
+    scratch: &mut ScratchAny,
+) -> Vec<Result<(ResponseBody, ReadStats)>> {
+    let entry = match ctx.resolve(profile) {
+        Ok(entry) => entry,
+        Err(e) => {
+            return reads
+                .iter()
+                .map(|_| Err(ApHmmError::Config(e.to_string())))
+                .collect()
+        }
+    };
+    let (prepared, cache_hit) = match ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)
+    {
+        Ok(pair) => pair,
+        Err(e) => {
+            return reads
+                .iter()
+                .map(|_| Err(ApHmmError::Config(e.to_string())))
+                .collect()
+        }
+    };
+    let t0 = Instant::now();
+    let results = prepared.score_batch(&entry.phmm, reads, &ctx.opts(), scratch);
+    let per_read_ns = t0.elapsed().as_nanos() / reads.len().max(1) as u128;
+    results
+        .into_iter()
+        .zip(reads)
+        .enumerate()
+        .map(|(i, (res, read))| {
+            let res = res?;
+            let stats = ReadStats {
+                forward_ns: per_read_ns,
+                filter_stats: res.filter_stats,
+                states_processed: res.states_processed,
+                edges_processed: res.edges_processed,
+                timesteps: read.len() as u64,
+                ..Default::default()
+            };
+            let log_odds = apps::log_odds_score(res.loglik, read.len(), entry.phmm.sigma());
+            // The first slot of a batch pays the freeze on a cold
+            // cache; later slots always hit, exactly as a sequential
+            // loop would report.
+            Ok((
+                ResponseBody::Score {
+                    profile: entry.name.clone(),
+                    loglik: res.loglik,
+                    log_odds,
+                    cache_hit: cache_hit || i > 0,
+                },
+                stats,
+            ))
+        })
+        .collect()
 }
 
 /// Execute one request on the calling worker.  Read-only requests pull

@@ -9,7 +9,8 @@
 
 use aphmm::baumwelch::{
     train, train_in, BandedCoeffs, BandedEngine, EngineKind, ExpectationEngine, FilterConfig,
-    ForwardOptions, GatherKind, ReadStats, SparseEngine, TrainConfig,
+    ForwardOptions, GatherKind, ReadStats, SimdPolicy, SparseEngine, TrainConfig,
+    SIMD_REASSOC_ATOL, SIMD_REASSOC_RTOL,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::pool::WorkerPool;
@@ -118,7 +119,10 @@ fn gather_matrix_tile_vs_csr_bit_identical_merged_sums() {
     for filter in [FilterConfig::None, FilterConfig::histogram_default()] {
         let mut baseline: Option<(f64, Vec<u64>, Vec<u64>)> = None;
         for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
-            let opts = ForwardOptions { filter, gather };
+            // Scalar lanes: cross-gather bit-identity is a scalar-sum
+            // guarantee; wider lane widths reassociate tile rows and
+            // are covered by `lane_width_parity_matrix_for_training`.
+            let opts = ForwardOptions { filter, gather, simd: SimdPolicy::Scalar };
             let mut scratch = engine.make_scratch(&g);
             let mut acc = engine.make_acc(&g);
             let mut stats = ReadStats::default();
@@ -172,6 +176,7 @@ fn gather_matrix_training_is_bit_identical_end_to_end() {
                 tol: 0.0,
                 gather,
                 n_workers,
+                simd: SimdPolicy::Scalar,
                 ..Default::default()
             };
             let mut g =
@@ -184,6 +189,100 @@ fn gather_matrix_training_is_bit_identical_end_to_end() {
                     assert_eq!(&g.out_prob, out_prob, "{gather:?} x{n_workers}");
                     assert_eq!(&g.emissions, emissions, "{gather:?} x{n_workers}");
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_width_parity_matrix_for_training() {
+    // The explicit-SIMD reproducibility contract through the full
+    // training loop.  CSR-gather rows are summed scalar under EVERY
+    // lane policy, so CSR training is bit-identical across
+    // Scalar/F32x4/F32x8.  With the dense-tile kernel forced, wider
+    // lanes reassociate the tile dot products: each lane width is
+    // deterministic in itself (worker count never matters, bitwise),
+    // and its drift against the scalar ascending-order sum stays
+    // inside the SIMD_REASSOC tolerance tier — the one place in the
+    // engine where reassociation is unavoidable.
+    let (reference_seq, reads) = scenario(109, 80, 9);
+    for gather in [GatherKind::Csr, GatherKind::DenseTile] {
+        let mut scalar_anchor: Option<Vec<f64>> = None;
+        for simd in [SimdPolicy::Scalar, SimdPolicy::F32x4, SimdPolicy::F32x8] {
+            let mut per_width: Option<(Vec<f64>, Vec<f32>)> = None;
+            for n_workers in [1usize, 4] {
+                let cfg = TrainConfig {
+                    max_iters: 3,
+                    tol: 0.0,
+                    gather,
+                    simd,
+                    n_workers,
+                    ..Default::default()
+                };
+                let mut g = Phmm::error_correction(&reference_seq, &EcDesignParams::default())
+                    .unwrap();
+                let res = train(&mut g, &reads, &cfg).unwrap();
+                match &per_width {
+                    None => {
+                        per_width = Some((res.loglik_history.clone(), g.emissions.clone()))
+                    }
+                    Some((hist, emissions)) => {
+                        assert_eq!(
+                            &res.loglik_history, hist,
+                            "{gather:?}/{simd:?} not deterministic at {n_workers} workers"
+                        );
+                        assert_eq!(&g.emissions, emissions, "{gather:?}/{simd:?} x{n_workers}");
+                    }
+                }
+                match (&scalar_anchor, gather) {
+                    (None, _) => scalar_anchor = Some(res.loglik_history.clone()),
+                    (Some(anchor), GatherKind::Csr) => assert_eq!(
+                        &res.loglik_history, anchor,
+                        "CSR gather must be lane-width independent ({simd:?})"
+                    ),
+                    (Some(anchor), _) => {
+                        for (&got, &want) in res.loglik_history.iter().zip(anchor.iter()) {
+                            testutil::assert_close(
+                                got,
+                                want,
+                                SIMD_REASSOC_RTOL,
+                                SIMD_REASSOC_ATOL,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn striped_batch_scoring_matches_one_at_a_time() {
+    // The striped multi-read kernel contract at the engine boundary:
+    // K-read `score_batch` is per-read bit-identical to scoring each
+    // read alone, for every gather kind and lane width.
+    let (reference_seq, reads) = scenario(113, 70, 10);
+    let g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+    let engine = SparseEngine;
+    let prep = engine.prepare(&g).unwrap();
+    let refs: Vec<&Sequence> = reads.iter().collect();
+    for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
+        for simd in [SimdPolicy::Scalar, SimdPolicy::F32x4, SimdPolicy::F32x8] {
+            let opts = ForwardOptions { filter: FilterConfig::None, gather, simd };
+            let mut batch_scratch = engine.make_scratch(&g);
+            let batch = engine.score_batch(&g, &prep, &refs, &opts, &mut batch_scratch);
+            assert_eq!(batch.len(), reads.len());
+            let mut solo_scratch = engine.make_scratch(&g);
+            for (read, got) in reads.iter().zip(&batch) {
+                let want = engine.score(&g, &prep, read, &opts, &mut solo_scratch).unwrap();
+                let got = got.as_ref().unwrap();
+                assert_eq!(
+                    want.loglik.to_bits(),
+                    got.loglik.to_bits(),
+                    "striped scoring diverged from solo under {gather:?}/{simd:?}"
+                );
+                assert_eq!(got.states_processed, want.states_processed);
+                assert_eq!(got.edges_processed, want.edges_processed);
             }
         }
     }

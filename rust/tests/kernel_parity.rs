@@ -9,7 +9,7 @@
 use aphmm::baumwelch::{
     forward_sparse, forward_sparse_with, log_likelihood, reference, score_sparse_with,
     train, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch, FusedCoeffs,
-    TrainConfig,
+    SimdPolicy, TrainConfig,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::seq::Sequence;
@@ -30,12 +30,26 @@ fn to_dense(row: &aphmm::baumwelch::SparseRow, n: usize) -> Vec<f64> {
     dense
 }
 
+// Scalar lanes throughout: this suite's contract is "bit-for-bit-ish
+// vs the pre-memoization reference", whose sums are scalar.  Wider
+// lane widths (and their reassociation tolerance tier) are covered by
+// the lane parity matrix in `engine_matrix.rs` and the in-crate simd
+// tests.
 fn filter_cases() -> [ForwardOptions; 3] {
     [
-        ForwardOptions { filter: FilterConfig::None, ..Default::default() },
-        ForwardOptions { filter: FilterConfig::Sort { size: 40 }, ..Default::default() },
+        ForwardOptions {
+            filter: FilterConfig::None,
+            simd: SimdPolicy::Scalar,
+            ..Default::default()
+        },
+        ForwardOptions {
+            filter: FilterConfig::Sort { size: 40 },
+            simd: SimdPolicy::Scalar,
+            ..Default::default()
+        },
         ForwardOptions {
             filter: FilterConfig::Histogram { size: 40, bins: 128 },
+            simd: SimdPolicy::Scalar,
             ..Default::default()
         },
     ]
@@ -91,7 +105,7 @@ fn memoized_accumulate_matches_reference() {
             let mut acc_ref = BwAccumulators::new(&g);
             reference::accumulate_reference(&mut acc_ref, &g, &obs, &fwd).unwrap();
             let mut acc_new = BwAccumulators::new(&g);
-            acc_new.accumulate_with(&g, &coeffs, &obs, &fwd, &mut scratch).unwrap();
+            acc_new.accumulate_with(&g, &coeffs, &obs, &fwd, &mut scratch, &opts).unwrap();
             testutil::assert_all_close(&acc_new.xi, &acc_ref.xi, 1e-12, 1e-300);
             testutil::assert_all_close(&acc_new.trans_den, &acc_ref.trans_den, 1e-12, 1e-300);
             testutil::assert_all_close(&acc_new.e_num, &acc_ref.e_num, 1e-12, 1e-300);
@@ -119,7 +133,7 @@ fn scratch_backward_buffers_self_clean() {
         for (i, read) in reads.iter().enumerate() {
             let fwd = forward_sparse_with(&g, &coeffs, read, &opts, &mut scratch).unwrap();
             let mut acc = BwAccumulators::new(&g);
-            acc.accumulate_with(&g, &coeffs, read, &fwd, &mut scratch).unwrap();
+            acc.accumulate_with(&g, &coeffs, read, &fwd, &mut scratch, &opts).unwrap();
             scratch.recycle(fwd);
             if round == 0 {
                 first.push(acc.xi.clone());

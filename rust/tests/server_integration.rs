@@ -811,6 +811,73 @@ fn cancelled_ticket_fails_typed_and_server_keeps_serving() {
     server.shutdown(true);
 }
 
+/// Tentpole (striped micro-batch): Score responses are bit-identical
+/// whether the worker executes jobs one at a time (`microbatch = 1`)
+/// or fuses same-profile jobs into one striped multi-read pass
+/// (`microbatch = 8`), and both match a serial replay with the library
+/// primitives — the per-read bit-identity contract of the striped
+/// kernels carried through the whole serving stack.  Whatever mix of
+/// singleton and batched executions the queue timing produces, exactly
+/// one response reports a cache miss (the first executed request
+/// freezes; every later slot — batched or not — reuses the tables).
+#[test]
+fn striped_microbatch_scoring_is_bit_identical_to_singleton_execution() {
+    let mut rng = XorShift::new(213);
+    let reference = dna(&mut rng, "chr1", 60);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let reads = reads_of(&mut rng, &reference, 20);
+    let expected: Vec<u64> = {
+        let prepared = PreparedAny::freeze(EngineKind::Sparse, &phmm).unwrap();
+        let mut scratch = prepared.make_scratch(&phmm);
+        reads
+            .iter()
+            .map(|r| {
+                prepared
+                    .score(&phmm, r, &ForwardOptions::default(), &mut scratch)
+                    .unwrap()
+                    .loglik
+                    .to_bits()
+            })
+            .collect()
+    };
+    for microbatch in [1usize, 8] {
+        let mut server = Server::start(ServerConfig {
+            n_workers: 1,
+            queue_depth: 32,
+            microbatch,
+            ..Default::default()
+        });
+        server.register_profile("chr1", phmm.clone());
+        let tickets: Vec<_> = reads
+            .iter()
+            .map(|r| {
+                server
+                    .submit(None, Request::Score { profile: "chr1".into(), read: r.clone() })
+                    .unwrap()
+            })
+            .collect();
+        let mut misses = 0usize;
+        for (i, t) in tickets.into_iter().enumerate() {
+            match t.wait().body {
+                ResponseBody::Score { loglik, cache_hit, .. } => {
+                    assert_eq!(
+                        loglik.to_bits(),
+                        expected[i],
+                        "read {i} diverged from serial replay (microbatch={microbatch})"
+                    );
+                    if !cache_hit {
+                        misses += 1;
+                    }
+                }
+                other => panic!("read {i} failed (microbatch={microbatch}): {other:?}"),
+            }
+        }
+        assert_eq!(misses, 1, "exactly one freeze (microbatch={microbatch})");
+        assert_eq!(server.cache_stats().misses, 1);
+        server.shutdown(true);
+    }
+}
+
 /// The wire protocol end-to-end over an in-memory session: register,
 /// score twice (second is a cache hit), stats, quit.
 #[test]
