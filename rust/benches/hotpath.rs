@@ -25,9 +25,11 @@ use aphmm::baumwelch::{
     BandedCoeffs, BandedEngine, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch,
     FusedCoeffs, GatherKind, SimdPolicy, MAX_STRIPE,
 };
+use aphmm::coordinator::StageSummary;
 use aphmm::seq::Sequence;
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::runtime::{ArtifactStore, XlaBandedEngine};
+use aphmm::server::{Request, Server, ServerConfig};
 
 /// One comparison row of the machine-readable bench report.
 struct BenchRow {
@@ -38,7 +40,7 @@ struct BenchRow {
 
 /// Serialize the rows as `BENCH_hotpath.json` (no serde: the crate is
 /// dependency-free, and the schema is flat).
-fn write_bench_json(rows: &[BenchRow], short: bool, chunk: usize) {
+fn write_bench_json(rows: &[BenchRow], stages: &[StageSummary], short: bool, chunk: usize) {
     let mut s = String::from("{\n");
     s.push_str("  \"bench\": \"hotpath\",\n");
     s.push_str(&format!("  \"short_mode\": {short},\n"));
@@ -53,6 +55,24 @@ fn write_bench_json(rows: &[BenchRow], short: bool, chunk: usize) {
             r.baseline_s * 1e9,
             r.new_s * 1e9,
             r.baseline_s / r.new_s
+        ));
+    }
+    s.push_str("  ],\n");
+    // Serving-layer stage accounting (the observability PR): one entry
+    // per `aphmm_stage_seconds{stage=...}` family member, from the same
+    // MetricsSummary the `metrics` wire command renders.  CI greps for
+    // these rows to pin the stage histograms end-to-end.
+    s.push_str("  \"stages\": [\n");
+    for (i, st) in stages.iter().enumerate() {
+        let sep = if i + 1 == stages.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"stage\": \"{}\", \"count\": {}, \"total_ns\": {:.0}, \
+             \"p50_ms\": {:.4}, \"p99_ms\": {:.4}}}{sep}\n",
+            st.stage,
+            st.count,
+            st.total_seconds * 1e9,
+            st.p50_ms,
+            st.p99_ms
         ));
     }
     s.push_str("  ]\n}\n");
@@ -462,5 +482,55 @@ fn main() {
         println!("xla bw_sums: skipped (run `make artifacts`)");
     }
 
-    write_bench_json(&rows, short, chunk);
+    // === serving-layer stage accounting: drive a tiny in-process
+    // === server through the striped Score path plus one training
+    // === request, then report the per-stage timing rows the `metrics`
+    // === wire command exposes (queue_wait / cache_freeze / forward /
+    // === backward / update).  CI greps these out of the JSON.
+    common::banner("serving stage accounting (per-stage histograms)");
+    let stage_scn = common::ec_scenario(5, if short { 80 } else { 200 }, MAX_STRIPE);
+    let profile =
+        Phmm::error_correction(&stage_scn.reference, &EcDesignParams::default()).unwrap();
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        microbatch: MAX_STRIPE,
+        ..Default::default()
+    });
+    server.register_profile("bench", profile);
+    let tickets: Vec<_> = stage_scn
+        .reads
+        .iter()
+        .map(|r| {
+            server
+                .submit(None, Request::Score { profile: "bench".into(), read: r.clone() })
+                .unwrap()
+        })
+        .collect();
+    let correct = server
+        .submit(
+            None,
+            Request::Correct {
+                reference: stage_scn.reference.clone(),
+                reads: stage_scn.reads.clone(),
+            },
+        )
+        .unwrap();
+    for t in tickets {
+        t.wait();
+    }
+    correct.wait();
+    let summary = server.metrics_summary();
+    server.shutdown(true);
+    for st in &summary.stages {
+        println!(
+            "stage {:<13} count={:<4} total={:>9.3} ms  p50={:>8.3} ms  p99={:>8.3} ms",
+            st.stage,
+            st.count,
+            st.total_seconds * 1e3,
+            st.p50_ms,
+            st.p99_ms
+        );
+    }
+
+    write_bench_json(&rows, &summary.stages, short, chunk);
 }

@@ -108,6 +108,14 @@ pub struct ReadStats {
     pub forward_ns: u128,
     /// Fused backward + update nanoseconds.
     pub backward_update_ns: u128,
+    /// Parameter-update (M-step) nanoseconds.  Nonzero only for
+    /// training requests; the serving layer copies
+    /// [`crate::baumwelch::TrainResult::maximize_ns`] here so the
+    /// observability layer sees the full §3 stage triplet.
+    pub update_ns: u128,
+    /// Nanoseconds spent freezing prepared tables on a cache miss
+    /// (0 on a hit).  Filled by the serving layer, not the engines.
+    pub cache_freeze_ns: u128,
     /// State-filter instrumentation (empty for dense engines).
     pub filter_stats: FilterStats,
     /// Σ over timesteps of active states.
@@ -116,6 +124,14 @@ pub struct ReadStats {
     pub edges_processed: u64,
     /// Timesteps executed.
     pub timesteps: u64,
+    /// Striped multi-read kernel passes this read's chunk contributed
+    /// (attributed to the chunk's first read so merged totals count
+    /// each pass once; 0 on the unstriped paths).
+    pub stripe_passes: u64,
+    /// Reads carried by those passes (merged `stripe_reads /
+    /// stripe_passes` = mean stripe fill out of
+    /// [`crate::baumwelch::MAX_STRIPE`]).
+    pub stripe_reads: u64,
 }
 
 impl ReadStats {
@@ -123,10 +139,14 @@ impl ReadStats {
     pub fn merge(&mut self, other: &ReadStats) {
         self.forward_ns += other.forward_ns;
         self.backward_update_ns += other.backward_update_ns;
+        self.update_ns += other.update_ns;
+        self.cache_freeze_ns += other.cache_freeze_ns;
         self.filter_stats.merge(&other.filter_stats);
         self.states_processed += other.states_processed;
         self.edges_processed += other.edges_processed;
         self.timesteps += other.timesteps;
+        self.stripe_passes += other.stripe_passes;
+        self.stripe_reads += other.stripe_reads;
     }
 }
 
@@ -350,6 +370,7 @@ impl ExpectationEngine for SparseEngine {
             // Backwards run per read, in chunk order: the accumulator
             // sees the exact += sequence of the sequential loop, so
             // the merged sums stay bit-identical to one-at-a-time.
+            let mut first_in_chunk = true;
             for (read, fwd) in chunk.iter().zip(fwds) {
                 let fwd = match fwd {
                     Ok(f) => f,
@@ -358,14 +379,20 @@ impl ExpectationEngine for SparseEngine {
                         continue;
                     }
                 };
+                // Stripe accounting rides on the chunk's first
+                // surviving read so merged totals count each striped
+                // pass exactly once.
                 let mut stats = ReadStats {
                     forward_ns: fwd_ns,
                     filter_stats: fwd.filter_stats,
                     states_processed: fwd.states_processed,
                     edges_processed: fwd.edges_processed,
                     timesteps: fwd.rows.len() as u64,
+                    stripe_passes: u64::from(first_in_chunk),
+                    stripe_reads: if first_in_chunk { chunk.len() as u64 } else { 0 },
                     ..Default::default()
                 };
+                first_in_chunk = false;
                 let t1 = Instant::now();
                 let res = acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch, opts);
                 stats.backward_update_ns = t1.elapsed().as_nanos();
@@ -608,6 +635,7 @@ impl ExpectationEngine for BandedEngine {
             states_processed: n * t,
             edges_processed: n * prep.banded.w as u64 * t.saturating_sub(1),
             timesteps: t,
+            ..Default::default()
         })
     }
 

@@ -109,6 +109,12 @@ pub struct TrainResult {
     /// parameters), summed over iterations.  Previously these were
     /// dropped silently; the coordinator surfaces them in its metrics.
     pub reads_skipped: u64,
+    /// Striped multi-read kernel passes across all iterations (0 when
+    /// the engine runs the unstriped path).
+    pub stripe_passes: u64,
+    /// Reads carried by those passes (`stripe_reads / stripe_passes`
+    /// = mean stripe fill out of [`crate::baumwelch::MAX_STRIPE`]).
+    pub stripe_reads: u64,
 }
 
 /// Per-block E-step output: one accumulator plus its instrumentation,
@@ -341,6 +347,8 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
         edges_processed: 0,
         timesteps: 0,
         reads_skipped: 0,
+        stripe_passes: 0,
+        stripe_reads: 0,
     };
     let mut prev_mean = f64::NEG_INFINITY;
     for _iter in 0..cfg.max_iters {
@@ -361,6 +369,8 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
             result.edges_processed += out.stats.edges_processed;
             result.timesteps += out.stats.timesteps;
             result.reads_skipped += out.reads_skipped;
+            result.stripe_passes += out.stats.stripe_passes;
+            result.stripe_reads += out.stats.stripe_reads;
         }
         let (total_loglik, n_observations) = engine.observations(&acc);
         if n_observations == 0 {

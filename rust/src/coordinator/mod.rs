@@ -30,7 +30,7 @@
 mod metrics;
 mod xla_device;
 
-pub use metrics::{FailureCause, Metrics, MetricsSummary, TenantSummary};
+pub use metrics::{FailureCause, Metrics, MetricsSummary, StageSummary, StageTimes, TenantSummary, STAGES};
 pub use xla_device::{XlaDevice, XlaEngine, XlaHandle};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -356,7 +356,7 @@ mod tests {
             assert!(!o.consensus.is_empty());
             assert!(o.latency_ns > 0, "job {i} has no measured latency");
         }
-        let s = metrics.summary(1.0);
+        let s = metrics.summary();
         assert_eq!(s.jobs_done, 12);
         assert_eq!(s.jobs_failed, 0);
         assert!(s.timesteps > 0);
@@ -398,7 +398,7 @@ mod tests {
         // ahead of the workers, and the (instant) producer must have
         // been refused admission at least once by the (ms-scale)
         // training jobs.
-        let s = metrics.summary(1.0);
+        let s = metrics.summary();
         assert!(s.queue_high_water <= 1, "high water {}", s.queue_high_water);
         assert!(s.producer_blocks > 0, "queue_depth never exerted backpressure");
         assert_eq!(s.queue_depth, 0, "queue must drain by completion");
@@ -413,7 +413,7 @@ mod tests {
         let cfg = CoordinatorConfig { n_workers: 2, queue_depth: 64, ..Default::default() };
         let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
         assert_eq!(outcomes.len(), 6);
-        let s = metrics.summary(1.0);
+        let s = metrics.summary();
         assert_eq!(s.producer_blocks, 0);
         assert!(s.queue_high_water <= 6);
     }
@@ -429,7 +429,7 @@ mod tests {
         let metrics = Metrics::default();
         let outcomes = run_jobs(jobs, &CoordinatorConfig::default(), &metrics).unwrap();
         assert_eq!(outcomes.len(), 3);
-        let s = metrics.summary(1.0);
+        let s = metrics.summary();
         // Two skip events per EM iteration of their jobs — at least two.
         assert!(s.reads_skipped >= 2, "reads_skipped {}", s.reads_skipped);
     }
@@ -467,7 +467,7 @@ mod tests {
         cfg.train.engine = EngineKind::Banded;
         let outcomes = run_jobs(jobs, &cfg, &metrics).unwrap();
         assert_eq!(outcomes.len(), 4);
-        assert_eq!(metrics.summary(1.0).jobs_done, 4);
+        assert_eq!(metrics.summary().jobs_done, 4);
         for o in &outcomes {
             assert!(!o.consensus.is_empty());
             assert!(o.mean_loglik.is_finite());

@@ -208,6 +208,7 @@ impl ExpectationEngine for XlaEngine {
             states_processed: n * t,
             edges_processed: n * prep.w as u64 * t.saturating_sub(1),
             timesteps: t,
+            ..Default::default()
         })
     }
 

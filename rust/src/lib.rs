@@ -46,6 +46,7 @@ pub mod error;
 pub mod failpoint;
 pub mod io;
 pub mod mapper;
+pub mod obs;
 pub mod phmm;
 pub mod pool;
 pub mod runtime;

@@ -282,6 +282,9 @@ fn server_config(
         idle_timeout_ms: cfg
             .usize_or(&format!("{section}.idle_timeout_ms"), defaults.idle_timeout_ms as usize)?
             as u64,
+        slow_request_ms: cfg
+            .usize_or(&format!("{section}.slow_request_ms"), defaults.slow_request_ms as usize)?
+            as u64,
         engine,
         train,
         alphabet,
@@ -438,6 +441,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     server.shutdown(true);
+    // Shutdown hook: flush the retained trace timelines so traced
+    // sessions leave a post-mortem record even when nobody issued
+    // `trace-dump` over the wire.
+    for line in server.trace_dump() {
+        eprintln!("aphmm trace: {line}");
+    }
     eprintln!("aphmm serve: {}", server.stats_line());
     Ok(())
 }

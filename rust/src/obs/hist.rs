@@ -1,0 +1,179 @@
+//! Fixed-bucket power-of-two histogram — the one histogram shape used
+//! everywhere in the observability layer.
+//!
+//! Bucket `i` holds values in `[2^(i-1), 2^i)` (bucket 0 holds the
+//! value 0; the last bucket holds everything ≥ `2^(HIST_BUCKETS-2)`,
+//! ≈ 4.6 min when values are nanoseconds).  Power-of-two bounds keep
+//! recording to a `leading_zeros` plus two relaxed atomic increments —
+//! cheap enough that the per-stage histogram family in
+//! [`crate::coordinator::Metrics`] stays always-on.
+//!
+//! [`PowHist`] is the shared (lock-free) recorder; [`HistSnapshot`] is
+//! a point-in-time copy used for quantiles and Prometheus rendering
+//! (cumulative `le` buckets are derived at render time, so the hot
+//! path never maintains cumulative counts).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets in every [`PowHist`].
+pub const HIST_BUCKETS: usize = 39;
+
+/// Bucket index for a value (power-of-two buckets; see module docs).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (the largest value that maps to
+/// a bucket ≤ `i`; bucket 0 covers only the value 0).
+pub fn bucket_bound_ns(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// A lock-free fixed-bucket histogram: per-bucket counts plus a running
+/// sum, all relaxed atomics.
+#[derive(Debug)]
+pub struct PowHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for PowHist {
+    fn default() -> Self {
+        PowHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl PowHist {
+    /// Record one value: one bucket increment plus one sum add.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy for rendering and quantiles.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`PowHist`].
+#[derive(Clone, Debug, Default)]
+pub struct HistSnapshot {
+    /// Per-bucket (non-cumulative) counts, `HIST_BUCKETS` long.
+    pub counts: Vec<u64>,
+    /// Sum of all recorded values.
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Total number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Upper bound (in the recorded unit) of the bucket holding the
+    /// `q`-quantile, or 0 when nothing was recorded.  Quantiles from
+    /// power-of-two buckets are bucket-resolution: the true value lies
+    /// within a factor of two below the returned bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total: u64 = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bound_ns(i);
+            }
+        }
+        bucket_bound_ns(HIST_BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_bounded() {
+        let mut prev = 0;
+        for shift in 0..64 {
+            let b = bucket_of(1u64 << shift);
+            assert!(b >= prev);
+            assert!(b < HIST_BUCKETS);
+            prev = b;
+        }
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn known_distribution_p50_p99_land_in_expected_buckets() {
+        // 98 fast requests at ~1 µs, 2 slow at ~1 ms: p50 must sit in
+        // the microsecond bucket, p99 in the millisecond bucket.
+        let h = PowHist::default();
+        for _ in 0..98 {
+            h.record(1_000); // ~2^10
+        }
+        for _ in 0..2 {
+            h.record(1_000_000); // ~2^20
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.sum, 98 * 1_000 + 2 * 1_000_000);
+
+        let p50 = s.quantile(0.50);
+        assert_eq!(p50, bucket_bound_ns(bucket_of(1_000)));
+        assert!((512..=2048).contains(&p50), "p50 bound {p50}");
+
+        let p99 = s.quantile(0.99);
+        assert_eq!(p99, bucket_bound_ns(bucket_of(1_000_000)));
+        assert!((524_288..=2_097_152).contains(&p99), "p99 bound {p99}");
+    }
+
+    #[test]
+    fn uniform_distribution_quantiles_bracket() {
+        // Values 1..=1024: p50 within a factor of two of 512, p99 of
+        // 1024 (bucket resolution).
+        let h = PowHist::default();
+        for v in 1..=1024u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(0.50);
+        assert!((512..=1024).contains(&p50), "p50 bound {p50}");
+        let p99 = s.quantile(0.99);
+        assert!((1024..=2048).contains(&p99), "p99 bound {p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let s = PowHist::default().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.sum, 0);
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.quantile(0.99), 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: per-request trace timelines, stage-level accounting,
+//! and Prometheus text exposition.
+//!
+//! ApHMM's design was driven by a stage-level profile (paper §3:
+//! forward / backward / parameter-update breakdown); this module makes
+//! that breakdown observable in the running system instead of an
+//! offline analysis.  Three always-compiled pieces:
+//!
+//! - [`hist`] — the fixed-bucket power-of-two histogram every latency
+//!   and stage-time series records into ([`PowHist`]).
+//! - [`trace`] — per-request span [`Timeline`]s captured at stage
+//!   boundaries, retained in a bounded [`TraceRing`] and emitted as
+//!   JSON lines by the `trace-dump` wire command, the serve shutdown
+//!   hook, and the slow-request log.
+//! - [`prom`] — [`PromWriter`], the Prometheus text renderer behind
+//!   the `metrics` wire command.
+//!
+//! The contract (mirroring the PR-6/7 serving discipline): span and
+//! metric capture sits at stage boundaries, never inside kernels or
+//! reductions, so results are bit-identical with tracing on or off;
+//! the untraced default path costs at most one relaxed atomic per
+//! stage, and never touches the trace ring.
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use hist::{bucket_bound_ns, bucket_of, HistSnapshot, PowHist, HIST_BUCKETS};
+pub use prom::PromWriter;
+pub use trace::{Stage, Timeline, TraceRing, TRACE_RING_CAPACITY};

@@ -1,0 +1,210 @@
+//! Prometheus text-format rendering for the `metrics` wire command.
+//!
+//! [`PromWriter`] emits the classic text exposition: `# HELP` / `#
+//! TYPE` comment pairs followed by `name{labels} value` sample lines,
+//! terminated by a `# EOF` line (the OpenMetrics terminator, which the
+//! line-oriented wire protocol also uses as the end-of-block
+//! delimiter).  Histograms follow the Prometheus convention:
+//! cumulative `_bucket{le="..."}` lines, a `+Inf` bucket, `_sum`, and
+//! `_count`.  Cumulative counts are derived here at render time from
+//! the non-cumulative [`HistSnapshot`] buckets, so the recording hot
+//! path stays two atomics.
+//!
+//! Metric and label names follow the scheme documented in
+//! `server/README.md` (`aphmm_` prefix, snake_case, base units of
+//! seconds).
+
+use super::hist::{bucket_bound_ns, HistSnapshot};
+
+/// Incremental Prometheus text builder.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+fn escape_label(v: &str, out: &mut String) {
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_labels(out: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label(v, out);
+        out.push('"');
+    }
+    out.push('}');
+}
+
+/// Render a float the way Prometheus clients expect: plain decimal,
+/// no exponent for the magnitudes we emit, integers without a dot.
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromWriter {
+    /// Emit the `# HELP` / `# TYPE` pair for a metric family.
+    /// `kind` is `counter`, `gauge`, or `histogram`.
+    pub fn help_type(&mut self, name: &str, help: &str, kind: &str) {
+        self.out
+            .push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample line.
+    pub fn value(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.out.push_str(name);
+        push_labels(&mut self.out, labels);
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(v));
+        self.out.push('\n');
+    }
+
+    /// Emit a full histogram family (`_bucket` cumulative lines,
+    /// `+Inf`, `_sum`, `_count`) from a nanosecond-unit snapshot,
+    /// converting bounds and sum to seconds.
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], snap: &HistSnapshot) {
+        let mut cum = 0u64;
+        for (i, &c) in snap.counts.iter().enumerate() {
+            cum += c;
+            // Skip interior empty buckets to keep the exposition
+            // readable, but always emit the first and the running edge
+            // so `le` stays monotone where it matters; simplest
+            // correct form: emit every bucket whose cumulative count
+            // changed, plus the final bucket.
+            if c == 0 && i != snap.counts.len() - 1 {
+                continue;
+            }
+            let le = bucket_bound_ns(i) as f64 / 1e9;
+            let mut lbls: Vec<(&str, &str)> = labels.to_vec();
+            let le_s = fmt_value(le);
+            lbls.push(("le", &le_s));
+            self.out.push_str(name);
+            self.out.push_str("_bucket");
+            push_labels(&mut self.out, &lbls);
+            self.out.push(' ');
+            self.out.push_str(&fmt_value(cum as f64));
+            self.out.push('\n');
+        }
+        let mut lbls: Vec<(&str, &str)> = labels.to_vec();
+        lbls.push(("le", "+Inf"));
+        self.out.push_str(name);
+        self.out.push_str("_bucket");
+        push_labels(&mut self.out, &lbls);
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(cum as f64));
+        self.out.push('\n');
+
+        self.out.push_str(name);
+        self.out.push_str("_sum");
+        push_labels(&mut self.out, labels);
+        self.out
+            .push_str(&format!(" {}\n", fmt_value(snap.sum as f64 / 1e9)));
+        self.out.push_str(name);
+        self.out.push_str("_count");
+        push_labels(&mut self.out, labels);
+        self.out.push_str(&format!(" {}\n", fmt_value(cum as f64)));
+    }
+
+    /// Finish the exposition: append the `# EOF` terminator and return
+    /// the text.
+    pub fn finish(mut self) -> String {
+        self.out.push_str("# EOF\n");
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::PowHist;
+
+    /// A line is valid if it is a `# HELP`/`# TYPE`/`# EOF` comment or
+    /// matches `name{labels} value`.
+    fn line_is_valid(line: &str) -> bool {
+        if line.starts_with("# HELP ") || line.starts_with("# TYPE ") || line == "# EOF" {
+            return true;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            return false;
+        };
+        let name_ok = |n: &str| {
+            !n.is_empty()
+                && n.chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        };
+        let series_ok = match series.split_once('{') {
+            None => name_ok(series),
+            Some((name, rest)) => name_ok(name) && rest.ends_with('}'),
+        };
+        series_ok && (value.parse::<f64>().is_ok() || value == "+Inf")
+    }
+
+    #[test]
+    fn every_emitted_line_parses() {
+        let mut w = PromWriter::default();
+        w.help_type("aphmm_requests_total", "Requests by result.", "counter");
+        w.value("aphmm_requests_total", &[("result", "ok")], 12.0);
+        w.value("aphmm_uptime_seconds", &[], 1.5);
+        let h = PowHist::default();
+        h.record(1_000);
+        h.record(1_000_000);
+        w.help_type("aphmm_stage_seconds", "Stage time.", "histogram");
+        w.histogram("aphmm_stage_seconds", &[("stage", "forward")], &h.snapshot());
+        let text = w.finish();
+        assert!(text.ends_with("# EOF\n"));
+        for line in text.lines() {
+            assert!(line_is_valid(line), "bad line: {line:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_count_matches() {
+        let h = PowHist::default();
+        for v in [1u64, 1, 2, 1_000, 1_000_000] {
+            h.record(v);
+        }
+        let mut w = PromWriter::default();
+        w.histogram("x", &[], &h.snapshot());
+        let text = w.finish();
+        let mut prev = 0u64;
+        let mut inf = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("x_bucket{le=\"") {
+                let v: u64 = rest.rsplit_once(' ').unwrap().1.parse().unwrap();
+                assert!(v >= prev, "non-cumulative: {line}");
+                prev = v;
+                if rest.starts_with("+Inf") {
+                    inf = Some(v);
+                }
+            }
+        }
+        assert_eq!(inf, Some(5));
+        assert!(text.contains("x_count 5\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut w = PromWriter::default();
+        w.value("m", &[("tenant", "a\"b\\c\nd")], 1.0);
+        let text = w.finish();
+        assert!(text.contains(r#"m{tenant="a\"b\\c\nd"} 1"#), "{text}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Per-request trace timelines and the bounded ring that retains them.
+//!
+//! A [`Timeline`] is one request's span breakdown — durations of the
+//! `admission → queue_wait → cache_freeze → forward → backward →
+//! update → respond` pipeline stages — captured at stage *boundaries*
+//! by the serving layer, never inside kernels or reductions, so traced
+//! and untraced requests produce bit-identical results (pinned by
+//! `tracing_on_vs_off_is_bit_identical` in the server integration
+//! tests).
+//!
+//! Traced timelines land in a fixed-capacity [`TraceRing`]: a cursor
+//! `fetch_add` picks a slot, a per-slot mutex swaps the timeline in.
+//! The ring keeps the last [`TRACE_RING_CAPACITY`] timelines; older
+//! entries are overwritten.  Untraced requests never touch the ring,
+//! so the default path stays free of trace-side atomics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// How many timelines the serve-side ring retains (`trace-dump` emits
+/// at most this many JSON lines, oldest first).
+pub const TRACE_RING_CAPACITY: usize = 64;
+
+/// Pipeline stages of one request, in wire order.  `Admission` covers
+/// parse/validate up to enqueue; `Respond` covers formatting and
+/// reply-channel send (measured by the caller as total minus the rest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Parse + admission control, before the job enters the queue.
+    Admission,
+    /// Time spent queued before a worker popped the job.
+    QueueWait,
+    /// Coefficient freeze on a prepared-cache miss (0 on a hit).
+    CacheFreeze,
+    /// Forward pass (E-step scoring half).
+    Forward,
+    /// Backward pass fused with expectation accumulation.
+    Backward,
+    /// Parameter update (M-step), nonzero only for training requests.
+    Update,
+    /// Response formatting + reply send.
+    Respond,
+}
+
+impl Stage {
+    /// All stages, wire order.
+    pub const ALL: [Stage; 7] = [
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::CacheFreeze,
+        Stage::Forward,
+        Stage::Backward,
+        Stage::Update,
+        Stage::Respond,
+    ];
+
+    /// Stable snake_case name, used as the `stage` label value in the
+    /// Prometheus exposition and the JSON span keys.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::CacheFreeze => "cache_freeze",
+            Stage::Forward => "forward",
+            Stage::Backward => "backward",
+            Stage::Update => "update",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+/// One request's span breakdown.  `started_ns` is a monotonic offset
+/// from the server start, so timelines from one process sort and
+/// correlate without wall-clock skew.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// Trace id — the job id, echoed on the wire as `trace=<id>`.
+    pub trace_id: u64,
+    /// Tenant that submitted the request.
+    pub tenant: String,
+    /// Request kind (`score` / `align` / `search` / `correct`).
+    pub kind: &'static str,
+    /// Engine that served it.
+    pub engine: &'static str,
+    /// Whether the request succeeded.
+    pub ok: bool,
+    /// Monotonic offset of admission from server start, ns.
+    pub started_ns: u64,
+    /// End-to-end latency, ns.
+    pub total_ns: u64,
+    /// Per-stage durations, ns, in [`Stage::ALL`] order (absent stages
+    /// are 0).
+    pub spans: [u64; Stage::ALL.len()],
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+impl Timeline {
+    /// One-line JSON rendering, the `trace-dump` / slow-request-log
+    /// format.  Tenant is client-controlled and therefore escaped.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(256);
+        s.push_str(&format!(
+            "{{\"trace_id\":{},\"tenant\":\"",
+            self.trace_id
+        ));
+        escape_json(&self.tenant, &mut s);
+        s.push_str(&format!(
+            "\",\"kind\":\"{}\",\"engine\":\"{}\",\"ok\":{},\"started_ns\":{},\"total_ns\":{},\"spans\":{{",
+            self.kind, self.engine, self.ok, self.started_ns, self.total_ns
+        ));
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{}", stage.name(), self.spans[i]));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// Bounded ring of the last [`TRACE_RING_CAPACITY`] timelines.
+#[derive(Debug)]
+pub struct TraceRing {
+    slots: Vec<Mutex<Option<Timeline>>>,
+    cursor: AtomicU64,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing {
+            slots: (0..TRACE_RING_CAPACITY).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+}
+
+impl TraceRing {
+    /// Retain a timeline, overwriting the oldest when full.  Slot
+    /// choice is a single `fetch_add`; the per-slot mutex is held only
+    /// for the swap, so concurrent pushes contend per-slot, not
+    /// ring-wide.
+    pub fn push(&self, t: Timeline) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(t);
+    }
+
+    /// Snapshot of retained timelines, oldest first.
+    pub fn dump(&self) -> Vec<Timeline> {
+        let n = self.slots.len();
+        let cur = self.cursor.load(Ordering::Relaxed) as usize;
+        let mut out = Vec::new();
+        for k in 0..n {
+            let i = (cur + k) % n;
+            if let Some(t) = self.slots[i].lock().unwrap().as_ref() {
+                out.push(t.clone());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timeline(id: u64) -> Timeline {
+        Timeline {
+            trace_id: id,
+            tenant: "t".into(),
+            kind: "score",
+            engine: "sparse",
+            ok: true,
+            started_ns: 10 * id,
+            total_ns: 100,
+            spans: [1, 2, 3, 4, 5, 6, 7],
+        }
+    }
+
+    #[test]
+    fn ring_retains_last_capacity_timelines_oldest_first() {
+        let ring = TraceRing::default();
+        assert!(ring.dump().is_empty());
+        for id in 0..(TRACE_RING_CAPACITY as u64 + 10) {
+            ring.push(timeline(id));
+        }
+        let dump = ring.dump();
+        assert_eq!(dump.len(), TRACE_RING_CAPACITY);
+        // The oldest surviving timeline is id 10; dump is oldest-first.
+        assert_eq!(dump.first().unwrap().trace_id, 10);
+        assert_eq!(
+            dump.last().unwrap().trace_id,
+            TRACE_RING_CAPACITY as u64 + 9
+        );
+        for w in dump.windows(2) {
+            assert!(w[0].trace_id < w[1].trace_id);
+        }
+    }
+
+    #[test]
+    fn timeline_json_is_one_line_with_all_spans() {
+        let j = timeline(7).to_json();
+        assert!(!j.contains('\n'));
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"trace_id\":7"));
+        for stage in Stage::ALL {
+            assert!(j.contains(&format!("\"{}\":", stage.name())), "{j}");
+        }
+    }
+
+    #[test]
+    fn tenant_names_are_json_escaped() {
+        let mut t = timeline(1);
+        t.tenant = "a\"b\\c\nd".into();
+        let j = t.to_json();
+        assert!(j.contains("a\\\"b\\\\c\\u000ad"), "{j}");
+        assert!(!j.contains('\n'));
+    }
+}

@@ -148,6 +148,10 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Entries currently resident.
     pub entries: u64,
+    /// Cumulative nanoseconds spent freezing tables on misses — the
+    /// work the cache exists to amortize (exposed as
+    /// `aphmm_cache_freeze_seconds_total`).
+    pub freeze_ns: u64,
 }
 
 struct LruState {
@@ -173,6 +177,7 @@ pub struct PreparedCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    freeze_ns: AtomicU64,
 }
 
 impl PreparedCache {
@@ -184,6 +189,7 @@ impl PreparedCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            freeze_ns: AtomicU64::new(0),
         }
     }
 
@@ -219,7 +225,9 @@ impl PreparedCache {
         crate::failpoint!("cache::insert", |msg: String| {
             crate::error::ApHmmError::Runtime(format!("failpoint cache::insert: {msg}"))
         });
+        let t0 = std::time::Instant::now();
         let fresh = Arc::new(PreparedAny::freeze(kind, phmm)?);
+        self.freeze_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
         let entry = match inner.map.get(&key) {
             // A racing freeze for the same key won the insert; share it
@@ -254,6 +262,7 @@ impl PreparedCache {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             entries: self.inner.lock().unwrap().map.len() as u64,
+            freeze_ns: self.freeze_ns.load(Ordering::Relaxed),
         }
     }
 }

@@ -72,9 +72,10 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::baumwelch::{EngineKind, ReadStats, ScratchAny, TrainConfig};
-use crate::coordinator::{Metrics, MetricsSummary};
+use crate::baumwelch::{EngineKind, ReadStats, ScratchAny, TrainConfig, MAX_STRIPE};
+use crate::coordinator::{Metrics, MetricsSummary, StageTimes};
 use crate::error::{ApHmmError, CancelCause, Result};
+use crate::obs::{PromWriter, Stage, Timeline, TraceRing};
 use crate::phmm::{EcDesignParams, Phmm};
 use crate::pool::{panic_message, WorkerPool};
 use crate::seq::{Alphabet, Sequence};
@@ -151,6 +152,11 @@ pub struct ServerConfig {
     /// `read_timeout_ms > 0` to take effect (the reaping check runs on
     /// read-timeout wakeups).  `0` (default) never reaps.
     pub idle_timeout_ms: u64,
+    /// Slow-request threshold (ms): a request whose end-to-end latency
+    /// exceeds this gets its full span timeline logged to stderr as one
+    /// JSON line (and retained in the trace ring).  `0` (default)
+    /// disables the slow-request log.
+    pub slow_request_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -175,6 +181,7 @@ impl Default for ServerConfig {
             shed_fraction: 0.0,
             read_timeout_ms: 0,
             idle_timeout_ms: 0,
+            slow_request_ms: 0,
         }
     }
 }
@@ -189,6 +196,13 @@ struct Job {
     reply: mpsc::Sender<Response>,
     enqueued: Instant,
     cancel: CancelToken,
+    /// Whether this request's span timeline is retained in the trace
+    /// ring (set by a `trace on` session or [`Server::submit_traced`]).
+    /// The untraced default never touches the ring.
+    trace: bool,
+    /// When a worker popped the job (`popped - enqueued` =
+    /// queue-wait).  `None` until popped.
+    popped: Option<Instant>,
 }
 
 /// Handle to one submitted request.
@@ -242,6 +256,7 @@ struct Shared {
     cache: PreparedCache,
     pool: WorkerPool,
     metrics: Metrics,
+    traces: TraceRing,
     next_id: AtomicU64,
     started: Instant,
 }
@@ -279,6 +294,7 @@ impl Server {
             cache: PreparedCache::new(cfg.cache_capacity),
             pool: WorkerPool::new(helpers),
             metrics: Metrics::default(),
+            traces: TraceRing::default(),
             next_id: AtomicU64::new(0),
             started: Instant::now(),
             cfg,
@@ -342,13 +358,23 @@ impl Server {
         engine: Option<EngineKind>,
         body: Request,
         deadline: Option<Duration>,
+        trace: bool,
     ) -> (Job, Ticket) {
         let engine = engine.unwrap_or(self.shared.cfg.engine);
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let cancel = CancelToken::with_deadline(deadline.map(|d| Instant::now() + d));
         (
-            Job { id, engine, body, reply: tx, enqueued: Instant::now(), cancel: cancel.clone() },
+            Job {
+                id,
+                engine,
+                body,
+                reply: tx,
+                enqueued: Instant::now(),
+                cancel: cancel.clone(),
+                trace,
+                popped: None,
+            },
             Ticket { id, engine, rx, cancel },
         )
     }
@@ -389,7 +415,25 @@ impl Server {
         body: Request,
         deadline: Option<Duration>,
     ) -> Result<Ticket> {
-        let (job, ticket) = self.make_job(engine, body, deadline);
+        self.submit_traced(tenant, priority, engine, body, deadline, false)
+    }
+
+    /// [`Server::submit_with_deadline`] plus per-request tracing: with
+    /// `trace = true` the request's span timeline is retained in the
+    /// server's trace ring ([`Server::trace_dump`], the `trace-dump`
+    /// wire command).  Tracing never changes results — spans are
+    /// captured at stage boundaries only, so traced responses are
+    /// bit-identical to untraced ones.
+    pub fn submit_traced(
+        &self,
+        tenant: &str,
+        priority: Priority,
+        engine: Option<EngineKind>,
+        body: Request,
+        deadline: Option<Duration>,
+        trace: bool,
+    ) -> Result<Ticket> {
+        let (job, ticket) = self.make_job(engine, body, deadline, trace);
         self.shared.queue.push(tenant, priority, job).map_err(|job| {
             ApHmmError::Coordinator(format!(
                 "server is shut down: {} request refused",
@@ -435,7 +479,7 @@ impl Server {
         engine: Option<EngineKind>,
         body: Request,
     ) -> std::result::Result<Ticket, AdmitError<Request>> {
-        let (job, ticket) = self.make_job(engine, body, None);
+        let (job, ticket) = self.make_job(engine, body, None, false);
         match self.shared.queue.try_push(tenant, priority, job) {
             Ok(()) => Ok(ticket),
             Err(AdmitError::Busy(job)) => Err(AdmitError::Busy(job.body)),
@@ -485,7 +529,213 @@ impl Server {
         // mirrors alone.
         let active: Vec<&str> = tstats.iter().map(|(name, _)| name.as_str()).collect();
         self.shared.metrics.evict_stale_tenants(&active);
-        self.shared.metrics.summary(self.shared.started.elapsed().as_secs_f64())
+        // Wall time is derived inside Metrics from its own start
+        // Instant (created with the server), so `stats`, `tenants`,
+        // and `metrics` all rate against the same clock.
+        self.shared.metrics.summary()
+    }
+
+    /// The retained trace timelines (oldest first) as JSON lines — the
+    /// `trace-dump` wire command and the `aphmm serve` shutdown hook.
+    pub fn trace_dump(&self) -> Vec<String> {
+        self.shared.traces.dump().iter().map(Timeline::to_json).collect()
+    }
+
+    /// Full Prometheus text exposition — the `metrics` wire command.
+    /// Naming scheme (documented in `server/README.md`): `aphmm_`
+    /// prefix, snake_case, base unit seconds; per-stage histograms are
+    /// one `aphmm_stage_seconds{stage="..."}` family.
+    pub fn metrics_text(&self) -> String {
+        let m = self.metrics_summary();
+        let c = self.cache_stats();
+        let metrics = &self.shared.metrics;
+        let mut w = PromWriter::default();
+
+        w.help_type("aphmm_uptime_seconds", "Seconds since the server started.", "gauge");
+        w.value("aphmm_uptime_seconds", &[], m.wall_seconds);
+
+        w.help_type(
+            "aphmm_requests_total",
+            "Completed requests by result (shed requests are counted in aphmm_shed_total).",
+            "counter",
+        );
+        w.value("aphmm_requests_total", &[("result", "ok")], m.jobs_done as f64);
+        let plain_errors =
+            m.jobs_failed.saturating_sub(m.deadline_exceeded + m.cancelled + m.pool_panics);
+        w.value("aphmm_requests_total", &[("result", "error")], plain_errors as f64);
+        w.value(
+            "aphmm_requests_total",
+            &[("result", "deadline_exceeded")],
+            m.deadline_exceeded as f64,
+        );
+        w.value("aphmm_requests_total", &[("result", "cancelled")], m.cancelled as f64);
+        w.value("aphmm_requests_total", &[("result", "panicked")], m.pool_panics as f64);
+        w.help_type(
+            "aphmm_shed_total",
+            "Requests refused by load shedding at admission.",
+            "counter",
+        );
+        w.value("aphmm_shed_total", &[], m.shed as f64);
+
+        w.help_type(
+            "aphmm_request_seconds",
+            "End-to-end request latency (success and failure).",
+            "histogram",
+        );
+        w.histogram("aphmm_request_seconds", &[], &metrics.request_hist_snapshot());
+        w.help_type(
+            "aphmm_stage_seconds",
+            "Per-stage time within a request (only requests that ran the stage).",
+            "histogram",
+        );
+        for (stage, snap) in metrics.stage_snapshots() {
+            w.histogram("aphmm_stage_seconds", &[("stage", stage)], &snap);
+        }
+
+        w.help_type(
+            "aphmm_rows_total",
+            "Sparse-gather rows by dispatch path (csr vs dense_tile).",
+            "counter",
+        );
+        w.value("aphmm_rows_total", &[("kind", "csr")], m.rows_csr as f64);
+        w.value("aphmm_rows_total", &[("kind", "dense_tile")], m.rows_dense_tile as f64);
+        w.help_type(
+            "aphmm_filter_states_total",
+            "States offered to (in) and admitted by (out) the state filter.",
+            "counter",
+        );
+        w.value("aphmm_filter_states_total", &[("dir", "in")], m.filter_states_in as f64);
+        w.value("aphmm_filter_states_total", &[("dir", "out")], m.filter_states_out as f64);
+        w.help_type("aphmm_filter_calls_total", "State-filter invocations.", "counter");
+        w.value("aphmm_filter_calls_total", &[], m.filter_calls as f64);
+
+        w.help_type(
+            "aphmm_stripe_passes_total",
+            "Striped multi-read kernel passes.",
+            "counter",
+        );
+        w.value("aphmm_stripe_passes_total", &[], m.stripe_passes as f64);
+        w.help_type(
+            "aphmm_stripe_reads_total",
+            "Reads carried by striped passes (reads/passes = mean fill).",
+            "counter",
+        );
+        w.value("aphmm_stripe_reads_total", &[], m.stripe_reads as f64);
+        w.help_type(
+            "aphmm_stripe_fill_passes_total",
+            "Striped score passes by exact fill (reads per pass out of MAX_STRIPE).",
+            "counter",
+        );
+        for (i, count) in metrics.stripe_fill_counts().into_iter().enumerate() {
+            let fill = (i + 1).to_string();
+            w.value("aphmm_stripe_fill_passes_total", &[("fill", &fill)], count as f64);
+        }
+
+        w.help_type("aphmm_cache_ops_total", "Prepared-cache operations.", "counter");
+        w.value("aphmm_cache_ops_total", &[("op", "hit")], c.hits as f64);
+        w.value("aphmm_cache_ops_total", &[("op", "miss")], c.misses as f64);
+        w.value("aphmm_cache_ops_total", &[("op", "evict")], c.evictions as f64);
+        w.help_type("aphmm_cache_entries", "Prepared-cache resident entries.", "gauge");
+        w.value("aphmm_cache_entries", &[], c.entries as f64);
+        w.help_type(
+            "aphmm_cache_freeze_seconds_total",
+            "Total time spent freezing prepared tables on cache misses.",
+            "counter",
+        );
+        w.value("aphmm_cache_freeze_seconds_total", &[], c.freeze_ns as f64 / 1e9);
+
+        w.help_type("aphmm_queue_depth", "Job-queue depth (last snapshot).", "gauge");
+        w.value("aphmm_queue_depth", &[], m.queue_depth as f64);
+        w.help_type("aphmm_queue_high_water", "Highest job-queue depth observed.", "gauge");
+        w.value("aphmm_queue_high_water", &[], m.queue_high_water as f64);
+        w.help_type(
+            "aphmm_producer_blocks_total",
+            "Producer admissions refused/blocked by a full queue.",
+            "counter",
+        );
+        w.value("aphmm_producer_blocks_total", &[], m.producer_blocks as f64);
+
+        w.help_type("aphmm_timesteps_total", "Baum-Welch timesteps processed.", "counter");
+        w.value("aphmm_timesteps_total", &[], m.timesteps as f64);
+        w.help_type("aphmm_states_total", "States processed.", "counter");
+        w.value("aphmm_states_total", &[], m.states as f64);
+        w.help_type(
+            "aphmm_reads_skipped_total",
+            "Reads skipped during training (empty or numerically dead).",
+            "counter",
+        );
+        w.value("aphmm_reads_skipped_total", &[], m.reads_skipped as f64);
+
+        w.help_type("aphmm_profiles", "Registered profiles.", "gauge");
+        w.value("aphmm_profiles", &[], self.shared.registry.len() as f64);
+        w.help_type(
+            "aphmm_simd_lane_width",
+            "SIMD lane width the configured policy resolves to on this host.",
+            "gauge",
+        );
+        w.value(
+            "aphmm_simd_lane_width",
+            &[],
+            self.shared.cfg.train.simd.resolve().width() as f64,
+        );
+
+        w.help_type(
+            "aphmm_tenant_requests_total",
+            "Per-tenant completed requests by result.",
+            "counter",
+        );
+        for t in &m.tenants {
+            w.value(
+                "aphmm_tenant_requests_total",
+                &[("tenant", &t.tenant), ("result", "ok")],
+                t.completed as f64,
+            );
+            w.value(
+                "aphmm_tenant_requests_total",
+                &[("tenant", &t.tenant), ("result", "failed")],
+                t.failed as f64,
+            );
+        }
+        // One family at a time: Prometheus text format keeps a
+        // family's samples contiguous under its HELP/TYPE pair.
+        w.help_type("aphmm_tenant_queued", "Per-tenant queued requests.", "gauge");
+        for t in &m.tenants {
+            w.value("aphmm_tenant_queued", &[("tenant", &t.tenant)], t.queued as f64);
+        }
+        w.help_type("aphmm_tenant_in_flight", "Per-tenant in-flight requests.", "gauge");
+        for t in &m.tenants {
+            w.value("aphmm_tenant_in_flight", &[("tenant", &t.tenant)], t.in_flight as f64);
+        }
+        w.help_type(
+            "aphmm_tenant_admitted_total",
+            "Per-tenant admitted requests.",
+            "counter",
+        );
+        for t in &m.tenants {
+            w.value("aphmm_tenant_admitted_total", &[("tenant", &t.tenant)], t.admitted as f64);
+        }
+        w.help_type(
+            "aphmm_tenant_quota_refusals_total",
+            "Per-tenant admissions refused by quota.",
+            "counter",
+        );
+        for t in &m.tenants {
+            w.value(
+                "aphmm_tenant_quota_refusals_total",
+                &[("tenant", &t.tenant)],
+                t.quota_refusals as f64,
+            );
+        }
+        w.help_type(
+            "aphmm_tenant_shed_total",
+            "Per-tenant admissions refused by load shedding.",
+            "counter",
+        );
+        for t in &m.tenants {
+            w.value("aphmm_tenant_shed_total", &[("tenant", &t.tenant)], t.shed as f64);
+        }
+
+        w.finish()
     }
 
     /// One-line `stats` response for the wire protocol.
@@ -594,7 +844,8 @@ impl Drop for Server {
 /// in-flight slot), repeat until the queue reports exhaustion.
 fn worker_loop(shared: &Shared) {
     let mut scratch = ScratchAny::None;
-    while let Some((tenant, job)) = shared.queue.pop() {
+    while let Some((tenant, mut job)) = shared.queue.pop() {
+        job.popped = Some(Instant::now());
         if let Request::Score { profile, .. } = &job.body {
             // Micro-batch: pull further Score requests for the same
             // (profile, engine) so they run together through one frozen
@@ -613,7 +864,10 @@ fn worker_loop(shared: &Shared) {
                         && matches!(&j.body, Request::Score { profile: p, .. } if *p == name)
                 });
                 match more {
-                    Some(pair) => batch.push(pair),
+                    Some((t, mut j)) => {
+                        j.popped = Some(Instant::now());
+                        batch.push((t, j));
+                    }
                     None => break,
                 }
             }
@@ -694,6 +948,17 @@ fn process_score_batch(
     };
     match outcome {
         Ok(results) => {
+            // Stripe-fill accounting: the striped kernel chunks the
+            // batch by MAX_STRIPE, so the pass fills are fully
+            // determined by the batch size.  Recorded here (a stage
+            // boundary), never inside the kernel.
+            let n = live.len();
+            for _ in 0..(n / MAX_STRIPE) {
+                shared.metrics.record_stripe_fill(MAX_STRIPE);
+            }
+            if n % MAX_STRIPE > 0 {
+                shared.metrics.record_stripe_fill(n % MAX_STRIPE);
+            }
             for ((tenant, job), res) in live.into_iter().zip(results) {
                 let (body, stats) = match res {
                     Ok(done) => done,
@@ -799,21 +1064,84 @@ fn process_one(shared: &Shared, tenant: &str, job: Job, scratch: &mut ScratchAny
 }
 
 /// Record metrics for one completed job and send its reply.  The
-/// shared tail of [`process_one`] and [`process_score_batch`].
+/// shared tail of [`process_one`] and [`process_score_batch`], and the
+/// one place span/stage capture happens — a stage boundary by
+/// construction, so tracing never perturbs kernel execution and
+/// results are bit-identical with tracing on or off.
 fn respond(shared: &Shared, tenant: &str, job: Job, body: ResponseBody, stats: ReadStats) {
     let latency_ns = job.enqueued.elapsed().as_nanos() as u64;
-    match &body {
+    let ok = match &body {
         ResponseBody::Error { .. } => {
             shared.metrics.record_failed_request(latency_ns, None);
             shared.metrics.record_tenant_failure(tenant, None);
+            false
         }
         ResponseBody::Failure { cause, .. } => {
             shared.metrics.record_failed_request(latency_ns, Some(*cause));
             shared.metrics.record_tenant_failure(tenant, Some(*cause));
+            false
         }
         _ => {
             shared.metrics.record(latency_ns, stats.timesteps, stats.states_processed);
             shared.metrics.record_tenant_done(tenant, true);
+            true
+        }
+    };
+    // Stage accounting (always-on): the durations were measured by the
+    // execution path at its own stage boundaries; folding them into the
+    // histogram family costs a handful of relaxed atomics per request.
+    let queue_wait_ns = job
+        .popped
+        .map(|p| p.saturating_duration_since(job.enqueued).as_nanos() as u64)
+        .unwrap_or(0);
+    let times = StageTimes {
+        queue_wait_ns,
+        cache_freeze_ns: stats.cache_freeze_ns as u64,
+        forward_ns: stats.forward_ns as u64,
+        backward_ns: stats.backward_update_ns as u64,
+        update_ns: stats.update_ns as u64,
+    };
+    shared.metrics.record_stages(&times);
+    shared.metrics.absorb_read_stats(&stats);
+
+    // Timeline capture: only traced requests reach the ring; the slow-
+    // request log additionally captures any request over the
+    // configured threshold.
+    let slow = shared.cfg.slow_request_ms > 0
+        && latency_ns >= shared.cfg.slow_request_ms.saturating_mul(1_000_000);
+    if job.trace || slow {
+        let accounted = times.queue_wait_ns
+            + times.cache_freeze_ns
+            + times.forward_ns
+            + times.backward_ns
+            + times.update_ns;
+        let mut spans = [0u64; Stage::ALL.len()];
+        spans[Stage::QueueWait as usize] = times.queue_wait_ns;
+        spans[Stage::CacheFreeze as usize] = times.cache_freeze_ns;
+        spans[Stage::Forward as usize] = times.forward_ns;
+        spans[Stage::Backward as usize] = times.backward_ns;
+        spans[Stage::Update as usize] = times.update_ns;
+        // Respond absorbs the unattributed residual (dispatch overhead,
+        // formatting, reply send), so the spans sum to total_ns.
+        spans[Stage::Respond as usize] = latency_ns.saturating_sub(accounted);
+        let timeline = Timeline {
+            trace_id: job.id,
+            tenant: tenant.to_string(),
+            kind: job.body.kind_name(),
+            engine: job.engine.name(),
+            ok,
+            started_ns: job
+                .enqueued
+                .saturating_duration_since(shared.started)
+                .as_nanos() as u64,
+            total_ns: latency_ns,
+            spans,
+        };
+        if slow {
+            eprintln!("aphmm slow-request: {}", timeline.to_json());
+        }
+        if job.trace {
+            shared.traces.push(timeline);
         }
     }
     // A dropped ticket just means the client stopped waiting.

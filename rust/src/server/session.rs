@@ -31,7 +31,8 @@
 //! align <profile> <read> [engine]
 //! search <read> [engine]
 //! correct <reference> <read1,read2,...> [engine]
-//! stats | tenants | quit | shutdown
+//! trace <on|off>
+//! stats | tenants | metrics | trace-dump | quit | shutdown
 //! ```
 //!
 //! `tenant` sets the session's tenant id and priority class for every
@@ -57,7 +58,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::apps::{self, AlignedRow};
-use crate::baumwelch::{EngineKind, ForwardOptions, ReadStats, ScratchAny};
+use crate::baumwelch::{EngineKind, ForwardOptions, ReadStats, ScratchAny, MAX_STRIPE};
 use crate::cancel::CancelToken;
 use crate::coordinator::FailureCause;
 use crate::error::{ApHmmError, Result};
@@ -430,6 +431,7 @@ pub(crate) fn execute_score_batch(
                 .collect()
         }
     };
+    let tf = Instant::now();
     let (prepared, cache_hit) = match ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)
     {
         Ok(pair) => pair,
@@ -440,21 +442,35 @@ pub(crate) fn execute_score_batch(
                 .collect()
         }
     };
+    // The freeze (if any) happened once, before the pass; charge it to
+    // the first slot so merged cache_freeze_ns counts it once.
+    let freeze_ns = if cache_hit { 0 } else { tf.elapsed().as_nanos() };
     let t0 = Instant::now();
     let results = prepared.score_batch(&entry.phmm, reads, &ctx.opts(), scratch);
     let per_read_ns = t0.elapsed().as_nanos() / reads.len().max(1) as u128;
+    let n = reads.len();
     results
         .into_iter()
         .zip(reads)
         .enumerate()
         .map(|(i, (res, read))| {
             let res = res?;
+            // Stripe accounting mirrors the kernel's chunks(MAX_STRIPE)
+            // split: each chunk's first slot carries one pass.
+            let chunk_lead = i % MAX_STRIPE == 0;
             let stats = ReadStats {
                 forward_ns: per_read_ns,
+                cache_freeze_ns: if i == 0 { freeze_ns } else { 0 },
                 filter_stats: res.filter_stats,
                 states_processed: res.states_processed,
                 edges_processed: res.edges_processed,
                 timesteps: read.len() as u64,
+                stripe_passes: u64::from(chunk_lead),
+                stripe_reads: if chunk_lead {
+                    (n - i).min(MAX_STRIPE) as u64
+                } else {
+                    0
+                },
                 ..Default::default()
             };
             let log_odds = apps::log_odds_score(res.loglik, read.len(), entry.phmm.sigma());
@@ -493,12 +509,15 @@ pub(crate) fn execute(
     match req {
         Request::Score { profile, read } => {
             let entry = ctx.resolve(profile)?;
+            let tf = Instant::now();
             let (prepared, cache_hit) =
                 ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+            let freeze_ns = if cache_hit { 0 } else { tf.elapsed().as_nanos() };
             let t0 = Instant::now();
             let res = prepared.score(&entry.phmm, read, &ctx.opts(), scratch)?;
             let stats = ReadStats {
                 forward_ns: t0.elapsed().as_nanos(),
+                cache_freeze_ns: freeze_ns,
                 filter_stats: res.filter_stats,
                 states_processed: res.states_processed,
                 edges_processed: res.edges_processed,
@@ -518,7 +537,10 @@ pub(crate) fn execute(
         }
         Request::Align { profile, read } => {
             let entry = ctx.resolve(profile)?;
-            let (prepared, _) = ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+            let tf = Instant::now();
+            let (prepared, cache_hit) =
+                ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+            let freeze_ns = if cache_hit { 0 } else { tf.elapsed().as_nanos() };
             let dec = prepared.posterior(&entry.phmm, read)?;
             let n_columns = apps::profile_columns(&entry.phmm);
             let (columns, insertions) =
@@ -526,6 +548,7 @@ pub(crate) fn execute(
             let stats = ReadStats {
                 forward_ns: dec.forward_ns,
                 backward_update_ns: dec.backward_ns,
+                cache_freeze_ns: freeze_ns,
                 timesteps: read.len() as u64,
                 ..Default::default()
             };
@@ -560,8 +583,12 @@ pub(crate) fn execute(
                         continue;
                     }
                 }
-                let (prepared, _) =
+                let tf = Instant::now();
+                let (prepared, cache_hit) =
                     ctx.cache.get_or_freeze(entry.hash, engine, &entry.phmm)?;
+                if !cache_hit {
+                    stats.cache_freeze_ns += tf.elapsed().as_nanos();
+                }
                 let t0 = Instant::now();
                 let res = match prepared.score(&entry.phmm, read, &ctx.opts(), scratch) {
                     Ok(res) => res,
@@ -615,10 +642,14 @@ pub(crate) fn execute(
             let stats = ReadStats {
                 forward_ns: out.train.forward_ns,
                 backward_update_ns: out.train.backward_update_ns,
+                update_ns: out.train.maximize_ns,
                 filter_stats: out.train.filter_stats,
                 states_processed: out.train.states_processed,
                 edges_processed: out.train.edges_processed,
                 timesteps: out.train.timesteps,
+                stripe_passes: out.train.stripe_passes,
+                stripe_reads: out.train.stripe_reads,
+                ..Default::default()
             };
             let mean_loglik =
                 out.train.loglik_history.last().copied().unwrap_or(f64::NEG_INFINITY);
@@ -753,13 +784,26 @@ fn parse_line(
         }
         "stats" => Command::Stats,
         "tenants" => Command::Tenants,
+        "metrics" => Command::Metrics,
+        "trace" => {
+            let tok = toks.next().ok_or("trace: missing mode (`on` or `off`)")?;
+            let on = match tok {
+                "on" => true,
+                "off" => false,
+                other => {
+                    return Err(format!("trace: unknown mode {other:?} (expected on | off)"))
+                }
+            };
+            Command::Trace { on }
+        }
+        "trace-dump" => Command::TraceDump,
         "quit" | "exit" => Command::Quit,
         "shutdown" => Command::Shutdown,
         other => {
             return Err(format!(
                 "unknown command {other:?} (expected tenant | deadline | register | \
                  register-profile | score | align | search | correct | stats | tenants | \
-                 quit | shutdown)"
+                 metrics | trace | trace-dump | quit | shutdown)"
             ))
         }
     };
@@ -777,6 +821,9 @@ enum Command {
     Submit { engine: EngineKind, body: Request },
     Stats,
     Tenants,
+    Metrics,
+    Trace { on: bool },
+    TraceDump,
     Quit,
     Shutdown,
 }
@@ -894,6 +941,11 @@ pub fn serve_connection<R: BufRead, W: Write>(
     let mut tenant = DEFAULT_TENANT.to_string();
     let mut priority = Priority::Normal;
     let mut deadline: Option<Duration> = None;
+    // Per-session tracing flag (`trace on|off`): traced submissions
+    // carry their span timeline into the server's trace ring and echo
+    // `trace=<id>` on the response line.  Results are bit-identical
+    // either way (span capture sits at stage boundaries only).
+    let mut trace = false;
     let mut line = String::new();
     // Idle reaping: a session that completes no command for
     // `serve.idle_timeout_ms` is closed.  The check only fires on
@@ -985,14 +1037,49 @@ pub fn serve_connection<R: BufRead, W: Write>(
                 }
             }
             Ok(Some(Command::Submit { engine, body })) => {
-                match server.submit_with_deadline(&tenant, priority, Some(engine), body, deadline)
+                match server.submit_traced(&tenant, priority, Some(engine), body, deadline, trace)
                 {
-                    Ok(ticket) => format_response(server.config(), &ticket.wait()),
+                    Ok(ticket) => {
+                        let id = ticket.id;
+                        let mut reply = format_response(server.config(), &ticket.wait());
+                        // Traced sessions see the trace id on every
+                        // response line — the key into `trace-dump`.
+                        if trace {
+                            reply.push_str(&format!(" trace={id}"));
+                        }
+                        reply
+                    }
                     Err(e) => format!("err {e}"),
                 }
             }
             Ok(Some(Command::Stats)) => server.stats_line(),
             Ok(Some(Command::Tenants)) => server.tenants_line(),
+            Ok(Some(Command::Metrics)) => {
+                // Multi-line block: Prometheus text exposition, using
+                // its own `# EOF` terminator as the end-of-block
+                // delimiter on the line protocol.
+                let text = server.metrics_text();
+                if write!(out, "{text}").is_err() || out.flush().is_err() {
+                    return Ok(SessionEnd::Eof);
+                }
+                continue;
+            }
+            Ok(Some(Command::Trace { on })) => {
+                trace = on;
+                format!("ok trace {}", if on { "on" } else { "off" })
+            }
+            Ok(Some(Command::TraceDump)) => {
+                // Last-N retained timelines, one JSON line each,
+                // oldest first, then the `ok` summary line.
+                let dump = server.trace_dump();
+                let n = dump.len();
+                for l in &dump {
+                    if writeln!(out, "{l}").is_err() {
+                        return Ok(SessionEnd::Eof);
+                    }
+                }
+                format!("ok trace-dump n={n}")
+            }
             Ok(Some(Command::Quit)) => {
                 let _ = writeln!(out, "ok bye");
                 let _ = out.flush();

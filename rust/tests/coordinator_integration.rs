@@ -98,7 +98,7 @@ fn xla_backend_runs_and_agrees_with_native() {
             100 * same / n.max(1)
         );
     }
-    assert_eq!(m_xla.summary(1.0).jobs_done, 4);
+    assert_eq!(m_xla.summary().jobs_done, 4);
 }
 
 #[test]
@@ -119,5 +119,5 @@ fn xla_backend_rejects_oversized_reads() {
     };
     let metrics = Metrics::default();
     let result = run_jobs(jobs, &cfg, &metrics);
-    assert!(result.is_err() || metrics.summary(1.0).jobs_failed > 0);
+    assert!(result.is_err() || metrics.summary().jobs_failed > 0);
 }

@@ -919,3 +919,205 @@ fn line_protocol_round_trip() {
     };
     assert_eq!(ll(lines[1]), ll(lines[2]));
 }
+
+/// Tentpole contract (observability): span capture sits at stage
+/// boundaries only, so tracing must not perturb a single result bit.
+/// The same mixed Score / Align / Correct workload runs once untraced
+/// and once traced; every response compares bit-for-bit, and only the
+/// traced run retains timelines in the ring.
+#[test]
+fn tracing_on_vs_off_is_bit_identical() {
+    let mut rng = XorShift::new(214);
+    let reference = dna(&mut rng, "chr1", 60);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let reads = reads_of(&mut rng, &reference, 6);
+
+    let run = |traced: bool| -> Vec<String> {
+        let mut server = Server::start(ServerConfig { n_workers: 2, ..Default::default() });
+        server.register_profile("chr1", phmm.clone());
+        let tickets: Vec<_> = reads
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let req = match i % 3 {
+                    0 => Request::Score { profile: "chr1".into(), read: r.clone() },
+                    1 => Request::Align { profile: "chr1".into(), read: r.clone() },
+                    _ => Request::Correct {
+                        reference: reference.clone(),
+                        reads: reads.clone(),
+                    },
+                };
+                server
+                    .submit_traced("bit", Priority::Normal, None, req, None, traced)
+                    .unwrap()
+            })
+            .collect();
+        // Render every response down to its raw bits so traced and
+        // untraced runs compare exactly (f64s via to_bits).
+        let keys: Vec<String> = tickets
+            .into_iter()
+            .map(|t| match t.wait().body {
+                ResponseBody::Score { loglik, log_odds, .. } => format!(
+                    "score:{:016x}:{:016x}",
+                    loglik.to_bits(),
+                    log_odds.to_bits()
+                ),
+                ResponseBody::Align { row, .. } => format!(
+                    "align:{:?}:{}:{:016x}",
+                    row.columns,
+                    row.insertions,
+                    row.loglik.to_bits()
+                ),
+                ResponseBody::Correct { consensus, mean_loglik, iters } => format!(
+                    "correct:{:?}:{:016x}:{iters}",
+                    consensus.data,
+                    mean_loglik.to_bits()
+                ),
+                other => panic!("request failed (traced={traced}): {other:?}"),
+            })
+            .collect();
+        let dump = server.trace_dump();
+        if traced {
+            assert_eq!(dump.len(), keys.len(), "every traced request must be retained");
+            for line in &dump {
+                assert!(line.contains("\"spans\""), "{line}");
+                assert!(line.contains("\"ok\":true"), "{line}");
+            }
+        } else {
+            assert!(dump.is_empty(), "untraced requests must never touch the ring");
+        }
+        server.shutdown(true);
+        keys
+    };
+
+    assert_eq!(run(false), run(true), "tracing must not perturb any result bit");
+}
+
+/// Wire observability: `trace on` echoes trace ids on response lines,
+/// `trace-dump` replays the retained timeline as one-line JSON with a
+/// complete admission→respond span breakdown, and `metrics` emits a
+/// Prometheus text block in which every line parses as exposition
+/// format (`# HELP` / `# TYPE` / `# EOF` or `name{labels} value`).
+#[test]
+fn wire_trace_and_metrics_round_trip() {
+    let mut rng = XorShift::new(215);
+    let reference = dna(&mut rng, "chr1", 40);
+    let ascii_ref = reference.to_ascii(aphmm::seq::DNA);
+    let read = simulate_read(&mut rng, &reference, 0, 40, &ErrorProfile::pacbio(), 0).seq;
+    let ascii_read = read.to_ascii(aphmm::seq::DNA);
+
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    let script = format!(
+        "register chr1 {ascii_ref}\ntrace on\nscore chr1 {ascii_read}\n\
+         trace-dump\nmetrics\ntrace off\nquit\n"
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let end = aphmm::server::serve_connection(&server, script.as_bytes(), &mut out).unwrap();
+    assert_eq!(end, aphmm::server::SessionEnd::Quit);
+    server.shutdown(true);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines[0].starts_with("ok profile chr1 states="), "{}", lines[0]);
+    assert_eq!(lines[1], "ok trace on");
+    assert!(lines[2].starts_with("score chr1 loglik="), "{}", lines[2]);
+    let trace_id = lines[2]
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("trace="))
+        .expect("traced score reply must echo its trace id");
+
+    // trace-dump: one JSON timeline (the traced score, keyed by the
+    // echoed id) covering every pipeline stage, then the summary line.
+    assert!(
+        lines[3].starts_with('{') && lines[3].contains(&format!("\"trace_id\":{trace_id}")),
+        "{}",
+        lines[3]
+    );
+    for stage in
+        ["admission", "queue_wait", "cache_freeze", "forward", "backward", "update", "respond"]
+    {
+        assert!(lines[3].contains(&format!("\"{stage}\":")), "missing {stage}: {}", lines[3]);
+    }
+    assert!(lines[3].contains("\"kind\":\"score\""), "{}", lines[3]);
+    assert_eq!(lines[4], "ok trace-dump n=1");
+
+    // metrics: the block runs up to its `# EOF` terminator; the
+    // session then keeps serving (`ok trace off`, `ok bye`).
+    let eof = lines.iter().position(|l| *l == "# EOF").expect("metrics must end with # EOF");
+    let block = &lines[5..eof];
+    let is_sample = |line: &str| -> bool {
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(pair) => pair,
+            None => return false,
+        };
+        if value.parse::<f64>().is_err() {
+            return false;
+        }
+        let name_end = series.find('{').unwrap_or(series.len());
+        let name = &series[..name_end];
+        (name_end == series.len() || series.ends_with('}'))
+            && name.starts_with("aphmm_")
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    };
+    assert!(!block.is_empty());
+    for line in block {
+        assert!(
+            line.starts_with("# HELP aphmm_") || line.starts_with("# TYPE aphmm_")
+                || is_sample(line),
+            "unparseable exposition line: {line:?}"
+        );
+    }
+    // The families the paper's bottleneck breakdown cares about.
+    let has = |needle: &str| block.iter().any(|l| l.contains(needle));
+    assert!(has("# TYPE aphmm_stage_seconds histogram"), "{text}");
+    assert!(has("aphmm_stage_seconds_bucket{stage=\"forward\",le=\"+Inf\"}"), "{text}");
+    assert!(has("aphmm_stage_seconds_count{stage=\"queue_wait\"}"), "{text}");
+    assert!(has("aphmm_requests_total{result=\"ok\"} 1"), "{text}");
+    assert!(has("aphmm_cache_ops_total{op=\"miss\"} 1"), "{text}");
+    // A solo score runs the one-read kernel, not a striped pass, so
+    // the fill distribution is present but all-zero here (the batch
+    // path is pinned by the bench's stage section and CI grep).
+    assert!(has("aphmm_stripe_fill_passes_total{fill=\"1\"} 0"), "{text}");
+    assert!(has("aphmm_stripe_fill_passes_total{fill=\"8\"} 0"), "{text}");
+    assert!(has("aphmm_simd_lane_width"), "{text}");
+    assert_eq!(lines[eof + 1], "ok trace off");
+    assert_eq!(lines[eof + 2], "ok bye");
+}
+
+/// Satellite: `tenants` output (wire line and `MetricsSummary` alike)
+/// is deterministically sorted by tenant id, independent of submission
+/// order — diffable across scrapes.
+#[test]
+fn tenants_output_is_sorted_by_tenant_id() {
+    let mut rng = XorShift::new(216);
+    let reference = dna(&mut rng, "chr1", 40);
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let mut server = Server::start(ServerConfig { n_workers: 1, ..Default::default() });
+    server.register_profile("chr1", phmm);
+    let read = reads_of(&mut rng, &reference, 1).remove(0);
+
+    // Deliberately submit in non-sorted order.
+    for tenant in ["zeta", "alpha", "mid"] {
+        let resp = server
+            .submit_for(
+                tenant,
+                Priority::Normal,
+                None,
+                Request::Score { profile: "chr1".into(), read: read.clone() },
+            )
+            .unwrap()
+            .wait();
+        assert!(matches!(resp.body, ResponseBody::Score { .. }), "{:?}", resp.body);
+    }
+    let m = server.metrics_summary();
+    let order: Vec<&str> = m.tenants.iter().map(|t| t.tenant.as_str()).collect();
+    assert_eq!(order, vec!["alpha", "mid", "zeta"], "summary tenants must sort by id");
+
+    let line = server.tenants_line();
+    let pos = |needle: &str| {
+        line.find(needle).unwrap_or_else(|| panic!("{needle} missing from {line}"))
+    };
+    assert!(pos("alpha:") < pos("mid:"), "{line}");
+    assert!(pos("mid:") < pos("zeta:"), "{line}");
+    server.shutdown(true);
+}
