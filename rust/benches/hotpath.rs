@@ -21,9 +21,9 @@ mod common;
 use std::path::Path;
 
 use aphmm::baumwelch::{
-    forward_sparse, forward_sparse_with, reference, score_sparse_with, score_striped_with,
+    forward_sparse, forward_sparse_with, reference, score_sparse_with, score_striped_with, train,
     BandedCoeffs, BandedEngine, BwAccumulators, FilterConfig, ForwardOptions, ForwardScratch,
-    FusedCoeffs, GatherKind, SimdPolicy, MAX_STRIPE,
+    FusedCoeffs, GatherKind, ScratchMode, SimdPolicy, TrainConfig, MAX_STRIPE,
 };
 use aphmm::coordinator::StageSummary;
 use aphmm::seq::Sequence;
@@ -481,6 +481,72 @@ fn main() {
     } else {
         println!("xla bw_sums: skipped (run `make artifacts`)");
     }
+
+    // === checkpointed scratch: full-matrix vs √T-checkpoint recompute
+    // === on a long read (the linear-memory Baum-Welch mode).  Results
+    // === are bit-identical by contract (pinned by
+    // === tests/engine_matrix.rs); these rows record the time cost of
+    // === recomputing each segment's forward rows and the peak-scratch
+    // === reduction that pays for it.
+    common::banner("checkpointed scratch: full matrix vs sqrt(T) recompute (long read)");
+    let long_len = if short { 1_500 } else { 8_000 };
+    let mut lr_rng = aphmm::sim::XorShift::new(41);
+    let long_ref = aphmm::sim::generate_genome(&mut lr_rng, long_len);
+    let long_read = aphmm::sim::simulate_ultralong_read(&mut lr_rng, &long_ref, 0, long_len, 0).seq;
+    let long_graph = Phmm::error_correction(&long_ref, &EcDesignParams::default()).unwrap();
+    let ckpt_cfg = TrainConfig {
+        max_iters: 1,
+        filter: FilterConfig::histogram_default(),
+        ..Default::default()
+    };
+    let run_mode = |mode: ScratchMode| {
+        let mut g = long_graph.clone();
+        train(
+            &mut g,
+            std::slice::from_ref(&long_read),
+            &TrainConfig { scratch_mode: mode, ..ckpt_cfg },
+        )
+        .unwrap()
+    };
+    let full_res = run_mode(ScratchMode::Full);
+    let ckpt_res = run_mode(ScratchMode::Checkpointed);
+    assert_eq!(
+        full_res.loglik_history.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        ckpt_res.loglik_history.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "checkpointed training diverged from the full matrix — a fast wrong answer \
+         must not make it into the perf log"
+    );
+    let t_ckpt_full = common::time_median(reps_small, || {
+        run_mode(ScratchMode::Full);
+    });
+    let t_ckpt_new = common::time_median(reps_small, || {
+        run_mode(ScratchMode::Checkpointed);
+    });
+    println!(
+        "checkpointed fwd+bwd: full {:>9.3} ms -> checkpointed {:>9.3} ms  ({:.2}x time, T={})",
+        t_ckpt_full * 1e3,
+        t_ckpt_new * 1e3,
+        t_ckpt_full / t_ckpt_new,
+        long_read.len()
+    );
+    println!(
+        "checkpointed peak scratch: full {} B -> checkpointed {} B  ({:.1}x smaller)",
+        full_res.peak_scratch_bytes,
+        ckpt_res.peak_scratch_bytes,
+        full_res.peak_scratch_bytes as f64 / ckpt_res.peak_scratch_bytes.max(1) as f64
+    );
+    rows.push(BenchRow {
+        name: "checkpointed fwd+bwd",
+        baseline_s: t_ckpt_full,
+        new_s: t_ckpt_new,
+    });
+    // Bytes ride the ns fields (scaled so `*_ns` holds raw bytes); the
+    // `speedup` field is the scratch-reduction factor CI tracks.
+    rows.push(BenchRow {
+        name: "checkpointed peak scratch bytes",
+        baseline_s: full_res.peak_scratch_bytes as f64 * 1e-9,
+        new_s: ckpt_res.peak_scratch_bytes.max(1) as f64 * 1e-9,
+    });
 
     // === serving-layer stage accounting: drive a tiny in-process
     // === server through the striped Score path plus one training

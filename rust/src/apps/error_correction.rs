@@ -8,7 +8,9 @@
 
 use std::time::Instant;
 
-use crate::baumwelch::{train_in_with, EngineKind, FilterConfig, TrainConfig, TrainResult};
+use crate::baumwelch::{
+    train_in_with, EngineKind, FilterConfig, ScratchMode, TrainConfig, TrainResult,
+};
 use crate::cancel::CancelToken;
 use crate::error::Result;
 use crate::mapper::{MapperConfig, MinimizerIndex};
@@ -100,6 +102,19 @@ pub struct CorrectionConfig {
     pub estep_workers: usize,
     /// Baum-Welch backend used to train each chunk.
     pub engine: EngineKind,
+    /// Forward-scratch policy for training.  The long-read default is
+    /// [`ScratchMode::Auto`]: normal chunk segments (≈`chunk_len`
+    /// bases) resolve to the full matrix, while an ultra-long segment
+    /// whose full matrix would exceed [`max_scratch_bytes`] trains
+    /// checkpointed — bit-identical output, O(√T·states) peak scratch.
+    ///
+    /// [`max_scratch_bytes`]: CorrectionConfig::max_scratch_bytes
+    pub scratch_mode: ScratchMode,
+    /// Per-read forward-scratch budget (bytes) that `Auto` resolves
+    /// against.  The default (256 MiB) never triggers on paper-scale
+    /// 650-base chunks; it exists to keep nanopore-length segments
+    /// from materializing multi-gigabyte matrices.
+    pub max_scratch_bytes: usize,
 }
 
 impl Default for CorrectionConfig {
@@ -114,6 +129,8 @@ impl Default for CorrectionConfig {
             mapper: MapperConfig::default(),
             estep_workers: 1,
             engine: EngineKind::Sparse,
+            scratch_mode: ScratchMode::Auto,
+            max_scratch_bytes: 256 << 20,
         }
     }
 }
@@ -140,6 +157,9 @@ pub struct CorrectionReport {
     /// Read segments skipped during training (numerically dead),
     /// aggregated over chunks and EM iterations.
     pub reads_skipped: u64,
+    /// Highest per-read forward-row scratch any chunk reached (bytes;
+    /// high-water mark across chunks, not a sum).
+    pub peak_scratch_bytes: u64,
 }
 
 /// Run Apollo-style error correction of `assembly` using `reads`.
@@ -172,6 +192,7 @@ pub fn correct_assembly(
     let mut edges_processed = 0u64;
     let mut timesteps = 0u64;
     let mut reads_skipped = 0u64;
+    let mut peak_scratch_bytes = 0u64;
 
     for c in 0..n_chunks {
         let lo = c * cfg.chunk_len;
@@ -215,6 +236,8 @@ pub fn correct_assembly(
             filter: cfg.filter,
             n_workers: cfg.estep_workers,
             engine: cfg.engine,
+            scratch_mode: cfg.scratch_mode,
+            max_scratch_bytes: cfg.max_scratch_bytes,
             ..Default::default()
         };
         let out =
@@ -228,6 +251,7 @@ pub fn correct_assembly(
         edges_processed += res.edges_processed;
         timesteps += res.timesteps;
         reads_skipped += res.reads_skipped;
+        peak_scratch_bytes = peak_scratch_bytes.max(res.peak_scratch_bytes);
         corrected_parts.push(out.consensus);
         chunks_trained += 1;
     }
@@ -246,6 +270,7 @@ pub fn correct_assembly(
         edges_processed,
         timesteps,
         reads_skipped,
+        peak_scratch_bytes,
     })
 }
 

@@ -200,6 +200,30 @@ impl BandedBwSums {
     }
 }
 
+/// Checkpointed banded forward product: every ⌈√T⌉-th post-normalize
+/// row plus all `T` scales (the banded counterpart of the sparse
+/// engine's `CheckpointedForward`).
+#[derive(Clone, Debug)]
+pub(super) struct BandedCheckpointedForward {
+    /// Checkpoint rows at `t = 0, K, 2K, …`, row-major `[n_ckpts × N]`.
+    pub(super) ckpt_rows: Vec<f32>,
+    /// Per-timestep scale factors — all `T` of them.
+    pub(super) scales: Vec<f32>,
+    /// Checkpoint interval `K = ⌈√T⌉`.
+    pub(super) seg_len: usize,
+    /// `log P(S | G)`.
+    pub(super) loglik: f64,
+    /// State count the rows were built for.
+    pub(super) n: usize,
+}
+
+impl BandedCheckpointedForward {
+    /// Resident bytes of the checkpoint rows + scales.
+    pub(super) fn ckpt_bytes(&self) -> u64 {
+        (self.ckpt_rows.len() + self.scales.len()) as u64 * 4
+    }
+}
+
 /// The dense banded compute engine.
 pub struct BandedEngine;
 
@@ -472,6 +496,205 @@ impl BandedEngine {
         Ok(sums)
     }
 
+    /// Checkpointed fused forward (`ScratchMode::Checkpointed` for the
+    /// banded engine): identical arithmetic to
+    /// [`BandedEngine::forward_with`] — the kept rows, every scale and
+    /// the log-likelihood are bit-identical — but only every ⌈√T⌉-th
+    /// post-normalize row is stored (`O(√T·N)` instead of `O(T·N)`).
+    pub(super) fn forward_checkpointed_with(
+        b: &BandedPhmm,
+        coeffs: &BandedCoeffs,
+        seq: &Sequence,
+    ) -> Result<BandedCheckpointedForward> {
+        precheck_banded(b, coeffs, seq)?;
+        let (n, w) = (b.n, b.w);
+        let t_len = seq.len();
+        let seg_len = super::sparse::checkpoint_interval(t_len);
+        let n_ckpts = (t_len - 1) / seg_len + 1;
+        let mut ckpt_rows = vec![0.0f32; n_ckpts * n];
+        let mut scales = vec![0.0f32; t_len];
+        let mut loglik = 0.0f64;
+        let mut prev = vec![0.0f32; n];
+        let mut cur = vec![0.0f32; n];
+        // t = 0: fused init·emission row (always checkpoint 0).
+        {
+            let init = coeffs.init_for(seq.data[0] as usize);
+            let mut c = 0.0f32;
+            for i in 0..n {
+                let v = init[i];
+                prev[i] = v;
+                c += v;
+            }
+            if c <= EPS {
+                return Err(ApHmmError::Numerical("dead start in banded forward".into()));
+            }
+            for i in 0..n {
+                prev[i] /= c;
+            }
+            scales[0] = c;
+            loglik += (c as f64).ln();
+            ckpt_rows[..n].copy_from_slice(&prev);
+        }
+        for t in 1..t_len {
+            let coef = coeffs.coef_for(seq.data[t] as usize);
+            cur.iter_mut().for_each(|x| *x = 0.0);
+            for j in 0..n {
+                let fj = prev[j];
+                if fj == 0.0 {
+                    continue;
+                }
+                let row = &coef[j * w..(j + 1) * w];
+                let hi = w.min(n - j);
+                for x in 0..hi {
+                    cur[j + x] += fj * row[x];
+                }
+            }
+            let mut c = 0.0f32;
+            for i in 0..n {
+                c += cur[i];
+            }
+            if c <= EPS {
+                return Err(ApHmmError::Numerical(format!("banded forward died at t={t}")));
+            }
+            let inv = 1.0 / c;
+            for i in 0..n {
+                cur[i] *= inv;
+            }
+            scales[t] = c;
+            loglik += (c as f64).ln();
+            if t % seg_len == 0 {
+                let s = t / seg_len;
+                ckpt_rows[s * n..(s + 1) * n].copy_from_slice(&cur);
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        Ok(BandedCheckpointedForward { ckpt_rows, scales, seg_len, loglik, n })
+    }
+
+    /// Checkpointed fused backward + update scan: recompute each
+    /// segment's forward rows from its checkpoint (replaying the exact
+    /// [`BandedEngine::forward_with`] arithmetic), then consume them
+    /// with the exact per-timestep arithmetic of
+    /// [`BandedEngine::backward_sums_with`] — the sums are bit-identical
+    /// to the full-matrix path.  The backward row pair carries across
+    /// segment boundaries untouched (every entry is rewritten each
+    /// timestep, so no support bookkeeping is needed in the dense
+    /// engine).
+    ///
+    /// Returns the sums plus the peak forward-row scratch in bytes
+    /// (checkpoints + scales + the per-segment recompute buffer), the
+    /// `O(√T·N)` quantity the scratch accounting reports.
+    pub(super) fn backward_sums_checkpointed_with(
+        b: &BandedPhmm,
+        coeffs: &BandedCoeffs,
+        seq: &Sequence,
+        ckpt: &BandedCheckpointedForward,
+    ) -> Result<(BandedBwSums, u64)> {
+        precheck_banded(b, coeffs, seq)?;
+        let (n, w, sigma) = (b.n, b.w, b.sigma);
+        debug_assert_eq!(n, ckpt.n);
+        let t_len = seq.len();
+        let k = ckpt.seg_len;
+        let n_segs = ckpt.ckpt_rows.len() / n;
+        debug_assert_eq!(n_segs, (t_len - 1) / k + 1);
+        let mut sums = BandedBwSums::zeros(n, w, sigma);
+        sums.loglik = ckpt.loglik as f32;
+
+        let mut b_next = vec![1.0f32; n]; // B̂_{T-1} = 1
+        let mut b_cur = vec![0.0f32; n];
+        let mut seg = vec![0.0f32; k * n];
+        let peak = ckpt.ckpt_bytes() + (k * n) as u64 * 4;
+        for s in (0..n_segs).rev() {
+            let start = s * k;
+            let len = k.min(t_len - start);
+            // Recompute the segment rows from checkpoint `s` — the same
+            // fused scatter as the forward pass, from an exactly-stored
+            // post-normalize row, so every recomputed row (and its
+            // recomputed scale) is bit-identical.
+            seg[..n].copy_from_slice(&ckpt.ckpt_rows[s * n..(s + 1) * n]);
+            for t in start + 1..start + len {
+                let coef = coeffs.coef_for(seq.data[t] as usize);
+                let off = (t - start) * n;
+                let (prev_rows, cur_rows) = seg.split_at_mut(off);
+                let prev = &prev_rows[off - n..];
+                let cur = &mut cur_rows[..n];
+                cur.iter_mut().for_each(|x| *x = 0.0);
+                for j in 0..n {
+                    let fj = prev[j];
+                    if fj == 0.0 {
+                        continue;
+                    }
+                    let row = &coef[j * w..(j + 1) * w];
+                    let hi = w.min(n - j);
+                    for x in 0..hi {
+                        cur[j + x] += fj * row[x];
+                    }
+                }
+                let mut c = 0.0f32;
+                for i in 0..n {
+                    c += cur[i];
+                }
+                if c <= EPS {
+                    // Unreachable for a read whose forward pass
+                    // succeeded; kept as a real error for safety.
+                    return Err(ApHmmError::Numerical(format!(
+                        "banded forward died at t={t} during recompute"
+                    )));
+                }
+                debug_assert_eq!(
+                    c.to_bits(),
+                    ckpt.scales[t].to_bits(),
+                    "recomputed banded scale diverged at t={t}"
+                );
+                let inv = 1.0 / c;
+                for i in 0..n {
+                    cur[i] *= inv;
+                }
+            }
+            // γ at t = T-1 (only the last segment holds that row).
+            if s == n_segs - 1 {
+                let f_last = &seg[(len - 1) * n..len * n];
+                let s_t = seq.data[t_len - 1] as usize;
+                for i in 0..n {
+                    let g = f_last[i];
+                    sums.gamma_den[i] += g;
+                    sums.e_num[i * sigma + s_t] += g;
+                }
+            }
+            // Consume the segment, last timestep first — the exact
+            // per-timestep arithmetic of `backward_sums_with`.
+            let top = (start + len).min(t_len - 1);
+            for t in (start..top).rev() {
+                let coef = coeffs.coef_for(seq.data[t + 1] as usize);
+                let s_t = seq.data[t] as usize;
+                let inv_c = 1.0 / ckpt.scales[t + 1];
+                let f_t = &seg[(t - start) * n..(t - start + 1) * n];
+                for j in 0..n {
+                    let row = &coef[j * w..(j + 1) * w];
+                    let hi = w.min(n - j);
+                    let mut acc = 0.0f32;
+                    let fj = f_t[j];
+                    for x in 0..hi {
+                        let ae = row[x];
+                        if ae == 0.0 {
+                            continue;
+                        }
+                        let m = ae * b_next[j + x] * inv_c;
+                        acc += m;
+                        sums.xi_band[j * w + x] += fj * m;
+                    }
+                    b_cur[j] = acc;
+                    let g = fj * acc;
+                    sums.trans_den[j] += g;
+                    sums.gamma_den[j] += g;
+                    sums.e_num[j * sigma + s_t] += g;
+                }
+                std::mem::swap(&mut b_next, &mut b_cur);
+            }
+        }
+        Ok((sums, peak))
+    }
+
     /// Posterior best-state decode (hmmalign's alignment rule): forward
     /// plus a backward scan tracking `argmax_i γ_t(i) = F̂_t(i)·B̂_t(i)`
     /// per timestep, both on the fused coefficient tables.  The two
@@ -704,6 +927,40 @@ mod tests {
                 assert_eq!(a.to_bits(), b_.to_bits());
             }
             for (a, b_) in old.e_num.iter().zip(&new.e_num) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn checkpointed_banded_sums_are_bit_identical_to_full() {
+        // Checkpointed forward + segment-recompute backward must land
+        // the exact bits of the full-matrix fused path.
+        testutil::check(10, |rng| {
+            let __h0 = rng.range(4, 30);
+            let __h1 = rng.range(1, 40);
+            let (g, obs) = setup(rng, __h0, __h1);
+            let b = g.to_banded().unwrap();
+            let c = BandedCoeffs::new(&b);
+            let full = BandedEngine::bw_sums_with(&b, &c, &obs).unwrap();
+
+            let ckpt = BandedEngine::forward_checkpointed_with(&b, &c, &obs).unwrap();
+            assert_eq!(ckpt.seg_len, super::super::sparse::checkpoint_interval(obs.len()));
+            let (chk, peak) =
+                BandedEngine::backward_sums_checkpointed_with(&b, &c, &obs, &ckpt).unwrap();
+            assert!(peak >= ckpt.ckpt_bytes());
+
+            assert_eq!(full.loglik.to_bits(), chk.loglik.to_bits());
+            for (a, b_) in full.xi_band.iter().zip(&chk.xi_band) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+            for (a, b_) in full.trans_den.iter().zip(&chk.trans_den) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+            for (a, b_) in full.gamma_den.iter().zip(&chk.gamma_den) {
+                assert_eq!(a.to_bits(), b_.to_bits());
+            }
+            for (a, b_) in full.e_num.iter().zip(&chk.e_num) {
                 assert_eq!(a.to_bits(), b_.to_bits());
             }
         });

@@ -42,9 +42,12 @@ use super::kernels::{ForwardScratch, FusedCoeffs};
 use super::lowering::BandedLowering;
 use super::reference;
 use super::simd::MAX_STRIPE;
-use super::sparse::{forward_sparse_with, score_sparse_with, ForwardOptions, ScoreResult};
+use super::sparse::{
+    self, forward_sparse_with, score_sparse_with, ForwardOptions, ScoreResult, ScratchMode,
+};
 use super::striped;
 use super::update::BwAccumulators;
+use crate::cancel::CancelToken;
 use crate::error::Result;
 use crate::phmm::Phmm;
 use crate::seq::Sequence;
@@ -132,6 +135,13 @@ pub struct ReadStats {
     /// stripe_passes` = mean stripe fill out of
     /// [`crate::baumwelch::MAX_STRIPE`]).
     pub stripe_reads: u64,
+    /// Peak forward-row scratch bytes held while processing this read:
+    /// all `T` rows + scales under [`ScratchMode::Full`], checkpoint
+    /// rows + scales + the largest live segment buffer under
+    /// [`ScratchMode::Checkpointed`].  Backward/dense buffers are
+    /// excluded — they are identical in both modes.  A high-water
+    /// mark: [`ReadStats::merge`] takes the `max`, not the sum.
+    pub peak_scratch_bytes: u64,
 }
 
 impl ReadStats {
@@ -147,6 +157,7 @@ impl ReadStats {
         self.timesteps += other.timesteps;
         self.stripe_passes += other.stripe_passes;
         self.stripe_reads += other.stripe_reads;
+        self.peak_scratch_bytes = self.peak_scratch_bytes.max(other.peak_scratch_bytes);
     }
 }
 
@@ -190,6 +201,14 @@ pub trait ExpectationEngine: Sync {
 
     /// A zeroed accumulator shaped for `phmm`.
     fn make_acc(&self, phmm: &Phmm) -> Self::Acc;
+
+    /// Install a cooperative cancel token into `scratch`, observed by
+    /// long-running accumulate sweeps at safe points (the sparse
+    /// engine's checkpointed backward checks it at segment boundaries,
+    /// never inside a reduction).  Default: no-op — engines without an
+    /// intra-read cancel point ignore it and rely on the per-read
+    /// checks of the training loop.
+    fn set_cancel(&self, _scratch: &mut Self::Scratch, _cancel: &CancelToken) {}
 
     /// Forward + fused backward/update of one read into `acc`.
     ///
@@ -303,6 +322,69 @@ pub struct SparsePrepared {
     pub coeffs: FusedCoeffs,
 }
 
+impl SparseEngine {
+    /// One striped forward pass over `chunk` (≤ [`MAX_STRIPE`] reads)
+    /// followed by the per-read fused backward/update sweeps, pushing
+    /// one result per read onto `out` in chunk order.  The full-matrix
+    /// half of [`ExpectationEngine::accumulate_batch`]; no-op on an
+    /// empty chunk.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_stripe(
+        &self,
+        phmm: &Phmm,
+        prep: &SparsePrepared,
+        chunk: &[&Sequence],
+        opts: &ForwardOptions,
+        scratch: &mut ForwardScratch,
+        acc: &mut BwAccumulators,
+        out: &mut Vec<Result<ReadStats>>,
+    ) {
+        if chunk.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let fwds = striped::forward_striped_with(phmm, &prep.coeffs, chunk, opts, scratch);
+        // One striped pass serves the whole chunk; attribute the
+        // wall time evenly so aggregated forward_ns stays a usable
+        // Fig. 2 proxy.
+        let fwd_ns = t0.elapsed().as_nanos() / chunk.len() as u128;
+        // Backwards run per read, in chunk order: the accumulator
+        // sees the exact += sequence of the sequential loop, so
+        // the merged sums stay bit-identical to one-at-a-time.
+        let mut first_in_chunk = true;
+        for (read, fwd) in chunk.iter().zip(fwds) {
+            let fwd = match fwd {
+                Ok(f) => f,
+                Err(e) => {
+                    out.push(Err(e));
+                    continue;
+                }
+            };
+            // Stripe accounting rides on the chunk's first
+            // surviving read so merged totals count each striped
+            // pass exactly once.
+            let mut stats = ReadStats {
+                forward_ns: fwd_ns,
+                filter_stats: fwd.filter_stats,
+                states_processed: fwd.states_processed,
+                edges_processed: fwd.edges_processed,
+                timesteps: fwd.rows.len() as u64,
+                stripe_passes: u64::from(first_in_chunk),
+                stripe_reads: if first_in_chunk { chunk.len() as u64 } else { 0 },
+                peak_scratch_bytes: fwd.rows.iter().map(sparse::row_bytes).sum::<u64>()
+                    + fwd.scales.len() as u64 * 4,
+                ..Default::default()
+            };
+            first_in_chunk = false;
+            let t1 = Instant::now();
+            let res = acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch, opts);
+            stats.backward_update_ns = t1.elapsed().as_nanos();
+            scratch.recycle(fwd);
+            out.push(res.map(|()| stats));
+        }
+    }
+}
+
 impl ExpectationEngine for SparseEngine {
     type Prepared = SparsePrepared;
     type Scratch = ForwardScratch;
@@ -324,6 +406,10 @@ impl ExpectationEngine for SparseEngine {
         BwAccumulators::new(phmm)
     }
 
+    fn set_cancel(&self, scratch: &mut ForwardScratch, cancel: &CancelToken) {
+        scratch.cancel = cancel.clone();
+    }
+
     fn accumulate_read(
         &self,
         phmm: &Phmm,
@@ -333,6 +419,27 @@ impl ExpectationEngine for SparseEngine {
         scratch: &mut ForwardScratch,
         acc: &mut BwAccumulators,
     ) -> Result<ReadStats> {
+        let mode = opts.scratch.resolve(read.len(), phmm.n_states(), opts.max_scratch_bytes);
+        if mode == ScratchMode::Checkpointed {
+            let t0 = Instant::now();
+            let ckpt =
+                sparse::forward_checkpointed_with(phmm, &prep.coeffs, read, opts, scratch)?;
+            let mut stats = ReadStats {
+                forward_ns: t0.elapsed().as_nanos(),
+                filter_stats: ckpt.filter_stats,
+                states_processed: ckpt.states_processed,
+                edges_processed: ckpt.edges_processed,
+                timesteps: read.len() as u64,
+                ..Default::default()
+            };
+            let t1 = Instant::now();
+            let peak =
+                acc.accumulate_checkpointed_with(phmm, &prep.coeffs, read, &ckpt, scratch, opts);
+            stats.backward_update_ns = t1.elapsed().as_nanos();
+            scratch.recycle_checkpointed(ckpt);
+            stats.peak_scratch_bytes = peak?;
+            return Ok(stats);
+        }
         let t0 = Instant::now();
         let fwd = forward_sparse_with(phmm, &prep.coeffs, read, opts, scratch)?;
         let mut stats = ReadStats {
@@ -341,6 +448,8 @@ impl ExpectationEngine for SparseEngine {
             states_processed: fwd.states_processed,
             edges_processed: fwd.edges_processed,
             timesteps: fwd.rows.len() as u64,
+            peak_scratch_bytes: fwd.rows.iter().map(sparse::row_bytes).sum::<u64>()
+                + fwd.scales.len() as u64 * 4,
             ..Default::default()
         };
         let t1 = Instant::now();
@@ -359,47 +468,32 @@ impl ExpectationEngine for SparseEngine {
         scratch: &mut ForwardScratch,
         acc: &mut BwAccumulators,
     ) -> Vec<Result<ReadStats>> {
+        // The striped forward materializes every row of every lane, so
+        // it cannot serve reads that resolve to checkpointing.  Walk
+        // the batch in order, buffering consecutive full-matrix reads
+        // into ≤ MAX_STRIPE stripes and flushing the buffer before
+        // each checkpointed read runs through the per-read path — the
+        // accumulator still sees the exact += order of the sequential
+        // loop, preserving the batch bit-identity contract (see
+        // `baumwelch/README.md`, "Memory modes").
+        let n_states = phmm.n_states();
         let mut out = Vec::with_capacity(reads.len());
-        for chunk in reads.chunks(MAX_STRIPE) {
-            let t0 = Instant::now();
-            let fwds = striped::forward_striped_with(phmm, &prep.coeffs, chunk, opts, scratch);
-            // One striped pass serves the whole chunk; attribute the
-            // wall time evenly so aggregated forward_ns stays a usable
-            // Fig. 2 proxy.
-            let fwd_ns = t0.elapsed().as_nanos() / chunk.len() as u128;
-            // Backwards run per read, in chunk order: the accumulator
-            // sees the exact += sequence of the sequential loop, so
-            // the merged sums stay bit-identical to one-at-a-time.
-            let mut first_in_chunk = true;
-            for (read, fwd) in chunk.iter().zip(fwds) {
-                let fwd = match fwd {
-                    Ok(f) => f,
-                    Err(e) => {
-                        out.push(Err(e));
-                        continue;
-                    }
-                };
-                // Stripe accounting rides on the chunk's first
-                // surviving read so merged totals count each striped
-                // pass exactly once.
-                let mut stats = ReadStats {
-                    forward_ns: fwd_ns,
-                    filter_stats: fwd.filter_stats,
-                    states_processed: fwd.states_processed,
-                    edges_processed: fwd.edges_processed,
-                    timesteps: fwd.rows.len() as u64,
-                    stripe_passes: u64::from(first_in_chunk),
-                    stripe_reads: if first_in_chunk { chunk.len() as u64 } else { 0 },
-                    ..Default::default()
-                };
-                first_in_chunk = false;
-                let t1 = Instant::now();
-                let res = acc.accumulate_with(phmm, &prep.coeffs, read, &fwd, scratch, opts);
-                stats.backward_update_ns = t1.elapsed().as_nanos();
-                scratch.recycle(fwd);
-                out.push(res.map(|()| stats));
+        let mut stripe: Vec<&Sequence> = Vec::with_capacity(MAX_STRIPE.min(reads.len()));
+        for read in reads {
+            let mode = opts.scratch.resolve(read.len(), n_states, opts.max_scratch_bytes);
+            if mode == ScratchMode::Checkpointed {
+                self.accumulate_stripe(phmm, prep, &stripe, opts, scratch, acc, &mut out);
+                stripe.clear();
+                out.push(self.accumulate_read(phmm, prep, read, opts, scratch, acc));
+            } else {
+                stripe.push(read);
+                if stripe.len() == MAX_STRIPE {
+                    self.accumulate_stripe(phmm, prep, &stripe, opts, scratch, acc, &mut out);
+                    stripe.clear();
+                }
             }
         }
+        self.accumulate_stripe(phmm, prep, &stripe, opts, scratch, acc, &mut out);
         out
     }
 
@@ -605,10 +699,43 @@ impl ExpectationEngine for BandedEngine {
         _phmm: &Phmm,
         prep: &BandedPrepared,
         read: &Sequence,
-        _opts: &ForwardOptions,
+        opts: &ForwardOptions,
         _scratch: &mut (),
         acc: &mut BandedAcc,
     ) -> Result<ReadStats> {
+        let t = read.len() as u64;
+        let n = prep.banded.n as u64;
+        // The banded rows are dense, so Auto resolves on the exact
+        // full-matrix footprint: `T` rows of `n` f32 plus `T` scales —
+        // the same quantity `full_scratch_estimate` upper-bounds.
+        let mode = opts.scratch.resolve(read.len(), prep.banded.n, opts.max_scratch_bytes);
+        if mode == ScratchMode::Checkpointed {
+            let t0 = Instant::now();
+            let ckpt =
+                BandedEngine::forward_checkpointed_with(&prep.banded, &prep.coeffs, read)?;
+            let forward_ns = t0.elapsed().as_nanos();
+            let t1 = Instant::now();
+            let (sums, peak) = BandedEngine::backward_sums_checkpointed_with(
+                &prep.banded,
+                &prep.coeffs,
+                read,
+                &ckpt,
+            )?;
+            acc.sums.add(&sums);
+            acc.loglik += ckpt.loglik;
+            acc.n_observations += 1;
+            let backward_update_ns = t1.elapsed().as_nanos();
+            return Ok(ReadStats {
+                forward_ns,
+                backward_update_ns,
+                filter_stats: FilterStats::default(),
+                states_processed: n * t,
+                edges_processed: n * prep.banded.w as u64 * t.saturating_sub(1),
+                timesteps: t,
+                peak_scratch_bytes: peak,
+                ..Default::default()
+            });
+        }
         let t0 = Instant::now();
         let (f_rows, scales, loglik) =
             BandedEngine::forward_with(&prep.banded, &prep.coeffs, read)?;
@@ -626,8 +753,6 @@ impl ExpectationEngine for BandedEngine {
         acc.loglik += loglik;
         acc.n_observations += 1;
         let backward_update_ns = t1.elapsed().as_nanos();
-        let t = read.len() as u64;
-        let n = prep.banded.n as u64;
         Ok(ReadStats {
             forward_ns,
             backward_update_ns,
@@ -635,6 +760,7 @@ impl ExpectationEngine for BandedEngine {
             states_processed: n * t,
             edges_processed: n * prep.banded.w as u64 * t.saturating_sub(1),
             timesteps: t,
+            peak_scratch_bytes: (f_rows.len() + scales.len()) as u64 * 4,
             ..Default::default()
         })
     }

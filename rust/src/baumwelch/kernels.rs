@@ -40,8 +40,9 @@ use std::sync::OnceLock;
 
 use super::filter::{FilterConfig, HistogramFilter};
 use super::lowering::Lowering;
-use super::sparse::{ForwardResult, SparseRow};
+use super::sparse::{CheckpointedForward, ForwardResult, SparseRow};
 use super::tile::{DenseTiles, OutTiles};
+use crate::cancel::CancelToken;
 use crate::phmm::Phmm;
 
 /// Per-symbol fused coefficient tables for one parameter freeze.
@@ -215,6 +216,11 @@ pub struct ForwardScratch {
     pub(super) b_cur: Vec<f64>,
     /// Histogram-filter state (rebuilt when the bin count changes).
     pub(super) hist: Option<HistogramFilter>,
+    /// Cooperative cancel token observed by the checkpointed backward
+    /// sweep at segment boundaries (never inside a reduction).  Set per
+    /// request via [`super::ExpectationEngine::set_cancel`]; defaults to
+    /// the never-cancelled token.
+    pub(super) cancel: CancelToken,
     hist_bins: usize,
     row_pool: Vec<SparseRow>,
     rows_vec_pool: Vec<Vec<SparseRow>>,
@@ -302,6 +308,15 @@ impl ForwardScratch {
         self.rows_vec_pool.push(result.rows);
         result.scales.clear();
         self.scales_pool.push(result.scales);
+    }
+
+    /// Return a consumed [`CheckpointedForward`]'s buffers to the pools
+    /// (the checkpointed counterpart of [`ForwardScratch::recycle`]).
+    pub(super) fn recycle_checkpointed(&mut self, mut ckpt: CheckpointedForward) {
+        self.row_pool.append(&mut ckpt.ckpt_rows);
+        self.rows_vec_pool.push(ckpt.ckpt_rows);
+        ckpt.scales.clear();
+        self.scales_pool.push(ckpt.scales);
     }
 
     /// Number of [`SparseRow`]s ever allocated (pool misses).  Used by

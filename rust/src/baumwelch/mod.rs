@@ -78,8 +78,8 @@ pub use lowering::{
 };
 pub use simd::{SimdLanes, SimdPolicy, MAX_STRIPE, SIMD_REASSOC_ATOL, SIMD_REASSOC_RTOL};
 pub use sparse::{
-    forward_sparse, forward_sparse_with, score_sparse, score_sparse_with, ForwardOptions,
-    ForwardResult, ScoreResult, SparseRow,
+    forward_sparse, forward_sparse_with, full_scratch_estimate, score_sparse, score_sparse_with,
+    ForwardOptions, ForwardResult, ScoreResult, ScratchMode, SparseRow,
 };
 pub use striped::{forward_striped_with, score_striped_with};
 pub use tile::{DenseTiles, OutTiles};

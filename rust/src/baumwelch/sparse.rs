@@ -79,6 +79,96 @@ impl SparseRow {
     }
 }
 
+/// Training-path scratch policy: how the E-step stores forward rows
+/// between the forward pass and the fused backward/update sweep.
+///
+/// `Full` materializes every scaled row — `O(T·states)` scratch, no
+/// recompute.  `Checkpointed` keeps only every ⌈√T⌉-th post-filter row
+/// (plus all `T` scales) and recomputes each segment from its
+/// checkpoint during the backward sweep (Miklós & Meyer's linear-memory
+/// Baum-Welch): `O(√T·states)` scratch for one extra forward's worth of
+/// compute.  Recomputed rows replay the exact forward kernel sequence
+/// from an exactly-stored row, so they are **bit-identical** to the
+/// full-matrix rows — and so are the E-step sums consuming them.
+/// `Auto` resolves per read via [`ScratchMode::resolve`].
+///
+/// The score paths ([`score_sparse_with`] and friends) already run in
+/// `O(active states)` and ignore this knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ScratchMode {
+    /// Materialize every forward row (the original behavior).
+    #[default]
+    Full,
+    /// √T forward-recomputation checkpointing.
+    Checkpointed,
+    /// Per read: checkpoint iff the estimated full-matrix footprint
+    /// ([`full_scratch_estimate`]) exceeds the scratch budget
+    /// (`max_scratch_bytes`; budget 0 = unlimited = `Full`).
+    Auto,
+}
+
+impl ScratchMode {
+    /// Mode names for config parsing / display.
+    pub const NAMES: &'static [&'static str] = &["full", "checkpointed", "auto"];
+
+    /// Parse a config-file mode name.
+    pub fn parse(name: &str) -> Option<ScratchMode> {
+        match name {
+            "full" => Some(ScratchMode::Full),
+            "checkpointed" => Some(ScratchMode::Checkpointed),
+            "auto" => Some(ScratchMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// Canonical name of the mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScratchMode::Full => "full",
+            ScratchMode::Checkpointed => "checkpointed",
+            ScratchMode::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` for a concrete read: checkpoint when the estimated
+    /// full-matrix scratch for `t_len` timesteps over `n_states` exceeds
+    /// `budget` bytes.  A budget of 0 means unlimited, so `Auto`
+    /// degenerates to `Full`.  Never returns `Auto`.
+    pub fn resolve(self, t_len: usize, n_states: usize, budget: usize) -> ScratchMode {
+        match self {
+            ScratchMode::Auto => {
+                if budget > 0 && full_scratch_estimate(t_len, n_states) > budget as u64 {
+                    ScratchMode::Checkpointed
+                } else {
+                    ScratchMode::Full
+                }
+            }
+            m => m,
+        }
+    }
+}
+
+/// Upper-bound estimate of the full-matrix forward scratch for a read:
+/// every state active at every timestep, 8 bytes per active state
+/// (`u32` index + `f32` value) plus 4 bytes per scale.  Used by
+/// [`ScratchMode::Auto`] resolution and server admission — an estimate
+/// by construction (filtering makes real rows sparser), chosen as an
+/// upper bound so a budget refusal is never optimistic.
+pub fn full_scratch_estimate(t_len: usize, n_states: usize) -> u64 {
+    t_len as u64 * (n_states as u64 * 8 + 4)
+}
+
+/// Checkpoint interval: `K = ⌈√T⌉`, the Miklós & Meyer schedule that
+/// balances stored rows (`T/K`) against the recompute buffer (`K`).
+pub(super) fn checkpoint_interval(t_len: usize) -> usize {
+    ((t_len as f64).sqrt().ceil() as usize).max(1)
+}
+
+/// Heap bytes held by one sparse row's index + value vectors.
+pub(super) fn row_bytes(row: &SparseRow) -> u64 {
+    row.idx.len() as u64 * (4 + 4)
+}
+
 /// Options of the forward pass.
 #[derive(Clone, Copy, Debug)]
 pub struct ForwardOptions {
@@ -89,6 +179,11 @@ pub struct ForwardOptions {
     /// Lane-width policy for the dense-tile dot product (resolved once
     /// per pass; `APHMM_SIMD` overrides it process-wide).
     pub simd: SimdPolicy,
+    /// Training-path scratch policy (engines resolve `Auto` per read).
+    pub scratch: ScratchMode,
+    /// Scratch budget in bytes consumed by [`ScratchMode::Auto`]
+    /// resolution (0 = unlimited).
+    pub max_scratch_bytes: usize,
 }
 
 impl Default for ForwardOptions {
@@ -97,6 +192,8 @@ impl Default for ForwardOptions {
             filter: FilterConfig::None,
             gather: GatherKind::Adaptive,
             simd: SimdPolicy::Auto,
+            scratch: ScratchMode::Full,
+            max_scratch_bytes: 0,
         }
     }
 }
@@ -430,6 +527,196 @@ pub fn forward_sparse(phmm: &Phmm, seq: &Sequence, opts: &ForwardOptions) -> Res
     forward_sparse_with(phmm, &coeffs, seq, opts, &mut scratch)
 }
 
+/// Checkpointed forward product ([`ScratchMode::Checkpointed`]): every
+/// ⌈√T⌉-th post-filter row plus all `T` scales.  Checkpoint `s` is the
+/// row at timestep `s · seg_len`, i.e. the *first* row of segment `s` —
+/// which is exactly the `rows[t+1]` row the backward sweep needs when
+/// it crosses the boundary from segment `s` into segment `s − 1`.
+#[derive(Clone, Debug)]
+pub(super) struct CheckpointedForward {
+    /// Post-filter rows at `t = 0, K, 2K, …` (ascending).
+    pub ckpt_rows: Vec<SparseRow>,
+    /// Per-timestep scale factors `c_t` — all `T` of them (4 bytes per
+    /// timestep; storing them all is what lets recompute skip the
+    /// division-order question entirely: scales are never recomputed).
+    pub scales: Vec<f32>,
+    /// Checkpoint interval `K = ⌈√T⌉`.
+    pub seg_len: usize,
+    /// `log P(S | G) = Σ log c_t`.
+    pub loglik: f64,
+    /// Filtering + gather-dispatch instrumentation (forward pass only;
+    /// segment recompute does not re-count).
+    pub filter_stats: FilterStats,
+    /// Total states processed (forward pass only).
+    pub states_processed: u64,
+    /// Total edges traversed (forward pass only).
+    pub edges_processed: u64,
+    /// Heap bytes held by the checkpoint rows + scales — the resident
+    /// part of the checkpointed footprint (the per-segment recompute
+    /// buffer is accounted at sweep time, where its size is known).
+    pub ckpt_bytes: u64,
+}
+
+/// Checkpointed forward pass: identical arithmetic to
+/// [`forward_sparse_with`] (same kernels, same reduction order — the
+/// kept rows and every scale are bit-identical), but only every
+/// `⌈√T⌉`-th post-filter row is stored.  The fused backward sweep
+/// recomputes each segment from its checkpoint via
+/// [`recompute_segment`] before consuming it.
+pub(super) fn forward_checkpointed_with(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    seq: &Sequence,
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+) -> Result<CheckpointedForward> {
+    precheck(phmm, coeffs, seq)?;
+    let n = phmm.n_states();
+    let lanes = opts.simd.resolve();
+    scratch.ensure(n + coeffs.gather_pad());
+    scratch.ensure_hist(&opts.filter);
+    if may_dispatch_tiles(coeffs, opts.gather) {
+        coeffs.tiles_for(phmm);
+    }
+    let t_len = seq.len();
+    let seg_len = checkpoint_interval(t_len);
+    let mut stats = FilterStats::default();
+    let mut ckpt_rows = scratch.take_rows_vec();
+    ckpt_rows.reserve(t_len / seg_len + 1);
+    let mut scales = scratch.take_scales_vec();
+    scales.reserve(t_len);
+    let mut loglik = 0.0f64;
+    let mut states_processed = 0u64;
+    let mut edges_processed = 0u64;
+    let mut ckpt_bytes = 0u64;
+
+    let mut prev = scratch.take_row();
+    let mut cur = scratch.take_row();
+
+    let finish = |scratch: &mut ForwardScratch, prev: SparseRow, cur: SparseRow| {
+        scratch.put_row(prev);
+        scratch.put_row(cur);
+    };
+
+    let c0 = match init_row(phmm, coeffs, seq.data[0], &mut prev) {
+        Ok(c) => c,
+        Err(e) => {
+            finish(scratch, prev, cur);
+            return Err(e);
+        }
+    };
+    let inv = 1.0 / c0;
+    prev.val.iter_mut().for_each(|v| *v *= inv);
+    apply_filter(&opts.filter, &mut scratch.hist, &mut prev.idx, &mut prev.val, &mut stats);
+    states_processed += prev.len() as u64;
+    scales.push(c0);
+    loglik += (c0 as f64).ln();
+    ckpt_bytes += row_bytes(&prev);
+    ckpt_rows.push(prev.clone()); // t = 0 is always a checkpoint
+
+    for t in 1..t_len {
+        let s_t = seq.data[t] as usize;
+        let (c, edges, used_tile) =
+            gather_row(coeffs, &mut scratch.dense, &prev, s_t, n, &mut cur, opts.gather, lanes);
+        edges_processed += edges;
+        if used_tile {
+            stats.rows_dense_tile += 1;
+        } else {
+            stats.rows_csr += 1;
+        }
+        if c <= EPS {
+            finish(scratch, prev, cur);
+            return Err(ApHmmError::Numerical(format!("forward died at t={t}")));
+        }
+        let inv = 1.0 / c;
+        cur.val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut scratch.hist, &mut cur.idx, &mut cur.val, &mut stats);
+        states_processed += cur.len() as u64;
+        scales.push(c);
+        loglik += (c as f64).ln();
+        if t % seg_len == 0 {
+            ckpt_bytes += row_bytes(&cur);
+            ckpt_rows.push(cur.clone());
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+
+    finish(scratch, prev, cur);
+    ckpt_bytes += scales.len() as u64 * 4;
+    Ok(CheckpointedForward {
+        ckpt_rows,
+        scales,
+        seg_len,
+        loglik,
+        filter_stats: stats,
+        states_processed,
+        edges_processed,
+        ckpt_bytes,
+    })
+}
+
+/// Recompute the post-filter forward rows of one segment — timesteps
+/// `start .. start + len` — from its stored checkpoint row (the row at
+/// `start`).  Replays the exact kernel sequence of
+/// [`forward_sparse_with`] (`gather_row` → scale → `apply_filter`) from
+/// an exactly-stored post-filter row, so the output rows are
+/// bit-identical to the full-matrix rows.  Workload/filter counters are
+/// deliberately *not* re-counted (the forward pass already did), and
+/// scales are taken from `ckpt.scales`, never re-derived: a
+/// `debug_assert` pins that the recomputed sum matches the stored scale
+/// to the bit.
+///
+/// `out` rows are drawn from (and should be returned to) the scratch
+/// row pool by the caller.
+pub(super) fn recompute_segment(
+    phmm: &Phmm,
+    coeffs: &FusedCoeffs,
+    seq: &Sequence,
+    ckpt: &CheckpointedForward,
+    seg: usize,
+    start: usize,
+    len: usize,
+    opts: &ForwardOptions,
+    scratch: &mut ForwardScratch,
+    out: &mut Vec<SparseRow>,
+) -> Result<()> {
+    let n = phmm.n_states();
+    let lanes = opts.simd.resolve();
+    let mut dummy_stats = FilterStats::default();
+    debug_assert!(len >= 1 && start + len <= seq.len());
+    {
+        let mut first = scratch.take_row();
+        first.idx.clear();
+        first.val.clear();
+        first.idx.extend_from_slice(&ckpt.ckpt_rows[seg].idx);
+        first.val.extend_from_slice(&ckpt.ckpt_rows[seg].val);
+        out.push(first);
+    }
+    for t in start + 1..start + len {
+        let s_t = seq.data[t] as usize;
+        let mut row = scratch.take_row();
+        let prev = out.last().unwrap();
+        let (c, _edges, _used_tile) =
+            gather_row(coeffs, &mut scratch.dense, prev, s_t, n, &mut row, opts.gather, lanes);
+        if c <= EPS {
+            // Unreachable for a read whose forward pass succeeded (same
+            // kernels, same inputs); kept as a real error for safety.
+            scratch.put_row(row);
+            return Err(ApHmmError::Numerical(format!("forward died at t={t} during recompute")));
+        }
+        debug_assert_eq!(
+            c.to_bits(),
+            ckpt.scales[t].to_bits(),
+            "recomputed scale diverged at t={t} (checkpoint replay is not bit-identical)"
+        );
+        let inv = 1.0 / c;
+        row.val.iter_mut().for_each(|v| *v *= inv);
+        apply_filter(&opts.filter, &mut scratch.hist, &mut row.idx, &mut row.val, &mut dummy_stats);
+        out.push(row);
+    }
+    Ok(())
+}
+
 /// Score-only forward fast path: identical arithmetic to
 /// [`forward_sparse_with`] (bit-identical log-likelihood), but only two
 /// rows are ever live — memory is `O(active states)` regardless of
@@ -604,6 +891,7 @@ mod tests {
                         filter,
                         gather: GatherKind::Csr,
                         simd: SimdPolicy::Scalar,
+                        ..Default::default()
                     },
                 )
                 .unwrap();
@@ -614,6 +902,7 @@ mod tests {
                         filter,
                         gather: GatherKind::DenseTile,
                         simd: SimdPolicy::Scalar,
+                        ..Default::default()
                     },
                 )
                 .unwrap();
@@ -624,6 +913,7 @@ mod tests {
                         filter,
                         gather: GatherKind::Adaptive,
                         simd: SimdPolicy::Scalar,
+                        ..Default::default()
                     },
                 )
                 .unwrap();
@@ -934,6 +1224,95 @@ mod tests {
         let obs = Sequence::from_symbols("o", vec![0, 1, 200]);
         assert!(forward_sparse(&g, &obs, &ForwardOptions::default()).is_err());
         assert!(score_sparse(&g, &obs, &ForwardOptions::default()).is_err());
+    }
+
+    #[test]
+    fn checkpointed_forward_replays_bit_identically() {
+        // The checkpointed forward must store bit-identical copies of
+        // the full forward's rows at t = 0, K, 2K, … (plus all scales
+        // and the loglik), and `recompute_segment` must reproduce every
+        // in-between row to the bit — the foundation of the
+        // ScratchMode::Checkpointed bit-identity contract.
+        testutil::check(10, |rng| {
+            let ref_len = rng.range(5, 50);
+            let g = ec_graph(rng, ref_len);
+            let obs_len = rng.range(2, 60);
+            let obs = Sequence::from_symbols("o", testutil::random_seq(rng, obs_len, 4));
+            for filter in [FilterConfig::None, FilterConfig::Histogram { size: 40, bins: 64 }] {
+                let opts = ForwardOptions { filter, ..Default::default() };
+                let coeffs = FusedCoeffs::new(&g);
+                let mut scratch = ForwardScratch::new(&g);
+                let full = forward_sparse_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+                let ckpt =
+                    forward_checkpointed_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+
+                assert_eq!(full.loglik.to_bits(), ckpt.loglik.to_bits());
+                assert_eq!(full.states_processed, ckpt.states_processed);
+                assert_eq!(full.edges_processed, ckpt.edges_processed);
+                assert_eq!(full.scales.len(), ckpt.scales.len());
+                for (a, b) in full.scales.iter().zip(ckpt.scales.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                let k = ckpt.seg_len;
+                assert_eq!(k, checkpoint_interval(obs.len()));
+                assert_eq!(ckpt.ckpt_rows.len(), (obs.len() - 1) / k + 1);
+                for (s, row) in ckpt.ckpt_rows.iter().enumerate() {
+                    let t = s * k;
+                    assert_eq!(row.idx, full.rows[t].idx, "checkpoint {s} active set");
+                    for (x, y) in row.val.iter().zip(full.rows[t].val.iter()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "checkpoint {s} value");
+                    }
+                }
+                // Replay every segment and compare against the full rows.
+                let n_segs = ckpt.ckpt_rows.len();
+                for s in 0..n_segs {
+                    let start = s * k;
+                    let len = k.min(obs.len() - start);
+                    let mut seg_rows = Vec::new();
+                    recompute_segment(
+                        &g, &coeffs, &obs, &ckpt, s, start, len, &opts, &mut scratch,
+                        &mut seg_rows,
+                    )
+                    .unwrap();
+                    assert_eq!(seg_rows.len(), len);
+                    for (off, row) in seg_rows.iter().enumerate() {
+                        let t = start + off;
+                        assert_eq!(row.idx, full.rows[t].idx, "recomputed active set at t={t}");
+                        for (x, y) in row.val.iter().zip(full.rows[t].val.iter()) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "recomputed value at t={t}");
+                        }
+                    }
+                    for row in seg_rows {
+                        scratch.put_row(row);
+                    }
+                }
+                scratch.recycle(full);
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_mode_auto_resolution() {
+        // Budget 0 = unlimited: Auto degenerates to Full.
+        assert_eq!(ScratchMode::Auto.resolve(100_000, 1000, 0), ScratchMode::Full);
+        // Over budget: checkpoint.
+        let est = full_scratch_estimate(100_000, 1000);
+        assert_eq!(
+            ScratchMode::Auto.resolve(100_000, 1000, est as usize - 1),
+            ScratchMode::Checkpointed
+        );
+        // Under budget: full.
+        assert_eq!(ScratchMode::Auto.resolve(100_000, 1000, est as usize), ScratchMode::Full);
+        // Explicit modes resolve to themselves regardless of budget.
+        assert_eq!(ScratchMode::Full.resolve(100_000, 1000, 1), ScratchMode::Full);
+        assert_eq!(
+            ScratchMode::Checkpointed.resolve(2, 2, usize::MAX),
+            ScratchMode::Checkpointed
+        );
+        for name in ScratchMode::NAMES {
+            assert_eq!(ScratchMode::parse(name).unwrap().name(), *name);
+        }
+        assert!(ScratchMode::parse("bogus").is_none());
     }
 
     #[test]

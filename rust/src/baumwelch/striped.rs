@@ -562,7 +562,8 @@ mod tests {
             for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
                 for policy in [SimdPolicy::Scalar, SimdPolicy::F32x4, SimdPolicy::F32x8] {
                     for filter in [FilterConfig::None, FilterConfig::Sort { size: 24 }] {
-                        let opts = ForwardOptions { filter, gather, simd: policy };
+                        let opts =
+                            ForwardOptions { filter, gather, simd: policy, ..Default::default() };
                         let coeffs = FusedCoeffs::new(g);
                         let mut scratch = ForwardScratch::new(g);
                         let batch =

@@ -29,7 +29,7 @@ use super::engine::{EngineKind, ExpectationEngine, ReadStats, ReferenceEngine, S
 use super::filter::{FilterConfig, FilterStats};
 use super::lowering::GatherKind;
 use super::simd::{SimdPolicy, MAX_STRIPE};
-use super::sparse::ForwardOptions;
+use super::sparse::{ForwardOptions, ScratchMode};
 use crate::cancel::CancelToken;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -62,6 +62,18 @@ pub struct TrainConfig {
     /// E-step worker threads (1 = single-threaded).  Any value yields
     /// bit-identical results; see the module docs.
     pub n_workers: usize,
+    /// Forward-scratch memory mode (sparse and banded engines):
+    /// [`ScratchMode::Full`] materializes every forward row,
+    /// [`ScratchMode::Checkpointed`] keeps only every ⌈√T⌉-th row and
+    /// recomputes segments during the backward sweep (bit-identical
+    /// results, O(√T·states) row memory), [`ScratchMode::Auto`] picks
+    /// checkpointing per read when the full matrix would exceed
+    /// [`TrainConfig::max_scratch_bytes`].
+    pub scratch_mode: ScratchMode,
+    /// Forward-scratch budget in bytes consulted by
+    /// [`ScratchMode::Auto`]; `0` means unlimited (Auto resolves to
+    /// Full).  Ignored under an explicit mode.
+    pub max_scratch_bytes: usize,
     /// Compute backend.  [`EngineKind::Xla`] needs a device session and
     /// is only reachable through the coordinator or
     /// [`train_with_engine`]; the other kinds work everywhere.
@@ -77,6 +89,8 @@ impl Default for TrainConfig {
             gather: GatherKind::Adaptive,
             simd: SimdPolicy::Auto,
             n_workers: 1,
+            scratch_mode: ScratchMode::Full,
+            max_scratch_bytes: 0,
             engine: EngineKind::Sparse,
         }
     }
@@ -115,6 +129,10 @@ pub struct TrainResult {
     /// Reads carried by those passes (`stripe_reads / stripe_passes`
     /// = mean stripe fill out of [`crate::baumwelch::MAX_STRIPE`]).
     pub stripe_reads: u64,
+    /// Peak forward-row scratch bytes of any single read across the
+    /// run (a high-water mark, merged via `max` — see
+    /// [`ReadStats::peak_scratch_bytes`]).
+    pub peak_scratch_bytes: u64,
 }
 
 /// Per-block E-step output: one accumulator plus its instrumentation,
@@ -182,6 +200,10 @@ fn process_block<E: ExpectationEngine>(
         stats: ReadStats::default(),
         reads_skipped: 0,
     };
+    // Hand the token to the engine too: the sparse checkpointed sweep
+    // re-checks it at segment boundaries, so a multi-hundred-kilobase
+    // read cannot pin a worker for the whole backward pass.
+    engine.set_cancel(scratch, cancel);
     // Admission stays at the per-read boundary (cancellation,
     // failpoints, empty-skip all observe every read exactly as the
     // pre-batching loop did); admitted reads are buffered into a
@@ -335,7 +357,13 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
     pool: &WorkerPool,
     cancel: &CancelToken,
 ) -> Result<TrainResult> {
-    let opts = ForwardOptions { filter: cfg.filter, gather: cfg.gather, simd: cfg.simd };
+    let opts = ForwardOptions {
+        filter: cfg.filter,
+        gather: cfg.gather,
+        simd: cfg.simd,
+        scratch: cfg.scratch_mode,
+        max_scratch_bytes: cfg.max_scratch_bytes,
+    };
     let mut result = TrainResult {
         loglik_history: Vec::new(),
         iters: 0,
@@ -349,6 +377,7 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
         reads_skipped: 0,
         stripe_passes: 0,
         stripe_reads: 0,
+        peak_scratch_bytes: 0,
     };
     let mut prev_mean = f64::NEG_INFINITY;
     for _iter in 0..cfg.max_iters {
@@ -371,6 +400,8 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
             result.reads_skipped += out.reads_skipped;
             result.stripe_passes += out.stats.stripe_passes;
             result.stripe_reads += out.stats.stripe_reads;
+            result.peak_scratch_bytes =
+                result.peak_scratch_bytes.max(out.stats.peak_scratch_bytes);
         }
         let (total_loglik, n_observations) = engine.observations(&acc);
         if n_observations == 0 {

@@ -8,7 +8,8 @@
 //! [`BwAccumulators::apply`] performs the maximization division once.
 
 use super::kernels::{ForwardScratch, FusedCoeffs};
-use super::sparse::{self, ForwardOptions, ForwardResult};
+use super::sparse::{self, CheckpointedForward, ForwardOptions, ForwardResult, SparseRow};
+use super::tile::OutTiles;
 use super::EPS;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
@@ -210,109 +211,26 @@ impl BwAccumulators {
         let mut b_cur: &mut [f64] = b_cur;
 
         // t = T-1: B̂ = 1 on active states; emission-only γ terms.
-        {
-            let row = &fwd.rows[t_len - 1];
-            let s_t = seq.data[t_len - 1] as usize;
-            for (&i, &f) in row.idx.iter().zip(row.val.iter()) {
-                b_next[i as usize] = 1.0;
-                let gamma = f as f64;
-                self.gamma_den[i as usize] += gamma;
-                self.e_num[i as usize * sigma + s_t] += gamma;
-            }
-        }
+        self.backward_last_row(&fwd.rows[t_len - 1], seq.data[t_len - 1] as usize, b_next);
 
         for t in (0..t_len - 1).rev() {
             let row = &fwd.rows[t];
-            let s_t = seq.data[t] as usize;
-            let s_next = seq.data[t + 1] as usize;
-            let oc = coeffs.out_coef_for(s_next);
-            let c_next = fwd.scales[t + 1] as f64;
-            let inv_c = 1.0 / c_next;
-            // Tile admission mirrors the forward dispatcher: the walk
-            // below reads `b_next` over the support of row `t+1`, so
-            // that row's density is what decides whether padded slab
-            // reads beat the CSR indirection.
             let row_next = &fwd.rows[t + 1];
-            let use_tile = match (out_tiles, row_next.idx.first(), row_next.idx.last()) {
-                (Some(_), Some(&first), Some(&last)) => sparse::row_admits_tile(
-                    coeffs,
-                    opts.gather,
-                    row_next,
-                    first as usize,
-                    last as usize,
-                ),
-                _ => false,
-            };
-            if use_tile {
-                let ot = out_tiles.expect("use_tile implies out_tiles");
-                let tw = ot.tile_width();
-                let oc_t = ot.coef_for(s_next);
-                let eix = ot.eidx();
-                for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
-                    let j = j as usize;
-                    let fj = fj as f64;
-                    let base = j * tw;
-                    let mut bsum = 0.0f64;
-                    // SAFETY: `oc_t`/`eix` span `n_states × tile_w`
-                    // for the validated graph, `b_next` is padded to
-                    // `n + tile_w - 1` above, and stored edge indices
-                    // are < n_edges by construction (u32::MAX marks
-                    // no-edge cells).  Cells without an edge carry a
-                    // +0.0 coefficient: `bsum += +0.0` and skipping
-                    // the ξ write keep the sums bit-identical to the
-                    // CSR walk in ascending `to` order.
-                    unsafe {
-                        for x in 0..tw {
-                            let m = *oc_t.get_unchecked(base + x)
-                                * *b_next.get_unchecked(j + x)
-                                * inv_c;
-                            bsum += m;
-                            let e = *eix.get_unchecked(base + x);
-                            if e != u32::MAX {
-                                *self.xi.get_unchecked_mut(e as usize) += fj * m;
-                            }
-                        }
-                    }
-                    b_cur[j] = bsum;
-                    let gamma = fj * bsum;
-                    self.trans_den[j] += gamma;
-                    self.gamma_den[j] += gamma;
-                    self.e_num[j * sigma + s_t] += gamma;
-                }
-            } else {
-                for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
-                    let j = j as usize;
-                    let fj = fj as f64;
-                    let lo = phmm.out_ptr[j] as usize;
-                    let hi = phmm.out_ptr[j + 1] as usize;
-                    let mut bsum = 0.0f64;
-                    // SAFETY: CSR invariants are checked by Phmm::validate;
-                    // `oc`, `xi` and the backward buffers all cover every
-                    // edge/state index of the validated graph, and the
-                    // accumulator shapes are pinned to the graph in `new`.
-                    unsafe {
-                        for e in lo..hi {
-                            let to = *phmm.out_to.get_unchecked(e) as usize;
-                            let bn = *b_next.get_unchecked(to);
-                            if bn == 0.0 {
-                                continue;
-                            }
-                            // Shared product (memoized):
-                            // α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
-                            let m = *oc.get_unchecked(e) * bn * inv_c;
-                            bsum += m;
-                            *self.xi.get_unchecked_mut(e) += fj * m;
-                        }
-                    }
-                    b_cur[j] = bsum;
-                    let gamma = fj * bsum;
-                    self.trans_den[j] += gamma;
-                    self.gamma_den[j] += gamma;
-                    self.e_num[j * sigma + s_t] += gamma;
-                }
-            }
+            self.backward_step(
+                phmm,
+                coeffs,
+                opts,
+                out_tiles,
+                row,
+                row_next,
+                seq.data[t] as usize,
+                seq.data[t + 1] as usize,
+                1.0 / (fwd.scales[t + 1] as f64),
+                b_next,
+                b_cur,
+            );
             // Swap buffers; clear what we wrote at t+1.
-            for &i in &fwd.rows[t + 1].idx {
+            for &i in &row_next.idx {
                 b_next[i as usize] = 0.0;
             }
             std::mem::swap(&mut b_next, &mut b_cur);
@@ -325,6 +243,278 @@ impl BwAccumulators {
         }
         self.note_observation(fwd.loglik);
         Ok(())
+    }
+
+    /// The `t = T-1` initialization of the fused backward: `B̂ = 1` on
+    /// the active states, emission-only γ terms.  Shared by the full
+    /// and checkpointed sweeps.
+    fn backward_last_row(&mut self, row: &SparseRow, s_t: usize, b_next: &mut [f64]) {
+        let sigma = self.sigma;
+        for (&i, &f) in row.idx.iter().zip(row.val.iter()) {
+            b_next[i as usize] = 1.0;
+            let gamma = f as f64;
+            self.gamma_den[i as usize] += gamma;
+            self.e_num[i as usize * sigma + s_t] += gamma;
+        }
+    }
+
+    /// One fused backward + update timestep: consume `b_next` (values
+    /// at `t+1`) over the support of `row` (the forward row at `t`),
+    /// producing `b_cur` and the ξ/γ contributions of timestep `t`.
+    /// This is the *single* implementation of the per-timestep
+    /// arithmetic — the full-matrix sweep ([`accumulate_with`]) and the
+    /// checkpointed sweep ([`accumulate_checkpointed_with`]) both call
+    /// it, so the two modes are bit-identical by construction.
+    ///
+    /// The caller owns the buffer choreography: zeroing `b_next` over
+    /// `row_next`'s support afterwards and swapping the pair.
+    ///
+    /// [`accumulate_with`]: BwAccumulators::accumulate_with
+    /// [`accumulate_checkpointed_with`]: BwAccumulators::accumulate_checkpointed_with
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn backward_step(
+        &mut self,
+        phmm: &Phmm,
+        coeffs: &FusedCoeffs,
+        opts: &ForwardOptions,
+        out_tiles: Option<&OutTiles>,
+        row: &SparseRow,
+        row_next: &SparseRow,
+        s_t: usize,
+        s_next: usize,
+        inv_c: f64,
+        b_next: &mut [f64],
+        b_cur: &mut [f64],
+    ) {
+        let sigma = self.sigma;
+        let oc = coeffs.out_coef_for(s_next);
+        // Tile admission mirrors the forward dispatcher: the walk
+        // below reads `b_next` over the support of row `t+1`, so
+        // that row's density is what decides whether padded slab
+        // reads beat the CSR indirection.
+        let use_tile = match (out_tiles, row_next.idx.first(), row_next.idx.last()) {
+            (Some(_), Some(&first), Some(&last)) => sparse::row_admits_tile(
+                coeffs,
+                opts.gather,
+                row_next,
+                first as usize,
+                last as usize,
+            ),
+            _ => false,
+        };
+        if use_tile {
+            let ot = out_tiles.expect("use_tile implies out_tiles");
+            let tw = ot.tile_width();
+            let oc_t = ot.coef_for(s_next);
+            let eix = ot.eidx();
+            for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
+                let j = j as usize;
+                let fj = fj as f64;
+                let base = j * tw;
+                let mut bsum = 0.0f64;
+                // SAFETY: `oc_t`/`eix` span `n_states × tile_w`
+                // for the validated graph, `b_next` is padded to
+                // `n + tile_w - 1` above, and stored edge indices
+                // are < n_edges by construction (u32::MAX marks
+                // no-edge cells).  Cells without an edge carry a
+                // +0.0 coefficient: `bsum += +0.0` and skipping
+                // the ξ write keep the sums bit-identical to the
+                // CSR walk in ascending `to` order.
+                unsafe {
+                    for x in 0..tw {
+                        let m = *oc_t.get_unchecked(base + x)
+                            * *b_next.get_unchecked(j + x)
+                            * inv_c;
+                        bsum += m;
+                        let e = *eix.get_unchecked(base + x);
+                        if e != u32::MAX {
+                            *self.xi.get_unchecked_mut(e as usize) += fj * m;
+                        }
+                    }
+                }
+                b_cur[j] = bsum;
+                let gamma = fj * bsum;
+                self.trans_den[j] += gamma;
+                self.gamma_den[j] += gamma;
+                self.e_num[j * sigma + s_t] += gamma;
+            }
+        } else {
+            for (&j, &fj) in row.idx.iter().zip(row.val.iter()) {
+                let j = j as usize;
+                let fj = fj as f64;
+                let lo = phmm.out_ptr[j] as usize;
+                let hi = phmm.out_ptr[j + 1] as usize;
+                let mut bsum = 0.0f64;
+                // SAFETY: CSR invariants are checked by Phmm::validate;
+                // `oc`, `xi` and the backward buffers all cover every
+                // edge/state index of the validated graph, and the
+                // accumulator shapes are pinned to the graph in `new`.
+                unsafe {
+                    for e in lo..hi {
+                        let to = *phmm.out_to.get_unchecked(e) as usize;
+                        let bn = *b_next.get_unchecked(to);
+                        if bn == 0.0 {
+                            continue;
+                        }
+                        // Shared product (memoized):
+                        // α_{j,to} · e_{s_{t+1}}(to) · B̂_{t+1}(to) / c_{t+1}
+                        let m = *oc.get_unchecked(e) * bn * inv_c;
+                        bsum += m;
+                        *self.xi.get_unchecked_mut(e) += fj * m;
+                    }
+                }
+                b_cur[j] = bsum;
+                let gamma = fj * bsum;
+                self.trans_den[j] += gamma;
+                self.gamma_den[j] += gamma;
+                self.e_num[j * sigma + s_t] += gamma;
+            }
+        }
+    }
+
+    /// Checkpointed fused backward + update sweep
+    /// ([`ScratchMode::Checkpointed`](super::ScratchMode)): consume a
+    /// [`CheckpointedForward`], recomputing each segment's forward rows
+    /// from its checkpoint (last segment first) and feeding them
+    /// through the same [`backward_step`] arithmetic as the full-matrix
+    /// sweep — the merged sums are bit-identical to
+    /// [`accumulate_with`] over a [`ForwardResult`] of the same read.
+    ///
+    /// The backward value pair carries across segment boundaries
+    /// untouched: the `rows[t+1]` support needed at the last timestep
+    /// of segment `s` is exactly checkpoint `s + 1` (the first row of
+    /// the already-consumed next segment), so no boundary-stitching
+    /// state exists beyond the checkpoints themselves.
+    ///
+    /// Cooperative cancellation (`scratch.cancel`) and the
+    /// `engine::segment` failpoint are observed at segment boundaries
+    /// only — never inside a reduction — and a cancelled sweep restores
+    /// the all-zero backward-buffer invariant before returning
+    /// [`ApHmmError::Cancelled`].
+    ///
+    /// Returns the peak forward-row scratch in bytes: resident
+    /// checkpoints + scales plus the largest live segment buffer (the
+    /// `O(√T·states)` quantity the scratch accounting reports).
+    ///
+    /// [`backward_step`]: BwAccumulators::backward_step
+    /// [`accumulate_with`]: BwAccumulators::accumulate_with
+    pub(super) fn accumulate_checkpointed_with(
+        &mut self,
+        phmm: &Phmm,
+        coeffs: &FusedCoeffs,
+        seq: &Sequence,
+        ckpt: &CheckpointedForward,
+        scratch: &mut ForwardScratch,
+        opts: &ForwardOptions,
+    ) -> Result<u64> {
+        let n = phmm.n_states();
+        let t_len = seq.len();
+        debug_assert_eq!(ckpt.scales.len(), t_len);
+        if self.xi.len() != phmm.n_transitions()
+            || self.gamma_den.len() != n
+            || self.sigma != phmm.sigma()
+            || coeffs.n_edges() != phmm.n_transitions()
+            || coeffs.sigma() != phmm.sigma()
+        {
+            return Err(ApHmmError::InvalidGraph(
+                "accumulator/coefficient shapes do not match the graph".into(),
+            ));
+        }
+        let out_tiles = if sparse::may_dispatch_tiles(coeffs, opts.gather) {
+            Some(coeffs.out_tiles_for(phmm))
+        } else {
+            None
+        };
+        scratch.ensure(n + coeffs.gather_pad());
+        scratch.ensure_hist(&opts.filter);
+        let cancel = scratch.cancel.clone();
+        let k = ckpt.seg_len;
+        let n_segs = ckpt.ckpt_rows.len();
+        debug_assert_eq!(n_segs, (t_len - 1) / k + 1);
+        // `backward_step` swaps the *references* b_next/b_cur, but each
+        // segment re-borrows the underlying scratch fields, so track
+        // which field currently holds the carried t+1 values.
+        let mut flipped = false;
+        let mut seg_rows: Vec<SparseRow> = Vec::with_capacity(k);
+        let mut peak = ckpt.ckpt_bytes;
+        for s in (0..n_segs).rev() {
+            // Cancellation (and fault injection) is observed here, at
+            // the segment boundary, only — never inside a reduction.
+            if let Some(cause) = cancel.check() {
+                for row in seg_rows.drain(..) {
+                    scratch.put_row(row);
+                }
+                // Abandoning mid-sweep loses track of which backward
+                // entries are live; re-zero the pair wholesale to
+                // restore the scratch invariant.
+                let (b_next, b_cur) = scratch.backward_bufs();
+                b_next.iter_mut().for_each(|x| *x = 0.0);
+                b_cur.iter_mut().for_each(|x| *x = 0.0);
+                return Err(ApHmmError::Cancelled(cause));
+            }
+            crate::failpoint!("engine::segment");
+            let start = s * k;
+            let len = k.min(t_len - start);
+            sparse::recompute_segment(
+                phmm, coeffs, seq, ckpt, s, start, len, opts, scratch, &mut seg_rows,
+            )?;
+            let seg_bytes: u64 = seg_rows.iter().map(sparse::row_bytes).sum();
+            peak = peak.max(ckpt.ckpt_bytes + seg_bytes);
+            {
+                let (f0, f1) = scratch.backward_bufs();
+                let (mut b_next, mut b_cur): (&mut [f64], &mut [f64]) =
+                    if flipped { (f1, f0) } else { (f0, f1) };
+                if s == n_segs - 1 {
+                    self.backward_last_row(
+                        &seg_rows[len - 1],
+                        seq.data[t_len - 1] as usize,
+                        b_next,
+                    );
+                }
+                let top = (start + len).min(t_len - 1);
+                for t in (start..top).rev() {
+                    let row = &seg_rows[t - start];
+                    let row_next: &SparseRow = if t + 1 < start + len {
+                        &seg_rows[t + 1 - start]
+                    } else {
+                        &ckpt.ckpt_rows[s + 1]
+                    };
+                    self.backward_step(
+                        phmm,
+                        coeffs,
+                        opts,
+                        out_tiles,
+                        row,
+                        row_next,
+                        seq.data[t] as usize,
+                        seq.data[t + 1] as usize,
+                        1.0 / (ckpt.scales[t + 1] as f64),
+                        b_next,
+                        b_cur,
+                    );
+                    for &i in &row_next.idx {
+                        b_next[i as usize] = 0.0;
+                    }
+                    std::mem::swap(&mut b_next, &mut b_cur);
+                    flipped = !flipped;
+                }
+            }
+            for row in seg_rows.drain(..) {
+                scratch.put_row(row);
+            }
+        }
+        // Restore the all-zero scratch invariant over the t = 0 support
+        // (checkpoint 0 *is* row 0).
+        {
+            let (f0, f1) = scratch.backward_bufs();
+            let b_next = if flipped { f1 } else { f0 };
+            for &i in &ckpt.ckpt_rows[0].idx {
+                b_next[i as usize] = 0.0;
+            }
+        }
+        self.note_observation(ckpt.loglik);
+        Ok(peak)
     }
 }
 
@@ -509,6 +699,51 @@ mod tests {
             assert_eq!(a_csr.gamma_den, a_tile.gamma_den);
             assert_eq!(a_csr.total_loglik.to_bits(), a_tile.total_loglik.to_bits());
         }
+    }
+
+    #[test]
+    fn checkpointed_sweep_is_bit_identical_to_full() {
+        use crate::baumwelch::sparse::{forward_checkpointed_with, forward_sparse_with};
+        use crate::baumwelch::FilterConfig;
+        // Same read, same graph: the checkpointed sweep (recompute each
+        // segment, consume via the shared backward_step) must land the
+        // exact bits of the full-matrix sweep — sums, loglik, counts.
+        testutil::check(10, |rng| {
+            let ref_len = rng.range(5, 30);
+            let obs_len = rng.range(1, 50);
+            let (g, obs) = setup(rng, ref_len, obs_len);
+            for filter in [FilterConfig::None, FilterConfig::Histogram { size: 40, bins: 64 }] {
+                let opts = ForwardOptions { filter, ..Default::default() };
+                let coeffs = FusedCoeffs::new(&g);
+                let mut scratch = ForwardScratch::new(&g);
+
+                let fwd = forward_sparse_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+                let mut full = BwAccumulators::new(&g);
+                full.accumulate_with(&g, &coeffs, &obs, &fwd, &mut scratch, &opts).unwrap();
+                scratch.recycle(fwd);
+
+                let ckpt =
+                    forward_checkpointed_with(&g, &coeffs, &obs, &opts, &mut scratch).unwrap();
+                let mut chk = BwAccumulators::new(&g);
+                let peak = chk
+                    .accumulate_checkpointed_with(&g, &coeffs, &obs, &ckpt, &mut scratch, &opts)
+                    .unwrap();
+                assert!(peak >= ckpt.ckpt_bytes);
+
+                assert_eq!(full.xi, chk.xi, "xi diverged (filter {filter:?})");
+                assert_eq!(full.trans_den, chk.trans_den);
+                assert_eq!(full.e_num, chk.e_num);
+                assert_eq!(full.gamma_den, chk.gamma_den);
+                assert_eq!(full.n_observations, chk.n_observations);
+                assert_eq!(full.total_loglik.to_bits(), chk.total_loglik.to_bits());
+
+                // The backward buffers must be left all-zero for the
+                // next read (the scratch invariant both sweeps promise).
+                let (b_next, b_cur) = scratch.backward_bufs();
+                assert!(b_next.iter().all(|&x| x == 0.0));
+                assert!(b_cur.iter().all(|&x| x == 0.0));
+            }
+        });
     }
 
     #[test]

@@ -111,6 +111,17 @@ pub struct Metrics {
     /// Requests refused by load shedding at admission (never admitted,
     /// so *not* counted in `jobs_failed`).
     pub failures_shed: AtomicU64,
+    /// Requests refused at admission because their estimated
+    /// full-matrix forward scratch exceeded `serve.max_scratch_bytes`
+    /// with checkpointing disabled (never admitted, so *not* counted
+    /// in `jobs_failed`).
+    pub over_memory_refusals: AtomicU64,
+    /// Highest per-read forward-row scratch observed across every
+    /// request (bytes; high-water gauge, fed by
+    /// [`Metrics::absorb_read_stats`] via `fetch_max`).  Under
+    /// checkpointed scratch this stays O(√T·states) even for reads
+    /// whose full matrix would not fit the budget.
+    pub peak_scratch_bytes: AtomicU64,
     /// Sparse-gather rows dispatched down the CSR row path.
     pub rows_csr: AtomicU64,
     /// Sparse-gather rows dispatched down the dense-tile row path.
@@ -159,6 +170,9 @@ struct TenantGauges {
     /// Mirrors the queue's admission-side shed counter (absorbed, not
     /// worker-recorded — shed requests never reach a worker).
     shed: u64,
+    /// Highest per-read forward-row scratch this tenant's requests
+    /// reached (bytes; high-water, worker-recorded at respond time).
+    peak_scratch_bytes: u64,
 }
 
 // Tenant-map bounding (tenant ids are client-controlled and must not
@@ -187,6 +201,8 @@ impl Default for Metrics {
             failures_cancelled: AtomicU64::new(0),
             failures_panicked: AtomicU64::new(0),
             failures_shed: AtomicU64::new(0),
+            over_memory_refusals: AtomicU64::new(0),
+            peak_scratch_bytes: AtomicU64::new(0),
             rows_csr: AtomicU64::new(0),
             rows_dense_tile: AtomicU64::new(0),
             filter_calls: AtomicU64::new(0),
@@ -250,6 +266,35 @@ impl Metrics {
         self.failures_shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a request refused at admission because its estimated
+    /// full-matrix scratch exceeded the server's memory budget with
+    /// checkpointing disabled (admission-side, like [`record_shed`]).
+    ///
+    /// [`record_shed`]: Metrics::record_shed
+    pub fn record_over_memory_refusal(&self) {
+        self.over_memory_refusals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the peak forward-row scratch one request for `tenant`
+    /// reached (bytes).  Both the process-wide and the per-tenant
+    /// gauges are high-water marks, so repeated records never lose a
+    /// peak.  Same overflow bound as [`record_tenant_done`] for the
+    /// per-tenant entry; the process-wide gauge always updates.
+    ///
+    /// [`record_tenant_done`]: Metrics::record_tenant_done
+    pub fn record_tenant_scratch(&self, tenant: &str, bytes: u64) {
+        self.peak_scratch_bytes.fetch_max(bytes, Ordering::Relaxed);
+        if bytes == 0 {
+            return;
+        }
+        let mut tenants = self.tenants.lock().unwrap();
+        if !tenants.contains_key(tenant) && tenants.len() >= MAX_TRACKED_TENANTS * 4 {
+            return;
+        }
+        let t = tenants.entry(tenant.to_string()).or_default();
+        t.peak_scratch_bytes = t.peak_scratch_bytes.max(bytes);
+    }
+
     /// Record reads skipped while training a job.
     pub fn record_skipped_reads(&self, n: u64) {
         self.reads_skipped.fetch_add(n, Ordering::Relaxed);
@@ -293,6 +338,9 @@ impl Metrics {
         if stats.stripe_passes > 0 {
             self.stripe_passes.fetch_add(stats.stripe_passes, Ordering::Relaxed);
             self.stripe_reads.fetch_add(stats.stripe_reads, Ordering::Relaxed);
+        }
+        if stats.peak_scratch_bytes > 0 {
+            self.peak_scratch_bytes.fetch_max(stats.peak_scratch_bytes, Ordering::Relaxed);
         }
     }
 
@@ -449,6 +497,7 @@ impl Metrics {
                 cancelled: t.cancelled,
                 panicked: t.panicked,
                 shed: t.shed,
+                peak_scratch_bytes: t.peak_scratch_bytes,
             })
             .collect();
         // The BTreeMap already iterates in id order; the explicit sort
@@ -487,6 +536,8 @@ impl Metrics {
             cancelled: self.failures_cancelled.load(Ordering::Relaxed),
             pool_panics: self.failures_panicked.load(Ordering::Relaxed),
             shed: self.failures_shed.load(Ordering::Relaxed),
+            over_memory_refusals: self.over_memory_refusals.load(Ordering::Relaxed),
+            peak_scratch_bytes: self.peak_scratch_bytes.load(Ordering::Relaxed),
             rows_csr: self.rows_csr.load(Ordering::Relaxed),
             rows_dense_tile: self.rows_dense_tile.load(Ordering::Relaxed),
             filter_calls: self.filter_calls.load(Ordering::Relaxed),
@@ -523,6 +574,9 @@ pub struct TenantSummary {
     pub panicked: u64,
     /// Admissions refused by load shedding.
     pub shed: u64,
+    /// Highest per-read forward-row scratch this tenant reached
+    /// (bytes; high-water mark).
+    pub peak_scratch_bytes: u64,
 }
 
 /// One stage's slice of a [`MetricsSummary`] — the live §3-style
@@ -581,6 +635,11 @@ pub struct MetricsSummary {
     pub pool_panics: u64,
     /// Requests refused by load shedding at admission.
     pub shed: u64,
+    /// Requests refused at admission for exceeding the memory budget
+    /// with checkpointing disabled.
+    pub over_memory_refusals: u64,
+    /// Highest per-read forward-row scratch observed (bytes).
+    pub peak_scratch_bytes: u64,
     /// Sparse-gather rows dispatched down the CSR row path.
     pub rows_csr: u64,
     /// Sparse-gather rows dispatched down the dense-tile row path.
@@ -767,6 +826,26 @@ mod tests {
         assert_eq!(s.tenants[0].deadline_exceeded, 1);
         assert_eq!(s.tenants[0].panicked, 1);
         assert_eq!(s.tenants[0].cancelled, 0);
+    }
+
+    #[test]
+    fn scratch_gauges_are_high_water_marks() {
+        let metrics = Metrics::default();
+        metrics.record_tenant_scratch("t", 4096);
+        metrics.record_tenant_scratch("t", 1024); // lower — must not regress
+        metrics.record_tenant_scratch("u", 2048);
+        metrics.record_over_memory_refusal();
+        // The coordinator path feeds the process gauge via read stats.
+        metrics.absorb_read_stats(&ReadStats {
+            peak_scratch_bytes: 8192,
+            ..Default::default()
+        });
+        let s = metrics.summary();
+        assert_eq!(s.peak_scratch_bytes, 8192);
+        assert_eq!(s.over_memory_refusals, 1);
+        let by_name = |n: &str| s.tenants.iter().find(|t| t.tenant == n).unwrap().clone();
+        assert_eq!(by_name("t").peak_scratch_bytes, 4096);
+        assert_eq!(by_name("u").peak_scratch_bytes, 2048);
     }
 
     #[test]

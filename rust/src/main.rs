@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use aphmm::accel::{self, AccelConfig, Workload};
 use aphmm::apps::{self, CorrectionConfig, MsaReport, SearchConfig};
-use aphmm::baumwelch::{EngineKind, FilterConfig, TrainConfig};
+use aphmm::baumwelch::{EngineKind, FilterConfig, ScratchMode, TrainConfig};
 use aphmm::config::Config;
 use aphmm::error::{ApHmmError, Result};
 use aphmm::io;
@@ -39,7 +39,9 @@ fn usage() -> String {
   search   [--engine E] [--set search.n_families=N --set search.queries=N]
   align    [--engine E] [--set msa.n_seqs=N]
   serve    [--port N] [--engine E] [--set serve.workers=N --set serve.queue_depth=N
-           --set serve.tenant_max_queued=N --set serve.tenant_max_in_flight=N]
+           --set serve.tenant_max_queued=N --set serve.tenant_max_in_flight=N
+           --set serve.scratch_mode=full|checkpointed|auto
+           --set serve.max_scratch_bytes=N]
            (no --port: newline-delimited protocol on stdin/stdout;
             see rust/src/server/README.md for the request grammar)
   profile  --seq ACGT... | --fasta F.fasta [--out P.aphmm]
@@ -124,6 +126,18 @@ fn engine_from(
     })
 }
 
+/// Resolve `<section>.scratch_mode` (full | checkpointed | auto; the
+/// engine-internal forward-scratch policy for ultra-long reads).
+fn scratch_mode_from(cfg: &Config, section: &str, default: ScratchMode) -> Result<ScratchMode> {
+    let name = cfg.str_or(&format!("{section}.scratch_mode"), default.name());
+    ScratchMode::parse(&name).ok_or_else(|| {
+        ApHmmError::Config(format!(
+            "unknown scratch_mode {name:?} (expected {})",
+            ScratchMode::NAMES.join(" | ")
+        ))
+    })
+}
+
 fn filter_from(cfg: &Config, section: &str) -> Result<FilterConfig> {
     let kind = cfg.str_or(&format!("{section}.filter"), "histogram");
     let size = cfg.usize_or(&format!("{section}.filter_size"), 500)?;
@@ -175,12 +189,16 @@ fn cmd_correct(args: &Args) -> Result<()> {
     let out_path = args.get("out").unwrap_or("corrected.fasta").to_string();
     let assemblies = io::read_fasta(Path::new(&assembly_path), DNA)?;
     let reads = io::read_fasta(Path::new(&reads_path), DNA)?;
+    let defaults = CorrectionConfig::default();
     let correction = CorrectionConfig {
         chunk_len: cfg.usize_or("correction.chunk_len", 650)?,
         max_iters: cfg.usize_or("correction.max_iters", 2)?,
         filter: filter_from(&cfg, "correction")?,
         engine: engine_from(args, &cfg, "correction", EngineKind::Sparse)?,
-        ..Default::default()
+        scratch_mode: scratch_mode_from(&cfg, "correction", defaults.scratch_mode)?,
+        max_scratch_bytes: cfg
+            .usize_or("correction.max_scratch_bytes", defaults.max_scratch_bytes)?,
+        ..defaults
     };
     let mut corrected = Vec::new();
     for assembly in &assemblies {
@@ -229,6 +247,10 @@ fn server_config(
         n_workers: cfg.usize_or(&format!("{section}.estep_workers"), 1)?,
         filter,
         engine,
+        // `train.max_scratch_bytes` stays 0 here: `Server::start`
+        // propagates the serve-level budget below into it, so one key
+        // governs both `auto` resolution and admission refusal.
+        scratch_mode: scratch_mode_from(cfg, section, ScratchMode::Full)?,
         ..Default::default()
     };
     let tenant_quota = TenantQuota {
@@ -285,6 +307,8 @@ fn server_config(
         slow_request_ms: cfg
             .usize_or(&format!("{section}.slow_request_ms"), defaults.slow_request_ms as usize)?
             as u64,
+        max_scratch_bytes: cfg
+            .usize_or(&format!("{section}.max_scratch_bytes"), defaults.max_scratch_bytes)?,
         engine,
         train,
         alphabet,

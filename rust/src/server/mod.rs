@@ -72,7 +72,9 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::baumwelch::{EngineKind, ReadStats, ScratchAny, TrainConfig, MAX_STRIPE};
+use crate::baumwelch::{
+    full_scratch_estimate, EngineKind, ReadStats, ScratchAny, ScratchMode, TrainConfig, MAX_STRIPE,
+};
 use crate::coordinator::{Metrics, MetricsSummary, StageTimes};
 use crate::error::{ApHmmError, CancelCause, Result};
 use crate::obs::{PromWriter, Stage, Timeline, TraceRing};
@@ -157,6 +159,19 @@ pub struct ServerConfig {
     /// JSON line (and retained in the trace ring).  `0` (default)
     /// disables the slow-request log.
     pub slow_request_ms: u64,
+    /// Memory-budget admission control (bytes): a `Correct` request
+    /// whose estimated full-matrix forward scratch exceeds this bound
+    /// *and* whose resolved scratch mode is [`ScratchMode::Full`] is
+    /// refused at admission with [`AdmitError::OverMemoryBudget`]
+    /// instead of being allowed to OOM a worker.  Requests that would
+    /// run checkpointed (explicit `checkpointed`, or `auto` resolving
+    /// under the budget) are always admitted — their peak scratch is
+    /// O(√T·states) regardless of read length.  `0` (default) disables
+    /// the check.  When `train.max_scratch_bytes` is 0,
+    /// [`Server::start`] propagates this budget there so
+    /// `scratch_mode = auto` resolves against the same bound the
+    /// admission check uses.
+    pub max_scratch_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -182,6 +197,7 @@ impl Default for ServerConfig {
             read_timeout_ms: 0,
             idle_timeout_ms: 0,
             slow_request_ms: 0,
+            max_scratch_bytes: 0,
         }
     }
 }
@@ -273,7 +289,16 @@ pub struct Server {
 impl Server {
     /// Start the server: spawns the dispatcher thread, which fans out
     /// over `cfg.n_workers` pool participants draining the queue.
-    pub fn start(cfg: ServerConfig) -> Server {
+    pub fn start(mut cfg: ServerConfig) -> Server {
+        // One budget, two consumers: the admission estimate here and
+        // the engine's per-read `ScratchMode::resolve`.  Propagating
+        // the serve-level budget into the train config (when the
+        // latter doesn't set its own) keeps them in agreement, so
+        // `scratch_mode = auto` checkpoints exactly the reads the
+        // admission check would otherwise have to refuse.
+        if cfg.train.max_scratch_bytes == 0 {
+            cfg.train.max_scratch_bytes = cfg.max_scratch_bytes;
+        }
         let workers = cfg.n_workers.max(1);
         let estep = cfg.train.n_workers.max(1);
         // The dispatcher occupies participant slot 0; helpers cover the
@@ -379,6 +404,45 @@ impl Server {
         )
     }
 
+    /// Memory-budget admission estimate: `Some(reason)` when `body` is
+    /// a `Correct` request holding a read whose full forward matrix
+    /// would blow `cfg.max_scratch_bytes` *and* the train config would
+    /// actually materialize that matrix ([`ScratchMode::Full`] after
+    /// per-read resolution).  Reads that resolve to checkpointed
+    /// scratch never refuse — that is the whole point of the mode.
+    /// The state count is estimated from the EC design topology
+    /// (match/insert/delete per reference base) without building the
+    /// profile; like [`full_scratch_estimate`] it deliberately errs
+    /// high, so the refusal is conservative in the safe direction.
+    fn scratch_refusal(&self, body: &Request) -> Option<String> {
+        let budget = self.shared.cfg.max_scratch_bytes;
+        if budget == 0 {
+            return None;
+        }
+        let Request::Correct { reference, reads } = body else {
+            return None;
+        };
+        let n_states = 3 * reference.len() + 3;
+        let train = &self.shared.cfg.train;
+        for read in reads {
+            let est = full_scratch_estimate(read.len(), n_states);
+            if est > budget as u64
+                && train.scratch_mode.resolve(read.len(), n_states, train.max_scratch_bytes)
+                    == ScratchMode::Full
+            {
+                return Some(format!(
+                    "estimated full-matrix scratch {est} B for a {} bp read exceeds \
+                     max_scratch_bytes={budget} with checkpointing disabled \
+                     (train.scratch_mode={}); re-submit with scratch_mode checkpointed \
+                     or auto, or raise the budget",
+                    read.len(),
+                    train.scratch_mode.name(),
+                ));
+            }
+        }
+        None
+    }
+
     /// Submit a request as the default tenant at normal priority,
     /// **blocking while the queue is full** (the admission-control path
     /// for streaming clients).  Fails only once the server is shut
@@ -433,6 +497,13 @@ impl Server {
         deadline: Option<Duration>,
         trace: bool,
     ) -> Result<Ticket> {
+        // The blocking path refuses over-budget work with an error
+        // (there is no job to hand back); the non-blocking path
+        // answers the typed [`AdmitError::OverMemoryBudget`].
+        if let Some(reason) = self.scratch_refusal(&body) {
+            self.shared.metrics.record_over_memory_refusal();
+            return Err(ApHmmError::Coordinator(format!("over memory budget: {reason}")));
+        }
         let (job, ticket) = self.make_job(engine, body, deadline, trace);
         self.shared.queue.push(tenant, priority, job).map_err(|job| {
             ApHmmError::Coordinator(format!(
@@ -460,7 +531,8 @@ impl Server {
             Ok(ticket) => Ok(ticket),
             Err(AdmitError::Busy(body))
             | Err(AdmitError::AtQuota(body))
-            | Err(AdmitError::Shed(body)) => Err(PushError::Busy(body)),
+            | Err(AdmitError::Shed(body))
+            | Err(AdmitError::OverMemoryBudget(body)) => Err(PushError::Busy(body)),
             Err(AdmitError::Closed(body)) => Err(PushError::Closed(body)),
         }
     }
@@ -479,6 +551,12 @@ impl Server {
         engine: Option<EngineKind>,
         body: Request,
     ) -> std::result::Result<Ticket, AdmitError<Request>> {
+        // Pre-queue memory-budget estimate: over-budget full-matrix
+        // work is refused here, before it holds a queue slot.
+        if let Some(_reason) = self.scratch_refusal(&body) {
+            self.shared.metrics.record_over_memory_refusal();
+            return Err(AdmitError::OverMemoryBudget(body));
+        }
         let (job, ticket) = self.make_job(engine, body, None, false);
         match self.shared.queue.try_push(tenant, priority, job) {
             Ok(()) => Ok(ticket),
@@ -488,6 +566,9 @@ impl Server {
                 self.shared.metrics.record_shed();
                 Err(AdmitError::Shed(job.body))
             }
+            // Unreachable from the queue (the estimate runs above, not
+            // in `try_push`), kept for exhaustiveness.
+            Err(AdmitError::OverMemoryBudget(job)) => Err(AdmitError::OverMemoryBudget(job.body)),
             Err(AdmitError::Closed(job)) => Err(AdmitError::Closed(job.body)),
         }
     }
@@ -576,6 +657,18 @@ impl Server {
             "counter",
         );
         w.value("aphmm_shed_total", &[], m.shed as f64);
+        w.help_type(
+            "aphmm_over_memory_refusals_total",
+            "Requests refused at admission for exceeding max_scratch_bytes with checkpointing disabled.",
+            "counter",
+        );
+        w.value("aphmm_over_memory_refusals_total", &[], m.over_memory_refusals as f64);
+        w.help_type(
+            "aphmm_scratch_bytes",
+            "Highest per-read forward-row scratch observed (bytes; checkpointed reads stay O(sqrt(T)*states)).",
+            "gauge",
+        );
+        w.value("aphmm_scratch_bytes", &[], m.peak_scratch_bytes as f64);
 
         w.help_type(
             "aphmm_request_seconds",
@@ -734,6 +827,18 @@ impl Server {
         for t in &m.tenants {
             w.value("aphmm_tenant_shed_total", &[("tenant", &t.tenant)], t.shed as f64);
         }
+        w.help_type(
+            "aphmm_tenant_scratch_bytes",
+            "Per-tenant highest per-read forward-row scratch observed (bytes).",
+            "gauge",
+        );
+        for t in &m.tenants {
+            w.value(
+                "aphmm_tenant_scratch_bytes",
+                &[("tenant", &t.tenant)],
+                t.peak_scratch_bytes as f64,
+            );
+        }
 
         w.finish()
     }
@@ -746,7 +851,7 @@ impl Server {
             "stats jobs_done={} jobs_failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
              queue_high_water={} producer_blocks={} cache_hits={} cache_misses={} \
              cache_evictions={} profiles={} tenants={} deadline_exceeded={} cancelled={} \
-             pool_panics={} shed={}",
+             pool_panics={} shed={} over_memory_refusals={} peak_scratch_bytes={}",
             m.jobs_done,
             m.jobs_failed,
             m.latency_p50_ms,
@@ -763,6 +868,8 @@ impl Server {
             m.cancelled,
             m.pool_panics,
             m.shed,
+            m.over_memory_refusals,
+            m.peak_scratch_bytes,
         )
     }
 
@@ -779,7 +886,7 @@ impl Server {
             .map(|t| {
                 format!(
                     "{}:admitted={},completed={},failed={},refused={},queued={},in_flight={},\
-                     deadline_exceeded={},cancelled={},panicked={},shed={}",
+                     deadline_exceeded={},cancelled={},panicked={},shed={},peak_scratch_bytes={}",
                     t.tenant,
                     t.admitted,
                     t.completed,
@@ -790,7 +897,8 @@ impl Server {
                     t.deadline_exceeded,
                     t.cancelled,
                     t.panicked,
-                    t.shed
+                    t.shed,
+                    t.peak_scratch_bytes
                 )
             })
             .collect();
@@ -1103,6 +1211,12 @@ fn respond(shared: &Shared, tenant: &str, job: Job, body: ResponseBody, stats: R
     };
     shared.metrics.record_stages(&times);
     shared.metrics.absorb_read_stats(&stats);
+    // Per-tenant scratch attribution (the process-wide gauge is fed by
+    // `absorb_read_stats` above): a high-water mark, so a tenant's
+    // longest read defines its reading.
+    if stats.peak_scratch_bytes > 0 {
+        shared.metrics.record_tenant_scratch(tenant, stats.peak_scratch_bytes);
+    }
 
     // Timeline capture: only traced requests reach the ring; the slow-
     // request log additionally captures any request over the
@@ -1251,6 +1365,60 @@ mod tests {
                 other => panic!("drain lost a request: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn over_budget_full_matrix_work_is_refused_not_oomed() {
+        let mut rng = XorShift::new(75);
+        let reference = dna(&mut rng, 60);
+        let read = simulate_read(&mut rng, &reference, 0, 60, &ErrorProfile::pacbio(), 0).seq;
+        // A budget far below the ~88 kB full matrix of even this small
+        // request, with checkpointing disabled (default Full mode).
+        let mut server = Server::start(ServerConfig {
+            max_scratch_bytes: 1024,
+            ..Default::default()
+        });
+        let body =
+            Request::Correct { reference: reference.clone(), reads: vec![read.clone()] };
+        match server.try_submit_for(DEFAULT_TENANT, Priority::Normal, None, body) {
+            Err(AdmitError::OverMemoryBudget(_)) => {}
+            Err(_) => panic!("wrong admission refusal"),
+            Ok(_) => panic!("over-budget request must not be admitted"),
+        }
+        // The blocking path refuses with an error instead of queueing.
+        let body =
+            Request::Correct { reference: reference.clone(), reads: vec![read.clone()] };
+        assert!(server.submit(None, body).is_err());
+        assert_eq!(server.metrics_summary().over_memory_refusals, 2);
+        // Scoring is unaffected by the budget (the estimate is scoped
+        // to training requests).
+        server.shutdown(true);
+
+        // The same request under `auto` admits and completes
+        // checkpointed (the propagated budget resolves it there).
+        let mut server = Server::start(ServerConfig {
+            max_scratch_bytes: 1024,
+            train: TrainConfig {
+                max_iters: 2,
+                scratch_mode: ScratchMode::Auto,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let resp = server
+            .submit(None, Request::Correct { reference, reads: vec![read] })
+            .unwrap()
+            .wait();
+        match resp.body {
+            ResponseBody::Correct { consensus, .. } => assert!(!consensus.is_empty()),
+            other => panic!("auto-mode request must complete: {other:?}"),
+        }
+        assert!(resp.stats.peak_scratch_bytes > 0, "scratch accounting must be attributed");
+        let m = server.metrics_summary();
+        assert_eq!(m.over_memory_refusals, 0);
+        assert!(m.peak_scratch_bytes > 0);
+        assert!(server.tenants_line().contains("peak_scratch_bytes="));
+        server.shutdown(true);
     }
 
     #[test]

@@ -351,6 +351,13 @@ pub enum AdmitError<T> {
     /// crowd out latency-sensitive work (see
     /// [`TenantQueue::new_with_shed`]).
     Shed(T),
+    /// The request's estimated full-matrix forward scratch exceeds the
+    /// server's memory budget (`serve.max_scratch_bytes`) and
+    /// checkpointing is disabled, so running it would risk an OOM.
+    /// Produced by the serving layer's admission estimate, never by
+    /// the queue itself; re-submit with checkpointing enabled
+    /// (`train.scratch_mode = checkpointed | auto`) or shorter reads.
+    OverMemoryBudget(T),
     /// The queue was closed or aborted.
     Closed(T),
 }

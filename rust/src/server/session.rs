@@ -398,6 +398,8 @@ impl ExecCtx<'_> {
             filter: self.cfg.train.filter,
             gather: self.cfg.train.gather,
             simd: self.cfg.train.simd,
+            scratch: self.cfg.train.scratch_mode,
+            max_scratch_bytes: self.cfg.train.max_scratch_bytes,
         }
     }
 }
@@ -649,6 +651,7 @@ pub(crate) fn execute(
                 timesteps: out.train.timesteps,
                 stripe_passes: out.train.stripe_passes,
                 stripe_reads: out.train.stripe_reads,
+                peak_scratch_bytes: out.train.peak_scratch_bytes,
                 ..Default::default()
             };
             let mean_loglik =

@@ -16,5 +16,7 @@ mod rng;
 
 pub use genome::generate_genome;
 pub use protein::{generate_families, ProteinFamily, ProteinSimParams};
-pub use reads::{simulate_read, simulate_reads, ErrorProfile, SimulatedRead};
+pub use reads::{
+    simulate_read, simulate_reads, simulate_ultralong_read, ErrorProfile, SimulatedRead,
+};
 pub use rng::XorShift;

@@ -35,6 +35,15 @@ impl ErrorProfile {
         ErrorProfile { sub: 0.0, ins: 0.0, del: 0.0, ins_ext: 0.0 }
     }
 
+    /// Nanopore-like profile: ~12% total error, deletion-dominated
+    /// (roughly R9-era ONT statistics: sub ≈ 3%, ins ≈ 3%, del ≈ 6%),
+    /// the regime where reads run to hundreds of kilobases and a full
+    /// T×states forward matrix stops fitting in memory — the input the
+    /// checkpointed scratch mode exists for.
+    pub fn nanopore() -> Self {
+        ErrorProfile { sub: 0.03, ins: 0.03, del: 0.06, ins_ext: 0.15 }
+    }
+
     /// Total per-base error rate (approximate, ignoring extension).
     pub fn total(&self) -> f64 {
         self.sub + self.ins + self.del
@@ -132,6 +141,25 @@ pub fn simulate_reads(
     reads
 }
 
+/// Simulate one ultra-long nanopore-like read: `len` reference bases
+/// (default nanopore "ultralong" scale is 10⁵) starting at `start`,
+/// under [`ErrorProfile::nanopore`].  A convenience wrapper for
+/// long-read stress tests and the serve smoke: at 100 kb the full
+/// forward matrix of even a small chunk profile is hundreds of
+/// megabytes, so these reads exercise [`checkpointed scratch`] rather
+/// than fitting the full-matrix path.
+///
+/// [`checkpointed scratch`]: crate::baumwelch::ScratchMode::Checkpointed
+pub fn simulate_ultralong_read(
+    rng: &mut XorShift,
+    reference: &Sequence,
+    start: usize,
+    len: usize,
+    id: usize,
+) -> SimulatedRead {
+    simulate_read(rng, reference, start, len, &ErrorProfile::nanopore(), id)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +195,18 @@ mod tests {
             assert!(r.ref_end <= genome.len());
             assert!(r.ref_start < r.ref_end);
         }
+    }
+
+    #[test]
+    fn nanopore_profile_error_rate_in_band() {
+        let mut rng = XorShift::new(8);
+        let genome = generate_genome(&mut rng, 30_000);
+        let read = simulate_ultralong_read(&mut rng, &genome, 0, 30_000, 0);
+        let rate = read.n_errors as f64 / 30_000.0;
+        // sub + del + ins/(1-ext) ≈ 0.03 + 0.06 + 0.035 ≈ 0.125
+        assert!((0.08..0.18).contains(&rate), "rate={rate}");
+        // Deletion-dominated: the read comes out shorter than its span.
+        assert!(read.seq.len() < 30_000);
     }
 
     #[test]

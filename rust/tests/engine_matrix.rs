@@ -9,7 +9,7 @@
 
 use aphmm::baumwelch::{
     train, train_in, BandedCoeffs, BandedEngine, EngineKind, ExpectationEngine, FilterConfig,
-    ForwardOptions, GatherKind, ReadStats, SimdPolicy, SparseEngine, TrainConfig,
+    ForwardOptions, GatherKind, ReadStats, ScratchMode, SimdPolicy, SparseEngine, TrainConfig,
     SIMD_REASSOC_ATOL, SIMD_REASSOC_RTOL,
 };
 use aphmm::phmm::{EcDesignParams, Phmm};
@@ -122,7 +122,8 @@ fn gather_matrix_tile_vs_csr_bit_identical_merged_sums() {
             // Scalar lanes: cross-gather bit-identity is a scalar-sum
             // guarantee; wider lane widths reassociate tile rows and
             // are covered by `lane_width_parity_matrix_for_training`.
-            let opts = ForwardOptions { filter, gather, simd: SimdPolicy::Scalar };
+            let opts =
+                ForwardOptions { filter, gather, simd: SimdPolicy::Scalar, ..Default::default() };
             let mut scratch = engine.make_scratch(&g);
             let mut acc = engine.make_acc(&g);
             let mut stats = ReadStats::default();
@@ -268,7 +269,8 @@ fn striped_batch_scoring_matches_one_at_a_time() {
     let refs: Vec<&Sequence> = reads.iter().collect();
     for gather in [GatherKind::Csr, GatherKind::DenseTile, GatherKind::Adaptive] {
         for simd in [SimdPolicy::Scalar, SimdPolicy::F32x4, SimdPolicy::F32x8] {
-            let opts = ForwardOptions { filter: FilterConfig::None, gather, simd };
+            let opts =
+                ForwardOptions { filter: FilterConfig::None, gather, simd, ..Default::default() };
             let mut batch_scratch = engine.make_scratch(&g);
             let batch = engine.score_batch(&g, &prep, &refs, &opts, &mut batch_scratch);
             assert_eq!(batch.len(), reads.len());
@@ -340,6 +342,179 @@ fn shared_pool_is_bit_identical_to_private_pools_for_any_worker_count() {
             }
         }
     }
+}
+
+#[test]
+fn checkpointed_scratch_matrix_is_bit_identical_to_full() {
+    // The checkpointed-mode acceptance matrix: the √T-checkpoint
+    // forward + segment-recompute backward replays the exact kernel
+    // sequence from exactly-stored post-filter rows, so histories and
+    // trained parameters are bit-identical to the full matrix — for
+    // both in-process engines, both gather dispatches, scalar and wide
+    // lanes, and any worker count — while the peak forward scratch
+    // drops below the full-matrix high-water mark.
+    let (reference_seq, reads) = scenario(127, 80, 6);
+    for engine in [EngineKind::Sparse, EngineKind::Banded] {
+        for gather in [GatherKind::Csr, GatherKind::Adaptive] {
+            for simd in [SimdPolicy::Scalar, SimdPolicy::F32x8] {
+                for n_workers in [1usize, 4] {
+                    let cfg = TrainConfig {
+                        max_iters: 2,
+                        tol: 0.0,
+                        engine,
+                        gather,
+                        simd,
+                        n_workers,
+                        ..Default::default()
+                    };
+                    let mut g_full =
+                        Phmm::error_correction(&reference_seq, &EcDesignParams::default())
+                            .unwrap();
+                    let res_full = train(
+                        &mut g_full,
+                        &reads,
+                        &TrainConfig { scratch_mode: ScratchMode::Full, ..cfg },
+                    )
+                    .unwrap();
+                    let mut g_ckpt =
+                        Phmm::error_correction(&reference_seq, &EcDesignParams::default())
+                            .unwrap();
+                    let res_ckpt = train(
+                        &mut g_ckpt,
+                        &reads,
+                        &TrainConfig { scratch_mode: ScratchMode::Checkpointed, ..cfg },
+                    )
+                    .unwrap();
+                    let tag = format!("{engine:?}/{gather:?}/{simd:?} x{n_workers}");
+                    assert_eq!(res_full.loglik_history, res_ckpt.loglik_history, "{tag}");
+                    assert_eq!(g_full.out_prob, g_ckpt.out_prob, "{tag}");
+                    assert_eq!(g_full.emissions, g_ckpt.emissions, "{tag}");
+                    assert!(res_full.peak_scratch_bytes > 0, "{tag}: full peak unaccounted");
+                    assert!(res_ckpt.peak_scratch_bytes > 0, "{tag}: ckpt peak unaccounted");
+                    assert!(
+                        res_ckpt.peak_scratch_bytes < res_full.peak_scratch_bytes,
+                        "{tag}: checkpointing did not shrink peak scratch \
+                         ({} >= {})",
+                        res_ckpt.peak_scratch_bytes,
+                        res_full.peak_scratch_bytes
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpointed_peak_scratch_under_quarter_of_full_at_10k_timesteps() {
+    // The tentpole's memory acceptance bound: at T ≥ 10⁴ the
+    // checkpointed high-water mark (⌈√T⌉ checkpoint rows + all scales
+    // + one live segment buffer) is under 25% of the full-matrix peak
+    // (all T rows + scales) — and the result is still bit-identical.
+    let mut rng = XorShift::new(131);
+    let genome = aphmm::sim::generate_genome(&mut rng, 10_000);
+    let read = aphmm::sim::simulate_ultralong_read(&mut rng, &genome, 0, 10_000, 0).seq;
+    assert!(read.len() >= 8_000, "ultralong read came out short: {}", read.len());
+    let cfg = TrainConfig {
+        max_iters: 1,
+        tol: 0.0,
+        filter: FilterConfig::histogram_default(),
+        ..Default::default()
+    };
+    let mut g_full = Phmm::error_correction(&genome, &EcDesignParams::default()).unwrap();
+    let full = train(
+        &mut g_full,
+        std::slice::from_ref(&read),
+        &TrainConfig { scratch_mode: ScratchMode::Full, ..cfg },
+    )
+    .unwrap();
+    let mut g_ckpt = Phmm::error_correction(&genome, &EcDesignParams::default()).unwrap();
+    let ckpt = train(
+        &mut g_ckpt,
+        std::slice::from_ref(&read),
+        &TrainConfig { scratch_mode: ScratchMode::Checkpointed, ..cfg },
+    )
+    .unwrap();
+    assert_eq!(full.loglik_history, ckpt.loglik_history, "long-read bit-identity broke");
+    assert_eq!(g_full.emissions, g_ckpt.emissions);
+    assert!(
+        ckpt.peak_scratch_bytes * 4 < full.peak_scratch_bytes,
+        "checkpointed peak {} B is not under 25% of full peak {} B at T={}",
+        ckpt.peak_scratch_bytes,
+        full.peak_scratch_bytes,
+        read.len()
+    );
+}
+
+#[test]
+fn accumulate_batch_mixed_modes_bit_identical_to_solo_and_full() {
+    // ROADMAP item 3 (the accumulate_batch asymmetry): only the
+    // forward is striped; the backward always consumes one read's own
+    // rows.  A checkpointed read cannot ride a stripe (the striped
+    // forward materializes every row), so the batch path flushes the
+    // stripe and runs it solo — and the accumulated sums must stay
+    // bit-identical to per-read accumulation in the same order, and to
+    // the all-Full answer, even when `Auto` splits one batch between
+    // full-matrix and checkpointed reads.
+    let mut rng = XorShift::new(137);
+    let reference_seq =
+        Sequence::from_symbols("r", testutil::random_seq(&mut rng, 120, 4));
+    let mut reads: Vec<Sequence> = Vec::new();
+    for i in 0..8 {
+        let full = simulate_read(&mut rng, &reference_seq, 0, 120, &ErrorProfile::pacbio(), i).seq;
+        // Alternate long and short reads so a budget can split them.
+        reads.push(if i % 2 == 0 { full } else { full.slice(0, full.len().min(30)) });
+    }
+    let g = Phmm::error_correction(&reference_seq, &EcDesignParams::default()).unwrap();
+    let engine = SparseEngine;
+    let prep = engine.prepare(&g).unwrap();
+    let refs: Vec<&Sequence> = reads.iter().collect();
+    let sums_of = |opts: &ForwardOptions, batch: bool| -> Vec<u64> {
+        let mut scratch = engine.make_scratch(&g);
+        let mut acc = engine.make_acc(&g);
+        if batch {
+            for r in engine.accumulate_batch(&g, &prep, &refs, opts, &mut scratch, &mut acc) {
+                r.unwrap();
+            }
+        } else {
+            for read in &reads {
+                engine.accumulate_read(&g, &prep, read, opts, &mut scratch, &mut acc).unwrap();
+            }
+        }
+        let mut bits: Vec<u64> = acc.xi.iter().map(|v| v.to_bits()).collect();
+        bits.extend(acc.gamma_den.iter().map(|v| v.to_bits()));
+        bits.extend(acc.trans_den.iter().map(|v| v.to_bits()));
+        bits.extend(acc.e_num.iter().map(|v| v.to_bits()));
+        bits
+    };
+    let full_opts = ForwardOptions {
+        filter: FilterConfig::histogram_default(),
+        scratch: ScratchMode::Full,
+        ..Default::default()
+    };
+    let ckpt_opts = ForwardOptions { scratch: ScratchMode::Checkpointed, ..full_opts };
+    // A budget between the short reads' (~30-step) and the long reads'
+    // (~120-step) full-matrix estimates, so Auto genuinely mixes modes
+    // within one batch.
+    let auto_opts = ForwardOptions {
+        scratch: ScratchMode::Auto,
+        max_scratch_bytes: 150_000,
+        ..full_opts
+    };
+    assert_eq!(
+        ScratchMode::Auto.resolve(reads[0].len(), g.n_states(), auto_opts.max_scratch_bytes),
+        ScratchMode::Checkpointed,
+        "long reads must checkpoint under the test budget"
+    );
+    assert_eq!(
+        ScratchMode::Auto.resolve(reads[1].len(), g.n_states(), auto_opts.max_scratch_bytes),
+        ScratchMode::Full,
+        "short reads must stay full-matrix under the test budget"
+    );
+    let baseline = sums_of(&full_opts, false);
+    assert_eq!(sums_of(&full_opts, true), baseline, "full batch vs solo");
+    assert_eq!(sums_of(&ckpt_opts, false), baseline, "checkpointed solo vs full");
+    assert_eq!(sums_of(&ckpt_opts, true), baseline, "checkpointed batch vs full");
+    assert_eq!(sums_of(&auto_opts, true), baseline, "mixed-mode batch vs full");
 }
 
 #[test]

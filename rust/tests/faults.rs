@@ -10,6 +10,7 @@
 
 use std::time::Duration;
 
+use aphmm::baumwelch::{ScratchMode, TrainConfig};
 use aphmm::failpoint::{self, Action};
 use aphmm::phmm::{EcDesignParams, Phmm};
 use aphmm::seq::Sequence;
@@ -90,6 +91,42 @@ fn cancel_fires_mid_compute_at_a_read_boundary() {
     match &resp.body {
         ResponseBody::Failure { cause, .. } => assert_eq!(*cause, FailureCause::Cancelled),
         other => panic!("expected Cancelled, got {other:?}"),
+    }
+    assert_eq!(server.metrics_summary().cancelled, 1);
+    server.shutdown(true);
+}
+
+/// Checkpointed-scratch cancellation contract: during the backward
+/// sweep's segment recomputes, cancellation is observed at **segment
+/// boundaries only** — the `engine::segment` failpoint sits exactly at
+/// that check, so with every boundary slowed by a Sleep, a cancel
+/// issued after submission lands mid-recompute and aborts the request
+/// with a typed `Cancelled` failure instead of running the remaining
+/// segments.  (Inside a segment the kernels run to the next boundary
+/// untouched; a reduction is never torn.)
+#[test]
+fn cancel_fires_mid_segment_recompute_at_a_segment_boundary() {
+    let _s = failpoint::scenario();
+    failpoint::configure("engine::segment", Action::Sleep(10));
+
+    let mut rng = XorShift::new(309);
+    let reference = dna(&mut rng, "chr1", 60);
+    let reads = reads_of(&mut rng, &reference, 4);
+    // Checkpointed forced on: every read's backward sweep recomputes
+    // ~√T segments, each crossing the armed boundary failpoint.
+    let mut server = Server::start(ServerConfig {
+        n_workers: 1,
+        train: TrainConfig { scratch_mode: ScratchMode::Checkpointed, ..Default::default() },
+        ..Default::default()
+    });
+    let ticket = server
+        .submit(None, Request::Correct { reference, reads })
+        .unwrap();
+    ticket.cancel();
+    let resp = ticket.wait();
+    match &resp.body {
+        ResponseBody::Failure { cause, .. } => assert_eq!(*cause, FailureCause::Cancelled),
+        other => panic!("expected Cancelled at a segment boundary, got {other:?}"),
     }
     assert_eq!(server.metrics_summary().cancelled, 1);
     server.shutdown(true);
