@@ -9,7 +9,7 @@
 use std::time::Instant;
 
 use crate::baumwelch::{
-    train_in_with, EngineKind, FilterConfig, ScratchMode, TrainConfig, TrainResult,
+    train_in_with, EngineKind, FilterConfig, ScratchMode, TrainConfig, TrainMode, TrainResult,
 };
 use crate::cancel::CancelToken;
 use crate::error::Result;
@@ -115,6 +115,15 @@ pub struct CorrectionConfig {
     /// 650-base chunks; it exists to keep nanopore-length segments
     /// from materializing multi-gigabyte matrices.
     pub max_scratch_bytes: usize,
+    /// Training schedule per chunk.  The default stays
+    /// [`TrainMode::Batch`] — chunk read sets are small and the
+    /// correctness contract (`estep_workers` unobservable, byte-stable
+    /// consensus) is pinned to full-batch EM; switch to
+    /// [`TrainMode::Minibatch`] or [`TrainMode::Viterbi`] for very deep
+    /// coverage.
+    pub mode: TrainMode,
+    /// Shuffle seed of the minibatch schedule (ignored by `Batch`).
+    pub seed: u64,
 }
 
 impl Default for CorrectionConfig {
@@ -131,6 +140,8 @@ impl Default for CorrectionConfig {
             engine: EngineKind::Sparse,
             scratch_mode: ScratchMode::Auto,
             max_scratch_bytes: 256 << 20,
+            mode: TrainMode::Batch,
+            seed: 1,
         }
     }
 }
@@ -238,6 +249,8 @@ pub fn correct_assembly(
             engine: cfg.engine,
             scratch_mode: cfg.scratch_mode,
             max_scratch_bytes: cfg.max_scratch_bytes,
+            mode: cfg.mode,
+            seed: cfg.seed,
             ..Default::default()
         };
         let out =

@@ -12,8 +12,8 @@ pub use error_correction::{
     CorrectionReport,
 };
 pub use msa::{
-    align_all, align_all_with, msa_identity, posterior_columns, profile_columns, AlignedRow,
-    MsaConfig, MsaReport,
+    align_all, align_all_streamed, align_all_streamed_with, align_all_with, msa_identity,
+    posterior_columns, profile_columns, AlignedRow, MsaConfig, MsaReport,
 };
 pub use protein_search::{
     kmer_set, log_odds_score, FamilyDb, FamilyEntry, SearchConfig, SearchHit, SearchReport,

@@ -16,10 +16,13 @@
 use std::time::Instant;
 
 use crate::baumwelch::{
-    BandedEngine, EngineKind, ExpectationEngine, ForwardOptions, ReferenceEngine, SparseEngine,
+    train_source_with_engine_with, BandedEngine, EngineKind, ExpectationEngine, ForwardOptions,
+    ReadSource, ReferenceEngine, SparseEngine, TrainConfig, TrainMode, TrainResult,
 };
+use crate::cancel::CancelToken;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::{Phmm, StateKind};
+use crate::pool::WorkerPool;
 use crate::seq::Sequence;
 
 use super::timing::AppTimings;
@@ -28,6 +31,11 @@ use super::timing::AppTimings;
 /// rejected by the engine's forward score *before* the full posterior
 /// decode is paid for it.
 const PRESCREEN_ACTIVE: f64 = -1e8;
+
+/// Reads resident at once during a streamed alignment pass
+/// ([`align_all_streamed`]): decode proceeds window by window, so the
+/// corpus size never bounds memory — only this constant does.
+const ALIGN_WINDOW: usize = 512;
 
 /// MSA configuration.
 #[derive(Clone, Copy, Debug)]
@@ -42,11 +50,29 @@ pub struct MsaConfig {
     /// reference engines fall back to a per-sequence banded lowering
     /// for the decode.
     pub engine: EngineKind,
+    /// Profile-training epochs run before a streamed alignment
+    /// ([`align_all_streamed`]); `0` aligns against the profile as
+    /// given.  Ignored by the slice-based [`align_all`], whose profile
+    /// is immutable.
+    pub train_iters: usize,
+    /// Training schedule of that pass.  The [`TrainMode::Auto`] default
+    /// picks minibatch for streaming/large corpora — the learnMSA
+    /// recipe for million-sequence alignment — and full batch for small
+    /// in-memory ones.
+    pub mode: TrainMode,
+    /// Shuffle seed of the minibatch schedule.
+    pub seed: u64,
 }
 
 impl Default for MsaConfig {
     fn default() -> Self {
-        MsaConfig { min_avg_loglik: -1e9, engine: EngineKind::Banded }
+        MsaConfig {
+            min_avg_loglik: -1e9,
+            engine: EngineKind::Banded,
+            train_iters: 0,
+            mode: TrainMode::Auto,
+            seed: 1,
+        }
     }
 }
 
@@ -64,7 +90,7 @@ pub struct AlignedRow {
 }
 
 /// MSA run output.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct MsaReport {
     /// Aligned rows (skipped sequences omitted).
     pub rows: Vec<AlignedRow>,
@@ -74,6 +100,13 @@ pub struct MsaReport {
     pub skipped: usize,
     /// Timings (Fig. 2: forward+backward vs overheads).
     pub timings: AppTimings,
+    /// Training outcome of the pre-alignment pass
+    /// ([`align_all_streamed`] with `train_iters > 0`); `None` when the
+    /// profile was used as given.
+    pub train: Option<TrainResult>,
+    /// Sequences pulled through the streaming source during the decode
+    /// pass (0 for the slice-based path).
+    pub sequences_streamed: u64,
 }
 
 /// Number of profile columns of an (emitting-only) profile pHMM: the
@@ -134,6 +167,61 @@ pub fn align_all(phmm: &Phmm, seqs: &[Sequence], cfg: &MsaConfig) -> Result<MsaR
     }
 }
 
+/// Decode one window of sequences against a frozen profile, appending
+/// rows/skips/timings into `report` — the per-sequence core shared by
+/// the slice and streamed paths.
+fn align_window_with<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &Phmm,
+    prep: &E::Prepared,
+    scratch: &mut E::Scratch,
+    seqs: &[Sequence],
+    cfg: &MsaConfig,
+    report: &mut MsaReport,
+) {
+    let prescreen = cfg.min_avg_loglik > PRESCREEN_ACTIVE;
+    let opts = ForwardOptions::default();
+    for seq in seqs {
+        if seq.is_empty() {
+            report.skipped += 1;
+            continue;
+        }
+        if prescreen {
+            let t = Instant::now();
+            let verdict = engine.score(phmm, prep, seq, &opts, scratch);
+            report.timings.forward_ns += t.elapsed().as_nanos();
+            match verdict {
+                Ok(score) if score.loglik / seq.len() as f64 >= cfg.min_avg_loglik => {}
+                _ => {
+                    report.skipped += 1;
+                    continue;
+                }
+            }
+        }
+        match engine.posterior(phmm, prep, seq) {
+            Ok(dec) => {
+                report.timings.forward_ns += dec.forward_ns;
+                report.timings.backward_update_ns += dec.backward_ns;
+                if dec.loglik / seq.len() as f64 >= cfg.min_avg_loglik {
+                    let t2 = Instant::now();
+                    let (columns, insertions) =
+                        posterior_columns(phmm, report.n_columns, seq, &dec.best_state);
+                    report.rows.push(AlignedRow {
+                        id: seq.id.clone(),
+                        columns,
+                        insertions,
+                        loglik: dec.loglik,
+                    });
+                    report.timings.other_ns += t2.elapsed().as_nanos();
+                } else {
+                    report.skipped += 1;
+                }
+            }
+            Err(_) => report.skipped += 1,
+        }
+    }
+}
+
 /// [`align_all`] over any [`ExpectationEngine`] instance.
 pub fn align_all_with<E: ExpectationEngine>(
     engine: &E,
@@ -141,60 +229,95 @@ pub fn align_all_with<E: ExpectationEngine>(
     seqs: &[Sequence],
     cfg: &MsaConfig,
 ) -> Result<MsaReport> {
-    let mut timings = AppTimings::default();
+    let mut report = MsaReport::default();
     // Freeze the profile once: the engine's coefficient tables are
     // shared across every sequence (non-BW time).
     let t0 = Instant::now();
     let prep = engine.prepare(phmm)?;
     let mut scratch = engine.make_scratch(phmm);
-    let n_columns = profile_columns(phmm);
-    timings.other_ns += t0.elapsed().as_nanos();
+    report.n_columns = profile_columns(phmm);
+    report.timings.other_ns += t0.elapsed().as_nanos();
+    align_window_with(engine, phmm, &prep, &mut scratch, seqs, cfg, &mut report);
+    Ok(report)
+}
 
-    let prescreen = cfg.min_avg_loglik > PRESCREEN_ACTIVE;
-    let opts = ForwardOptions::default();
-
-    let mut rows = Vec::with_capacity(seqs.len());
-    let mut skipped = 0usize;
-    for seq in seqs {
-        if seq.is_empty() {
-            skipped += 1;
-            continue;
-        }
-        if prescreen {
-            let t = Instant::now();
-            let verdict = engine.score(phmm, &prep, seq, &opts, &mut scratch);
-            timings.forward_ns += t.elapsed().as_nanos();
-            match verdict {
-                Ok(score) if score.loglik / seq.len() as f64 >= cfg.min_avg_loglik => {}
-                _ => {
-                    skipped += 1;
-                    continue;
-                }
-            }
-        }
-        match engine.posterior(phmm, &prep, seq) {
-            Ok(dec) => {
-                timings.forward_ns += dec.forward_ns;
-                timings.backward_update_ns += dec.backward_ns;
-                if dec.loglik / seq.len() as f64 >= cfg.min_avg_loglik {
-                    let t2 = Instant::now();
-                    let (columns, insertions) =
-                        posterior_columns(phmm, n_columns, seq, &dec.best_state);
-                    rows.push(AlignedRow {
-                        id: seq.id.clone(),
-                        columns,
-                        insertions,
-                        loglik: dec.loglik,
-                    });
-                    timings.other_ns += t2.elapsed().as_nanos();
-                } else {
-                    skipped += 1;
-                }
-            }
-            Err(_) => skipped += 1,
-        }
+/// Streamed MSA: optionally train the profile on the corpus (minibatch
+/// by default for streaming sources — the learnMSA recipe), then
+/// posterior-decode it window by window.
+///
+/// Unlike [`align_all`], which needs every sequence resident, this
+/// holds at most [`ALIGN_WINDOW`] sequences during the decode pass (and
+/// the trainer's shuffle window during training), so million-sequence
+/// FASTA files align in bounded memory.  Alignment *rows* still
+/// accumulate in the report — callers that also want bounded output
+/// should consume `report.rows` per window; the memory bound documented
+/// in `baumwelch/README.md` § Memory modes covers the sequence
+/// residency this function controls.
+pub fn align_all_streamed(
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &MsaConfig,
+) -> Result<MsaReport> {
+    match cfg.engine {
+        EngineKind::Sparse => align_all_streamed_with(&SparseEngine, phmm, source, cfg),
+        EngineKind::Banded => align_all_streamed_with(&BandedEngine, phmm, source, cfg),
+        EngineKind::Reference => align_all_streamed_with(&ReferenceEngine, phmm, source, cfg),
+        EngineKind::Xla => Err(ApHmmError::Config(
+            "the XLA engine is device-backed; MSA supports the in-process engines \
+             (sparse | banded | reference)"
+                .into(),
+        )),
     }
-    Ok(MsaReport { rows, n_columns, skipped, timings })
+}
+
+/// [`align_all_streamed`] over any [`ExpectationEngine`] instance.
+pub fn align_all_streamed_with<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &MsaConfig,
+) -> Result<MsaReport> {
+    let mut report = MsaReport::default();
+    if cfg.train_iters > 0 {
+        let tcfg = TrainConfig {
+            max_iters: cfg.train_iters,
+            tol: 0.0,
+            mode: cfg.mode,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let train = train_source_with_engine_with(
+            engine,
+            phmm,
+            source,
+            &tcfg,
+            WorkerPool::global(),
+            &CancelToken::none(),
+        )?;
+        report.timings.forward_ns += train.forward_ns;
+        report.timings.backward_update_ns += train.backward_update_ns;
+        report.timings.maximize_ns += train.maximize_ns;
+        report.sequences_streamed += train.sequences_streamed;
+        report.train = Some(train);
+    }
+    // Freeze the (possibly refined) profile once, then decode in
+    // bounded windows.
+    let t0 = Instant::now();
+    let prep = engine.prepare(phmm)?;
+    let mut scratch = engine.make_scratch(phmm);
+    report.n_columns = profile_columns(phmm);
+    report.timings.other_ns += t0.elapsed().as_nanos();
+    source.reset()?;
+    let mut window: Vec<Sequence> = Vec::with_capacity(ALIGN_WINDOW);
+    loop {
+        if source.fill(ALIGN_WINDOW, &mut window)? == 0 {
+            break;
+        }
+        report.sequences_streamed += window.len() as u64;
+        align_window_with(engine, phmm, &prep, &mut scratch, &window, cfg, &mut report);
+        window.clear();
+    }
+    Ok(report)
 }
 
 /// Mean pairwise column identity of an alignment (quality metric).
@@ -245,6 +368,45 @@ mod tests {
             .fold_silent(4)
             .unwrap();
         (fam, phmm)
+    }
+
+    #[test]
+    fn streamed_alignment_matches_slice_alignment() {
+        let mut rng = XorShift::new(23);
+        let (fam, phmm) = family_profile(&mut rng);
+        let cfg = MsaConfig::default();
+        let slice = align_all(&phmm, &fam.members, &cfg).unwrap();
+        let mut src = crate::baumwelch::MemorySource::new(&fam.members);
+        let mut phmm2 = phmm.clone();
+        let streamed = align_all_streamed(&mut phmm2, &mut src, &cfg).unwrap();
+        assert_eq!(streamed.rows.len(), slice.rows.len());
+        assert_eq!(streamed.skipped, slice.skipped);
+        assert_eq!(streamed.n_columns, slice.n_columns);
+        assert_eq!(streamed.sequences_streamed, fam.members.len() as u64);
+        assert!(streamed.train.is_none());
+        for (a, b) in streamed.rows.iter().zip(&slice.rows) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.columns, b.columns);
+            assert_eq!(a.loglik, b.loglik, "decode must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn streamed_alignment_can_train_first() {
+        let mut rng = XorShift::new(24);
+        let (fam, phmm) = family_profile(&mut rng);
+        let cfg = MsaConfig { train_iters: 2, mode: TrainMode::Minibatch, ..Default::default() };
+        let mut src = crate::baumwelch::MemorySource::new(&fam.members);
+        let mut phmm2 = phmm.clone();
+        let report = align_all_streamed(&mut phmm2, &mut src, &cfg).unwrap();
+        let train = report.train.expect("training pass must be reported");
+        assert!(train.iters >= 1);
+        assert!(train.minibatches >= 1);
+        assert_eq!(report.rows.len(), fam.members.len());
+        // Decode streamed the corpus once more after the training pass.
+        assert!(report.sequences_streamed >= train.sequences_streamed + fam.members.len() as u64);
+        let id = msa_identity(&report);
+        assert!(id > 0.5, "identity {id} after refinement");
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Corpus layer: where training reads come from.
+//!
+//! [`ReadSource`] decouples the training schedule (train.rs) from read
+//! residency. Full-batch EM over an in-memory slice and minibatch EM
+//! over a streaming million-sequence FASTA drive the same loop; only
+//! the source differs. The streaming sources ([`FastaSource`],
+//! [`FastqSource`]) hold one open file handle and one record at a time
+//! — the scheduler's shuffle window, not the corpus size, bounds
+//! resident memory.
+//!
+//! The module also owns minibatch assembly: a seeded Fisher–Yates
+//! shuffle over a bounded window (the streaming analogue of a full
+//! permutation, as in TF's shuffle buffer) and length bucketing so the
+//! E-step's `MAX_STRIPE`-read blocks carry near-equal-length reads and
+//! the striped kernels run well-filled lanes.
+
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::io::{FastaReader, FastqReader};
+use crate::seq::{Alphabet, Sequence};
+use crate::sim::XorShift;
+
+/// A rewindable stream of training reads.
+///
+/// `fill` appends up to `max` records and returns how many it appended
+/// (0 = exhausted); `reset` rewinds to the first record for the next
+/// epoch. Sources must be deterministic: two passes over the same
+/// source yield the same records in the same order, which is what makes
+/// seeded minibatch training bit-reproducible.
+pub trait ReadSource {
+    /// Append up to `max` records to `out`; returns the count appended.
+    fn fill(&mut self, max: usize, out: &mut Vec<Sequence>) -> Result<usize>;
+
+    /// Rewind to the first record (start of a new epoch).
+    fn reset(&mut self) -> Result<()>;
+
+    /// Total record count when known without consuming the source;
+    /// `None` for streaming sources. `TrainMode::Auto` keys off this.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// In-memory source over a slice — the adapter that lets the slice API
+/// (`train(&[Sequence], ..)`) run through the source-based schedules.
+pub struct MemorySource<'a> {
+    reads: &'a [Sequence],
+    pos: usize,
+}
+
+impl<'a> MemorySource<'a> {
+    pub fn new(reads: &'a [Sequence]) -> Self {
+        MemorySource { reads, pos: 0 }
+    }
+}
+
+impl ReadSource for MemorySource<'_> {
+    fn fill(&mut self, max: usize, out: &mut Vec<Sequence>) -> Result<usize> {
+        let take = max.min(self.reads.len() - self.pos);
+        out.extend_from_slice(&self.reads[self.pos..self.pos + take]);
+        self.pos += take;
+        Ok(take)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.reads.len())
+    }
+}
+
+/// Streaming FASTA source: one open handle, record-at-a-time decode,
+/// `reset` reopens the file. Never materializes the corpus.
+pub struct FastaSource {
+    path: PathBuf,
+    alphabet: Alphabet,
+    reader: Option<FastaReader<BufReader<std::fs::File>>>,
+}
+
+impl FastaSource {
+    /// Open `path` for streaming; a bad path fails here, not mid-epoch.
+    pub fn open(path: &Path, alphabet: Alphabet) -> Result<Self> {
+        let reader = FastaReader::open(path, alphabet)?;
+        Ok(FastaSource { path: path.to_path_buf(), alphabet, reader: Some(reader) })
+    }
+}
+
+impl ReadSource for FastaSource {
+    fn fill(&mut self, max: usize, out: &mut Vec<Sequence>) -> Result<usize> {
+        let mut n = 0;
+        while n < max {
+            let Some(reader) = self.reader.as_mut() else { break };
+            match reader.next_record()? {
+                Some(seq) => {
+                    out.push(seq);
+                    n += 1;
+                }
+                None => self.reader = None,
+            }
+        }
+        Ok(n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.reader = Some(FastaReader::open(&self.path, self.alphabet)?);
+        Ok(())
+    }
+}
+
+/// Streaming FASTQ source; qualities are dropped (the pHMM pipeline
+/// never consumes them).
+pub struct FastqSource {
+    path: PathBuf,
+    alphabet: Alphabet,
+    reader: Option<FastqReader<BufReader<std::fs::File>>>,
+}
+
+impl FastqSource {
+    /// Open `path` for streaming; a bad path fails here, not mid-epoch.
+    pub fn open(path: &Path, alphabet: Alphabet) -> Result<Self> {
+        let reader = FastqReader::open(path, alphabet)?;
+        Ok(FastqSource { path: path.to_path_buf(), alphabet, reader: Some(reader) })
+    }
+}
+
+impl ReadSource for FastqSource {
+    fn fill(&mut self, max: usize, out: &mut Vec<Sequence>) -> Result<usize> {
+        let mut n = 0;
+        while n < max {
+            let Some(reader) = self.reader.as_mut() else { break };
+            match reader.next_record()? {
+                Some((seq, _qual)) => {
+                    out.push(seq);
+                    n += 1;
+                }
+                None => self.reader = None,
+            }
+        }
+        Ok(n)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.reader = Some(FastqReader::open(&self.path, self.alphabet)?);
+        Ok(())
+    }
+}
+
+/// RNG for one epoch's shuffle: a distinct, deterministic xorshift
+/// stream per `(seed, epoch)` so epochs reshuffle differently while the
+/// whole run stays a pure function of the seed.
+pub fn epoch_rng(seed: u64, epoch: usize) -> XorShift {
+    XorShift::new(seed ^ (epoch as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// In-place Fisher–Yates over one shuffle window.
+pub fn shuffle_window(items: &mut [Sequence], rng: &mut XorShift) {
+    for i in (1..items.len()).rev() {
+        let j = rng.below(i + 1);
+        items.swap(i, j);
+    }
+}
+
+/// Length-bucket one minibatch: stable sort, longest first, so each
+/// `MAX_STRIPE`-read E-step block holds near-equal-length reads and no
+/// stripe lane idles behind a long straggler.
+pub fn bucket_by_length(batch: &mut [Sequence]) {
+    batch.sort_by(|a, b| b.len().cmp(&a.len()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::write_fasta;
+    use crate::seq::DNA;
+
+    fn seqs(lens: &[usize]) -> Vec<Sequence> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| Sequence::from_symbols(format!("s{i}"), vec![0u8; l]))
+            .collect()
+    }
+
+    #[test]
+    fn memory_source_fills_and_resets() {
+        let reads = seqs(&[3, 4, 5, 6, 7]);
+        let mut src = MemorySource::new(&reads);
+        assert_eq!(src.len_hint(), Some(5));
+        let mut out = Vec::new();
+        assert_eq!(src.fill(2, &mut out).unwrap(), 2);
+        assert_eq!(src.fill(10, &mut out).unwrap(), 3);
+        assert_eq!(src.fill(10, &mut out).unwrap(), 0);
+        assert_eq!(out, reads);
+        src.reset().unwrap();
+        let mut again = Vec::new();
+        assert_eq!(src.fill(100, &mut again).unwrap(), 5);
+        assert_eq!(again, reads);
+    }
+
+    #[test]
+    fn fasta_source_streams_and_resets() {
+        let dir = std::env::temp_dir().join("aphmm_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.fa");
+        let reads = vec![
+            Sequence::from_str("a", "ACGT", DNA).unwrap(),
+            Sequence::from_str("b", "TTTTTT", DNA).unwrap(),
+            Sequence::from_str("c", "GG", DNA).unwrap(),
+        ];
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &reads, DNA).unwrap();
+        std::fs::write(&path, buf).unwrap();
+
+        let mut src = FastaSource::open(&path, DNA).unwrap();
+        assert_eq!(src.len_hint(), None);
+        let mut out = Vec::new();
+        assert_eq!(src.fill(2, &mut out).unwrap(), 2);
+        assert_eq!(src.fill(2, &mut out).unwrap(), 1);
+        assert_eq!(src.fill(2, &mut out).unwrap(), 0);
+        assert_eq!(out, reads);
+        src.reset().unwrap();
+        let mut again = Vec::new();
+        assert_eq!(src.fill(100, &mut again).unwrap(), 3);
+        assert_eq!(again, reads);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shuffle_is_seed_deterministic() {
+        let mut a = seqs(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut b = a.clone();
+        let mut c = a.clone();
+        shuffle_window(&mut a, &mut epoch_rng(7, 0));
+        shuffle_window(&mut b, &mut epoch_rng(7, 0));
+        shuffle_window(&mut c, &mut epoch_rng(8, 0));
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different seeds should permute differently");
+        // Same seed, different epoch: a different permutation stream.
+        let mut d = seqs(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        shuffle_window(&mut d, &mut epoch_rng(7, 1));
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn bucketing_sorts_longest_first() {
+        let mut batch = seqs(&[2, 9, 4, 9, 1]);
+        bucket_by_length(&mut batch);
+        let lens: Vec<usize> = batch.iter().map(|s| s.len()).collect();
+        assert_eq!(lens, vec![9, 9, 4, 2, 1]);
+        // Stable: the two length-9 reads keep their input order.
+        assert_eq!(batch[0].id, "s1");
+        assert_eq!(batch[1].id, "s3");
+    }
+}

@@ -142,6 +142,16 @@ pub struct ReadStats {
     /// excluded — they are identical in both modes.  A high-water
     /// mark: [`ReadStats::merge`] takes the `max`, not the sum.
     pub peak_scratch_bytes: u64,
+    /// Training epochs (full corpus passes) this request ran.  Like
+    /// [`ReadStats::update_ns`], filled by the serving layer from
+    /// [`crate::baumwelch::TrainResult::epochs`]; 0 for inference.
+    pub epochs: u64,
+    /// Minibatch maximizations this request ran
+    /// ([`crate::baumwelch::TrainMode::Minibatch`]; 0 otherwise).
+    pub minibatches: u64,
+    /// Sequences pulled through a streaming corpus source
+    /// ([`crate::baumwelch::ReadSource`]); 0 for slice-fed requests.
+    pub sequences_streamed: u64,
 }
 
 impl ReadStats {
@@ -158,6 +168,9 @@ impl ReadStats {
         self.stripe_passes += other.stripe_passes;
         self.stripe_reads += other.stripe_reads;
         self.peak_scratch_bytes = self.peak_scratch_bytes.max(other.peak_scratch_bytes);
+        self.epochs += other.epochs;
+        self.minibatches += other.minibatches;
+        self.sequences_streamed += other.sequences_streamed;
     }
 }
 

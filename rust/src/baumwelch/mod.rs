@@ -45,12 +45,17 @@
 //! once per EM iteration ([`BwAccumulators`]).  [`logspace`] provides an
 //! independent log-space oracle used by the test suite.
 //!
-//! The training loop ([`train`] / [`train_with_engine`]) is generic
-//! over the engine and fans the batch E-step out across a shared
-//! [`crate::pool::WorkerPool`] with a deterministic block reduction —
-//! bit-identical results for any worker count.
+//! The training stack ([`train`] / [`train_with_engine`] for slices,
+//! [`train_source`] for streaming corpora) is layered: a corpus layer
+//! ([`ReadSource`] with in-memory and streaming FASTA/FASTQ sources), a
+//! schedule layer ([`TrainMode`] — full-batch, seeded minibatch, or
+//! hard-count Viterbi training), and underneath them the engine E-step,
+//! fanned out across a shared [`crate::pool::WorkerPool`] with a
+//! deterministic block reduction — bit-identical results for any worker
+//! count, and under a fixed seed for any schedule.
 
 pub mod banded;
+mod corpus;
 mod engine;
 mod filter;
 mod kernels;
@@ -83,9 +88,11 @@ pub use sparse::{
 };
 pub use striped::{forward_striped_with, score_striped_with};
 pub use tile::{DenseTiles, OutTiles};
+pub use corpus::{FastaSource, FastqSource, MemorySource, ReadSource};
 pub use train::{
-    train, train_in, train_in_with, train_with_engine, train_with_engine_with, TrainConfig,
-    TrainResult,
+    train, train_in, train_in_with, train_source, train_source_in, train_source_in_with,
+    train_source_with_engine_with, train_with_engine, train_with_engine_with, TrainConfig,
+    TrainMode, TrainResult, AUTO_MINIBATCH_THRESHOLD,
 };
 pub use update::BwAccumulators;
 

@@ -1,7 +1,26 @@
-//! The EM training loop (expectation over many reads + one maximization
-//! per iteration), generic over the [`ExpectationEngine`] backend, with
-//! step-level timing instrumentation that feeds Fig. 2 (execution-time
-//! breakdown) and the accelerator model.
+//! The layered training stack: a **corpus layer** ([`super::corpus`])
+//! that yields reads, a **schedule layer** ([`TrainMode`]) that decides
+//! when the parameters move, and the engine E-step underneath —
+//! generic over the [`ExpectationEngine`] backend, with step-level
+//! timing instrumentation that feeds Fig. 2 (execution-time breakdown)
+//! and the accelerator model.
+//!
+//! Three schedules share the one engine hot path (ApHMM's memoized
+//! kernels are mode-agnostic, §4.2–4.3):
+//!
+//! * [`TrainMode::Batch`] — classic full-batch EM: every read
+//!   contributes to one accumulator, one maximization per iteration.
+//!   Bit-identical to the pre-mode trainer.
+//! * [`TrainMode::Minibatch`] — stochastic EM (Lam & Meyer; learnMSA):
+//!   a seeded shuffle window streams over the corpus, each
+//!   length-bucketed minibatch runs an E-step and an immediate
+//!   maximization.  Resident memory is bounded by the shuffle window,
+//!   never the corpus, so million-sequence files train through the
+//!   streaming sources.
+//! * [`TrainMode::Viterbi`] — hard-count training: the single best
+//!   path per read ([`crate::viterbi::viterbi_path`]) contributes
+//!   indicator counts instead of posterior expectations, re-estimated
+//!   through the ordinary [`BwAccumulators::apply`] M-step.
 //!
 //! The E-step is a **parallel batch reduction**: reads are cut into
 //! fixed-size blocks, participants drawn from a shared
@@ -15,38 +34,117 @@
 //! `n_workers = 1` is literally the same computation on one thread.
 //!
 //! Backend selection: [`TrainConfig::engine`] names an [`EngineKind`];
-//! [`train`] / [`train_in`] dispatch to the matching engine, and
-//! [`train_with_engine`] accepts any [`ExpectationEngine`] instance
-//! directly (the coordinator uses this for the device-backed XLA
-//! engine).
+//! [`train`] / [`train_in`] (slices) and [`train_source`] /
+//! [`train_source_in`] (streaming corpora) dispatch to the matching
+//! engine, and [`train_with_engine`] accepts any [`ExpectationEngine`]
+//! instance directly (the coordinator uses this for the device-backed
+//! XLA engine).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::banded::BandedEngine;
+use super::corpus::{bucket_by_length, epoch_rng, shuffle_window, MemorySource, ReadSource};
 use super::engine::{EngineKind, ExpectationEngine, ReadStats, ReferenceEngine, SparseEngine};
 use super::filter::{FilterConfig, FilterStats};
 use super::lowering::GatherKind;
 use super::simd::{SimdPolicy, MAX_STRIPE};
 use super::sparse::{ForwardOptions, ScratchMode};
+use super::update::BwAccumulators;
 use crate::cancel::CancelToken;
 use crate::error::{ApHmmError, Result};
 use crate::phmm::Phmm;
 use crate::pool::WorkerPool;
 use crate::seq::Sequence;
+use crate::viterbi::viterbi_path;
 
 /// Reads per E-step block.  The unit of the deterministic reduction:
 /// results depend on this constant but never on the worker count.
 const ESTEP_BLOCK: usize = 8;
 
+/// Largest in-memory corpus [`TrainMode::Auto`] still trains
+/// full-batch; anything larger — or of unknown size, i.e. streaming —
+/// goes minibatch.
+pub const AUTO_MINIBATCH_THRESHOLD: usize = 1024;
+
+/// Shuffle-window factor: the minibatch scheduler keeps at most
+/// `minibatch × SHUFFLE_WINDOW_FACTOR` reads resident and permutes
+/// within that window (the streaming analogue of a full-corpus
+/// shuffle).  [`TrainResult::peak_resident_reads`] reports the bound
+/// actually reached.
+const SHUFFLE_WINDOW_FACTOR: usize = 8;
+
+/// Training schedule: when the parameters move relative to the E-step.
+///
+/// Every mode runs behind every [`EngineKind`] — the schedule layer
+/// only decides which reads feed which accumulator and when
+/// maximization happens; the per-read expectation math is untouched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Full-batch EM.  One accumulator over every read, one
+    /// maximization per iteration; bit-identical to the pre-mode
+    /// trainer.  Requires the corpus resident (streaming sources are
+    /// materialized first).
+    Batch,
+    /// Stochastic (minibatch) EM: seeded shuffle window over the
+    /// corpus, one maximization per length-bucketed minibatch.  Same
+    /// seed ⇒ bit-identical run; resident memory bounded by the
+    /// shuffle window.
+    Minibatch,
+    /// Hard-count Viterbi training (Lam & Meyer): each read's single
+    /// best path contributes indicator counts, applied once per epoch.
+    /// Engine-independent (the DP runs on the graph directly), so it
+    /// works behind every [`EngineKind`] including `Xla`.
+    Viterbi,
+    /// [`Batch`](TrainMode::Batch) for corpora of known size up to
+    /// [`AUTO_MINIBATCH_THRESHOLD`], [`Minibatch`](TrainMode::Minibatch)
+    /// for larger or streaming (unknown-size) corpora.
+    Auto,
+}
+
+impl TrainMode {
+    pub const NAMES: &'static [&'static str] = &["batch", "minibatch", "viterbi", "auto"];
+
+    pub fn parse(name: &str) -> Option<TrainMode> {
+        match name {
+            "batch" => Some(TrainMode::Batch),
+            "minibatch" => Some(TrainMode::Minibatch),
+            "viterbi" => Some(TrainMode::Viterbi),
+            "auto" => Some(TrainMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainMode::Batch => "batch",
+            TrainMode::Minibatch => "minibatch",
+            TrainMode::Viterbi => "viterbi",
+            TrainMode::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` against a corpus-size hint (`None` = streaming).
+    pub fn resolve(self, n_reads: Option<usize>) -> TrainMode {
+        match self {
+            TrainMode::Auto => match n_reads {
+                Some(n) if n <= AUTO_MINIBATCH_THRESHOLD => TrainMode::Batch,
+                _ => TrainMode::Minibatch,
+            },
+            mode => mode,
+        }
+    }
+}
+
 /// Training configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
-    /// Maximum EM iterations.
+    /// Maximum EM iterations (epochs under the minibatch and Viterbi
+    /// schedules — one full pass over the corpus each).
     pub max_iters: usize,
     /// Stop when the mean per-read log-likelihood improves less than
-    /// this between iterations.
+    /// this between iterations/epochs.
     pub tol: f64,
     /// State filter used during the forward pass (sparse engines; the
     /// dense engines ignore it).
@@ -78,6 +176,18 @@ pub struct TrainConfig {
     /// is only reachable through the coordinator or
     /// [`train_with_engine`]; the other kinds work everywhere.
     pub engine: EngineKind,
+    /// Training schedule (see [`TrainMode`]).  The `Batch` default
+    /// keeps every existing caller bit-identical to the pre-mode
+    /// trainer.
+    pub mode: TrainMode,
+    /// Reads per minibatch under [`TrainMode::Minibatch`] (also the
+    /// streaming window unit of the Viterbi schedule); `0` falls back
+    /// to 64.
+    pub minibatch: usize,
+    /// Seed of the deterministic minibatch shuffler.  Same seed ⇒
+    /// bit-identical run; different seeds reshuffle but converge to the
+    /// same solution (asserted by the convergence tests).
+    pub seed: u64,
 }
 
 impl Default for TrainConfig {
@@ -92,22 +202,39 @@ impl Default for TrainConfig {
             scratch_mode: ScratchMode::Full,
             max_scratch_bytes: 0,
             engine: EngineKind::Sparse,
+            mode: TrainMode::Batch,
+            minibatch: 64,
+            seed: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Effective minibatch size (`minibatch` with the `0` fallback).
+    fn minibatch_len(&self) -> usize {
+        if self.minibatch == 0 {
+            64
+        } else {
+            self.minibatch
         }
     }
 }
 
 /// Training outcome and instrumentation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TrainResult {
-    /// Mean per-read log-likelihood after each iteration's E step.
+    /// Mean per-read log-likelihood after each iteration's E step
+    /// (per epoch under the minibatch/Viterbi schedules).
     pub loglik_history: Vec<f64>,
-    /// Iterations actually run.
+    /// Iterations actually run (== `epochs` for the epoch schedules).
     pub iters: usize,
     /// Time in the forward calculation (Fig. 2's "Forward").  Summed
-    /// across E-step workers: CPU time, not wall time.
+    /// across E-step workers: CPU time, not wall time.  Viterbi
+    /// training charges its DP here.
     pub forward_ns: u128,
     /// Time in the fused backward + update pass ("Backward" + "Updates").
-    /// Summed across E-step workers.
+    /// Summed across E-step workers.  Viterbi training charges its
+    /// count accumulation here.
     pub backward_update_ns: u128,
     /// Time in the maximization division.
     pub maximize_ns: u128,
@@ -133,6 +260,21 @@ pub struct TrainResult {
     /// run (a high-water mark, merged via `max` — see
     /// [`ReadStats::peak_scratch_bytes`]).
     pub peak_scratch_bytes: u64,
+    /// Full passes over the corpus (== `iters` today; kept separate so
+    /// partial-epoch schedules can diverge).
+    pub epochs: u64,
+    /// Maximizations run by the minibatch schedule (0 for batch and
+    /// Viterbi).
+    pub minibatches: u64,
+    /// Reads pulled from the corpus source across all epochs (each
+    /// read counts once per epoch; 0 for the slice-based batch path,
+    /// which never streams).
+    pub sequences_streamed: u64,
+    /// High-water mark of reads resident at once in the scheduler.
+    /// For streaming minibatch runs this is bounded by the shuffle
+    /// window regardless of corpus size — the memory contract the
+    /// streaming smoke test pins.
+    pub peak_resident_reads: u64,
 }
 
 /// Per-block E-step output: one accumulator plus its instrumentation,
@@ -275,8 +417,34 @@ fn run_estep<E: ExpectationEngine>(
         .collect()
 }
 
-/// Train `phmm` on `reads` with batch EM, using the engine named by
-/// `cfg.engine` and the process-wide shared [`WorkerPool`].
+/// Fold one block's instrumentation into the run totals (identical for
+/// every schedule; peak scratch merges via `max`).
+fn fold_block_stats<A>(result: &mut TrainResult, out: &BlockOut<A>) {
+    result.forward_ns += out.stats.forward_ns;
+    result.backward_update_ns += out.stats.backward_update_ns;
+    result.filter_stats.merge(&out.stats.filter_stats);
+    result.states_processed += out.stats.states_processed;
+    result.edges_processed += out.stats.edges_processed;
+    result.timesteps += out.stats.timesteps;
+    result.reads_skipped += out.reads_skipped;
+    result.stripe_passes += out.stats.stripe_passes;
+    result.stripe_reads += out.stats.stripe_reads;
+    result.peak_scratch_bytes = result.peak_scratch_bytes.max(out.stats.peak_scratch_bytes);
+}
+
+fn forward_options(cfg: &TrainConfig) -> ForwardOptions {
+    ForwardOptions {
+        filter: cfg.filter,
+        gather: cfg.gather,
+        simd: cfg.simd,
+        scratch: cfg.scratch_mode,
+        max_scratch_bytes: cfg.max_scratch_bytes,
+    }
+}
+
+/// Train `phmm` on `reads` under the schedule named by `cfg.mode`,
+/// using the engine named by `cfg.engine` and the process-wide shared
+/// [`WorkerPool`].
 ///
 /// Reads that become numerically dead under the current parameters (e.g.
 /// mis-mapped reads whose path probability underflows the filter) are
@@ -327,13 +495,61 @@ pub fn train_in_with(
     }
 }
 
-/// The generic EM loop over any [`ExpectationEngine`] instance.
+/// Train from a [`ReadSource`] — the streaming entry point.  Under the
+/// minibatch and Viterbi schedules the corpus is never materialized;
+/// `Batch` (and `Auto` resolving to it) loads the source first, since
+/// full-batch EM needs every read each iteration.
+pub fn train_source(
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    train_source_in(phmm, source, cfg, WorkerPool::global())
+}
+
+/// [`train_source`] drawing E-step parallelism from a caller-owned pool.
+pub fn train_source_in(
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+) -> Result<TrainResult> {
+    train_source_in_with(phmm, source, cfg, pool, &CancelToken::none())
+}
+
+/// [`train_source_in`] with a cooperative [`CancelToken`].
+pub fn train_source_in_with(
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
+    match cfg.engine {
+        EngineKind::Sparse => {
+            train_source_with_engine_with(&SparseEngine, phmm, source, cfg, pool, cancel)
+        }
+        EngineKind::Banded => {
+            train_source_with_engine_with(&BandedEngine, phmm, source, cfg, pool, cancel)
+        }
+        EngineKind::Reference => {
+            train_source_with_engine_with(&ReferenceEngine, phmm, source, cfg, pool, cancel)
+        }
+        EngineKind::Xla => Err(ApHmmError::Config(
+            "EngineKind::Xla needs a device session: use the coordinator with artifacts_dir, \
+             or call train_with_engine with a coordinator::XlaEngine"
+                .into(),
+        )),
+    }
+}
+
+/// The schedule dispatcher over any [`ExpectationEngine`] instance and
+/// an in-memory read slice.
 ///
-/// Per iteration: freeze the parameters into the engine's coefficient
-/// tables ([`ExpectationEngine::prepare`], charged to the forward
-/// phase it accelerates, paper §4.2–4.3), fan the batch E-step out over
-/// `pool`, merge block accumulators in block order, and run the
-/// engine's maximization.
+/// `cfg.mode` picks the schedule ([`TrainMode::Auto`] resolves against
+/// the slice length); the minibatch and Viterbi schedules run through
+/// the same code as the streaming path via a [`MemorySource`] adapter,
+/// so slice and source training are one implementation.
 pub fn train_with_engine<E: ExpectationEngine>(
     engine: &E,
     phmm: &mut Phmm,
@@ -357,28 +573,69 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
     pool: &WorkerPool,
     cancel: &CancelToken,
 ) -> Result<TrainResult> {
-    let opts = ForwardOptions {
-        filter: cfg.filter,
-        gather: cfg.gather,
-        simd: cfg.simd,
-        scratch: cfg.scratch_mode,
-        max_scratch_bytes: cfg.max_scratch_bytes,
-    };
-    let mut result = TrainResult {
-        loglik_history: Vec::new(),
-        iters: 0,
-        forward_ns: 0,
-        backward_update_ns: 0,
-        maximize_ns: 0,
-        filter_stats: FilterStats::default(),
-        states_processed: 0,
-        edges_processed: 0,
-        timesteps: 0,
-        reads_skipped: 0,
-        stripe_passes: 0,
-        stripe_reads: 0,
-        peak_scratch_bytes: 0,
-    };
+    match cfg.mode.resolve(Some(reads.len())) {
+        TrainMode::Batch => {
+            let mut result = train_batch(engine, phmm, reads, cfg, pool, cancel)?;
+            result.peak_resident_reads = reads.len() as u64;
+            Ok(result)
+        }
+        TrainMode::Minibatch => {
+            let mut source = MemorySource::new(reads);
+            train_minibatch(engine, phmm, &mut source, cfg, pool, cancel)
+        }
+        TrainMode::Viterbi => {
+            let mut source = MemorySource::new(reads);
+            train_viterbi(phmm, &mut source, cfg, cancel)
+        }
+        TrainMode::Auto => unreachable!("resolve() never returns Auto"),
+    }
+}
+
+/// Schedule dispatcher over a [`ReadSource`] (see
+/// [`train_with_engine_with`]; `Auto` resolves against the source's
+/// [`len_hint`](ReadSource::len_hint)).
+pub fn train_source_with_engine_with<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
+    match cfg.mode.resolve(source.len_hint()) {
+        TrainMode::Batch => {
+            // Full-batch needs every read per iteration: materialize.
+            source.reset()?;
+            let mut reads: Vec<Sequence> = Vec::new();
+            while source.fill(4096, &mut reads)? > 0 {}
+            let mut result = train_batch(engine, phmm, &reads, cfg, pool, cancel)?;
+            result.sequences_streamed += reads.len() as u64;
+            result.peak_resident_reads = reads.len() as u64;
+            Ok(result)
+        }
+        TrainMode::Minibatch => train_minibatch(engine, phmm, source, cfg, pool, cancel),
+        TrainMode::Viterbi => train_viterbi(phmm, source, cfg, cancel),
+        TrainMode::Auto => unreachable!("resolve() never returns Auto"),
+    }
+}
+
+/// The full-batch EM loop (the pre-mode trainer, verbatim).
+///
+/// Per iteration: freeze the parameters into the engine's coefficient
+/// tables ([`ExpectationEngine::prepare`], charged to the forward
+/// phase it accelerates, paper §4.2–4.3), fan the batch E-step out over
+/// `pool`, merge block accumulators in block order, and run the
+/// engine's maximization.
+fn train_batch<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &mut Phmm,
+    reads: &[Sequence],
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
+    let opts = forward_options(cfg);
+    let mut result = TrainResult::default();
     let mut prev_mean = f64::NEG_INFINITY;
     for _iter in 0..cfg.max_iters {
         // Parameters are frozen for the whole E-step: memoize the fused
@@ -391,17 +648,7 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
         let mut acc = engine.make_acc(phmm);
         for out in &outs {
             engine.merge(&mut acc, &out.acc);
-            result.forward_ns += out.stats.forward_ns;
-            result.backward_update_ns += out.stats.backward_update_ns;
-            result.filter_stats.merge(&out.stats.filter_stats);
-            result.states_processed += out.stats.states_processed;
-            result.edges_processed += out.stats.edges_processed;
-            result.timesteps += out.stats.timesteps;
-            result.reads_skipped += out.reads_skipped;
-            result.stripe_passes += out.stats.stripe_passes;
-            result.stripe_reads += out.stats.stripe_reads;
-            result.peak_scratch_bytes =
-                result.peak_scratch_bytes.max(out.stats.peak_scratch_bytes);
+            fold_block_stats(&mut result, out);
         }
         let (total_loglik, n_observations) = engine.observations(&acc);
         if n_observations == 0 {
@@ -410,11 +657,227 @@ pub fn train_with_engine_with<E: ExpectationEngine>(
         let mean_ll = total_loglik / n_observations as f64;
         result.loglik_history.push(mean_ll);
         result.iters += 1;
+        result.epochs += 1;
 
         let t2 = Instant::now();
         engine.maximize(phmm, &acc)?;
         result.maximize_ns += t2.elapsed().as_nanos();
 
+        if (mean_ll - prev_mean).abs() < cfg.tol {
+            break;
+        }
+        prev_mean = mean_ll;
+    }
+    Ok(result)
+}
+
+/// The stochastic-EM loop: stream the corpus through a seeded shuffle
+/// window, maximize after every length-bucketed minibatch.
+///
+/// Determinism: the read order is a pure function of `(source order,
+/// cfg.seed)` — the window fill is sequential, the shuffle RNG is a
+/// per-`(seed, epoch)` xorshift, and minibatch E-steps reuse the
+/// deterministic block reduction — so the same seed gives a
+/// bit-identical [`TrainResult`] and trained graph for any worker
+/// count.  Convergence is judged per epoch on the running mean
+/// log-likelihood (each minibatch's log-odds measured under the
+/// parameters it started from).
+fn train_minibatch<E: ExpectationEngine>(
+    engine: &E,
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &TrainConfig,
+    pool: &WorkerPool,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
+    let opts = forward_options(cfg);
+    let mb = cfg.minibatch_len();
+    let window = mb.saturating_mul(SHUFFLE_WINDOW_FACTOR);
+    let mut result = TrainResult::default();
+    let mut prev_mean = f64::NEG_INFINITY;
+    let mut buffer: Vec<Sequence> = Vec::with_capacity(window.min(4096));
+    for epoch in 0..cfg.max_iters {
+        source.reset()?;
+        let mut rng = epoch_rng(cfg.seed, epoch);
+        let mut epoch_ll = 0.0f64;
+        let mut epoch_obs = 0u64;
+        loop {
+            // Fill the shuffle window — the residency bound: at most
+            // `window` reads live at once, whatever the corpus size.
+            while buffer.len() < window {
+                if source.fill(window - buffer.len(), &mut buffer)? == 0 {
+                    break;
+                }
+            }
+            if buffer.is_empty() {
+                break;
+            }
+            result.sequences_streamed += buffer.len() as u64;
+            result.peak_resident_reads = result.peak_resident_reads.max(buffer.len() as u64);
+            shuffle_window(&mut buffer, &mut rng);
+            let mut start = 0;
+            while start < buffer.len() {
+                let end = (start + mb).min(buffer.len());
+                // Longest-first within the minibatch so its MAX_STRIPE
+                // blocks carry near-equal-length reads.
+                bucket_by_length(&mut buffer[start..end]);
+                // E-step + immediate maximization: the parameters move
+                // once per minibatch, so the coefficient tables re-freeze
+                // per minibatch as well.
+                let t0 = Instant::now();
+                let prep = engine.prepare(phmm)?;
+                result.forward_ns += t0.elapsed().as_nanos();
+                let outs = run_estep(
+                    engine,
+                    phmm,
+                    &prep,
+                    &buffer[start..end],
+                    &opts,
+                    cfg.n_workers,
+                    pool,
+                    cancel,
+                )?;
+                let mut acc = engine.make_acc(phmm);
+                for out in &outs {
+                    engine.merge(&mut acc, &out.acc);
+                    fold_block_stats(&mut result, out);
+                }
+                let (ll, n_obs) = engine.observations(&acc);
+                if n_obs > 0 {
+                    let t2 = Instant::now();
+                    engine.maximize(phmm, &acc)?;
+                    result.maximize_ns += t2.elapsed().as_nanos();
+                    epoch_ll += ll;
+                    epoch_obs += n_obs;
+                }
+                result.minibatches += 1;
+                start = end;
+            }
+            buffer.clear();
+        }
+        if epoch_obs == 0 {
+            break;
+        }
+        result.epochs += 1;
+        result.iters += 1;
+        let mean_ll = epoch_ll / epoch_obs as f64;
+        result.loglik_history.push(mean_ll);
+        if (mean_ll - prev_mean).abs() < cfg.tol {
+            break;
+        }
+        prev_mean = mean_ll;
+    }
+    Ok(result)
+}
+
+/// Fold one decoded path's hard counts into the shared accumulators —
+/// the Viterbi-training E-step (indicator counts in place of posterior
+/// expectations; Lam & Meyer).  The accumulator shape is exactly the
+/// soft E-step's, so the ordinary [`BwAccumulators::apply`] M-step
+/// re-estimates from it unchanged.
+fn accumulate_viterbi_counts(
+    phmm: &Phmm,
+    states: &[u32],
+    log_prob: f64,
+    read: &Sequence,
+    acc: &mut BwAccumulators,
+) {
+    let sigma = phmm.sigma();
+    for (t, &state) in states.iter().enumerate() {
+        let i = state as usize;
+        acc.gamma_den[i] += 1.0;
+        acc.e_num[i * sigma + read.data[t] as usize] += 1.0;
+    }
+    for w in states.windows(2) {
+        let (j, to) = (w[0] as usize, w[1]);
+        // CSR rows are strictly ascending in target, so the edge is the
+        // unique slot with `out_to == to` in row j.
+        let lo = phmm.out_ptr[j] as usize;
+        let hi = phmm.out_ptr[j + 1] as usize;
+        if let Some(k) = phmm.out_to[lo..hi].iter().position(|&t2| t2 == to) {
+            acc.xi[lo + k] += 1.0;
+            acc.trans_den[j] += 1.0;
+        }
+    }
+    acc.n_observations += 1;
+    acc.total_loglik += log_prob;
+}
+
+/// The Viterbi-training loop: per epoch, decode every read's best path
+/// ([`viterbi_path`] — deterministic, lowest-index tie-break), fold
+/// hard counts into one accumulator, and apply the ordinary M-step
+/// once.  Engine-independent: the DP runs on the graph directly, so
+/// this schedule works behind every [`EngineKind`].
+///
+/// Reads whose best path dies under the current parameters (including
+/// out-of-alphabet symbols) are counted in
+/// [`TrainResult::reads_skipped`] — the same skip rule as the soft
+/// E-step.  Convergence is judged on the mean best-path log-probability
+/// per epoch.
+fn train_viterbi(
+    phmm: &mut Phmm,
+    source: &mut dyn ReadSource,
+    cfg: &TrainConfig,
+    cancel: &CancelToken,
+) -> Result<TrainResult> {
+    let window = cfg.minibatch_len().saturating_mul(SHUFFLE_WINDOW_FACTOR);
+    let mut result = TrainResult::default();
+    let mut prev_mean = f64::NEG_INFINITY;
+    let mut buffer: Vec<Sequence> = Vec::with_capacity(window.min(4096));
+    for _epoch in 0..cfg.max_iters {
+        source.reset()?;
+        let mut acc = BwAccumulators::new(phmm);
+        loop {
+            let got = source.fill(window, &mut buffer)?;
+            if buffer.is_empty() {
+                break;
+            }
+            result.sequences_streamed += buffer.len() as u64;
+            result.peak_resident_reads = result.peak_resident_reads.max(buffer.len() as u64);
+            for read in &buffer {
+                if let Some(cause) = cancel.check() {
+                    return Err(ApHmmError::Cancelled(cause));
+                }
+                crate::failpoint!("engine::accumulate");
+                if read.is_empty() {
+                    result.reads_skipped += 1;
+                    continue;
+                }
+                let t0 = Instant::now();
+                let path = match viterbi_path(phmm, read) {
+                    Ok(p) => p,
+                    Err(ApHmmError::Numerical(_)) => {
+                        result.reads_skipped += 1;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
+                result.forward_ns += t0.elapsed().as_nanos();
+                let t1 = Instant::now();
+                accumulate_viterbi_counts(phmm, &path.states, path.log_prob, read, &mut acc);
+                result.backward_update_ns += t1.elapsed().as_nanos();
+                // DP workload: every state and edge relaxed per timestep.
+                let t = read.len() as u64;
+                result.timesteps += t;
+                result.states_processed += t * phmm.n_states() as u64;
+                result.edges_processed +=
+                    t.saturating_sub(1) * phmm.n_transitions() as u64;
+            }
+            buffer.clear();
+            if got == 0 {
+                break;
+            }
+        }
+        if acc.n_observations == 0 {
+            break;
+        }
+        let mean_ll = acc.total_loglik / acc.n_observations as f64;
+        result.loglik_history.push(mean_ll);
+        result.iters += 1;
+        result.epochs += 1;
+        let t2 = Instant::now();
+        acc.apply(phmm)?;
+        result.maximize_ns += t2.elapsed().as_nanos();
         if (mean_ll - prev_mean).abs() < cfg.tol {
             break;
         }
@@ -601,5 +1064,89 @@ mod tests {
         let res = train(&mut g, &[], &TrainConfig::default()).unwrap();
         assert_eq!(res.iters, 0);
         assert!(res.loglik_history.is_empty());
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for (i, name) in TrainMode::NAMES.iter().enumerate() {
+            let mode = TrainMode::parse(name).unwrap();
+            assert_eq!(mode.name(), *name);
+            assert_eq!(TrainMode::NAMES[i], mode.name());
+        }
+        assert!(TrainMode::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn auto_resolves_by_corpus_size() {
+        assert_eq!(TrainMode::Auto.resolve(Some(10)), TrainMode::Batch);
+        assert_eq!(
+            TrainMode::Auto.resolve(Some(AUTO_MINIBATCH_THRESHOLD + 1)),
+            TrainMode::Minibatch
+        );
+        assert_eq!(TrainMode::Auto.resolve(None), TrainMode::Minibatch);
+        // Explicit modes resolve to themselves regardless of size.
+        assert_eq!(TrainMode::Viterbi.resolve(Some(1)), TrainMode::Viterbi);
+        assert_eq!(TrainMode::Batch.resolve(None), TrainMode::Batch);
+    }
+
+    #[test]
+    fn batch_default_mode_reports_epoch_counters() {
+        let mut rng = XorShift::new(71);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 50, 4));
+        let mut g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let reads = noisy_reads(&mut rng, &reference, 4);
+        let cfg = TrainConfig { max_iters: 2, tol: 0.0, ..Default::default() };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        assert_eq!(res.epochs, res.iters as u64);
+        assert_eq!(res.minibatches, 0);
+        assert_eq!(res.sequences_streamed, 0, "slice batch never streams");
+        assert_eq!(res.peak_resident_reads, reads.len() as u64);
+    }
+
+    #[test]
+    fn minibatch_mode_trains_and_counts() {
+        let mut rng = XorShift::new(73);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 60, 4));
+        let mut g = Phmm::error_correction(&reference, &Default::default()).unwrap();
+        let reads = noisy_reads(&mut rng, &reference, 10);
+        let cfg = TrainConfig {
+            max_iters: 2,
+            tol: 0.0,
+            mode: TrainMode::Minibatch,
+            minibatch: 4,
+            ..Default::default()
+        };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        assert_eq!(res.epochs, 2);
+        // 10 reads / minibatch 4 → 3 minibatches per epoch.
+        assert_eq!(res.minibatches, 6);
+        assert_eq!(res.sequences_streamed, 20);
+        assert_eq!(res.loglik_history.len(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn viterbi_mode_trains_and_skips_dead_reads() {
+        let mut rng = XorShift::new(79);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 60, 4));
+        let mut g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let mut reads = noisy_reads(&mut rng, &reference, 5);
+        reads.push(Sequence::from_symbols("empty", vec![]));
+        reads.push(Sequence::from_symbols("bad", vec![0, 1, 99]));
+        let cfg = TrainConfig {
+            max_iters: 2,
+            tol: 0.0,
+            mode: TrainMode::Viterbi,
+            ..Default::default()
+        };
+        let res = train(&mut g, &reads, &cfg).unwrap();
+        assert_eq!(res.epochs, 2);
+        assert_eq!(res.reads_skipped, 2 * res.epochs);
+        assert_eq!(res.loglik_history.len(), 2);
+        assert!(res.timesteps > 0);
+        g.validate().unwrap();
     }
 }

@@ -122,6 +122,14 @@ pub struct Metrics {
     /// checkpointed scratch this stays O(√T·states) even for reads
     /// whose full matrix would not fit the budget.
     pub peak_scratch_bytes: AtomicU64,
+    /// Training epochs completed across all jobs (one per full-batch
+    /// iteration or per minibatch/Viterbi epoch).
+    pub epochs: AtomicU64,
+    /// Minibatches processed across all jobs (0 under full batch).
+    pub minibatches: AtomicU64,
+    /// Sequences pulled through streaming read sources across all jobs
+    /// (0 for purely in-memory full-batch training).
+    pub sequences_streamed: AtomicU64,
     /// Sparse-gather rows dispatched down the CSR row path.
     pub rows_csr: AtomicU64,
     /// Sparse-gather rows dispatched down the dense-tile row path.
@@ -203,6 +211,9 @@ impl Default for Metrics {
             failures_shed: AtomicU64::new(0),
             over_memory_refusals: AtomicU64::new(0),
             peak_scratch_bytes: AtomicU64::new(0),
+            epochs: AtomicU64::new(0),
+            minibatches: AtomicU64::new(0),
+            sequences_streamed: AtomicU64::new(0),
             rows_csr: AtomicU64::new(0),
             rows_dense_tile: AtomicU64::new(0),
             filter_calls: AtomicU64::new(0),
@@ -300,6 +311,20 @@ impl Metrics {
         self.reads_skipped.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Fold one training run's schedule counters in (epochs run,
+    /// minibatches processed, sequences streamed from its source).
+    pub fn record_train_progress(&self, epochs: u64, minibatches: u64, sequences_streamed: u64) {
+        if epochs > 0 {
+            self.epochs.fetch_add(epochs, Ordering::Relaxed);
+        }
+        if minibatches > 0 {
+            self.minibatches.fetch_add(minibatches, Ordering::Relaxed);
+        }
+        if sequences_streamed > 0 {
+            self.sequences_streamed.fetch_add(sequences_streamed, Ordering::Relaxed);
+        }
+    }
+
     /// Feed one request's stage durations into the per-stage histogram
     /// family.  A zero duration means the stage did not run and is not
     /// recorded, so each stage's quantiles describe only requests that
@@ -342,6 +367,7 @@ impl Metrics {
         if stats.peak_scratch_bytes > 0 {
             self.peak_scratch_bytes.fetch_max(stats.peak_scratch_bytes, Ordering::Relaxed);
         }
+        self.record_train_progress(stats.epochs, stats.minibatches, stats.sequences_streamed);
     }
 
     /// Record one striped score pass that carried `fill` reads (out of
@@ -538,6 +564,9 @@ impl Metrics {
             shed: self.failures_shed.load(Ordering::Relaxed),
             over_memory_refusals: self.over_memory_refusals.load(Ordering::Relaxed),
             peak_scratch_bytes: self.peak_scratch_bytes.load(Ordering::Relaxed),
+            epochs: self.epochs.load(Ordering::Relaxed),
+            minibatches: self.minibatches.load(Ordering::Relaxed),
+            sequences_streamed: self.sequences_streamed.load(Ordering::Relaxed),
             rows_csr: self.rows_csr.load(Ordering::Relaxed),
             rows_dense_tile: self.rows_dense_tile.load(Ordering::Relaxed),
             filter_calls: self.filter_calls.load(Ordering::Relaxed),
@@ -640,6 +669,12 @@ pub struct MetricsSummary {
     pub over_memory_refusals: u64,
     /// Highest per-read forward-row scratch observed (bytes).
     pub peak_scratch_bytes: u64,
+    /// Training epochs completed across all jobs.
+    pub epochs: u64,
+    /// Minibatches processed across all jobs (0 under full batch).
+    pub minibatches: u64,
+    /// Sequences pulled through streaming read sources.
+    pub sequences_streamed: u64,
     /// Sparse-gather rows dispatched down the CSR row path.
     pub rows_csr: u64,
     /// Sparse-gather rows dispatched down the dense-tile row path.

@@ -38,7 +38,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::apps::train_chunk;
-use crate::baumwelch::{train_with_engine, EngineKind, TrainConfig};
+use crate::baumwelch::{train_with_engine, EngineKind, TrainConfig, TrainResult};
 use crate::error::{ApHmmError, Result};
 use crate::phmm::{EcDesignParams, Phmm};
 use crate::pool::WorkerPool;
@@ -180,11 +180,16 @@ pub fn run_jobs_in(
             run_one(&job, cfg, xla_engine.as_ref(), worker_id, pool)
         }));
         match result {
-            Ok(Ok((outcome, timesteps, states, reads_skipped))) => {
-                metrics.record(t0.elapsed().as_nanos() as u64, timesteps, states);
-                if reads_skipped > 0 {
-                    metrics.record_skipped_reads(reads_skipped);
+            Ok(Ok((outcome, train))) => {
+                metrics.record(t0.elapsed().as_nanos() as u64, train.timesteps, train.states_processed);
+                if train.reads_skipped > 0 {
+                    metrics.record_skipped_reads(train.reads_skipped);
                 }
+                metrics.record_train_progress(
+                    train.epochs,
+                    train.minibatches,
+                    train.sequences_streamed,
+                );
                 outcomes.lock().unwrap().push(outcome);
             }
             Ok(Err(e)) => {
@@ -264,8 +269,10 @@ pub fn run_jobs_in(
     Ok(outcomes)
 }
 
-/// Execute one job on this worker.  Returns the outcome plus the
-/// timestep/state workload counters and the number of skipped reads.
+/// Execute one job on this worker.  Returns the outcome plus the full
+/// training result, whose workload and schedule counters (timesteps,
+/// states, skipped reads, epochs, minibatches, streamed sequences) feed
+/// the coordinator metrics.
 ///
 /// A chunk whose reads are all skipped trains zero iterations and is
 /// emitted with `mean_loglik = -inf` and the untrained consensus —
@@ -279,7 +286,7 @@ fn run_one(
     xla: Option<&XlaEngine>,
     worker: usize,
     pool: &WorkerPool,
-) -> Result<(ChunkOutcome, u64, u64, u64)> {
+) -> Result<(ChunkOutcome, TrainResult)> {
     let t0 = Instant::now();
     let (decoded, res) = match cfg.train.engine {
         EngineKind::Xla => {
@@ -317,9 +324,7 @@ fn run_one(
             latency_ns: t0.elapsed().as_nanos() as u64,
             worker,
         },
-        res.timesteps,
-        res.states_processed,
-        res.reads_skipped,
+        res,
     ))
 }
 

@@ -1,62 +1,157 @@
 //! FASTA reading and writing.
+//!
+//! Two entry styles share one parser: the slurping readers
+//! ([`read_fasta`] / [`read_fasta_str`]) materialize every record, and
+//! the streaming [`FastaReader`] yields one record at a time over any
+//! `BufRead`, so a million-sequence file never lives in memory at once
+//! (the corpus layer's `FastaSource` wraps it for minibatch training).
 
-use std::io::{BufReader, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use crate::error::{ApHmmError, Result};
 use crate::seq::{Alphabet, Sequence};
 
+/// Record-at-a-time FASTA parser over any [`BufRead`].
+///
+/// Hostile-input contract (shared with [`FastqReader`]): CRLF line
+/// endings parse identically to LF, blank lines between records are
+/// skipped, and malformed structure — sequence data before the first
+/// header, an empty header, a header with no sequence before the next
+/// header or EOF, an out-of-alphabet character — yields a typed
+/// [`ApHmmError::Parse`] naming the origin and line, never a panic.
+///
+/// [`FastqReader`]: crate::io::FastqReader
+pub struct FastaReader<R: BufRead> {
+    inner: R,
+    alphabet: Alphabet,
+    origin: String,
+    buf: String,
+    line_no: usize,
+    /// Header token already consumed from the stream (the `>` line that
+    /// terminated the previous record).
+    pending: Option<String>,
+    done: bool,
+}
+
+impl FastaReader<BufReader<std::fs::File>> {
+    /// Open a FASTA file for streaming; the path names the source in
+    /// parse errors.
+    pub fn open(path: &Path, alphabet: Alphabet) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        Ok(FastaReader::new(BufReader::new(file), alphabet, &path.display().to_string()))
+    }
+}
+
+impl<R: BufRead> FastaReader<R> {
+    /// Stream records from `inner`; `origin` names the source in errors.
+    pub fn new(inner: R, alphabet: Alphabet, origin: &str) -> Self {
+        FastaReader {
+            inner,
+            alphabet,
+            origin: origin.to_string(),
+            buf: String::new(),
+            line_no: 0,
+            pending: None,
+            done: false,
+        }
+    }
+
+    fn err(&self, msg: String) -> ApHmmError {
+        ApHmmError::Parse { path: self.origin.clone(), msg }
+    }
+
+    /// Pull the next raw line into `self.buf`; `false` at EOF.
+    fn fill_line(&mut self) -> Result<bool> {
+        self.buf.clear();
+        if self.inner.read_line(&mut self.buf)? == 0 {
+            return Ok(false);
+        }
+        self.line_no += 1;
+        Ok(true)
+    }
+
+    fn header_token(&self, header: &str) -> Result<String> {
+        let token = header.split_whitespace().next().unwrap_or("");
+        if token.is_empty() {
+            return Err(self.err(format!("empty FASTA header at line {}", self.line_no)));
+        }
+        Ok(token.to_string())
+    }
+
+    /// Parse the next record, or `Ok(None)` once the input is exhausted.
+    pub fn next_record(&mut self) -> Result<Option<Sequence>> {
+        if self.done {
+            return Ok(None);
+        }
+        let id = match self.pending.take() {
+            Some(id) => id,
+            None => loop {
+                if !self.fill_line()? {
+                    self.done = true;
+                    return Ok(None);
+                }
+                let line = self.buf.trim_end();
+                if line.is_empty() {
+                    continue;
+                }
+                let Some(header) = line.strip_prefix('>') else {
+                    return Err(self.err(format!(
+                        "sequence data before first header at line {}",
+                        self.line_no
+                    )));
+                };
+                break self.header_token(header)?;
+            },
+        };
+        let mut data: Vec<u8> = Vec::new();
+        loop {
+            if !self.fill_line()? {
+                self.done = true;
+                break;
+            }
+            let line = self.buf.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('>') {
+                let token = self.header_token(header)?;
+                self.pending = Some(token);
+                break;
+            }
+            let line_no = self.line_no;
+            for b in line.bytes() {
+                match self.alphabet.encode(b) {
+                    Ok(sym) => data.push(sym),
+                    Err(e) => return Err(self.err(format!("line {line_no}: {e}"))),
+                }
+            }
+        }
+        if data.is_empty() {
+            return Err(self.err(format!("record {id}: header with no sequence")));
+        }
+        Ok(Some(Sequence::from_symbols(id, data)))
+    }
+}
+
+impl<R: BufRead> Iterator for FastaReader<R> {
+    type Item = Result<Sequence>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_record().transpose()
+    }
+}
+
 /// Parse FASTA text into encoded sequences.
 pub fn read_fasta_str(text: &str, alphabet: Alphabet, origin: &str) -> Result<Vec<Sequence>> {
-    let mut out = Vec::new();
-    let mut id: Option<String> = None;
-    let mut data: Vec<u8> = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim_end();
-        if line.is_empty() {
-            continue;
-        }
-        if let Some(header) = line.strip_prefix('>') {
-            if let Some(prev) = id.take() {
-                out.push(Sequence::from_symbols(prev, std::mem::take(&mut data)));
-            }
-            let token = header.split_whitespace().next().unwrap_or("");
-            if token.is_empty() {
-                return Err(ApHmmError::Parse {
-                    path: origin.into(),
-                    msg: format!("empty FASTA header at line {}", lineno + 1),
-                });
-            }
-            id = Some(token.to_string());
-        } else {
-            if id.is_none() {
-                return Err(ApHmmError::Parse {
-                    path: origin.into(),
-                    msg: format!("sequence data before first header at line {}", lineno + 1),
-                });
-            }
-            for b in line.bytes() {
-                data.push(alphabet.encode(b).map_err(|e| ApHmmError::Parse {
-                    path: origin.into(),
-                    msg: format!("line {}: {e}", lineno + 1),
-                })?);
-            }
-        }
-    }
-    if let Some(prev) = id.take() {
-        out.push(Sequence::from_symbols(prev, data));
-    }
-    Ok(out)
+    FastaReader::new(text.as_bytes(), alphabet, origin).collect()
 }
 
-/// Read a FASTA file.
+/// Read a FASTA file (fully materialized; use [`FastaReader::open`] or
+/// the corpus layer's `FastaSource` to stream instead).
 pub fn read_fasta(path: &Path, alphabet: Alphabet) -> Result<Vec<Sequence>> {
-    let mut text = String::new();
-    BufReader::new(std::fs::File::open(path)?).read_to_string(&mut text)?;
-    read_fasta_str(&text, alphabet, &path.display().to_string())
+    FastaReader::open(path, alphabet)?.collect()
 }
-
-use std::io::Read;
 
 /// Write sequences as FASTA (60-column wrapped).
 pub fn write_fasta<W: Write>(w: &mut W, seqs: &[Sequence], alphabet: Alphabet) -> Result<()> {
@@ -117,5 +212,53 @@ mod tests {
         let text = String::from_utf8(buf).unwrap();
         let max = text.lines().skip(1).map(|l| l.len()).max().unwrap();
         assert!(max <= 60);
+    }
+
+    #[test]
+    fn crlf_line_endings_parse_identically() {
+        let unix = read_fasta_str(">a desc\nACGT\nAC\n>b\nTT\n", DNA, "mem").unwrap();
+        let dos = read_fasta_str(">a desc\r\nACGT\r\nAC\r\n>b\r\nTT\r\n", DNA, "mem").unwrap();
+        assert_eq!(unix, dos);
+    }
+
+    #[test]
+    fn rejects_header_with_no_sequence() {
+        // Mid-file: header immediately followed by another header.
+        let err = read_fasta_str(">empty\n>b\nACGT\n", DNA, "mem").unwrap_err();
+        assert!(err.to_string().contains("header with no sequence"), "{err}");
+        // At EOF: header is the last line of the file.
+        assert!(read_fasta_str(">a\nACGT\n>trailing\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_header() {
+        assert!(read_fasta_str(">\nACGT\n", DNA, "mem").is_err());
+        assert!(read_fasta_str(">   \nACGT\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn empty_input_yields_no_records() {
+        assert!(read_fasta_str("", DNA, "mem").unwrap().is_empty());
+        assert!(read_fasta_str("\n\n\n", DNA, "mem").unwrap().is_empty());
+    }
+
+    #[test]
+    fn streaming_reader_matches_slurp() {
+        let text = ">a\nACGT\nAC\n\n>b name\nTTTT\n>c\nGG\n";
+        let slurped = read_fasta_str(text, DNA, "mem").unwrap();
+        let mut reader = FastaReader::new(text.as_bytes(), DNA, "mem");
+        let mut streamed = Vec::new();
+        while let Some(seq) = reader.next_record().unwrap() {
+            streamed.push(seq);
+        }
+        assert_eq!(streamed, slurped);
+        // Exhausted reader keeps returning None without error.
+        assert!(reader.next_record().unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_errors_name_the_origin() {
+        let err = read_fasta_str("ACGT\n", DNA, "somefile.fa").unwrap_err();
+        assert!(err.to_string().contains("somefile.fa"), "{err}");
     }
 }

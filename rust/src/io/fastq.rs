@@ -1,11 +1,132 @@
 //! FASTQ reading and writing (qualities preserved but unused by the
 //! pHMM pipeline, as in Apollo).
+//!
+//! [`FastqReader`] streams one record at a time over any `BufRead`;
+//! [`read_fastq`] / [`read_fastq_str`] collect it. The hostile-input
+//! contract matches [`FastaReader`]: CRLF endings, empty records,
+//! and mid-record EOF all produce typed [`ApHmmError::Parse`] errors,
+//! never panics.
+//!
+//! [`FastaReader`]: crate::io::FastaReader
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use crate::error::{ApHmmError, Result};
 use crate::seq::{Alphabet, Sequence};
+
+/// Record-at-a-time FASTQ parser (4-line records) over any [`BufRead`].
+pub struct FastqReader<R: BufRead> {
+    inner: R,
+    alphabet: Alphabet,
+    origin: String,
+    buf: String,
+    line_no: usize,
+    done: bool,
+}
+
+impl FastqReader<BufReader<std::fs::File>> {
+    /// Open a FASTQ file for streaming; the path names the source in
+    /// parse errors.
+    pub fn open(path: &Path, alphabet: Alphabet) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        Ok(FastqReader::new(BufReader::new(file), alphabet, &path.display().to_string()))
+    }
+}
+
+impl<R: BufRead> FastqReader<R> {
+    /// Stream records from `inner`; `origin` names the source in errors.
+    pub fn new(inner: R, alphabet: Alphabet, origin: &str) -> Self {
+        FastqReader {
+            inner,
+            alphabet,
+            origin: origin.to_string(),
+            buf: String::new(),
+            line_no: 0,
+            done: false,
+        }
+    }
+
+    fn err(&self, msg: String) -> ApHmmError {
+        ApHmmError::Parse { path: self.origin.clone(), msg }
+    }
+
+    /// Pull the next raw line into `self.buf`; `false` at EOF.
+    fn fill_line(&mut self) -> Result<bool> {
+        self.buf.clear();
+        if self.inner.read_line(&mut self.buf)? == 0 {
+            return Ok(false);
+        }
+        self.line_no += 1;
+        Ok(true)
+    }
+
+    /// Parse the next record, or `Ok(None)` once the input is exhausted.
+    pub fn next_record(&mut self) -> Result<Option<(Sequence, String)>> {
+        if self.done {
+            return Ok(None);
+        }
+        // Header line; blank lines between records are tolerated.
+        let id = loop {
+            if !self.fill_line()? {
+                self.done = true;
+                return Ok(None);
+            }
+            let line = self.buf.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            let Some(header) = line.strip_prefix('@') else {
+                return Err(self.err(format!("line {}: expected '@'", self.line_no)));
+            };
+            let token = header.split_whitespace().next().unwrap_or("");
+            if token.is_empty() {
+                return Err(self.err(format!("empty FASTQ header at line {}", self.line_no)));
+            }
+            break token.to_string();
+        };
+        // Sequence line; EOF here is a truncated record, not end of input.
+        if !self.fill_line()? {
+            self.done = true;
+            return Err(self.err(format!("record {id}: truncated record (no sequence)")));
+        }
+        let seq_ascii = self.buf.trim_end().to_string();
+        if seq_ascii.is_empty() {
+            return Err(self.err(format!("record {id}: empty sequence")));
+        }
+        // '+' separator line.
+        if !self.fill_line()? {
+            self.done = true;
+            return Err(self.err(format!("record {id}: truncated record (no '+')")));
+        }
+        if !self.buf.starts_with('+') {
+            return Err(self.err(format!("line {}: expected '+'", self.line_no)));
+        }
+        // Quality line. Both sides have their line terminators trimmed,
+        // so the length check is ending-agnostic (CRLF == LF).
+        if !self.fill_line()? {
+            self.done = true;
+            return Err(self.err(format!("record {id}: truncated record (no quality)")));
+        }
+        let qual = self.buf.trim_end().to_string();
+        if qual.len() != seq_ascii.len() {
+            return Err(self.err(format!("record {id}: quality length mismatch")));
+        }
+        let data = self
+            .alphabet
+            .encode_str(&seq_ascii)
+            .map_err(|e| self.err(format!("record {id}: {e}")))?;
+        Ok(Some((Sequence::from_symbols(id, data), qual)))
+    }
+}
+
+impl<R: BufRead> Iterator for FastqReader<R> {
+    type Item = Result<(Sequence, String)>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_record().transpose()
+    }
+}
 
 /// Parse FASTQ text; returns `(sequence, quality-string)` pairs.
 pub fn read_fastq_str(
@@ -13,45 +134,13 @@ pub fn read_fastq_str(
     alphabet: Alphabet,
     origin: &str,
 ) -> Result<Vec<(Sequence, String)>> {
-    let mut out = Vec::new();
-    let mut lines = text.lines().enumerate().peekable();
-    while let Some((lineno, header)) = lines.next() {
-        if header.trim().is_empty() {
-            continue;
-        }
-        let parse_err = |msg: String| ApHmmError::Parse { path: origin.into(), msg };
-        let id = header
-            .strip_prefix('@')
-            .ok_or_else(|| parse_err(format!("line {}: expected '@'", lineno + 1)))?
-            .split_whitespace()
-            .next()
-            .unwrap_or("")
-            .to_string();
-        let (_, seq_line) =
-            lines.next().ok_or_else(|| parse_err("truncated record (no sequence)".into()))?;
-        let (_, plus) =
-            lines.next().ok_or_else(|| parse_err("truncated record (no '+')".into()))?;
-        if !plus.starts_with('+') {
-            return Err(parse_err(format!("line {}: expected '+'", lineno + 3)));
-        }
-        let (_, qual) =
-            lines.next().ok_or_else(|| parse_err("truncated record (no quality)".into()))?;
-        if qual.len() != seq_line.len() {
-            return Err(parse_err(format!("record {id}: quality length mismatch")));
-        }
-        let data = alphabet
-            .encode_str(seq_line.trim_end())
-            .map_err(|e| parse_err(format!("record {id}: {e}")))?;
-        out.push((Sequence::from_symbols(id, data), qual.to_string()));
-    }
-    Ok(out)
+    FastqReader::new(text.as_bytes(), alphabet, origin).collect()
 }
 
-/// Read a FASTQ file.
+/// Read a FASTQ file (fully materialized; use [`FastqReader::open`] or
+/// the corpus layer's `FastqSource` to stream instead).
 pub fn read_fastq(path: &Path, alphabet: Alphabet) -> Result<Vec<(Sequence, String)>> {
-    let mut text = String::new();
-    std::fs::File::open(path)?.read_to_string(&mut text)?;
-    read_fastq_str(&text, alphabet, &path.display().to_string())
+    FastqReader::open(path, alphabet)?.collect()
 }
 
 /// Write FASTQ records; `quals` may be shorter (missing → 'I' = Q40).
@@ -106,5 +195,53 @@ mod tests {
         let mut buf = Vec::new();
         write_fastq(&mut buf, &seqs, &[], DNA).unwrap();
         assert!(String::from_utf8(buf).unwrap().contains("III"));
+    }
+
+    #[test]
+    fn crlf_line_endings_parse_identically() {
+        // The pre-streaming parser compared an untrimmed quality line
+        // against an untrimmed sequence line, so CRLF input tripped the
+        // length check even for well-formed records.
+        let unix = read_fastq_str("@r desc\nACGT\n+\nIIII\n@s\nTT\n+\n!!\n", DNA, "mem").unwrap();
+        let dos =
+            read_fastq_str("@r desc\r\nACGT\r\n+\r\nIIII\r\n@s\r\nTT\r\n+\r\n!!\r\n", DNA, "mem")
+                .unwrap();
+        assert_eq!(unix, dos);
+        assert_eq!(unix.len(), 2);
+        assert_eq!(unix[1].1, "!!");
+    }
+
+    #[test]
+    fn rejects_mid_record_eof() {
+        let cases = ["@x\n", "@x\nACGT\n", "@x\nACGT\n+\n"];
+        for text in cases {
+            let err = read_fastq_str(text, DNA, "mem").unwrap_err();
+            assert!(err.to_string().contains("truncated record"), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_record() {
+        assert!(read_fastq_str("@x\n\n+\n\n", DNA, "mem").is_err());
+        assert!(read_fastq_str("@\nACGT\n+\nIIII\n", DNA, "mem").is_err());
+    }
+
+    #[test]
+    fn empty_input_yields_no_records() {
+        assert!(read_fastq_str("", DNA, "mem").unwrap().is_empty());
+        assert!(read_fastq_str("\n\n", DNA, "mem").unwrap().is_empty());
+    }
+
+    #[test]
+    fn streaming_reader_matches_slurp() {
+        let text = "@a\nACGT\n+\nIIII\n@b\nTT\n+\n##\n";
+        let slurped = read_fastq_str(text, DNA, "mem").unwrap();
+        let mut reader = FastqReader::new(text.as_bytes(), DNA, "mem");
+        let mut streamed = Vec::new();
+        while let Some(rec) = reader.next_record().unwrap() {
+            streamed.push(rec);
+        }
+        assert_eq!(streamed, slurped);
+        assert!(reader.next_record().unwrap().is_none());
     }
 }

@@ -8,6 +8,6 @@ mod fasta;
 mod fastq;
 mod profile_fmt;
 
-pub use fasta::{read_fasta, read_fasta_str, write_fasta};
-pub use fastq::{read_fastq, read_fastq_str, write_fastq};
+pub use fasta::{read_fasta, read_fasta_str, write_fasta, FastaReader};
+pub use fastq::{read_fastq, read_fastq_str, write_fastq, FastqReader};
 pub use profile_fmt::{read_phmm, read_phmm_str, write_phmm, write_phmm_string};

@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use aphmm::accel::{self, AccelConfig, Workload};
 use aphmm::apps::{self, CorrectionConfig, MsaReport, SearchConfig};
-use aphmm::baumwelch::{EngineKind, FilterConfig, ScratchMode, TrainConfig};
+use aphmm::baumwelch::{EngineKind, FilterConfig, ScratchMode, TrainConfig, TrainMode};
 use aphmm::config::Config;
 use aphmm::error::{ApHmmError, Result};
 use aphmm::io;
@@ -31,6 +31,7 @@ use aphmm::sim::{self, XorShift};
 
 fn usage() -> String {
     let engines = EngineKind::NAMES.join("|");
+    let modes = TrainMode::NAMES.join("|");
     format!(
         "usage: aphmm <simulate|correct|search|align|serve|profile|accel|runtime> \
 [--config FILE] [--set k=v ...]
@@ -52,7 +53,13 @@ fn usage() -> String {
 
   --engine selects the Baum-Welch ExpectationEngine backend, one of
   {engines} (default: sparse for correct/search/serve, banded for
-  align; also settable via --set <section>.engine=NAME)"
+  align; also settable via --set <section>.engine=NAME)
+
+  --mode selects the training schedule, one of {modes} (default:
+  batch; auto picks minibatch for large corpora).  The minibatch
+  schedule also reads --set <section>.minibatch=N (reads per
+  minibatch, default 64) and --set <section>.seed=N (shuffle seed,
+  default 1); the same keys are accepted by correct and serve."
     )
 }
 
@@ -122,6 +129,21 @@ fn engine_from(
         ApHmmError::Config(format!(
             "unknown engine {name:?} (expected {})",
             EngineKind::NAMES.join(" | ")
+        ))
+    })
+}
+
+/// Resolve the training schedule: `--mode NAME` wins, then
+/// `<section>.mode` from the config file, then `default`.
+fn mode_from(args: &Args, cfg: &Config, section: &str, default: TrainMode) -> Result<TrainMode> {
+    let name = match args.get("mode") {
+        Some(v) if !v.is_empty() => v.to_string(),
+        _ => cfg.str_or(&format!("{section}.mode"), default.name()),
+    };
+    TrainMode::parse(&name).ok_or_else(|| {
+        ApHmmError::Config(format!(
+            "unknown training mode {name:?} (expected {})",
+            TrainMode::NAMES.join(" | ")
         ))
     })
 }
@@ -198,6 +220,8 @@ fn cmd_correct(args: &Args) -> Result<()> {
         scratch_mode: scratch_mode_from(&cfg, "correction", defaults.scratch_mode)?,
         max_scratch_bytes: cfg
             .usize_or("correction.max_scratch_bytes", defaults.max_scratch_bytes)?,
+        mode: mode_from(args, &cfg, "correction", defaults.mode)?,
+        seed: cfg.usize_or("correction.seed", defaults.seed as usize)? as u64,
         ..defaults
     };
     let mut corrected = Vec::new();
@@ -251,6 +275,9 @@ fn server_config(
         // propagates the serve-level budget below into it, so one key
         // governs both `auto` resolution and admission refusal.
         scratch_mode: scratch_mode_from(cfg, section, ScratchMode::Full)?,
+        mode: mode_from(args, cfg, section, TrainMode::Batch)?,
+        minibatch: cfg.usize_or(&format!("{section}.minibatch"), 64)?,
+        seed: cfg.usize_or(&format!("{section}.seed"), 1)? as u64,
         ..Default::default()
     };
     let tenant_quota = TenantQuota {
@@ -390,12 +417,7 @@ fn cmd_align(args: &Args) -> Result<()> {
     };
     let fam = sim::generate_families(&mut rng, &params).remove(0);
 
-    let mut report = MsaReport {
-        rows: Vec::new(),
-        n_columns: 0,
-        skipped: 0,
-        timings: Default::default(),
-    };
+    let mut report = MsaReport::default();
     // Profile construction + registration is the non-Baum-Welch part of
     // the split this command reports.
     let t0 = Instant::now();

@@ -669,6 +669,24 @@ impl Server {
             "gauge",
         );
         w.value("aphmm_scratch_bytes", &[], m.peak_scratch_bytes as f64);
+        w.help_type(
+            "aphmm_train_epochs_total",
+            "Training epochs completed (full-batch iterations and minibatch/Viterbi epochs).",
+            "counter",
+        );
+        w.value("aphmm_train_epochs_total", &[], m.epochs as f64);
+        w.help_type(
+            "aphmm_train_minibatches_total",
+            "Minibatches processed by the minibatch training schedule.",
+            "counter",
+        );
+        w.value("aphmm_train_minibatches_total", &[], m.minibatches as f64);
+        w.help_type(
+            "aphmm_sequences_streamed_total",
+            "Sequences pulled through streaming read sources during training.",
+            "counter",
+        );
+        w.value("aphmm_sequences_streamed_total", &[], m.sequences_streamed as f64);
 
         w.help_type(
             "aphmm_request_seconds",
@@ -851,7 +869,8 @@ impl Server {
             "stats jobs_done={} jobs_failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
              queue_high_water={} producer_blocks={} cache_hits={} cache_misses={} \
              cache_evictions={} profiles={} tenants={} deadline_exceeded={} cancelled={} \
-             pool_panics={} shed={} over_memory_refusals={} peak_scratch_bytes={}",
+             pool_panics={} shed={} over_memory_refusals={} peak_scratch_bytes={} epochs={} \
+             minibatches={} sequences_streamed={}",
             m.jobs_done,
             m.jobs_failed,
             m.latency_p50_ms,
@@ -870,6 +889,9 @@ impl Server {
             m.shed,
             m.over_memory_refusals,
             m.peak_scratch_bytes,
+            m.epochs,
+            m.minibatches,
+            m.sequences_streamed,
         )
     }
 

@@ -652,6 +652,9 @@ pub(crate) fn execute(
                 stripe_passes: out.train.stripe_passes,
                 stripe_reads: out.train.stripe_reads,
                 peak_scratch_bytes: out.train.peak_scratch_bytes,
+                epochs: out.train.epochs,
+                minibatches: out.train.minibatches,
+                sequences_streamed: out.train.sequences_streamed,
                 ..Default::default()
             };
             let mean_loglik =

@@ -135,6 +135,99 @@ pub fn consensus(phmm: &Phmm) -> Result<ConsensusPath> {
     })
 }
 
+/// A decoded observation path (the hard E-step of Viterbi training).
+#[derive(Clone, Debug)]
+pub struct ViterbiPath {
+    /// State index per timestep (`states.len() == read.len()`).
+    pub states: Vec<u32>,
+    /// `ln P(read, path | G)` of the best path.
+    pub log_prob: f64,
+}
+
+/// Most likely state path of `read` through an emitting pHMM —
+/// observation-dependent Viterbi in log space (unlike [`consensus`],
+/// which decodes the graph alone).
+///
+/// The forward push mirrors the Baum-Welch forward recurrence: same
+/// init states, same outgoing CSR edges, self-loops included, and the
+/// path may end in any state (reads cover arbitrary windows of the
+/// graph, matching the forward pass's termination).  Ties resolve to
+/// the lowest-indexed predecessor, so decoding is fully deterministic.
+///
+/// A read with no surviving path under the current parameters — an
+/// out-of-alphabet symbol, or every candidate underflowing to zero —
+/// fails with [`ApHmmError::Numerical`], which the training loop counts
+/// as a skipped read (the same contract as the soft E-step).
+pub fn viterbi_path(phmm: &Phmm, read: &Sequence) -> Result<ViterbiPath> {
+    if phmm.has_silent_states() {
+        return Err(ApHmmError::InvalidGraph("viterbi_path requires an emitting graph".into()));
+    }
+    let n = phmm.n_states();
+    if n == 0 {
+        return Err(ApHmmError::InvalidGraph("empty graph".into()));
+    }
+    let t_len = read.len();
+    if t_len == 0 {
+        return Err(ApHmmError::Numerical("viterbi_path on an empty read".into()));
+    }
+    if read.data.iter().any(|&c| c as usize >= phmm.sigma()) {
+        return Err(ApHmmError::Numerical("read contains out-of-alphabet symbols".into()));
+    }
+    let mut prev = vec![f64::NEG_INFINITY; n];
+    let mut cur = vec![f64::NEG_INFINITY; n];
+    // One backpointer row per timestep after the first.
+    let mut back: Vec<Vec<u32>> = Vec::with_capacity(t_len - 1);
+    for (i, f) in phmm.init_states() {
+        let iu = i as usize;
+        prev[iu] = ln(f) + ln(phmm.emission(iu, read.data[0]));
+    }
+    if prev.iter().all(|&v| v == f64::NEG_INFINITY) {
+        return Err(ApHmmError::Numerical("viterbi died at t=0".into()));
+    }
+    for t in 1..t_len {
+        let sym = read.data[t];
+        cur.iter_mut().for_each(|v| *v = f64::NEG_INFINITY);
+        let mut bp = vec![u32::MAX; n];
+        for j in 0..n {
+            let vj = prev[j];
+            if vj == f64::NEG_INFINITY {
+                continue;
+            }
+            for (to, p) in phmm.outgoing(j) {
+                let tu = to as usize;
+                let cand = vj + ln(p) + ln(phmm.emission(tu, sym));
+                // Strict `>`: the lowest-indexed predecessor keeps ties.
+                if cand > cur[tu] {
+                    cur[tu] = cand;
+                    bp[tu] = j as u32;
+                }
+            }
+        }
+        if cur.iter().all(|&v| v == f64::NEG_INFINITY) {
+            return Err(ApHmmError::Numerical(format!("viterbi died at t={t}")));
+        }
+        back.push(bp);
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    let mut best_end = 0usize;
+    let mut best = prev[0];
+    for (i, &v) in prev.iter().enumerate().skip(1) {
+        if v > best {
+            best = v;
+            best_end = i;
+        }
+    }
+    let mut states = vec![0u32; t_len];
+    let mut at = best_end as u32;
+    states[t_len - 1] = at;
+    for t in (1..t_len).rev() {
+        at = back[t - 1][at as usize];
+        debug_assert_ne!(at, u32::MAX, "backpointer chain broken at t={t}");
+        states[t - 1] = at;
+    }
+    Ok(ViterbiPath { states, log_prob: best })
+}
+
 /// Count states of each kind along a path (diagnostics).
 pub fn path_composition(phmm: &Phmm, path: &[u32]) -> (usize, usize) {
     let mut matches = 0;
@@ -247,5 +340,61 @@ mod tests {
         let profile = Profile::from_sequence(&seq, crate::seq::DNA, 0.9);
         let g = Phmm::traditional(&profile, &TraditionalParams::default()).unwrap();
         assert!(consensus(&g).is_err());
+    }
+
+    #[test]
+    fn viterbi_path_decodes_exact_read() {
+        // A noiseless read drawn from the reference should decode to a
+        // pure match path of the read's length on an untrained EC graph.
+        testutil::check(10, |rng| {
+            let len = rng.range(5, 50);
+            let data = testutil::random_seq(rng, len, 4);
+            let reference = Sequence::from_symbols("r", data.clone());
+            let g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+            let read = Sequence::from_symbols("read", data);
+            let path = viterbi_path(&g, &read).unwrap();
+            assert_eq!(path.states.len(), read.len());
+            assert!(path.log_prob.is_finite());
+            assert!(path.log_prob < 0.0);
+            let (m, i) = path_composition(&g, &path.states);
+            assert_eq!(m, read.len(), "expected all-match path");
+            assert_eq!(i, 0);
+            // Consecutive path states must be joined by CSR edges.
+            for w in path.states.windows(2) {
+                assert!(
+                    g.outgoing(w[0] as usize).any(|(to, _)| to == w[1]),
+                    "no edge {} -> {}",
+                    w[0],
+                    w[1]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn viterbi_path_is_deterministic() {
+        let mut rng = XorShift::new(23);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 60, 4));
+        let g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let read =
+            simulate_read(&mut rng, &reference, 0, reference.len(), &ErrorProfile::pacbio(), 0)
+                .seq;
+        let a = viterbi_path(&g, &read).unwrap();
+        let b = viterbi_path(&g, &read).unwrap();
+        assert_eq!(a.states, b.states);
+        assert_eq!(a.log_prob, b.log_prob);
+    }
+
+    #[test]
+    fn viterbi_path_rejects_hostile_reads() {
+        let mut rng = XorShift::new(29);
+        let reference =
+            Sequence::from_symbols("r", testutil::random_seq(&mut rng, 30, 4));
+        let g = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+        let empty = Sequence::from_symbols("e", vec![]);
+        assert!(matches!(viterbi_path(&g, &empty), Err(ApHmmError::Numerical(_))));
+        let bad = Sequence::from_symbols("b", vec![0, 1, 99]);
+        assert!(matches!(viterbi_path(&g, &bad), Err(ApHmmError::Numerical(_))));
     }
 }

@@ -1,0 +1,214 @@
+//! Training-schedule integration tests over the public API: the
+//! minibatch and Viterbi schedules must land where full-batch EM lands
+//! (evaluated by one fixed forward scorer), seeded runs must be
+//! bit-reproducible, and the streaming path must keep its memory bound.
+
+use aphmm::baumwelch::{
+    train, train_source, EngineKind, ExpectationEngine, FastaSource, ForwardOptions, SparseEngine,
+    TrainConfig, TrainMode,
+};
+use aphmm::io::write_fasta;
+use aphmm::phmm::{EcDesignParams, Phmm};
+use aphmm::seq::{Sequence, DNA};
+use aphmm::sim::{generate_genome, simulate_read, ErrorProfile, XorShift};
+
+/// One training workload: an EC-design graph plus reads drawn from its
+/// reference, the same shape the coordinator trains per chunk.
+fn workload(seed: u64, ref_len: usize, n_reads: usize) -> (Phmm, Vec<Sequence>) {
+    let mut rng = XorShift::new(seed);
+    let reference = generate_genome(&mut rng, ref_len);
+    let reads: Vec<Sequence> = (0..n_reads)
+        .map(|i| simulate_read(&mut rng, &reference, 0, ref_len, &ErrorProfile::pacbio(), i).seq)
+        .collect();
+    let phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    (phmm, reads)
+}
+
+/// Mean forward log-likelihood of `reads` under `phmm` — the one fixed
+/// evaluation every schedule is compared with, independent of what each
+/// schedule reports in its own `loglik_history`.
+fn mean_forward_ll(phmm: &Phmm, reads: &[Sequence]) -> f64 {
+    let engine = SparseEngine;
+    let prep = engine.prepare(phmm).unwrap();
+    let mut scratch = engine.make_scratch(phmm);
+    let opts = ForwardOptions::default();
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for read in reads {
+        if let Ok(score) = engine.score(phmm, &prep, read, &opts, &mut scratch) {
+            sum += score.loglik;
+            n += 1;
+        }
+    }
+    assert!(n > 0, "no read scored");
+    sum / n as f64
+}
+
+fn cfg(mode: TrainMode) -> TrainConfig {
+    TrainConfig { max_iters: 6, tol: 0.0, mode, minibatch: 8, seed: 3, ..Default::default() }
+}
+
+#[test]
+fn minibatch_converges_where_full_batch_does() {
+    let (phmm, reads) = workload(101, 160, 24);
+
+    let mut batch_phmm = phmm.clone();
+    let batch = train(&mut batch_phmm, &reads, &cfg(TrainMode::Batch)).unwrap();
+    let mut mb_phmm = phmm.clone();
+    let mb = train(&mut mb_phmm, &reads, &cfg(TrainMode::Minibatch)).unwrap();
+
+    assert!(batch.iters >= 1 && mb.iters >= 1);
+    assert!(mb.minibatches >= mb.iters as u64 * 3, "24 reads / mb 8 = 3 per epoch");
+    let ll_batch = mean_forward_ll(&batch_phmm, &reads);
+    let ll_mb = mean_forward_ll(&mb_phmm, &reads);
+    let tol = 0.05 * ll_batch.abs() + 1.0;
+    assert!(
+        (ll_batch - ll_mb).abs() <= tol,
+        "minibatch landed at {ll_mb}, full batch at {ll_batch} (tol {tol})"
+    );
+}
+
+#[test]
+fn viterbi_training_converges_near_full_batch() {
+    let (phmm, reads) = workload(102, 160, 24);
+
+    let mut batch_phmm = phmm.clone();
+    train(&mut batch_phmm, &reads, &cfg(TrainMode::Batch)).unwrap();
+    let mut vit_phmm = phmm.clone();
+    let vit = train(&mut vit_phmm, &reads, &cfg(TrainMode::Viterbi)).unwrap();
+
+    assert!(vit.iters >= 1);
+    // Hard counts approximate the soft posteriors: the Viterbi-trained
+    // model must score the corpus in the same neighbourhood as EM
+    // (looser tolerance — the dominant path is not the full sum).
+    let ll_batch = mean_forward_ll(&batch_phmm, &reads);
+    let ll_vit = mean_forward_ll(&vit_phmm, &reads);
+    let tol = 0.15 * ll_batch.abs() + 2.0;
+    assert!(
+        (ll_batch - ll_vit).abs() <= tol,
+        "viterbi landed at {ll_vit}, full batch at {ll_batch} (tol {tol})"
+    );
+    // And it must actually have climbed: better than the untrained model.
+    let ll_init = mean_forward_ll(&phmm, &reads);
+    assert!(ll_vit > ll_init, "viterbi training regressed: {ll_vit} <= {ll_init}");
+}
+
+#[test]
+fn same_seed_is_bit_identical_different_seed_converges_alike() {
+    let (phmm, reads) = workload(103, 120, 20);
+
+    let mut a_phmm = phmm.clone();
+    let a = train(&mut a_phmm, &reads, &cfg(TrainMode::Minibatch)).unwrap();
+    let mut b_phmm = phmm.clone();
+    let b = train(&mut b_phmm, &reads, &cfg(TrainMode::Minibatch)).unwrap();
+
+    // Same seed: the whole run is a pure function of (graph, corpus,
+    // config) — histories and parameters bit-identical.
+    assert_eq!(a.loglik_history, b.loglik_history);
+    assert_eq!(a.minibatches, b.minibatches);
+    assert_eq!(a_phmm.out_prob, b_phmm.out_prob);
+    assert_eq!(a_phmm.emissions, b_phmm.emissions);
+    assert_eq!(a_phmm.f_init, b_phmm.f_init);
+
+    // Different seed: a different sample path, the same destination.
+    let mut c_phmm = phmm.clone();
+    let ccfg = TrainConfig { seed: 99, ..cfg(TrainMode::Minibatch) };
+    train(&mut c_phmm, &reads, &ccfg).unwrap();
+    let ll_a = mean_forward_ll(&a_phmm, &reads);
+    let ll_c = mean_forward_ll(&c_phmm, &reads);
+    let tol = 0.05 * ll_a.abs() + 1.0;
+    assert!(
+        (ll_a - ll_c).abs() <= tol,
+        "seeds diverged: {ll_a} vs {ll_c} (tol {tol})"
+    );
+}
+
+#[test]
+fn every_mode_runs_behind_every_in_process_engine() {
+    let (phmm, reads) = workload(104, 100, 12);
+    for engine in [EngineKind::Sparse, EngineKind::Banded, EngineKind::Reference] {
+        for mode in [TrainMode::Batch, TrainMode::Minibatch, TrainMode::Viterbi, TrainMode::Auto] {
+            let mut p = phmm.clone();
+            let tcfg = TrainConfig { engine, max_iters: 2, tol: 0.0, mode, ..cfg(mode) };
+            let res = train(&mut p, &reads, &tcfg)
+                .unwrap_or_else(|e| panic!("{}/{} failed: {e}", engine.name(), mode.name()));
+            assert!(res.iters >= 1, "{}/{} ran no iterations", engine.name(), mode.name());
+            assert_eq!(res.epochs, res.iters as u64);
+        }
+    }
+}
+
+#[test]
+fn streaming_ingestion_keeps_residency_bounded() {
+    let mut rng = XorShift::new(105);
+    let reference = generate_genome(&mut rng, 120);
+    let n_reads = 160usize;
+    let reads: Vec<Sequence> = (0..n_reads)
+        .map(|i| simulate_read(&mut rng, &reference, 0, 120, &ErrorProfile::pacbio(), i).seq)
+        .collect();
+
+    let dir = std::env::temp_dir().join("aphmm_training_modes_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corpus.fa");
+    let mut buf = Vec::new();
+    write_fasta(&mut buf, &reads, DNA).unwrap();
+    std::fs::write(&path, buf).unwrap();
+
+    let mut phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let tcfg = TrainConfig {
+        max_iters: 2,
+        tol: 0.0,
+        mode: TrainMode::Minibatch,
+        minibatch: 16,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut source = FastaSource::open(&path, DNA).unwrap();
+    let res = train_source(&mut phmm, &mut source, &tcfg).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(res.iters, 2);
+    // Every epoch streams the whole corpus exactly once...
+    assert_eq!(res.sequences_streamed, (n_reads * res.iters) as u64);
+    // ...but residency is bounded by the shuffle window (16 reads × the
+    // window factor of 8 = 128), never the 160-read corpus.
+    assert!(
+        res.peak_resident_reads <= 128,
+        "peak residency {} exceeds the shuffle window",
+        res.peak_resident_reads
+    );
+    assert!(res.peak_resident_reads >= 16, "window never filled");
+    // 160 reads / 16 per minibatch = 10 minibatches per epoch.
+    assert_eq!(res.minibatches, (10 * res.iters) as u64);
+}
+
+#[test]
+fn auto_mode_streams_as_minibatch() {
+    // A streaming source has no len_hint, so Auto must resolve to the
+    // minibatch schedule instead of materializing the corpus.
+    let mut rng = XorShift::new(106);
+    let reference = generate_genome(&mut rng, 100);
+    let reads: Vec<Sequence> = (0..40)
+        .map(|i| simulate_read(&mut rng, &reference, 0, 100, &ErrorProfile::pacbio(), i).seq)
+        .collect();
+    let dir = std::env::temp_dir().join("aphmm_training_modes_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("auto.fa");
+    let mut buf = Vec::new();
+    write_fasta(&mut buf, &reads, DNA).unwrap();
+    std::fs::write(&path, buf).unwrap();
+
+    let mut phmm = Phmm::error_correction(&reference, &EcDesignParams::default()).unwrap();
+    let tcfg = TrainConfig {
+        max_iters: 1,
+        tol: 0.0,
+        mode: TrainMode::Auto,
+        minibatch: 4,
+        ..Default::default()
+    };
+    let mut source = FastaSource::open(&path, DNA).unwrap();
+    let res = train_source(&mut phmm, &mut source, &tcfg).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(res.minibatches > 0, "Auto on a streaming source must pick minibatch");
+    assert!(res.peak_resident_reads < 40, "Auto materialized the stream");
+}
